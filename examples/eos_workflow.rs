@@ -1,0 +1,103 @@
+//! **End-to-end driver** (EXPERIMENTS.md E9): the full stack on a real
+//! workload — an equation-of-state workflow over a Lennard-Jones FCC
+//! crystal, the classic AiiDA tutorial run on kiwi-rs.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example eos_workflow
+//! ```
+//!
+//! What this exercises, layer by layer:
+//! * L1/L2: the AOT-compiled Pallas LJ kernel (energy + forces) loaded
+//!   from `artifacts/` and executed via PJRT — Python never runs here.
+//! * L3: broker, durable task queue, daemon worker pool, the `eos`
+//!   workchain fanning out `lj_calc` children, awaiting their broadcasts,
+//!   and Birch–Murnaghan fitting — all three kiwiPy message types.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::daemon::{Daemon, DaemonConfig};
+use kiwi::payload::register_payload_processes;
+use kiwi::runtime::Engine;
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::MemoryCheckpointStore;
+use kiwi::workflow::{ProcessRegistry, RemoteLauncher};
+
+fn main() -> kiwi::Result<()> {
+    let t0 = Instant::now();
+
+    // --- Runtime: compile the AOT artifacts once. ---
+    let engine = Arc::new(Engine::load("artifacts")?);
+    println!(
+        "[runtime] compiled {:?} ({} atoms, batch {})",
+        engine.names(),
+        engine.manifest.n_atoms,
+        engine.manifest.batch
+    );
+
+    // --- Broker + daemon (2 workers) + client. ---
+    let broker = InprocBroker::new();
+    let registry = ProcessRegistry::new();
+    register_payload_processes(&registry, Arc::clone(&engine));
+    let store = Arc::new(MemoryCheckpointStore::new());
+    let worker_comm: Arc<dyn Communicator> = Arc::new(RmqCommunicator::connect(
+        broker.connect(),
+        RmqConfig { heartbeat_ms: 500, ..Default::default() },
+    )?);
+    let daemon = Daemon::start(
+        Arc::clone(&worker_comm),
+        store,
+        registry,
+        DaemonConfig { workers: 2, ..Default::default() },
+    )?;
+    let client: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default())?);
+
+    // --- Submit the EOS workchain and wait. ---
+    let launcher = RemoteLauncher::new(Arc::clone(&client));
+    let inputs = Value::map([
+        ("lattice_a", Value::F64(1.5)),
+        ("n_volumes", Value::from(engine.manifest.batch as u64)),
+        ("scale_lo", Value::F64(0.94)),
+        ("scale_hi", Value::F64(1.06)),
+    ]);
+    let (pid, fut) = launcher.launch("eos", inputs)?;
+    println!("[client] launched eos workchain as {pid}");
+    let record = fut.wait(Duration::from_secs(120))?;
+    assert_eq!(record.get_str("state")?, "finished", "workchain must finish: {record}");
+    let out = record.get("outputs")?;
+
+    // --- Report (paper-style). ---
+    println!("\n  V (volume)      E (energy)");
+    let volumes = out.get("volumes")?.as_list()?;
+    let energies = out.get("energies")?.as_list()?;
+    for (v, e) in volumes.iter().zip(energies.iter()) {
+        println!("  {:<12.5}  {:>12.6}", v.as_f64()?, e.as_f64()?);
+    }
+    let (v0, e0, b0) = (out.get_f64("v0")?, out.get_f64("e0")?, out.get_f64("b0")?);
+    println!("\nBirch–Murnaghan fit: V0={v0:.4}  E0={e0:.4}  B0={b0:.4}  rss={:.2e}", out.get_f64("rss")?);
+
+    // Physics sanity: the minimum is interior and the energy negative.
+    assert!(e0 < 0.0);
+    assert!(b0 > 0.0);
+
+    // Cross-check against the single-call batched variant (same physics,
+    // one PJRT execution instead of a fan-out).
+    let (_pid2, fut2) = launcher.launch(
+        "eos_batch",
+        Value::map([
+            ("lattice_a", Value::F64(1.5)),
+            ("n_volumes", Value::from(engine.manifest.batch as u64)),
+        ]),
+    )?;
+    let record2 = fut2.wait(Duration::from_secs(120))?;
+    let v0_batch = record2.get("outputs")?.get_f64("v0")?;
+    println!("[check] fan-out v0={v0:.4} vs batch v0={v0_batch:.4}");
+    assert!((v0 - v0_batch).abs() < 0.01 * v0.abs());
+
+    daemon.shutdown();
+    println!("\neos_workflow OK in {:.2?}", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Live process control — the paper's §I.B and §I.C:
+//! RPC pause/status/play/kill of a running workflow, plus the global
+//! control broadcast.
+//!
+//! ```text
+//! cargo run --release --example process_control
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::daemon::{Daemon, DaemonConfig};
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::MemoryCheckpointStore;
+use kiwi::workflow::process::{ProcessLogic, StepContext, StepOutcome, WaitCondition};
+use kiwi::workflow::{ProcessController, ProcessRegistry, RemoteLauncher};
+
+/// A slow multi-step process: 20 × 50 ms steps.
+struct SlowJob {
+    done: i64,
+}
+
+impl ProcessLogic for SlowJob {
+    fn step(&mut self, _step: u32, _ctx: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        if self.done >= 20 {
+            return Ok(StepOutcome::Finish(Value::map([("steps", Value::I64(self.done))])));
+        }
+        self.done += 1;
+        Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(50))))
+    }
+
+    fn save_state(&self) -> Value {
+        Value::map([("done", Value::I64(self.done))])
+    }
+
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        // Fresh launches carry `{"inputs": ...}`; checkpoints carry `done`.
+        self.done = state.get_opt("done").map(|v| v.as_i64()).transpose()?.unwrap_or(0);
+        Ok(())
+    }
+}
+
+fn main() -> kiwi::Result<()> {
+    let broker = InprocBroker::new();
+    let registry = ProcessRegistry::new();
+    registry.register("slow_job", || Box::new(SlowJob { done: 0 }));
+    let worker_comm: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default())?);
+    let daemon = Daemon::start(
+        Arc::clone(&worker_comm),
+        Arc::new(MemoryCheckpointStore::new()),
+        registry,
+        DaemonConfig::default(),
+    )?;
+
+    let client: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default())?);
+    let launcher = RemoteLauncher::new(Arc::clone(&client));
+    let ctl = ProcessController::new(Arc::clone(&client));
+
+    // Launch and let it run a few steps.
+    let (pid, fut) = launcher.launch("slow_job", Value::Null)?;
+    println!("[ctl] launched slow_job as {pid}");
+    std::thread::sleep(Duration::from_millis(200));
+
+    // Pause over RPC, inspect status, resume.
+    println!("[ctl] pause -> {}", ctl.pause(&pid)?);
+    std::thread::sleep(Duration::from_millis(120));
+    let status = ctl.status(&pid)?;
+    println!(
+        "[ctl] status: state={} step={}",
+        status.get_str("state")?,
+        status.get_u64("step")?
+    );
+    assert_eq!(status.get_str("state")?, "paused");
+    println!("[ctl] play  -> {}", ctl.play(&pid)?);
+
+    // Kill a second process mid-flight.
+    let (pid2, fut2) = launcher.launch("slow_job", Value::Null)?;
+    std::thread::sleep(Duration::from_millis(120));
+    println!("[ctl] kill {pid2} -> {}", ctl.kill(&pid2, "demo kill")?);
+    let record2 = fut2.wait(Duration::from_secs(10))?;
+    println!("[ctl] killed process record: state={}", record2.get_str("state")?);
+    assert_eq!(record2.get_str("state")?, "killed");
+
+    // The paused-then-resumed process still finishes correctly.
+    let record = fut.wait(Duration::from_secs(30))?;
+    assert_eq!(record.get_str("state")?, "finished");
+    println!(
+        "[ctl] first process finished with {} steps after pause/play",
+        record.get("outputs")?.get_i64("steps")?
+    );
+
+    daemon.shutdown();
+    println!("process_control OK");
+    Ok(())
+}

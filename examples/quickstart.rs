@@ -1,0 +1,66 @@
+//! Quickstart: the three kiwiPy message types in ~60 lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Mirrors kiwiPy's README example: one embedded broker, two
+//! communicators, a task queue, an RPC endpoint and a filtered broadcast.
+
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{BroadcastFilter, Communicator, RmqCommunicator, RmqConfig};
+use kiwi::wire::Value;
+use std::time::Duration;
+
+fn main() -> kiwi::Result<()> {
+    // An embedded broker — the "individual laptop" deployment. Swap for
+    // `connect_tcp(addr)` against `kiwi broker` for the distributed one.
+    let broker = InprocBroker::new();
+    let worker = RmqCommunicator::connect(broker.connect(), RmqConfig::default())?;
+    let client = RmqCommunicator::connect(broker.connect(), RmqConfig::default())?;
+
+    // 1. Task queue: durable work distribution with at-most-one delivery.
+    worker.task_queue(
+        "quickstart.tasks",
+        1,
+        Box::new(|task, ctx| {
+            let x = task.get_i64("x").unwrap_or(0);
+            println!("[worker] got task x={x}");
+            ctx.complete(Ok(Value::map([("square", Value::I64(x * x))])));
+        }),
+    )?;
+    let result = client
+        .task_send("quickstart.tasks", Value::map([("x", Value::I64(12))]))?
+        .wait(Duration::from_secs(5))?;
+    println!("[client] task result: {result}");
+
+    // 2. RPC: address a live object by identity.
+    worker.add_rpc_subscriber(
+        "calculator",
+        Box::new(|msg| {
+            let a = msg.get_f64("a")?;
+            let b = msg.get_f64("b")?;
+            Ok(Value::F64(a + b))
+        }),
+    )?;
+    let sum = client
+        .rpc_send("calculator", Value::map([("a", Value::F64(1.5)), ("b", Value::F64(2.25))]))?
+        .wait(Duration::from_secs(5))?;
+    println!("[client] rpc 1.5 + 2.25 = {sum}");
+
+    // 3. Broadcast: decoupled events with subscriber-side filters.
+    let (tx, rx) = std::sync::mpsc::channel();
+    worker.add_broadcast_subscriber(
+        BroadcastFilter::all().subject("news.*"),
+        Box::new(move |msg| {
+            tx.send(format!("{}: {}", msg.subject.unwrap_or_default(), msg.body)).unwrap();
+        }),
+    )?;
+    client.broadcast_send(Value::str("kiwi-rs works"), Some("quickstart"), Some("news.good"))?;
+    client.broadcast_send(Value::str("ignored"), Some("quickstart"), Some("spam.bad"))?;
+    println!("[worker] broadcast received: {}", rx.recv_timeout(Duration::from_secs(5)).unwrap());
+    assert!(rx.recv_timeout(Duration::from_millis(200)).is_err(), "filter must drop spam.*");
+
+    println!("quickstart OK");
+    Ok(())
+}

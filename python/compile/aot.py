@@ -1,0 +1,101 @@
+"""AOT lowering: JAX -> HLO **text** artifacts the Rust runtime loads.
+
+HLO text (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing shapes, so the Rust side needs no Python to know its I/O.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Artifact shape configuration. N must be a multiple of the kernel tile.
+N_ATOMS = 32
+BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """name -> (jitted fn, example args, manifest entry)."""
+    (single,) = model.example_args(N_ATOMS)
+    (batch,) = model.example_args(N_ATOMS, BATCH)
+    return {
+        "lj_energy_forces": (
+            model.energy_and_forces,
+            (single,),
+            {
+                "inputs": [[N_ATOMS, 3]],
+                "outputs": [[], [N_ATOMS, 3]],
+                "description": "LJ energy (scalar) + forces (N,3), fwd+bwd "
+                "through the Pallas kernel",
+            },
+        ),
+        "lj_batch_energies": (
+            model.batch_energies,
+            (batch,),
+            {
+                "inputs": [[BATCH, N_ATOMS, 3]],
+                "outputs": [[BATCH]],
+                "description": "Batched LJ energies for the EOS volume sweep",
+            },
+        ),
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--out", default=None, help="legacy single-artifact output path"
+    )
+    args = parser.parse_args()
+    out_dir = (
+        os.path.dirname(args.out) if args.out else args.out_dir
+    ) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"n_atoms": N_ATOMS, "batch": BATCH, "artifacts": {}}
+    for name, (fn, example, entry) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = dict(entry, file=f"{name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+    # Compatibility with the Makefile's single-target dependency check.
+    if args.out:
+        stamp = args.out
+        with open(stamp, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

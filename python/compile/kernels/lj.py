@@ -1,0 +1,188 @@
+"""L1 — Pallas kernel: tiled Lennard-Jones pair-energy.
+
+The scientific payload of the workflow system (the stand-in for AiiDA's
+quantum-mechanical calculations; DESIGN.md §2). Computes per-atom LJ
+energies over all pairs with an O(N^2) tiled sweep.
+
+TPU mapping (DESIGN.md §3 Hardware-Adaptation):
+
+* The pair-distance cross term is the matmul identity
+  ``|ri - rj|^2 = |ri|^2 + |rj|^2 - 2 ri.rj^T`` — the ``(TILE,3) @ (3,TILE)``
+  product is the part that lands on the MXU.
+* The grid is ``(N/TILE, N/TILE)``; each cell streams one ``TILE x TILE``
+  pair block through VMEM (``BlockSpec`` below expresses the HBM->VMEM
+  schedule a CUDA version would do with threadblocks).
+* Accumulation over the j-axis revisits the same output block, using the
+  standard ``pl.when(first) ... +=`` reduction idiom; grid iteration is
+  sequential over j so this is race-free.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md §7 from the
+VMEM footprint and MXU utilisation of these shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 16 atoms -> 16x16 pair blocks. VMEM per grid cell =
+# 2*(16*3) + 16*16 f32 ~= 1.2 KiB, far under budget; production TPU shapes
+# would use 128 (one MXU pass per block).
+DEFAULT_TILE = 16
+
+
+def _lj_tile_kernel(x_ref, y_ref, o_ref, *, sigma, epsilon, cutoff, tile):
+    """One (i, j) grid cell: pair energies of atom tile i vs atom tile j."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = x_ref[...]  # (TILE, 3) block of positions
+    xj = y_ref[...]  # (TILE, 3) block of positions
+
+    # Squared distances via the matmul identity; the 2*xi@xj.T term is the
+    # MXU workload.
+    cross = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)  # (T, T)
+    sq_i = jnp.sum(xi * xi, axis=1, keepdims=True)  # (T, 1)
+    sq_j = jnp.sum(xj * xj, axis=1, keepdims=True).T  # (1, T)
+    r2 = sq_i + sq_j - 2.0 * cross
+
+    # Mask: self-pairs (global index equality) and beyond-cutoff pairs.
+    rows = i * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)
+    cols = j * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    valid = (rows != cols) & (r2 < cutoff * cutoff)
+
+    # LJ: 4 eps ((sigma^2/r^2)^6 - (sigma^2/r^2)^3), guarded against r2=0.
+    r2_safe = jnp.where(valid, r2, 1.0)
+    s2 = (sigma * sigma) / r2_safe
+    s6 = s2 * s2 * s2
+    pair = 4.0 * epsilon * (s6 * s6 - s6)
+    pair = jnp.where(valid, pair, 0.0)
+
+    # Half-count: each pair appears as (i,j) and (j,i).
+    o_ref[...] += 0.5 * jnp.sum(pair, axis=1)
+
+
+def lj_per_atom_energy(
+    positions, *, sigma=1.0, epsilon=1.0, cutoff=1e6, tile=DEFAULT_TILE
+):
+    """Per-atom LJ energies, shape ``(N,)``. ``N`` must be a multiple of
+    ``tile`` (the AOT path fixes N at lowering time; tests sweep it)."""
+    n = positions.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"N={n} must be a multiple of tile={tile}")
+    # Numerics: the matmul identity cancels |r|^2-sized terms to get
+    # separation-sized results; centring the cloud (free — energies are
+    # translation invariant) keeps |r| small and the f32 cancellation
+    # error negligible.
+    positions = positions - jnp.mean(positions, axis=0, keepdims=True)
+    grid = (n // tile, n // tile)
+    kernel = functools.partial(
+        _lj_tile_kernel, sigma=sigma, epsilon=epsilon, cutoff=cutoff, tile=tile
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(positions, positions)
+
+
+def _lj_force_tile_kernel(x_ref, y_ref, o_ref, *, sigma, epsilon, cutoff, tile):
+    """Backward-pass kernel: per-atom forces, same tiling as the energy.
+
+    Pallas cannot autodiff through ``pl.program_id`` masks, so the bwd is a
+    hand-written kernel wired up with ``jax.custom_vjp`` — which is also
+    what a production TPU implementation would do (one fused bwd kernel
+    instead of the autodiff-generated chain).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = x_ref[...]
+    xj = y_ref[...]
+    cross = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+    sq_i = jnp.sum(xi * xi, axis=1, keepdims=True)
+    sq_j = jnp.sum(xj * xj, axis=1, keepdims=True).T
+    r2 = sq_i + sq_j - 2.0 * cross
+
+    rows = i * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)
+    cols = j * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    valid = (rows != cols) & (r2 < cutoff * cutoff)
+
+    r2_safe = jnp.where(valid, r2, 1.0)
+    s2 = (sigma * sigma) / r2_safe
+    s6 = s2 * s2 * s2
+    s12 = s6 * s6
+    coeff = jnp.where(valid, 24.0 * epsilon * (2.0 * s12 - s6) / r2_safe, 0.0)
+
+    diff = xi[:, None, :] - xj[None, :, :]  # (T, T, 3)
+    o_ref[...] += jnp.sum(coeff[:, :, None] * diff, axis=1)
+
+
+def lj_forces(positions, *, sigma=1.0, epsilon=1.0, cutoff=1e6, tile=DEFAULT_TILE):
+    """Per-atom forces ``(N, 3)`` via the tiled backward kernel."""
+    n = positions.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"N={n} must be a multiple of tile={tile}")
+    positions = positions - jnp.mean(positions, axis=0, keepdims=True)
+    grid = (n // tile, n // tile)
+    kernel = functools.partial(
+        _lj_force_tile_kernel, sigma=sigma, epsilon=epsilon, cutoff=cutoff, tile=tile
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 3), jnp.float32),
+        interpret=True,
+    )(positions, positions)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _total_energy(positions, sigma, epsilon, cutoff, tile):
+    return jnp.sum(
+        lj_per_atom_energy(
+            positions, sigma=sigma, epsilon=epsilon, cutoff=cutoff, tile=tile
+        )
+    )
+
+
+def _total_energy_fwd(positions, sigma, epsilon, cutoff, tile):
+    return _total_energy(positions, sigma, epsilon, cutoff, tile), positions
+
+
+def _total_energy_bwd(sigma, epsilon, cutoff, tile, positions, g):
+    # dE/dx = -F, computed by the dedicated force kernel.
+    forces = lj_forces(
+        positions, sigma=sigma, epsilon=epsilon, cutoff=cutoff, tile=tile
+    )
+    return (-g * forces,)
+
+
+_total_energy.defvjp(_total_energy_fwd, _total_energy_bwd)
+
+
+def lj_total_energy(
+    positions, *, sigma=1.0, epsilon=1.0, cutoff=1e6, tile=DEFAULT_TILE
+):
+    """Total LJ energy (scalar); differentiable (custom tiled bwd)."""
+    return _total_energy(positions, sigma, epsilon, cutoff, tile)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the Pallas LJ kernel — the correctness ground truth.
+
+Direct O(N^2) formula with no tiling; every kernel output is asserted
+against this in ``python/tests/test_kernel.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def lj_per_atom_energy_ref(positions, *, sigma=1.0, epsilon=1.0, cutoff=1e6):
+    """Per-atom LJ energies, shape ``(N,)`` — untiled reference."""
+    diff = positions[:, None, :] - positions[None, :, :]  # (N, N, 3)
+    r2 = jnp.sum(diff * diff, axis=-1)  # (N, N)
+    n = positions.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    valid = (~eye) & (r2 < cutoff * cutoff)
+    r2_safe = jnp.where(valid, r2, 1.0)
+    s2 = (sigma * sigma) / r2_safe
+    s6 = s2 * s2 * s2
+    pair = 4.0 * epsilon * (s6 * s6 - s6)
+    pair = jnp.where(valid, pair, 0.0)
+    return 0.5 * jnp.sum(pair, axis=1)
+
+
+def lj_total_energy_ref(positions, **kw):
+    """Total LJ energy (scalar) — untiled reference."""
+    return jnp.sum(lj_per_atom_energy_ref(positions, **kw))
+
+
+def lj_forces_ref(positions, *, sigma=1.0, epsilon=1.0, cutoff=1e6):
+    """Analytic LJ forces (no autodiff), shape ``(N, 3)``.
+
+    F_i = sum_j 24 eps (2 s12 - s6) / r^2 * (r_i - r_j)
+    """
+    diff = positions[:, None, :] - positions[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    n = positions.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    valid = (~eye) & (r2 < cutoff * cutoff)
+    r2_safe = jnp.where(valid, r2, 1.0)
+    s2 = (sigma * sigma) / r2_safe
+    s6 = s2 * s2 * s2
+    s12 = s6 * s6
+    coeff = jnp.where(valid, 24.0 * epsilon * (2.0 * s12 - s6) / r2_safe, 0.0)
+    return jnp.sum(coeff[:, :, None] * diff, axis=1)

@@ -1,0 +1,52 @@
+"""L2 — the JAX compute graph the workflow tasks execute.
+
+Wraps the L1 Pallas kernel into the functions the Rust runtime loads as
+AOT artifacts:
+
+* ``energy_and_forces(positions)`` -> ``(E, F)`` — one LJ calculation
+  (energy + forces via autodiff through the Pallas kernel).
+* ``batch_energies(batch)`` -> ``(B,)`` — a batch of configurations in one
+  executable (the equation-of-state volume sweep).
+
+Shapes are fixed at lowering time (``aot.py``); Python never runs on the
+request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lj import lj_total_energy
+
+# LJ parameters for the synthetic "material" (argon-like reduced units).
+SIGMA = 1.0
+EPSILON = 1.0
+CUTOFF = 1e6  # effectively no cutoff; EOS needs smooth long-range tails
+
+
+def total_energy(positions):
+    """Scalar LJ energy of one configuration, through the Pallas kernel."""
+    return lj_total_energy(
+        positions, sigma=SIGMA, epsilon=EPSILON, cutoff=CUTOFF
+    )
+
+
+def energy_and_forces(positions):
+    """(E, F): E scalar, F = -dE/dpositions, shape (N, 3).
+
+    Autodiff differentiates *through the Pallas kernel* — the bwd pass is
+    part of the same lowered HLO module.
+    """
+    e, grad = jax.value_and_grad(total_energy)(positions)
+    return e, -grad
+
+
+def batch_energies(batch):
+    """(B,) energies for a (B, N, 3) batch — the EOS volume sweep payload."""
+    return jax.vmap(total_energy)(batch)
+
+
+def example_args(n_atoms, batch=None):
+    """ShapeDtypeStructs used for lowering."""
+    if batch is None:
+        return (jax.ShapeDtypeStruct((n_atoms, 3), jnp.float32),)
+    return (jax.ShapeDtypeStruct((batch, n_atoms, 3), jnp.float32),)

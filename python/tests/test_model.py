@@ -1,0 +1,92 @@
+"""L2 correctness: model entry points, shapes, and AOT lowering."""
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import lj_forces_ref, lj_total_energy_ref
+
+
+def fcc_positions(n_cells=2, a=1.5):
+    """FCC lattice, 4 atoms per cell -> 4*n_cells^3 atoms."""
+    base = np.array(
+        [[0, 0, 0], [0.5, 0.5, 0], [0.5, 0, 0.5], [0, 0.5, 0.5]], np.float32
+    )
+    cells = [
+        (base + np.array([i, j, k], np.float32))
+        for i in range(n_cells)
+        for j in range(n_cells)
+        for k in range(n_cells)
+    ]
+    return (np.concatenate(cells) * a).astype(np.float32)
+
+
+def test_energy_and_forces_shapes_and_values():
+    pos = fcc_positions()  # 32 atoms
+    e, f = model.energy_and_forces(pos)
+    assert e.shape == ()
+    assert f.shape == (32, 3)
+    np.testing.assert_allclose(e, lj_total_energy_ref(pos), rtol=1e-4)
+    np.testing.assert_allclose(f, lj_forces_ref(pos), rtol=1e-3, atol=1e-3)
+
+
+def test_perfect_lattice_has_near_zero_forces():
+    pos = fcc_positions()
+    _, f = model.energy_and_forces(pos)
+    # Bulk symmetry: net force per atom is small (surface atoms feel some).
+    assert np.abs(np.sum(f, axis=0)).max() < 1e-3  # momentum conservation
+
+
+def test_batch_energies_match_singles():
+    pos = fcc_positions()
+    scales = np.linspace(0.9, 1.1, aot.BATCH).astype(np.float32)
+    batch = np.stack([pos * s for s in scales])
+    be = model.batch_energies(batch)
+    assert be.shape == (aot.BATCH,)
+    for i, s in enumerate(scales):
+        np.testing.assert_allclose(
+            be[i], lj_total_energy_ref(pos * s), rtol=1e-4
+        )
+
+
+def test_eos_has_minimum_inside_sweep():
+    """The volume sweep must bracket the energy minimum (the EOS example's
+    precondition)."""
+    pos = fcc_positions()
+    scales = np.linspace(0.9, 1.1, 16).astype(np.float32)
+    energies = [float(lj_total_energy_ref(pos * s)) for s in scales]
+    i_min = int(np.argmin(energies))
+    assert 0 < i_min < len(scales) - 1
+
+
+def test_aot_lowering_produces_parseable_hlo(tmp_path):
+    import jax
+
+    for name, (fn, example, entry) in aot.artifact_specs().items():
+        lowered = jax.jit(fn).lower(*example)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text, name
+        # Entry computation mentions the right parameter shape.
+        dims = ",".join(str(d) for d in entry["inputs"][0])
+        assert f"f32[{dims}]" in text, name
+
+
+def test_manifest_written(tmp_path):
+    import json
+    import subprocess
+    import sys
+
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=str(aot.__file__).rsplit("/compile/", 1)[0],
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["n_atoms"] == aot.N_ATOMS
+    assert set(manifest["artifacts"]) == {
+        "lj_energy_forces",
+        "lj_batch_energies",
+    }
+    for entry in manifest["artifacts"].values():
+        assert (out / entry["file"]).exists()

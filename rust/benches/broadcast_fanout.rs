@@ -1,0 +1,107 @@
+//! E3 — broadcast fan-out (paper §I.C: decoupled flow control).
+//!
+//! One sender, N subscribers; measure time from `broadcast_send` until
+//! every subscriber has the message, for N up to 256, filtered and not.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::{runner::fmt_dur, Table};
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{BroadcastFilter, Communicator, RmqCommunicator, RmqConfig};
+use kiwi::wire::Value;
+
+const ROUNDS: usize = 100;
+
+struct Gate {
+    count: AtomicU64,
+    target: u64,
+    mx: Mutex<u64>, // generation
+    cv: Condvar,
+}
+
+fn run_case(subscribers: usize, filtered: bool) -> (Duration, Duration, f64) {
+    let broker = InprocBroker::new();
+    let sender = RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap();
+    let gate = Arc::new(Gate {
+        count: AtomicU64::new(0),
+        target: subscribers as u64,
+        mx: Mutex::new(0),
+        cv: Condvar::new(),
+    });
+    // Keep subscriber communicators alive for the whole case.
+    let mut subs = Vec::new();
+    for _ in 0..subscribers {
+        let comm = RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap();
+        let gate2 = Arc::clone(&gate);
+        let filter = if filtered {
+            // Half the traffic is filtered out subscriber-side.
+            BroadcastFilter::all().subject("wanted.*")
+        } else {
+            BroadcastFilter::all()
+        };
+        comm.add_broadcast_subscriber(
+            filter,
+            Box::new(move |_msg| {
+                let n = gate2.count.fetch_add(1, Ordering::Relaxed) + 1;
+                if n % gate2.target == 0 {
+                    let mut generation = gate2.mx.lock().unwrap();
+                    *generation += 1;
+                    gate2.cv.notify_all();
+                }
+            }),
+        )
+        .unwrap();
+        subs.push(comm);
+    }
+
+    let hist = kiwi::metrics::Histogram::new();
+    let t_all = Instant::now();
+    for round in 0..ROUNDS {
+        let generation_before = *gate.mx.lock().unwrap();
+        let t0 = Instant::now();
+        if filtered {
+            // One dropped message + one wanted message per round.
+            sender.broadcast_send(Value::I64(round as i64), None, Some("noise.x")).unwrap();
+        }
+        sender.broadcast_send(Value::I64(round as i64), None, Some("wanted.x")).unwrap();
+        let mut generation = gate.mx.lock().unwrap();
+        while *generation <= generation_before {
+            let (g, timeout) =
+                gate.cv.wait_timeout(generation, Duration::from_secs(30)).unwrap();
+            generation = g;
+            assert!(!timeout.timed_out(), "fan-out did not complete");
+        }
+        hist.record_duration(t0.elapsed());
+    }
+    let msgs = ROUNDS * subscribers;
+    (
+        Duration::from_nanos(hist.quantile(0.5)),
+        Duration::from_nanos(hist.quantile(0.99)),
+        msgs as f64 / t_all.elapsed().as_secs_f64(),
+    )
+}
+
+fn main() {
+    let mut table = Table::new(
+        "E3 broadcast fan-out (100 rounds, inproc broker)",
+        &["subscribers", "filtered", "p50 all-received", "p99", "deliveries/s"],
+    );
+    for &n in &[1usize, 4, 16, 64, 256] {
+        for &filtered in &[false, true] {
+            let (p50, p99, thpt) = run_case(n, filtered);
+            table.row(&[
+                n.to_string(),
+                filtered.to_string(),
+                fmt_dur(p50),
+                fmt_dur(p99),
+                format!("{thpt:.0}"),
+            ]);
+        }
+    }
+    table.emit();
+    println!("expected shape: all-received latency grows ~linearly with\n\
+              subscribers (one queue copy each); filtering costs one extra\n\
+              dropped delivery per subscriber, not a broker-side scan.");
+}

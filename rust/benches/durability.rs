@@ -1,0 +1,112 @@
+//! E4 — durability & atomicity (paper §I: the broker "takes responsibility
+//! for guaranteeing the durability and atomicity of messages").
+//!
+//! Cost of the write-ahead log: publish throughput for transient vs
+//! durable queues under each sync policy, plus recovery time and
+//! completeness after a broker restart.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::Table;
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::persistence::{NoopPersister, RecoveredState, SyncPolicy, WalPersister};
+use kiwi::broker::protocol::{ClientRequest, MessageProps, QueueOptions};
+use kiwi::wire::Value;
+
+const MSGS: usize = 2_000;
+
+fn publish_n(broker: &BrokerHandle, durable: bool, n: usize) -> Duration {
+    let (tx, _rx) = std::sync::mpsc::channel();
+    let conn = broker.connect("bench", 0, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::QueueDeclare {
+                queue: "q".into(),
+                options: QueueOptions { durable, ..Default::default() },
+            },
+        )
+        .unwrap();
+    let body = Arc::new(Value::map([("data", Value::Bytes(vec![7u8; 512]))]));
+    let t0 = Instant::now();
+    for _ in 0..n {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "q".into(),
+                    body: Arc::clone(&body),
+                    props: MessageProps { persistent: durable, ..Default::default() },
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+    broker.sync().unwrap();
+    t0.elapsed()
+}
+
+fn wal_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("kiwi-bench-wal-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.wal"))
+}
+
+fn main() {
+    let mut table = Table::new(
+        "E4 durability: publish cost (2000 x 512B msgs)",
+        &["mode", "wall", "msgs/s", "vs transient"],
+    );
+    let transient = {
+        let broker = BrokerHandle::with_persister(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+        );
+        publish_n(&broker, false, MSGS)
+    };
+    table.row(&[
+        "transient".into(),
+        format!("{transient:.2?}"),
+        format!("{:.0}", MSGS as f64 / transient.as_secs_f64()),
+        "1.0x".into(),
+    ]);
+    for (label, policy) in [
+        ("wal os-sync", SyncPolicy::Os),
+        ("wal every-64", SyncPolicy::EveryN(64)),
+        ("wal always", SyncPolicy::Always),
+    ] {
+        let path = wal_dir(label);
+        std::fs::remove_file(&path).ok();
+        let (wal, rec) = WalPersister::open(&path, policy).unwrap();
+        let broker = BrokerHandle::with_persister(Box::new(wal), rec);
+        let wall = publish_n(&broker, true, MSGS);
+        table.row(&[
+            label.into(),
+            format!("{wall:.2?}"),
+            format!("{:.0}", MSGS as f64 / wall.as_secs_f64()),
+            format!("{:.1}x", wall.as_secs_f64() / transient.as_secs_f64()),
+        ]);
+    }
+    table.emit();
+
+    // Recovery: restart the broker from the every-64 WAL and verify that
+    // all messages survive, timing the replay.
+    let path = wal_dir("wal every-64");
+    let t0 = Instant::now();
+    let (_wal, recovered) = WalPersister::open(&path, SyncPolicy::EveryN(64)).unwrap();
+    let replay = t0.elapsed();
+    let mut recovery = Table::new(
+        "E4b recovery after restart",
+        &["metric", "value"],
+    );
+    recovery.row(&["messages recovered".into(), recovered.message_count().to_string()]);
+    recovery.row(&["expected".into(), MSGS.to_string()]);
+    recovery.row(&["replay time".into(), format!("{replay:.2?}")]);
+    recovery.emit();
+    assert_eq!(recovered.message_count(), MSGS, "durable messages must survive restart");
+    println!("expected shape: os-sync ~ transient; every-64 a small constant\n\
+              factor; fsync-always dominated by disk flushes. Recovery is\n\
+              linear in live messages and loses nothing.");
+}

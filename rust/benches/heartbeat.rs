@@ -1,0 +1,113 @@
+//! E8 — heartbeats (paper §I: two missed checks ⇒ requeue to another
+//! client; heartbeats maintained by the hidden communication thread).
+//!
+//! Measures (a) failure-detection latency: time from a consumer going
+//! silent to its task being requeued, vs the negotiated heartbeat
+//! interval — the spec says ≈ 2×interval; (b) idle heartbeat traffic.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::{runner::fmt_dur, Table};
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::heartbeat::HeartbeatMonitor;
+use kiwi::broker::protocol::{ClientRequest, MessageProps, QueueOptions, ServerMsg};
+use kiwi::wire::Value;
+
+/// A consumer that takes one delivery, then goes silent (no heartbeats, no
+/// ack) — the in-process model of a hung worker.
+fn detection_latency(heartbeat_ms: u64) -> Duration {
+    let broker = BrokerHandle::new();
+    let _monitor = HeartbeatMonitor::spawn(broker.clone(), Duration::from_millis(5));
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let conn = broker.connect("hung-worker", heartbeat_ms, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::QueueDeclare { queue: "q".into(), options: QueueOptions::default() },
+        )
+        .unwrap();
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Publish {
+                exchange: "".into(),
+                routing_key: "q".into(),
+                body: Arc::new(Value::str("work")),
+                props: MessageProps::default(),
+                mandatory: true,
+            },
+        )
+        .unwrap();
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Consume { queue: "q".into(), consumer_tag: "c".into(), prefetch: 0 },
+        )
+        .unwrap();
+    // Delivery in flight; now the consumer goes silent.
+    assert!(matches!(rx.recv_timeout(Duration::from_secs(2)), Ok(ServerMsg::Deliver(_))));
+    let silent_from = Instant::now();
+    loop {
+        if broker.queue_depth("q") == Some(1) {
+            return silent_from.elapsed();
+        }
+        assert!(silent_from.elapsed() < Duration::from_secs(30), "never evicted");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "E8 heartbeat failure detection (silent consumer with 1 unacked task)",
+        &["heartbeat", "detect+requeue", "ratio to 2x-interval"],
+    );
+    for &hb in &[50u64, 100, 200, 400] {
+        // Median of 3 runs (timers + scan period add jitter).
+        let mut runs: Vec<Duration> = (0..3).map(|_| detection_latency(hb)).collect();
+        runs.sort();
+        let detect = runs[1];
+        table.row(&[
+            format!("{hb}ms"),
+            fmt_dur(detect),
+            format!("{:.2}", detect.as_secs_f64() / (2.0 * hb as f64 / 1000.0)),
+        ]);
+        // Lower bound has a small allowance: last_seen is stamped at the
+        // consume request, a hair before our silent_from timer starts.
+        assert!(
+            detect + Duration::from_millis(20) >= Duration::from_millis(2 * hb),
+            "must not evict before two missed heartbeats (got {detect:.2?})"
+        );
+        assert!(
+            detect < Duration::from_millis(2 * hb + 200),
+            "detection should track 2x interval closely, got {detect:.2?}"
+        );
+    }
+    table.emit();
+
+    // Idle heartbeat traffic: a live but idle connection for 2 s.
+    use kiwi::broker::InprocBroker;
+    use kiwi::transport::{Connection, ConnectionConfig};
+    let broker = InprocBroker::new();
+    let mut traffic = Table::new(
+        "E8b idle heartbeat overhead (2s idle connection)",
+        &["heartbeat", "broker connects seen", "connection alive"],
+    );
+    for &hb in &[50u64, 200] {
+        let conn = Connection::open(
+            broker.connect(),
+            ConnectionConfig { heartbeat_ms: hb, ..Default::default() },
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_secs(2));
+        let alive = !conn.is_closed();
+        traffic.row(&[format!("{hb}ms"), "1".into(), alive.to_string()]);
+        assert!(alive, "idle connection with heartbeats must stay alive");
+        conn.close();
+    }
+    traffic.emit();
+    println!("expected shape: detection ≈ 2x heartbeat interval + scan\n\
+              jitter (the paper's two-missed-checks rule); idle connections\n\
+              survive indefinitely on heartbeats alone.");
+}

@@ -1,0 +1,104 @@
+//! E2 — RPC round-trip latency (paper §I.B: control of live processes).
+//!
+//! Latency distribution of `rpc_send(..).wait()` over the in-process link
+//! and over real TCP loopback, at 1–8 concurrent callers.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::{runner::fmt_dur, Table};
+use kiwi::broker::{BrokerHandle, BrokerServer, InprocBroker};
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::metrics::Histogram;
+use kiwi::transport::connect_tcp;
+use kiwi::wire::Value;
+
+const CALLS_PER_CLIENT: usize = 500;
+
+fn bench_clients(
+    make_comm: &dyn Fn() -> Arc<RmqCommunicator>,
+    clients: usize,
+) -> (Histogram, f64) {
+    let server = make_comm();
+    server
+        .add_rpc_subscriber("echo", Box::new(|v| Ok(v)))
+        .unwrap();
+    let hist = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let comm = make_comm();
+            let hist = Arc::clone(&hist);
+            std::thread::spawn(move || {
+                for i in 0..CALLS_PER_CLIENT {
+                    let t = Instant::now();
+                    comm.rpc_send("echo", Value::I64(i as i64))
+                        .unwrap()
+                        .wait(Duration::from_secs(30))
+                        .unwrap();
+                    hist.record_duration(t.elapsed());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = clients * CALLS_PER_CLIENT;
+    let thpt = total as f64 / t0.elapsed().as_secs_f64();
+    drop(server);
+    (Arc::try_unwrap(hist).unwrap_or_else(|_| panic!()), thpt)
+}
+
+fn main() {
+    let mut table = Table::new(
+        "E2 RPC round-trip latency",
+        &["transport", "clients", "p50", "p99", "mean", "calls/s"],
+    );
+
+    // In-process link.
+    let inproc = InprocBroker::new();
+    for &clients in &[1usize, 2, 4, 8] {
+        let broker = inproc.clone();
+        let make = move || {
+            Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap())
+        };
+        let (hist, thpt) = bench_clients(&make, clients);
+        table.row(&[
+            "inproc".into(),
+            clients.to_string(),
+            fmt_dur(Duration::from_nanos(hist.quantile(0.5))),
+            fmt_dur(Duration::from_nanos(hist.quantile(0.99))),
+            fmt_dur(Duration::from_nanos(hist.mean() as u64)),
+            format!("{thpt:.0}"),
+        ]);
+    }
+
+    // TCP loopback.
+    let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    for &clients in &[1usize, 2, 4, 8] {
+        let make = move || {
+            Arc::new(
+                RmqCommunicator::connect(
+                    Arc::new(connect_tcp(addr).unwrap()),
+                    RmqConfig::default(),
+                )
+                .unwrap(),
+            )
+        };
+        let (hist, thpt) = bench_clients(&make, clients);
+        table.row(&[
+            "tcp".into(),
+            clients.to_string(),
+            fmt_dur(Duration::from_nanos(hist.quantile(0.5))),
+            fmt_dur(Duration::from_nanos(hist.quantile(0.99))),
+            fmt_dur(Duration::from_nanos(hist.mean() as u64)),
+            format!("{thpt:.0}"),
+        ]);
+    }
+    server.shutdown();
+    table.emit();
+    println!("expected shape: inproc ~10x lower latency than TCP loopback;\n\
+              p99 grows mildly with concurrency (single broker lock).");
+}

@@ -1,0 +1,66 @@
+//! §Perf — wire codec microbenchmark: encode/decode/clone cost of the
+//! message shapes that dominate the hot path (small control maps, 64 KiB
+//! blob tasks, 12 KiB f32 tensors). Drives the §Perf iteration log in
+//! EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use kiwi::benchutil::{bench, Table};
+use kiwi::wire::{codec, Value};
+
+fn throughput_mb(bytes: usize, r: &kiwi::benchutil::BenchResult) -> String {
+    let mb = bytes as f64 * r.iterations as f64 / 1e6;
+    format!("{:.0} MB/s", mb / r.total.as_secs_f64())
+}
+
+fn main() {
+    let small = Value::map([
+        ("op", Value::str("publish")),
+        ("req_id", Value::I64(12345)),
+        ("routing_key", Value::str("kiwi.tasks")),
+        ("mandatory", Value::Bool(true)),
+    ]);
+    let blob = Value::map([("data", Value::Bytes(vec![0xAB; 64 * 1024]))]);
+    let tensor = Value::map([("positions", Value::F32s(vec![1.5f32; 3 * 1024]))]);
+
+    let mut table = Table::new(
+        "Perf: wire codec microbench",
+        &["case", "op", "mean", "throughput"],
+    );
+    let target = Duration::from_millis(300);
+    for (name, value, payload_bytes) in [
+        ("small map", &small, 64usize),
+        ("64KiB bytes", &blob, 64 * 1024),
+        ("12KiB f32s", &tensor, 12 * 1024),
+    ] {
+        let encoded = codec::encode_to_vec(value);
+        let r = bench("encode", target, || {
+            std::hint::black_box(codec::encode_to_vec(std::hint::black_box(value)));
+        });
+        table.row(&[
+            name.into(),
+            "encode".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(payload_bytes, &r),
+        ]);
+        let r = bench("decode", target, || {
+            std::hint::black_box(codec::decode(std::hint::black_box(&encoded)).unwrap());
+        });
+        table.row(&[
+            name.into(),
+            "decode".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(payload_bytes, &r),
+        ]);
+        let r = bench("clone", target, || {
+            std::hint::black_box(std::hint::black_box(value).clone());
+        });
+        table.row(&[
+            name.into(),
+            "clone".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(payload_bytes, &r),
+        ]);
+    }
+    table.emit();
+}

@@ -1,0 +1,157 @@
+//! E7 — workflow-engine throughput (paper §I.C: "scalable from individual
+//! laptops ... workflows consisting of varying durations").
+//!
+//! Processes/second through the full stack (launch task → daemon → runner
+//! → checkpoints → terminal broadcast → reply), swept over checkpoint
+//! store (memory vs file) and process shape (flat vs nested workchain).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::Table;
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::daemon::{Daemon, DaemonConfig};
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::{CheckpointStore, FileCheckpointStore, MemoryCheckpointStore};
+use kiwi::workflow::process::{ProcessLogic, StepContext, StepOutcome};
+use kiwi::workflow::workchain::{instantiate, ChainStep, WorkChainSpec};
+use kiwi::workflow::{ProcessRegistry, RemoteLauncher};
+
+const PROCESSES: usize = 200;
+
+/// A flat 5-step process (5 checkpoints).
+struct FiveSteps {
+    i: i64,
+}
+impl ProcessLogic for FiveSteps {
+    fn step(&mut self, step: u32, _ctx: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        if step >= 4 {
+            return Ok(StepOutcome::Finish(Value::I64(self.i)));
+        }
+        self.i += 1;
+        Ok(StepOutcome::Continue)
+    }
+    fn save_state(&self) -> Value {
+        Value::map([("i", Value::I64(self.i))])
+    }
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        self.i = state.get_opt("i").map(|v| v.as_i64()).transpose()?.unwrap_or(0);
+        Ok(())
+    }
+}
+
+fn registry() -> ProcessRegistry {
+    let reg = ProcessRegistry::new();
+    reg.register("five", || Box::new(FiveSteps { i: 0 }));
+    let child = WorkChainSpec::new("leaf")
+        .step("go", |_cc, _ctx| Ok(ChainStep::Finish(Value::I64(1))))
+        .build();
+    reg.register("leaf", move || instantiate(&child));
+    let parent = WorkChainSpec::new("nest")
+        .step("spawn", |cc, ctx| {
+            for _ in 0..4 {
+                let pid = ctx.spawn("leaf", Value::Null)?;
+                cc.add_child(&pid);
+            }
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("done", |cc, _ctx| {
+            Ok(ChainStep::Finish(Value::I64(cc.children().len() as i64)))
+        })
+        .build();
+    reg.register("nest", move || instantiate(&parent));
+    reg
+}
+
+fn run_case(
+    store: Arc<dyn CheckpointStore>,
+    process_type: &str,
+    count: usize,
+    workers: usize,
+) -> (Duration, f64) {
+    let broker = InprocBroker::new();
+    let comm: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+    let daemon = Daemon::start(
+        Arc::clone(&comm),
+        store,
+        registry(),
+        DaemonConfig { workers, ..Default::default() },
+    )
+    .unwrap();
+    let client: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+    let launcher = RemoteLauncher::new(client);
+    let t0 = Instant::now();
+    let futs: Vec<_> =
+        (0..count).map(|_| launcher.launch(process_type, Value::Null).unwrap().1).collect();
+    for f in futs {
+        let record = f.wait(Duration::from_secs(300)).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+    }
+    let wall = t0.elapsed();
+    daemon.shutdown();
+    (wall, count as f64 / wall.as_secs_f64())
+}
+
+fn main() {
+    let mut table = Table::new(
+        "E7 workflow engine throughput (200 processes, 4 workers)",
+        &["process", "checkpoints", "wall", "proc/s"],
+    );
+    let ckpt_dir = std::env::temp_dir().join(format!("kiwi-bench-ckpt-{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+
+    for (label, store) in [
+        ("memory", Arc::new(MemoryCheckpointStore::new()) as Arc<dyn CheckpointStore>),
+        ("file", Arc::new(FileCheckpointStore::open(&ckpt_dir).unwrap()) as Arc<dyn CheckpointStore>),
+    ] {
+        let (wall, thpt) = run_case(Arc::clone(&store), "five", PROCESSES, 4);
+        table.row(&["five-step flat".into(), label.into(), format!("{wall:.2?}"), format!("{thpt:.0}")]);
+    }
+    // Nested workchains: each parent spawns 4 children => 5 processes per
+    // submission. Parents hold a worker thread while waiting (synchronous-
+    // wait design, DESIGN.md), so keep parents-in-flight below the pool
+    // size: submit in waves of 2 on 8 workers.
+    {
+        let broker = InprocBroker::new();
+        let comm: Arc<dyn Communicator> =
+            Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+        let daemon = Daemon::start(
+            Arc::clone(&comm),
+            Arc::new(MemoryCheckpointStore::new()),
+            registry(),
+            DaemonConfig { workers: 8, ..Default::default() },
+        )
+        .unwrap();
+        let client: Arc<dyn Communicator> =
+            Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+        let launcher = RemoteLauncher::new(client);
+        let parents = PROCESSES / 4;
+        let t0 = Instant::now();
+        for wave in (0..parents).step_by(2) {
+            let futs: Vec<_> = (wave..(wave + 2).min(parents))
+                .map(|_| launcher.launch("nest", Value::Null).unwrap().1)
+                .collect();
+            for f in futs {
+                let record = f.wait(Duration::from_secs(300)).unwrap();
+                assert_eq!(record.get_str("state").unwrap(), "finished");
+            }
+        }
+        let wall = t0.elapsed();
+        let thpt = parents as f64 / wall.as_secs_f64();
+        daemon.shutdown();
+        table.row(&[
+            "nested 1+4 chain".into(),
+            "memory".into(),
+            format!("{wall:.2?}"),
+            format!("{:.0} parents/s ({:.0} proc/s)", thpt, thpt * 5.0),
+        ]);
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    table.emit();
+    println!("expected shape: file checkpoints cost a constant factor over\n\
+              memory (5 json writes per process); nested chains add one\n\
+              broadcast round per generation but parallelise across workers.");
+}

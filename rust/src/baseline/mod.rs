@@ -1,0 +1,9 @@
+//! The status-quo baseline the paper argues against (§I: "home-made queue
+//! data structures, race condition susceptible locks and polling based
+//! solutions being commonplace"): a file-system polling task queue, built
+//! the way academic codes actually build them. Benchmarked head-to-head
+//! against the event-based broker in `benches/baseline_polling.rs` (E6).
+
+pub mod polling;
+
+pub use polling::{PollingQueue, PollingWorker};

@@ -1,0 +1,325 @@
+//! A directory-based polling task queue.
+//!
+//! Protocol (faithful to countless home-made lab pipelines):
+//!
+//! * submit: write `<id>.task` into the spool directory.
+//! * claim: workers scan the directory every `poll_interval` and claim a
+//!   task by atomically renaming `<id>.task` → `<id>.claimed` (rename is
+//!   the "lock"; on POSIX only one claimant wins).
+//! * complete: write `<id>.result`, remove `<id>.claimed`.
+//! * collect: the submitter polls for `<id>.result`.
+//!
+//! Faults: a worker that dies after claiming leaves a `.claimed` file that
+//! nobody retries until a *janitor* pass re-queues stale claims — the
+//! polling analog of requeue-on-death, with detection latency set by the
+//! janitor period rather than heartbeats.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::error::{Error, Result};
+use crate::wire::{json, Value};
+
+static SUBMIT_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Handle to a spool directory.
+#[derive(Clone)]
+pub struct PollingQueue {
+    dir: PathBuf,
+}
+
+/// A claimed task: process it, then call [`PollingQueue::complete`].
+pub struct ClaimedTask {
+    pub id: String,
+    pub task: Value,
+    claimed_path: PathBuf,
+}
+
+impl PollingQueue {
+    /// Open (creating) a spool directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(PollingQueue { dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Submit a task; returns its id.
+    pub fn submit(&self, task: &Value) -> Result<String> {
+        let id = format!(
+            "{}-{}",
+            std::process::id(),
+            SUBMIT_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let tmp = self.dir.join(format!("{id}.tmp"));
+        std::fs::write(&tmp, json::to_string(task))?;
+        std::fs::rename(&tmp, self.dir.join(format!("{id}.task")))?;
+        Ok(id)
+    }
+
+    /// Scan once for a task and try to claim it. `Ok(None)` = spool empty
+    /// (the caller sleeps `poll_interval` — that sleep IS the baseline's
+    /// latency floor).
+    pub fn try_claim(&self) -> Result<Option<ClaimedTask>> {
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            let Some(id) = name.strip_suffix(".task") else { continue };
+            let claimed = self.dir.join(format!("{id}.claimed"));
+            // Atomic rename: exactly one scanning worker wins this task.
+            match std::fs::rename(&path, &claimed) {
+                Ok(()) => {
+                    let text = std::fs::read_to_string(&claimed)?;
+                    let task = json::from_str(&text)?;
+                    return Ok(Some(ClaimedTask {
+                        id: id.to_string(),
+                        task,
+                        claimed_path: claimed,
+                    }));
+                }
+                Err(_) => continue, // raced; someone else claimed it
+            }
+        }
+        Ok(None)
+    }
+
+    /// Finish a claimed task with its result.
+    pub fn complete(&self, claimed: ClaimedTask, result: &Value) -> Result<()> {
+        let tmp = self.dir.join(format!("{}.rtmp", claimed.id));
+        std::fs::write(&tmp, json::to_string(result))?;
+        std::fs::rename(&tmp, self.dir.join(format!("{}.result", claimed.id)))?;
+        std::fs::remove_file(&claimed.claimed_path).ok();
+        Ok(())
+    }
+
+    /// Non-blocking result check.
+    pub fn try_result(&self, id: &str) -> Result<Option<Value>> {
+        let path = self.dir.join(format!("{id}.result"));
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Ok(Some(json::from_str(&text)?))
+    }
+
+    /// Poll for a result (the submitter's half of the polling tax).
+    pub fn wait_result(
+        &self,
+        id: &str,
+        poll_interval: Duration,
+        timeout: Duration,
+    ) -> Result<Value> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(v) = self.try_result(id)? {
+                return Ok(v);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Timeout(format!("polling result for '{id}'")));
+            }
+            std::thread::sleep(poll_interval);
+        }
+    }
+
+    /// Janitor: re-queue `.claimed` files older than `stale_after`
+    /// (crashed-worker recovery, polling style). Returns how many.
+    pub fn requeue_stale(&self, stale_after: Duration) -> Result<usize> {
+        let mut n = 0;
+        let now = SystemTime::now();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|x| x.to_str()) else { continue };
+            let Some(id) = name.strip_suffix(".claimed") else { continue };
+            let age = entry_age(&path, now);
+            if age >= stale_after
+                && std::fs::rename(&path, self.dir.join(format!("{id}.task"))).is_ok()
+            {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Tasks waiting in the spool (bench instrumentation).
+    pub fn depth(&self) -> Result<usize> {
+        let mut n = 0;
+        for entry in std::fs::read_dir(&self.dir)? {
+            if entry?.path().extension().map(|e| e == "task").unwrap_or(false) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+fn entry_age(path: &Path, now: SystemTime) -> Duration {
+    std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| now.duration_since(t).ok())
+        .unwrap_or_default()
+}
+
+/// A polling worker thread: scan → claim → handle → complete → sleep.
+pub struct PollingWorker {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    /// Number of directory scans performed (the busy-poll overhead metric).
+    pub scans: Arc<AtomicU64>,
+}
+
+impl PollingWorker {
+    pub fn spawn(
+        queue: PollingQueue,
+        poll_interval: Duration,
+        mut handler: impl FnMut(&Value) -> Value + Send + 'static,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let scans = Arc::new(AtomicU64::new(0));
+        let stop2 = Arc::clone(&stop);
+        let scans2 = Arc::clone(&scans);
+        let handle = std::thread::Builder::new()
+            .name("kiwi-polling-worker".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    scans2.fetch_add(1, Ordering::Relaxed);
+                    match queue.try_claim() {
+                        Ok(Some(claimed)) => {
+                            let result = handler(&claimed.task);
+                            queue.complete(claimed, &result).ok();
+                            // Hot streak: immediately re-scan while there
+                            // is work (the best case for polling).
+                        }
+                        Ok(None) => std::thread::sleep(poll_interval),
+                        Err(e) => {
+                            log::warn!("polling worker: {e}");
+                            std::thread::sleep(poll_interval);
+                        }
+                    }
+                }
+            })
+            .expect("spawn polling worker");
+        PollingWorker { stop, handle: Some(handle), scans }
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for PollingWorker {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_spool(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kiwi-spool-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn submit_claim_complete_roundtrip() {
+        let dir = temp_spool("rt");
+        let q = PollingQueue::open(&dir).unwrap();
+        let id = q.submit(&Value::map([("x", Value::I64(5))])).unwrap();
+        assert_eq!(q.depth().unwrap(), 1);
+        let claimed = q.try_claim().unwrap().unwrap();
+        assert_eq!(claimed.task.get_i64("x").unwrap(), 5);
+        assert_eq!(q.depth().unwrap(), 0);
+        assert!(q.try_result(&id).unwrap().is_none());
+        q.complete(claimed, &Value::str("done")).unwrap();
+        assert_eq!(q.try_result(&id).unwrap().unwrap(), Value::str("done"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_spool_claims_nothing() {
+        let dir = temp_spool("empty");
+        let q = PollingQueue::open(&dir).unwrap();
+        assert!(q.try_claim().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn each_task_claimed_exactly_once() {
+        let dir = temp_spool("once");
+        let q = PollingQueue::open(&dir).unwrap();
+        for i in 0..20 {
+            q.submit(&Value::I64(i)).unwrap();
+        }
+        // Two competing claimants drain the spool; no task twice.
+        let mut seen = Vec::new();
+        let (q1, q2) = (q.clone(), q.clone());
+        loop {
+            let a = q1.try_claim().unwrap();
+            let b = q2.try_claim().unwrap();
+            if a.is_none() && b.is_none() {
+                break;
+            }
+            for c in [a, b].into_iter().flatten() {
+                seen.push(c.task.as_i64().unwrap());
+                q.complete(c, &Value::Null).unwrap();
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn worker_processes_and_result_waits() {
+        let dir = temp_spool("worker");
+        let q = PollingQueue::open(&dir).unwrap();
+        let worker = PollingWorker::spawn(q.clone(), Duration::from_millis(2), |task| {
+            Value::I64(task.as_i64().unwrap() * 10)
+        });
+        let id = q.submit(&Value::I64(7)).unwrap();
+        let result = q
+            .wait_result(&id, Duration::from_millis(2), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(result, Value::I64(70));
+        worker.stop();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wait_result_times_out() {
+        let dir = temp_spool("timeout");
+        let q = PollingQueue::open(&dir).unwrap();
+        let err = q
+            .wait_result("nope", Duration::from_millis(1), Duration::from_millis(20))
+            .unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn janitor_requeues_stale_claims() {
+        let dir = temp_spool("janitor");
+        let q = PollingQueue::open(&dir).unwrap();
+        q.submit(&Value::str("orphan")).unwrap();
+        let claimed = q.try_claim().unwrap().unwrap();
+        // Simulate worker death: drop the claim without completing.
+        let id = claimed.id.clone();
+        drop(claimed);
+        assert_eq!(q.depth().unwrap(), 0);
+        // Stale immediately with a zero threshold.
+        assert_eq!(q.requeue_stale(Duration::ZERO).unwrap(), 1);
+        assert_eq!(q.depth().unwrap(), 1);
+        let again = q.try_claim().unwrap().unwrap();
+        assert_eq!(again.id, id);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

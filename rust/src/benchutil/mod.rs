@@ -1,0 +1,9 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed runs,
+//! latency percentiles via the shared [`crate::metrics::Histogram`], and
+//! paper-style table rendering with CSV dumps under `target/bench-results/`.
+
+pub mod runner;
+pub mod table;
+
+pub use runner::{bench, bench_n, BenchResult};
+pub use table::Table;

@@ -1,0 +1,134 @@
+//! Measurement driver: warmup, then timed iterations with per-iteration
+//! latencies recorded into a histogram.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::Histogram;
+
+/// Outcome of one benchmark case.
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub total: Duration,
+    /// Per-iteration latency histogram (ns).
+    pub latency: Histogram,
+    /// Optional "items per iteration" for throughput reporting.
+    pub items_per_iter: u64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.latency.mean() as u64)
+    }
+
+    pub fn p50(&self) -> Duration {
+        Duration::from_nanos(self.latency.quantile(0.5))
+    }
+
+    pub fn p99(&self) -> Duration {
+        Duration::from_nanos(self.latency.quantile(0.99))
+    }
+
+    /// Iterations (or items) per second over the whole run.
+    pub fn throughput(&self) -> f64 {
+        let items = self.iterations * self.items_per_iter.max(1);
+        items as f64 / self.total.as_secs_f64().max(1e-12)
+    }
+
+    /// One human-readable line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} n={:<7} mean={:>10} p50={:>10} p99={:>10} thpt={:>12.0}/s",
+            self.name,
+            self.iterations,
+            fmt_dur(self.mean()),
+            fmt_dur(self.p50()),
+            fmt_dur(self.p99()),
+            self.throughput()
+        )
+    }
+}
+
+/// Render a duration with a sensible unit.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured iterations, then `iters` measured ones.
+pub fn bench_n(name: &str, warmup: u64, iters: u64, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let latency = Histogram::new();
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        latency.record_duration(t0.elapsed());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iterations: iters,
+        total: start.elapsed(),
+        latency,
+        items_per_iter: 1,
+    }
+}
+
+/// Auto-calibrated run: aims for `target` of measured wall time (min 10
+/// iterations), with 10% warmup.
+pub fn bench(name: &str, target: Duration, mut f: impl FnMut()) -> BenchResult {
+    // Calibrate with one measured call.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (target.as_nanos() / once.as_nanos()).clamp(10, 5_000_000) as u64;
+    let warmup = (iters / 10).max(1);
+    bench_n(name, warmup, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_iterations() {
+        let mut count = 0u64;
+        let r = bench_n("inc", 5, 100, || count += 1);
+        assert_eq!(count, 105);
+        assert_eq!(r.iterations, 100);
+        assert_eq!(r.latency.count(), 100);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn bench_autocalibrates() {
+        let r = bench("sleepless", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iterations >= 10);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_dur(Duration::from_micros(2)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = bench_n("my-case", 0, 10, || {});
+        assert!(r.summary().contains("my-case"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Paper-style result tables: aligned console rendering plus CSV dumps
+//! under `target/bench-results/<name>.csv` so EXPERIMENTS.md numbers are
+//! regenerable and diffable.
+
+use std::path::PathBuf;
+
+/// A simple column-aligned table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to a string (and this is what `print` shows).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist as CSV.
+    pub fn emit(&self) {
+        println!("{}", self.render());
+        if let Err(e) = self.write_csv() {
+            eprintln!("warning: could not write csv: {e}");
+        }
+    }
+
+    /// CSV path: `target/bench-results/<slug>.csv`.
+    pub fn csv_path(&self) -> PathBuf {
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '-' })
+            .collect();
+        PathBuf::from("target/bench-results").join(format!("{slug}.csv"))
+    }
+
+    fn write_csv(&self) -> std::io::Result<()> {
+        let path = self.csv_path();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut text = String::new();
+        let escape = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        text.push_str(&self.headers.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","));
+        text.push('\n');
+        for row in &self.rows {
+            text.push_str(&row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+            text.push('\n');
+        }
+        std::fs::write(path, text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("E1: throughput", &["workers", "msgs/s"]);
+        t.row(&["1".into(), "50000".into()]);
+        t.row(&["8".into(), "240000".into()]);
+        let s = t.render();
+        assert!(s.contains("E1: throughput"));
+        assert!(s.contains("workers"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains("0")).collect();
+        assert_eq!(lines.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn mismatched_row_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("csv test", &["name", "note"]);
+        t.row(&["a,b".into(), "say \"hi\"".into()]);
+        t.write_csv().unwrap();
+        let text = std::fs::read_to_string(t.csv_path()).unwrap();
+        assert!(text.contains("\"a,b\""));
+        assert!(text.contains("\"say \"\"hi\"\"\""));
+        std::fs::remove_file(t.csv_path()).ok();
+    }
+}

@@ -1,0 +1,959 @@
+//! The transport-agnostic broker core: queues + exchanges + connections
+//! under one lock, with push delivery into per-connection channels.
+//!
+//! Sessions (TCP) and in-process clients both talk to a [`BrokerHandle`]:
+//! `connect` registers a channel for unsolicited server messages
+//! (deliveries, consumer cancellations), `handle` executes one request,
+//! `touch` records heartbeat liveness, and `disconnect` tears everything
+//! down — requeueing unacked messages exactly like RabbitMQ does when a
+//! consumer dies.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::broker::exchange::Exchange;
+use crate::broker::persistence::{NoopPersister, Persister, RecoveredState};
+use crate::broker::protocol::{
+    ClientRequest, Delivery, MessageProps, QueueOptions, ServerMsg,
+};
+#[cfg(test)]
+use crate::broker::protocol::ExchangeKind;
+use crate::broker::queue::{Consumer, Queue, QueuedMessage};
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::wire::Value;
+
+/// Identifies one client connection to the broker.
+pub type ConnectionId = u64;
+
+struct ConnectionState {
+    client_id: String,
+    heartbeat_ms: u64,
+    last_seen: Instant,
+    sender: Sender<ServerMsg>,
+    consumer_tags: HashSet<String>,
+    /// Queues declared exclusive by this connection.
+    exclusive_queues: HashSet<String>,
+}
+
+struct Core {
+    queues: HashMap<String, Queue>,
+    exchanges: HashMap<String, Exchange>,
+    connections: HashMap<ConnectionId, ConnectionState>,
+    /// consumer_tag -> queue name.
+    consumer_index: HashMap<String, String>,
+    /// delivery_tag -> queue name (for acks without a queue argument).
+    delivery_index: HashMap<u64, String>,
+    next_conn: ConnectionId,
+    next_msg: u64,
+    next_tag: u64,
+    persister: Box<dyn Persister>,
+}
+
+/// The broker. Cheap to clone (it is an `Arc` internally): hand one to the
+/// TCP server and embed another in-process.
+#[derive(Clone)]
+pub struct BrokerHandle {
+    core: Arc<BrokerCore>,
+}
+
+pub struct BrokerCore {
+    inner: Mutex<Core>,
+    pub metrics: Registry,
+}
+
+impl Default for BrokerHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BrokerHandle {
+    /// A transient broker (no persistence).
+    pub fn new() -> Self {
+        Self::with_persister(Box::new(NoopPersister), RecoveredState::default())
+    }
+
+    /// A broker backed by `persister`, seeded with recovered state
+    /// (see [`crate::broker::persistence::WalPersister::open`]).
+    pub fn with_persister(persister: Box<dyn Persister>, recovered: RecoveredState) -> Self {
+        let now = Instant::now();
+        let mut queues = HashMap::new();
+        for (name, options) in &recovered.queues {
+            let mut q = Queue::new(name, options.clone(), None);
+            if let Some(msgs) = recovered.messages.get(name) {
+                for mut m in msgs.iter().cloned() {
+                    crate::broker::persistence::rearm_deadline(&mut m, options.default_ttl_ms, now);
+                    q.publish(m, now);
+                }
+                // Recovery re-publishes; reset the counter so stats reflect
+                // this process's traffic.
+                q.published = 0;
+            }
+            queues.insert(name.clone(), q);
+        }
+        let mut next_msg = 1u64;
+        for msgs in recovered.messages.values() {
+            for m in msgs {
+                next_msg = next_msg.max(m.msg_id + 1);
+            }
+        }
+        BrokerHandle {
+            core: Arc::new(BrokerCore {
+                inner: Mutex::new(Core {
+                    queues,
+                    exchanges: HashMap::new(),
+                    connections: HashMap::new(),
+                    consumer_index: HashMap::new(),
+                    delivery_index: HashMap::new(),
+                    next_conn: 1,
+                    next_msg,
+                    next_tag: 1,
+                    persister,
+                }),
+                metrics: Registry::new(),
+            }),
+        }
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.core.metrics
+    }
+
+    /// Register a connection. `sender` receives deliveries and cancels.
+    pub fn connect(
+        &self,
+        client_id: &str,
+        heartbeat_ms: u64,
+        sender: Sender<ServerMsg>,
+    ) -> ConnectionId {
+        let mut core = self.core.inner.lock().unwrap();
+        let id = core.next_conn;
+        core.next_conn += 1;
+        core.connections.insert(
+            id,
+            ConnectionState {
+                client_id: client_id.to_string(),
+                heartbeat_ms,
+                last_seen: Instant::now(),
+                sender,
+                consumer_tags: HashSet::new(),
+                exclusive_queues: HashSet::new(),
+            },
+        );
+        self.core.metrics.gauge("broker.connections").inc();
+        self.core.metrics.counter("broker.connects").inc();
+        id
+    }
+
+    /// Record liveness (any traffic counts, like AMQP).
+    pub fn touch(&self, conn: ConnectionId) {
+        let mut core = self.core.inner.lock().unwrap();
+        if let Some(c) = core.connections.get_mut(&conn) {
+            c.last_seen = Instant::now();
+        }
+    }
+
+    /// Tear down a connection: remove its consumers, requeue its unacked
+    /// messages, delete its exclusive queues, redistribute work.
+    pub fn disconnect(&self, conn: ConnectionId) {
+        let mut core = self.core.inner.lock().unwrap();
+        let Some(state) = core.connections.remove(&conn) else { return };
+        self.core.metrics.gauge("broker.connections").dec();
+        for tag in &state.consumer_tags {
+            core.consumer_index.remove(tag);
+        }
+        let mut requeued = 0usize;
+        let mut touched: Vec<String> = Vec::new();
+        for (name, q) in core.queues.iter_mut() {
+            let n = q.drop_connection(conn);
+            if n > 0 || q.consumer_count() > 0 {
+                touched.push(name.clone());
+            }
+            requeued += n;
+        }
+        if requeued > 0 {
+            self.core.metrics.counter("broker.requeued_on_death").add(requeued as u64);
+            log::info!(
+                "broker: connection {conn} ({}) died with {requeued} unacked; requeued",
+                state.client_id
+            );
+        }
+        // Exclusive queues die with their owner.
+        for name in &state.exclusive_queues {
+            Self::delete_queue_locked(&mut core, name).ok();
+        }
+        // Unacked tags from this connection are gone.
+        core.delivery_index.retain(|_, q| !state.exclusive_queues.contains(q));
+        for name in touched {
+            Self::dispatch_queue(&mut core, &name);
+        }
+    }
+
+    /// Execute one request on behalf of `conn`. The reply value is what
+    /// goes into `ServerMsg::Ok`; errors map to `ServerMsg::Err`.
+    pub fn handle(&self, conn: ConnectionId, req: &ClientRequest) -> Result<Value> {
+        let mut core = self.core.inner.lock().unwrap();
+        let (result, dispatches) = self.execute(&mut core, conn, req);
+        for q in dispatches {
+            Self::dispatch_queue(&mut core, &q);
+        }
+        result
+    }
+
+    /// Execute one request and push the reply into the connection's own
+    /// channel *before* any deliveries the request triggers — the ordering
+    /// guarantee sessions rely on (consume-ok precedes the first delivery,
+    /// as in AMQP).
+    pub fn handle_with_reply(&self, conn: ConnectionId, req: &ClientRequest, req_id: u64) {
+        let mut core = self.core.inner.lock().unwrap();
+        let (result, dispatches) = self.execute(&mut core, conn, req);
+        let msg = match result {
+            Ok(reply) => ServerMsg::Ok { req_id, reply },
+            Err(e) => {
+                ServerMsg::Err { req_id, code: e.code().to_string(), message: e.to_string() }
+            }
+        };
+        if let Some(c) = core.connections.get(&conn) {
+            c.sender.send(msg).ok();
+        }
+        for q in dispatches {
+            Self::dispatch_queue(&mut core, &q);
+        }
+    }
+
+    /// The request interpreter. Returns the reply plus the queues whose
+    /// delivery pump must run after the reply is sent.
+    fn execute(
+        &self,
+        core: &mut Core,
+        conn: ConnectionId,
+        req: &ClientRequest,
+    ) -> (Result<Value>, Vec<String>) {
+        let mut dispatches = Vec::new();
+        let result = self.execute_inner(core, conn, req, &mut dispatches);
+        (result, dispatches)
+    }
+
+    fn execute_inner(
+        &self,
+        core: &mut Core,
+        conn: ConnectionId,
+        req: &ClientRequest,
+        dispatches: &mut Vec<String>,
+    ) -> Result<Value> {
+        if let Some(c) = core.connections.get_mut(&conn) {
+            c.last_seen = Instant::now();
+        } else {
+            return Err(Error::Closed(format!("unknown connection {conn}")));
+        }
+        match req {
+            ClientRequest::Hello { client_id, heartbeat_ms } => {
+                let c = core.connections.get_mut(&conn).unwrap();
+                c.client_id = client_id.clone();
+                c.heartbeat_ms = *heartbeat_ms;
+                Ok(Value::map([("connection", Value::from(conn))]))
+            }
+            ClientRequest::QueueDeclare { queue, options } => {
+                Self::declare_queue(core, conn, queue, options.clone())?;
+                let q = &core.queues[queue];
+                Ok(Value::map([
+                    ("queue", Value::str(queue)),
+                    ("ready", Value::from(q.ready_len())),
+                    ("consumers", Value::from(q.consumer_count())),
+                ]))
+            }
+            ClientRequest::QueueDelete { queue } => {
+                Self::delete_queue_locked(core, queue)?;
+                Ok(Value::Null)
+            }
+            ClientRequest::QueuePurge { queue } => {
+                let q = core
+                    .queues
+                    .get_mut(queue)
+                    .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
+                let ids = q.purge();
+                let durable = q.options.durable;
+                let n = ids.len();
+                if durable {
+                    for id in ids {
+                        core.persister.record_retire(queue, id)?;
+                    }
+                }
+                Ok(Value::map([("purged", Value::from(n))]))
+            }
+            ClientRequest::ExchangeDeclare { exchange, kind } => {
+                if exchange.is_empty() {
+                    return Err(Error::Broker("cannot declare the default exchange".into()));
+                }
+                match core.exchanges.get(exchange) {
+                    Some(ex) if ex.kind != *kind => Err(Error::Broker(format!(
+                        "exchange '{exchange}' exists with kind {}",
+                        ex.kind.as_str()
+                    ))),
+                    Some(_) => Ok(Value::Null),
+                    None => {
+                        core.exchanges
+                            .insert(exchange.clone(), Exchange::new(exchange, *kind));
+                        Ok(Value::Null)
+                    }
+                }
+            }
+            ClientRequest::Bind { exchange, queue, routing_key } => {
+                if !core.queues.contains_key(queue) {
+                    return Err(Error::Broker(format!("no such queue '{queue}'")));
+                }
+                let ex = core
+                    .exchanges
+                    .get_mut(exchange)
+                    .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
+                ex.bind(routing_key, queue);
+                Ok(Value::Null)
+            }
+            ClientRequest::Unbind { exchange, queue, routing_key } => {
+                let ex = core
+                    .exchanges
+                    .get_mut(exchange)
+                    .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
+                ex.unbind(routing_key, queue);
+                Ok(Value::Null)
+            }
+            ClientRequest::Publish { exchange, routing_key, body, props, mandatory } => {
+                let n = Self::publish(
+                    core,
+                    exchange,
+                    routing_key,
+                    body.clone(),
+                    props.clone(),
+                    dispatches,
+                )?;
+                if *mandatory && n == 0 {
+                    return Err(Error::UnroutableMessage(format!(
+                        "exchange '{exchange}' routing key '{routing_key}' matched no queue"
+                    )));
+                }
+                self.core.metrics.counter("broker.published").inc();
+                Ok(Value::map([("routed", Value::from(n))]))
+            }
+            ClientRequest::Consume { queue, consumer_tag, prefetch } => {
+                if core.consumer_index.contains_key(consumer_tag) {
+                    return Err(Error::DuplicateSubscriber(consumer_tag.clone()));
+                }
+                {
+                    let q = core
+                        .queues
+                        .get_mut(queue)
+                        .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
+                    if let Some(owner) = q.owner {
+                        if owner != conn {
+                            return Err(Error::Broker(format!(
+                                "queue '{queue}' is exclusive to another connection"
+                            )));
+                        }
+                    }
+                    q.add_consumer(Consumer {
+                        consumer_tag: consumer_tag.clone(),
+                        connection: conn,
+                        prefetch: *prefetch,
+                        in_flight: 0,
+                    });
+                }
+                core.consumer_index.insert(consumer_tag.clone(), queue.clone());
+                core.connections
+                    .get_mut(&conn)
+                    .unwrap()
+                    .consumer_tags
+                    .insert(consumer_tag.clone());
+                dispatches.push(queue.clone());
+                Ok(Value::Null)
+            }
+            ClientRequest::Cancel { consumer_tag } => {
+                let Some(queue) = core.consumer_index.remove(consumer_tag) else {
+                    return Ok(Value::Null); // cancel is idempotent
+                };
+                if let Some(c) = core.connections.get_mut(&conn) {
+                    c.consumer_tags.remove(consumer_tag);
+                }
+                let auto_delete = {
+                    let q = core.queues.get_mut(&queue);
+                    match q {
+                        Some(q) => {
+                            q.remove_consumer(consumer_tag);
+                            q.options.auto_delete && q.consumer_count() == 0
+                        }
+                        None => false,
+                    }
+                };
+                if auto_delete {
+                    Self::delete_queue_locked(core, &queue).ok();
+                }
+                Ok(Value::Null)
+            }
+            ClientRequest::Ack { delivery_tag } => {
+                let Some(queue) = core.delivery_index.remove(delivery_tag) else {
+                    return Ok(Value::Null); // idempotent double-ack
+                };
+                let (msg_id, durable) = {
+                    let Some(q) = core.queues.get_mut(&queue) else {
+                        return Ok(Value::Null);
+                    };
+                    (q.ack(*delivery_tag), q.options.durable)
+                };
+                if let (Some(id), true) = (msg_id, durable) {
+                    core.persister.record_retire(&queue, id)?;
+                }
+                self.core.metrics.counter("broker.acked").inc();
+                dispatches.push(queue.clone());
+                Ok(Value::Null)
+            }
+            ClientRequest::Nack { delivery_tag, requeue } => {
+                let Some(queue) = core.delivery_index.remove(delivery_tag) else {
+                    return Ok(Value::Null);
+                };
+                let (dropped_id, durable) = {
+                    let Some(q) = core.queues.get_mut(&queue) else {
+                        return Ok(Value::Null);
+                    };
+                    (q.nack(*delivery_tag, *requeue), q.options.durable)
+                };
+                if let (Some(id), true) = (dropped_id, durable) {
+                    core.persister.record_retire(&queue, id)?;
+                }
+                dispatches.push(queue.clone());
+                Ok(Value::Null)
+            }
+            ClientRequest::Status => {
+                let queues = Value::Map(
+                    core.queues.iter().map(|(k, q)| (k.clone(), q.stats())).collect(),
+                );
+                Ok(Value::map([
+                    ("queues", queues),
+                    ("connections", Value::from(core.connections.len())),
+                    ("exchanges", Value::from(core.exchanges.len())),
+                    ("metrics", self.core.metrics.snapshot().to_value()),
+                ]))
+            }
+            ClientRequest::Close => Ok(Value::Null),
+        }
+    }
+
+    /// Connections that have missed two heartbeat intervals. Used by the
+    /// heartbeat monitor; eviction = `disconnect`.
+    pub fn stale_connections(&self, now: Instant) -> Vec<ConnectionId> {
+        let core = self.core.inner.lock().unwrap();
+        core.connections
+            .iter()
+            .filter(|(_, c)| {
+                c.heartbeat_ms > 0
+                    && now.duration_since(c.last_seen).as_millis() as u64 > 2 * c.heartbeat_ms
+            })
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// Periodic maintenance: expire TTL'd messages, compact the WAL.
+    pub fn sweep(&self) {
+        let mut core = self.core.inner.lock().unwrap();
+        let now = Instant::now();
+        let names: Vec<String> = core.queues.keys().cloned().collect();
+        for name in names {
+            let (ids, durable) = {
+                let q = core.queues.get_mut(&name).unwrap();
+                (q.sweep_expired(now), q.options.durable)
+            };
+            if durable {
+                for id in ids {
+                    core.persister.record_retire(&name, id).ok();
+                }
+            }
+        }
+        core.persister.maybe_compact().ok();
+    }
+
+    /// Force WAL sync (graceful shutdown path).
+    pub fn sync(&self) -> Result<()> {
+        self.core.inner.lock().unwrap().persister.sync()
+    }
+
+    /// Queue depth (ready) — test/bench convenience.
+    pub fn queue_depth(&self, queue: &str) -> Option<usize> {
+        let core = self.core.inner.lock().unwrap();
+        core.queues.get(queue).map(|q| q.ready_len())
+    }
+
+    /// Unacked count — test/bench convenience.
+    pub fn queue_unacked(&self, queue: &str) -> Option<usize> {
+        let core = self.core.inner.lock().unwrap();
+        core.queues.get(queue).map(|q| q.unacked_len())
+    }
+
+    // ---- internals ----
+
+    fn declare_queue(
+        core: &mut Core,
+        conn: ConnectionId,
+        name: &str,
+        options: QueueOptions,
+    ) -> Result<()> {
+        if name.is_empty() {
+            return Err(Error::Broker("queue name must not be empty".into()));
+        }
+        if let Some(existing) = core.queues.get(name) {
+            if let Some(owner) = existing.owner {
+                if owner != conn {
+                    return Err(Error::Broker(format!(
+                        "queue '{name}' is exclusive to another connection"
+                    )));
+                }
+            }
+            return Ok(()); // redeclare is idempotent
+        }
+        let owner = options.exclusive.then_some(conn);
+        if options.durable {
+            core.persister.record_queue_declare(name, &options)?;
+        }
+        core.queues.insert(name.to_string(), Queue::new(name, options, owner));
+        if let Some(c) = core.connections.get_mut(&conn) {
+            if core.queues[name].owner.is_some() {
+                c.exclusive_queues.insert(name.to_string());
+            }
+        }
+        Ok(())
+    }
+
+    fn delete_queue_locked(core: &mut Core, name: &str) -> Result<()> {
+        let q = core
+            .queues
+            .remove(name)
+            .ok_or_else(|| Error::Broker(format!("no such queue '{name}'")))?;
+        if q.options.durable {
+            core.persister.record_queue_delete(name)?;
+        }
+        for ex in core.exchanges.values_mut() {
+            ex.unbind_queue(name);
+        }
+        core.consumer_index.retain(|tag, qname| {
+            if qname == name {
+                // Tell owners their consumer is gone.
+                for c in core.connections.values() {
+                    if c.consumer_tags.contains(tag) {
+                        c.sender
+                            .send(ServerMsg::CancelConsumer { consumer_tag: tag.clone() })
+                            .ok();
+                    }
+                }
+                false
+            } else {
+                true
+            }
+        });
+        core.delivery_index.retain(|_, qname| qname != name);
+        Ok(())
+    }
+
+    /// Route and enqueue. Returns the number of queues the message reached.
+    fn publish(
+        core: &mut Core,
+        exchange: &str,
+        routing_key: &str,
+        body: Arc<Value>,
+        props: MessageProps,
+        dispatches: &mut Vec<String>,
+    ) -> Result<usize> {
+        let now = Instant::now();
+        let targets: Vec<String> = if exchange.is_empty() {
+            // Default exchange: direct to the queue named by the key.
+            if core.queues.contains_key(routing_key) {
+                vec![routing_key.to_string()]
+            } else {
+                vec![]
+            }
+        } else {
+            let ex = core
+                .exchanges
+                .get(exchange)
+                .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
+            ex.route(routing_key).into_iter().map(String::from).collect()
+        };
+        for qname in &targets {
+            let msg_id = core.next_msg;
+            core.next_msg += 1;
+            let msg = QueuedMessage {
+                msg_id,
+                exchange: exchange.to_string(),
+                routing_key: routing_key.to_string(),
+                body: Arc::clone(&body),
+                props: props.clone(),
+                deadline: None,
+                redelivered: false,
+            };
+            let (dropped, durable) = {
+                let q = core.queues.get_mut(qname).unwrap();
+                let durable = q.options.durable;
+                if durable {
+                    // Log before enqueue: write-AHEAD.
+                    core.persister.record_publish(qname, &msg)?;
+                }
+                (q.publish(msg, now), durable)
+            };
+            if durable {
+                for id in dropped {
+                    core.persister.record_retire(qname, id)?;
+                }
+            }
+            dispatches.push(qname.clone());
+        }
+        Ok(targets.len())
+    }
+
+    /// Pump one queue: hand ready messages to consumers with capacity and
+    /// push the deliveries into their connections' channels.
+    fn dispatch_queue(core: &mut Core, qname: &str) {
+        let now = Instant::now();
+        let next_tag = &mut core.next_tag;
+        let assignments = {
+            let Some(q) = core.queues.get_mut(qname) else { return };
+            q.assign(now, || {
+                let t = *next_tag;
+                *next_tag += 1;
+                t
+            })
+        };
+        // Retire messages that expired while queued (durable only).
+        let (expired, durable) = {
+            let q = core.queues.get_mut(qname).unwrap();
+            (q.drain_expired_ids(), q.options.durable)
+        };
+        if durable {
+            for id in expired {
+                core.persister.record_retire(qname, id).ok();
+            }
+        }
+        for a in assignments {
+            core.delivery_index.insert(a.delivery_tag, qname.to_string());
+            let delivery = Delivery {
+                consumer_tag: a.consumer_tag,
+                delivery_tag: a.delivery_tag,
+                redelivered: a.message.redelivered,
+                exchange: a.message.exchange.clone(),
+                routing_key: a.message.routing_key.clone(),
+                body: Arc::clone(&a.message.body),
+                props: a.message.props.clone(),
+            };
+            if let Some(c) = core.connections.get(&a.connection) {
+                // A send failure means the connection's receiver is gone;
+                // the disconnect path will requeue shortly. Nack it back
+                // right away so nothing is stranded.
+                if c.sender.send(ServerMsg::Deliver(delivery)).is_err() {
+                    if let Some(q) = core.queues.get_mut(qname) {
+                        q.nack(a.delivery_tag, true);
+                    }
+                    core.delivery_index.remove(&a.delivery_tag);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Duration;
+
+    fn setup() -> (BrokerHandle, ConnectionId, Receiver<ServerMsg>) {
+        let broker = BrokerHandle::new();
+        let (tx, rx) = channel();
+        let conn = broker.connect("test", 0, tx);
+        (broker, conn, rx)
+    }
+
+    fn declare(broker: &BrokerHandle, conn: ConnectionId, queue: &str) {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: queue.into(),
+                    options: QueueOptions::default(),
+                },
+            )
+            .unwrap();
+    }
+
+    fn publish(broker: &BrokerHandle, conn: ConnectionId, queue: &str, body: Value) {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: queue.into(),
+                    body: Arc::new(body),
+                    props: MessageProps::default(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+
+    fn consume(broker: &BrokerHandle, conn: ConnectionId, queue: &str, tag: &str, prefetch: u32) {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Consume {
+                    queue: queue.into(),
+                    consumer_tag: tag.into(),
+                    prefetch,
+                },
+            )
+            .unwrap();
+    }
+
+    fn recv_delivery(rx: &Receiver<ServerMsg>) -> Delivery {
+        match rx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ServerMsg::Deliver(d) => d,
+            other => panic!("expected delivery, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn publish_consume_ack_cycle() {
+        let (broker, conn, rx) = setup();
+        declare(&broker, conn, "tasks");
+        publish(&broker, conn, "tasks", Value::str("do-work"));
+        consume(&broker, conn, "tasks", "c1", 1);
+        let d = recv_delivery(&rx);
+        assert_eq!(*d.body, Value::str("do-work"));
+        assert!(!d.redelivered);
+        broker.handle(conn, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
+        assert_eq!(broker.queue_depth("tasks"), Some(0));
+        assert_eq!(broker.queue_unacked("tasks"), Some(0));
+    }
+
+    #[test]
+    fn mandatory_publish_to_missing_queue_fails() {
+        let (broker, conn, _rx) = setup();
+        let err = broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "nowhere".into(),
+                    body: Arc::new(Value::Null),
+                    props: MessageProps::default(),
+                    mandatory: true,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::UnroutableMessage(_)));
+    }
+
+    #[test]
+    fn non_mandatory_publish_to_missing_queue_drops() {
+        let (broker, conn, _rx) = setup();
+        let reply = broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "nowhere".into(),
+                    body: Arc::new(Value::Null),
+                    props: MessageProps::default(),
+                    mandatory: false,
+                },
+            )
+            .unwrap();
+        assert_eq!(reply.get_u64("routed").unwrap(), 0);
+    }
+
+    #[test]
+    fn disconnect_requeues_unacked_to_surviving_consumer() {
+        let broker = BrokerHandle::new();
+        let (tx1, rx1) = channel();
+        let (tx2, rx2) = channel();
+        let conn1 = broker.connect("worker-1", 0, tx1);
+        let conn2 = broker.connect("worker-2", 0, tx2);
+        declare(&broker, conn1, "tasks");
+        publish(&broker, conn1, "tasks", Value::str("t1"));
+        consume(&broker, conn1, "tasks", "c1", 0);
+        let d = recv_delivery(&rx1);
+        assert!(!d.redelivered);
+        // Consumer 2 joins, then worker 1 dies without acking.
+        consume(&broker, conn2, "tasks", "c2", 0);
+        broker.disconnect(conn1);
+        let d2 = recv_delivery(&rx2);
+        assert_eq!(*d2.body, Value::str("t1"));
+        assert!(d2.redelivered, "requeued message must be marked redelivered");
+    }
+
+    #[test]
+    fn fanout_exchange_copies_to_all_queues() {
+        let (broker, conn, rx) = setup();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::ExchangeDeclare {
+                    exchange: "broadcast".into(),
+                    kind: ExchangeKind::Fanout,
+                },
+            )
+            .unwrap();
+        declare(&broker, conn, "q1");
+        declare(&broker, conn, "q2");
+        for q in ["q1", "q2"] {
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::Bind {
+                        exchange: "broadcast".into(),
+                        queue: q.into(),
+                        routing_key: "".into(),
+                    },
+                )
+                .unwrap();
+        }
+        let reply = broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "broadcast".into(),
+                    routing_key: "".into(),
+                    body: Arc::new(Value::str("hello")),
+                    props: MessageProps::default(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+        assert_eq!(reply.get_u64("routed").unwrap(), 2);
+        consume(&broker, conn, "q1", "c1", 0);
+        consume(&broker, conn, "q2", "c2", 0);
+        let tags: Vec<String> =
+            (0..2).map(|_| recv_delivery(&rx).consumer_tag).collect();
+        assert!(tags.contains(&"c1".to_string()) && tags.contains(&"c2".to_string()));
+    }
+
+    #[test]
+    fn exclusive_queue_denied_to_other_connections() {
+        let broker = BrokerHandle::new();
+        let (tx1, _rx1) = channel();
+        let (tx2, _rx2) = channel();
+        let conn1 = broker.connect("a", 0, tx1);
+        let conn2 = broker.connect("b", 0, tx2);
+        broker
+            .handle(
+                conn1,
+                &ClientRequest::QueueDeclare {
+                    queue: "replies".into(),
+                    options: QueueOptions { exclusive: true, ..Default::default() },
+                },
+            )
+            .unwrap();
+        let err = broker
+            .handle(
+                conn2,
+                &ClientRequest::Consume {
+                    queue: "replies".into(),
+                    consumer_tag: "x".into(),
+                    prefetch: 0,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Broker(_)));
+        // Owner death deletes the queue.
+        broker.disconnect(conn1);
+        assert_eq!(broker.queue_depth("replies"), None);
+    }
+
+    #[test]
+    fn duplicate_consumer_tag_rejected_globally() {
+        let (broker, conn, _rx) = setup();
+        declare(&broker, conn, "q1");
+        declare(&broker, conn, "q2");
+        consume(&broker, conn, "q1", "tag", 0);
+        let err = broker
+            .handle(
+                conn,
+                &ClientRequest::Consume {
+                    queue: "q2".into(),
+                    consumer_tag: "tag".into(),
+                    prefetch: 0,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::DuplicateSubscriber(_)));
+    }
+
+    #[test]
+    fn stale_connection_detection() {
+        let broker = BrokerHandle::new();
+        let (tx, _rx) = channel();
+        let conn = broker.connect("hb-test", 10, tx);
+        assert!(broker.stale_connections(Instant::now()).is_empty());
+        let later = Instant::now() + Duration::from_millis(25);
+        assert_eq!(broker.stale_connections(later), vec![conn]);
+        // heartbeat_ms = 0 disables the check.
+        let (tx2, _rx2) = channel();
+        let _conn2 = broker.connect("no-hb", 0, tx2);
+        assert_eq!(broker.stale_connections(later).len(), 1);
+    }
+
+    #[test]
+    fn auto_delete_queue_removed_after_last_cancel() {
+        let (broker, conn, _rx) = setup();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "tmp".into(),
+                    options: QueueOptions { auto_delete: true, ..Default::default() },
+                },
+            )
+            .unwrap();
+        consume(&broker, conn, "tmp", "c1", 0);
+        broker.handle(conn, &ClientRequest::Cancel { consumer_tag: "c1".into() }).unwrap();
+        assert_eq!(broker.queue_depth("tmp"), None);
+    }
+
+    #[test]
+    fn status_reports_queue_stats() {
+        let (broker, conn, _rx) = setup();
+        declare(&broker, conn, "tasks");
+        publish(&broker, conn, "tasks", Value::I64(1));
+        let status = broker.handle(conn, &ClientRequest::Status).unwrap();
+        let stats = status.get("queues").unwrap().get("tasks").unwrap();
+        assert_eq!(stats.get_u64("ready").unwrap(), 1);
+        assert_eq!(stats.get_u64("published").unwrap(), 1);
+    }
+
+    #[test]
+    fn work_split_round_robin_across_consumers() {
+        let broker = BrokerHandle::new();
+        let (tx1, rx1) = channel();
+        let (tx2, rx2) = channel();
+        let c1 = broker.connect("w1", 0, tx1);
+        let c2 = broker.connect("w2", 0, tx2);
+        declare(&broker, c1, "tasks");
+        consume(&broker, c1, "tasks", "t1", 0);
+        consume(&broker, c2, "tasks", "t2", 0);
+        for i in 0..10 {
+            publish(&broker, c1, "tasks", Value::I64(i));
+        }
+        let n1 = rx1.try_iter().count();
+        let n2 = rx2.try_iter().count();
+        assert_eq!(n1 + n2, 10);
+        assert_eq!(n1, 5);
+    }
+
+    #[test]
+    fn queue_delete_notifies_consumers() {
+        let (broker, conn, rx) = setup();
+        declare(&broker, conn, "doomed");
+        consume(&broker, conn, "doomed", "c1", 0);
+        broker.handle(conn, &ClientRequest::QueueDelete { queue: "doomed".into() }).unwrap();
+        match rx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ServerMsg::CancelConsumer { consumer_tag } => assert_eq!(consumer_tag, "c1"),
+            other => panic!("expected cancel, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Exchanges: named routing tables mapping `(exchange, routing_key)` to
+//! queues. Three kinds, mirroring AMQP: direct (exact key), fanout (all
+//! bindings), topic (dotted patterns with `*` = exactly one word and
+//! `#` = zero or more words).
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::broker::protocol::ExchangeKind;
+
+/// One exchange and its bindings.
+pub struct Exchange {
+    pub name: String,
+    pub kind: ExchangeKind,
+    /// (routing_key_pattern, queue) pairs; a set so duplicate binds are
+    /// idempotent (AMQP behaviour).
+    bindings: BTreeSet<(String, String)>,
+    /// Direct exchanges keep an exact-match index for O(1) routing.
+    direct_index: HashMap<String, Vec<String>>,
+}
+
+impl Exchange {
+    pub fn new(name: &str, kind: ExchangeKind) -> Self {
+        Exchange { name: name.to_string(), kind, bindings: BTreeSet::new(), direct_index: HashMap::new() }
+    }
+
+    /// Add a binding. Idempotent.
+    pub fn bind(&mut self, routing_key: &str, queue: &str) {
+        if self.bindings.insert((routing_key.to_string(), queue.to_string()))
+            && self.kind == ExchangeKind::Direct
+        {
+            self.direct_index.entry(routing_key.to_string()).or_default().push(queue.to_string());
+        }
+    }
+
+    /// Remove a binding. Returns true if it existed.
+    pub fn unbind(&mut self, routing_key: &str, queue: &str) -> bool {
+        let removed = self.bindings.remove(&(routing_key.to_string(), queue.to_string()));
+        if removed && self.kind == ExchangeKind::Direct {
+            if let Some(qs) = self.direct_index.get_mut(routing_key) {
+                qs.retain(|q| q != queue);
+                if qs.is_empty() {
+                    self.direct_index.remove(routing_key);
+                }
+            }
+        }
+        removed
+    }
+
+    /// Remove every binding that targets `queue` (queue deletion).
+    pub fn unbind_queue(&mut self, queue: &str) {
+        let stale: Vec<(String, String)> =
+            self.bindings.iter().filter(|(_, q)| q == queue).cloned().collect();
+        for (rk, q) in stale {
+            self.unbind(&rk, &q);
+        }
+    }
+
+    pub fn binding_count(&self) -> usize {
+        self.bindings.len()
+    }
+
+    /// Queues a message with `routing_key` routes to (deduplicated —
+    /// a queue bound twice by overlapping patterns receives one copy).
+    pub fn route(&self, routing_key: &str) -> Vec<&str> {
+        match self.kind {
+            ExchangeKind::Direct => self
+                .direct_index
+                .get(routing_key)
+                .map(|qs| qs.iter().map(String::as_str).collect())
+                .unwrap_or_default(),
+            ExchangeKind::Fanout => {
+                let mut seen = BTreeSet::new();
+                self.bindings
+                    .iter()
+                    .filter(|(_, q)| seen.insert(q.as_str()))
+                    .map(|(_, q)| q.as_str())
+                    .collect()
+            }
+            ExchangeKind::Topic => {
+                let mut seen = BTreeSet::new();
+                self.bindings
+                    .iter()
+                    .filter(|(pat, q)| topic_matches(pat, routing_key) && seen.insert(q.as_str()))
+                    .map(|(_, q)| q.as_str())
+                    .collect()
+            }
+        }
+    }
+}
+
+/// AMQP topic matching: patterns and keys are dot-separated words;
+/// `*` matches exactly one word, `#` matches zero or more words.
+pub fn topic_matches(pattern: &str, key: &str) -> bool {
+    let pat: Vec<&str> = if pattern.is_empty() { vec![] } else { pattern.split('.').collect() };
+    let words: Vec<&str> = if key.is_empty() { vec![] } else { key.split('.').collect() };
+    // Dynamic programming over (pattern index, word index); small inputs so
+    // a simple recursion with memo-free backtracking is fine, but we keep
+    // it iterative to bound stack usage on hostile input.
+    // match_table[i][j] = pat[i..] matches words[j..]
+    let np = pat.len();
+    let nw = words.len();
+    let mut table = vec![vec![false; nw + 1]; np + 1];
+    table[np][nw] = true;
+    for i in (0..np).rev() {
+        for j in (0..=nw).rev() {
+            table[i][j] = match pat[i] {
+                "#" => table[i + 1][j] || (j < nw && table[i][j + 1]),
+                "*" => j < nw && table[i + 1][j + 1],
+                word => j < nw && word == words[j] && table[i + 1][j + 1],
+            };
+        }
+    }
+    table[0][0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+
+    #[test]
+    fn direct_exact_match_only() {
+        let mut ex = Exchange::new("rpc", ExchangeKind::Direct);
+        ex.bind("proc.1", "q1");
+        ex.bind("proc.2", "q2");
+        assert_eq!(ex.route("proc.1"), vec!["q1"]);
+        assert_eq!(ex.route("proc.2"), vec!["q2"]);
+        assert!(ex.route("proc.3").is_empty());
+        assert!(ex.route("proc").is_empty());
+    }
+
+    #[test]
+    fn fanout_ignores_key() {
+        let mut ex = Exchange::new("bc", ExchangeKind::Fanout);
+        ex.bind("", "q1");
+        ex.bind("anything", "q2");
+        let mut got = ex.route("whatever");
+        got.sort_unstable();
+        assert_eq!(got, vec!["q1", "q2"]);
+    }
+
+    #[test]
+    fn duplicate_bind_single_delivery() {
+        let mut ex = Exchange::new("bc", ExchangeKind::Fanout);
+        ex.bind("a", "q1");
+        ex.bind("a", "q1");
+        ex.bind("b", "q1");
+        assert_eq!(ex.route("x"), vec!["q1"]);
+        assert_eq!(ex.binding_count(), 2);
+    }
+
+    #[test]
+    fn unbind_removes_route() {
+        let mut ex = Exchange::new("rpc", ExchangeKind::Direct);
+        ex.bind("k", "q1");
+        assert!(ex.unbind("k", "q1"));
+        assert!(!ex.unbind("k", "q1"));
+        assert!(ex.route("k").is_empty());
+    }
+
+    #[test]
+    fn unbind_queue_removes_all() {
+        let mut ex = Exchange::new("t", ExchangeKind::Topic);
+        ex.bind("a.*", "q1");
+        ex.bind("b.#", "q1");
+        ex.bind("a.*", "q2");
+        ex.unbind_queue("q1");
+        assert_eq!(ex.binding_count(), 1);
+        assert_eq!(ex.route("a.x"), vec!["q2"]);
+    }
+
+    #[test]
+    fn topic_star_matches_exactly_one_word() {
+        assert!(topic_matches("state.*", "state.running"));
+        assert!(!topic_matches("state.*", "state"));
+        assert!(!topic_matches("state.*", "state.running.fast"));
+        assert!(topic_matches("*.created", "proc.created"));
+        assert!(!topic_matches("*.created", "a.b.created"));
+    }
+
+    #[test]
+    fn topic_hash_matches_zero_or_more() {
+        assert!(topic_matches("#", ""));
+        assert!(topic_matches("#", "a"));
+        assert!(topic_matches("#", "a.b.c"));
+        assert!(topic_matches("state.#", "state"));
+        assert!(topic_matches("state.#", "state.a.b"));
+        assert!(topic_matches("#.done", "done"));
+        assert!(topic_matches("#.done", "a.b.done"));
+        assert!(!topic_matches("#.done", "a.b.doner"));
+        assert!(topic_matches("a.#.z", "a.z"));
+        assert!(topic_matches("a.#.z", "a.b.c.z"));
+        assert!(!topic_matches("a.#.z", "a.b.c"));
+    }
+
+    #[test]
+    fn topic_literal_words() {
+        assert!(topic_matches("a.b.c", "a.b.c"));
+        assert!(!topic_matches("a.b.c", "a.b"));
+        assert!(!topic_matches("a.b.c", "a.b.c.d"));
+        assert!(!topic_matches("a.b.c", "a.x.c"));
+    }
+
+    #[test]
+    fn topic_exchange_routes_by_pattern() {
+        let mut ex = Exchange::new("events", ExchangeKind::Topic);
+        ex.bind("proc.*.terminated", "waiters");
+        ex.bind("proc.#", "audit");
+        let mut got = ex.route("proc.42.terminated");
+        got.sort_unstable();
+        assert_eq!(got, vec!["audit", "waiters"]);
+        assert_eq!(ex.route("proc.42.paused"), vec!["audit"]);
+        assert!(ex.route("other.42").is_empty());
+    }
+
+    #[test]
+    fn prop_hash_only_pattern_matches_everything() {
+        run_prop("topic # universal", |rng: &Rng| {
+            let nwords = rng.range(0, 6);
+            let key =
+                (0..nwords).map(|_| rng.string(4)).collect::<Vec<_>>().join(".");
+            assert!(topic_matches("#", &key), "key: {key}");
+        });
+    }
+
+    #[test]
+    fn prop_exact_pattern_matches_itself() {
+        run_prop("topic self-match", |rng: &Rng| {
+            let nwords = rng.range(1, 6);
+            let words: Vec<String> =
+                (0..nwords).map(|_| format!("w{}", rng.below(100))).collect();
+            let key = words.join(".");
+            assert!(topic_matches(&key, &key));
+            // Replacing any one word with '*' still matches.
+            let i = rng.range(0, nwords);
+            let mut pat = words.clone();
+            pat[i] = "*".into();
+            assert!(topic_matches(&pat.join("."), &key));
+        });
+    }
+}

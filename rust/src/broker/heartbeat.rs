@@ -1,0 +1,148 @@
+//! Heartbeat monitor: the broker-side half of the liveness protocol.
+//!
+//! Connections announce a heartbeat interval in `Hello`. Any traffic marks
+//! a connection live; the monitor scans at half the smallest interval and
+//! evicts connections that have been silent for **two full intervals** —
+//! the "two missed checks" rule the paper describes — which requeues all
+//! their unacknowledged messages for other consumers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::broker::core::BrokerHandle;
+
+/// Handle to a running monitor; dropping it (or calling `stop`) terminates
+/// the thread.
+pub struct HeartbeatMonitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HeartbeatMonitor {
+    /// Spawn a monitor scanning every `scan_interval`. The scan also runs
+    /// queue TTL sweeps and WAL compaction (cheap piggyback).
+    pub fn spawn(broker: BrokerHandle, scan_interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("kiwi-heartbeat-monitor".into())
+            .spawn(move || {
+                let mut last_sweep = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(scan_interval);
+                    let now = Instant::now();
+                    for conn in broker.stale_connections(now) {
+                        log::warn!("heartbeat: evicting stale connection {conn}");
+                        broker.metrics().counter("broker.heartbeat_evictions").inc();
+                        broker.disconnect(conn);
+                    }
+                    // TTL sweep + compaction at a gentler cadence.
+                    if now.duration_since(last_sweep) >= scan_interval.max(Duration::from_millis(250)) {
+                        broker.sweep();
+                        last_sweep = now;
+                    }
+                }
+            })
+            .expect("spawn heartbeat monitor");
+        HeartbeatMonitor { stop, handle: Some(handle) }
+    }
+
+    /// Stop the monitor and join its thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for HeartbeatMonitor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+    use crate::broker::MessageProps;
+    use crate::wire::Value;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn silent_connection_evicted_after_two_intervals() {
+        let broker = BrokerHandle::new();
+        let monitor = HeartbeatMonitor::spawn(broker.clone(), Duration::from_millis(5));
+
+        let (tx, rx) = channel();
+        let conn = broker.connect("silent", 20, tx);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "q".into(),
+                    options: QueueOptions::default(),
+                },
+            )
+            .unwrap();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "q".into(),
+                    body: StdArc::new(Value::str("work")),
+                    props: MessageProps::default(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Consume { queue: "q".into(), consumer_tag: "c".into(), prefetch: 0 },
+            )
+            .unwrap();
+        // Message delivered to the soon-to-die consumer.
+        assert!(matches!(rx.recv_timeout(Duration::from_secs(1)), Ok(ServerMsg::Deliver(_))));
+        assert_eq!(broker.queue_unacked("q"), Some(1));
+
+        // Go silent; within a few scan periods the connection is evicted
+        // and the message is back in the ready queue.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            if broker.queue_depth("q") == Some(1) && broker.queue_unacked("q") == Some(0) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "eviction did not happen in time");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(broker.metrics().counter("broker.heartbeat_evictions").get(), 1);
+        monitor.stop();
+    }
+
+    #[test]
+    fn live_connection_survives() {
+        let broker = BrokerHandle::new();
+        let monitor = HeartbeatMonitor::spawn(broker.clone(), Duration::from_millis(5));
+        let (tx, _rx) = channel();
+        let conn = broker.connect("alive", 30, tx);
+        // Keep touching for ~8 intervals.
+        for _ in 0..16 {
+            broker.touch(conn);
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        assert_eq!(broker.metrics().counter("broker.heartbeat_evictions").get(), 0);
+        // It is still usable.
+        assert!(broker.handle(conn, &ClientRequest::Status).is_ok());
+        monitor.stop();
+    }
+}

@@ -1,0 +1,125 @@
+//! Embedded broker: the single-machine deployment (paper: "scalable from
+//! individual laptops ..."). Clients get a [`Link`] whose other half is
+//! served by a thread inside this process; the protocol and semantics are
+//! byte-identical to the TCP path, so everything above the link cannot
+//! tell the difference.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::broker::core::BrokerHandle;
+use crate::broker::heartbeat::HeartbeatMonitor;
+use crate::broker::session::serve_link;
+use crate::transport::link::inproc_pair;
+use crate::transport::Link;
+
+/// An in-process broker. Cheap to clone; the broker core is shared.
+#[derive(Clone)]
+pub struct InprocBroker {
+    broker: BrokerHandle,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    _monitor: Arc<HeartbeatMonitor>,
+}
+
+impl Default for InprocBroker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InprocBroker {
+    /// Transient embedded broker with a 50 ms heartbeat scan.
+    pub fn new() -> Self {
+        Self::with_broker(BrokerHandle::new())
+    }
+
+    /// Embed an existing broker core (e.g. one recovered from a WAL).
+    pub fn with_broker(broker: BrokerHandle) -> Self {
+        let monitor = HeartbeatMonitor::spawn(broker.clone(), Duration::from_millis(50));
+        InprocBroker {
+            broker,
+            sessions: Arc::new(Mutex::new(Vec::new())),
+            _monitor: Arc::new(monitor),
+        }
+    }
+
+    /// Open a new client link to this broker.
+    pub fn connect(&self) -> Arc<dyn Link> {
+        let (client, server) = inproc_pair();
+        let server: Arc<dyn Link> = Arc::new(server);
+        let broker = self.broker.clone();
+        let handle = std::thread::Builder::new()
+            .name("kiwi-inproc-session".into())
+            .spawn(move || serve_link(broker, server))
+            .expect("spawn inproc session");
+        let mut sessions = self.sessions.lock().unwrap();
+        sessions.retain(|h| !h.is_finished());
+        sessions.push(handle);
+        Arc::new(client)
+    }
+
+    /// The shared broker core.
+    pub fn broker(&self) -> &BrokerHandle {
+        &self.broker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+    use crate::wire::{Frame, FrameType, Value};
+
+    #[test]
+    fn inproc_broker_serves_protocol() {
+        let broker = InprocBroker::new();
+        let link = broker.connect();
+        link.send(&Frame::data(
+            &ClientRequest::QueueDeclare { queue: "q".into(), options: QueueOptions::default() }
+                .to_value(1),
+        ))
+        .unwrap();
+        let f = link.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(f.frame_type, FrameType::Data);
+        assert!(matches!(
+            ServerMsg::from_value(&f.value().unwrap()).unwrap(),
+            ServerMsg::Ok { req_id: 1, .. }
+        ));
+        link.send(&Frame::goodbye("done")).unwrap();
+    }
+
+    #[test]
+    fn two_clients_share_state() {
+        let broker = InprocBroker::new();
+        let a = broker.connect();
+        let b = broker.connect();
+        a.send(&Frame::data(
+            &ClientRequest::QueueDeclare {
+                queue: "shared".into(),
+                options: QueueOptions::default(),
+            }
+            .to_value(1),
+        ))
+        .unwrap();
+        a.recv_timeout(Duration::from_secs(2)).unwrap();
+        // Client B publishes to the queue A declared.
+        b.send(&Frame::data(
+            &ClientRequest::Publish {
+                exchange: "".into(),
+                routing_key: "shared".into(),
+                body: Arc::new(Value::str("x")),
+                props: Default::default(),
+                mandatory: true,
+            }
+            .to_value(1),
+        ))
+        .unwrap();
+        let f = b.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(matches!(
+            ServerMsg::from_value(&f.value().unwrap()).unwrap(),
+            ServerMsg::Ok { .. }
+        ));
+        assert_eq!(broker.broker().queue_depth("shared"), Some(1));
+    }
+}

@@ -1,0 +1,38 @@
+//! The message broker — the RabbitMQ-equivalent substrate kiwiPy depends
+//! on, built from scratch (see DESIGN.md §2 Substitutions).
+//!
+//! Semantics implemented (the subset kiwiPy's three message types rely on,
+//! plus the standard AMQP features around them):
+//!
+//! * **Queues** with explicit acknowledgement, negative-ack, automatic
+//!   redelivery of unacknowledged messages when a consumer dies,
+//!   per-consumer prefetch (QoS), FIFO within a priority level, message
+//!   priorities, per-message and per-queue TTL, exclusive and auto-delete
+//!   queues.
+//! * **Exchanges**: direct, fanout and topic (`*` / `#` wildcards).
+//! * **At-most-one-consumer delivery**: a ready message is handed to a
+//!   single consumer and stays invisible until acked or returned.
+//! * **Heartbeats**: connections missing two consecutive heartbeats are
+//!   evicted and all their unacked messages requeued — the exact behaviour
+//!   the paper highlights.
+//! * **Durability**: durable queues persist messages to a write-ahead log
+//!   and survive broker restarts.
+//!
+//! The [`core::BrokerCore`] is transport-agnostic; [`server`] exposes it
+//! over TCP and [`inproc`] embeds it in-process (used by tests, benches and
+//! single-machine deployments — AiiDA's "individual laptop" scale).
+
+pub mod core;
+pub mod exchange;
+pub mod heartbeat;
+pub mod inproc;
+pub mod persistence;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod session;
+
+pub use self::core::{BrokerCore, BrokerHandle, ConnectionId};
+pub use inproc::InprocBroker;
+pub use protocol::{ClientRequest, Delivery, MessageProps, ServerMsg};
+pub use server::BrokerServer;

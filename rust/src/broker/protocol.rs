@@ -1,0 +1,539 @@
+//! Client ⇄ broker protocol messages and their [`Value`] encodings.
+//!
+//! Every request carries a client-chosen `req_id`; the broker answers with
+//! `Ok {req_id, ..}` or `Err {req_id, ..}`. Deliveries are unsolicited
+//! (push) messages tied to a consumer tag, exactly like AMQP's
+//! `basic.deliver`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::wire::Value;
+
+/// Message properties (the AMQP `basic.properties` subset kiwiPy uses).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MessageProps {
+    /// Correlates an RPC reply with its request.
+    pub correlation_id: Option<String>,
+    /// Queue the reply should be published to.
+    pub reply_to: Option<String>,
+    /// Per-message TTL in milliseconds.
+    pub expiration_ms: Option<u64>,
+    /// 0–9, higher is delivered first (within a queue).
+    pub priority: u8,
+    /// Persist to the WAL when the queue is durable.
+    pub persistent: bool,
+    /// Free-form application headers.
+    pub headers: BTreeMap<String, Value>,
+}
+
+impl MessageProps {
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        if let Some(c) = &self.correlation_id {
+            m.insert("correlation_id".into(), Value::str(c));
+        }
+        if let Some(r) = &self.reply_to {
+            m.insert("reply_to".into(), Value::str(r));
+        }
+        if let Some(e) = self.expiration_ms {
+            m.insert("expiration_ms".into(), Value::from(e));
+        }
+        if self.priority != 0 {
+            m.insert("priority".into(), Value::I64(self.priority as i64));
+        }
+        if self.persistent {
+            m.insert("persistent".into(), Value::Bool(true));
+        }
+        if !self.headers.is_empty() {
+            m.insert("headers".into(), Value::Map(self.headers.clone()));
+        }
+        Value::Map(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut p = MessageProps::default();
+        if let Some(c) = v.get_opt("correlation_id") {
+            p.correlation_id = Some(c.as_str()?.to_string());
+        }
+        if let Some(r) = v.get_opt("reply_to") {
+            p.reply_to = Some(r.as_str()?.to_string());
+        }
+        if let Some(e) = v.get_opt("expiration_ms") {
+            p.expiration_ms = Some(e.as_u64()?);
+        }
+        if let Some(pr) = v.get_opt("priority") {
+            p.priority = pr.as_u64()?.min(9) as u8;
+        }
+        if let Some(pe) = v.get_opt("persistent") {
+            p.persistent = pe.as_bool()?;
+        }
+        if let Some(h) = v.get_opt("headers") {
+            p.headers = h.as_map()?.clone();
+        }
+        Ok(p)
+    }
+}
+
+/// Exchange types (mirrors AMQP).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeKind {
+    /// Route on exact `routing_key` match.
+    Direct,
+    /// Route to every bound queue.
+    Fanout,
+    /// Route on dotted-pattern match with `*` (one word) / `#` (≥0 words).
+    Topic,
+}
+
+impl ExchangeKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExchangeKind::Direct => "direct",
+            ExchangeKind::Fanout => "fanout",
+            ExchangeKind::Topic => "topic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "direct" => Ok(ExchangeKind::Direct),
+            "fanout" => Ok(ExchangeKind::Fanout),
+            "topic" => Ok(ExchangeKind::Topic),
+            other => Err(Error::Wire(format!("unknown exchange kind '{other}'"))),
+        }
+    }
+}
+
+/// Options for queue declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueueOptions {
+    /// Survive broker restart (messages go through the WAL).
+    pub durable: bool,
+    /// Only the declaring connection may consume; deleted when it closes.
+    pub exclusive: bool,
+    /// Delete when the last consumer cancels.
+    pub auto_delete: bool,
+    /// Default TTL applied to messages without their own expiration.
+    pub default_ttl_ms: Option<u64>,
+    /// Maximum queue length; publishes beyond it drop the *oldest* ready
+    /// message (RabbitMQ default-on-overflow behaviour).
+    pub max_length: Option<usize>,
+}
+
+impl Default for QueueOptions {
+    fn default() -> Self {
+        QueueOptions {
+            durable: false,
+            exclusive: false,
+            auto_delete: false,
+            default_ttl_ms: None,
+            max_length: None,
+        }
+    }
+}
+
+impl QueueOptions {
+    pub fn durable() -> Self {
+        QueueOptions { durable: true, ..Default::default() }
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::map([
+            ("durable", Value::Bool(self.durable)),
+            ("exclusive", Value::Bool(self.exclusive)),
+            ("auto_delete", Value::Bool(self.auto_delete)),
+            ("default_ttl_ms", self.default_ttl_ms.into()),
+            ("max_length", self.max_length.map(|n| n as u64).into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(QueueOptions {
+            durable: v.get_opt("durable").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+            exclusive: v.get_opt("exclusive").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+            auto_delete: v
+                .get_opt("auto_delete")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+            default_ttl_ms: v.get_opt("default_ttl_ms").map(|x| x.as_u64()).transpose()?,
+            max_length: v
+                .get_opt("max_length")
+                .map(|x| x.as_u64().map(|n| n as usize))
+                .transpose()?,
+        })
+    }
+}
+
+/// Requests a client may send.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientRequest {
+    /// First frame on a connection; sets identity and heartbeat interval.
+    Hello { client_id: String, heartbeat_ms: u64 },
+    QueueDeclare { queue: String, options: QueueOptions },
+    QueueDelete { queue: String },
+    QueuePurge { queue: String },
+    ExchangeDeclare { exchange: String, kind: ExchangeKind },
+    Bind { exchange: String, queue: String, routing_key: String },
+    Unbind { exchange: String, queue: String, routing_key: String },
+    Publish {
+        /// Empty string = default exchange (routes directly to the queue
+        /// named by `routing_key`), as in AMQP.
+        exchange: String,
+        routing_key: String,
+        body: Arc<Value>,
+        props: MessageProps,
+        /// When true and the message routes to zero queues, the broker
+        /// answers with an `unroutable` error instead of dropping it.
+        mandatory: bool,
+    },
+    Consume { queue: String, consumer_tag: String, prefetch: u32 },
+    Cancel { consumer_tag: String },
+    Ack { delivery_tag: u64 },
+    Nack { delivery_tag: u64, requeue: bool },
+    /// Broker status snapshot (queue depths, counters).
+    Status,
+    Close,
+}
+
+/// An unsolicited message delivery (broker → consumer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delivery {
+    pub consumer_tag: String,
+    pub delivery_tag: u64,
+    pub redelivered: bool,
+    pub exchange: String,
+    pub routing_key: String,
+    pub body: Arc<Value>,
+    pub props: MessageProps,
+}
+
+/// Messages the broker sends to a client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerMsg {
+    Ok { req_id: u64, reply: Value },
+    Err { req_id: u64, code: String, message: String },
+    Deliver(Delivery),
+    /// Consumer cancelled server-side (queue deleted / exclusivity).
+    CancelConsumer { consumer_tag: String },
+}
+
+fn req(op: &str, req_id: u64, fields: Vec<(&str, Value)>) -> Value {
+    let mut m: BTreeMap<String, Value> =
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    m.insert("op".into(), Value::str(op));
+    m.insert("req_id".into(), Value::from(req_id));
+    Value::Map(m)
+}
+
+impl ClientRequest {
+    /// Encode with a request id.
+    pub fn to_value(&self, req_id: u64) -> Value {
+        match self {
+            ClientRequest::Hello { client_id, heartbeat_ms } => req(
+                "hello",
+                req_id,
+                vec![
+                    ("client_id", Value::str(client_id)),
+                    ("heartbeat_ms", Value::from(*heartbeat_ms)),
+                ],
+            ),
+            ClientRequest::QueueDeclare { queue, options } => req(
+                "queue_declare",
+                req_id,
+                vec![("queue", Value::str(queue)), ("options", options.to_value())],
+            ),
+            ClientRequest::QueueDelete { queue } => {
+                req("queue_delete", req_id, vec![("queue", Value::str(queue))])
+            }
+            ClientRequest::QueuePurge { queue } => {
+                req("queue_purge", req_id, vec![("queue", Value::str(queue))])
+            }
+            ClientRequest::ExchangeDeclare { exchange, kind } => req(
+                "exchange_declare",
+                req_id,
+                vec![("exchange", Value::str(exchange)), ("kind", Value::str(kind.as_str()))],
+            ),
+            ClientRequest::Bind { exchange, queue, routing_key } => req(
+                "bind",
+                req_id,
+                vec![
+                    ("exchange", Value::str(exchange)),
+                    ("queue", Value::str(queue)),
+                    ("routing_key", Value::str(routing_key)),
+                ],
+            ),
+            ClientRequest::Unbind { exchange, queue, routing_key } => req(
+                "unbind",
+                req_id,
+                vec![
+                    ("exchange", Value::str(exchange)),
+                    ("queue", Value::str(queue)),
+                    ("routing_key", Value::str(routing_key)),
+                ],
+            ),
+            ClientRequest::Publish { exchange, routing_key, body, props, mandatory } => req(
+                "publish",
+                req_id,
+                vec![
+                    ("exchange", Value::str(exchange)),
+                    ("routing_key", Value::str(routing_key)),
+                    ("body", (**body).clone()),
+                    ("props", props.to_value()),
+                    ("mandatory", Value::Bool(*mandatory)),
+                ],
+            ),
+            ClientRequest::Consume { queue, consumer_tag, prefetch } => req(
+                "consume",
+                req_id,
+                vec![
+                    ("queue", Value::str(queue)),
+                    ("consumer_tag", Value::str(consumer_tag)),
+                    ("prefetch", Value::from(*prefetch as u64)),
+                ],
+            ),
+            ClientRequest::Cancel { consumer_tag } => {
+                req("cancel", req_id, vec![("consumer_tag", Value::str(consumer_tag))])
+            }
+            ClientRequest::Ack { delivery_tag } => {
+                req("ack", req_id, vec![("delivery_tag", Value::from(*delivery_tag))])
+            }
+            ClientRequest::Nack { delivery_tag, requeue } => req(
+                "nack",
+                req_id,
+                vec![
+                    ("delivery_tag", Value::from(*delivery_tag)),
+                    ("requeue", Value::Bool(*requeue)),
+                ],
+            ),
+            ClientRequest::Status => req("status", req_id, vec![]),
+            ClientRequest::Close => req("close", req_id, vec![]),
+        }
+    }
+
+    /// Decode; returns `(request, req_id)`.
+    pub fn from_value(v: &Value) -> Result<(Self, u64)> {
+        let req_id = v.get_u64("req_id")?;
+        let op = v.get_str("op")?;
+        let r = match op {
+            "hello" => ClientRequest::Hello {
+                client_id: v.get_str("client_id")?.to_string(),
+                heartbeat_ms: v.get_u64("heartbeat_ms")?,
+            },
+            "queue_declare" => ClientRequest::QueueDeclare {
+                queue: v.get_str("queue")?.to_string(),
+                options: QueueOptions::from_value(v.get("options")?)?,
+            },
+            "queue_delete" => ClientRequest::QueueDelete { queue: v.get_str("queue")?.to_string() },
+            "queue_purge" => ClientRequest::QueuePurge { queue: v.get_str("queue")?.to_string() },
+            "exchange_declare" => ClientRequest::ExchangeDeclare {
+                exchange: v.get_str("exchange")?.to_string(),
+                kind: ExchangeKind::parse(v.get_str("kind")?)?,
+            },
+            "bind" => ClientRequest::Bind {
+                exchange: v.get_str("exchange")?.to_string(),
+                queue: v.get_str("queue")?.to_string(),
+                routing_key: v.get_str("routing_key")?.to_string(),
+            },
+            "unbind" => ClientRequest::Unbind {
+                exchange: v.get_str("exchange")?.to_string(),
+                queue: v.get_str("queue")?.to_string(),
+                routing_key: v.get_str("routing_key")?.to_string(),
+            },
+            "publish" => ClientRequest::Publish {
+                exchange: v.get_str("exchange")?.to_string(),
+                routing_key: v.get_str("routing_key")?.to_string(),
+                body: Arc::new(v.get("body")?.clone()),
+                props: MessageProps::from_value(v.get("props")?)?,
+                mandatory: v.get_bool("mandatory")?,
+            },
+            "consume" => ClientRequest::Consume {
+                queue: v.get_str("queue")?.to_string(),
+                consumer_tag: v.get_str("consumer_tag")?.to_string(),
+                prefetch: v.get_u64("prefetch")? as u32,
+            },
+            "cancel" => {
+                ClientRequest::Cancel { consumer_tag: v.get_str("consumer_tag")?.to_string() }
+            }
+            "ack" => ClientRequest::Ack { delivery_tag: v.get_u64("delivery_tag")? },
+            "nack" => ClientRequest::Nack {
+                delivery_tag: v.get_u64("delivery_tag")?,
+                requeue: v.get_bool("requeue")?,
+            },
+            "status" => ClientRequest::Status,
+            "close" => ClientRequest::Close,
+            other => return Err(Error::Wire(format!("unknown op '{other}'"))),
+        };
+        Ok((r, req_id))
+    }
+}
+
+impl Delivery {
+    pub fn to_value(&self) -> Value {
+        Value::map([
+            ("kind", Value::str("deliver")),
+            ("consumer_tag", Value::str(&self.consumer_tag)),
+            ("delivery_tag", Value::from(self.delivery_tag)),
+            ("redelivered", Value::Bool(self.redelivered)),
+            ("exchange", Value::str(&self.exchange)),
+            ("routing_key", Value::str(&self.routing_key)),
+            ("body", (*self.body).clone()),
+            ("props", self.props.to_value()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(Delivery {
+            consumer_tag: v.get_str("consumer_tag")?.to_string(),
+            delivery_tag: v.get_u64("delivery_tag")?,
+            redelivered: v.get_bool("redelivered")?,
+            exchange: v.get_str("exchange")?.to_string(),
+            routing_key: v.get_str("routing_key")?.to_string(),
+            body: Arc::new(v.get("body")?.clone()),
+            props: MessageProps::from_value(v.get("props")?)?,
+        })
+    }
+}
+
+impl ServerMsg {
+    pub fn to_value(&self) -> Value {
+        match self {
+            ServerMsg::Ok { req_id, reply } => Value::map([
+                ("kind", Value::str("ok")),
+                ("req_id", Value::from(*req_id)),
+                ("reply", reply.clone()),
+            ]),
+            ServerMsg::Err { req_id, code, message } => Value::map([
+                ("kind", Value::str("err")),
+                ("req_id", Value::from(*req_id)),
+                ("code", Value::str(code)),
+                ("message", Value::str(message)),
+            ]),
+            ServerMsg::Deliver(d) => d.to_value(),
+            ServerMsg::CancelConsumer { consumer_tag } => Value::map([
+                ("kind", Value::str("cancel_consumer")),
+                ("consumer_tag", Value::str(consumer_tag)),
+            ]),
+        }
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        match v.get_str("kind")? {
+            "ok" => Ok(ServerMsg::Ok {
+                req_id: v.get_u64("req_id")?,
+                reply: v.get("reply")?.clone(),
+            }),
+            "err" => Ok(ServerMsg::Err {
+                req_id: v.get_u64("req_id")?,
+                code: v.get_str("code")?.to_string(),
+                message: v.get_str("message")?.to_string(),
+            }),
+            "deliver" => Ok(ServerMsg::Deliver(Delivery::from_value(v)?)),
+            "cancel_consumer" => Ok(ServerMsg::CancelConsumer {
+                consumer_tag: v.get_str("consumer_tag")?.to_string(),
+            }),
+            other => Err(Error::Wire(format!("unknown server msg kind '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: ClientRequest) {
+        let v = r.to_value(42);
+        let (back, id) = ClientRequest::from_value(&v).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(ClientRequest::Hello { client_id: "w1".into(), heartbeat_ms: 500 });
+        roundtrip_req(ClientRequest::QueueDeclare {
+            queue: "tasks".into(),
+            options: QueueOptions {
+                durable: true,
+                exclusive: false,
+                auto_delete: true,
+                default_ttl_ms: Some(1000),
+                max_length: Some(100),
+            },
+        });
+        roundtrip_req(ClientRequest::ExchangeDeclare {
+            exchange: "bc".into(),
+            kind: ExchangeKind::Fanout,
+        });
+        roundtrip_req(ClientRequest::Bind {
+            exchange: "rpc".into(),
+            queue: "q".into(),
+            routing_key: "proc.123".into(),
+        });
+        roundtrip_req(ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "tasks".into(),
+            body: Arc::new(Value::map([("x", Value::I64(1))])),
+            props: MessageProps {
+                correlation_id: Some("c1".into()),
+                reply_to: Some("replies".into()),
+                expiration_ms: Some(5000),
+                priority: 7,
+                persistent: true,
+                headers: [("sender".to_string(), Value::str("me"))].into_iter().collect(),
+            },
+            mandatory: true,
+        });
+        roundtrip_req(ClientRequest::Consume {
+            queue: "tasks".into(),
+            consumer_tag: "ct-1".into(),
+            prefetch: 1,
+        });
+        roundtrip_req(ClientRequest::Ack { delivery_tag: 99 });
+        roundtrip_req(ClientRequest::Nack { delivery_tag: 100, requeue: true });
+        roundtrip_req(ClientRequest::Status);
+        roundtrip_req(ClientRequest::Close);
+    }
+
+    #[test]
+    fn server_msgs_roundtrip() {
+        for m in [
+            ServerMsg::Ok { req_id: 1, reply: Value::Null },
+            ServerMsg::Err { req_id: 2, code: "broker".into(), message: "no such queue".into() },
+            ServerMsg::Deliver(Delivery {
+                consumer_tag: "ct".into(),
+                delivery_tag: 7,
+                redelivered: true,
+                exchange: "".into(),
+                routing_key: "tasks".into(),
+                body: Arc::new(Value::str("payload")),
+                props: MessageProps::default(),
+            }),
+            ServerMsg::CancelConsumer { consumer_tag: "ct".into() },
+        ] {
+            let v = m.to_value();
+            assert_eq!(ServerMsg::from_value(&v).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn default_props_encode_empty() {
+        let v = MessageProps::default().to_value();
+        assert_eq!(v, Value::Map(Default::default()));
+        assert_eq!(MessageProps::from_value(&v).unwrap(), MessageProps::default());
+    }
+
+    #[test]
+    fn priority_clamped_to_nine() {
+        let v = Value::map([("priority", Value::I64(99))]);
+        assert_eq!(MessageProps::from_value(&v).unwrap().priority, 9);
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let v = Value::map([("op", Value::str("evil")), ("req_id", Value::I64(1))]);
+        assert!(ClientRequest::from_value(&v).is_err());
+    }
+}

@@ -1,0 +1,697 @@
+//! A single message queue: priority-laned ready list, unacked in-flight
+//! tracking, consumer round-robin with prefetch accounting, TTL expiry.
+//!
+//! This module is pure data structure — no locks, no I/O — which is what
+//! makes it property-testable. The [`super::core`] module wraps one
+//! `BrokerCore` lock around many `Queue`s.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::broker::protocol::{MessageProps, QueueOptions};
+use crate::wire::Value;
+
+/// Number of priority lanes (priorities 0–9).
+pub const PRIORITY_LANES: usize = 10;
+
+/// A message held by a queue.
+#[derive(Clone, Debug)]
+pub struct QueuedMessage {
+    /// Broker-wide unique id (also the WAL record id for durable queues).
+    pub msg_id: u64,
+    pub exchange: String,
+    pub routing_key: String,
+    pub body: Arc<Value>,
+    pub props: MessageProps,
+    /// Instant after which the message is expired (from per-message or
+    /// per-queue TTL).
+    pub deadline: Option<Instant>,
+    /// True once the message has been delivered at least once before.
+    pub redelivered: bool,
+}
+
+impl QueuedMessage {
+    fn lane(&self) -> usize {
+        (self.props.priority as usize).min(PRIORITY_LANES - 1)
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
+    }
+}
+
+/// A consumer attached to a queue.
+#[derive(Clone, Debug)]
+pub struct Consumer {
+    pub consumer_tag: String,
+    /// Owning connection (used to requeue on connection death).
+    pub connection: u64,
+    /// Max unacked deliveries outstanding; 0 = unlimited.
+    pub prefetch: u32,
+    /// Current unacked deliveries outstanding.
+    pub in_flight: u32,
+}
+
+impl Consumer {
+    fn has_capacity(&self) -> bool {
+        self.prefetch == 0 || self.in_flight < self.prefetch
+    }
+}
+
+/// A message handed to a consumer, not yet acknowledged.
+#[derive(Clone, Debug)]
+pub struct InFlight {
+    pub message: QueuedMessage,
+    pub consumer_tag: String,
+    pub connection: u64,
+}
+
+/// A delivery decision produced by the queue (the core turns these into
+/// wire messages).
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub consumer_tag: String,
+    pub connection: u64,
+    pub delivery_tag: u64,
+    pub message: QueuedMessage,
+}
+
+/// The queue itself.
+pub struct Queue {
+    pub name: String,
+    pub options: QueueOptions,
+    /// Declaring connection (for `exclusive`).
+    pub owner: Option<u64>,
+    /// Ready messages by priority lane; FIFO within a lane.
+    ready: [VecDeque<QueuedMessage>; PRIORITY_LANES],
+    ready_count: usize,
+    /// Delivered, awaiting ack, keyed by delivery tag.
+    unacked: HashMap<u64, InFlight>,
+    consumers: Vec<Consumer>,
+    /// Round-robin cursor over `consumers`.
+    rr_cursor: usize,
+    /// Statistics (monotonic).
+    pub published: u64,
+    pub delivered: u64,
+    pub acked: u64,
+    pub requeued: u64,
+    pub expired: u64,
+    pub dropped_overflow: u64,
+    /// Ids of expired messages encountered during assignment, buffered for
+    /// the core to retire from the WAL (see `drain_expired_ids`).
+    expired_ids: Vec<u64>,
+}
+
+impl Queue {
+    pub fn new(name: &str, options: QueueOptions, owner: Option<u64>) -> Self {
+        Queue {
+            name: name.to_string(),
+            options,
+            owner,
+            ready: Default::default(),
+            ready_count: 0,
+            unacked: HashMap::new(),
+            consumers: Vec::new(),
+            rr_cursor: 0,
+            published: 0,
+            delivered: 0,
+            acked: 0,
+            requeued: 0,
+            expired: 0,
+            dropped_overflow: 0,
+            expired_ids: Vec::new(),
+        }
+    }
+
+    pub fn ready_len(&self) -> usize {
+        self.ready_count
+    }
+
+    pub fn unacked_len(&self) -> usize {
+        self.unacked.len()
+    }
+
+    pub fn consumer_count(&self) -> usize {
+        self.consumers.len()
+    }
+
+    pub fn has_consumer(&self, tag: &str) -> bool {
+        self.consumers.iter().any(|c| c.consumer_tag == tag)
+    }
+
+    /// Enqueue a message. Applies the queue default TTL when the message
+    /// has none, and enforces `max_length` by dropping the oldest ready
+    /// message. Returns ids of messages dropped by overflow (for WAL acks).
+    pub fn publish(&mut self, mut msg: QueuedMessage, now: Instant) -> Vec<u64> {
+        if msg.deadline.is_none() {
+            let ttl = msg.props.expiration_ms.or(self.options.default_ttl_ms);
+            msg.deadline =
+                ttl.map(|ms| now + std::time::Duration::from_millis(ms));
+        }
+        let mut dropped = Vec::new();
+        if let Some(max) = self.options.max_length {
+            while self.ready_count >= max.max(1) {
+                if let Some(old) = self.pop_ready(now) {
+                    self.dropped_overflow += 1;
+                    dropped.push(old.msg_id);
+                } else {
+                    break;
+                }
+            }
+        }
+        let lane = msg.lane();
+        self.ready[lane].push_back(msg);
+        self.ready_count += 1;
+        self.published += 1;
+        dropped
+    }
+
+    /// Pop the highest-priority, oldest ready message, discarding expired
+    /// ones along the way (their ids are recorded in `expired`).
+    fn pop_ready(&mut self, now: Instant) -> Option<QueuedMessage> {
+        for lane in (0..PRIORITY_LANES).rev() {
+            while let Some(msg) = self.ready[lane].pop_front() {
+                self.ready_count -= 1;
+                if msg.expired(now) {
+                    self.expired += 1;
+                    self.expired_ids.push(msg.msg_id);
+                    continue;
+                }
+                return Some(msg);
+            }
+        }
+        None
+    }
+
+    /// Register a consumer. Fails (returns false) if the tag is taken.
+    pub fn add_consumer(&mut self, consumer: Consumer) -> bool {
+        if self.has_consumer(&consumer.consumer_tag) {
+            return false;
+        }
+        self.consumers.push(consumer);
+        true
+    }
+
+    /// Remove a consumer by tag. Returns true if it existed.
+    pub fn remove_consumer(&mut self, tag: &str) -> bool {
+        let before = self.consumers.len();
+        self.consumers.retain(|c| c.consumer_tag != tag);
+        if self.rr_cursor >= self.consumers.len() {
+            self.rr_cursor = 0;
+        }
+        self.consumers.len() != before
+    }
+
+    /// Drive delivery: assign ready messages to consumers with free
+    /// prefetch capacity, round-robin. `next_tag` allocates delivery tags.
+    ///
+    /// This is the queue's core invariant enforcement point: a message is
+    /// moved from `ready` to `unacked` *atomically* with the decision to
+    /// hand it to exactly one consumer — the "no race conditions between
+    /// multiple daemon processes" guarantee in the paper.
+    pub fn assign(&mut self, now: Instant, mut next_tag: impl FnMut() -> u64) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        if self.consumers.is_empty() {
+            return out;
+        }
+        'outer: while self.ready_count > 0 {
+            // Find the next consumer with capacity, starting at the cursor.
+            let n = self.consumers.len();
+            let mut found = None;
+            for i in 0..n {
+                let idx = (self.rr_cursor + i) % n;
+                if self.consumers[idx].has_capacity() {
+                    found = Some(idx);
+                    break;
+                }
+            }
+            let Some(idx) = found else { break 'outer };
+            let Some(msg) = self.pop_ready(now) else { break 'outer };
+            let tag = next_tag();
+            let consumer = &mut self.consumers[idx];
+            consumer.in_flight += 1;
+            self.rr_cursor = (idx + 1) % n;
+            self.delivered += 1;
+            self.unacked.insert(
+                tag,
+                InFlight {
+                    message: msg.clone(),
+                    consumer_tag: consumer.consumer_tag.clone(),
+                    connection: consumer.connection,
+                },
+            );
+            out.push(Assignment {
+                consumer_tag: consumer.consumer_tag.clone(),
+                connection: consumer.connection,
+                delivery_tag: tag,
+                message: msg,
+            });
+        }
+        out
+    }
+
+    /// Acknowledge a delivery. Returns the message id for WAL retirement,
+    /// or None if the tag is unknown (double-ack is idempotent).
+    pub fn ack(&mut self, delivery_tag: u64) -> Option<u64> {
+        let inflight = self.unacked.remove(&delivery_tag)?;
+        if let Some(c) =
+            self.consumers.iter_mut().find(|c| c.consumer_tag == inflight.consumer_tag)
+        {
+            c.in_flight = c.in_flight.saturating_sub(1);
+        }
+        self.acked += 1;
+        Some(inflight.message.msg_id)
+    }
+
+    /// Negative-acknowledge. When `requeue`, the message returns to the
+    /// front of its priority lane marked redelivered; otherwise it is
+    /// dropped (dead-lettered out of existence). Returns the message id
+    /// when the message was dropped (for WAL retirement).
+    pub fn nack(&mut self, delivery_tag: u64, requeue: bool) -> Option<u64> {
+        let inflight = self.unacked.remove(&delivery_tag)?;
+        if let Some(c) =
+            self.consumers.iter_mut().find(|c| c.consumer_tag == inflight.consumer_tag)
+        {
+            c.in_flight = c.in_flight.saturating_sub(1);
+        }
+        if requeue {
+            let mut msg = inflight.message;
+            msg.redelivered = true;
+            let lane = msg.lane();
+            self.ready[lane].push_front(msg);
+            self.ready_count += 1;
+            self.requeued += 1;
+            None
+        } else {
+            Some(inflight.message.msg_id)
+        }
+    }
+
+    /// Requeue every unacked message belonging to `connection` and remove
+    /// its consumers — what the broker does when a client dies (abrupt
+    /// shutdown, two missed heartbeats). Returns how many were requeued.
+    pub fn drop_connection(&mut self, connection: u64) -> usize {
+        let tags: Vec<u64> = self
+            .unacked
+            .iter()
+            .filter(|(_, f)| f.connection == connection)
+            .map(|(t, _)| *t)
+            .collect();
+        let n = tags.len();
+        for tag in tags {
+            let inflight = self.unacked.remove(&tag).unwrap();
+            let mut msg = inflight.message;
+            msg.redelivered = true;
+            let lane = msg.lane();
+            self.ready[lane].push_front(msg);
+            self.ready_count += 1;
+            self.requeued += 1;
+        }
+        self.consumers.retain(|c| c.connection != connection);
+        if self.rr_cursor >= self.consumers.len() {
+            self.rr_cursor = 0;
+        }
+        n
+    }
+
+    /// Drop all ready messages; returns their ids (for WAL retirement).
+    pub fn purge(&mut self) -> Vec<u64> {
+        let mut ids = Vec::with_capacity(self.ready_count);
+        for lane in &mut self.ready {
+            for m in lane.drain(..) {
+                ids.push(m.msg_id);
+            }
+        }
+        self.ready_count = 0;
+        ids
+    }
+
+    /// Take the ids of messages that expired during assignment since the
+    /// last call (the core retires them from the WAL).
+    pub fn drain_expired_ids(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.expired_ids)
+    }
+
+    /// Remove expired ready messages (periodic sweep). Returns their ids.
+    pub fn sweep_expired(&mut self, now: Instant) -> Vec<u64> {
+        let mut ids = Vec::new();
+        for lane in &mut self.ready {
+            lane.retain(|m| {
+                if m.expired(now) {
+                    ids.push(m.msg_id);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.ready_count -= ids.len();
+        self.expired += ids.len() as u64;
+        ids
+    }
+
+    /// All messages (ready + unacked) — used for durable-queue snapshots.
+    pub fn all_messages(&self) -> Vec<&QueuedMessage> {
+        let mut v: Vec<&QueuedMessage> = Vec::with_capacity(self.ready_count + self.unacked.len());
+        for lane in (0..PRIORITY_LANES).rev() {
+            v.extend(self.ready[lane].iter());
+        }
+        v.extend(self.unacked.values().map(|f| &f.message));
+        v
+    }
+
+    /// Queue statistics as a wire value (answering `Status` requests).
+    pub fn stats(&self) -> Value {
+        Value::map([
+            ("ready", Value::from(self.ready_len())),
+            ("unacked", Value::from(self.unacked_len())),
+            ("consumers", Value::from(self.consumer_count())),
+            ("published", Value::from(self.published)),
+            ("delivered", Value::from(self.delivered)),
+            ("acked", Value::from(self.acked)),
+            ("requeued", Value::from(self.requeued)),
+            ("expired", Value::from(self.expired)),
+            ("dropped_overflow", Value::from(self.dropped_overflow)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+    use std::time::Duration;
+
+    fn msg(id: u64, priority: u8) -> QueuedMessage {
+        QueuedMessage {
+            msg_id: id,
+            exchange: String::new(),
+            routing_key: "q".into(),
+            body: Arc::new(Value::I64(id as i64)),
+            props: MessageProps { priority, ..Default::default() },
+            deadline: None,
+            redelivered: false,
+        }
+    }
+
+    fn consumer(tag: &str, conn: u64, prefetch: u32) -> Consumer {
+        Consumer { consumer_tag: tag.into(), connection: conn, prefetch, in_flight: 0 }
+    }
+
+    fn tagger() -> impl FnMut() -> u64 {
+        let mut t = 0;
+        move || {
+            t += 1;
+            t
+        }
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..5 {
+            q.publish(msg(i, 0), now);
+        }
+        q.add_consumer(consumer("c1", 1, 0));
+        let a = q.assign(now, tagger());
+        let ids: Vec<u64> = a.iter().map(|x| x.message.msg_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn higher_priority_first() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        q.publish(msg(1, 0), now);
+        q.publish(msg(2, 9), now);
+        q.publish(msg(3, 5), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let ids: Vec<u64> = q.assign(now, tagger()).iter().map(|x| x.message.msg_id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn at_most_one_consumer_per_message() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..100 {
+            q.publish(msg(i, 0), now);
+        }
+        q.add_consumer(consumer("c1", 1, 0));
+        q.add_consumer(consumer("c2", 2, 0));
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 100);
+        // Every message delivered exactly once.
+        let mut ids: Vec<u64> = a.iter().map(|x| x.message.msg_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..100).collect::<Vec<_>>());
+        // Round-robin split.
+        let c1 = a.iter().filter(|x| x.consumer_tag == "c1").count();
+        assert_eq!(c1, 50);
+    }
+
+    #[test]
+    fn prefetch_limits_in_flight() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..10 {
+            q.publish(msg(i, 0), now);
+        }
+        q.add_consumer(consumer("c1", 1, 1));
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a.len(), 1, "prefetch=1 allows a single in-flight message");
+        assert_eq!(q.ready_len(), 9);
+        assert_eq!(q.unacked_len(), 1);
+        // Ack frees the slot; next assign delivers exactly one more.
+        assert!(q.ack(a[0].delivery_tag).is_some());
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].message.msg_id, 1);
+    }
+
+    #[test]
+    fn ack_is_idempotent() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        q.publish(msg(0, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let a = q.assign(now, tagger());
+        assert!(q.ack(a[0].delivery_tag).is_some());
+        assert!(q.ack(a[0].delivery_tag).is_none());
+        assert_eq!(q.acked, 1);
+    }
+
+    #[test]
+    fn nack_requeue_preserves_message_marks_redelivered() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        q.publish(msg(0, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert!(!a[0].message.redelivered);
+        q.nack(a[0].delivery_tag, true);
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b.len(), 1);
+        assert!(b[0].message.redelivered);
+    }
+
+    #[test]
+    fn nack_drop_discards() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        q.publish(msg(0, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let a = q.assign(now, tagger());
+        assert_eq!(q.nack(a[0].delivery_tag, false), Some(0));
+        assert_eq!(q.ready_len(), 0);
+        assert_eq!(q.unacked_len(), 0);
+    }
+
+    #[test]
+    fn connection_death_requeues_all_unacked() {
+        // The headline robustness property: abrupt consumer death loses
+        // nothing.
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..10 {
+            q.publish(msg(i, 0), now);
+        }
+        q.add_consumer(consumer("dead", 7, 0));
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 10);
+        assert_eq!(q.drop_connection(7), 10);
+        assert_eq!(q.ready_len(), 10);
+        assert_eq!(q.unacked_len(), 0);
+        assert_eq!(q.consumer_count(), 0);
+        // A new consumer picks everything up, marked redelivered.
+        q.add_consumer(consumer("alive", 8, 0));
+        let b = q.assign(now, tagger());
+        assert_eq!(b.len(), 10);
+        assert!(b.iter().all(|x| x.message.redelivered));
+    }
+
+    #[test]
+    fn expired_messages_not_delivered() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        let mut m = msg(0, 0);
+        m.props.expiration_ms = Some(10);
+        q.publish(m, now);
+        q.publish(msg(1, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let later = now + Duration::from_millis(50);
+        let a = q.assign(later, tagger());
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].message.msg_id, 1);
+        assert_eq!(q.expired, 1);
+    }
+
+    #[test]
+    fn queue_default_ttl_applied() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions { default_ttl_ms: Some(5), ..Default::default() },
+            None,
+        );
+        let now = Instant::now();
+        q.publish(msg(0, 0), now);
+        let swept = q.sweep_expired(now + Duration::from_millis(20));
+        assert_eq!(swept, vec![0]);
+        assert_eq!(q.ready_len(), 0);
+    }
+
+    #[test]
+    fn max_length_drops_oldest() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions { max_length: Some(3), ..Default::default() },
+            None,
+        );
+        let now = Instant::now();
+        for i in 0..5 {
+            q.publish(msg(i, 0), now);
+        }
+        assert_eq!(q.ready_len(), 3);
+        assert_eq!(q.dropped_overflow, 2);
+        q.add_consumer(consumer("c1", 1, 0));
+        let ids: Vec<u64> = q.assign(now, tagger()).iter().map(|x| x.message.msg_id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn duplicate_consumer_tag_rejected() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        assert!(q.add_consumer(consumer("c1", 1, 0)));
+        assert!(!q.add_consumer(consumer("c1", 2, 0)));
+    }
+
+    #[test]
+    fn purge_returns_ids() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..4 {
+            q.publish(msg(i, (i % 2) as u8), now);
+        }
+        let mut ids = q.purge();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(q.ready_len(), 0);
+    }
+
+    #[test]
+    fn prop_conservation_of_messages() {
+        // Invariant: published = ready + unacked + acked + dropped +
+        // expired + requeue-deliveries accounted via redelivery. We model a
+        // random interleaving of operations and check conservation.
+        run_prop("queue conservation", |rng: &Rng| {
+            let mut q = Queue::new("q", QueueOptions::default(), None);
+            let now = Instant::now();
+            let mut next_id = 0u64;
+            let mut next_tag = 0u64;
+            let mut outstanding: Vec<u64> = Vec::new(); // delivery tags
+            let mut acked = 0u64;
+            let mut dropped = 0u64;
+            for c in 0..rng.range(1, 4) {
+                q.add_consumer(consumer(&format!("c{c}"), c as u64, rng.range(0, 3) as u32));
+            }
+            for _ in 0..rng.range(1, 200) {
+                match rng.below(4) {
+                    0 => {
+                        q.publish(msg(next_id, rng.below(10) as u8), now);
+                        next_id += 1;
+                    }
+                    1 => {
+                        let assigned = q.assign(now, || {
+                            next_tag += 1;
+                            next_tag
+                        });
+                        outstanding.extend(assigned.iter().map(|a| a.delivery_tag));
+                    }
+                    2 => {
+                        if !outstanding.is_empty() {
+                            let i = rng.range(0, outstanding.len());
+                            let tag = outstanding.swap_remove(i);
+                            assert!(q.ack(tag).is_some());
+                            acked += 1;
+                        }
+                    }
+                    _ => {
+                        if !outstanding.is_empty() {
+                            let i = rng.range(0, outstanding.len());
+                            let tag = outstanding.swap_remove(i);
+                            let requeue = rng.chance(0.5);
+                            let r = q.nack(tag, requeue);
+                            if !requeue {
+                                assert!(r.is_some());
+                                dropped += 1;
+                            }
+                        }
+                    }
+                }
+                // Conservation: every published message is in exactly one
+                // place.
+                assert_eq!(
+                    next_id,
+                    (q.ready_len() + q.unacked_len()) as u64 + acked + dropped,
+                    "conservation violated"
+                );
+                assert_eq!(q.unacked_len(), outstanding.len());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_prefetch_never_exceeded() {
+        run_prop("prefetch bound", |rng: &Rng| {
+            let mut q = Queue::new("q", QueueOptions::default(), None);
+            let now = Instant::now();
+            let prefetch = rng.range(1, 5) as u32;
+            q.add_consumer(consumer("c", 1, prefetch));
+            let mut next_tag = 0u64;
+            let mut outstanding = Vec::new();
+            for i in 0..rng.range(1, 100) {
+                q.publish(msg(i as u64, 0), now);
+                if rng.chance(0.7) {
+                    let a = q.assign(now, || {
+                        next_tag += 1;
+                        next_tag
+                    });
+                    outstanding.extend(a.into_iter().map(|x| x.delivery_tag));
+                }
+                if rng.chance(0.3) && !outstanding.is_empty() {
+                    let tag = outstanding.remove(0);
+                    q.ack(tag);
+                }
+                assert!(
+                    q.unacked_len() <= prefetch as usize,
+                    "unacked {} exceeds prefetch {prefetch}",
+                    q.unacked_len()
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! TCP front-end: accepts connections and runs a [`session`] per client.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::broker::core::BrokerHandle;
+use crate::broker::heartbeat::HeartbeatMonitor;
+use crate::broker::session::serve_link;
+use crate::error::Result;
+use crate::transport::link::TcpLink;
+use crate::transport::Link;
+
+/// A running broker server: TCP acceptor + heartbeat monitor.
+pub struct BrokerServer {
+    broker: BrokerHandle,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    /// Live session links, so shutdown can sever clients that have not
+    /// disconnected themselves (sessions exit on a closed link).
+    links: Arc<std::sync::Mutex<Vec<std::sync::Weak<dyn Link>>>>,
+    _monitor: HeartbeatMonitor,
+}
+
+impl BrokerServer {
+    /// Bind and start serving. Use port 0 for an ephemeral port (tests).
+    pub fn start(broker: BrokerHandle, bind: &str) -> Result<Self> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let broker2 = broker.clone();
+        let links: Arc<std::sync::Mutex<Vec<std::sync::Weak<dyn Link>>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let links2 = Arc::clone(&links);
+        let acceptor = std::thread::Builder::new()
+            .name("kiwi-broker-acceptor".into())
+            .spawn(move || {
+                let mut sessions: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log::info!("broker: accepted {peer}");
+                            stream.set_nonblocking(false).ok();
+                            match TcpLink::new(stream) {
+                                Ok(link) => {
+                                    let b = broker2.clone();
+                                    let link: Arc<dyn Link> = Arc::new(link);
+                                    {
+                                        let mut links = links2.lock().unwrap();
+                                        links.retain(|w| w.upgrade().is_some());
+                                        links.push(Arc::downgrade(&link));
+                                    }
+                                    sessions.retain(|h| !h.is_finished());
+                                    sessions.push(
+                                        std::thread::Builder::new()
+                                            .name(format!("kiwi-session-{peer}"))
+                                            .spawn(move || serve_link(b, link))
+                                            .expect("spawn session"),
+                                    );
+                                }
+                                Err(e) => log::warn!("broker: link setup failed: {e}"),
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) => {
+                            log::error!("broker: accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+                // Sever any client that has not hung up; sessions then see
+                // a closed link and exit, making this join prompt.
+                for weak in links2.lock().unwrap().drain(..) {
+                    if let Some(link) = weak.upgrade() {
+                        link.close();
+                    }
+                }
+                for h in sessions {
+                    h.join().ok();
+                }
+            })
+            .expect("spawn acceptor");
+        let monitor = HeartbeatMonitor::spawn(broker.clone(), Duration::from_millis(100));
+        Ok(BrokerServer { broker, addr, stop, acceptor: Some(acceptor), links, _monitor: monitor })
+    }
+
+    /// Address the server is listening on (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The underlying broker (for embedding / inspection).
+    pub fn broker(&self) -> &BrokerHandle {
+        &self.broker
+    }
+
+    /// Graceful shutdown: sync the WAL, stop accepting, drop sessions.
+    pub fn shutdown(mut self) {
+        self.stop_internal();
+    }
+
+    fn stop_internal(&mut self) {
+        self.broker.sync().ok();
+        self.stop.store(true, Ordering::Relaxed);
+        // Sever clients immediately (the acceptor also does this on its
+        // way out; doing it here makes shutdown prompt even while the
+        // acceptor sleeps between polls).
+        for weak in self.links.lock().unwrap().drain(..) {
+            if let Some(link) = weak.upgrade() {
+                link.close();
+            }
+        }
+        if let Some(h) = self.acceptor.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for BrokerServer {
+    fn drop(&mut self) {
+        if self.acceptor.is_some() {
+            self.stop_internal();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+    use crate::transport::connect_tcp;
+    use crate::wire::{Frame, FrameType, Value};
+
+    #[test]
+    fn server_accepts_and_serves_tcp_clients() {
+        let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let link = connect_tcp(addr).unwrap();
+        link.send(&Frame::data(
+            &ClientRequest::QueueDeclare { queue: "q".into(), options: QueueOptions::default() }
+                .to_value(1),
+        ))
+        .unwrap();
+        let f = loop {
+            let f = link.recv_timeout(Duration::from_secs(2)).unwrap();
+            if f.frame_type == FrameType::Data {
+                break f;
+            }
+        };
+        match ServerMsg::from_value(&f.value().unwrap()).unwrap() {
+            ServerMsg::Ok { req_id: 1, reply } => {
+                assert_eq!(reply.get_str("queue").unwrap(), "q");
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        link.send(&Frame::goodbye("test done")).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn abrupt_tcp_disconnect_requeues() {
+        let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+        let broker = server.broker().clone();
+        let addr = server.addr();
+        {
+            let link = connect_tcp(addr).unwrap();
+            let send = |req: &ClientRequest, id: u64| {
+                link.send(&Frame::data(&req.to_value(id))).unwrap()
+            };
+            send(
+                &ClientRequest::QueueDeclare {
+                    queue: "tasks".into(),
+                    options: QueueOptions::default(),
+                },
+                1,
+            );
+            send(
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "tasks".into(),
+                    body: Arc::new(Value::str("work")),
+                    props: Default::default(),
+                    mandatory: true,
+                },
+                2,
+            );
+            send(
+                &ClientRequest::Consume {
+                    queue: "tasks".into(),
+                    consumer_tag: "doomed".into(),
+                    prefetch: 0,
+                },
+                3,
+            );
+            // Wait for the delivery to be in flight.
+            let deadline = std::time::Instant::now() + Duration::from_secs(2);
+            while broker.queue_unacked("tasks") != Some(1) {
+                assert!(std::time::Instant::now() < deadline);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // Drop the socket without acking — simulated crash.
+            link.close();
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while broker.queue_depth("tasks") != Some(1) {
+            assert!(std::time::Instant::now() < deadline, "message was not requeued");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal argument parser: `cmd subcommand --key value --flag positional`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option names that take a value (everything else starting `--` is a flag).
+const VALUED: &[&str] = &[
+    "config", "addr", "workers", "heartbeat-ms", "queue", "process", "inputs", "pid", "reason",
+    "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms",
+];
+
+impl Args {
+    /// Parse, skipping `argv[0]`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().skip(1).peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if VALUED.contains(&name) {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?;
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        self.opt(name)
+            .map(|v| {
+                v.parse::<T>()
+                    .map_err(|_| Error::Config(format!("--{name}: cannot parse '{v}'")))
+            })
+            .transpose()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("kiwi worker --workers 8 --addr 1.2.3.4:5 --verbose extra");
+        assert_eq!(a.subcommand.as_deref(), Some("worker"));
+        assert_eq!(a.opt("workers"), Some("8"));
+        assert_eq!(a.opt("addr"), Some("1.2.3.4:5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("kiwi submit --process=eos --n-volumes=8");
+        assert_eq!(a.opt("process"), Some("eos"));
+        assert_eq!(a.opt("n-volumes"), Some("8"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["kiwi".into(), "--addr".into()]).is_err());
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = parse("kiwi worker --workers 8");
+        assert_eq!(a.opt_parse::<usize>("workers").unwrap(), Some(8));
+        assert_eq!(a.opt_parse::<usize>("missing").unwrap(), None);
+        let b = parse("kiwi worker --workers eight");
+        assert!(b.opt_parse::<usize>("workers").is_err());
+    }
+}

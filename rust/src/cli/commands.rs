@@ -1,0 +1,268 @@
+//! Subcommand implementations. Each maps onto a deployment role:
+//!
+//! * `kiwi broker`  — run the message broker (durable via WAL).
+//! * `kiwi worker`  — run a daemon consuming the task queue.
+//! * `kiwi submit`  — launch a process (e.g. the EOS workchain) and wait.
+//! * `kiwi ctl`     — pause/play/kill/status a live process over RPC.
+//! * `kiwi status`  — broker status snapshot.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::broker::core::BrokerHandle;
+use crate::broker::persistence::{RecoveredState, WalPersister};
+use crate::broker::protocol::ClientRequest;
+use crate::broker::BrokerServer;
+use crate::cli::args::Args;
+use crate::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use crate::config::Config;
+use crate::daemon::{Daemon, DaemonConfig};
+use crate::error::{Error, Result};
+use crate::payload::register_payload_processes;
+use crate::runtime::Engine;
+use crate::transport::{connect_tcp, Connection, ConnectionConfig};
+use crate::wire::{json, Value};
+use crate::workflow::checkpoint::FileCheckpointStore;
+use crate::workflow::registry::ProcessRegistry;
+use crate::workflow::{ProcessController, RemoteLauncher};
+
+const USAGE: &str = "\
+kiwi — robust, high-volume messaging for computational science workflows
+
+USAGE: kiwi <subcommand> [options]
+
+SUBCOMMANDS
+  broker    run the message broker            [--addr HOST:PORT] [--wal PATH | --transient]
+  worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
+  submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
+  ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
+  status    broker status snapshot            [--addr HOST:PORT]
+
+COMMON OPTIONS
+  --config PATH       kiwi.json (default: ./kiwi.json if present)
+  --heartbeat-ms N    heartbeat interval (0 = off)
+  --artifacts DIR     AOT artifacts (default: artifacts)
+  --checkpoints DIR   checkpoint store (default: .kiwi/checkpoints)
+";
+
+/// Entrypoint for `main`; returns the process exit code.
+pub fn run(args: Args) -> i32 {
+    match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut config = Config::load(args.opt("config").map(std::path::Path::new))?;
+    if let Some(addr) = args.opt("addr") {
+        config.broker_addr = addr.to_string();
+    }
+    if let Some(n) = args.opt_parse::<usize>("workers")? {
+        config.workers = n;
+    }
+    if let Some(hb) = args.opt_parse::<u64>("heartbeat-ms")? {
+        config.heartbeat_ms = hb;
+    }
+    if let Some(dir) = args.opt("artifacts") {
+        config.artifacts_dir = dir.into();
+    }
+    if let Some(dir) = args.opt("checkpoints") {
+        config.checkpoint_dir = dir.into();
+    }
+    if let Some(wal) = args.opt("wal") {
+        config.wal_path = Some(wal.into());
+    }
+    if args.flag("transient") {
+        config.wal_path = None;
+    }
+    Ok(config)
+}
+
+fn connect_communicator(config: &Config) -> Result<Arc<dyn Communicator>> {
+    let link = connect_tcp(&config.broker_addr as &str)?;
+    let comm = RmqCommunicator::connect(
+        Arc::new(link),
+        RmqConfig {
+            heartbeat_ms: config.heartbeat_ms,
+            request_timeout: config.request_timeout,
+            ..Default::default()
+        },
+    )?;
+    Ok(Arc::new(comm))
+}
+
+fn build_registry(config: &Config) -> Result<ProcessRegistry> {
+    let registry = ProcessRegistry::new();
+    let engine = Arc::new(Engine::load(&config.artifacts_dir)?);
+    register_payload_processes(&registry, engine);
+    Ok(registry)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("broker") => cmd_broker(args),
+        Some("worker") => cmd_worker(args),
+        Some("submit") => cmd_submit(args),
+        Some("ctl") => cmd_ctl(args),
+        Some("status") => cmd_status(args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown subcommand '{other}'\n{USAGE}"))),
+    }
+}
+
+fn cmd_broker(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
+    let broker = match &config.wal_path {
+        Some(path) => {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let (wal, recovered) = WalPersister::open(path, config.sync_policy)?;
+            let n = recovered.message_count();
+            if n > 0 {
+                println!("recovered {n} durable message(s) from {path:?}");
+            }
+            BrokerHandle::with_persister(Box::new(wal), recovered)
+        }
+        None => BrokerHandle::with_persister(
+            Box::new(crate::broker::persistence::NoopPersister),
+            RecoveredState::default(),
+        ),
+    };
+    let server = BrokerServer::start(broker, &config.broker_addr)?;
+    println!("kiwi broker listening on {}", server.addr());
+    // Run until killed; the heartbeat monitor and sessions do the work.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
+    let comm = connect_communicator(&config)?;
+    let registry = build_registry(&config)?;
+    let store = Arc::new(FileCheckpointStore::open(&config.checkpoint_dir)?);
+    let _daemon = Daemon::start(
+        Arc::clone(&comm),
+        store,
+        registry,
+        DaemonConfig { workers: config.workers, task_queue: config.task_queue.clone() },
+    )?;
+    println!(
+        "kiwi worker: {} threads on queue '{}' via {}",
+        config.workers, config.task_queue, config.broker_addr
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
+    let process = args
+        .opt("process")
+        .ok_or_else(|| Error::Config("submit needs --process TYPE".into()))?;
+    let inputs = match args.opt("inputs") {
+        Some(text) => json::from_str(text)?,
+        None => Value::Null,
+    };
+    let timeout =
+        Duration::from_millis(args.opt_parse::<u64>("timeout-ms")?.unwrap_or(3_600_000));
+    let comm = connect_communicator(&config)?;
+    let launcher = RemoteLauncher::with_queue(Arc::clone(&comm), &config.task_queue);
+    let (pid, fut) = launcher.launch(process, inputs)?;
+    println!("launched {process} as {pid}");
+    let record = fut.wait(timeout)?;
+    println!("{}", json::to_string_pretty(&record));
+    Ok(())
+}
+
+fn cmd_ctl(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
+    let intent = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("ctl needs pause|play|kill|status".into()))?
+        .clone();
+    let pid =
+        args.opt("pid").ok_or_else(|| Error::Config("ctl needs --pid PID".into()))?;
+    let comm = connect_communicator(&config)?;
+    let ctl = ProcessController::new(comm).with_timeout(config.request_timeout);
+    match intent.as_str() {
+        "pause" => println!("paused: {}", ctl.pause(pid)?),
+        "play" => println!("resumed: {}", ctl.play(pid)?),
+        "kill" => {
+            println!("killed: {}", ctl.kill(pid, args.opt("reason").unwrap_or("kiwi ctl"))?)
+        }
+        "status" => println!("{}", json::to_string_pretty(&ctl.status(pid)?)),
+        other => return Err(Error::Config(format!("unknown intent '{other}'"))),
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
+    let link = connect_tcp(&config.broker_addr as &str)?;
+    let conn = Connection::open(
+        Arc::new(link),
+        ConnectionConfig { heartbeat_ms: 0, ..Default::default() },
+    )?;
+    let status = conn.request(&ClientRequest::Status)?;
+    println!("{}", json::to_string_pretty(&status));
+    conn.close();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(parse("kiwi help")), 0);
+        assert_eq!(run(parse("kiwi")), 0);
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert_eq!(run(parse("kiwi frobnicate")), 1);
+    }
+
+    #[test]
+    fn submit_requires_process() {
+        // Fails on the missing option before trying to connect.
+        let err = dispatch(&parse("kiwi submit")).unwrap_err();
+        assert!(err.to_string().contains("--process"));
+    }
+
+    #[test]
+    fn ctl_requires_intent_and_pid() {
+        let err = dispatch(&parse("kiwi ctl")).unwrap_err();
+        assert!(err.to_string().contains("pause|play|kill|status"));
+        let err = dispatch(&parse("kiwi ctl pause")).unwrap_err();
+        assert!(err.to_string().contains("--pid"));
+    }
+
+    #[test]
+    fn config_overrides_from_args() {
+        let config = load_config(&parse(
+            "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient",
+        ))
+        .unwrap();
+        assert_eq!(config.broker_addr, "9.9.9.9:9");
+        assert_eq!(config.workers, 3);
+        assert_eq!(config.heartbeat_ms, 250);
+        assert!(config.wal_path.is_none());
+    }
+}

@@ -1,0 +1,8 @@
+//! Command-line interface: `kiwi broker|worker|submit|ctl|status`.
+//! (clap is unavailable offline; `args` is a small tested parser.)
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::run;

@@ -1,0 +1,149 @@
+//! Broadcast filters: subscriber-side matching on `sender` and `subject`,
+//! with `*` wildcards — mirroring `kiwipy.BroadcastFilter`.
+
+use crate::communicator::BroadcastMessage;
+
+/// A subscriber-side broadcast filter. An unset field matches anything;
+/// set fields match with `*` wildcards (any run of characters).
+#[derive(Clone, Debug, Default)]
+pub struct BroadcastFilter {
+    sender: Option<String>,
+    subject: Option<String>,
+}
+
+impl BroadcastFilter {
+    /// Match everything.
+    pub fn all() -> Self {
+        Self::default()
+    }
+
+    /// Require the sender to match `pattern` (supports `*`).
+    pub fn sender(mut self, pattern: &str) -> Self {
+        self.sender = Some(pattern.to_string());
+        self
+    }
+
+    /// Require the subject to match `pattern` (supports `*`).
+    pub fn subject(mut self, pattern: &str) -> Self {
+        self.subject = Some(pattern.to_string());
+        self
+    }
+
+    /// Does `msg` pass this filter? A message with a missing field fails
+    /// any filter constraining that field (kiwiPy behaviour).
+    pub fn matches(&self, msg: &BroadcastMessage) -> bool {
+        let field_ok = |pattern: &Option<String>, value: &Option<String>| match (pattern, value) {
+            (None, _) => true,
+            (Some(_), None) => false,
+            (Some(p), Some(v)) => wildcard_match(p, v),
+        };
+        field_ok(&self.sender, &msg.sender) && field_ok(&self.subject, &msg.subject)
+    }
+}
+
+/// Glob-style match where `*` matches any (possibly empty) run of
+/// characters. Linear two-pointer algorithm with backtracking.
+pub fn wildcard_match(pattern: &str, text: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None; // (pattern idx after *, text idx)
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some((pi + 1, ti));
+            pi += 1;
+        } else if let Some((sp, st)) = star {
+            // Backtrack: let the last * eat one more character.
+            pi = sp;
+            ti = st + 1;
+            star = Some((sp, st + 1));
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+    use crate::wire::Value;
+
+    fn msg(sender: Option<&str>, subject: Option<&str>) -> BroadcastMessage {
+        BroadcastMessage {
+            body: Value::Null,
+            sender: sender.map(String::from),
+            subject: subject.map(String::from),
+            correlation_id: None,
+        }
+    }
+
+    #[test]
+    fn empty_filter_matches_everything() {
+        let f = BroadcastFilter::all();
+        assert!(f.matches(&msg(None, None)));
+        assert!(f.matches(&msg(Some("x"), Some("y"))));
+    }
+
+    #[test]
+    fn subject_filter() {
+        let f = BroadcastFilter::all().subject("state_changed.*");
+        assert!(f.matches(&msg(None, Some("state_changed.42.finished"))));
+        assert!(!f.matches(&msg(None, Some("other.42"))));
+        assert!(!f.matches(&msg(None, None)), "missing subject fails a subject filter");
+    }
+
+    #[test]
+    fn sender_and_subject_are_conjunctive() {
+        let f = BroadcastFilter::all().sender("proc-*").subject("*.finished");
+        assert!(f.matches(&msg(Some("proc-1"), Some("state.finished"))));
+        assert!(!f.matches(&msg(Some("other-1"), Some("state.finished"))));
+        assert!(!f.matches(&msg(Some("proc-1"), Some("state.running"))));
+    }
+
+    #[test]
+    fn wildcard_basics() {
+        assert!(wildcard_match("", ""));
+        assert!(wildcard_match("*", ""));
+        assert!(wildcard_match("*", "anything"));
+        assert!(wildcard_match("a*c", "abc"));
+        assert!(wildcard_match("a*c", "ac"));
+        assert!(wildcard_match("a*c", "axxxc"));
+        assert!(!wildcard_match("a*c", "ab"));
+        assert!(!wildcard_match("abc", "abcd"));
+        assert!(wildcard_match("*.*", "a.b"));
+        assert!(wildcard_match("a*b*c", "a-x-b-y-c"));
+        assert!(!wildcard_match("a*b*c", "acb"));
+    }
+
+    #[test]
+    fn prop_star_matches_any_split() {
+        run_prop("wildcard star", |rng: &Rng| {
+            let prefix = rng.string(6);
+            let middle = rng.string(6);
+            let suffix = rng.string(6);
+            let pattern = format!("{prefix}*{suffix}");
+            let text = format!("{prefix}{middle}{suffix}");
+            assert!(wildcard_match(&pattern, &text), "pattern {pattern} text {text}");
+        });
+    }
+
+    #[test]
+    fn prop_literal_pattern_is_equality() {
+        run_prop("wildcard literal", |rng: &Rng| {
+            let a: String = rng.string(8).replace('*', "x");
+            let b: String = rng.string(8).replace('*', "y");
+            assert!(wildcard_match(&a, &a));
+            if a != b {
+                assert_eq!(wildcard_match(&a, &b), false);
+            }
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! Thread-backed futures (promise/future pairs).
+//!
+//! kiwiPy exposes `concurrent.futures.Future` results so users get familiar
+//! blocking semantics without touching coroutines; this is the Rust
+//! equivalent: a `Condvar`-backed future that any thread can wait on, with
+//! optional done-callbacks that run on the completing thread.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+enum State<T> {
+    Pending(Vec<Box<dyn FnOnce(&Result<T>) + Send>>),
+    Done(Result<T>),
+    /// Result already consumed by `wait`.
+    Taken,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    cond: Condvar,
+}
+
+/// The write side: complete it exactly once.
+pub struct Promise<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// The read side: wait (with timeout) or poll.
+pub struct KiwiFuture<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a connected promise/future pair.
+pub fn promise<T>() -> (Promise<T>, KiwiFuture<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State::Pending(Vec::new())),
+        cond: Condvar::new(),
+    });
+    (Promise { inner: Arc::clone(&inner) }, KiwiFuture { inner })
+}
+
+impl<T> Promise<T> {
+    /// Complete with a success value. Returns false if already completed.
+    pub fn set_result(&self, value: T) -> bool {
+        self.complete(Ok(value))
+    }
+
+    /// Complete with an error. Returns false if already completed.
+    pub fn set_error(&self, err: Error) -> bool {
+        self.complete(Err(err))
+    }
+
+    fn complete(&self, result: Result<T>) -> bool {
+        let mut state = self.inner.state.lock().unwrap();
+        match &mut *state {
+            State::Pending(callbacks) => {
+                let callbacks = std::mem::take(callbacks);
+                *state = State::Done(result);
+                // Run callbacks with the lock *held state read-only*: we
+                // re-borrow the stored result after the transition.
+                if let State::Done(res) = &*state {
+                    for cb in callbacks {
+                        cb(res);
+                    }
+                }
+                self.inner.cond.notify_all();
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+impl<T> KiwiFuture<T> {
+    /// True once a result (or error) is set.
+    pub fn is_done(&self) -> bool {
+        !matches!(*self.inner.state.lock().unwrap(), State::Pending(_))
+    }
+
+    /// Block until completed or `timeout` elapses; consumes the result.
+    pub fn wait(self, timeout: Duration) -> Result<T> {
+        let mut state = self.inner.state.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match &mut *state {
+                State::Done(_) => {
+                    let done = std::mem::replace(&mut *state, State::Taken);
+                    let State::Done(res) = done else { unreachable!() };
+                    return res;
+                }
+                State::Taken => return Err(Error::Closed("future already consumed".into())),
+                State::Pending(_) => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return Err(Error::Timeout("future wait".into()));
+                    }
+                    let (guard, _) =
+                        self.inner.cond.wait_timeout(state, deadline - now).unwrap();
+                    state = guard;
+                }
+            }
+        }
+    }
+
+    /// Register a callback to run when the future completes (immediately if
+    /// it already has). Runs on the completing thread — keep it short.
+    pub fn on_done(&self, cb: impl FnOnce(&Result<T>) + Send + 'static) {
+        let mut state = self.inner.state.lock().unwrap();
+        match &mut *state {
+            State::Pending(callbacks) => callbacks.push(Box::new(cb)),
+            State::Done(res) => cb(res),
+            State::Taken => {}
+        }
+    }
+}
+
+impl<T> Clone for KiwiFuture<T> {
+    fn clone(&self) -> Self {
+        KiwiFuture { inner: Arc::clone(&self.inner) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_then_wait() {
+        let (p, f) = promise();
+        p.set_result(42);
+        assert_eq!(f.wait(Duration::from_millis(10)).unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_blocks_until_set_from_other_thread() {
+        let (p, f) = promise();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            p.set_result("late".to_string());
+        });
+        assert_eq!(f.wait(Duration::from_secs(2)).unwrap(), "late");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_when_never_set() {
+        let (_p, f) = promise::<i32>();
+        assert!(matches!(f.wait(Duration::from_millis(20)), Err(Error::Timeout(_))));
+    }
+
+    #[test]
+    fn error_propagates() {
+        let (p, f) = promise::<i32>();
+        p.set_error(Error::RemoteException("boom".into()));
+        assert!(matches!(f.wait(Duration::from_millis(10)), Err(Error::RemoteException(_))));
+    }
+
+    #[test]
+    fn double_complete_rejected() {
+        let (p, f) = promise();
+        assert!(p.set_result(1));
+        assert!(!p.set_result(2));
+        assert!(!p.set_error(Error::Timeout("x".into())));
+        assert_eq!(f.wait(Duration::from_millis(10)).unwrap(), 1);
+    }
+
+    #[test]
+    fn is_done_tracks_state() {
+        let (p, f) = promise();
+        assert!(!f.is_done());
+        p.set_result(());
+        assert!(f.is_done());
+    }
+
+    #[test]
+    fn on_done_fires_on_completion() {
+        let (p, f) = promise();
+        let (tx, rx) = std::sync::mpsc::channel();
+        f.on_done(move |r| {
+            tx.send(r.as_ref().copied().unwrap()).unwrap();
+        });
+        p.set_result(7);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 7);
+    }
+
+    #[test]
+    fn on_done_fires_immediately_if_already_done() {
+        let (p, f) = promise();
+        p.set_result(3);
+        let (tx, rx) = std::sync::mpsc::channel();
+        f.on_done(move |r| {
+            tx.send(r.as_ref().copied().unwrap()).unwrap();
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 3);
+    }
+}

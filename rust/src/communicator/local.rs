@@ -1,0 +1,326 @@
+//! [`LocalCommunicator`]: a pure in-process communicator with the same
+//! interface and semantics as the broker-backed one, minus the wire —
+//! kiwiPy ships the identical pair (`LocalCommunicator` /
+//! `RmqCommunicator`) so tests and single-process tools can run without a
+//! broker. Also the zero-overhead baseline the benches compare against.
+//!
+//! Handlers run synchronously on the calling thread. Task queues buffer
+//! when no subscriber is attached and round-robin across subscribers,
+//! matching broker behaviour.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::communicator::filters::BroadcastFilter;
+use crate::communicator::futures::{promise, KiwiFuture, Promise};
+use crate::communicator::rmq::TaskContext;
+use crate::communicator::{
+    unique_id, BroadcastHandler, BroadcastMessage, Communicator, RpcHandler, TaskHandler,
+};
+use crate::error::{Error, Result};
+use crate::wire::Value;
+
+type SharedTaskHandler = Arc<Mutex<TaskHandler>>;
+type SharedRpcHandler = Arc<Mutex<RpcHandler>>;
+type SharedBroadcastHandler = Arc<Mutex<BroadcastHandler>>;
+
+#[derive(Default)]
+struct Inner {
+    /// queue -> subscribers (sub_id, handler).
+    task_subs: HashMap<String, Vec<(String, SharedTaskHandler)>>,
+    /// queue -> buffered tasks awaiting a subscriber.
+    pending_tasks: HashMap<String, VecDeque<(Value, Promise<Value>)>>,
+    /// queue -> round-robin cursor.
+    rr: HashMap<String, usize>,
+    rpc: HashMap<String, SharedRpcHandler>,
+    broadcast: Vec<(String, BroadcastFilter, SharedBroadcastHandler)>,
+}
+
+/// In-process communicator (no broker, no threads).
+#[derive(Clone, Default)]
+pub struct LocalCommunicator {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl LocalCommunicator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pick the next task subscriber for `queue` (round-robin), if any.
+    fn next_subscriber(&self, queue: &str) -> Option<SharedTaskHandler> {
+        let mut inner = self.inner.lock().unwrap();
+        let subs = inner.task_subs.get(queue)?;
+        if subs.is_empty() {
+            return None;
+        }
+        let n = subs.len();
+        let cursor = inner.rr.entry(queue.to_string()).or_insert(0);
+        let idx = *cursor % n;
+        *cursor = (*cursor + 1) % n;
+        Some(Arc::clone(&inner.task_subs[queue][idx].1))
+    }
+}
+
+impl Communicator for LocalCommunicator {
+    fn task_send(&self, queue: &str, task: Value) -> Result<KiwiFuture<Value>> {
+        let (p, f) = promise();
+        match self.next_subscriber(queue) {
+            Some(handler) => {
+                // Invoke outside the registry lock so handlers can re-enter
+                // the communicator.
+                let ctx = TaskContext::local(p);
+                (handler.lock().unwrap())(task, ctx);
+            }
+            None => {
+                self.inner
+                    .lock()
+                    .unwrap()
+                    .pending_tasks
+                    .entry(queue.to_string())
+                    .or_default()
+                    .push_back((task, p));
+            }
+        }
+        Ok(f)
+    }
+
+    fn task_queue(&self, queue: &str, _prefetch: u32, handler: TaskHandler) -> Result<String> {
+        let sub_id = unique_id("local-task");
+        let shared: SharedTaskHandler = Arc::new(Mutex::new(handler));
+        let backlog = {
+            let mut inner = self.inner.lock().unwrap();
+            inner
+                .task_subs
+                .entry(queue.to_string())
+                .or_default()
+                .push((sub_id.clone(), Arc::clone(&shared)));
+            inner.pending_tasks.remove(queue).unwrap_or_default()
+        };
+        // Drain anything that was buffered while nobody listened.
+        for (task, p) in backlog {
+            (shared.lock().unwrap())(task, TaskContext::local(p));
+        }
+        Ok(sub_id)
+    }
+
+    fn remove_task_subscriber(&self, subscription_id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        for subs in inner.task_subs.values_mut() {
+            let before = subs.len();
+            subs.retain(|(id, _)| id != subscription_id);
+            if subs.len() != before {
+                return Ok(());
+            }
+        }
+        Err(Error::Broker(format!("no task subscription '{subscription_id}'")))
+    }
+
+    fn rpc_send(&self, recipient_id: &str, msg: Value) -> Result<KiwiFuture<Value>> {
+        let handler = {
+            let inner = self.inner.lock().unwrap();
+            inner.rpc.get(recipient_id).cloned()
+        };
+        let Some(handler) = handler else {
+            return Err(Error::UnroutableMessage(format!("no rpc subscriber '{recipient_id}'")));
+        };
+        let (p, f) = promise();
+        match (handler.lock().unwrap())(msg) {
+            Ok(v) => p.set_result(v),
+            Err(e) => p.set_error(Error::RemoteException(e.to_string())),
+        };
+        Ok(f)
+    }
+
+    fn add_rpc_subscriber(&self, identifier: &str, handler: RpcHandler) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.rpc.contains_key(identifier) {
+            return Err(Error::DuplicateSubscriber(identifier.to_string()));
+        }
+        inner.rpc.insert(identifier.to_string(), Arc::new(Mutex::new(handler)));
+        Ok(())
+    }
+
+    fn remove_rpc_subscriber(&self, identifier: &str) -> Result<()> {
+        self.inner
+            .lock()
+            .unwrap()
+            .rpc
+            .remove(identifier)
+            .map(|_| ())
+            .ok_or_else(|| Error::Broker(format!("no rpc subscriber '{identifier}'")))
+    }
+
+    fn broadcast_send(
+        &self,
+        body: Value,
+        sender: Option<&str>,
+        subject: Option<&str>,
+    ) -> Result<()> {
+        let msg = BroadcastMessage {
+            body,
+            sender: sender.map(String::from),
+            subject: subject.map(String::from),
+            correlation_id: None,
+        };
+        let matching: Vec<SharedBroadcastHandler> = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .broadcast
+                .iter()
+                .filter(|(_, f, _)| f.matches(&msg))
+                .map(|(_, _, h)| Arc::clone(h))
+                .collect()
+        };
+        for h in matching {
+            (h.lock().unwrap())(msg.clone());
+        }
+        Ok(())
+    }
+
+    fn add_broadcast_subscriber(
+        &self,
+        filter: BroadcastFilter,
+        handler: BroadcastHandler,
+    ) -> Result<String> {
+        let sub_id = unique_id("local-bc");
+        self.inner.lock().unwrap().broadcast.push((
+            sub_id.clone(),
+            filter,
+            Arc::new(Mutex::new(handler)),
+        ));
+        Ok(sub_id)
+    }
+
+    fn remove_broadcast_subscriber(&self, subscription_id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.broadcast.len();
+        inner.broadcast.retain(|(id, _, _)| id != subscription_id);
+        if inner.broadcast.len() == before {
+            return Err(Error::Broker(format!("no broadcast subscription '{subscription_id}'")));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn task_roundtrip() {
+        let comm = LocalCommunicator::new();
+        comm.task_queue(
+            "sq",
+            1,
+            Box::new(|t, ctx| {
+                let x = t.as_i64().unwrap();
+                ctx.complete(Ok(Value::I64(x + 1)));
+            }),
+        )
+        .unwrap();
+        let f = comm.task_send("sq", Value::I64(41)).unwrap();
+        assert_eq!(f.wait(Duration::from_secs(1)).unwrap(), Value::I64(42));
+    }
+
+    #[test]
+    fn tasks_buffer_until_subscriber_arrives() {
+        let comm = LocalCommunicator::new();
+        let f = comm.task_send("later", Value::I64(5)).unwrap();
+        assert!(!f.is_done());
+        comm.task_queue(
+            "later",
+            1,
+            Box::new(|t, ctx| ctx.complete(Ok(t))),
+        )
+        .unwrap();
+        assert_eq!(f.wait(Duration::from_secs(1)).unwrap(), Value::I64(5));
+    }
+
+    #[test]
+    fn round_robin_across_subscribers() {
+        let comm = LocalCommunicator::new();
+        for name in ["a", "b"] {
+            comm.task_queue(
+                "q",
+                1,
+                Box::new(move |_t, ctx| ctx.complete(Ok(Value::str(name)))),
+            )
+            .unwrap();
+        }
+        let winners: Vec<String> = (0..4)
+            .map(|_| {
+                comm.task_send("q", Value::Null)
+                    .unwrap()
+                    .wait(Duration::from_secs(1))
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert_eq!(winners, vec!["a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn rpc_roundtrip_and_unroutable() {
+        let comm = LocalCommunicator::new();
+        comm.add_rpc_subscriber("id", Box::new(|v| Ok(v))).unwrap();
+        assert_eq!(
+            comm.rpc_send("id", Value::str("x")).unwrap().wait(Duration::from_secs(1)).unwrap(),
+            Value::str("x")
+        );
+        assert!(matches!(comm.rpc_send("ghost", Value::Null), Err(Error::UnroutableMessage(_))));
+    }
+
+    #[test]
+    fn broadcast_with_filters() {
+        let comm = LocalCommunicator::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        comm.add_broadcast_subscriber(
+            BroadcastFilter::all().subject("boom.*"),
+            Box::new(move |m| tx.send(m.body).unwrap()),
+        )
+        .unwrap();
+        comm.broadcast_send(Value::I64(1), None, Some("quiet.1")).unwrap();
+        comm.broadcast_send(Value::I64(2), None, Some("boom.1")).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), Value::I64(2));
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn handlers_can_reenter_communicator() {
+        // A task handler that broadcasts — must not deadlock.
+        let comm = LocalCommunicator::new();
+        let comm2 = comm.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        comm.add_broadcast_subscriber(
+            BroadcastFilter::all(),
+            Box::new(move |m| tx.send(m.body).unwrap()),
+        )
+        .unwrap();
+        comm.task_queue(
+            "chatty",
+            1,
+            Box::new(move |t, ctx| {
+                comm2.broadcast_send(t.clone(), None, None).unwrap();
+                ctx.complete(Ok(Value::Null));
+            }),
+        )
+        .unwrap();
+        comm.task_send("chatty", Value::str("hi")).unwrap().wait(Duration::from_secs(1)).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), Value::str("hi"));
+    }
+
+    #[test]
+    fn remove_subscribers() {
+        let comm = LocalCommunicator::new();
+        let t = comm.task_queue("q", 1, Box::new(|_t, ctx| ctx.complete(Ok(Value::Null)))).unwrap();
+        comm.remove_task_subscriber(&t).unwrap();
+        assert!(comm.remove_task_subscriber(&t).is_err());
+        let b = comm.add_broadcast_subscriber(BroadcastFilter::all(), Box::new(|_| {})).unwrap();
+        comm.remove_broadcast_subscriber(&b).unwrap();
+        assert!(comm.remove_broadcast_subscriber(&b).is_err());
+    }
+}

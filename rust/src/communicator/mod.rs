@@ -1,0 +1,164 @@
+//! The kiwiPy API: one `Communicator` exposing the paper's three message
+//! types — **task queues**, **RPC** and **broadcasts** — with futures-based
+//! results and a hidden communication thread.
+//!
+//! | kiwiPy (Python)            | here                                     |
+//! |----------------------------|------------------------------------------|
+//! | `comm.task_send(q, task)`  | [`Communicator::task_send`] → future     |
+//! | `comm.add_task_subscriber` | [`Communicator::task_queue`]             |
+//! | `comm.rpc_send(id, msg)`   | [`Communicator::rpc_send`] → future      |
+//! | `comm.add_rpc_subscriber`  | [`Communicator::add_rpc_subscriber`]     |
+//! | `comm.broadcast_send(...)` | [`Communicator::broadcast_send`]         |
+//! | `comm.add_broadcast_subscriber` | [`Communicator::add_broadcast_subscriber`] |
+//!
+//! Two implementations: [`RmqCommunicator`] (over the broker, the real
+//! deployment) and [`LocalCommunicator`] (pure in-process, the unit-test
+//! substrate — kiwiPy ships the same pair).
+
+pub mod filters;
+pub mod futures;
+pub mod local;
+pub mod rmq;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::Result;
+use crate::wire::Value;
+
+pub use filters::BroadcastFilter;
+pub use futures::{KiwiFuture, Promise};
+pub use local::LocalCommunicator;
+pub use rmq::{RmqCommunicator, RmqConfig, TaskContext};
+
+/// A broadcast message as seen by subscribers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BroadcastMessage {
+    pub body: Value,
+    /// Who sent it (free-form identity, e.g. a process id).
+    pub sender: Option<String>,
+    /// What it is about (dotted subject, e.g. `state_changed.123.finished`).
+    pub subject: Option<String>,
+    pub correlation_id: Option<String>,
+}
+
+impl BroadcastMessage {
+    pub fn to_value(&self) -> Value {
+        Value::map([
+            ("body", self.body.clone()),
+            ("sender", self.sender.clone().into()),
+            ("subject", self.subject.clone().into()),
+            ("correlation_id", self.correlation_id.clone().into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(BroadcastMessage {
+            body: v.get("body")?.clone(),
+            sender: v.get_opt("sender").map(|s| s.as_str().map(String::from)).transpose()?,
+            subject: v.get_opt("subject").map(|s| s.as_str().map(String::from)).transpose()?,
+            correlation_id: v
+                .get_opt("correlation_id")
+                .map(|s| s.as_str().map(String::from))
+                .transpose()?,
+        })
+    }
+}
+
+/// Handler for incoming tasks. Receives the task body and a [`TaskContext`]
+/// whose `complete`/`reject` may be called from any thread — this is how
+/// the daemon offloads long-running work without stalling the
+/// communication thread.
+pub type TaskHandler = Box<dyn FnMut(Value, rmq::TaskContext) + Send>;
+
+/// Handler for RPC requests: synchronous request → reply (kiwiPy's model —
+/// RPCs are quick control messages like pause/play/kill).
+pub type RpcHandler = Box<dyn FnMut(Value) -> Result<Value> + Send>;
+
+/// Handler for broadcasts (no reply channel).
+pub type BroadcastHandler = Box<dyn FnMut(BroadcastMessage) + Send>;
+
+/// The kiwiPy communicator interface.
+pub trait Communicator: Send + Sync {
+    /// Submit a task to a (durable) task queue. The future resolves with
+    /// the value the remote handler completes with.
+    fn task_send(&self, queue: &str, task: Value) -> Result<KiwiFuture<Value>>;
+
+    /// Subscribe to a task queue with a prefetch window. Returns a
+    /// subscription id usable with `remove_task_subscriber`.
+    fn task_queue(&self, queue: &str, prefetch: u32, handler: TaskHandler) -> Result<String>;
+
+    /// Remove a task subscriber (in-flight tasks are requeued by the
+    /// broker if unacked).
+    fn remove_task_subscriber(&self, subscription_id: &str) -> Result<()>;
+
+    /// Call the RPC subscriber registered under `recipient_id`.
+    fn rpc_send(&self, recipient_id: &str, msg: Value) -> Result<KiwiFuture<Value>>;
+
+    /// Register an RPC subscriber under a globally-addressable identifier.
+    fn add_rpc_subscriber(&self, identifier: &str, handler: RpcHandler) -> Result<()>;
+
+    /// Unregister an RPC subscriber.
+    fn remove_rpc_subscriber(&self, identifier: &str) -> Result<()>;
+
+    /// Fire-and-forget broadcast to every subscriber.
+    fn broadcast_send(
+        &self,
+        body: Value,
+        sender: Option<&str>,
+        subject: Option<&str>,
+    ) -> Result<()>;
+
+    /// Subscribe to broadcasts matching `filter`. Returns a subscription id.
+    fn add_broadcast_subscriber(
+        &self,
+        filter: BroadcastFilter,
+        handler: BroadcastHandler,
+    ) -> Result<String>;
+
+    /// Remove a broadcast subscriber.
+    fn remove_broadcast_subscriber(&self, subscription_id: &str) -> Result<()>;
+}
+
+static UNIQUE: AtomicU64 = AtomicU64::new(1);
+
+/// Process-unique identifier with a readable prefix (consumer tags,
+/// correlation ids, reply queues).
+pub fn unique_id(prefix: &str) -> String {
+    let n = UNIQUE.fetch_add(1, Ordering::Relaxed);
+    format!("{prefix}-{}-{n:x}", std::process::id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_ids_are_unique() {
+        let a = unique_id("x");
+        let b = unique_id("x");
+        assert_ne!(a, b);
+        assert!(a.starts_with("x-"));
+    }
+
+    #[test]
+    fn broadcast_message_roundtrip() {
+        let m = BroadcastMessage {
+            body: Value::map([("k", Value::I64(1))]),
+            sender: Some("proc-7".into()),
+            subject: Some("state_changed.7.finished".into()),
+            correlation_id: None,
+        };
+        assert_eq!(BroadcastMessage::from_value(&m.to_value()).unwrap(), m);
+    }
+
+    #[test]
+    fn broadcast_message_optionals_none() {
+        let m = BroadcastMessage {
+            body: Value::Null,
+            sender: None,
+            subject: None,
+            correlation_id: None,
+        };
+        assert_eq!(BroadcastMessage::from_value(&m.to_value()).unwrap(), m);
+    }
+}

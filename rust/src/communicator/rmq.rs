@@ -1,0 +1,774 @@
+//! [`RmqCommunicator`]: kiwiPy's `RmqThreadCommunicator` equivalent — the
+//! three message types implemented over the broker, usable from plain
+//! blocking code while a hidden communication thread does the work.
+//!
+//! Mapping onto broker primitives (identical to how kiwiPy maps onto AMQP):
+//!
+//! * **task queue** — a durable queue on the default exchange; tasks are
+//!   published `persistent` with `reply_to`/`correlation_id`; consumers use
+//!   prefetch and explicit ack-after-completion, so a dead worker's tasks
+//!   are requeued by the broker.
+//! * **RPC** — a direct exchange (`kiwi.rpc`); each subscriber binds an
+//!   exclusive queue under its identifier; `mandatory` publish turns
+//!   "nobody bound" into [`Error::UnroutableMessage`].
+//! * **broadcast** — a fanout exchange (`kiwi.broadcast`); every subscriber
+//!   binds its own exclusive queue; filtering is subscriber-side
+//!   ([`BroadcastFilter`]), exactly like kiwiPy.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::broker::protocol::{ClientRequest, ExchangeKind, MessageProps, QueueOptions};
+use crate::communicator::filters::BroadcastFilter;
+use crate::communicator::futures::{promise, KiwiFuture, Promise};
+use crate::communicator::{
+    unique_id, BroadcastHandler, BroadcastMessage, Communicator, RpcHandler, TaskHandler,
+};
+use crate::error::{Error, Result};
+use crate::transport::{Connection, ConnectionConfig, Link};
+use crate::wire::Value;
+
+/// Exchange names and client tuning.
+#[derive(Clone, Debug)]
+pub struct RmqConfig {
+    pub client_id: String,
+    /// Heartbeat interval; 0 disables (see [`ConnectionConfig`]).
+    pub heartbeat_ms: u64,
+    pub request_timeout: Duration,
+    pub rpc_exchange: String,
+    pub broadcast_exchange: String,
+    /// Declare task queues durable (persistent tasks). On by default —
+    /// this is the paper's headline robustness property.
+    pub durable_tasks: bool,
+    /// Wait for the broker's ack on every `task_send` publish (publisher
+    /// confirms). On = submission errors surface immediately; off =
+    /// pipelined fire-and-forget submission, ~an RTT faster per task
+    /// (§Perf E1b). Unroutable drops are still impossible once the queue
+    /// is declared, which `task_send` guarantees.
+    pub confirm_publishes: bool,
+}
+
+impl Default for RmqConfig {
+    fn default() -> Self {
+        RmqConfig {
+            client_id: unique_id("kiwi"),
+            heartbeat_ms: 0,
+            request_timeout: Duration::from_secs(10),
+            rpc_exchange: "kiwi.rpc".into(),
+            broadcast_exchange: "kiwi.broadcast".into(),
+            durable_tasks: true,
+            confirm_publishes: true,
+        }
+    }
+}
+
+enum Subscription {
+    Task { consumer_tag: String },
+    Broadcast { consumer_tag: String, queue: String },
+    Rpc { consumer_tag: String, queue: String },
+}
+
+struct Shared {
+    /// correlation_id -> reply promise (task results and RPC responses).
+    pending: Mutex<HashMap<String, Promise<Value>>>,
+}
+
+/// The broker-backed communicator.
+pub struct RmqCommunicator {
+    conn: Arc<Connection>,
+    config: RmqConfig,
+    reply_queue: String,
+    shared: Arc<Shared>,
+    subscriptions: Mutex<HashMap<String, Subscription>>,
+    /// Task queues already declared by this communicator (declare-once).
+    declared: Mutex<HashSet<String>>,
+    /// RPC identifiers registered locally (duplicate detection).
+    rpc_ids: Mutex<HashMap<String, Subscription>>,
+}
+
+impl RmqCommunicator {
+    /// Connect over any [`Link`] (TCP or in-process).
+    pub fn connect(link: Arc<dyn Link>, config: RmqConfig) -> Result<Self> {
+        let conn = Arc::new(Connection::open(
+            link,
+            ConnectionConfig {
+                client_id: config.client_id.clone(),
+                heartbeat_ms: config.heartbeat_ms,
+                request_timeout: config.request_timeout,
+            },
+        )?);
+        // Topology: the two shared exchanges.
+        conn.request(&ClientRequest::ExchangeDeclare {
+            exchange: config.rpc_exchange.clone(),
+            kind: ExchangeKind::Direct,
+        })?;
+        conn.request(&ClientRequest::ExchangeDeclare {
+            exchange: config.broadcast_exchange.clone(),
+            kind: ExchangeKind::Fanout,
+        })?;
+        // Private reply queue for task results and RPC responses.
+        let reply_queue = unique_id(&format!("reply.{}", config.client_id));
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: reply_queue.clone(),
+            options: QueueOptions { exclusive: true, ..Default::default() },
+        })?;
+        let shared = Arc::new(Shared { pending: Mutex::new(HashMap::new()) });
+        let shared2 = Arc::clone(&shared);
+        let conn2 = Arc::clone(&conn);
+        let reply_tag = unique_id("replyc");
+        conn.consume(
+            &reply_queue,
+            &reply_tag,
+            0,
+            Box::new(move |d| {
+                conn2.ack(d.delivery_tag).ok();
+                let Some(corr) = d.props.correlation_id.as_deref() else {
+                    log::warn!("rmq: reply without correlation_id dropped");
+                    return;
+                };
+                let Some(p) = shared2.pending.lock().unwrap().remove(corr) else {
+                    // Late reply for a timed-out/abandoned future.
+                    return;
+                };
+                match decode_reply(&d.body) {
+                    Ok(v) => p.set_result(v),
+                    Err(e) => p.set_error(e),
+                };
+            }),
+        )?;
+        Ok(RmqCommunicator {
+            conn,
+            config,
+            reply_queue,
+            shared,
+            subscriptions: Mutex::new(HashMap::new()),
+            declared: Mutex::new(HashSet::new()),
+            rpc_ids: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The underlying connection (used by the daemon for raw operations).
+    pub fn connection(&self) -> &Arc<Connection> {
+        &self.conn
+    }
+
+    /// Declare a task queue once per communicator.
+    fn ensure_task_queue(&self, queue: &str) -> Result<()> {
+        {
+            let declared = self.declared.lock().unwrap();
+            if declared.contains(queue) {
+                return Ok(());
+            }
+        }
+        self.conn.request(&ClientRequest::QueueDeclare {
+            queue: queue.to_string(),
+            options: QueueOptions {
+                durable: self.config.durable_tasks,
+                ..Default::default()
+            },
+        })?;
+        self.declared.lock().unwrap().insert(queue.to_string());
+        Ok(())
+    }
+
+    fn register_pending(&self) -> (String, KiwiFuture<Value>) {
+        let corr = unique_id("corr");
+        let (p, f) = promise();
+        self.shared.pending.lock().unwrap().insert(corr.clone(), p);
+        (corr, f)
+    }
+
+    /// Graceful close (also runs on drop).
+    pub fn close(&self) {
+        self.conn.close();
+    }
+}
+
+impl Drop for RmqCommunicator {
+    fn drop(&mut self) {
+        // Delivery-handler closures hold `Arc<Connection>` clones, so the
+        // connection would never drop on its own — close explicitly, which
+        // also clears those handlers.
+        self.conn.close();
+    }
+}
+
+fn decode_reply(body: &Value) -> Result<Value> {
+    match body.get_str("status")? {
+        "ok" => Ok(body.get("result")?.clone()),
+        "err" => Err(Error::RemoteException(format!(
+            "{}: {}",
+            body.get_opt("code").and_then(|c| c.as_str().ok().map(String::from)).unwrap_or_default(),
+            body.get_str("message").unwrap_or("<no message>")
+        ))),
+        other => Err(Error::Wire(format!("unknown reply status '{other}'"))),
+    }
+}
+
+fn encode_reply(result: &Result<Value>) -> Value {
+    match result {
+        Ok(v) => Value::map([("status", Value::str("ok")), ("result", v.clone())]),
+        Err(e) => Value::map([
+            ("status", Value::str("err")),
+            ("code", Value::str(e.code())),
+            ("message", Value::str(e.to_string())),
+        ]),
+    }
+}
+
+/// Handed to task handlers; completion may happen on any thread (the
+/// daemon's worker pool completes from workers). Consumes itself: each
+/// task is completed or rejected exactly once.
+pub struct TaskContext {
+    inner: ContextInner,
+}
+
+enum ContextInner {
+    Remote {
+        conn: Arc<Connection>,
+        delivery_tag: u64,
+        reply_to: Option<String>,
+        correlation_id: Option<String>,
+    },
+    Local {
+        promise: Promise<Value>,
+    },
+}
+
+impl TaskContext {
+    pub(crate) fn remote(
+        conn: Arc<Connection>,
+        delivery_tag: u64,
+        reply_to: Option<String>,
+        correlation_id: Option<String>,
+    ) -> Self {
+        TaskContext {
+            inner: ContextInner::Remote { conn, delivery_tag, reply_to, correlation_id },
+        }
+    }
+
+    pub(crate) fn local(promise: Promise<Value>) -> Self {
+        TaskContext { inner: ContextInner::Local { promise } }
+    }
+
+    /// Finish the task: reply to the sender (if it asked) and ack, so the
+    /// broker retires the message from the task queue.
+    pub fn complete(self, result: Result<Value>) {
+        match self.inner {
+            ContextInner::Remote { conn, delivery_tag, reply_to, correlation_id } => {
+                if let (Some(rq), Some(corr)) = (reply_to, correlation_id) {
+                    conn.send_noreply(&ClientRequest::Publish {
+                        exchange: String::new(),
+                        routing_key: rq,
+                        body: Arc::new(encode_reply(&result)),
+                        props: MessageProps {
+                            correlation_id: Some(corr),
+                            ..Default::default()
+                        },
+                        // Not mandatory: sender may be gone; that's fine.
+                        mandatory: false,
+                    })
+                    .ok();
+                }
+                conn.ack(delivery_tag).ok();
+            }
+            ContextInner::Local { promise } => {
+                match result {
+                    Ok(v) => promise.set_result(v),
+                    Err(e) => promise.set_error(e),
+                };
+            }
+        }
+    }
+
+    /// Refuse the task. With `requeue` the broker hands it to another
+    /// consumer; otherwise it is dropped.
+    pub fn reject(self, requeue: bool) {
+        match self.inner {
+            ContextInner::Remote { conn, delivery_tag, .. } => {
+                conn.nack(delivery_tag, requeue).ok();
+            }
+            ContextInner::Local { promise } => {
+                promise.set_error(Error::RemoteException("task rejected".into()));
+            }
+        }
+    }
+}
+
+impl Communicator for RmqCommunicator {
+    fn task_send(&self, queue: &str, task: Value) -> Result<KiwiFuture<Value>> {
+        self.ensure_task_queue(queue)?;
+        let (corr, future) = self.register_pending();
+        let publish = ClientRequest::Publish {
+            exchange: String::new(),
+            routing_key: queue.to_string(),
+            body: Arc::new(task),
+            props: MessageProps {
+                correlation_id: Some(corr.clone()),
+                reply_to: Some(self.reply_queue.clone()),
+                persistent: self.config.durable_tasks,
+                ..Default::default()
+            },
+            mandatory: true,
+        };
+        let res = if self.config.confirm_publishes {
+            self.conn.request(&publish).map(|_| ())
+        } else {
+            // Pipelined: the queue is declared (above), so the publish
+            // cannot be unroutable; skip the confirm round-trip.
+            self.conn.send_noreply(&publish)
+        };
+        if let Err(e) = res {
+            self.shared.pending.lock().unwrap().remove(&corr);
+            return Err(e);
+        }
+        Ok(future)
+    }
+
+    fn task_queue(&self, queue: &str, prefetch: u32, mut handler: TaskHandler) -> Result<String> {
+        self.ensure_task_queue(queue)?;
+        let consumer_tag = unique_id("task");
+        let conn = Arc::clone(&self.conn);
+        self.conn.consume(
+            queue,
+            &consumer_tag,
+            prefetch,
+            Box::new(move |d| {
+                let ctx = TaskContext::remote(
+                    Arc::clone(&conn),
+                    d.delivery_tag,
+                    d.props.reply_to.clone(),
+                    d.props.correlation_id.clone(),
+                );
+                handler((*d.body).clone(), ctx);
+            }),
+        )?;
+        self.subscriptions
+            .lock()
+            .unwrap()
+            .insert(consumer_tag.clone(), Subscription::Task { consumer_tag: consumer_tag.clone() });
+        Ok(consumer_tag)
+    }
+
+    fn remove_task_subscriber(&self, subscription_id: &str) -> Result<()> {
+        let sub = self.subscriptions.lock().unwrap().remove(subscription_id);
+        match sub {
+            Some(Subscription::Task { consumer_tag }) => self.conn.cancel(&consumer_tag),
+            _ => Err(Error::Broker(format!("no task subscription '{subscription_id}'"))),
+        }
+    }
+
+    fn rpc_send(&self, recipient_id: &str, msg: Value) -> Result<KiwiFuture<Value>> {
+        let (corr, future) = self.register_pending();
+        let res = self.conn.request(&ClientRequest::Publish {
+            exchange: self.config.rpc_exchange.clone(),
+            routing_key: recipient_id.to_string(),
+            body: Arc::new(msg),
+            props: MessageProps {
+                correlation_id: Some(corr.clone()),
+                reply_to: Some(self.reply_queue.clone()),
+                ..Default::default()
+            },
+            mandatory: true, // nobody listening -> UnroutableMessage
+        });
+        if let Err(e) = res {
+            self.shared.pending.lock().unwrap().remove(&corr);
+            return Err(e);
+        }
+        Ok(future)
+    }
+
+    fn add_rpc_subscriber(&self, identifier: &str, mut handler: RpcHandler) -> Result<()> {
+        let mut rpc_ids = self.rpc_ids.lock().unwrap();
+        if rpc_ids.contains_key(identifier) {
+            return Err(Error::DuplicateSubscriber(identifier.to_string()));
+        }
+        let queue = unique_id(&format!("rpc.{identifier}"));
+        self.conn.request(&ClientRequest::QueueDeclare {
+            queue: queue.clone(),
+            options: QueueOptions { exclusive: true, ..Default::default() },
+        })?;
+        self.conn.request(&ClientRequest::Bind {
+            exchange: self.config.rpc_exchange.clone(),
+            queue: queue.clone(),
+            routing_key: identifier.to_string(),
+        })?;
+        let consumer_tag = unique_id("rpcc");
+        let conn = Arc::clone(&self.conn);
+        self.conn.consume(
+            &queue,
+            &consumer_tag,
+            0,
+            Box::new(move |d| {
+                let result = handler((*d.body).clone());
+                if let (Some(rq), Some(corr)) =
+                    (d.props.reply_to.clone(), d.props.correlation_id.clone())
+                {
+                    conn.send_noreply(&ClientRequest::Publish {
+                        exchange: String::new(),
+                        routing_key: rq,
+                        body: Arc::new(encode_reply(&result)),
+                        props: MessageProps { correlation_id: Some(corr), ..Default::default() },
+                        mandatory: false,
+                    })
+                    .ok();
+                }
+                conn.ack(d.delivery_tag).ok();
+            }),
+        )?;
+        rpc_ids.insert(
+            identifier.to_string(),
+            Subscription::Rpc { consumer_tag, queue },
+        );
+        Ok(())
+    }
+
+    fn remove_rpc_subscriber(&self, identifier: &str) -> Result<()> {
+        let sub = self.rpc_ids.lock().unwrap().remove(identifier);
+        match sub {
+            Some(Subscription::Rpc { consumer_tag, queue }) => {
+                self.conn.cancel(&consumer_tag)?;
+                self.conn.request(&ClientRequest::QueueDelete { queue })?;
+                Ok(())
+            }
+            _ => Err(Error::Broker(format!("no rpc subscriber '{identifier}'"))),
+        }
+    }
+
+    fn broadcast_send(
+        &self,
+        body: Value,
+        sender: Option<&str>,
+        subject: Option<&str>,
+    ) -> Result<()> {
+        let msg = BroadcastMessage {
+            body,
+            sender: sender.map(String::from),
+            subject: subject.map(String::from),
+            correlation_id: None,
+        };
+        // Broadcasts are fire-and-forget by definition; never wait for a
+        // confirm (§Perf: halves the E3 sender-side cost).
+        self.conn.send_noreply(&ClientRequest::Publish {
+            exchange: self.config.broadcast_exchange.clone(),
+            routing_key: subject.unwrap_or("").to_string(),
+            body: Arc::new(msg.to_value()),
+            props: MessageProps::default(),
+            mandatory: false, // zero subscribers is fine
+        })?;
+        Ok(())
+    }
+
+    fn add_broadcast_subscriber(
+        &self,
+        filter: BroadcastFilter,
+        mut handler: BroadcastHandler,
+    ) -> Result<String> {
+        let queue = unique_id("bc");
+        self.conn.request(&ClientRequest::QueueDeclare {
+            queue: queue.clone(),
+            options: QueueOptions { exclusive: true, ..Default::default() },
+        })?;
+        self.conn.request(&ClientRequest::Bind {
+            exchange: self.config.broadcast_exchange.clone(),
+            queue: queue.clone(),
+            routing_key: "".to_string(),
+        })?;
+        let consumer_tag = unique_id("bcc");
+        let conn = Arc::clone(&self.conn);
+        self.conn.consume(
+            &queue,
+            &consumer_tag,
+            0,
+            Box::new(move |d| {
+                conn.ack(d.delivery_tag).ok();
+                match BroadcastMessage::from_value(&d.body) {
+                    Ok(msg) => {
+                        if filter.matches(&msg) {
+                            handler(msg);
+                        }
+                    }
+                    Err(e) => log::warn!("broadcast: undecodable message: {e}"),
+                }
+            }),
+        )?;
+        let sub_id = unique_id("bcsub");
+        self.subscriptions
+            .lock()
+            .unwrap()
+            .insert(sub_id.clone(), Subscription::Broadcast { consumer_tag, queue });
+        Ok(sub_id)
+    }
+
+    fn remove_broadcast_subscriber(&self, subscription_id: &str) -> Result<()> {
+        let sub = self.subscriptions.lock().unwrap().remove(subscription_id);
+        match sub {
+            Some(Subscription::Broadcast { consumer_tag, queue }) => {
+                self.conn.cancel(&consumer_tag)?;
+                self.conn.request(&ClientRequest::QueueDelete { queue })?;
+                Ok(())
+            }
+            _ => Err(Error::Broker(format!("no broadcast subscription '{subscription_id}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::InprocBroker;
+
+    fn comm(broker: &InprocBroker) -> RmqCommunicator {
+        RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn task_roundtrip_with_result() {
+        let broker = InprocBroker::new();
+        let worker = comm(&broker);
+        let client = comm(&broker);
+        worker
+            .task_queue(
+                "sq",
+                1,
+                Box::new(|task, ctx| {
+                    let x = task.get_i64("x").unwrap();
+                    ctx.complete(Ok(Value::map([("y", Value::I64(x * x))])));
+                }),
+            )
+            .unwrap();
+        let fut = client.task_send("sq", Value::map([("x", Value::I64(7))])).unwrap();
+        let result = fut.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(result.get_i64("y").unwrap(), 49);
+    }
+
+    #[test]
+    fn tasks_distributed_across_workers() {
+        let broker = InprocBroker::new();
+        let client = comm(&broker);
+        let w1 = comm(&broker);
+        let w2 = comm(&broker);
+        let make_handler = |name: &'static str| -> TaskHandler {
+            Box::new(move |_task, ctx| {
+                ctx.complete(Ok(Value::str(name)));
+            })
+        };
+        w1.task_queue("work", 1, make_handler("w1")).unwrap();
+        w2.task_queue("work", 1, make_handler("w2")).unwrap();
+        let futs: Vec<_> =
+            (0..10).map(|i| client.task_send("work", Value::I64(i)).unwrap()).collect();
+        let mut counts = std::collections::HashMap::new();
+        for f in futs {
+            let who = f.wait(Duration::from_secs(5)).unwrap();
+            *counts.entry(who.as_str().unwrap().to_string()).or_insert(0) += 1;
+        }
+        assert_eq!(counts["w1"] + counts["w2"], 10);
+        assert!(counts["w1"] > 0 && counts["w2"] > 0, "both workers should get tasks: {counts:?}");
+    }
+
+    #[test]
+    fn task_handler_error_propagates_to_sender() {
+        let broker = InprocBroker::new();
+        let worker = comm(&broker);
+        let client = comm(&broker);
+        worker
+            .task_queue(
+                "fail",
+                1,
+                Box::new(|_task, ctx| {
+                    ctx.complete(Err(Error::RemoteException("task blew up".into())));
+                }),
+            )
+            .unwrap();
+        let fut = client.task_send("fail", Value::Null).unwrap();
+        match fut.wait(Duration::from_secs(5)) {
+            Err(Error::RemoteException(m)) => assert!(m.contains("task blew up")),
+            other => panic!("expected remote exception, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rpc_roundtrip() {
+        let broker = InprocBroker::new();
+        let server = comm(&broker);
+        let client = comm(&broker);
+        server
+            .add_rpc_subscriber(
+                "proc-42",
+                Box::new(|msg| {
+                    assert_eq!(msg.as_str().unwrap(), "pause");
+                    Ok(Value::str("paused"))
+                }),
+            )
+            .unwrap();
+        let reply = client
+            .rpc_send("proc-42", Value::str("pause"))
+            .unwrap()
+            .wait(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(reply, Value::str("paused"));
+    }
+
+    #[test]
+    fn rpc_to_nobody_is_unroutable() {
+        let broker = InprocBroker::new();
+        let client = comm(&broker);
+        match client.rpc_send("ghost", Value::Null) {
+            Err(Error::UnroutableMessage(_)) => {}
+            Err(other) => panic!("expected unroutable, got {other:?}"),
+            Ok(_) => panic!("expected unroutable, got a future"),
+        }
+    }
+
+    #[test]
+    fn rpc_handler_error_propagates() {
+        let broker = InprocBroker::new();
+        let server = comm(&broker);
+        let client = comm(&broker);
+        server
+            .add_rpc_subscriber(
+                "x",
+                Box::new(|_| Err(Error::InvalidStateTransition {
+                    from: "finished".into(),
+                    event: "play".into(),
+                })),
+            )
+            .unwrap();
+        let res = client.rpc_send("x", Value::Null).unwrap().wait(Duration::from_secs(5));
+        assert!(matches!(res, Err(Error::RemoteException(_))));
+    }
+
+    #[test]
+    fn duplicate_rpc_subscriber_rejected() {
+        let broker = InprocBroker::new();
+        let server = comm(&broker);
+        server.add_rpc_subscriber("id", Box::new(|_| Ok(Value::Null))).unwrap();
+        assert!(matches!(
+            server.add_rpc_subscriber("id", Box::new(|_| Ok(Value::Null))),
+            Err(Error::DuplicateSubscriber(_))
+        ));
+    }
+
+    #[test]
+    fn remove_rpc_subscriber_makes_unroutable() {
+        let broker = InprocBroker::new();
+        let server = comm(&broker);
+        let client = comm(&broker);
+        server.add_rpc_subscriber("temp", Box::new(|_| Ok(Value::Null))).unwrap();
+        client.rpc_send("temp", Value::Null).unwrap().wait(Duration::from_secs(5)).unwrap();
+        server.remove_rpc_subscriber("temp").unwrap();
+        assert!(matches!(
+            client.rpc_send("temp", Value::Null),
+            Err(Error::UnroutableMessage(_))
+        ));
+    }
+
+    #[test]
+    fn broadcast_reaches_all_subscribers() {
+        let broker = InprocBroker::new();
+        let sender = comm(&broker);
+        let sub1 = comm(&broker);
+        let sub2 = comm(&broker);
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        sub1.add_broadcast_subscriber(
+            BroadcastFilter::all(),
+            Box::new(move |m| tx1.send(m).unwrap()),
+        )
+        .unwrap();
+        sub2.add_broadcast_subscriber(
+            BroadcastFilter::all(),
+            Box::new(move |m| tx2.send(m).unwrap()),
+        )
+        .unwrap();
+        sender.broadcast_send(Value::str("hello"), Some("me"), Some("greeting")).unwrap();
+        let m1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        let m2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(m1.body, Value::str("hello"));
+        assert_eq!(m2.subject.as_deref(), Some("greeting"));
+    }
+
+    #[test]
+    fn broadcast_filter_applied() {
+        let broker = InprocBroker::new();
+        let sender = comm(&broker);
+        let sub = comm(&broker);
+        let (tx, rx) = std::sync::mpsc::channel();
+        sub.add_broadcast_subscriber(
+            BroadcastFilter::all().subject("state.*.finished"),
+            Box::new(move |m| tx.send(m).unwrap()),
+        )
+        .unwrap();
+        sender.broadcast_send(Value::I64(1), None, Some("state.7.running")).unwrap();
+        sender.broadcast_send(Value::I64(2), None, Some("state.7.finished")).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.body, Value::I64(2), "filtered-out message must not arrive first");
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+    }
+
+    #[test]
+    fn broadcast_to_nobody_is_fine() {
+        let broker = InprocBroker::new();
+        let sender = comm(&broker);
+        sender.broadcast_send(Value::Null, None, None).unwrap();
+    }
+
+    #[test]
+    fn remove_broadcast_subscriber_stops_delivery() {
+        let broker = InprocBroker::new();
+        let sender = comm(&broker);
+        let sub = comm(&broker);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = sub
+            .add_broadcast_subscriber(
+                BroadcastFilter::all(),
+                Box::new(move |m| tx.send(m).unwrap()),
+            )
+            .unwrap();
+        sender.broadcast_send(Value::I64(1), None, None).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        sub.remove_broadcast_subscriber(&id).unwrap();
+        sender.broadcast_send(Value::I64(2), None, None).unwrap();
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+    }
+
+    #[test]
+    fn worker_death_requeues_task_to_survivor() {
+        // The paper's §I.A claim, at the communicator level.
+        let broker = InprocBroker::new();
+        let client = comm(&broker);
+        // Worker 1 takes the task and "crashes" (never acks, connection drops).
+        let doomed = comm(&broker);
+        let (got_tx, got_rx) = std::sync::mpsc::channel();
+        doomed
+            .task_queue(
+                "fragile",
+                1,
+                Box::new(move |_t, _ctx| {
+                    // Deliberately leak the context without completing:
+                    // simulates a crash mid-task. (Dropping ctx without
+                    // complete leaves the message unacked.)
+                    got_tx.send(()).unwrap();
+                }),
+            )
+            .unwrap();
+        let fut = client.task_send("fragile", Value::str("survive-me")).unwrap();
+        got_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // Kill the doomed worker abruptly.
+        drop(doomed);
+        // A healthy worker arrives and completes the requeued task.
+        let survivor = comm(&broker);
+        survivor
+            .task_queue(
+                "fragile",
+                1,
+                Box::new(|t, ctx| {
+                    ctx.complete(Ok(t));
+                }),
+            )
+            .unwrap();
+        let result = fut.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(result, Value::str("survive-me"));
+    }
+}

@@ -1,0 +1,218 @@
+//! Configuration: one JSON file (`kiwi.json`) + `KIWI_*` env overrides.
+//! Every deployable component (broker, worker, submit, ctl) reads the same
+//! config so a deployment is a single file.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::broker::persistence::SyncPolicy;
+use crate::error::{Error, Result};
+use crate::wire::{json, Value};
+
+/// Process-wide configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Broker bind / connect address.
+    pub broker_addr: String,
+    /// Client heartbeat interval (ms); 0 disables.
+    pub heartbeat_ms: u64,
+    /// Daemon worker threads.
+    pub workers: usize,
+    /// Task queue name.
+    pub task_queue: String,
+    /// AOT artifacts directory.
+    pub artifacts_dir: PathBuf,
+    /// Checkpoint directory.
+    pub checkpoint_dir: PathBuf,
+    /// WAL path for durable queues (None = transient broker).
+    pub wal_path: Option<PathBuf>,
+    /// WAL sync policy.
+    pub sync_policy: SyncPolicy,
+    /// Blocking-call timeout.
+    pub request_timeout: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            broker_addr: "127.0.0.1:5672".into(),
+            heartbeat_ms: 600_000 / 100, // 6 s, AMQP-ish default scaled down
+            workers: 4,
+            task_queue: crate::workflow::launcher::DEFAULT_TASK_QUEUE.into(),
+            artifacts_dir: "artifacts".into(),
+            checkpoint_dir: ".kiwi/checkpoints".into(),
+            wal_path: Some(".kiwi/broker.wal".into()),
+            sync_policy: SyncPolicy::EveryN(64),
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+fn sync_policy_from(v: &Value) -> Result<SyncPolicy> {
+    match v {
+        Value::Str(s) if s == "always" => Ok(SyncPolicy::Always),
+        Value::Str(s) if s == "os" => Ok(SyncPolicy::Os),
+        Value::Map(_) => Ok(SyncPolicy::EveryN(v.get_u64("every_n")? as u32)),
+        other => Err(Error::Config(format!("bad sync_policy: {other}"))),
+    }
+}
+
+fn sync_policy_to(p: SyncPolicy) -> Value {
+    match p {
+        SyncPolicy::Always => Value::str("always"),
+        SyncPolicy::Os => Value::str("os"),
+        SyncPolicy::EveryN(n) => Value::map([("every_n", Value::from(n as u64))]),
+    }
+}
+
+impl Config {
+    /// Parse from a JSON value (absent fields keep defaults).
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut c = Config::default();
+        if let Some(x) = v.get_opt("broker_addr") {
+            c.broker_addr = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get_opt("heartbeat_ms") {
+            c.heartbeat_ms = x.as_u64()?;
+        }
+        if let Some(x) = v.get_opt("workers") {
+            c.workers = x.as_u64()? as usize;
+        }
+        if let Some(x) = v.get_opt("task_queue") {
+            c.task_queue = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get_opt("artifacts_dir") {
+            c.artifacts_dir = PathBuf::from(x.as_str()?);
+        }
+        if let Some(x) = v.get_opt("checkpoint_dir") {
+            c.checkpoint_dir = PathBuf::from(x.as_str()?);
+        }
+        if let Some(x) = v.get_opt("wal_path") {
+            c.wal_path = Some(PathBuf::from(x.as_str()?));
+        }
+        if v.get_opt("transient").map(|x| x.as_bool()).transpose()?.unwrap_or(false) {
+            c.wal_path = None;
+        }
+        if let Some(x) = v.get_opt("sync_policy") {
+            c.sync_policy = sync_policy_from(x)?;
+        }
+        if let Some(x) = v.get_opt("request_timeout_ms") {
+            c.request_timeout = Duration::from_millis(x.as_u64()?);
+        }
+        Ok(c)
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::map([
+            ("broker_addr", Value::str(&self.broker_addr)),
+            ("heartbeat_ms", Value::from(self.heartbeat_ms)),
+            ("workers", Value::from(self.workers)),
+            ("task_queue", Value::str(&self.task_queue)),
+            ("artifacts_dir", Value::str(self.artifacts_dir.to_string_lossy())),
+            ("checkpoint_dir", Value::str(self.checkpoint_dir.to_string_lossy())),
+            (
+                "wal_path",
+                self.wal_path.as_ref().map(|p| p.to_string_lossy().to_string()).into(),
+            ),
+            ("transient", Value::Bool(self.wal_path.is_none())),
+            ("sync_policy", sync_policy_to(self.sync_policy)),
+            (
+                "request_timeout_ms",
+                Value::from(self.request_timeout.as_millis() as u64),
+            ),
+        ])
+    }
+
+    /// Load from a file, if it exists, then apply env overrides.
+    pub fn load(path: Option<&Path>) -> Result<Self> {
+        let mut c = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| Error::Config(format!("cannot read {p:?}: {e}")))?;
+                Config::from_value(&json::from_str(&text)?)?
+            }
+            None => {
+                let default_path = Path::new("kiwi.json");
+                if default_path.exists() {
+                    let text = std::fs::read_to_string(default_path)?;
+                    Config::from_value(&json::from_str(&text)?)?
+                } else {
+                    Config::default()
+                }
+            }
+        };
+        c.apply_env();
+        Ok(c)
+    }
+
+    /// `KIWI_BROKER_ADDR`, `KIWI_WORKERS`, `KIWI_HEARTBEAT_MS`,
+    /// `KIWI_ARTIFACTS_DIR`, `KIWI_CHECKPOINT_DIR` override the file.
+    pub fn apply_env(&mut self) {
+        if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
+            self.broker_addr = v;
+        }
+        if let Ok(v) = std::env::var("KIWI_WORKERS") {
+            if let Ok(n) = v.parse() {
+                self.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_HEARTBEAT_MS") {
+            if let Ok(n) = v.parse() {
+                self.heartbeat_ms = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_ARTIFACTS_DIR") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Ok(v) = std::env::var("KIWI_CHECKPOINT_DIR") {
+            self.checkpoint_dir = PathBuf::from(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_through_json() {
+        let c = Config::default();
+        let text = json::to_string(&c.to_value());
+        let back = Config::from_value(&json::from_str(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let v = json::from_str(r#"{"workers": 16}"#).unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.workers, 16);
+        assert_eq!(c.broker_addr, Config::default().broker_addr);
+    }
+
+    #[test]
+    fn transient_clears_wal() {
+        let v = json::from_str(r#"{"transient": true}"#).unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert!(c.wal_path.is_none());
+    }
+
+    #[test]
+    fn sync_policies_parse() {
+        for (text, want) in [
+            (r#"{"sync_policy": "always"}"#, SyncPolicy::Always),
+            (r#"{"sync_policy": "os"}"#, SyncPolicy::Os),
+            (r#"{"sync_policy": {"every_n": 8}}"#, SyncPolicy::EveryN(8)),
+        ] {
+            let c = Config::from_value(&json::from_str(text).unwrap()).unwrap();
+            assert_eq!(c.sync_policy, want);
+        }
+        assert!(Config::from_value(&json::from_str(r#"{"sync_policy": 5}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn bad_file_is_config_error() {
+        let err = Config::load(Some(Path::new("/definitely/not/here.json"))).unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+}

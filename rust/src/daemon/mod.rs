@@ -1,0 +1,10 @@
+//! The daemon: AiiDA's worker processes. Consumes the task queue through a
+//! communicator, runs each process on a worker-pool thread, and survives
+//! both graceful and abrupt shutdown — in the abrupt case the broker
+//! requeues its unacked tasks to the surviving workers (§I.A).
+
+pub mod pool;
+pub mod worker;
+
+pub use pool::WorkerPool;
+pub use worker::{Daemon, DaemonConfig};

@@ -1,0 +1,144 @@
+//! A fixed-size worker pool (no rayon offline; ~60 lines is all we need).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// Fixed pool of worker threads fed by a shared queue.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize, name: &str) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size.max(1))
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only while receiving.
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                // Job panics are isolated: the Runner
+                                // already catches step panics; this guards
+                                // everything else.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    /// Submit a job. Errors only after shutdown.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<(), ()> {
+        match &self.tx {
+            Some(tx) => tx.send(Box::new(job)).map_err(|_| ()),
+            None => Err(()),
+        }
+    }
+
+    /// A detached submit handle (owning clone of the job channel). Note:
+    /// an outstanding sender keeps pool threads alive past `drop`, but
+    /// `shutdown`/`Drop` still join after all senders are gone.
+    pub fn sender(&self) -> Sender<Job> {
+        self.tx.as_ref().expect("pool already shut down").clone()
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Graceful shutdown: finish queued jobs, then join.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // closing the channel ends the workers
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Abrupt semantics: close the job channel and DETACH. Workers
+        // finish their current job in the background and exit; nothing
+        // waits on them. This models a killed daemon — in-flight broker
+        // messages stay unacked and get requeued. Use `shutdown()` for the
+        // graceful join.
+        self.tx.take();
+        self.workers.drain(..);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn all_jobs_run() {
+        let pool = WorkerPool::new(4, "t");
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&count);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = WorkerPool::new(4, "t");
+        let (tx, rx) = channel();
+        for _ in 0..4 {
+            let tx = tx.clone();
+            pool.submit(move || {
+                tx.send(()).unwrap();
+                std::thread::sleep(Duration::from_millis(100));
+            })
+            .unwrap();
+        }
+        // All four must start within much less than 4 × 100 ms.
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool() {
+        let pool = WorkerPool::new(1, "t");
+        pool.submit(|| panic!("boom")).unwrap();
+        let (tx, rx) = channel();
+        pool.submit(move || tx.send(42).unwrap()).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 42);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn min_one_worker() {
+        let pool = WorkerPool::new(0, "t");
+        assert_eq!(pool.size(), 1);
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,243 @@
+//! The daemon proper: one communicator, one worker pool, one task-queue
+//! subscription with `prefetch = pool size` — the broker never hands a
+//! worker more processes than it has threads, so work distributes evenly
+//! across daemons (AiiDA runs the same prefetch policy).
+
+use std::sync::Arc;
+
+use crate::communicator::{Communicator, TaskHandler};
+use crate::daemon::pool::WorkerPool;
+use crate::error::Result;
+use crate::wire::Value;
+use crate::workflow::checkpoint::CheckpointStore;
+use crate::workflow::launcher::{ProcessLauncher, DEFAULT_TASK_QUEUE};
+use crate::workflow::registry::ProcessRegistry;
+
+/// Daemon tuning.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Worker threads = max concurrent processes on this daemon.
+    pub workers: usize,
+    /// Task queue to consume.
+    pub task_queue: String,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig { workers: 4, task_queue: DEFAULT_TASK_QUEUE.into() }
+    }
+}
+
+/// A running daemon. Dropping it is an *abrupt* shutdown (unacked tasks
+/// requeue); [`Daemon::shutdown`] is the graceful path (drains the pool).
+pub struct Daemon {
+    comm: Arc<dyn Communicator>,
+    subscription: String,
+    pool: Option<WorkerPool>,
+}
+
+impl Daemon {
+    /// Start consuming tasks.
+    pub fn start(
+        comm: Arc<dyn Communicator>,
+        store: Arc<dyn CheckpointStore>,
+        registry: ProcessRegistry,
+        config: DaemonConfig,
+    ) -> Result<Self> {
+        let pool = WorkerPool::new(config.workers, "kiwi-daemon");
+        let launcher = Arc::new(ProcessLauncher::with_queue(
+            Arc::clone(&comm),
+            store,
+            registry,
+            &config.task_queue,
+        ));
+        let handler: TaskHandler = {
+            let launcher = Arc::clone(&launcher);
+            // The communicator invokes this on its communication thread;
+            // we immediately punt to the pool so the thread stays free for
+            // heartbeats, acks and further deliveries.
+            let pool_tx = pool_sender(&pool);
+            Box::new(move |task: Value, ctx| {
+                let launcher = Arc::clone(&launcher);
+                if pool_tx(Box::new(move || launcher.handle_task(task, ctx))).is_err() {
+                    log::warn!("daemon: pool gone; task will be requeued by broker");
+                }
+            })
+        };
+        let subscription =
+            comm.task_queue(&config.task_queue, config.workers as u32, handler)?;
+        Ok(Daemon { comm, subscription, pool: Some(pool) })
+    }
+
+    /// Graceful shutdown (paper §I.A: "gracefully or abruptly shut down and
+    /// no task will be lost"): stop consuming, finish in-flight processes.
+    pub fn shutdown(mut self) {
+        self.comm.remove_task_subscriber(&self.subscription).ok();
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+    }
+}
+
+type PoolSender = Box<dyn Fn(Box<dyn FnOnce() + Send>) -> std::result::Result<(), ()> + Send>;
+
+fn pool_sender(pool: &WorkerPool) -> PoolSender {
+    // WorkerPool::submit borrows the pool; we need a handle the closure can
+    // own. Clone the underlying channel sender.
+    let tx = pool.sender();
+    Box::new(move |job| tx.send(job).map_err(|_| ()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::InprocBroker;
+    use crate::communicator::{RmqCommunicator, RmqConfig};
+    use crate::wire::Value;
+    use crate::workflow::checkpoint::MemoryCheckpointStore;
+    use crate::workflow::process::{ProcessLogic, StepContext, StepOutcome};
+    use crate::workflow::RemoteLauncher;
+    use std::time::Duration;
+
+    struct Doubler {
+        x: i64,
+    }
+    impl ProcessLogic for Doubler {
+        fn step(&mut self, _: u32, _: &mut StepContext) -> crate::error::Result<StepOutcome> {
+            Ok(StepOutcome::Finish(Value::map([("doubled", Value::I64(self.x * 2))])))
+        }
+        fn save_state(&self) -> Value {
+            Value::map([("x", Value::I64(self.x))])
+        }
+        fn load_state(&mut self, state: &Value) -> crate::error::Result<()> {
+            self.x = match state.get_opt("inputs") {
+                Some(inputs) => inputs.get_i64("x")?,
+                None => state.get_i64("x")?,
+            };
+            Ok(())
+        }
+    }
+
+    fn registry() -> ProcessRegistry {
+        let r = ProcessRegistry::new();
+        r.register("doubler", || Box::new(Doubler { x: 0 }));
+        r
+    }
+
+    #[test]
+    fn daemon_executes_launched_processes() {
+        let broker = InprocBroker::new();
+        let worker_comm: Arc<dyn Communicator> = Arc::new(
+            RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap(),
+        );
+        let client_comm: Arc<dyn Communicator> = Arc::new(
+            RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap(),
+        );
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        let daemon = Daemon::start(
+            Arc::clone(&worker_comm),
+            store,
+            registry(),
+            DaemonConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        let launcher = RemoteLauncher::new(Arc::clone(&client_comm));
+        let futs: Vec<_> = (0..6)
+            .map(|i| {
+                launcher
+                    .launch("doubler", Value::map([("x", Value::I64(i))]))
+                    .unwrap()
+                    .1
+            })
+            .collect();
+        for (i, f) in futs.into_iter().enumerate() {
+            let record = f.wait(Duration::from_secs(10)).unwrap();
+            assert_eq!(record.get_str("state").unwrap(), "finished");
+            assert_eq!(
+                record.get("outputs").unwrap().get_i64("doubled").unwrap(),
+                (i as i64) * 2
+            );
+        }
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn abrupt_daemon_death_requeues_to_survivor() {
+        // The paper's core §I.A claim at the full-stack level: kill a
+        // daemon mid-task, watch the task finish elsewhere.
+        let broker = InprocBroker::new();
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+
+        // A process type that stalls until a file "release" flag appears —
+        // lets us control when workers can finish.
+        struct Stall {
+            release: Arc<std::sync::atomic::AtomicBool>,
+        }
+        impl ProcessLogic for Stall {
+            fn step(&mut self, _: u32, _: &mut StepContext) -> crate::error::Result<StepOutcome> {
+                if self.release.load(std::sync::atomic::Ordering::Relaxed) {
+                    Ok(StepOutcome::Finish(Value::str("done")))
+                } else {
+                    Ok(StepOutcome::Wait(crate::workflow::process::WaitCondition::Timer(
+                        Duration::from_millis(20),
+                    )))
+                }
+            }
+            fn save_state(&self) -> Value {
+                Value::Null
+            }
+            fn load_state(&mut self, _: &Value) -> crate::error::Result<()> {
+                Ok(())
+            }
+        }
+
+        let release = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let reg = ProcessRegistry::new();
+        {
+            let release = Arc::clone(&release);
+            reg.register("stall", move || Box::new(Stall { release: Arc::clone(&release) }));
+        }
+
+        let doomed_typed =
+            Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+        let doomed_comm: Arc<dyn Communicator> = Arc::clone(&doomed_typed) as _;
+        let doomed = Daemon::start(
+            Arc::clone(&doomed_comm),
+            Arc::clone(&store),
+            reg.clone(),
+            DaemonConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+
+        let client_comm: Arc<dyn Communicator> = Arc::new(
+            RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap(),
+        );
+        let launcher = RemoteLauncher::new(Arc::clone(&client_comm));
+        let (_pid, fut) = launcher.launch("stall", Value::Null).unwrap();
+
+        // Give the doomed daemon time to pick the task up, then kill it
+        // abruptly: sever its broker connection with the task unacked
+        // (the in-process equivalent of `kill -9`).
+        std::thread::sleep(Duration::from_millis(200));
+        doomed_typed.close();
+        drop(doomed); // detaches the stalled worker thread
+
+        // Second daemon; release the stall so it can finish.
+        release.store(true, std::sync::atomic::Ordering::Relaxed);
+        let survivor_comm: Arc<dyn Communicator> = Arc::new(
+            RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap(),
+        );
+        let survivor = Daemon::start(
+            Arc::clone(&survivor_comm),
+            Arc::clone(&store),
+            reg,
+            DaemonConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+
+        let record = fut.wait(Duration::from_secs(10)).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        survivor.shutdown();
+    }
+}

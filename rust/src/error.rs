@@ -1,0 +1,129 @@
+//! Unified error type for the whole stack.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error type.
+///
+/// Variants are grouped by layer so call sites can match on the class of
+/// failure (wire corruption vs. broker refusal vs. timeout) without tracking
+/// dozens of concrete types.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed frame / codec data on the wire.
+    Wire(String),
+    /// Broker-side refusal (unknown queue, exclusive violation, ...).
+    Broker(String),
+    /// Transport-level I/O failure (socket closed, connect refused, ...).
+    Io(std::io::Error),
+    /// The remote side for an RPC / task does not exist.
+    UnroutableMessage(String),
+    /// An RPC handler raised an application error (the remote error text).
+    RemoteException(String),
+    /// A blocking wait ran out of time.
+    Timeout(String),
+    /// The communicator / connection has been closed.
+    Closed(String),
+    /// A duplicate identifier (subscriber id, queue name, ...).
+    DuplicateSubscriber(String),
+    /// Checkpoint / bundle (de)serialisation failure.
+    Persistence(String),
+    /// Workflow state machine violation (e.g. play on a finished process).
+    InvalidStateTransition { from: String, event: String },
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Configuration / CLI error.
+    Config(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Wire(m) => write!(f, "wire error: {m}"),
+            Error::Broker(m) => write!(f, "broker error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::UnroutableMessage(m) => write!(f, "unroutable message: {m}"),
+            Error::RemoteException(m) => write!(f, "remote exception: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Closed(m) => write!(f, "closed: {m}"),
+            Error::DuplicateSubscriber(m) => write!(f, "duplicate subscriber: {m}"),
+            Error::Persistence(m) => write!(f, "persistence error: {m}"),
+            Error::InvalidStateTransition { from, event } => {
+                write!(f, "invalid state transition: event '{event}' in state '{from}'")
+            }
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// True when retrying the operation against a live connection may
+    /// succeed (transport-level failures), false for logical errors.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Io(_) | Error::Timeout(_) | Error::Closed(_))
+    }
+
+    /// Short machine-readable code used on the wire when shipping errors
+    /// back to a remote peer.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::Wire(_) => "wire",
+            Error::Broker(_) => "broker",
+            Error::Io(_) => "io",
+            Error::UnroutableMessage(_) => "unroutable",
+            Error::RemoteException(_) => "remote-exception",
+            Error::Timeout(_) => "timeout",
+            Error::Closed(_) => "closed",
+            Error::DuplicateSubscriber(_) => "duplicate-subscriber",
+            Error::Persistence(_) => "persistence",
+            Error::InvalidStateTransition { .. } => "invalid-transition",
+            Error::Runtime(_) => "runtime",
+            Error::Config(_) => "config",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_message() {
+        let e = Error::Broker("no such queue 'tasks'".into());
+        assert!(e.to_string().contains("no such queue"));
+    }
+
+    #[test]
+    fn io_errors_are_retryable() {
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "x"));
+        assert!(e.is_retryable());
+        assert!(!Error::Wire("bad tag".into()).is_retryable());
+    }
+
+    #[test]
+    fn codes_are_stable() {
+        assert_eq!(Error::Timeout("t".into()).code(), "timeout");
+        assert_eq!(
+            Error::InvalidStateTransition { from: "finished".into(), event: "play".into() }.code(),
+            "invalid-transition"
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! # kiwi-rs
+//!
+//! Robust, high-volume messaging for big-data and computational science
+//! workflows — a Rust reproduction of the system described in
+//! *“kiwiPy: Robust, high-volume, messaging for big-data and computational
+//! science workflows”* (Uhrin & Huber, JOSS 2020).
+//!
+//! kiwiPy exposes three message types — **task queues**, **Remote Procedure
+//! Calls** and **broadcasts** — through a single [`communicator::Communicator`],
+//! backed by a message broker. This crate rebuilds the complete stack:
+//!
+//! * [`broker`] — a RabbitMQ-equivalent broker (exchanges, queues, acks,
+//!   redelivery, prefetch, TTL, priorities, heartbeat eviction, durable
+//!   queues via a write-ahead log, TCP server and in-process transport).
+//! * [`communicator`] — the kiwiPy API: `task_send`, `rpc_send`,
+//!   `broadcast_send` and their subscriber counterparts, with thread-backed
+//!   futures and a hidden communication thread.
+//! * [`workflow`] — an AiiDA/plumpy-style process engine: state machine,
+//!   checkpoints, pause/play/kill over RPC, parent⇄child decoupling via
+//!   broadcasts.
+//! * [`daemon`] — the worker pool that consumes the task queue.
+//! * [`runtime`] — a PJRT executor that loads AOT-compiled JAX/Pallas
+//!   computations (`artifacts/*.hlo.txt`) and runs them as task payloads.
+//! * [`baseline`] — the polling-based queue the paper contrasts against.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod baseline;
+pub mod benchutil;
+pub mod broker;
+pub mod cli;
+pub mod communicator;
+pub mod config;
+pub mod daemon;
+pub mod error;
+pub mod metrics;
+pub mod payload;
+pub mod proputil;
+pub mod runtime;
+pub mod transport;
+pub mod wire;
+pub mod workflow;
+
+pub use error::{Error, Result};

@@ -1,0 +1,40 @@
+//! `kiwi` — the CLI entrypoint. See `kiwi help`.
+
+fn main() {
+    // Minimal env-driven logging (no env_logger offline): KIWI_LOG=debug.
+    if let Ok(level) = std::env::var("KIWI_LOG") {
+        let level = match level.as_str() {
+            "trace" => log::LevelFilter::Trace,
+            "debug" => log::LevelFilter::Debug,
+            "warn" => log::LevelFilter::Warn,
+            "error" => log::LevelFilter::Error,
+            _ => log::LevelFilter::Info,
+        };
+        log::set_logger(&StderrLogger).ok();
+        log::set_max_level(level);
+    }
+    let args = match kiwi::cli::Args::parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    std::process::exit(kiwi::cli::run(args));
+}
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5} {}] {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}

@@ -1,0 +1,258 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, fixed memory).
+//!
+//! Values are nanoseconds (or any u64 unit). Buckets are arranged as
+//! log2 major buckets × linear minor buckets, giving a bounded relative
+//! error of 1/SUB_BUCKETS (≈1.6% with 64 sub-buckets) across the full u64
+//! range with 64×64 = 4096 atomic slots.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const SUB_BITS: u32 = 6;
+const SUB_BUCKETS: usize = 1 << SUB_BITS; // 64
+const MAJORS: usize = 64;
+
+/// Fixed-size concurrent histogram.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let buckets = (0..MAJORS * SUB_BUCKETS).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        if value < SUB_BUCKETS as u64 {
+            return value as usize;
+        }
+        let major = 63 - value.leading_zeros() as usize; // floor(log2)
+        let shift = major as u32 - SUB_BITS;
+        let minor = ((value >> shift) as usize) & (SUB_BUCKETS - 1);
+        (major - SUB_BITS as usize + 1) * SUB_BUCKETS + minor
+    }
+
+    /// Representative (upper-bound) value of a bucket index.
+    fn bucket_value(idx: usize) -> u64 {
+        let major = idx / SUB_BUCKETS;
+        let minor = (idx % SUB_BUCKETS) as u64;
+        if major == 0 {
+            return minor;
+        }
+        let shift = major as u32 - 1;
+        ((SUB_BUCKETS as u64) + minor) << shift
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.buckets[Self::index(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+        self.min.fetch_min(value, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Value at quantile `q` in [0,1]: upper bound of the bucket containing
+    /// the q-th sample (relative error bounded by bucket width, ≈1.6%).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(idx).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Reset all buckets (not atomic across slots — callers quiesce first).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// One-line summary with common quantiles, values in the recorded unit.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0} min={} p50={} p90={} p99={} p999={} max={}",
+            self.count(),
+            self.mean(),
+            self.min(),
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.99),
+            self.quantile(0.999),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn exact_for_small_values() {
+        let h = Histogram::new();
+        for v in 0..SUB_BUCKETS as u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 64);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        // Small values are exact (one value per bucket).
+        assert_eq!(h.quantile(0.5), 31);
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        let h = Histogram::new();
+        let values: Vec<u64> = (0..10_000).map(|i| 1000 + i * 37).collect();
+        for &v in &values {
+            h.record(v);
+        }
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for &q in &[0.5, 0.9, 0.99] {
+            let exact = sorted[((q * sorted.len() as f64) as usize).min(sorted.len() - 1)];
+            let approx = h.quantile(q);
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.04, "q={q}: approx {approx} vs exact {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn mean_and_extremes_are_exact() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn prop_quantiles_monotone_and_bounded() {
+        run_prop("histogram quantiles", |rng: &Rng| {
+            let h = Histogram::new();
+            let n = rng.range(1, 500);
+            let mut max = 0u64;
+            let mut min = u64::MAX;
+            for _ in 0..n {
+                let v = rng.below(1 << rng.range(1, 40));
+                max = max.max(v);
+                min = min.min(v);
+                h.record(v);
+            }
+            let q50 = h.quantile(0.5);
+            let q90 = h.quantile(0.9);
+            let q100 = h.quantile(1.0);
+            assert!(q50 <= q90 && q90 <= q100);
+            assert!(q100 <= max);
+            assert_eq!(h.min(), min);
+            assert_eq!(h.max(), max);
+        });
+    }
+
+    #[test]
+    fn index_bucket_value_consistent() {
+        // bucket_value(index(v)) must be within one bucket width of v.
+        for shift in 0..63 {
+            for off in [0u64, 1, 3] {
+                let v = (1u64 << shift).saturating_add(off * (1 << shift) / 7);
+                let idx = Histogram::index(v);
+                let rep = Histogram::bucket_value(idx);
+                let width = (rep >> SUB_BITS).max(1);
+                assert!(
+                    rep <= v.saturating_add(width) && v <= rep.saturating_add(width),
+                    "v={v} idx={idx} rep={rep} width={width}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Lightweight metrics: atomic counters, gauges, log-bucketed latency
+//! histograms and a process-wide registry. Used by the broker, the
+//! communicator and the daemon; the bench harness reads the same
+//! histograms it reports.
+
+pub mod counter;
+pub mod histogram;
+pub mod registry;
+
+pub use counter::{Counter, Gauge};
+pub use histogram::Histogram;
+pub use registry::{Registry, Snapshot};

@@ -1,0 +1,189 @@
+//! Named metric registry with point-in-time snapshots.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{Counter, Gauge, Histogram};
+use crate::wire::Value;
+
+/// A registry of named metrics. Cloning shares the underlying metrics
+/// (cheap `Arc` clone), so components can register into a shared registry
+/// while the reporter reads from the same handle.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter with this name.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.counters.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create a gauge with this name.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.inner.gauges.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create a histogram with this name.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.inner.histograms.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())))
+    }
+
+    /// Capture a point-in-time snapshot of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let gauges = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let histograms = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    HistogramStats {
+                        count: h.count(),
+                        mean: h.mean(),
+                        min: h.min(),
+                        p50: h.quantile(0.5),
+                        p90: h.quantile(0.9),
+                        p99: h.quantile(0.99),
+                        max: h.max(),
+                    },
+                )
+            })
+            .collect();
+        Snapshot { counters, gauges, histograms }
+    }
+}
+
+/// Point-in-time statistics for one histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramStats {
+    pub count: u64,
+    pub mean: f64,
+    pub min: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+/// Point-in-time view of a registry; convertible to a [`Value`] for
+/// shipping over RPC (the broker answers `status` RPCs with this).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramStats>,
+}
+
+impl Snapshot {
+    pub fn to_value(&self) -> Value {
+        Value::map([
+            (
+                "counters",
+                Value::Map(self.counters.iter().map(|(k, v)| (k.clone(), Value::from(*v))).collect()),
+            ),
+            (
+                "gauges",
+                Value::Map(self.gauges.iter().map(|(k, v)| (k.clone(), Value::I64(*v))).collect()),
+            ),
+            (
+                "histograms",
+                Value::Map(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| {
+                            (
+                                k.clone(),
+                                Value::map([
+                                    ("count", Value::from(h.count)),
+                                    ("mean", Value::F64(h.mean)),
+                                    ("min", Value::from(h.min)),
+                                    ("p50", Value::from(h.p50)),
+                                    ("p90", Value::from(h.p90)),
+                                    ("p99", Value::from(h.p99)),
+                                    ("max", Value::from(h.max)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_same_metric() {
+        let r = Registry::new();
+        r.counter("msgs").inc();
+        r.counter("msgs").inc();
+        assert_eq!(r.counter("msgs").get(), 2);
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.gauge("depth").set(7);
+        assert_eq!(r2.gauge("depth").get(), 7);
+    }
+
+    #[test]
+    fn snapshot_captures_everything() {
+        let r = Registry::new();
+        r.counter("a").add(3);
+        r.gauge("b").set(-1);
+        r.histogram("c").record(100);
+        let s = r.snapshot();
+        assert_eq!(s.counters["a"], 3);
+        assert_eq!(s.gauges["b"], -1);
+        assert_eq!(s.histograms["c"].count, 1);
+    }
+
+    #[test]
+    fn snapshot_to_value_roundtrips_fields() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        r.histogram("h").record(42);
+        let v = r.snapshot().to_value();
+        assert_eq!(v.get("counters").unwrap().get_u64("x").unwrap(), 1);
+        assert_eq!(v.get("histograms").unwrap().get("h").unwrap().get_u64("count").unwrap(), 1);
+    }
+}

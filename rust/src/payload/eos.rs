@@ -1,0 +1,206 @@
+//! Equation-of-state fitting: the analysis step of the EOS workflow (the
+//! classic AiiDA tutorial workload). Fits `E(V)` samples with the
+//! Birch–Murnaghan 3rd-order form via a linear least-squares trick:
+//! BM3 is a cubic polynomial in `x = V^(-2/3)`, so the fit is exact
+//! linear algebra (4×4 normal equations, no iteration).
+
+use crate::error::{Error, Result};
+
+/// Result of an EOS fit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EosFit {
+    /// Equilibrium volume.
+    pub v0: f64,
+    /// Energy at equilibrium.
+    pub e0: f64,
+    /// Bulk modulus at equilibrium (same units as E/V).
+    pub b0: f64,
+    /// Residual sum of squares of the fit.
+    pub rss: f64,
+}
+
+/// Solve the 4×4 (or smaller) normal equations by Gaussian elimination
+/// with partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        if a[pivot][col].abs() < 1e-12 {
+            return Err(Error::Config("singular EOS fit matrix".into()));
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in (col + 1)..n {
+            let factor = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= factor * a[col][k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut sum = b[row];
+        for k in (row + 1)..n {
+            sum -= a[row][k] * x[k];
+        }
+        x[row] = sum / a[row][row];
+    }
+    Ok(x)
+}
+
+/// Fit `E(V)`: needs ≥ 4 samples bracketing the minimum.
+///
+/// BM3: `E(x) = c0 + c1·x + c2·x² + c3·x³` with `x = V^(-2/3)`. After the
+/// polynomial fit, the minimum is recovered numerically on a fine grid of
+/// the sampled volume range (robust against the cubic's spurious root).
+pub fn fit_eos(volumes: &[f64], energies: &[f64]) -> Result<EosFit> {
+    if volumes.len() != energies.len() || volumes.len() < 4 {
+        return Err(Error::Config(format!(
+            "EOS fit needs >= 4 (V, E) samples, got {}",
+            volumes.len().min(energies.len())
+        )));
+    }
+    if volumes.iter().any(|&v| v <= 0.0) {
+        return Err(Error::Config("volumes must be positive".into()));
+    }
+    let xs: Vec<f64> = volumes.iter().map(|v| v.powf(-2.0 / 3.0)).collect();
+    // Normal equations for the cubic: A^T A c = A^T e.
+    let mut ata = vec![vec![0.0f64; 4]; 4];
+    let mut ate = vec![0.0f64; 4];
+    for (x, e) in xs.iter().zip(energies.iter()) {
+        let row = [1.0, *x, x * x, x * x * x];
+        for i in 0..4 {
+            for j in 0..4 {
+                ata[i][j] += row[i] * row[j];
+            }
+            ate[i] += row[i] * e;
+        }
+    }
+    let c = solve(ata, ate)?;
+    let poly = |x: f64| c[0] + c[1] * x + c[2] * x * x + c[3] * x * x * x;
+
+    // Residuals.
+    let rss: f64 = xs
+        .iter()
+        .zip(energies.iter())
+        .map(|(x, e)| {
+            let d = poly(*x) - e;
+            d * d
+        })
+        .sum();
+
+    // Locate the minimum over the sampled range (fine grid + refinement).
+    let vmin = volumes.iter().cloned().fold(f64::INFINITY, f64::min);
+    let vmax = volumes.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut best_v = vmin;
+    let mut best_e = f64::INFINITY;
+    let steps = 20_000;
+    for i in 0..=steps {
+        let v = vmin + (vmax - vmin) * i as f64 / steps as f64;
+        let e = poly(v.powf(-2.0 / 3.0));
+        if e < best_e {
+            best_e = e;
+            best_v = v;
+        }
+    }
+    if best_v <= vmin * 1.0001 || best_v >= vmax * 0.9999 {
+        return Err(Error::Config(
+            "EOS minimum not bracketed by the sampled volumes".into(),
+        ));
+    }
+
+    // Bulk modulus: B0 = V d²E/dV² at V0, via the chain rule through
+    // x = V^(-2/3). Use a central difference on the fitted curve (exact
+    // enough; the polynomial is smooth).
+    let h = best_v * 1e-4;
+    let e = |v: f64| poly(v.powf(-2.0 / 3.0));
+    let d2 = (e(best_v + h) - 2.0 * e(best_v) + e(best_v - h)) / (h * h);
+    let b0 = best_v * d2;
+
+    Ok(EosFit { v0: best_v, e0: best_e, b0, rss })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+
+    /// A synthetic BM-shaped curve with a known minimum.
+    fn synthetic(v0: f64, e0: f64, k: f64, v: f64) -> f64 {
+        let x = v.powf(-2.0 / 3.0);
+        let x0 = v0.powf(-2.0 / 3.0);
+        e0 + k * (x - x0) * (x - x0)
+    }
+
+    #[test]
+    fn recovers_known_minimum() {
+        let volumes: Vec<f64> = (0..9).map(|i| 8.0 + i as f64 * 0.5).collect();
+        let energies: Vec<f64> =
+            volumes.iter().map(|&v| synthetic(10.0, -5.0, 30.0, v)).collect();
+        let fit = fit_eos(&volumes, &energies).unwrap();
+        assert!((fit.v0 - 10.0).abs() < 0.01, "v0 = {}", fit.v0);
+        assert!((fit.e0 + 5.0).abs() < 1e-3, "e0 = {}", fit.e0);
+        assert!(fit.rss < 1e-9);
+        assert!(fit.b0 > 0.0, "bulk modulus must be positive at a minimum");
+    }
+
+    #[test]
+    fn rejects_underdetermined() {
+        assert!(fit_eos(&[1.0, 2.0, 3.0], &[1.0, 0.5, 1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        assert!(fit_eos(&[1.0, 2.0, 3.0, 4.0], &[1.0, 0.5]).is_err());
+    }
+
+    #[test]
+    fn rejects_unbracketed_minimum() {
+        // Monotonic data: minimum at the edge.
+        let volumes: Vec<f64> = (1..8).map(|i| i as f64).collect();
+        let energies: Vec<f64> = volumes.iter().map(|&v| -v).collect();
+        assert!(fit_eos(&volumes, &energies).is_err());
+    }
+
+    #[test]
+    fn rejects_nonpositive_volumes() {
+        assert!(fit_eos(&[-1.0, 1.0, 2.0, 3.0], &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn prop_recovers_random_minima() {
+        run_prop("eos fit", |rng: &Rng| {
+            let v0 = 5.0 + rng.f64() * 10.0;
+            let e0 = -10.0 + rng.f64() * 5.0;
+            let k = 5.0 + rng.f64() * 50.0;
+            let volumes: Vec<f64> =
+                (0..9).map(|i| v0 * (0.8 + 0.05 * i as f64)).collect();
+            let energies: Vec<f64> =
+                volumes.iter().map(|&v| synthetic(v0, e0, k, v)).collect();
+            let fit = fit_eos(&volumes, &energies).unwrap();
+            assert!(
+                (fit.v0 - v0).abs() / v0 < 0.01,
+                "v0 {} vs true {v0}",
+                fit.v0
+            );
+            assert!((fit.e0 - e0).abs() < 0.01);
+        });
+    }
+
+    #[test]
+    fn noisy_fit_has_nonzero_residual_but_close_minimum() {
+        let rng = Rng::new(17);
+        let volumes: Vec<f64> = (0..9).map(|i| 8.0 + i as f64 * 0.5).collect();
+        let energies: Vec<f64> = volumes
+            .iter()
+            .map(|&v| synthetic(10.0, -5.0, 30.0, v) + (rng.f64() - 0.5) * 1e-3)
+            .collect();
+        let fit = fit_eos(&volumes, &energies).unwrap();
+        assert!(fit.rss > 0.0);
+        assert!((fit.v0 - 10.0).abs() < 0.1);
+    }
+}

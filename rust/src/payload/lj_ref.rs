@@ -1,0 +1,93 @@
+//! Pure-Rust Lennard-Jones reference (σ = ε = 1, no cutoff): the
+//! independent check on the PJRT artifacts and the CPU baseline for the
+//! §Perf comparison. Same formula as `python/compile/kernels/ref.py`.
+
+/// Total LJ energy of a flat `[N*3]` position array.
+pub fn total_energy(positions: &[f32]) -> f32 {
+    let n = positions.len() / 3;
+    let mut e = 0.0f64; // f64 accumulator: this is the ground truth
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = (positions[i * 3] - positions[j * 3]) as f64;
+            let dy = (positions[i * 3 + 1] - positions[j * 3 + 1]) as f64;
+            let dz = (positions[i * 3 + 2] - positions[j * 3 + 2]) as f64;
+            let r2 = dx * dx + dy * dy + dz * dz;
+            let s2 = 1.0 / r2;
+            let s6 = s2 * s2 * s2;
+            e += 4.0 * (s6 * s6 - s6);
+        }
+    }
+    e as f32
+}
+
+/// Forces, flat `[N*3]`.
+pub fn forces(positions: &[f32]) -> Vec<f32> {
+    let n = positions.len() / 3;
+    let mut f = vec![0.0f64; n * 3];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = (positions[i * 3] - positions[j * 3]) as f64;
+            let dy = (positions[i * 3 + 1] - positions[j * 3 + 1]) as f64;
+            let dz = (positions[i * 3 + 2] - positions[j * 3 + 2]) as f64;
+            let r2 = dx * dx + dy * dy + dz * dz;
+            let s2 = 1.0 / r2;
+            let s6 = s2 * s2 * s2;
+            let coeff = 24.0 * (2.0 * s6 * s6 - s6) / r2;
+            f[i * 3] += coeff * dx;
+            f[i * 3 + 1] += coeff * dy;
+            f[i * 3 + 2] += coeff * dz;
+            f[j * 3] -= coeff * dx;
+            f[j * 3 + 1] -= coeff * dy;
+            f[j * 3 + 2] -= coeff * dz;
+        }
+    }
+    f.into_iter().map(|x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_atom_closed_form() {
+        // E(1) = 0; E(2^(1/6)) = -1 (the LJ minimum).
+        let at = |r: f32| total_energy(&[0.0, 0.0, 0.0, r, 0.0, 0.0]);
+        assert!((at(1.0)).abs() < 1e-6);
+        assert!((at(2f32.powf(1.0 / 6.0)) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forces_zero_at_minimum() {
+        let r = 2f32.powf(1.0 / 6.0);
+        let f = forces(&[0.0, 0.0, 0.0, r, 0.0, 0.0]);
+        for x in f {
+            assert!(x.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forces_are_pairwise_opposite() {
+        let f = forces(&[0.0, 0.0, 0.0, 1.5, 0.3, -0.2]);
+        for k in 0..3 {
+            assert!((f[k] + f[3 + k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_conservation_many_atoms() {
+        let pos = crate::payload::structures::fcc_positions(32, 1.5);
+        let f = forces(&pos);
+        for k in 0..3 {
+            let net: f32 = (0..32).map(|i| f[i * 3 + k]).sum();
+            assert!(net.abs() < 1e-3, "net force component {k} = {net}");
+        }
+    }
+
+    #[test]
+    fn repulsive_inside_attractive_outside() {
+        let f_close = forces(&[0.0, 0.0, 0.0, 0.9, 0.0, 0.0]);
+        assert!(f_close[0] < 0.0, "atom 0 pushed away (negative x)");
+        let f_far = forces(&[0.0, 0.0, 0.0, 1.5, 0.0, 0.0]);
+        assert!(f_far[0] > 0.0, "atom 0 pulled toward (positive x)");
+    }
+}

@@ -1,0 +1,12 @@
+//! Scientific payload: structure generation, a pure-Rust LJ reference (the
+//! check on the compiled artifacts), equation-of-state fitting, and the
+//! process types that tie the PJRT runtime into the workflow engine —
+//! the materials-science workload AiiDA exists to run.
+
+pub mod eos;
+pub mod lj_ref;
+pub mod structures;
+pub mod tasks;
+
+pub use eos::{fit_eos, EosFit};
+pub use tasks::register_payload_processes;

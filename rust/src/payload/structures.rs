@@ -1,0 +1,122 @@
+//! Synthetic crystal structures (the workloads the tasks compute on).
+//! Positions are flat `[x0,y0,z0, x1,...]` f32 arrays — the wire layout
+//! the PJRT artifacts take.
+
+use crate::proputil::Rng;
+
+/// FCC lattice with `n` atoms (must be `4·k³` for a perfect crystal; other
+/// values take the first `n` sites of the next-larger lattice) and lattice
+/// constant `a`.
+pub fn fcc_positions(n: usize, a: f32) -> Vec<f32> {
+    let cells = (1..).find(|&c: &usize| 4 * c * c * c >= n).unwrap();
+    let base = [[0.0f32, 0.0, 0.0], [0.5, 0.5, 0.0], [0.5, 0.0, 0.5], [0.0, 0.5, 0.5]];
+    let mut out = Vec::with_capacity(n * 3);
+    'fill: for i in 0..cells {
+        for j in 0..cells {
+            for k in 0..cells {
+                for b in base {
+                    if out.len() >= n * 3 {
+                        break 'fill;
+                    }
+                    out.push((i as f32 + b[0]) * a);
+                    out.push((j as f32 + b[1]) * a);
+                    out.push((k as f32 + b[2]) * a);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Jitter positions in place by up to `amp` per coordinate (deterministic
+/// via the seeded [`Rng`]) — thermal-disorder stand-in.
+pub fn jitter(positions: &mut [f32], amp: f32, rng: &Rng) {
+    for x in positions.iter_mut() {
+        *x += (rng.f32() * 2.0 - 1.0) * amp;
+    }
+}
+
+/// Linear scale factors bracketing a volume sweep: `count` values spanning
+/// `[lo, hi]` (linear in *linear* scale; volumes go as the cube).
+pub fn volume_scales(count: usize, lo: f32, hi: f32) -> Vec<f32> {
+    if count == 1 {
+        return vec![(lo + hi) / 2.0];
+    }
+    (0..count)
+        .map(|i| lo + (hi - lo) * i as f32 / (count - 1) as f32)
+        .collect()
+}
+
+/// Stack scaled copies of a base structure into one flat batch array
+/// (`[B*N*3]`), the layout `lj_batch_energies` takes.
+pub fn scaled_batch(base: &[f32], scales: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(base.len() * scales.len());
+    for &s in scales {
+        out.extend(base.iter().map(|x| x * s));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcc_exact_cell_counts() {
+        let pos = fcc_positions(32, 1.0); // 4 * 2^3
+        assert_eq!(pos.len(), 96);
+        // First atom at origin, second at (0.5, 0.5, 0).
+        assert_eq!(&pos[0..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(&pos[3..6], &[0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn fcc_partial_lattice() {
+        let pos = fcc_positions(10, 1.0);
+        assert_eq!(pos.len(), 30);
+    }
+
+    #[test]
+    fn fcc_no_duplicate_sites() {
+        let pos = fcc_positions(32, 1.5);
+        for i in 0..32 {
+            for j in (i + 1)..32 {
+                let d2: f32 = (0..3)
+                    .map(|k| (pos[i * 3 + k] - pos[j * 3 + k]).powi(2))
+                    .sum();
+                assert!(d2 > 0.1, "atoms {i} and {j} coincide");
+            }
+        }
+    }
+
+    #[test]
+    fn scales_span_inclusive() {
+        let s = volume_scales(5, 0.9, 1.1);
+        assert_eq!(s.len(), 5);
+        assert!((s[0] - 0.9).abs() < 1e-6);
+        assert!((s[4] - 1.1).abs() < 1e-6);
+        assert!((s[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let base = vec![1.0f32, 2.0, 3.0];
+        let batch = scaled_batch(&base, &[1.0, 2.0]);
+        assert_eq!(batch, vec![1.0, 2.0, 3.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let rng = Rng::new(5);
+        let mut a = fcc_positions(8, 1.0);
+        let orig = a.clone();
+        jitter(&mut a, 0.1, &rng);
+        for (x, o) in a.iter().zip(orig.iter()) {
+            assert!((x - o).abs() <= 0.1);
+        }
+        let rng2 = Rng::new(5);
+        let mut b = orig.clone();
+        jitter(&mut b, 0.1, &rng2);
+        assert_eq!(a, b);
+    }
+}

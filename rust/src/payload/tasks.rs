@@ -1,0 +1,338 @@
+//! Payload process types: the glue between the workflow engine and the
+//! PJRT runtime. These are the "simulations" the daemon executes —
+//! AiiDA's calculation and workchain plugins, in miniature:
+//!
+//! * `lj_calc` — one LJ energy+forces evaluation (a single "calculation").
+//! * `eos` — the equation-of-state workchain: fan out `lj_calc` children
+//!   over a volume sweep, await them via broadcast, fit Birch–Murnaghan.
+//! * `eos_batch` — the same sweep as ONE batched PJRT call (the ablation
+//!   partner for the fan-out pattern).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::payload::eos::fit_eos;
+use crate::payload::structures;
+use crate::runtime::Engine;
+use crate::wire::Value;
+use crate::workflow::process::{ProcessLogic, StepContext, StepOutcome};
+use crate::workflow::registry::ProcessRegistry;
+use crate::workflow::workchain::{instantiate, ChainStep, WorkChainSpec};
+
+/// One LJ calculation: `{positions: F32s}` → `{energy, forces}`.
+struct LjCalc {
+    engine: Arc<Engine>,
+    positions: Vec<f32>,
+}
+
+impl ProcessLogic for LjCalc {
+    fn step(&mut self, _step: u32, _ctx: &mut StepContext) -> Result<StepOutcome> {
+        let out = self.engine.run_f32("lj_energy_forces", &[&self.positions])?;
+        Ok(StepOutcome::Finish(Value::map([
+            ("energy", Value::F64(out[0][0] as f64)),
+            ("forces", Value::F32s(out[1].clone())),
+        ])))
+    }
+
+    fn save_state(&self) -> Value {
+        Value::map([("positions", Value::F32s(self.positions.clone()))])
+    }
+
+    fn load_state(&mut self, state: &Value) -> Result<()> {
+        let src = state.get_opt("inputs").unwrap_or(state);
+        self.positions = src.get("positions")?.as_f32s()?.to_vec();
+        let want = self.engine.manifest.n_atoms * 3;
+        if self.positions.len() != want {
+            return Err(Error::Config(format!(
+                "lj_calc: expected {want} coordinates ({} atoms), got {}",
+                self.engine.manifest.n_atoms,
+                self.positions.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn eos_inputs(inputs: &Value) -> Result<(f32, usize, f32, f32)> {
+    let a = inputs.get_opt("lattice_a").map(|v| v.as_f64()).transpose()?.unwrap_or(1.5) as f32;
+    let n_volumes =
+        inputs.get_opt("n_volumes").map(|v| v.as_u64()).transpose()?.unwrap_or(7) as usize;
+    let lo = inputs.get_opt("scale_lo").map(|v| v.as_f64()).transpose()?.unwrap_or(0.94) as f32;
+    let hi = inputs.get_opt("scale_hi").map(|v| v.as_f64()).transpose()?.unwrap_or(1.06) as f32;
+    if n_volumes < 4 {
+        return Err(Error::Config("eos needs >= 4 volumes".into()));
+    }
+    Ok((a, n_volumes, lo, hi))
+}
+
+fn collect_fit(scales: &[f64], lattice_a: f64, energies: &[f64]) -> Result<Value> {
+    let volumes: Vec<f64> = scales.iter().map(|s| (lattice_a * s).powi(3)).collect();
+    let fit = fit_eos(&volumes, energies)?;
+    Ok(Value::map([
+        ("v0", Value::F64(fit.v0)),
+        ("e0", Value::F64(fit.e0)),
+        ("b0", Value::F64(fit.b0)),
+        ("rss", Value::F64(fit.rss)),
+        ("volumes", Value::List(volumes.into_iter().map(Value::F64).collect())),
+        ("energies", Value::List(energies.iter().map(|&e| Value::F64(e)).collect())),
+    ]))
+}
+
+/// The fan-out EOS workchain spec.
+fn eos_spec(engine: Arc<Engine>) -> Arc<WorkChainSpec> {
+    let engine_setup = Arc::clone(&engine);
+    WorkChainSpec::new("eos")
+        .step("setup", move |cc, _ctx| {
+            let (a, n_volumes, lo, hi) = eos_inputs(&cc.inputs())?;
+            let n = engine_setup.manifest.n_atoms;
+            let scales = structures::volume_scales(n_volumes, lo, hi);
+            cc.set("lattice_a", Value::F64(a as f64));
+            cc.set(
+                "scales",
+                Value::List(scales.iter().map(|&s| Value::F64(s as f64)).collect()),
+            );
+            cc.set("base", Value::F32s(structures::fcc_positions(n, a)));
+            Ok(ChainStep::Next)
+        })
+        .step("launch", move |cc, ctx| {
+            let base = cc.get("base")?.as_f32s()?.to_vec();
+            let scales: Vec<f64> = cc
+                .get("scales")?
+                .as_list()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<_>>()?;
+            for s in scales {
+                let scaled: Vec<f32> = base.iter().map(|x| x * s as f32).collect();
+                let pid = ctx.spawn(
+                    "lj_calc",
+                    Value::map([("positions", Value::F32s(scaled))]),
+                )?;
+                cc.add_child(&pid);
+            }
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("collect", move |cc, ctx| {
+            let scales: Vec<f64> = cc
+                .get("scales")?
+                .as_list()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<_>>()?;
+            let lattice_a = cc.get("lattice_a")?.as_f64()?;
+            let mut energies = Vec::with_capacity(scales.len());
+            for pid in cc.children() {
+                energies.push(ctx.child_outputs(&pid)?.get_f64("energy")?);
+            }
+            Ok(ChainStep::Finish(collect_fit(&scales, lattice_a, &energies)?))
+        })
+        .build()
+}
+
+/// The single-process batched EOS (`lj_batch_energies` artifact).
+struct EosBatch {
+    engine: Arc<Engine>,
+    inputs: Value,
+}
+
+impl ProcessLogic for EosBatch {
+    fn step(&mut self, _step: u32, _ctx: &mut StepContext) -> Result<StepOutcome> {
+        let (a, n_volumes, lo, hi) = eos_inputs(&self.inputs)?;
+        let b = self.engine.manifest.batch;
+        if n_volumes != b {
+            return Err(Error::Config(format!(
+                "eos_batch: artifact is compiled for exactly {b} volumes, got {n_volumes}"
+            )));
+        }
+        let n = self.engine.manifest.n_atoms;
+        let base = structures::fcc_positions(n, a);
+        let scales = structures::volume_scales(b, lo, hi);
+        let batch = structures::scaled_batch(&base, &scales);
+        let out = self.engine.run_f32("lj_batch_energies", &[&batch])?;
+        let energies: Vec<f64> = out[0].iter().map(|&e| e as f64).collect();
+        let scales64: Vec<f64> = scales.iter().map(|&s| s as f64).collect();
+        Ok(StepOutcome::Finish(collect_fit(&scales64, a as f64, &energies)?))
+    }
+
+    fn save_state(&self) -> Value {
+        self.inputs.clone()
+    }
+
+    fn load_state(&mut self, state: &Value) -> Result<()> {
+        self.inputs = state.get_opt("inputs").unwrap_or(state).clone();
+        Ok(())
+    }
+}
+
+/// Register all payload process types against one shared engine.
+pub fn register_payload_processes(registry: &ProcessRegistry, engine: Arc<Engine>) {
+    {
+        let engine = Arc::clone(&engine);
+        registry.register("lj_calc", move || {
+            Box::new(LjCalc { engine: Arc::clone(&engine), positions: Vec::new() })
+        });
+    }
+    {
+        let spec = eos_spec(Arc::clone(&engine));
+        registry.register("eos", move || instantiate(&spec));
+    }
+    {
+        let engine = Arc::clone(&engine);
+        registry.register("eos_batch", move || {
+            Box::new(EosBatch { engine: Arc::clone(&engine), inputs: Value::Null })
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communicator::{Communicator, LocalCommunicator};
+    use crate::workflow::checkpoint::{CheckpointStore, MemoryCheckpointStore};
+    use crate::workflow::launcher::{ProcessLauncher, DEFAULT_TASK_QUEUE};
+    use crate::workflow::process::{RunOutcome, Runner};
+    use std::path::PathBuf;
+
+    fn engine() -> Arc<Engine> {
+        Arc::new(
+            Engine::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+                .expect("run `make artifacts` before cargo test"),
+        )
+    }
+
+    fn setup(engine: Arc<Engine>) -> (Arc<dyn Communicator>, Arc<dyn CheckpointStore>, ProcessRegistry)
+    {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        let registry = ProcessRegistry::new();
+        register_payload_processes(&registry, engine);
+        (comm, store, registry)
+    }
+
+    #[test]
+    fn lj_calc_process_computes_energy() {
+        let eng = engine();
+        let n = eng.manifest.n_atoms;
+        let (comm, store, registry) = setup(Arc::clone(&eng));
+        let pos = structures::fcc_positions(n, 1.5);
+        let want = crate::payload::lj_ref::total_energy(&pos) as f64;
+        let runner = Runner::launch(
+            "calc1",
+            "lj_calc",
+            Value::map([("positions", Value::F32s(pos))]),
+            comm,
+            store,
+            &registry,
+            "q",
+        )
+        .unwrap();
+        match runner.run().unwrap() {
+            RunOutcome::Finished(out) => {
+                let e = out.get_f64("energy").unwrap();
+                assert!((e - want).abs() <= 1e-3 * want.abs().max(1.0), "{e} vs {want}");
+                assert_eq!(out.get("forces").unwrap().as_f32s().unwrap().len(), n * 3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lj_calc_rejects_wrong_atom_count() {
+        let eng = engine();
+        let (comm, store, registry) = setup(eng);
+        let runner = Runner::launch(
+            "calc2",
+            "lj_calc",
+            Value::map([("positions", Value::F32s(vec![0.0; 9]))]),
+            comm,
+            store,
+            &registry,
+            "q",
+        );
+        assert!(runner.is_err());
+    }
+
+    #[test]
+    fn eos_batch_process_fits_minimum() {
+        let eng = engine();
+        let (comm, store, registry) = setup(Arc::clone(&eng));
+        let runner = Runner::launch(
+            "eb1",
+            "eos_batch",
+            Value::map([
+                ("lattice_a", Value::F64(1.5)),
+                ("n_volumes", Value::from(eng.manifest.batch as u64)),
+                ("scale_lo", Value::F64(0.94)),
+                ("scale_hi", Value::F64(1.06)),
+            ]),
+            comm,
+            store,
+            &registry,
+            "q",
+        )
+        .unwrap();
+        match runner.run().unwrap() {
+            RunOutcome::Finished(out) => {
+                let v0 = out.get_f64("v0").unwrap();
+                let e0 = out.get_f64("e0").unwrap();
+                // FCC LJ equilibrium: nearest-neighbour distance ~2^(1/6),
+                // lattice a0 = 2^(1/6)*sqrt(2) ~ 1.587 -> v0 ~ a0^3 ~ 4.0.
+                // Finite 32-atom cluster shifts this; just sanity-bound it.
+                assert!(v0 > 2.0 && v0 < 5.0, "v0 = {v0}");
+                assert!(e0 < 0.0, "bound cluster has negative energy: {e0}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eos_workchain_fans_out_and_matches_batch() {
+        let eng = engine();
+        let (comm, store, registry) = setup(Arc::clone(&eng));
+        // Daemon stand-in running children on threads.
+        let launcher = Arc::new(ProcessLauncher::new(
+            Arc::clone(&comm),
+            Arc::clone(&store),
+            registry.clone(),
+        ));
+        let l2 = Arc::clone(&launcher);
+        comm.task_queue(
+            DEFAULT_TASK_QUEUE,
+            0,
+            Box::new(move |task, tctx| {
+                let l3 = Arc::clone(&l2);
+                std::thread::spawn(move || l3.handle_task(task, tctx));
+            }),
+        )
+        .unwrap();
+
+        let inputs = Value::map([
+            ("lattice_a", Value::F64(1.5)),
+            ("n_volumes", Value::from(eng.manifest.batch as u64)),
+            ("scale_lo", Value::F64(0.94)),
+            ("scale_hi", Value::F64(1.06)),
+        ]);
+        let fanout = Runner::launch(
+            "eos1",
+            "eos",
+            inputs.clone(),
+            Arc::clone(&comm),
+            Arc::clone(&store),
+            &registry,
+            DEFAULT_TASK_QUEUE,
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        let batch = Runner::launch("eos2", "eos_batch", inputs, comm, store, &registry, "q")
+            .unwrap()
+            .run()
+            .unwrap();
+        let (RunOutcome::Finished(a), RunOutcome::Finished(b)) = (fanout, batch) else {
+            panic!("both must finish");
+        };
+        // Same physics through two different execution paths.
+        let (va, vb) = (a.get_f64("v0").unwrap(), b.get_f64("v0").unwrap());
+        assert!((va - vb).abs() < 1e-2 * vb.abs(), "fanout v0 {va} vs batch v0 {vb}");
+    }
+}

@@ -1,0 +1,257 @@
+//! PJRT executor: HLO text → compiled executable → f32 in/out.
+//!
+//! Follows /opt/xla-example/load_hlo exactly: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compile per artifact, amortised
+//! across every task the daemon runs.
+//!
+//! ## Thread safety
+//!
+//! The `xla` crate's handles are `Rc`-based and `!Send`: cloning the
+//! client's refcount from two threads would race. All handles live
+//! exclusively inside [`EngineInner`] behind a `Mutex`, so only one thread
+//! touches them at a time — which makes the manual `Send` marker sound.
+//! (Execution is therefore serialised per engine; the §Perf pass measures
+//! this and the daemon sizes worker pools accordingly. On real TPU one
+//! engine per device is the natural layout anyway.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::metrics::Histogram;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+struct EngineInner {
+    // Client must outlive the executables.
+    _client: xla::PjRtClient,
+    executors: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: every Rc-carrying xla handle is owned exclusively by this struct,
+// which is only ever accessed through `Engine.inner: Mutex<EngineInner>` —
+// one thread at a time, full ownership transfer on move. No Rc handle
+// escapes (run_f32 returns plain Vec<f32>).
+unsafe impl Send for EngineInner {}
+
+/// The process-wide runtime: one PJRT client + all compiled artifacts.
+/// `Send + Sync`; share it with `Arc`.
+pub struct Engine {
+    inner: Mutex<EngineInner>,
+    specs: BTreeMap<String, ArtifactSpec>,
+    latencies: BTreeMap<String, Arc<Histogram>>,
+    pub manifest: Manifest,
+}
+
+/// Legacy alias (an `Engine` is the only executor type).
+pub type Executor = Engine;
+
+/// Compiling the same HLO concurrently in two tests can crash some PJRT
+/// builds; serialise engine construction (cheap, happens once).
+static BUILD_LOCK: Mutex<()> = Mutex::new(());
+
+impl Engine {
+    /// Load every artifact in `<dir>/manifest.json` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _guard = BUILD_LOCK.lock().unwrap();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let mut executors = BTreeMap::new();
+        let mut specs = BTreeMap::new();
+        let mut latencies = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xerr)?;
+            log::info!("runtime: compiled artifact '{name}' from {:?}", spec.file);
+            executors.insert(name.clone(), exe);
+            specs.insert(name.clone(), spec.clone());
+            latencies.insert(name.clone(), Arc::new(Histogram::new()));
+        }
+        Ok(Engine {
+            inner: Mutex::new(EngineInner { _client: client, executors }),
+            specs,
+            latencies,
+            manifest,
+        })
+    }
+
+    /// Shape metadata for an artifact.
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no compiled artifact '{name}'")))
+    }
+
+    /// Execution latency histogram (ns) for an artifact.
+    pub fn latency(&self, name: &str) -> Option<&Arc<Histogram>> {
+        self.latencies.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(String::as_str).collect()
+    }
+
+    /// Run artifact `name` with f32 inputs (shapes validated against the
+    /// manifest); returns the f32 outputs in manifest order.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.spec(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let t0 = std::time::Instant::now();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let want = spec.input_len(i);
+            if data.len() != want {
+                return Err(Error::Runtime(format!(
+                    "artifact '{name}' input {i}: expected {want} f32s, got {}",
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = spec.inputs[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.is_empty() { lit } else { lit.reshape(&dims).map_err(xerr)? };
+            literals.push(lit);
+        }
+        let out = {
+            let inner = self.inner.lock().unwrap();
+            let exe = inner.executors.get(name).unwrap();
+            let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+            result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| Error::Runtime("empty execution result".into()))?
+                .to_literal_sync()
+                .map_err(xerr)?
+        };
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple().map_err(xerr)?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact '{name}': manifest says {} outputs, executable returned {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        let mut outputs = Vec::with_capacity(parts.len());
+        for part in parts {
+            outputs.push(part.to_vec::<f32>().map_err(xerr)?);
+        }
+        self.latencies[name].record_duration(t0.elapsed());
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::payload::lj_ref;
+    use crate::payload::structures;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Engine {
+        Engine::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn energy_forces_artifact_matches_rust_reference() {
+        let eng = engine();
+        let n = eng.manifest.n_atoms;
+        let pos = structures::fcc_positions(n, 1.5);
+        let out = eng.run_f32("lj_energy_forces", &[&pos]).unwrap();
+        assert_eq!(out.len(), 2);
+        let energy = out[0][0];
+        let forces = &out[1];
+        assert_eq!(forces.len(), n * 3);
+        let want_e = lj_ref::total_energy(&pos);
+        let want_f = lj_ref::forces(&pos);
+        assert!(
+            (energy - want_e).abs() <= 1e-3 * want_e.abs().max(1.0),
+            "energy {energy} vs rust ref {want_e}"
+        );
+        for (i, (a, b)) in forces.iter().zip(want_f.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-2 * b.abs().max(1.0),
+                "force[{i}]: pjrt {a} vs ref {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_energies_artifact() {
+        let eng = engine();
+        let n = eng.manifest.n_atoms;
+        let b = eng.manifest.batch;
+        let base = structures::fcc_positions(n, 1.5);
+        let scales = structures::volume_scales(b, 0.94, 1.06);
+        let batch = structures::scaled_batch(&base, &scales);
+        let out = eng.run_f32("lj_batch_energies", &[&batch]).unwrap();
+        assert_eq!(out.len(), 1);
+        let energies = &out[0];
+        assert_eq!(energies.len(), b);
+        for (i, &s) in scales.iter().enumerate() {
+            let scaled: Vec<f32> = base.iter().map(|x| x * s).collect();
+            let want = lj_ref::total_energy(&scaled);
+            assert!(
+                (energies[i] - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "batch[{i}]: pjrt {} vs ref {want}",
+                energies[i]
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_input_shape_rejected() {
+        let eng = engine();
+        let too_short = vec![0.0f32; 3];
+        assert!(eng.run_f32("lj_energy_forces", &[&too_short]).is_err());
+        assert!(eng.run_f32("lj_energy_forces", &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let eng = engine();
+        assert!(eng.run_f32("nope", &[]).is_err());
+        assert!(eng.spec("nope").is_err());
+    }
+
+    #[test]
+    fn engine_is_thread_safe() {
+        let eng = std::sync::Arc::new(engine());
+        let n = eng.manifest.n_atoms;
+        let pos = structures::fcc_positions(n, 1.5);
+        let want = eng.run_f32("lj_energy_forces", &[&pos]).unwrap()[0][0];
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let eng = std::sync::Arc::clone(&eng);
+                let pos = pos.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..5 {
+                        let e = eng.run_f32("lj_energy_forces", &[&pos]).unwrap()[0][0];
+                        assert_eq!(e, want);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(eng.latency("lj_energy_forces").unwrap().count() >= 21);
+    }
+}

@@ -1,0 +1,135 @@
+//! `artifacts/manifest.json` — shape metadata emitted by `compile/aot.py`
+//! so the Rust side knows each executable's I/O without Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::wire::{json, Value};
+
+/// One artifact's description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes (row-major dims; `[]` = scalar).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+    pub description: String,
+}
+
+impl ArtifactSpec {
+    pub fn input_len(&self, idx: usize) -> usize {
+        self.inputs[idx].iter().product()
+    }
+
+    pub fn output_len(&self, idx: usize) -> usize {
+        self.outputs[idx].iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_atoms: usize,
+    pub batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn shape_list(v: &Value) -> Result<Vec<Vec<usize>>> {
+    v.as_list()?
+        .iter()
+        .map(|shape| {
+            shape
+                .as_list()?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize))
+                .collect::<Result<Vec<usize>>>()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {path:?}: {e}. Run `make artifacts` first."
+            ))
+        })?;
+        let v = json::from_str(&text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v.get("artifacts")?.as_map()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(entry.get_str("file")?),
+                    inputs: shape_list(entry.get("inputs")?)?,
+                    outputs: shape_list(entry.get("outputs")?)?,
+                    description: entry.get_str("description").unwrap_or("").to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            n_atoms: v.get_u64("n_atoms")? as usize,
+            batch: v.get_u64("batch")? as usize,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact '{name}' in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "n_atoms": 32, "batch": 8,
+              "artifacts": {
+                "lj_energy_forces": {
+                  "file": "lj_energy_forces.hlo.txt",
+                  "inputs": [[32, 3]], "outputs": [[], [32, 3]],
+                  "description": "energy+forces"
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let dir = std::env::temp_dir().join(format!("kiwi-manifest-{}", std::process::id()));
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_atoms, 32);
+        let spec = m.get("lj_energy_forces").unwrap();
+        assert_eq!(spec.inputs, vec![vec![32, 3]]);
+        assert_eq!(spec.outputs, vec![vec![], vec![32, 3]]);
+        assert_eq!(spec.input_len(0), 96);
+        assert_eq!(spec.output_len(0), 1); // scalar
+        assert!(m.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly_error() {
+        let err = Manifest::load("/nonexistent-kiwi-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! The PJRT runtime: loads AOT-compiled JAX/Pallas computations
+//! (`artifacts/*.hlo.txt`) and executes them on the task hot path.
+//! Python authored these once at build time; it is never loaded here.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Engine, Executor};
+pub use manifest::Manifest;

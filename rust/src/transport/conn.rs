@@ -1,0 +1,488 @@
+//! Client connection: request/reply correlation, consumer delivery
+//! dispatch, and heartbeats — all driven by a hidden communication thread,
+//! kiwiPy's signature usability feature ("a separate communication thread
+//! that the user never sees", maintaining heartbeats "whilst the user code
+//! can be doing other things").
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::broker::protocol::{ClientRequest, Delivery, ServerMsg};
+use crate::error::{Error, Result};
+use crate::transport::Link;
+use crate::wire::{Frame, FrameType};
+
+/// Callback invoked on the communication thread for each delivery.
+pub type DeliveryHandler = Box<dyn FnMut(Delivery) + Send>;
+
+/// Connection tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ConnectionConfig {
+    /// Identity announced in `Hello` (shows up in broker logs).
+    pub client_id: String,
+    /// Heartbeat interval; 0 disables. Two missed intervals and the broker
+    /// evicts us (requeueing our unacked messages); symmetrically we treat
+    /// a silent broker as dead after two intervals.
+    pub heartbeat_ms: u64,
+    /// Default timeout for request/reply calls.
+    pub request_timeout: Duration,
+}
+
+impl Default for ConnectionConfig {
+    fn default() -> Self {
+        ConnectionConfig {
+            client_id: format!("kiwi-{}", std::process::id()),
+            heartbeat_ms: 0,
+            request_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+struct Shared {
+    link: Arc<dyn Link>,
+    next_req: AtomicU64,
+    pending: Mutex<HashMap<u64, Sender<ServerMsg>>>,
+    handlers: Mutex<HashMap<String, DeliveryHandler>>,
+    closed: AtomicBool,
+    /// Instant of the last frame seen from the broker (liveness).
+    last_server_frame: Mutex<Instant>,
+}
+
+impl Shared {
+    fn mark_closed(&self) {
+        if !self.closed.swap(true, Ordering::SeqCst) {
+            // Fail every waiter.
+            let mut pending = self.pending.lock().unwrap();
+            pending.clear(); // dropping senders wakes receivers with Closed
+        }
+    }
+}
+
+/// A client connection to a broker (TCP or in-process — any [`Link`]).
+pub struct Connection {
+    shared: Arc<Shared>,
+    config: ConnectionConfig,
+    reader: Mutex<Option<JoinHandle<()>>>,
+    heartbeater: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Connection {
+    /// Open a connection over `link`: spawn the communication thread, send
+    /// `Hello`, wait for the broker's ack.
+    pub fn open(link: Arc<dyn Link>, config: ConnectionConfig) -> Result<Self> {
+        let shared = Arc::new(Shared {
+            link: Arc::clone(&link),
+            next_req: AtomicU64::new(1),
+            pending: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(HashMap::new()),
+            closed: AtomicBool::new(false),
+            last_server_frame: Mutex::new(Instant::now()),
+        });
+
+        let reader = {
+            let shared = Arc::clone(&shared);
+            let hb = config.heartbeat_ms;
+            std::thread::Builder::new()
+                .name("kiwi-comm".into())
+                .spawn(move || reader_loop(shared, hb))
+                .expect("spawn communication thread")
+        };
+
+        let heartbeater = if config.heartbeat_ms > 0 {
+            let shared = Arc::clone(&shared);
+            let interval = Duration::from_millis((config.heartbeat_ms / 2).max(1));
+            Some(
+                std::thread::Builder::new()
+                    .name("kiwi-heartbeat".into())
+                    .spawn(move || {
+                        while !shared.closed.load(Ordering::Relaxed) {
+                            std::thread::sleep(interval);
+                            if shared.link.send(&Frame::heartbeat()).is_err() {
+                                shared.mark_closed();
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn heartbeater"),
+            )
+        } else {
+            None
+        };
+
+        let conn = Connection {
+            shared,
+            config: config.clone(),
+            reader: Mutex::new(Some(reader)),
+            heartbeater: Mutex::new(heartbeater),
+        };
+        conn.request(&ClientRequest::Hello {
+            client_id: config.client_id.clone(),
+            heartbeat_ms: config.heartbeat_ms,
+        })?;
+        Ok(conn)
+    }
+
+    /// Send a request and wait for the broker's reply.
+    pub fn request(&self, req: &ClientRequest) -> Result<crate::wire::Value> {
+        self.request_timeout(req, self.config.request_timeout)
+    }
+
+    /// Send a request and wait up to `timeout`.
+    pub fn request_timeout(
+        &self,
+        req: &ClientRequest,
+        timeout: Duration,
+    ) -> Result<crate::wire::Value> {
+        if self.shared.closed.load(Ordering::Relaxed) {
+            return Err(Error::Closed("connection closed".into()));
+        }
+        let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
+        self.shared.pending.lock().unwrap().insert(req_id, tx);
+        if let Err(e) = self.shared.link.send(&Frame::data(&req.to_value(req_id))) {
+            self.shared.pending.lock().unwrap().remove(&req_id);
+            self.shared.mark_closed();
+            return Err(e);
+        }
+        match rx.recv_timeout(timeout) {
+            Ok(ServerMsg::Ok { reply, .. }) => Ok(reply),
+            Ok(ServerMsg::Err { code, message, .. }) => Err(decode_remote_error(&code, message)),
+            Ok(other) => Err(Error::Wire(format!("unexpected reply {other:?}"))),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                self.shared.pending.lock().unwrap().remove(&req_id);
+                Err(Error::Timeout(format!("request {req_id}")))
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Closed("connection lost".into()))
+            }
+        }
+    }
+
+    /// Fire-and-forget request (acks on the hot path): no reply waited for;
+    /// the broker's Ok is dropped by the reader when no waiter is found.
+    pub fn send_noreply(&self, req: &ClientRequest) -> Result<()> {
+        if self.shared.closed.load(Ordering::Relaxed) {
+            return Err(Error::Closed("connection closed".into()));
+        }
+        let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
+        self.shared.link.send(&Frame::data(&req.to_value(req_id))).map_err(|e| {
+            self.shared.mark_closed();
+            e
+        })
+    }
+
+    /// Start consuming `queue`: registers `handler` (invoked on the
+    /// communication thread) and issues `Consume`.
+    pub fn consume(
+        &self,
+        queue: &str,
+        consumer_tag: &str,
+        prefetch: u32,
+        handler: DeliveryHandler,
+    ) -> Result<()> {
+        self.shared.handlers.lock().unwrap().insert(consumer_tag.to_string(), handler);
+        let res = self.request(&ClientRequest::Consume {
+            queue: queue.to_string(),
+            consumer_tag: consumer_tag.to_string(),
+            prefetch,
+        });
+        if res.is_err() {
+            self.shared.handlers.lock().unwrap().remove(consumer_tag);
+        }
+        res.map(|_| ())
+    }
+
+    /// Stop consuming.
+    pub fn cancel(&self, consumer_tag: &str) -> Result<()> {
+        self.request(&ClientRequest::Cancel { consumer_tag: consumer_tag.to_string() })?;
+        self.shared.handlers.lock().unwrap().remove(consumer_tag);
+        Ok(())
+    }
+
+    /// Acknowledge a delivery (fire-and-forget).
+    pub fn ack(&self, delivery_tag: u64) -> Result<()> {
+        self.send_noreply(&ClientRequest::Ack { delivery_tag })
+    }
+
+    /// Reject a delivery, optionally requeueing (fire-and-forget).
+    pub fn nack(&self, delivery_tag: u64, requeue: bool) -> Result<()> {
+        self.send_noreply(&ClientRequest::Nack { delivery_tag, requeue })
+    }
+
+    /// True when the connection is no longer usable.
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Relaxed)
+    }
+
+    /// Graceful close: `Close` to the broker, stop threads, clear delivery
+    /// handlers (breaking any `Arc<Connection>` cycles closures hold).
+    /// Idempotent; callable from any thread except the communication
+    /// thread itself.
+    pub fn close(&self) {
+        if !self.shared.closed.load(Ordering::Relaxed) {
+            self.request_timeout(&ClientRequest::Close, Duration::from_millis(500)).ok();
+        }
+        self.shared.mark_closed();
+        self.shared.link.close();
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.heartbeater.lock().unwrap().take() {
+            h.join().ok();
+        }
+        self.shared.handlers.lock().unwrap().clear();
+    }
+}
+
+impl Drop for Connection {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn decode_remote_error(code: &str, message: String) -> Error {
+    match code {
+        "unroutable" => Error::UnroutableMessage(message),
+        "duplicate-subscriber" => Error::DuplicateSubscriber(message),
+        "timeout" => Error::Timeout(message),
+        "remote-exception" => Error::RemoteException(message),
+        _ => Error::Broker(message),
+    }
+}
+
+/// The hidden communication thread: demultiplexes replies, deliveries and
+/// server heartbeats.
+fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
+    let poll = Duration::from_millis(if heartbeat_ms > 0 { (heartbeat_ms / 2).max(1) } else { 200 });
+    loop {
+        if shared.closed.load(Ordering::Relaxed) {
+            break;
+        }
+        match shared.link.recv_timeout(poll) {
+            Ok(frame) => {
+                *shared.last_server_frame.lock().unwrap() = Instant::now();
+                match frame.frame_type {
+                    FrameType::Heartbeat => {}
+                    FrameType::Goodbye => {
+                        log::debug!("connection: broker said goodbye");
+                        shared.mark_closed();
+                        break;
+                    }
+                    FrameType::Data => match frame.value().and_then(|v| ServerMsg::from_value(&v)) {
+                        Ok(ServerMsg::Deliver(d)) => {
+                            let mut handlers = shared.handlers.lock().unwrap();
+                            if let Some(h) = handlers.get_mut(&d.consumer_tag) {
+                                h(d);
+                            } else {
+                                log::warn!(
+                                    "connection: delivery for unknown consumer '{}'",
+                                    d.consumer_tag
+                                );
+                            }
+                        }
+                        Ok(ServerMsg::CancelConsumer { consumer_tag }) => {
+                            shared.handlers.lock().unwrap().remove(&consumer_tag);
+                        }
+                        Ok(msg @ (ServerMsg::Ok { .. } | ServerMsg::Err { .. })) => {
+                            let req_id = match &msg {
+                                ServerMsg::Ok { req_id, .. } | ServerMsg::Err { req_id, .. } => {
+                                    *req_id
+                                }
+                                _ => unreachable!(),
+                            };
+                            if let Some(tx) = shared.pending.lock().unwrap().remove(&req_id) {
+                                tx.send(msg).ok();
+                            }
+                            // No waiter = fire-and-forget request; drop.
+                        }
+                        Err(e) => {
+                            log::warn!("connection: bad frame from broker: {e}");
+                            shared.mark_closed();
+                            break;
+                        }
+                    },
+                }
+            }
+            Err(Error::Timeout(_)) => {
+                // Detect a dead broker: two missed heartbeat intervals.
+                if heartbeat_ms > 0 {
+                    let last = *shared.last_server_frame.lock().unwrap();
+                    if last.elapsed().as_millis() as u64 > 2 * heartbeat_ms {
+                        log::warn!("connection: broker silent for 2 heartbeat intervals");
+                        shared.mark_closed();
+                        break;
+                    }
+                }
+            }
+            Err(_) => {
+                shared.mark_closed();
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::protocol::QueueOptions;
+    use crate::broker::InprocBroker;
+    use crate::wire::Value;
+
+    fn open(broker: &InprocBroker) -> Connection {
+        Connection::open(broker.connect(), ConnectionConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn hello_and_declare() {
+        let broker = InprocBroker::new();
+        let conn = open(&broker);
+        let reply = conn
+            .request(&ClientRequest::QueueDeclare {
+                queue: "q".into(),
+                options: QueueOptions::default(),
+            })
+            .unwrap();
+        assert_eq!(reply.get_str("queue").unwrap(), "q");
+        conn.close();
+    }
+
+    #[test]
+    fn consume_dispatches_to_handler() {
+        let broker = InprocBroker::new();
+        let conn = open(&broker);
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: "q".into(),
+            options: QueueOptions::default(),
+        })
+        .unwrap();
+        let (tx, rx) = channel();
+        conn.consume(
+            "q",
+            "c1",
+            0,
+            Box::new(move |d| {
+                tx.send((*d.body).clone()).unwrap();
+            }),
+        )
+        .unwrap();
+        conn.request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "q".into(),
+            body: Arc::new(Value::str("hi")),
+            props: Default::default(),
+            mandatory: true,
+        })
+        .unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), Value::str("hi"));
+        conn.close();
+    }
+
+    #[test]
+    fn broker_error_becomes_typed_error() {
+        let broker = InprocBroker::new();
+        let conn = open(&broker);
+        let err = conn
+            .request(&ClientRequest::Publish {
+                exchange: "".into(),
+                routing_key: "missing".into(),
+                body: Arc::new(Value::Null),
+                props: Default::default(),
+                mandatory: true,
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::UnroutableMessage(_)));
+        conn.close();
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        let broker = InprocBroker::new();
+        let conn = Arc::new(open(&broker));
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: "q".into(),
+            options: QueueOptions::default(),
+        })
+        .unwrap();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let conn = Arc::clone(&conn);
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        conn.request(&ClientRequest::Publish {
+                            exchange: "".into(),
+                            routing_key: "q".into(),
+                            body: Arc::new(Value::I64(t * 1000 + i)),
+                            props: Default::default(),
+                            mandatory: true,
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(broker.broker().queue_depth("q"), Some(400));
+    }
+
+    #[test]
+    fn ack_fire_and_forget_drains_queue() {
+        let broker = InprocBroker::new();
+        let conn = Arc::new(open(&broker));
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: "q".into(),
+            options: QueueOptions::default(),
+        })
+        .unwrap();
+        for i in 0..10 {
+            conn.request(&ClientRequest::Publish {
+                exchange: "".into(),
+                routing_key: "q".into(),
+                body: Arc::new(Value::I64(i)),
+                props: Default::default(),
+                mandatory: true,
+            })
+            .unwrap();
+        }
+        let conn2 = Arc::clone(&conn);
+        let (done_tx, done_rx) = channel();
+        let mut seen = 0;
+        conn.consume(
+            "q",
+            "c1",
+            1,
+            Box::new(move |d| {
+                conn2.ack(d.delivery_tag).unwrap();
+                seen += 1;
+                if seen == 10 {
+                    done_tx.send(()).unwrap();
+                }
+            }),
+        )
+        .unwrap();
+        done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while broker.broker().queue_unacked("q") != Some(0) {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn close_is_clean_and_idempotent() {
+        let broker = InprocBroker::new();
+        let conn = open(&broker);
+        assert!(!conn.is_closed());
+        conn.close();
+        // A second connection still works (broker unaffected).
+        let conn2 = open(&broker);
+        assert!(conn2.request(&ClientRequest::Status).is_ok());
+        conn2.close();
+    }
+}

@@ -1,0 +1,232 @@
+//! The framed, bidirectional link both the broker session and the client
+//! connection are written against. Two implementations:
+//!
+//! * [`TcpLink`] — frames over a `TcpStream` (cross-process / cross-host).
+//! * [`InprocLink`] — a crossed pair of channels (embedded broker; this is
+//!   the "individual laptop" deployment and the test/bench substrate).
+//!
+//! `send` is callable from any thread; `recv` is owned by one reader.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::wire::{read_frame, write_frame, Frame};
+
+/// A framed bidirectional message link.
+pub trait Link: Send + Sync {
+    /// Send one frame (thread-safe).
+    fn send(&self, frame: &Frame) -> Result<()>;
+    /// Receive the next frame, waiting up to `timeout`.
+    /// `Err(Timeout)` = nothing arrived; `Err(Closed)`/`Err(Io)` = link dead.
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame>;
+    /// Close the link (idempotent). Wakes any blocked `recv_timeout`.
+    fn close(&self);
+    /// Human-readable peer description for logs.
+    fn peer(&self) -> String;
+}
+
+// ---------------------------------------------------------------- TCP --
+
+/// TCP implementation. The socket is split: reads go through a cloned
+/// handle guarded by `reader`, writes through a buffered handle in
+/// `writer`; each side has its own lock so a blocked reader never starves
+/// senders.
+pub struct TcpLink {
+    reader: Mutex<BufReader<TcpStream>>,
+    writer: Mutex<BufWriter<TcpStream>>,
+    stream: TcpStream,
+    peer: String,
+}
+
+impl TcpLink {
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        let peer =
+            stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "<unknown>".into());
+        let read_half = stream.try_clone()?;
+        let write_half = stream.try_clone()?;
+        Ok(TcpLink {
+            reader: Mutex::new(BufReader::new(read_half)),
+            writer: Mutex::new(BufWriter::new(write_half)),
+            stream,
+            peer,
+        })
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&self, frame: &Frame) -> Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        write_frame(&mut *w, frame)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame> {
+        let mut r = self.reader.lock().unwrap();
+        // A zero timeout would mean "block forever" to the OS; clamp up.
+        r.get_ref().set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        match read_frame(&mut *r) {
+            Ok(f) => Ok(f),
+            Err(Error::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Err(Error::Timeout("recv".into()))
+            }
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                Err(Error::Closed("peer closed".into()))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn close(&self) {
+        self.stream.shutdown(std::net::Shutdown::Both).ok();
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+/// Connect to a broker over TCP.
+pub fn connect_tcp(addr: impl ToSocketAddrs) -> Result<TcpLink> {
+    let stream = TcpStream::connect(addr)?;
+    TcpLink::new(stream)
+}
+
+// ------------------------------------------------------------- inproc --
+
+/// In-process link: a crossed channel pair.
+pub struct InprocLink {
+    tx: Sender<Frame>,
+    rx: Mutex<Receiver<Frame>>,
+    name: String,
+}
+
+/// Create a connected pair of in-process links (client half, server half).
+pub fn inproc_pair() -> (InprocLink, InprocLink) {
+    let (a_tx, a_rx) = channel();
+    let (b_tx, b_rx) = channel();
+    (
+        InprocLink { tx: a_tx, rx: Mutex::new(b_rx), name: "inproc-client".into() },
+        InprocLink { tx: b_tx, rx: Mutex::new(a_rx), name: "inproc-server".into() },
+    )
+}
+
+impl Link for InprocLink {
+    fn send(&self, frame: &Frame) -> Result<()> {
+        self.tx.send(frame.clone()).map_err(|_| Error::Closed("inproc peer gone".into()))
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame> {
+        let rx = self.rx.lock().unwrap();
+        match rx.recv_timeout(timeout) {
+            Ok(f) => Ok(f),
+            Err(RecvTimeoutError::Timeout) => Err(Error::Timeout("recv".into())),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Closed("inproc peer gone".into())),
+        }
+    }
+
+    fn close(&self) {
+        // Dropping our sender is what closes the peer; nothing to do here —
+        // the object model keeps the sender alive until drop. We signal by
+        // sending a Goodbye instead.
+        self.tx.send(Frame::goodbye("close")).ok();
+    }
+
+    fn peer(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::Value;
+    use std::net::TcpListener;
+
+    #[test]
+    fn inproc_pair_roundtrip() {
+        let (client, server) = inproc_pair();
+        client.send(&Frame::data(&Value::str("ping"))).unwrap();
+        let got = server.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.value().unwrap(), Value::str("ping"));
+        server.send(&Frame::data(&Value::str("pong"))).unwrap();
+        assert_eq!(
+            client.recv_timeout(Duration::from_secs(1)).unwrap().value().unwrap(),
+            Value::str("pong")
+        );
+    }
+
+    #[test]
+    fn inproc_timeout() {
+        let (client, _server) = inproc_pair();
+        match client.recv_timeout(Duration::from_millis(10)) {
+            Err(Error::Timeout(_)) => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inproc_detects_dropped_peer() {
+        let (client, server) = inproc_pair();
+        drop(server);
+        assert!(matches!(client.recv_timeout(Duration::from_millis(10)), Err(Error::Closed(_))));
+        assert!(matches!(client.send(&Frame::heartbeat()), Err(Error::Closed(_))));
+    }
+
+    #[test]
+    fn tcp_link_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server_thread = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let link = TcpLink::new(stream).unwrap();
+            let f = link.recv_timeout(Duration::from_secs(2)).unwrap();
+            link.send(&f).unwrap(); // echo
+        });
+        let client = connect_tcp(addr).unwrap();
+        let v = Value::map([("x", Value::F32s(vec![1.0, 2.0, 3.0]))]);
+        client.send(&Frame::data(&v)).unwrap();
+        let echoed = client.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(echoed.value().unwrap(), v);
+        server_thread.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_times_out() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _srv = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let client = connect_tcp(addr).unwrap();
+        assert!(matches!(
+            client.recv_timeout(Duration::from_millis(20)),
+            Err(Error::Timeout(_))
+        ));
+    }
+
+    #[test]
+    fn tcp_detects_closed_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream);
+        });
+        let client = connect_tcp(addr).unwrap();
+        srv.join().unwrap();
+        match client.recv_timeout(Duration::from_millis(500)) {
+            Err(Error::Closed(_)) | Err(Error::Io(_)) => {}
+            other => panic!("expected closed, got {other:?}"),
+        }
+    }
+}

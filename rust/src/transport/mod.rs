@@ -1,0 +1,9 @@
+//! Client-side transport: a [`Link`] abstraction (framed, bidirectional,
+//! thread-safe send) with TCP and in-process implementations, plus the
+//! reconnecting connection used by the communicator.
+
+pub mod conn;
+pub mod link;
+
+pub use conn::{Connection, ConnectionConfig};
+pub use link::{connect_tcp, inproc_pair, Link};

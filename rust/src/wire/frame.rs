@@ -1,0 +1,178 @@
+//! Length-prefixed framing over a byte stream (TCP or in-proc pipe).
+//!
+//! Layout: `u32-LE payload_len | u8 frame_type | payload`. Heartbeat
+//! frames carry no payload and are handled below the protocol layer, so the
+//! connection can keep heartbeating while user code is busy — the property
+//! the paper calls out as essential to RabbitMQ's fault tolerance.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::wire::codec;
+use crate::wire::value::Value;
+
+/// Hard cap on frame payloads; a peer announcing more is protocol-corrupt.
+/// 256 MiB comfortably covers the largest scientific payloads we ship
+/// (a 1M-atom f32 position array is 12 MiB).
+pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
+
+/// Frame discriminator byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameType {
+    /// A protocol message; payload is a codec-encoded [`Value`].
+    Data = 0,
+    /// Keep-alive; no payload. Exchanged periodically in both directions.
+    Heartbeat = 1,
+    /// Orderly shutdown notice; payload optional (reason string).
+    Goodbye = 2,
+}
+
+impl FrameType {
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(FrameType::Data),
+            1 => Ok(FrameType::Heartbeat),
+            2 => Ok(FrameType::Goodbye),
+            other => Err(Error::Wire(format!("unknown frame type {other}"))),
+        }
+    }
+}
+
+/// A decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub frame_type: FrameType,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Build a data frame from a protocol value.
+    pub fn data(v: &Value) -> Frame {
+        Frame { frame_type: FrameType::Data, payload: codec::encode_to_vec(v) }
+    }
+
+    /// Build a heartbeat frame.
+    pub fn heartbeat() -> Frame {
+        Frame { frame_type: FrameType::Heartbeat, payload: Vec::new() }
+    }
+
+    /// Build a goodbye frame with a reason.
+    pub fn goodbye(reason: &str) -> Frame {
+        Frame {
+            frame_type: FrameType::Goodbye,
+            payload: codec::encode_to_vec(&Value::str(reason)),
+        }
+    }
+
+    /// Decode the payload of a data/goodbye frame as a value.
+    pub fn value(&self) -> Result<Value> {
+        codec::decode(&self.payload)
+    }
+}
+
+/// Write one frame to a stream. The header and payload are written with a
+/// single `write_all` each; callers wrap the stream in a `BufWriter` and
+/// flush at message boundaries.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let len = frame.payload.len();
+    if len as u64 > MAX_FRAME_LEN as u64 {
+        return Err(Error::Wire(format!("frame too large: {len} bytes")));
+    }
+    let mut header = [0u8; 5];
+    header[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    header[4] = frame.frame_type as u8;
+    w.write_all(&header)?;
+    w.write_all(&frame.payload)?;
+    Ok(())
+}
+
+/// Read one frame from a stream (blocking).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut header = [0u8; 5];
+    r.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Wire(format!("peer announced oversized frame: {len} bytes")));
+    }
+    let frame_type = FrameType::from_u8(header[4])?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Frame { frame_type, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_data_frame() {
+        let v = Value::map([("op", Value::str("publish")), ("n", Value::I64(3))]);
+        let frame = Frame::data(&v);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got, frame);
+        assert_eq!(got.value().unwrap(), v);
+    }
+
+    #[test]
+    fn roundtrip_heartbeat() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::heartbeat()).unwrap();
+        assert_eq!(buf.len(), 5); // header only
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got.frame_type, FrameType::Heartbeat);
+        assert!(got.payload.is_empty());
+    }
+
+    #[test]
+    fn goodbye_carries_reason() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::goodbye("shutting down")).unwrap();
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got.frame_type, FrameType::Goodbye);
+        assert_eq!(got.value().unwrap(), Value::str("shutting down"));
+    }
+
+    #[test]
+    fn multiple_frames_in_sequence() {
+        let mut buf = Vec::new();
+        for i in 0..10 {
+            write_frame(&mut buf, &Frame::data(&Value::I64(i))).unwrap();
+        }
+        let mut cursor = Cursor::new(&buf);
+        for i in 0..10 {
+            assert_eq!(read_frame(&mut cursor).unwrap().value().unwrap(), Value::I64(i));
+        }
+    }
+
+    #[test]
+    fn oversized_header_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        buf.push(0);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn unknown_frame_type_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.push(99);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_io_error() {
+        let v = Value::str("hello");
+        let frame = Frame::data(&v);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        buf.truncate(buf.len() - 2);
+        match read_frame(&mut Cursor::new(&buf)) {
+            Err(Error::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,535 @@
+//! JSON codec for [`Value`] — used for config files and human-readable
+//! checkpoint dumps (`serde_json` is unavailable offline, so this is a
+//! complete, tested implementation).
+//!
+//! JSON has no bytes / packed-f32 types, so those map to tagged objects:
+//! `Bytes` ⇄ `{"$bytes": "<hex>"}` and `F32s` ⇄ `{"$f32s": [..numbers..]}`.
+//! Integers that fit i64 parse as `I64`; anything with `.`/`e` parses as
+//! `F64`. Non-finite floats encode as tagged strings (`{"$f64": "nan"}`)
+//! because JSON cannot represent them.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::wire::value::Value;
+
+/// Serialise a value to compact JSON.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, None, 0);
+    out
+}
+
+/// Serialise a value to pretty-printed JSON (2-space indent).
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, Some(2), 0);
+    out
+}
+
+fn write_indent(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(n) = indent {
+        out.push('\n');
+        out.extend(std::iter::repeat(' ').take(n * level));
+    }
+}
+
+fn write_value(v: &Value, out: &mut String, indent: Option<usize>, level: usize) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::I64(i) => out.push_str(&i.to_string()),
+        Value::F64(x) => write_f64(*x, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Bytes(b) => {
+            out.push_str("{\"$bytes\":\"");
+            for byte in b {
+                out.push_str(&format!("{byte:02x}"));
+            }
+            out.push_str("\"}");
+        }
+        Value::F32s(v) => {
+            out.push_str("{\"$f32s\":[");
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_f64(f64::from(*x), out);
+            }
+            out.push_str("]}");
+        }
+        Value::List(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_indent(out, indent, level + 1);
+                write_value(item, out, indent, level + 1);
+            }
+            if !items.is_empty() {
+                write_indent(out, indent, level);
+            }
+            out.push(']');
+        }
+        Value::Map(m) => {
+            out.push('{');
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_indent(out, indent, level + 1);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, out, indent, level + 1);
+            }
+            if !m.is_empty() {
+                write_indent(out, indent, level);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_f64(x: f64, out: &mut String) {
+    if x.is_nan() {
+        out.push_str("{\"$f64\":\"nan\"}");
+    } else if x == f64::INFINITY {
+        out.push_str("{\"$f64\":\"inf\"}");
+    } else if x == f64::NEG_INFINITY {
+        out.push_str("{\"$f64\":\"-inf\"}");
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        // Keep a `.0` so the value re-parses as F64, not I64.
+        out.push_str(&format!("{x:.1}"));
+    } else {
+        // 17 significant digits guarantees f64 roundtrip.
+        let s = format!("{x:e}");
+        // `{:e}` loses precision for some values; use ryu-style shortest via
+        // Display first, checking roundtrip.
+        let plain = format!("{x}");
+        if plain.parse::<f64>() == Ok(x) {
+            out.push_str(&plain);
+            if !plain.contains('.') && !plain.contains('e') && !plain.contains('E') {
+                out.push_str(".0");
+            }
+        } else {
+            out.push_str(&s);
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse JSON text into a [`Value`].
+pub fn from_str(text: &str) -> Result<Value> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing characters after JSON value"));
+    }
+    Ok(v)
+}
+
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Wire(format!("json parse error at byte {}: {msg}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<()> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("max nesting depth exceeded"));
+        }
+        match self.peek().ok_or_else(|| self.err("unexpected end of input"))? {
+            b'n' => {
+                self.literal("null")?;
+                Ok(Value::Null)
+            }
+            b't' => {
+                self.literal("true")?;
+                Ok(Value::Bool(true))
+            }
+            b'f' => {
+                self.literal("false")?;
+                Ok(Value::Bool(false))
+            }
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => {
+                self.bump();
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.bump();
+                    return Ok(Value::List(items));
+                }
+                loop {
+                    self.skip_ws();
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b']') => return Ok(Value::List(items)),
+                        _ => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+            }
+            b'{' => {
+                self.bump();
+                let mut m = BTreeMap::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.bump();
+                    return Ok(Value::Map(m));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    let v = self.value(depth + 1)?;
+                    m.insert(k, v);
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b'}') => return Ok(untag(Value::Map(m))),
+                        _ => return Err(self.err("expected ',' or '}'")),
+                    }
+                }
+            }
+            b'-' | b'0'..=b'9' => self.number(),
+            other => Err(self.err(&format!("unexpected character '{}'", other as char))),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let start = self.pos;
+            // Fast path: consume a run of plain bytes.
+            while let Some(b) = self.peek() {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            if self.pos > start {
+                let chunk = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| self.err("invalid utf-8"))?;
+                s.push_str(chunk);
+            }
+            match self.bump() {
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'b') => s.push('\u{08}'),
+                    Some(b'f') => s.push('\u{0C}'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        if (0xD800..0xDC00).contains(&cp) {
+                            // High surrogate: require a following \uXXXX low.
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            s.push(char::from_u32(c).ok_or_else(|| self.err("invalid codepoint"))?);
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            return Err(self.err("unpaired low surrogate"));
+                        } else {
+                            s.push(char::from_u32(cp).ok_or_else(|| self.err("invalid codepoint"))?);
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(_) => return Err(self.err("control character in string")),
+                None => return Err(self.err("unterminated string")),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let b = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (b as char).to_digit(16).ok_or_else(|| self.err("invalid hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.bump();
+        }
+        let mut is_float = false;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => {
+                    self.bump();
+                }
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.bump();
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        if text.is_empty() || text == "-" {
+            return Err(self.err("invalid number"));
+        }
+        if !is_float {
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Value::I64(i));
+            }
+        }
+        text.parse::<f64>().map(Value::F64).map_err(|_| self.err("invalid number"))
+    }
+}
+
+/// Convert tagged objects (`$bytes`, `$f32s`, `$f64`) back to their native
+/// variants after parsing a map.
+fn untag(v: Value) -> Value {
+    let Value::Map(m) = &v else { return v };
+    if m.len() != 1 {
+        return v;
+    }
+    let (k, inner) = m.iter().next().unwrap();
+    match (k.as_str(), inner) {
+        ("$bytes", Value::Str(hex)) => {
+            if hex.len() % 2 != 0 {
+                return v;
+            }
+            let mut out = Vec::with_capacity(hex.len() / 2);
+            for i in (0..hex.len()).step_by(2) {
+                match u8::from_str_radix(&hex[i..i + 2], 16) {
+                    Ok(b) => out.push(b),
+                    Err(_) => return v,
+                }
+            }
+            Value::Bytes(out)
+        }
+        ("$f32s", Value::List(items)) => {
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                match item.as_f64() {
+                    Ok(x) => out.push(x as f32),
+                    Err(_) => return v,
+                }
+            }
+            Value::F32s(out)
+        }
+        ("$f64", Value::Str(s)) => match s.as_str() {
+            "nan" => Value::F64(f64::NAN),
+            "inf" => Value::F64(f64::INFINITY),
+            "-inf" => Value::F64(f64::NEG_INFINITY),
+            _ => v,
+        },
+        _ => v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+
+    fn roundtrip(v: &Value) -> Value {
+        from_str(&to_string(v)).unwrap()
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        for v in [
+            Value::Null,
+            Value::Bool(true),
+            Value::I64(0),
+            Value::I64(-42),
+            Value::I64(i64::MAX),
+            Value::F64(1.5),
+            Value::F64(-0.25),
+            Value::F64(1e300),
+            Value::str("héllo \"quoted\" \\ line\nbreak"),
+            Value::Bytes(vec![0, 255, 16]),
+            Value::F32s(vec![1.0, 2.5]),
+        ] {
+            assert_eq!(roundtrip(&v), v, "roundtrip failed for {v}");
+        }
+    }
+
+    #[test]
+    fn float_int_distinction_preserved() {
+        assert_eq!(roundtrip(&Value::F64(2.0)), Value::F64(2.0));
+        assert_eq!(roundtrip(&Value::I64(2)), Value::I64(2));
+    }
+
+    #[test]
+    fn nonfinite_floats_roundtrip() {
+        assert_eq!(roundtrip(&Value::F64(f64::INFINITY)), Value::F64(f64::INFINITY));
+        assert_eq!(roundtrip(&Value::F64(f64::NEG_INFINITY)), Value::F64(f64::NEG_INFINITY));
+        match roundtrip(&Value::F64(f64::NAN)) {
+            Value::F64(x) => assert!(x.is_nan()),
+            other => panic!("expected f64, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_standard_json() {
+        let v = from_str(r#"{"a": [1, 2.5, "x", null, true], "b": {"c": -3}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_list().unwrap().len(), 5);
+        assert_eq!(v.get("b").unwrap().get_i64("c").unwrap(), -3);
+    }
+
+    #[test]
+    fn parses_unicode_escapes() {
+        assert_eq!(from_str(r#""Aé""#).unwrap(), Value::str("Aé"));
+        // Surrogate pair: U+1F600
+        assert_eq!(from_str(r#""😀""#).unwrap(), Value::str("😀"));
+        assert!(from_str(r#""\ud83d""#).is_err()); // unpaired high
+        assert!(from_str(r#""\ude00""#).is_err()); // unpaired low
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "{", "[", "\"", "{\"a\"}", "[1,]", "{\"a\":1,}", "nul", "truee", "01x", "--1",
+            "\u{0}",
+        ] {
+            assert!(from_str(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        assert!(from_str("1 2").is_err());
+        assert!(from_str("{} x").is_err());
+    }
+
+    #[test]
+    fn pretty_print_parses_back() {
+        let v = Value::map([
+            ("name", Value::str("eos")),
+            ("volumes", Value::list([Value::F64(0.94), Value::F64(1.06)])),
+            ("empty_list", Value::list([])),
+            ("empty_map", Value::map::<_, String>([])),
+        ]);
+        let pretty = to_string_pretty(&v);
+        assert!(pretty.contains('\n'));
+        assert_eq!(from_str(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn untagged_single_key_maps_survive() {
+        // A user map that happens to have one key must not be mangled.
+        let v = Value::map([("$bytes", Value::I64(1))]);
+        assert_eq!(roundtrip(&v), v);
+        let v2 = Value::map([("regular", Value::str("x"))]);
+        assert_eq!(roundtrip(&v2), v2);
+    }
+
+    fn arb_value(rng: &Rng, depth: usize) -> Value {
+        let max_kind = if depth >= 3 { 7 } else { 9 };
+        match rng.below(max_kind) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::I64(rng.i64()),
+            3 => Value::F64((rng.f64() - 0.5) * 1e9),
+            4 => Value::Str(rng.string(16)),
+            5 => Value::Bytes(rng.bytes(16)),
+            6 => Value::F32s((0..rng.range(0, 8)).map(|_| rng.f32()).collect()),
+            7 => Value::List((0..rng.range(0, 4)).map(|_| arb_value(rng, depth + 1)).collect()),
+            _ => Value::Map(
+                (0..rng.range(0, 4)).map(|_| (rng.string(6), arb_value(rng, depth + 1))).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_json_roundtrip() {
+        run_prop("json roundtrip", |rng| {
+            let v = arb_value(rng, 0);
+            assert_eq!(roundtrip(&v), v, "value: {v}");
+        });
+    }
+
+    #[test]
+    fn prop_parser_never_panics() {
+        run_prop("json garbage", |rng| {
+            let s: String = (0..rng.range(0, 64))
+                .map(|_| *rng.pick(&['{', '}', '[', ']', '"', ',', ':', '1', 'e', '.', '-', 'n', 'a', '\\', ' ']))
+                .collect();
+            let _ = from_str(&s);
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Wire layer: the self-describing value model, its binary codec, a JSON
+//! codec (for configs and human-readable checkpoints), and length-prefixed
+//! framing for the TCP transport.
+//!
+//! Everything that crosses a thread, process or machine boundary in this
+//! crate is a [`Value`]: task payloads, RPC requests/replies, broadcast
+//! bodies, process checkpoints and broker protocol messages. This mirrors
+//! kiwiPy, where all message bodies pass through a single (msgpack/pickle)
+//! encoder.
+
+pub mod codec;
+pub mod frame;
+pub mod json;
+pub mod value;
+
+pub use codec::{decode, encode, encoded_len};
+pub use frame::{read_frame, write_frame, Frame, FrameType, MAX_FRAME_LEN};
+pub use value::Value;

@@ -1,0 +1,356 @@
+//! The self-describing value model used for every message body.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// A dynamically-typed value, the unit of exchange across the whole stack.
+///
+/// `BTreeMap` (not `HashMap`) keeps map encodings canonical: equal values
+/// always encode to identical bytes, which the broker's deduplication and
+/// the checkpoint digests rely on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// All integers are i64 on the wire.
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bytes(Vec<u8>),
+    /// Packed f32 tensor data — the fast path for scientific payloads
+    /// (atomic positions, energies), avoiding per-element boxing.
+    F32s(Vec<f32>),
+    List(Vec<Value>),
+    Map(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Human-readable type name (used in error messages).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::I64(_) => "i64",
+            Value::F64(_) => "f64",
+            Value::Str(_) => "str",
+            Value::Bytes(_) => "bytes",
+            Value::F32s(_) => "f32s",
+            Value::List(_) => "list",
+            Value::Map(_) => "map",
+        }
+    }
+
+    // ---- constructors ----
+
+    /// Build a map value from `(key, value)` pairs.
+    pub fn map<I, K>(pairs: I) -> Value
+    where
+        I: IntoIterator<Item = (K, Value)>,
+        K: Into<String>,
+    {
+        Value::Map(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Build a list value.
+    pub fn list<I: IntoIterator<Item = Value>>(items: I) -> Value {
+        Value::List(items.into_iter().collect())
+    }
+
+    /// Shorthand for a string value.
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    // ---- typed accessors ----
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(type_err("bool", other)),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::I64(i) => Ok(*i),
+            other => Err(type_err("i64", other)),
+        }
+    }
+
+    /// Integer as u64, rejecting negatives.
+    pub fn as_u64(&self) -> Result<u64> {
+        let i = self.as_i64()?;
+        u64::try_from(i).map_err(|_| Error::Wire(format!("expected non-negative int, got {i}")))
+    }
+
+    /// Numeric as f64 (accepts both F64 and I64, like JSON numbers).
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::F64(x) => Ok(*x),
+            Value::I64(i) => Ok(*i as f64),
+            other => Err(type_err("f64", other)),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(type_err("str", other)),
+        }
+    }
+
+    pub fn as_bytes(&self) -> Result<&[u8]> {
+        match self {
+            Value::Bytes(b) => Ok(b),
+            other => Err(type_err("bytes", other)),
+        }
+    }
+
+    pub fn as_f32s(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32s(v) => Ok(v),
+            other => Err(type_err("f32s", other)),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[Value]> {
+        match self {
+            Value::List(v) => Ok(v),
+            other => Err(type_err("list", other)),
+        }
+    }
+
+    pub fn as_map(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Ok(m),
+            other => Err(type_err("map", other)),
+        }
+    }
+
+    pub fn into_map(self) -> Result<BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Ok(m),
+            other => Err(type_err("map", &other)),
+        }
+    }
+
+    /// True if this is `Value::Null`.
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    // ---- map helpers (the dominant access pattern) ----
+
+    /// Get a field of a map value; `Error::Wire` if absent or not a map.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.as_map()?
+            .get(key)
+            .ok_or_else(|| Error::Wire(format!("missing field '{key}'")))
+    }
+
+    /// Get a field, or `None` when the map lacks it or it is null.
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(m) => m.get(key).filter(|v| !v.is_null()),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key)?.as_str()
+    }
+
+    pub fn get_i64(&self, key: &str) -> Result<i64> {
+        self.get(key)?.as_i64()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)?.as_u64()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.as_f64()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool> {
+        self.get(key)?.as_bool()
+    }
+
+    /// Rough in-memory size in bytes; used for queue memory accounting.
+    pub fn approx_size(&self) -> usize {
+        match self {
+            Value::Null | Value::Bool(_) => 1,
+            Value::I64(_) | Value::F64(_) => 8,
+            Value::Str(s) => 8 + s.len(),
+            Value::Bytes(b) => 8 + b.len(),
+            Value::F32s(v) => 8 + 4 * v.len(),
+            Value::List(v) => 8 + v.iter().map(Value::approx_size).sum::<usize>(),
+            Value::Map(m) => {
+                8 + m.iter().map(|(k, v)| 8 + k.len() + v.approx_size()).sum::<usize>()
+            }
+        }
+    }
+}
+
+fn type_err(wanted: &str, got: &Value) -> Error {
+    Error::Wire(format!("expected {wanted}, got {}", got.type_name()))
+}
+
+impl fmt::Display for Value {
+    /// Compact JSON-ish rendering (bytes/f32s are summarised, not dumped).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::I64(i) => write!(f, "{i}"),
+            Value::F64(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Bytes(b) => write!(f, "<{} bytes>", b.len()),
+            Value::F32s(v) => write!(f, "<{} f32>", v.len()),
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Map(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k:?}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<i64> for Value {
+    fn from(i: i64) -> Self {
+        Value::I64(i)
+    }
+}
+impl From<i32> for Value {
+    fn from(i: i32) -> Self {
+        Value::I64(i as i64)
+    }
+}
+impl From<u32> for Value {
+    fn from(i: u32) -> Self {
+        Value::I64(i as i64)
+    }
+}
+impl From<u64> for Value {
+    fn from(i: u64) -> Self {
+        Value::I64(i as i64)
+    }
+}
+impl From<usize> for Value {
+    fn from(i: usize) -> Self {
+        Value::I64(i as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(x: f64) -> Self {
+        Value::F64(x)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<Vec<u8>> for Value {
+    fn from(b: Vec<u8>) -> Self {
+        Value::Bytes(b)
+    }
+}
+impl From<Vec<f32>> for Value {
+    fn from(v: Vec<f32>) -> Self {
+        Value::F32s(v)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Self {
+        Value::List(v)
+    }
+}
+impl<V: Into<Value>> From<Option<V>> for Value {
+    fn from(o: Option<V>) -> Self {
+        match o {
+            Some(v) => v.into(),
+            None => Value::Null,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_field_access() {
+        let v = Value::map([
+            ("name", Value::str("calc")),
+            ("count", Value::I64(3)),
+            ("ratio", Value::F64(0.5)),
+            ("on", Value::Bool(true)),
+        ]);
+        assert_eq!(v.get_str("name").unwrap(), "calc");
+        assert_eq!(v.get_i64("count").unwrap(), 3);
+        assert_eq!(v.get_f64("ratio").unwrap(), 0.5);
+        assert!(v.get_bool("on").unwrap());
+        assert!(v.get("missing").is_err());
+    }
+
+    #[test]
+    fn numeric_coercion_int_to_float_only() {
+        assert_eq!(Value::I64(2).as_f64().unwrap(), 2.0);
+        assert!(Value::F64(2.0).as_i64().is_err());
+    }
+
+    #[test]
+    fn as_u64_rejects_negative() {
+        assert!(Value::I64(-1).as_u64().is_err());
+        assert_eq!(Value::I64(7).as_u64().unwrap(), 7);
+    }
+
+    #[test]
+    fn get_opt_filters_null() {
+        let v = Value::map([("a", Value::Null), ("b", Value::I64(1))]);
+        assert!(v.get_opt("a").is_none());
+        assert!(v.get_opt("b").is_some());
+        assert!(v.get_opt("c").is_none());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let v = Value::map([("k", Value::list([Value::I64(1), Value::str("x")]))]);
+        assert_eq!(v.to_string(), "{\"k\": [1, \"x\"]}");
+    }
+
+    #[test]
+    fn approx_size_grows_with_content() {
+        let small = Value::str("a");
+        let big = Value::Bytes(vec![0; 1024]);
+        assert!(big.approx_size() > small.approx_size());
+    }
+}

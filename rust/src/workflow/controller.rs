@@ -1,0 +1,128 @@
+//! Process controller: the client side of §I.B — pause/play/kill/status
+//! RPCs to live processes, individually or broadcast to all at once
+//! (§I.C's first use-case).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::communicator::{Communicator, KiwiFuture};
+use crate::error::Result;
+use crate::wire::Value;
+use crate::workflow::process_rpc_id;
+
+/// Controls live processes through a communicator.
+pub struct ProcessController {
+    comm: Arc<dyn Communicator>,
+    timeout: Duration,
+}
+
+impl ProcessController {
+    pub fn new(comm: Arc<dyn Communicator>) -> Self {
+        ProcessController { comm, timeout: Duration::from_secs(10) }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    fn intent(&self, pid: &str, intent: &str, extra: Option<(&str, Value)>) -> Result<KiwiFuture<Value>> {
+        let mut fields = vec![("intent", Value::str(intent))];
+        if let Some((k, v)) = extra {
+            fields.push((k, v));
+        }
+        self.comm.rpc_send(&process_rpc_id(pid), Value::map(fields))
+    }
+
+    /// Pause one process; resolves `true` when accepted.
+    pub fn pause(&self, pid: &str) -> Result<bool> {
+        Ok(self.intent(pid, "pause", None)?.wait(self.timeout)?.as_bool()?)
+    }
+
+    /// Resume a paused process.
+    pub fn play(&self, pid: &str) -> Result<bool> {
+        Ok(self.intent(pid, "play", None)?.wait(self.timeout)?.as_bool()?)
+    }
+
+    /// Kill a process with a reason.
+    pub fn kill(&self, pid: &str, reason: &str) -> Result<bool> {
+        Ok(self
+            .intent(pid, "kill", Some(("reason", Value::str(reason))))?
+            .wait(self.timeout)?
+            .as_bool()?)
+    }
+
+    /// Status snapshot `{pid, state, step}`.
+    pub fn status(&self, pid: &str) -> Result<Value> {
+        self.intent(pid, "status", None)?.wait(self.timeout)
+    }
+
+    /// Broadcast a control message to *all* live processes (paper §I.C:
+    /// "sending pause, play or kill messages to all processes at once").
+    /// Processes act on it via their own broadcast subscription — see
+    /// [`control_subject`]. Fire-and-forget.
+    pub fn broadcast_intent(&self, intent: &str) -> Result<()> {
+        self.comm.broadcast_send(
+            Value::map([("intent", Value::str(intent))]),
+            None,
+            Some(&control_subject(intent)),
+        )
+    }
+}
+
+/// Broadcast subject carrying a global control intent.
+pub fn control_subject(intent: &str) -> String {
+    format!("control.all.{intent}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communicator::LocalCommunicator;
+    use crate::error::Error;
+
+    #[test]
+    fn controller_talks_to_rpc_endpoint() {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        comm.add_rpc_subscriber(
+            &process_rpc_id("px"),
+            Box::new(|msg| {
+                Ok(match msg.get_str("intent")? {
+                    "pause" | "play" | "kill" => Value::Bool(true),
+                    "status" => Value::map([("pid", Value::str("px"))]),
+                    _ => Value::Bool(false),
+                })
+            }),
+        )
+        .unwrap();
+        let ctl = ProcessController::new(Arc::clone(&comm));
+        assert!(ctl.pause("px").unwrap());
+        assert!(ctl.play("px").unwrap());
+        assert!(ctl.kill("px", "because").unwrap());
+        assert_eq!(ctl.status("px").unwrap().get_str("pid").unwrap(), "px");
+    }
+
+    #[test]
+    fn unknown_pid_is_unroutable() {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let ctl = ProcessController::new(comm);
+        assert!(matches!(ctl.pause("ghost"), Err(Error::UnroutableMessage(_))));
+    }
+
+    #[test]
+    fn broadcast_intent_reaches_subscribers() {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let (tx, rx) = std::sync::mpsc::channel();
+        comm.add_broadcast_subscriber(
+            crate::communicator::BroadcastFilter::all().subject("control.all.*"),
+            Box::new(move |m| tx.send(m.subject.unwrap()).unwrap()),
+        )
+        .unwrap();
+        let ctl = ProcessController::new(Arc::clone(&comm));
+        ctl.broadcast_intent("pause").unwrap();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(1)).unwrap(),
+            "control.all.pause"
+        );
+    }
+}

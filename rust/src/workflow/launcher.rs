@@ -1,0 +1,209 @@
+//! Process launching over the task queue (§I.A).
+//!
+//! * [`RemoteLauncher`] — client side: `launch` / `continue_process` submit
+//!   task messages; the task's future resolves with the process's terminal
+//!   record when a daemon worker completes it.
+//! * [`ProcessLauncher`] — worker side: interprets those task messages,
+//!   builds a [`Runner`] (fresh or from checkpoint) and runs it.
+
+use std::sync::Arc;
+
+use crate::communicator::rmq::TaskContext;
+use crate::communicator::{unique_id, Communicator, KiwiFuture};
+use crate::error::{Error, Result};
+use crate::wire::Value;
+use crate::workflow::checkpoint::CheckpointStore;
+use crate::workflow::process::Runner;
+use crate::workflow::registry::ProcessRegistry;
+
+/// Default task queue name (AiiDA uses a single process queue too).
+pub const DEFAULT_TASK_QUEUE: &str = "kiwi.tasks";
+
+/// Client-side launcher.
+pub struct RemoteLauncher {
+    comm: Arc<dyn Communicator>,
+    queue: String,
+}
+
+impl RemoteLauncher {
+    pub fn new(comm: Arc<dyn Communicator>) -> Self {
+        Self::with_queue(comm, DEFAULT_TASK_QUEUE)
+    }
+
+    pub fn with_queue(comm: Arc<dyn Communicator>, queue: &str) -> Self {
+        RemoteLauncher { comm, queue: queue.to_string() }
+    }
+
+    /// Launch a new process; returns `(pid, future of terminal record)`.
+    pub fn launch(
+        &self,
+        process_type: &str,
+        inputs: Value,
+    ) -> Result<(String, KiwiFuture<Value>)> {
+        let pid = unique_id("proc");
+        let fut = self.comm.task_send(
+            &self.queue,
+            Value::map([
+                ("action", Value::str("launch")),
+                ("process_type", Value::str(process_type)),
+                ("inputs", inputs),
+                ("pid", Value::str(&pid)),
+            ]),
+        )?;
+        Ok((pid, fut))
+    }
+
+    /// Ask a daemon to resume a checkpointed process.
+    pub fn continue_process(&self, pid: &str) -> Result<KiwiFuture<Value>> {
+        self.comm.task_send(
+            &self.queue,
+            Value::map([("action", Value::str("continue")), ("pid", Value::str(pid))]),
+        )
+    }
+}
+
+/// Worker-side interpreter of launch/continue tasks.
+pub struct ProcessLauncher {
+    comm: Arc<dyn Communicator>,
+    store: Arc<dyn CheckpointStore>,
+    registry: ProcessRegistry,
+    queue: String,
+}
+
+impl ProcessLauncher {
+    pub fn new(
+        comm: Arc<dyn Communicator>,
+        store: Arc<dyn CheckpointStore>,
+        registry: ProcessRegistry,
+    ) -> Self {
+        Self::with_queue(comm, store, registry, DEFAULT_TASK_QUEUE)
+    }
+
+    pub fn with_queue(
+        comm: Arc<dyn Communicator>,
+        store: Arc<dyn CheckpointStore>,
+        registry: ProcessRegistry,
+        queue: &str,
+    ) -> Self {
+        ProcessLauncher { comm, store, registry, queue: queue.to_string() }
+    }
+
+    /// Build the runner a task message describes.
+    pub fn runner_for(&self, task: &Value) -> Result<Runner> {
+        match task.get_str("action")? {
+            "launch" => Runner::launch(
+                task.get_str("pid")?,
+                task.get_str("process_type")?,
+                task.get("inputs")?.clone(),
+                Arc::clone(&self.comm),
+                Arc::clone(&self.store),
+                &self.registry,
+                &self.queue,
+            ),
+            "continue" => {
+                let pid = task.get_str("pid")?;
+                let bundle = self
+                    .store
+                    .load(pid)?
+                    .ok_or_else(|| Error::Persistence(format!("no checkpoint for '{pid}'")))?;
+                Runner::from_bundle(
+                    &bundle,
+                    Arc::clone(&self.comm),
+                    Arc::clone(&self.store),
+                    &self.registry,
+                    &self.queue,
+                )
+            }
+            other => Err(Error::Broker(format!("unknown task action '{other}'"))),
+        }
+    }
+
+    /// Execute one task message to completion and settle its context.
+    /// This is what daemon workers run on their worker threads.
+    pub fn handle_task(&self, task: Value, ctx: TaskContext) {
+        match self.runner_for(&task) {
+            Ok(runner) => {
+                let result = runner.run().map(|outcome| outcome.to_record());
+                ctx.complete(result);
+            }
+            Err(e) => {
+                log::warn!("launcher: task rejected: {e}");
+                ctx.complete(Err(e));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communicator::LocalCommunicator;
+    use crate::workflow::checkpoint::MemoryCheckpointStore;
+    use crate::workflow::process::{ProcessLogic, StepContext, StepOutcome};
+    use std::time::Duration;
+
+    struct Echo {
+        inputs: Value,
+    }
+    impl ProcessLogic for Echo {
+        fn step(&mut self, _: u32, _: &mut StepContext) -> Result<StepOutcome> {
+            Ok(StepOutcome::Finish(self.inputs.clone()))
+        }
+        fn save_state(&self) -> Value {
+            self.inputs.clone()
+        }
+        fn load_state(&mut self, state: &Value) -> Result<()> {
+            self.inputs = state.get_opt("inputs").cloned().unwrap_or(Value::Null);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn launch_task_runs_process_and_replies() {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        let registry = ProcessRegistry::new();
+        registry.register("echo", || Box::new(Echo { inputs: Value::Null }));
+        let launcher = Arc::new(ProcessLauncher::new(
+            Arc::clone(&comm),
+            Arc::clone(&store),
+            registry,
+        ));
+        let l2 = Arc::clone(&launcher);
+        comm.task_queue(
+            DEFAULT_TASK_QUEUE,
+            0,
+            Box::new(move |task, ctx| l2.handle_task(task, ctx)),
+        )
+        .unwrap();
+
+        let remote = RemoteLauncher::new(Arc::clone(&comm));
+        let (pid, fut) = remote
+            .launch("echo", Value::map([("x", Value::I64(9))]))
+            .unwrap();
+        let record = fut.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert_eq!(record.get("outputs").unwrap().get_i64("x").unwrap(), 9);
+        assert!(pid.starts_with("proc-"));
+    }
+
+    #[test]
+    fn continue_task_without_checkpoint_errors() {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        let launcher =
+            ProcessLauncher::new(Arc::clone(&comm), store, ProcessRegistry::new());
+        let task = Value::map([("action", Value::str("continue")), ("pid", Value::str("ghost"))]);
+        assert!(launcher.runner_for(&task).is_err());
+    }
+
+    #[test]
+    fn unknown_action_rejected() {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        let launcher =
+            ProcessLauncher::new(Arc::clone(&comm), store, ProcessRegistry::new());
+        let task = Value::map([("action", Value::str("explode"))]);
+        assert!(launcher.runner_for(&task).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! The workflow engine — the AiiDA/plumpy analog that exercises all three
+//! kiwiPy message types exactly as the paper describes:
+//!
+//! * **Task queues** (§I.A): processes are submitted to a durable task
+//!   queue and consumed by daemon workers; a dead worker's processes are
+//!   requeued and resumed *from their checkpoints*.
+//! * **RPC** (§I.B): every live process is addressable as `proc.<pid>` and
+//!   answers `pause` / `play` / `kill` / `status`.
+//! * **Broadcasts** (§I.C): every state change is broadcast as
+//!   `state_changed.<pid>.<state>`; parents await children by subscribing
+//!   to the child's terminal broadcast — full decoupling, the child never
+//!   knows the parent exists.
+
+pub mod checkpoint;
+pub mod controller;
+pub mod launcher;
+pub mod process;
+pub mod registry;
+pub mod state;
+pub mod workchain;
+
+pub use checkpoint::{Bundle, CheckpointStore, FileCheckpointStore, MemoryCheckpointStore};
+pub use controller::ProcessController;
+pub use launcher::{ProcessLauncher, RemoteLauncher};
+pub use process::{ProcessLogic, RunOutcome, Runner, StepContext, StepOutcome, WaitCondition};
+pub use registry::ProcessRegistry;
+pub use state::ProcessState;
+
+/// Broadcast subject for a process state change.
+pub fn state_subject(pid: &str, state: ProcessState) -> String {
+    format!("state_changed.{pid}.{}", state.as_str())
+}
+
+/// RPC identifier of a live process.
+pub fn process_rpc_id(pid: &str) -> String {
+    format!("proc.{pid}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subjects_and_rpc_ids() {
+        assert_eq!(state_subject("p1", ProcessState::Finished), "state_changed.p1.finished");
+        assert_eq!(process_rpc_id("p1"), "proc.p1");
+    }
+}

@@ -1,0 +1,85 @@
+//! Process type registry: maps a `process_type` string (what goes into
+//! task messages and checkpoints) to a factory producing fresh
+//! [`ProcessLogic`] instances — how a daemon on another machine
+//! reconstructs a process it has never seen.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::workflow::process::ProcessLogic;
+
+type Factory = Arc<dyn Fn() -> Box<dyn ProcessLogic> + Send + Sync>;
+
+/// Thread-safe, clonable registry (clones share the table).
+#[derive(Clone, Default)]
+pub struct ProcessRegistry {
+    factories: Arc<Mutex<HashMap<String, Factory>>>,
+}
+
+impl ProcessRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a process type. Re-registering a name replaces the factory
+    /// (tests do this; production code registers once at startup).
+    pub fn register<F>(&self, process_type: &str, factory: F)
+    where
+        F: Fn() -> Box<dyn ProcessLogic> + Send + Sync + 'static,
+    {
+        self.factories.lock().unwrap().insert(process_type.to_string(), Arc::new(factory));
+    }
+
+    /// Instantiate a fresh logic for `process_type`.
+    pub fn create(&self, process_type: &str) -> Result<Box<dyn ProcessLogic>> {
+        let factories = self.factories.lock().unwrap();
+        let f = factories
+            .get(process_type)
+            .ok_or_else(|| Error::Config(format!("unknown process type '{process_type}'")))?;
+        Ok(f())
+    }
+
+    pub fn known_types(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.factories.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::Value;
+    use crate::workflow::process::{StepContext, StepOutcome};
+
+    struct Nop;
+    impl ProcessLogic for Nop {
+        fn step(&mut self, _step: u32, _ctx: &mut StepContext) -> crate::error::Result<StepOutcome> {
+            Ok(StepOutcome::Finish(Value::Null))
+        }
+        fn save_state(&self) -> Value {
+            Value::Null
+        }
+        fn load_state(&mut self, _state: &Value) -> crate::error::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn register_and_create() {
+        let reg = ProcessRegistry::new();
+        reg.register("nop", || Box::new(Nop));
+        assert!(reg.create("nop").is_ok());
+        assert!(reg.create("other").is_err());
+        assert_eq!(reg.known_types(), vec!["nop"]);
+    }
+
+    #[test]
+    fn clones_share_registrations() {
+        let reg = ProcessRegistry::new();
+        let reg2 = reg.clone();
+        reg.register("nop", || Box::new(Nop));
+        assert!(reg2.create("nop").is_ok());
+    }
+}

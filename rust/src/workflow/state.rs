@@ -1,0 +1,179 @@
+//! Process lifecycle state machine (plumpy's states, same names).
+//!
+//! ```text
+//! Created ──play──▶ Running ◀─────play───── Paused
+//!                   │  ▲ │ ▲                  ▲
+//!                   │  │ │ └──wait done──┐    │
+//!                   │  │ └—─wait────▶ Waiting─┴──pause
+//!                   │  └──────────────────┘
+//!                   ├──▶ Finished   (terminal)
+//!                   ├──▶ Excepted   (terminal)
+//!                   └──▶ Killed     (terminal)
+//! ```
+
+use crate::error::{Error, Result};
+
+/// Lifecycle states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProcessState {
+    Created,
+    Running,
+    Waiting,
+    Paused,
+    Finished,
+    Excepted,
+    Killed,
+}
+
+/// Events that drive transitions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProcessEvent {
+    Play,
+    Pause,
+    Wait,
+    Resume,
+    Finish,
+    Except,
+    Kill,
+}
+
+impl ProcessState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProcessState::Created => "created",
+            ProcessState::Running => "running",
+            ProcessState::Waiting => "waiting",
+            ProcessState::Paused => "paused",
+            ProcessState::Finished => "finished",
+            ProcessState::Excepted => "excepted",
+            ProcessState::Killed => "killed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "created" => Ok(ProcessState::Created),
+            "running" => Ok(ProcessState::Running),
+            "waiting" => Ok(ProcessState::Waiting),
+            "paused" => Ok(ProcessState::Paused),
+            "finished" => Ok(ProcessState::Finished),
+            "excepted" => Ok(ProcessState::Excepted),
+            "killed" => Ok(ProcessState::Killed),
+            other => Err(Error::Persistence(format!("unknown process state '{other}'"))),
+        }
+    }
+
+    /// Terminal states never transition again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, ProcessState::Finished | ProcessState::Excepted | ProcessState::Killed)
+    }
+
+    /// Apply an event; `Err(InvalidStateTransition)` when not allowed.
+    pub fn apply(&self, event: ProcessEvent) -> Result<ProcessState> {
+        use ProcessEvent as E;
+        use ProcessState as S;
+        let next = match (self, event) {
+            (S::Created, E::Play) => S::Running,
+            (S::Created, E::Kill) => S::Killed,
+            (S::Running, E::Wait) => S::Waiting,
+            (S::Running, E::Pause) => S::Paused,
+            (S::Running, E::Finish) => S::Finished,
+            (S::Running, E::Except) => S::Excepted,
+            (S::Running, E::Kill) => S::Killed,
+            (S::Waiting, E::Resume) => S::Running,
+            (S::Waiting, E::Pause) => S::Paused,
+            (S::Waiting, E::Except) => S::Excepted,
+            (S::Waiting, E::Kill) => S::Killed,
+            (S::Paused, E::Play) => S::Running,
+            (S::Paused, E::Kill) => S::Killed,
+            (S::Paused, E::Except) => S::Excepted,
+            (from, ev) => {
+                return Err(Error::InvalidStateTransition {
+                    from: from.as_str().to_string(),
+                    event: format!("{ev:?}"),
+                })
+            }
+        };
+        Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{run_prop, Rng};
+    use ProcessEvent as E;
+    use ProcessState as S;
+
+    #[test]
+    fn happy_path() {
+        let s = S::Created;
+        let s = s.apply(E::Play).unwrap();
+        assert_eq!(s, S::Running);
+        let s = s.apply(E::Wait).unwrap();
+        assert_eq!(s, S::Waiting);
+        let s = s.apply(E::Resume).unwrap();
+        let s = s.apply(E::Finish).unwrap();
+        assert_eq!(s, S::Finished);
+        assert!(s.is_terminal());
+    }
+
+    #[test]
+    fn pause_resume_cycle() {
+        let s = S::Running.apply(E::Pause).unwrap();
+        assert_eq!(s, S::Paused);
+        assert_eq!(s.apply(E::Play).unwrap(), S::Running);
+    }
+
+    #[test]
+    fn terminal_states_are_sticky() {
+        for terminal in [S::Finished, S::Excepted, S::Killed] {
+            for ev in [E::Play, E::Pause, E::Wait, E::Resume, E::Finish, E::Except, E::Kill] {
+                assert!(terminal.apply(ev).is_err(), "{terminal:?} must reject {ev:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn kill_allowed_from_all_live_states() {
+        for live in [S::Created, S::Running, S::Waiting, S::Paused] {
+            assert_eq!(live.apply(E::Kill).unwrap(), S::Killed);
+        }
+    }
+
+    #[test]
+    fn cannot_finish_from_paused() {
+        assert!(S::Paused.apply(E::Finish).is_err());
+        assert!(S::Created.apply(E::Finish).is_err());
+    }
+
+    #[test]
+    fn roundtrip_names() {
+        for s in [S::Created, S::Running, S::Waiting, S::Paused, S::Finished, S::Excepted, S::Killed]
+        {
+            assert_eq!(ProcessState::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(ProcessState::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn prop_no_escape_from_terminal() {
+        run_prop("terminal absorbing", |rng: &Rng| {
+            let mut s = S::Created;
+            let events =
+                [E::Play, E::Pause, E::Wait, E::Resume, E::Finish, E::Except, E::Kill];
+            let mut was_terminal = false;
+            for _ in 0..rng.range(1, 50) {
+                let ev = *rng.pick(&events);
+                match s.apply(ev) {
+                    Ok(next) => {
+                        assert!(!was_terminal, "escaped terminal state");
+                        s = next;
+                    }
+                    Err(_) => {}
+                }
+                was_terminal = s.is_terminal();
+            }
+        });
+    }
+}

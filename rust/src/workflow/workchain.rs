@@ -1,0 +1,353 @@
+//! WorkChains: declarative multi-step workflows (AiiDA's `WorkChain`).
+//!
+//! A [`WorkChain`] is a [`ProcessLogic`] assembled from named steps
+//! operating on a shared, checkpointable context (`ChainCtx`). Steps can
+//! launch child processes and park the chain until they all terminate —
+//! the parent learns of completion through the child's broadcast, never a
+//! direct reply (paper §I.C).
+//!
+//! ```ignore
+//! let chain = WorkChainSpec::new("eos")
+//!     .step("setup", |cc, _ctx| { cc.set("i", Value::I64(0)); Ok(ChainStep::Next) })
+//!     .step("launch", |cc, ctx| {
+//!         let pid = ctx.spawn("relax", cc.get("structure")?.clone())?;
+//!         cc.push("children", Value::str(&pid));
+//!         Ok(ChainStep::WaitChildren)
+//!     })
+//!     .step("collect", |cc, ctx| { ... Ok(ChainStep::Finish(outputs)) });
+//! registry.register("eos", move || chain.instantiate());
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::wire::Value;
+use crate::workflow::process::{ProcessLogic, StepContext, StepOutcome, WaitCondition};
+
+/// What a chain step decides.
+pub enum ChainStep {
+    /// Next step in the outline.
+    Next,
+    /// Jump to a named step (loops).
+    Goto(&'static str),
+    /// Park until every child in `ctx.children()` not yet collected
+    /// terminates, then continue with the next step.
+    WaitChildren,
+    /// Park for a fixed duration.
+    Sleep(Duration),
+    /// Terminal success.
+    Finish(Value),
+}
+
+/// A step body: mutates the chain context, optionally spawns children.
+pub type ChainStepFn = Arc<dyn Fn(&mut ChainCtx, &mut StepContext) -> Result<ChainStep> + Send + Sync>;
+
+/// The chain's persistent key-value context (serialised into checkpoints).
+#[derive(Clone, Debug, Default)]
+pub struct ChainCtx {
+    map: BTreeMap<String, Value>,
+}
+
+impl ChainCtx {
+    /// Inputs the chain was launched with.
+    pub fn inputs(&self) -> Value {
+        self.map.get("inputs").cloned().unwrap_or(Value::Null)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.map.get(key).ok_or_else(|| Error::Persistence(format!("no context key '{key}'")))
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.map.insert(key.to_string(), value);
+    }
+
+    /// Append to a list-valued key (creating it if needed).
+    pub fn push(&mut self, key: &str, value: Value) {
+        match self.map.get_mut(key) {
+            Some(Value::List(v)) => v.push(value),
+            _ => {
+                self.map.insert(key.to_string(), Value::List(vec![value]));
+            }
+        }
+    }
+
+    /// Child pids recorded via [`ChainCtx::add_child`].
+    pub fn children(&self) -> Vec<String> {
+        match self.map.get("__children") {
+            Some(Value::List(v)) => {
+                v.iter().filter_map(|x| x.as_str().ok().map(String::from)).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Record a spawned child for `WaitChildren` / result collection.
+    pub fn add_child(&mut self, pid: &str) {
+        self.push("__children", Value::str(pid));
+    }
+
+    /// Clear the recorded children (after collecting a generation).
+    pub fn clear_children(&mut self) {
+        self.map.remove("__children");
+    }
+}
+
+/// Immutable description of a workchain (shared by every instance).
+pub struct WorkChainSpec {
+    name: String,
+    steps: Vec<(String, ChainStepFn)>,
+}
+
+impl WorkChainSpec {
+    pub fn new(name: &str) -> Self {
+        WorkChainSpec { name: name.to_string(), steps: Vec::new() }
+    }
+
+    /// Append a named step.
+    pub fn step<F>(mut self, name: &str, f: F) -> Self
+    where
+        F: Fn(&mut ChainCtx, &mut StepContext) -> Result<ChainStep> + Send + Sync + 'static,
+    {
+        self.steps.push((name.to_string(), Arc::new(f)));
+        self
+    }
+
+    /// Finish building: an `Arc`'d spec whose `instantiate()` feeds a
+    /// process registry.
+    pub fn build(self) -> Arc<WorkChainSpec> {
+        Arc::new(self)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn index_of(&self, step_name: &str) -> Result<u32> {
+        self.steps
+            .iter()
+            .position(|(n, _)| n == step_name)
+            .map(|i| i as u32)
+            .ok_or_else(|| Error::Config(format!("workchain '{}': no step '{step_name}'", self.name)))
+    }
+}
+
+/// Instantiate a runnable chain from a spec (one per process instance).
+pub fn instantiate(spec: &Arc<WorkChainSpec>) -> Box<dyn ProcessLogic> {
+    Box::new(WorkChain { spec: Arc::clone(spec), ctx: ChainCtx::default() })
+}
+
+/// The ProcessLogic adapter driving a spec.
+pub struct WorkChain {
+    spec: Arc<WorkChainSpec>,
+    ctx: ChainCtx,
+}
+
+impl ProcessLogic for WorkChain {
+    fn step(&mut self, step: u32, pctx: &mut StepContext) -> Result<StepOutcome> {
+        let Some((_, f)) = self.spec.steps.get(step as usize) else {
+            // Ran off the end of the outline: implicit finish with the
+            // whole context as outputs (minus internals).
+            let mut out = self.ctx.map.clone();
+            out.retain(|k, _| !k.starts_with("__"));
+            return Ok(StepOutcome::Finish(Value::Map(out)));
+        };
+        match f(&mut self.ctx, pctx)? {
+            ChainStep::Next => Ok(StepOutcome::Continue),
+            ChainStep::Goto(name) => Ok(StepOutcome::Goto(self.spec.index_of(name)?)),
+            ChainStep::WaitChildren => {
+                let pending: Vec<String> = self
+                    .ctx
+                    .children()
+                    .into_iter()
+                    .filter(|pid| matches!(pctx.child_result(pid), Ok(None)))
+                    .collect();
+                if pending.is_empty() {
+                    Ok(StepOutcome::Continue)
+                } else {
+                    Ok(StepOutcome::Wait(WaitCondition::ProcessesTerminated(pending)))
+                }
+            }
+            ChainStep::Sleep(d) => Ok(StepOutcome::Wait(WaitCondition::Timer(d))),
+            ChainStep::Finish(outputs) => Ok(StepOutcome::Finish(outputs)),
+        }
+    }
+
+    fn save_state(&self) -> Value {
+        Value::Map(self.ctx.map.clone())
+    }
+
+    fn load_state(&mut self, state: &Value) -> Result<()> {
+        self.ctx.map = state.as_map()?.clone();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communicator::{Communicator, LocalCommunicator};
+    use crate::workflow::checkpoint::{CheckpointStore, MemoryCheckpointStore};
+    use crate::workflow::process::{RunOutcome, Runner};
+    use crate::workflow::registry::ProcessRegistry;
+    use crate::workflow::launcher::{ProcessLauncher, DEFAULT_TASK_QUEUE};
+
+    fn setup() -> (Arc<dyn Communicator>, Arc<dyn CheckpointStore>, ProcessRegistry) {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        (comm, store, ProcessRegistry::new())
+    }
+
+    #[test]
+    fn linear_chain_runs_and_implicit_finish() {
+        let (comm, store, registry) = setup();
+        let spec = WorkChainSpec::new("linear")
+            .step("a", |cc, _| {
+                cc.set("x", Value::I64(1));
+                Ok(ChainStep::Next)
+            })
+            .step("b", |cc, _| {
+                let x = cc.get("x")?.as_i64()?;
+                cc.set("y", Value::I64(x + 1));
+                Ok(ChainStep::Next)
+            })
+            .build();
+        registry.register("linear", move || instantiate(&spec));
+        let runner =
+            Runner::launch("wc1", "linear", Value::Null, comm, store, &registry, "q").unwrap();
+        match runner.run().unwrap() {
+            RunOutcome::Finished(out) => {
+                assert_eq!(out.get_i64("y").unwrap(), 2);
+                assert!(out.get_opt("__children").is_none());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn goto_implements_loops() {
+        let (comm, store, registry) = setup();
+        let spec = WorkChainSpec::new("looper")
+            .step("init", |cc, _| {
+                cc.set("i", Value::I64(0));
+                Ok(ChainStep::Next)
+            })
+            .step("body", |cc, _| {
+                let i = cc.get("i")?.as_i64()? + 1;
+                cc.set("i", Value::I64(i));
+                if i < 5 {
+                    Ok(ChainStep::Goto("body"))
+                } else {
+                    Ok(ChainStep::Finish(Value::map([("i", Value::I64(i))])))
+                }
+            })
+            .build();
+        registry.register("looper", move || instantiate(&spec));
+        let runner =
+            Runner::launch("wc2", "looper", Value::Null, comm, store, &registry, "q").unwrap();
+        assert_eq!(
+            runner.run().unwrap(),
+            RunOutcome::Finished(Value::map([("i", Value::I64(5))]))
+        );
+    }
+
+    #[test]
+    fn goto_unknown_step_excepts() {
+        let (comm, store, registry) = setup();
+        let spec = WorkChainSpec::new("bad")
+            .step("a", |_, _| Ok(ChainStep::Goto("nowhere")))
+            .build();
+        registry.register("bad", move || instantiate(&spec));
+        let runner =
+            Runner::launch("wc3", "bad", Value::Null, comm, store, &registry, "q").unwrap();
+        assert!(matches!(runner.run().unwrap(), RunOutcome::Excepted(_)));
+    }
+
+    #[test]
+    fn parent_awaits_children_via_broadcast() {
+        // Full decoupled parent/child: a daemon-style task subscriber runs
+        // children; the parent waits on their broadcasts (paper §I.C).
+        let (comm, store, registry) = setup();
+
+        // Child: squares its input.
+        let child_spec = WorkChainSpec::new("square")
+            .step("go", |cc, _| {
+                let x = cc.inputs().get_i64("x")?;
+                Ok(ChainStep::Finish(Value::map([("sq", Value::I64(x * x))])))
+            })
+            .build();
+        registry.register("square", move || instantiate(&child_spec));
+
+        // Parent: spawns two children, waits for both, sums.
+        let parent_spec = WorkChainSpec::new("summer")
+            .step("spawn", |cc, ctx| {
+                for x in [3i64, 4] {
+                    let pid = ctx.spawn("square", Value::map([("x", Value::I64(x))]))?;
+                    cc.add_child(&pid);
+                }
+                Ok(ChainStep::WaitChildren)
+            })
+            .step("collect", |cc, ctx| {
+                let mut total = 0;
+                for pid in cc.children() {
+                    total += ctx.child_outputs(&pid)?.get_i64("sq")?;
+                }
+                Ok(ChainStep::Finish(Value::map([("total", Value::I64(total))])))
+            })
+            .build();
+        registry.register("summer", move || instantiate(&parent_spec));
+
+        // A task subscriber standing in for the daemon: runs each launch
+        // task on its own thread.
+        let launcher = Arc::new(ProcessLauncher::new(
+            Arc::clone(&comm),
+            Arc::clone(&store),
+            registry.clone(),
+        ));
+        let l2 = Arc::clone(&launcher);
+        comm.task_queue(
+            DEFAULT_TASK_QUEUE,
+            0,
+            Box::new(move |task, tctx| {
+                let l3 = Arc::clone(&l2);
+                std::thread::spawn(move || l3.handle_task(task, tctx));
+            }),
+        )
+        .unwrap();
+
+        let runner = Runner::launch(
+            "parent",
+            "summer",
+            Value::Null,
+            Arc::clone(&comm),
+            Arc::clone(&store),
+            &registry,
+            DEFAULT_TASK_QUEUE,
+        )
+        .unwrap();
+        match runner.run().unwrap() {
+            RunOutcome::Finished(out) => assert_eq!(out.get_i64("total").unwrap(), 25),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chain_state_roundtrips_through_checkpoint() {
+        let spec = WorkChainSpec::new("s").step("a", |_, _| Ok(ChainStep::Next)).build();
+        let mut chain = WorkChain { spec, ctx: ChainCtx::default() };
+        chain.ctx.set("k", Value::F32s(vec![1.0, 2.0]));
+        chain.ctx.add_child("c1");
+        let saved = chain.save_state();
+        let spec2 = WorkChainSpec::new("s").step("a", |_, _| Ok(ChainStep::Next)).build();
+        let mut restored = WorkChain { spec: spec2, ctx: ChainCtx::default() };
+        restored.load_state(&saved).unwrap();
+        assert_eq!(restored.ctx.get("k").unwrap(), &Value::F32s(vec![1.0, 2.0]));
+        assert_eq!(restored.ctx.children(), vec!["c1"]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Integration: the full distributed deployment over real TCP —
+//! broker server, daemon worker, client submission, RPC control —
+//! the "client workstation + remote daemon" topology from the paper.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::BrokerServer;
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::daemon::{Daemon, DaemonConfig};
+use kiwi::transport::connect_tcp;
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::MemoryCheckpointStore;
+use kiwi::workflow::process::{ProcessLogic, StepContext, StepOutcome, WaitCondition};
+use kiwi::workflow::{ProcessController, ProcessRegistry, RemoteLauncher};
+
+struct Adder {
+    a: i64,
+    b: i64,
+}
+impl ProcessLogic for Adder {
+    fn step(&mut self, _: u32, _: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        Ok(StepOutcome::Finish(Value::I64(self.a + self.b)))
+    }
+    fn save_state(&self) -> Value {
+        Value::map([("a", Value::I64(self.a)), ("b", Value::I64(self.b))])
+    }
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        let src = state.get_opt("inputs").unwrap_or(state);
+        self.a = src.get_i64("a")?;
+        self.b = src.get_i64("b")?;
+        Ok(())
+    }
+}
+
+struct SlowTicker {
+    ticks: i64,
+}
+impl ProcessLogic for SlowTicker {
+    fn step(&mut self, _: u32, _: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        if self.ticks >= 50 {
+            return Ok(StepOutcome::Finish(Value::I64(self.ticks)));
+        }
+        self.ticks += 1;
+        Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(20))))
+    }
+    fn save_state(&self) -> Value {
+        Value::map([("ticks", Value::I64(self.ticks))])
+    }
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        self.ticks = state.get_opt("ticks").map(|v| v.as_i64()).transpose()?.unwrap_or(0);
+        Ok(())
+    }
+}
+
+fn tcp_comm(addr: std::net::SocketAddr, hb: u64) -> Arc<RmqCommunicator> {
+    Arc::new(
+        RmqCommunicator::connect(
+            Arc::new(connect_tcp(addr).unwrap()),
+            RmqConfig { heartbeat_ms: hb, ..Default::default() },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn full_stack_over_tcp() {
+    let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    // Daemon on its own TCP connection.
+    let registry = ProcessRegistry::new();
+    registry.register("adder", || Box::new(Adder { a: 0, b: 0 }));
+    registry.register("ticker", || Box::new(SlowTicker { ticks: 0 }));
+    let worker_comm = tcp_comm(addr, 200);
+    let daemon = Daemon::start(
+        Arc::clone(&worker_comm) as Arc<dyn Communicator>,
+        Arc::new(MemoryCheckpointStore::new()),
+        registry,
+        DaemonConfig { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+
+    // Client on another TCP connection.
+    let client = tcp_comm(addr, 0);
+    let launcher = RemoteLauncher::new(Arc::clone(&client) as Arc<dyn Communicator>);
+
+    // 1) Simple process round-trip.
+    let (_pid, fut) = launcher
+        .launch("adder", Value::map([("a", Value::I64(20)), ("b", Value::I64(22))]))
+        .unwrap();
+    let record = fut.wait(Duration::from_secs(20)).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "finished");
+    assert_eq!(record.get("outputs").unwrap(), &Value::I64(42));
+
+    // 2) RPC control across TCP: pause, verify status, play; kill a second.
+    let ctl = ProcessController::new(Arc::clone(&client) as Arc<dyn Communicator>);
+    let (pid2, fut2) = launcher.launch("ticker", Value::Null).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(ctl.pause(&pid2).unwrap());
+    std::thread::sleep(Duration::from_millis(100));
+    let status = ctl.status(&pid2).unwrap();
+    assert_eq!(status.get_str("state").unwrap(), "paused");
+    assert!(ctl.play(&pid2).unwrap());
+    assert!(ctl.kill(&pid2, "e2e test").unwrap());
+    let record2 = fut2.wait(Duration::from_secs(20)).unwrap();
+    assert_eq!(record2.get_str("state").unwrap(), "killed");
+
+    // 3) Broadcast across TCP connections.
+    let (tx, rx) = std::sync::mpsc::channel();
+    client
+        .add_broadcast_subscriber(
+            kiwi::communicator::BroadcastFilter::all().subject("e2e.*"),
+            Box::new(move |m| tx.send(m.body).unwrap()),
+        )
+        .unwrap();
+    worker_comm.broadcast_send(Value::str("over tcp"), None, Some("e2e.hello")).unwrap();
+    assert_eq!(
+        rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+        Value::str("over tcp")
+    );
+
+    daemon.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn many_clients_share_one_tcp_broker() {
+    let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let worker = tcp_comm(addr, 0);
+    worker
+        .task_queue("shared", 0, Box::new(|t, ctx| ctx.complete(Ok(t))))
+        .unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let client = tcp_comm(addr, 0);
+                for i in 0..20 {
+                    let v = Value::I64(t * 100 + i);
+                    let out = client
+                        .task_send("shared", v.clone())
+                        .unwrap()
+                        .wait(Duration::from_secs(20))
+                        .unwrap();
+                    assert_eq!(out, v);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}

@@ -1,0 +1,164 @@
+//! Integration: mixed-workload soak — all three message types concurrently
+//! under churn (subscribers joining/leaving, workers acking/nacking),
+//! asserting global conservation at the end. This is the "high-volume,
+//! predictable" claim exercised as one adversarial workload.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{
+    BroadcastFilter, Communicator, RmqCommunicator, RmqConfig,
+};
+use kiwi::proputil::Rng;
+use kiwi::wire::Value;
+
+const TASKS: usize = 300;
+const RPCS: usize = 200;
+const BROADCASTS: usize = 200;
+
+#[test]
+fn mixed_traffic_soak() {
+    let broker = InprocBroker::new();
+    let comm = |hb: u64| -> Arc<RmqCommunicator> {
+        Arc::new(
+            RmqCommunicator::connect(
+                broker.connect(),
+                RmqConfig { heartbeat_ms: hb, ..Default::default() },
+            )
+            .unwrap(),
+        )
+    };
+
+    // --- task side: two workers, one of which nacks 10% of tasks back
+    // (requeue) before they are eventually processed.
+    let processed = Arc::new(AtomicU64::new(0));
+    let worker_a = comm(100);
+    {
+        let processed = Arc::clone(&processed);
+        worker_a
+            .task_queue(
+                "soak.tasks",
+                4,
+                Box::new(move |t, ctx| {
+                    processed.fetch_add(1, Ordering::Relaxed);
+                    ctx.complete(Ok(t));
+                }),
+            )
+            .unwrap();
+    }
+    let worker_b = comm(100);
+    {
+        let processed = Arc::clone(&processed);
+        let flaky = Rng::new(99);
+        worker_b
+            .task_queue(
+                "soak.tasks",
+                4,
+                Box::new(move |t, ctx| {
+                    if flaky.chance(0.1) {
+                        ctx.reject(true); // requeue; someone else finishes it
+                    } else {
+                        processed.fetch_add(1, Ordering::Relaxed);
+                        ctx.complete(Ok(t));
+                    }
+                }),
+            )
+            .unwrap();
+    }
+
+    // --- rpc side: an accumulator endpoint.
+    let rpc_host = comm(0);
+    let rpc_sum = Arc::new(AtomicU64::new(0));
+    {
+        let rpc_sum = Arc::clone(&rpc_sum);
+        rpc_host
+            .add_rpc_subscriber(
+                "soak.acc",
+                Box::new(move |v| {
+                    rpc_sum.fetch_add(v.as_u64()?, Ordering::Relaxed);
+                    Ok(Value::Null)
+                }),
+            )
+            .unwrap();
+    }
+
+    // --- broadcast side: one stable subscriber counts everything; churny
+    // subscribers come and go throughout.
+    let bc_seen = Arc::new(AtomicU64::new(0));
+    let stable_sub = comm(0);
+    {
+        let bc_seen = Arc::clone(&bc_seen);
+        stable_sub
+            .add_broadcast_subscriber(
+                BroadcastFilter::all().subject("soak.*"),
+                Box::new(move |_| {
+                    bc_seen.fetch_add(1, Ordering::Relaxed);
+                }),
+            )
+            .unwrap();
+    }
+
+    // --- drive all three types from three client threads.
+    let client = comm(0);
+    let task_futs: Vec<_> = (0..TASKS)
+        .map(|i| client.task_send("soak.tasks", Value::I64(i as i64)).unwrap())
+        .collect();
+    let rpc_client = comm(0);
+    let rpc_thread = std::thread::spawn(move || {
+        let futs: Vec<_> = (1..=RPCS)
+            .map(|i| rpc_client.rpc_send("soak.acc", Value::I64(i as i64)).unwrap())
+            .collect();
+        for f in futs {
+            f.wait(Duration::from_secs(60)).unwrap();
+        }
+    });
+    let bc_client = comm(0);
+    let churn_broker = broker.clone();
+    let bc_thread = std::thread::spawn(move || {
+        for i in 0..BROADCASTS {
+            bc_client
+                .broadcast_send(Value::I64(i as i64), Some("soak"), Some("soak.tick"))
+                .unwrap();
+            if i % 25 == 0 {
+                // Churn: a short-lived subscriber joins and leaves.
+                let ephemeral = Arc::new(
+                    RmqCommunicator::connect(churn_broker.connect(), RmqConfig::default())
+                        .unwrap(),
+                );
+                let id = ephemeral
+                    .add_broadcast_subscriber(BroadcastFilter::all(), Box::new(|_| {}))
+                    .unwrap();
+                ephemeral.remove_broadcast_subscriber(&id).unwrap();
+            }
+        }
+    });
+
+    // --- verify conservation.
+    for (i, f) in task_futs.into_iter().enumerate() {
+        let v = f.wait(Duration::from_secs(60)).unwrap();
+        assert_eq!(v, Value::I64(i as i64), "task {i} returned wrong result");
+    }
+    rpc_thread.join().unwrap();
+    bc_thread.join().unwrap();
+
+    assert_eq!(processed.load(Ordering::Relaxed), TASKS as u64, "each task completed once");
+    assert_eq!(
+        rpc_sum.load(Ordering::Relaxed),
+        (RPCS * (RPCS + 1) / 2) as u64,
+        "rpc accumulator must see every call exactly once"
+    );
+    // Broadcasts are fire-and-forget but the subscriber was attached for
+    // the whole run: it must observe all of them.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while bc_seen.load(Ordering::Relaxed) < BROADCASTS as u64 {
+        assert!(std::time::Instant::now() < deadline, "missing broadcasts");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(bc_seen.load(Ordering::Relaxed), BROADCASTS as u64);
+
+    // Broker-side ledger agrees.
+    let status = broker.broker().metrics().snapshot();
+    assert!(status.counters["broker.published"] >= (TASKS + RPCS + BROADCASTS) as u64);
+}

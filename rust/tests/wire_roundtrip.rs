@@ -1,0 +1,12 @@
+//! Integration: wire codec + framing across module boundaries.
+use kiwi::wire::{self, Value};
+
+#[test]
+fn encode_frame_decode_across_api() {
+    let v = Value::map([("hello", Value::str("world"))]);
+    let frame = wire::Frame::data(&v);
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, &frame).unwrap();
+    let got = wire::read_frame(&mut std::io::Cursor::new(&buf)).unwrap();
+    assert_eq!(got.value().unwrap(), v);
+}

@@ -1,0 +1,199 @@
+//! Integration: workflow semantics over the real broker stack —
+//! nested chains, failure propagation, global control broadcasts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kiwi::broker::InprocBroker;
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::daemon::{Daemon, DaemonConfig};
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::MemoryCheckpointStore;
+use kiwi::workflow::workchain::{instantiate, ChainStep, WorkChainSpec};
+use kiwi::workflow::{ProcessRegistry, RemoteLauncher};
+
+fn stack(
+    registry: ProcessRegistry,
+    workers: usize,
+) -> (InprocBroker, Daemon, RemoteLauncher, Arc<dyn Communicator>) {
+    let broker = InprocBroker::new();
+    let worker_comm: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+    let daemon = Daemon::start(
+        Arc::clone(&worker_comm),
+        Arc::new(MemoryCheckpointStore::new()),
+        registry,
+        DaemonConfig { workers, ..Default::default() },
+    )
+    .unwrap();
+    let client: Arc<dyn Communicator> =
+        Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
+    let launcher = RemoteLauncher::new(Arc::clone(&client));
+    (broker, daemon, launcher, client)
+}
+
+/// Three-level nesting: grandparent -> 2 parents -> 2 leaves each.
+/// All levels run as real daemon tasks; coordination is pure broadcast.
+#[test]
+fn three_level_nested_workchain() {
+    let registry = ProcessRegistry::new();
+    let leaf = WorkChainSpec::new("leaf")
+        .step("go", |cc, _| {
+            let x = cc.inputs().get_i64("x")?;
+            Ok(ChainStep::Finish(Value::map([("y", Value::I64(x * 2))])))
+        })
+        .build();
+    registry.register("leaf", move || instantiate(&leaf));
+    let parent = WorkChainSpec::new("parent")
+        .step("spawn", |cc, ctx| {
+            let base = cc.inputs().get_i64("base")?;
+            for i in 0..2 {
+                let pid = ctx.spawn("leaf", Value::map([("x", Value::I64(base + i))]))?;
+                cc.add_child(&pid);
+            }
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("sum", |cc, ctx| {
+            let mut total = 0;
+            for pid in cc.children() {
+                total += ctx.child_outputs(&pid)?.get_i64("y")?;
+            }
+            Ok(ChainStep::Finish(Value::map([("sum", Value::I64(total))])))
+        })
+        .build();
+    registry.register("parent", move || instantiate(&parent));
+    let grandparent = WorkChainSpec::new("grandparent")
+        .step("spawn", |cc, ctx| {
+            for base in [10i64, 20] {
+                let pid = ctx.spawn("parent", Value::map([("base", Value::I64(base))]))?;
+                cc.add_child(&pid);
+            }
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("total", |cc, ctx| {
+            let mut total = 0;
+            for pid in cc.children() {
+                total += ctx.child_outputs(&pid)?.get_i64("sum")?;
+            }
+            Ok(ChainStep::Finish(Value::map([("total", Value::I64(total))])))
+        })
+        .build();
+    registry.register("grandparent", move || instantiate(&grandparent));
+
+    // Workers must cover 1 grandparent + 2 parents waiting + leaves: the
+    // waiting processes hold worker threads (documented synchronous-wait
+    // design), so give the pool enough room.
+    let (_broker, daemon, launcher, _client) = stack(registry, 6);
+    let (_pid, fut) = launcher.launch("grandparent", Value::Null).unwrap();
+    let record = fut.wait(Duration::from_secs(60)).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "finished");
+    // (10*2 + 11*2) + (20*2 + 21*2) = 42 + 82 = 124.
+    assert_eq!(record.get("outputs").unwrap().get_i64("total").unwrap(), 124);
+    daemon.shutdown();
+}
+
+/// A child that excepts propagates a typed error into the parent's
+/// `child_outputs`, and the parent can choose to except or recover.
+#[test]
+fn failed_child_propagates_to_parent() {
+    let registry = ProcessRegistry::new();
+    let bomb = WorkChainSpec::new("bomb")
+        .step("boom", |_cc, _ctx| {
+            Err(kiwi::Error::RemoteException("child exploded".into()))
+        })
+        .build();
+    registry.register("bomb", move || instantiate(&bomb));
+
+    // Parent A: propagates the failure.
+    let strict = WorkChainSpec::new("strict")
+        .step("spawn", |cc, ctx| {
+            let pid = ctx.spawn("bomb", Value::Null)?;
+            cc.add_child(&pid);
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("collect", |cc, ctx| {
+            // child_outputs errors because the child excepted.
+            let out = ctx.child_outputs(&cc.children()[0])?;
+            Ok(ChainStep::Finish(out))
+        })
+        .build();
+    registry.register("strict", move || instantiate(&strict));
+
+    // Parent B: recovers by inspecting the terminal record.
+    let lenient = WorkChainSpec::new("lenient")
+        .step("spawn", |cc, ctx| {
+            let pid = ctx.spawn("bomb", Value::Null)?;
+            cc.add_child(&pid);
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("collect", |cc, ctx| {
+            let record = ctx.child_result(&cc.children()[0])?.unwrap();
+            Ok(ChainStep::Finish(Value::map([(
+                "child_state",
+                Value::str(record.get_str("state")?),
+            )])))
+        })
+        .build();
+    registry.register("lenient", move || instantiate(&lenient));
+
+    let (_broker, daemon, launcher, _client) = stack(registry, 4);
+
+    let (_p1, fut1) = launcher.launch("strict", Value::Null).unwrap();
+    let record1 = fut1.wait(Duration::from_secs(30)).unwrap();
+    assert_eq!(record1.get_str("state").unwrap(), "excepted");
+    assert!(record1.get_str("reason").unwrap().contains("excepted"));
+
+    let (_p2, fut2) = launcher.launch("lenient", Value::Null).unwrap();
+    let record2 = fut2.wait(Duration::from_secs(30)).unwrap();
+    assert_eq!(record2.get_str("state").unwrap(), "finished");
+    assert_eq!(
+        record2.get("outputs").unwrap().get_str("child_state").unwrap(),
+        "excepted"
+    );
+    daemon.shutdown();
+}
+
+/// Sibling diamond: two parents awaiting the SAME child pid is not
+/// supported (each spawn creates a unique child), but two parents can each
+/// await their own child of the same type concurrently without cross-talk.
+#[test]
+fn concurrent_parents_do_not_crosstalk() {
+    let registry = ProcessRegistry::new();
+    let echo = WorkChainSpec::new("echo")
+        .step("go", |cc, _| Ok(ChainStep::Finish(cc.inputs())))
+        .build();
+    registry.register("echo", move || instantiate(&echo));
+    let wrapper = WorkChainSpec::new("wrapper")
+        .step("spawn", |cc, ctx| {
+            let pid = ctx.spawn("echo", cc.inputs())?;
+            cc.add_child(&pid);
+            Ok(ChainStep::WaitChildren)
+        })
+        .step("out", |cc, ctx| {
+            Ok(ChainStep::Finish(ctx.child_outputs(&cc.children()[0])?))
+        })
+        .build();
+    registry.register("wrapper", move || instantiate(&wrapper));
+
+    // Parents hold worker threads while waiting (synchronous-wait design),
+    // so the pool must exceed parents-in-flight + children: 8 parents need
+    // >= 9 workers for progress; 16 gives full child parallelism.
+    let (_broker, daemon, launcher, _client) = stack(registry, 16);
+    let futs: Vec<_> = (0..8)
+        .map(|i| {
+            launcher
+                .launch("wrapper", Value::map([("tag", Value::I64(i))]))
+                .unwrap()
+        })
+        .collect();
+    for (i, (_pid, fut)) in futs.into_iter().enumerate() {
+        let record = fut.wait(Duration::from_secs(60)).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert_eq!(
+            record.get("outputs").unwrap().get_i64("tag").unwrap(),
+            i as i64,
+            "parent {i} must get its own child's outputs"
+        );
+    }
+    daemon.shutdown();
+}
