@@ -1,5 +1,17 @@
-//! The transport-agnostic broker core: queues + exchanges + connections
-//! under one lock, with push delivery into per-connection channels.
+//! The transport-agnostic broker core, sharded for multi-core scaling.
+//!
+//! The old design funnelled every publish, ack, consume and heartbeat
+//! sweep through a single `Mutex<Core>`. This version layers the broker
+//! into three parts:
+//!
+//! * [`super::router`] — exchange/binding resolution behind read-mostly
+//!   `RwLock`s (publishes only take read locks here);
+//! * [`super::shard`] — N independent queue shards (hash of queue name →
+//!   shard), each a `Mutex` over its queues, delivery index and delivery
+//!   targets, so traffic to different queues never contends;
+//! * [`super::dispatch`] — the batched delivery pump: up to
+//!   [`BrokerConfig::delivery_batch`] messages per lock acquisition,
+//!   coalesced into per-connection [`ServerMsg::DeliverBatch`] units.
 //!
 //! Sessions (TCP) and in-process clients both talk to a [`BrokerHandle`]:
 //! `connect` registers a channel for unsolicited server messages
@@ -7,49 +19,93 @@
 //! `touch` records heartbeat liveness, and `disconnect` tears everything
 //! down — requeueing unacked messages exactly like RabbitMQ does when a
 //! consumer dies.
+//!
+//! Lock order (a thread only ever acquires rightward while holding
+//! leftward, never the reverse): connection registry → router →
+//! consumer index → shard → {connection sender, WAL}. The sender and WAL
+//! mutexes are leaves; nothing is acquired while holding them.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use crate::broker::exchange::Exchange;
+use crate::broker::dispatch::Dispatcher;
 use crate::broker::persistence::{NoopPersister, Persister, RecoveredState};
-use crate::broker::protocol::{
-    ClientRequest, Delivery, MessageProps, QueueOptions, ServerMsg,
-};
-#[cfg(test)]
-use crate::broker::protocol::ExchangeKind;
+use crate::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
 use crate::broker::queue::{Consumer, Queue, QueuedMessage};
+use crate::broker::router::Router;
+use crate::broker::shard::ShardSet;
 use crate::error::{Error, Result};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Registry};
 use crate::wire::Value;
 
 /// Identifies one client connection to the broker.
 pub type ConnectionId = u64;
 
-struct ConnectionState {
-    client_id: String,
-    heartbeat_ms: u64,
-    last_seen: Instant,
-    sender: Sender<ServerMsg>,
-    consumer_tags: HashSet<String>,
-    /// Queues declared exclusive by this connection.
-    exclusive_queues: HashSet<String>,
+/// Broker tuning knobs: how many queue shards to run and how many
+/// messages the dispatcher drains per shard-lock acquisition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BrokerConfig {
+    /// Number of queue shards. Queues hash onto shards; publishes to
+    /// queues in different shards never contend. 1 reproduces the old
+    /// single-lock behaviour.
+    pub shards: usize,
+    /// Max deliveries handed out per shard-lock acquisition (and per
+    /// coalesced `DeliverBatch` frame).
+    pub delivery_batch: usize,
 }
 
-struct Core {
-    queues: HashMap<String, Queue>,
-    exchanges: HashMap<String, Exchange>,
-    connections: HashMap<ConnectionId, ConnectionState>,
-    /// consumer_tag -> queue name.
-    consumer_index: HashMap<String, String>,
-    /// delivery_tag -> queue name (for acks without a queue argument).
-    delivery_index: HashMap<u64, String>,
-    next_conn: ConnectionId,
-    next_msg: u64,
-    next_tag: u64,
-    persister: Box<dyn Persister>,
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig { shards: default_shards(), delivery_batch: 64 }
+    }
+}
+
+/// Default shard count: one per available core.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Per-connection state, shared between the registry and the shards'
+/// delivery-target caches. All interior mutability; the contained mutexes
+/// are leaf locks in the broker's lock order.
+pub struct ConnectionEntry {
+    id: ConnectionId,
+    client_id: Mutex<String>,
+    heartbeat_ms: AtomicU64,
+    /// Milliseconds since the registry epoch at the last sign of life.
+    last_seen_ms: AtomicU64,
+    sender: Mutex<Sender<ServerMsg>>,
+    consumer_tags: Mutex<HashSet<String>>,
+    /// Queues declared exclusive by this connection.
+    exclusive_queues: Mutex<HashSet<String>>,
+}
+
+impl ConnectionEntry {
+    /// Push a server message into the connection's channel. Returns false
+    /// when the receiving session is gone.
+    pub(crate) fn send(&self, msg: ServerMsg) -> bool {
+        self.sender.lock().unwrap().send(msg).is_ok()
+    }
+
+    fn touch(&self, epoch: Instant) {
+        self.last_seen_ms.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+}
+
+/// The connection registry: id allocation + liveness bookkeeping.
+struct Connections {
+    epoch: Instant,
+    next: AtomicU64,
+    map: RwLock<HashMap<ConnectionId, Arc<ConnectionEntry>>>,
+}
+
+impl Connections {
+    fn get(&self, id: ConnectionId) -> Option<Arc<ConnectionEntry>> {
+        self.map.read().unwrap().get(&id).cloned()
+    }
 }
 
 /// The broker. Cheap to clone (it is an `Arc` internally): hand one to the
@@ -60,8 +116,18 @@ pub struct BrokerHandle {
 }
 
 pub struct BrokerCore {
-    inner: Mutex<Core>,
+    router: Router,
+    shards: ShardSet,
+    connections: Connections,
+    /// consumer_tag -> queue name (global duplicate detection + cancel).
+    consumer_index: Mutex<HashMap<String, String>>,
+    persister: Mutex<Box<dyn Persister>>,
+    dispatcher: Dispatcher,
+    next_msg: AtomicU64,
     pub metrics: Registry,
+    /// Pre-resolved hot-path counters (skip the registry name map).
+    ctr_published: Arc<Counter>,
+    ctr_acked: Arc<Counter>,
 }
 
 impl Default for BrokerHandle {
@@ -71,7 +137,7 @@ impl Default for BrokerHandle {
 }
 
 impl BrokerHandle {
-    /// A transient broker (no persistence).
+    /// A transient broker (no persistence), default sharding.
     pub fn new() -> Self {
         Self::with_persister(Box::new(NoopPersister), RecoveredState::default())
     }
@@ -79,8 +145,25 @@ impl BrokerHandle {
     /// A broker backed by `persister`, seeded with recovered state
     /// (see [`crate::broker::persistence::WalPersister::open`]).
     pub fn with_persister(persister: Box<dyn Persister>, recovered: RecoveredState) -> Self {
+        Self::with_config(persister, recovered, BrokerConfig::default())
+    }
+
+    /// Full control over sharding and batching (benches sweep these).
+    pub fn with_config(
+        persister: Box<dyn Persister>,
+        recovered: RecoveredState,
+        config: BrokerConfig,
+    ) -> Self {
         let now = Instant::now();
-        let mut queues = HashMap::new();
+        let metrics = Registry::new();
+        let router = Router::new();
+        let shards = ShardSet::new(config.shards);
+        let mut next_msg = 1u64;
+        for msgs in recovered.messages.values() {
+            for m in msgs {
+                next_msg = next_msg.max(m.msg_id + 1);
+            }
+        }
         for (name, options) in &recovered.queues {
             let mut q = Queue::new(name, options.clone(), None);
             if let Some(msgs) = recovered.messages.get(name) {
@@ -92,34 +175,39 @@ impl BrokerHandle {
                 // this process's traffic.
                 q.published = 0;
             }
-            queues.insert(name.clone(), q);
+            shards.shard_for(name).lock().queues.insert(name.clone(), q);
+            router.register_queue(name);
         }
-        let mut next_msg = 1u64;
-        for msgs in recovered.messages.values() {
-            for m in msgs {
-                next_msg = next_msg.max(m.msg_id + 1);
-            }
-        }
+        let dispatcher = Dispatcher::new(config.delivery_batch, shards.len(), &metrics);
+        let ctr_published = metrics.counter("broker.published");
+        let ctr_acked = metrics.counter("broker.acked");
         BrokerHandle {
             core: Arc::new(BrokerCore {
-                inner: Mutex::new(Core {
-                    queues,
-                    exchanges: HashMap::new(),
-                    connections: HashMap::new(),
-                    consumer_index: HashMap::new(),
-                    delivery_index: HashMap::new(),
-                    next_conn: 1,
-                    next_msg,
-                    next_tag: 1,
-                    persister,
-                }),
-                metrics: Registry::new(),
+                router,
+                shards,
+                connections: Connections {
+                    epoch: now,
+                    next: AtomicU64::new(1),
+                    map: RwLock::new(HashMap::new()),
+                },
+                consumer_index: Mutex::new(HashMap::new()),
+                persister: Mutex::new(persister),
+                dispatcher,
+                next_msg: AtomicU64::new(next_msg),
+                metrics,
+                ctr_published,
+                ctr_acked,
             }),
         }
     }
 
     pub fn metrics(&self) -> &Registry {
         &self.core.metrics
+    }
+
+    /// Number of queue shards this broker runs.
+    pub fn shard_count(&self) -> usize {
+        self.core.shards.len()
     }
 
     /// Register a connection. `sender` receives deliveries and cancels.
@@ -129,20 +217,18 @@ impl BrokerHandle {
         heartbeat_ms: u64,
         sender: Sender<ServerMsg>,
     ) -> ConnectionId {
-        let mut core = self.core.inner.lock().unwrap();
-        let id = core.next_conn;
-        core.next_conn += 1;
-        core.connections.insert(
+        let conns = &self.core.connections;
+        let id = conns.next.fetch_add(1, Ordering::Relaxed);
+        let entry = Arc::new(ConnectionEntry {
             id,
-            ConnectionState {
-                client_id: client_id.to_string(),
-                heartbeat_ms,
-                last_seen: Instant::now(),
-                sender,
-                consumer_tags: HashSet::new(),
-                exclusive_queues: HashSet::new(),
-            },
-        );
+            client_id: Mutex::new(client_id.to_string()),
+            heartbeat_ms: AtomicU64::new(heartbeat_ms),
+            last_seen_ms: AtomicU64::new(conns.epoch.elapsed().as_millis() as u64),
+            sender: Mutex::new(sender),
+            consumer_tags: Mutex::new(HashSet::new()),
+            exclusive_queues: Mutex::new(HashSet::new()),
+        });
+        conns.map.write().unwrap().insert(id, entry);
         self.core.metrics.gauge("broker.connections").inc();
         self.core.metrics.counter("broker.connects").inc();
         id
@@ -150,182 +236,166 @@ impl BrokerHandle {
 
     /// Record liveness (any traffic counts, like AMQP).
     pub fn touch(&self, conn: ConnectionId) {
-        let mut core = self.core.inner.lock().unwrap();
-        if let Some(c) = core.connections.get_mut(&conn) {
-            c.last_seen = Instant::now();
+        if let Some(entry) = self.core.connections.get(conn) {
+            entry.touch(self.core.connections.epoch);
         }
     }
 
     /// Tear down a connection: remove its consumers, requeue its unacked
     /// messages, delete its exclusive queues, redistribute work.
     pub fn disconnect(&self, conn: ConnectionId) {
-        let mut core = self.core.inner.lock().unwrap();
-        let Some(state) = core.connections.remove(&conn) else { return };
-        self.core.metrics.gauge("broker.connections").dec();
-        for tag in &state.consumer_tags {
-            core.consumer_index.remove(tag);
+        let core = &*self.core;
+        let Some(entry) = core.connections.map.write().unwrap().remove(&conn) else { return };
+        core.metrics.gauge("broker.connections").dec();
+        let tags: Vec<String> = entry.consumer_tags.lock().unwrap().drain().collect();
+        {
+            let mut ci = core.consumer_index.lock().unwrap();
+            for tag in &tags {
+                ci.remove(tag);
+            }
         }
         let mut requeued = 0usize;
         let mut touched: Vec<String> = Vec::new();
-        for (name, q) in core.queues.iter_mut() {
-            let n = q.drop_connection(conn);
-            if n > 0 || q.consumer_count() > 0 {
-                touched.push(name.clone());
-            }
+        for shard in core.shards.iter() {
+            let (n, t) = shard.lock().drop_connection(conn);
             requeued += n;
+            touched.extend(t);
         }
         if requeued > 0 {
-            self.core.metrics.counter("broker.requeued_on_death").add(requeued as u64);
+            core.metrics.counter("broker.requeued_on_death").add(requeued as u64);
             log::info!(
                 "broker: connection {conn} ({}) died with {requeued} unacked; requeued",
-                state.client_id
+                entry.client_id.lock().unwrap()
             );
         }
-        // Exclusive queues die with their owner.
-        for name in &state.exclusive_queues {
-            Self::delete_queue_locked(&mut core, name).ok();
+        // Exclusive queues die with their owner (owner-guarded, so a racing
+        // re-declare of the same name by a new connection is never hit).
+        let exclusive: Vec<String> =
+            entry.exclusive_queues.lock().unwrap().drain().collect();
+        for name in &exclusive {
+            self.delete_queue_guarded(name, Some(conn)).ok();
         }
-        // Unacked tags from this connection are gone.
-        core.delivery_index.retain(|_, q| !state.exclusive_queues.contains(q));
-        for name in touched {
-            Self::dispatch_queue(&mut core, &name);
-        }
+        touched.retain(|q| !exclusive.contains(q));
+        self.run_dispatches(touched);
     }
 
     /// Execute one request on behalf of `conn`. The reply value is what
     /// goes into `ServerMsg::Ok`; errors map to `ServerMsg::Err`.
     pub fn handle(&self, conn: ConnectionId, req: &ClientRequest) -> Result<Value> {
-        let mut core = self.core.inner.lock().unwrap();
-        let (result, dispatches) = self.execute(&mut core, conn, req);
-        for q in dispatches {
-            Self::dispatch_queue(&mut core, &q);
-        }
+        let mut dispatches = Vec::new();
+        let result = self.execute(conn, req, &mut dispatches);
+        self.run_dispatches(dispatches);
         result
     }
 
     /// Execute one request and push the reply into the connection's own
-    /// channel *before* any deliveries the request triggers — the ordering
-    /// guarantee sessions rely on (consume-ok precedes the first delivery,
-    /// as in AMQP).
+    /// channel *before* any deliveries **this request** triggers (they are
+    /// pumped on this thread, after the send below).
+    ///
+    /// Weaker than the old single-lock broker's guarantee: a *concurrent*
+    /// publisher's dispatch can slip a delivery for a just-added consumer
+    /// in ahead of its consume-ok. The in-tree client is immune (it
+    /// registers the delivery handler before sending `Consume` —
+    /// `transport/conn.rs`); external clients must tolerate an early
+    /// delivery the same way.
     pub fn handle_with_reply(&self, conn: ConnectionId, req: &ClientRequest, req_id: u64) {
-        let mut core = self.core.inner.lock().unwrap();
-        let (result, dispatches) = self.execute(&mut core, conn, req);
+        let mut dispatches = Vec::new();
+        let result = self.execute(conn, req, &mut dispatches);
         let msg = match result {
             Ok(reply) => ServerMsg::Ok { req_id, reply },
             Err(e) => {
                 ServerMsg::Err { req_id, code: e.code().to_string(), message: e.to_string() }
             }
         };
-        if let Some(c) = core.connections.get(&conn) {
-            c.sender.send(msg).ok();
+        if let Some(entry) = self.core.connections.get(conn) {
+            entry.send(msg);
         }
-        for q in dispatches {
-            Self::dispatch_queue(&mut core, &q);
+        self.run_dispatches(dispatches);
+    }
+
+    /// Pump every queue named in `dispatches` (deduplicated). Runs with no
+    /// locks held; the dispatcher takes each queue's shard lock itself.
+    fn run_dispatches(&self, mut dispatches: Vec<String>) {
+        if dispatches.is_empty() {
+            return;
+        }
+        dispatches.sort_unstable();
+        dispatches.dedup();
+        for q in &dispatches {
+            self.core.dispatcher.pump(&self.core.shards, &self.core.persister, q);
         }
     }
 
-    /// The request interpreter. Returns the reply plus the queues whose
-    /// delivery pump must run after the reply is sent.
+    /// The request interpreter. Queue names pushed into `dispatches` get
+    /// their delivery pump run by the caller after the reply is sent.
     fn execute(
         &self,
-        core: &mut Core,
-        conn: ConnectionId,
-        req: &ClientRequest,
-    ) -> (Result<Value>, Vec<String>) {
-        let mut dispatches = Vec::new();
-        let result = self.execute_inner(core, conn, req, &mut dispatches);
-        (result, dispatches)
-    }
-
-    fn execute_inner(
-        &self,
-        core: &mut Core,
         conn: ConnectionId,
         req: &ClientRequest,
         dispatches: &mut Vec<String>,
     ) -> Result<Value> {
-        if let Some(c) = core.connections.get_mut(&conn) {
-            c.last_seen = Instant::now();
-        } else {
+        let core = &*self.core;
+        let Some(entry) = core.connections.get(conn) else {
             return Err(Error::Closed(format!("unknown connection {conn}")));
-        }
+        };
+        entry.touch(core.connections.epoch);
         match req {
             ClientRequest::Hello { client_id, heartbeat_ms } => {
-                let c = core.connections.get_mut(&conn).unwrap();
-                c.client_id = client_id.clone();
-                c.heartbeat_ms = *heartbeat_ms;
+                *entry.client_id.lock().unwrap() = client_id.clone();
+                entry.heartbeat_ms.store(*heartbeat_ms, Ordering::Relaxed);
                 Ok(Value::map([("connection", Value::from(conn))]))
             }
             ClientRequest::QueueDeclare { queue, options } => {
-                Self::declare_queue(core, conn, queue, options.clone())?;
-                let q = &core.queues[queue];
+                self.declare_queue(&entry, queue, options.clone())?;
+                let (ready, consumers) = {
+                    let st = core.shards.shard_for(queue).lock();
+                    match st.queues.get(queue) {
+                        Some(q) => (q.ready_len(), q.consumer_count()),
+                        None => (0, 0), // deleted concurrently
+                    }
+                };
                 Ok(Value::map([
                     ("queue", Value::str(queue)),
-                    ("ready", Value::from(q.ready_len())),
-                    ("consumers", Value::from(q.consumer_count())),
+                    ("ready", Value::from(ready)),
+                    ("consumers", Value::from(consumers)),
                 ]))
             }
             ClientRequest::QueueDelete { queue } => {
-                Self::delete_queue_locked(core, queue)?;
+                self.delete_queue(queue)?;
                 Ok(Value::Null)
             }
             ClientRequest::QueuePurge { queue } => {
-                let q = core
-                    .queues
-                    .get_mut(queue)
-                    .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
-                let ids = q.purge();
-                let durable = q.options.durable;
+                let (ids, durable) = {
+                    let mut st = core.shards.shard_for(queue).lock();
+                    let q = st
+                        .queues
+                        .get_mut(queue)
+                        .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
+                    (q.purge(), q.options.durable)
+                };
                 let n = ids.len();
-                if durable {
-                    for id in ids {
-                        core.persister.record_retire(queue, id)?;
-                    }
+                if durable && !ids.is_empty() {
+                    core.persister.lock().unwrap().record_retire_batch(queue, &ids)?;
                 }
                 Ok(Value::map([("purged", Value::from(n))]))
             }
             ClientRequest::ExchangeDeclare { exchange, kind } => {
-                if exchange.is_empty() {
-                    return Err(Error::Broker("cannot declare the default exchange".into()));
-                }
-                match core.exchanges.get(exchange) {
-                    Some(ex) if ex.kind != *kind => Err(Error::Broker(format!(
-                        "exchange '{exchange}' exists with kind {}",
-                        ex.kind.as_str()
-                    ))),
-                    Some(_) => Ok(Value::Null),
-                    None => {
-                        core.exchanges
-                            .insert(exchange.clone(), Exchange::new(exchange, *kind));
-                        Ok(Value::Null)
-                    }
-                }
+                core.router.declare_exchange(exchange, *kind)?;
+                Ok(Value::Null)
             }
             ClientRequest::Bind { exchange, queue, routing_key } => {
-                if !core.queues.contains_key(queue) {
-                    return Err(Error::Broker(format!("no such queue '{queue}'")));
-                }
-                let ex = core
-                    .exchanges
-                    .get_mut(exchange)
-                    .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
-                ex.bind(routing_key, queue);
+                core.router.bind(exchange, queue, routing_key)?;
                 Ok(Value::Null)
             }
             ClientRequest::Unbind { exchange, queue, routing_key } => {
-                let ex = core
-                    .exchanges
-                    .get_mut(exchange)
-                    .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
-                ex.unbind(routing_key, queue);
+                core.router.unbind(exchange, queue, routing_key)?;
                 Ok(Value::Null)
             }
             ClientRequest::Publish { exchange, routing_key, body, props, mandatory } => {
-                let n = Self::publish(
-                    core,
+                let n = self.publish_message(
                     exchange,
                     routing_key,
-                    body.clone(),
+                    Arc::clone(body),
                     props.clone(),
                     dispatches,
                 )?;
@@ -334,51 +404,63 @@ impl BrokerHandle {
                         "exchange '{exchange}' routing key '{routing_key}' matched no queue"
                     )));
                 }
-                self.core.metrics.counter("broker.published").inc();
+                core.ctr_published.inc();
                 Ok(Value::map([("routed", Value::from(n))]))
             }
             ClientRequest::Consume { queue, consumer_tag, prefetch } => {
-                if core.consumer_index.contains_key(consumer_tag) {
+                let mut ci = core.consumer_index.lock().unwrap();
+                if ci.contains_key(consumer_tag) {
                     return Err(Error::DuplicateSubscriber(consumer_tag.clone()));
                 }
                 {
-                    let q = core
-                        .queues
-                        .get_mut(queue)
-                        .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
-                    if let Some(owner) = q.owner {
-                        if owner != conn {
-                            return Err(Error::Broker(format!(
-                                "queue '{queue}' is exclusive to another connection"
-                            )));
+                    let mut st = core.shards.shard_for(queue).lock();
+                    {
+                        let q = st
+                            .queues
+                            .get_mut(queue)
+                            .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
+                        if let Some(owner) = q.owner {
+                            if owner != conn {
+                                return Err(Error::Broker(format!(
+                                    "queue '{queue}' is exclusive to another connection"
+                                )));
+                            }
                         }
+                        q.add_consumer(Consumer {
+                            consumer_tag: consumer_tag.clone(),
+                            connection: conn,
+                            prefetch: *prefetch,
+                            in_flight: 0,
+                        });
                     }
-                    q.add_consumer(Consumer {
-                        consumer_tag: consumer_tag.clone(),
-                        connection: conn,
-                        prefetch: *prefetch,
-                        in_flight: 0,
-                    });
+                    st.conns.insert(conn, Arc::clone(&entry));
                 }
-                core.consumer_index.insert(consumer_tag.clone(), queue.clone());
-                core.connections
-                    .get_mut(&conn)
-                    .unwrap()
-                    .consumer_tags
-                    .insert(consumer_tag.clone());
+                ci.insert(consumer_tag.clone(), queue.clone());
+                drop(ci);
+                entry.consumer_tags.lock().unwrap().insert(consumer_tag.clone());
+                // Teardown race: disconnect() may have completed between our
+                // registry lookup and the insertions above (the shards no
+                // longer serialise against connection teardown). disconnect()
+                // early-returns for unknown connections, so a consumer
+                // registered "behind" it would be a zombie — detect and roll
+                // back. Both cleanup paths are idempotent, so double-running
+                // against a racing disconnect is safe.
+                if core.connections.get(conn).is_none() {
+                    self.remove_consumer(conn, consumer_tag, queue);
+                    return Err(Error::Closed(format!("unknown connection {conn}")));
+                }
                 dispatches.push(queue.clone());
                 Ok(Value::Null)
             }
             ClientRequest::Cancel { consumer_tag } => {
-                let Some(queue) = core.consumer_index.remove(consumer_tag) else {
+                let removed = core.consumer_index.lock().unwrap().remove(consumer_tag);
+                let Some(queue) = removed else {
                     return Ok(Value::Null); // cancel is idempotent
                 };
-                if let Some(c) = core.connections.get_mut(&conn) {
-                    c.consumer_tags.remove(consumer_tag);
-                }
+                entry.consumer_tags.lock().unwrap().remove(consumer_tag);
                 let auto_delete = {
-                    let q = core.queues.get_mut(&queue);
-                    match q {
+                    let mut st = core.shards.shard_for(&queue).lock();
+                    match st.queues.get_mut(&queue) {
                         Some(q) => {
                             q.remove_consumer(consumer_tag);
                             q.options.auto_delete && q.consumer_count() == 0
@@ -387,279 +469,417 @@ impl BrokerHandle {
                     }
                 };
                 if auto_delete {
-                    Self::delete_queue_locked(core, &queue).ok();
+                    self.delete_queue(&queue).ok();
                 }
                 Ok(Value::Null)
             }
             ClientRequest::Ack { delivery_tag } => {
-                let Some(queue) = core.delivery_index.remove(delivery_tag) else {
-                    return Ok(Value::Null); // idempotent double-ack
-                };
-                let (msg_id, durable) = {
-                    let Some(q) = core.queues.get_mut(&queue) else {
-                        return Ok(Value::Null);
-                    };
-                    (q.ack(*delivery_tag), q.options.durable)
-                };
-                if let (Some(id), true) = (msg_id, durable) {
-                    core.persister.record_retire(&queue, id)?;
-                }
-                self.core.metrics.counter("broker.acked").inc();
-                dispatches.push(queue.clone());
+                self.ack_tag(*delivery_tag, dispatches)?;
+                Ok(Value::Null)
+            }
+            ClientRequest::AckMulti { delivery_tags } => {
+                self.ack_many(delivery_tags, dispatches)?;
                 Ok(Value::Null)
             }
             ClientRequest::Nack { delivery_tag, requeue } => {
-                let Some(queue) = core.delivery_index.remove(delivery_tag) else {
-                    return Ok(Value::Null);
-                };
-                let (dropped_id, durable) = {
-                    let Some(q) = core.queues.get_mut(&queue) else {
+                let tag = *delivery_tag;
+                let outcome = {
+                    let mut st = core.shards.shard_for_tag(tag).lock();
+                    let Some(qname) = st.delivery_index.remove(&tag) else {
                         return Ok(Value::Null);
                     };
-                    (q.nack(*delivery_tag, *requeue), q.options.durable)
+                    let Some(q) = st.queues.get_mut(&qname) else {
+                        return Ok(Value::Null);
+                    };
+                    let dropped = q.nack(tag, *requeue);
+                    Some((qname, dropped, q.options.durable))
                 };
-                if let (Some(id), true) = (dropped_id, durable) {
-                    core.persister.record_retire(&queue, id)?;
+                if let Some((qname, dropped, durable)) = outcome {
+                    if let (Some(id), true) = (dropped, durable) {
+                        core.persister.lock().unwrap().record_retire(&qname, id)?;
+                    }
+                    dispatches.push(qname);
                 }
-                dispatches.push(queue.clone());
                 Ok(Value::Null)
             }
             ClientRequest::Status => {
-                let queues = Value::Map(
-                    core.queues.iter().map(|(k, q)| (k.clone(), q.stats())).collect(),
-                );
+                let mut queue_stats: BTreeMap<String, Value> = BTreeMap::new();
+                for shard in core.shards.iter() {
+                    let st = shard.lock();
+                    let i = shard.index();
+                    core.metrics
+                        .gauge(&format!("broker.shard.{i}.queues"))
+                        .set(st.queues.len() as i64);
+                    core.metrics.gauge(&format!("broker.shard.{i}.ready")).set(
+                        st.queues.values().map(|q| q.ready_len() as i64).sum(),
+                    );
+                    for (k, q) in &st.queues {
+                        queue_stats.insert(k.clone(), q.stats());
+                    }
+                }
                 Ok(Value::map([
-                    ("queues", queues),
-                    ("connections", Value::from(core.connections.len())),
-                    ("exchanges", Value::from(core.exchanges.len())),
-                    ("metrics", self.core.metrics.snapshot().to_value()),
+                    ("queues", Value::Map(queue_stats)),
+                    (
+                        "connections",
+                        Value::from(core.connections.map.read().unwrap().len()),
+                    ),
+                    ("exchanges", Value::from(core.router.exchange_count())),
+                    ("shards", Value::from(core.shards.len())),
+                    ("metrics", core.metrics.snapshot().to_value()),
                 ]))
             }
             ClientRequest::Close => Ok(Value::Null),
         }
     }
 
+    /// Ack one delivery tag (idempotent). Routes to the owning shard via
+    /// the tag's stride encoding.
+    fn ack_tag(&self, tag: u64, dispatches: &mut Vec<String>) -> Result<()> {
+        let core = &*self.core;
+        let outcome = {
+            let mut st = core.shards.shard_for_tag(tag).lock();
+            let Some(qname) = st.delivery_index.remove(&tag) else {
+                return Ok(()); // idempotent double-ack
+            };
+            let Some(q) = st.queues.get_mut(&qname) else {
+                return Ok(());
+            };
+            Some((q.ack(tag), q.options.durable, qname))
+        };
+        if let Some((msg_id, durable, qname)) = outcome {
+            if let (Some(id), true) = (msg_id, durable) {
+                core.persister.lock().unwrap().record_retire(&qname, id)?;
+            }
+            core.ctr_acked.inc();
+            dispatches.push(qname);
+        }
+        Ok(())
+    }
+
+    /// Ack a batch of delivery tags: each shard is locked once for its
+    /// share, and durable retirements are WAL-logged as one batch (single
+    /// flush) per queue instead of one write per tag.
+    fn ack_many(&self, tags: &[u64], dispatches: &mut Vec<String>) -> Result<()> {
+        let core = &*self.core;
+        let mut by_shard: Vec<(usize, Vec<u64>)> = Vec::new();
+        for tag in tags {
+            let i = core.shards.shard_for_tag(*tag).index();
+            match by_shard.iter_mut().find(|(s, _)| *s == i) {
+                Some((_, ts)) => ts.push(*tag),
+                None => by_shard.push((i, vec![*tag])),
+            }
+        }
+        for (i, shard_tags) in by_shard {
+            let mut acked = 0u64;
+            // queue -> durable msg ids to retire as one WAL batch.
+            let mut retires: Vec<(String, Vec<u64>)> = Vec::new();
+            {
+                let mut st = core.shards.get(i).lock();
+                for tag in shard_tags {
+                    let Some(qname) = st.delivery_index.remove(&tag) else { continue };
+                    let Some(q) = st.queues.get_mut(&qname) else { continue };
+                    let msg_id = q.ack(tag);
+                    acked += 1;
+                    if let (Some(id), true) = (msg_id, q.options.durable) {
+                        match retires.iter_mut().find(|(name, _)| *name == qname) {
+                            Some((_, ids)) => ids.push(id),
+                            None => retires.push((qname.clone(), vec![id])),
+                        }
+                    }
+                    dispatches.push(qname);
+                }
+            }
+            if !retires.is_empty() {
+                let mut p = core.persister.lock().unwrap();
+                for (qname, ids) in retires {
+                    p.record_retire_batch(&qname, &ids)?;
+                }
+            }
+            core.ctr_acked.add(acked);
+        }
+        Ok(())
+    }
+
     /// Connections that have missed two heartbeat intervals. Used by the
     /// heartbeat monitor; eviction = `disconnect`.
     pub fn stale_connections(&self, now: Instant) -> Vec<ConnectionId> {
-        let core = self.core.inner.lock().unwrap();
-        core.connections
-            .iter()
-            .filter(|(_, c)| {
-                c.heartbeat_ms > 0
-                    && now.duration_since(c.last_seen).as_millis() as u64 > 2 * c.heartbeat_ms
+        let conns = &self.core.connections;
+        let now_ms = now.saturating_duration_since(conns.epoch).as_millis() as u64;
+        conns
+            .map
+            .read()
+            .unwrap()
+            .values()
+            .filter(|e| {
+                let hb = e.heartbeat_ms.load(Ordering::Relaxed);
+                hb > 0 && now_ms.saturating_sub(e.last_seen_ms.load(Ordering::Relaxed)) > 2 * hb
             })
-            .map(|(id, _)| *id)
+            .map(|e| e.id)
             .collect()
     }
 
     /// Periodic maintenance: expire TTL'd messages, compact the WAL.
     pub fn sweep(&self) {
-        let mut core = self.core.inner.lock().unwrap();
+        let core = &*self.core;
         let now = Instant::now();
-        let names: Vec<String> = core.queues.keys().cloned().collect();
-        for name in names {
-            let (ids, durable) = {
-                let q = core.queues.get_mut(&name).unwrap();
-                (q.sweep_expired(now), q.options.durable)
-            };
-            if durable {
-                for id in ids {
-                    core.persister.record_retire(&name, id).ok();
+        for shard in core.shards.iter() {
+            let mut retired: Vec<(String, Vec<u64>)> = Vec::new();
+            {
+                let mut st = shard.lock();
+                for (name, q) in st.queues.iter_mut() {
+                    let ids = q.sweep_expired(now);
+                    if q.options.durable && !ids.is_empty() {
+                        retired.push((name.clone(), ids));
+                    }
+                }
+            }
+            if !retired.is_empty() {
+                let mut p = core.persister.lock().unwrap();
+                for (name, ids) in retired {
+                    p.record_retire_batch(&name, &ids).ok();
                 }
             }
         }
-        core.persister.maybe_compact().ok();
+        core.persister.lock().unwrap().maybe_compact().ok();
     }
 
     /// Force WAL sync (graceful shutdown path).
     pub fn sync(&self) -> Result<()> {
-        self.core.inner.lock().unwrap().persister.sync()
+        self.core.persister.lock().unwrap().sync()
     }
 
     /// Queue depth (ready) — test/bench convenience.
     pub fn queue_depth(&self, queue: &str) -> Option<usize> {
-        let core = self.core.inner.lock().unwrap();
-        core.queues.get(queue).map(|q| q.ready_len())
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).map(|q| q.ready_len())
     }
 
     /// Unacked count — test/bench convenience.
     pub fn queue_unacked(&self, queue: &str) -> Option<usize> {
-        let core = self.core.inner.lock().unwrap();
-        core.queues.get(queue).map(|q| q.unacked_len())
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).map(|q| q.unacked_len())
+    }
+
+    /// Total live `delivery_tag → queue` entries across shards — leak
+    /// detection in tests (entries must die with their delivery).
+    pub fn delivery_index_len(&self) -> usize {
+        self.core.shards.iter().map(|s| s.lock().delivery_index.len()).sum()
     }
 
     // ---- internals ----
 
+    /// Undo a consumer registration (idempotent): used when a `Consume`
+    /// raced a `disconnect` for the same connection. Ownership-checked so
+    /// it can never tear down a same-tag consumer that a *different*, live
+    /// connection registered after the disconnect (reconnect pattern).
+    fn remove_consumer(&self, conn: ConnectionId, consumer_tag: &str, queue: &str) {
+        let core = &*self.core;
+        let mut ci = core.consumer_index.lock().unwrap();
+        let mut st = core.shards.shard_for(queue).lock();
+        st.conns.remove(&conn);
+        let tag_live = match st.queues.get_mut(queue) {
+            Some(q) => {
+                q.remove_consumer_of(consumer_tag, conn);
+                // A *different* connection may legitimately hold the tag now
+                // (reconnect re-registered it after our disconnect).
+                q.has_consumer(consumer_tag)
+            }
+            None => false,
+        };
+        // Drop the index entry unless a live consumer owns the tag — covers
+        // both our own rollback and the dangling entry left when disconnect
+        // raced ahead of our `entry.consumer_tags` insert (it removed the
+        // queue consumer but could not see the tag to prune the index).
+        if !tag_live && ci.get(consumer_tag).map(String::as_str) == Some(queue) {
+            ci.remove(consumer_tag);
+        }
+    }
+
     fn declare_queue(
-        core: &mut Core,
-        conn: ConnectionId,
+        &self,
+        entry: &Arc<ConnectionEntry>,
         name: &str,
         options: QueueOptions,
     ) -> Result<()> {
         if name.is_empty() {
             return Err(Error::Broker("queue name must not be empty".into()));
         }
-        if let Some(existing) = core.queues.get(name) {
-            if let Some(owner) = existing.owner {
-                if owner != conn {
-                    return Err(Error::Broker(format!(
-                        "queue '{name}' is exclusive to another connection"
-                    )));
+        let core = &*self.core;
+        let created_owner = {
+            let mut st = core.shards.shard_for(name).lock();
+            if let Some(existing) = st.queues.get(name) {
+                if let Some(owner) = existing.owner {
+                    if owner != entry.id {
+                        return Err(Error::Broker(format!(
+                            "queue '{name}' is exclusive to another connection"
+                        )));
+                    }
                 }
+                return Ok(()); // redeclare is idempotent
             }
-            return Ok(()); // redeclare is idempotent
-        }
-        let owner = options.exclusive.then_some(conn);
-        if options.durable {
-            core.persister.record_queue_declare(name, &options)?;
-        }
-        core.queues.insert(name.to_string(), Queue::new(name, options, owner));
-        if let Some(c) = core.connections.get_mut(&conn) {
-            if core.queues[name].owner.is_some() {
-                c.exclusive_queues.insert(name.to_string());
+            let owner = options.exclusive.then_some(entry.id);
+            if options.durable {
+                core.persister.lock().unwrap().record_queue_declare(name, &options)?;
             }
+            if owner.is_some() {
+                entry.exclusive_queues.lock().unwrap().insert(name.to_string());
+            }
+            st.queues.insert(name.to_string(), Queue::new(name, options, owner));
+            owner
+        };
+        core.router.register_queue(name);
+        // Teardown race: if the owning connection disconnected while we were
+        // creating its exclusive queue, nobody will ever delete it (the
+        // disconnect drained `exclusive_queues` before our insert) — mirror
+        // the owner-death cleanup here. Delete only while the queue is still
+        // owned by *our* dead connection: the exclusivity check in the
+        // declare path stops anyone else from re-creating the name until the
+        // zombie is gone, so this cannot remove a successor's live queue.
+        if created_owner.is_some() && core.connections.get(entry.id).is_none() {
+            self.delete_queue_guarded(name, Some(entry.id)).ok();
+            return Err(Error::Closed(format!("unknown connection {}", entry.id)));
         }
         Ok(())
     }
 
-    fn delete_queue_locked(core: &mut Core, name: &str) -> Result<()> {
-        let q = core
-            .queues
-            .remove(name)
-            .ok_or_else(|| Error::Broker(format!("no such queue '{name}'")))?;
-        if q.options.durable {
-            core.persister.record_queue_delete(name)?;
-        }
-        for ex in core.exchanges.values_mut() {
-            ex.unbind_queue(name);
-        }
-        core.consumer_index.retain(|tag, qname| {
-            if qname == name {
-                // Tell owners their consumer is gone.
-                for c in core.connections.values() {
-                    if c.consumer_tags.contains(tag) {
-                        c.sender
-                            .send(ServerMsg::CancelConsumer { consumer_tag: tag.clone() })
-                            .ok();
-                    }
+    fn delete_queue(&self, name: &str) -> Result<()> {
+        self.delete_queue_guarded(name, None)
+    }
+
+    /// Delete a queue; when `required_owner` is set, only if the queue is
+    /// still exclusively owned by that connection (checked under the shard
+    /// lock — rollback paths use this so they can never delete a successor's
+    /// re-created queue).
+    fn delete_queue_guarded(
+        &self,
+        name: &str,
+        required_owner: Option<ConnectionId>,
+    ) -> Result<()> {
+        let core = &*self.core;
+        let mut cancels: Vec<(Arc<ConnectionEntry>, String)> = Vec::new();
+        let durable = {
+            let mut ci = core.consumer_index.lock().unwrap();
+            let mut st = core.shards.shard_for(name).lock();
+            if let Some(owner) = required_owner {
+                let ours = st.queues.get(name).is_some_and(|q| q.owner == Some(owner));
+                if !ours {
+                    return Ok(()); // someone else's queue now; nothing to undo
                 }
-                false
-            } else {
-                true
             }
-        });
-        core.delivery_index.retain(|_, qname| qname != name);
+            let Some(q) = st.queues.remove(name) else {
+                return Err(Error::Broker(format!("no such queue '{name}'")));
+            };
+            st.delivery_index.retain(|_, qname| qname != name);
+            for c in q.consumers() {
+                ci.remove(&c.consumer_tag);
+                if let Some(e) = st.conns.get(&c.connection) {
+                    cancels.push((Arc::clone(e), c.consumer_tag.clone()));
+                }
+            }
+            q.options.durable
+        };
+        if durable {
+            core.persister.lock().unwrap().record_queue_delete(name)?;
+        }
+        core.router.unregister_queue(name);
+        // Tell owners their consumer is gone.
+        for (e, tag) in cancels {
+            e.consumer_tags.lock().unwrap().remove(&tag);
+            e.send(ServerMsg::CancelConsumer { consumer_tag: tag });
+        }
         Ok(())
     }
 
     /// Route and enqueue. Returns the number of queues the message reached.
-    fn publish(
-        core: &mut Core,
+    /// Durable targets are WAL-logged as one group-committed batch per
+    /// shard *before* enqueueing (write-AHEAD).
+    fn publish_message(
+        &self,
         exchange: &str,
         routing_key: &str,
         body: Arc<Value>,
-        props: MessageProps,
+        props: crate::broker::protocol::MessageProps,
         dispatches: &mut Vec<String>,
     ) -> Result<usize> {
+        let core = &*self.core;
+        let targets = core.router.route(exchange, routing_key)?;
+        if targets.is_empty() {
+            return Ok(0);
+        }
         let now = Instant::now();
-        let targets: Vec<String> = if exchange.is_empty() {
-            // Default exchange: direct to the queue named by the key.
-            if core.queues.contains_key(routing_key) {
-                vec![routing_key.to_string()]
-            } else {
-                vec![]
-            }
-        } else {
-            let ex = core
-                .exchanges
-                .get(exchange)
-                .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
-            ex.route(routing_key).into_iter().map(String::from).collect()
-        };
-        for qname in &targets {
-            let msg_id = core.next_msg;
-            core.next_msg += 1;
-            let msg = QueuedMessage {
-                msg_id,
-                exchange: exchange.to_string(),
-                routing_key: routing_key.to_string(),
-                body: Arc::clone(&body),
-                props: props.clone(),
-                deadline: None,
-                redelivered: false,
-            };
-            let (dropped, durable) = {
-                let q = core.queues.get_mut(qname).unwrap();
-                let durable = q.options.durable;
-                if durable {
-                    // Log before enqueue: write-AHEAD.
-                    core.persister.record_publish(qname, &msg)?;
-                }
-                (q.publish(msg, now), durable)
-            };
-            if durable {
-                for id in dropped {
-                    core.persister.record_retire(qname, id)?;
-                }
-            }
-            dispatches.push(qname.clone());
-        }
-        Ok(targets.len())
-    }
-
-    /// Pump one queue: hand ready messages to consumers with capacity and
-    /// push the deliveries into their connections' channels.
-    fn dispatch_queue(core: &mut Core, qname: &str) {
-        let now = Instant::now();
-        let next_tag = &mut core.next_tag;
-        let assignments = {
-            let Some(q) = core.queues.get_mut(qname) else { return };
-            q.assign(now, || {
-                let t = *next_tag;
-                *next_tag += 1;
-                t
-            })
-        };
-        // Retire messages that expired while queued (durable only).
-        let (expired, durable) = {
-            let q = core.queues.get_mut(qname).unwrap();
-            (q.drain_expired_ids(), q.options.durable)
-        };
-        if durable {
-            for id in expired {
-                core.persister.record_retire(qname, id).ok();
+        // Group targets by shard so each shard is locked exactly once.
+        let mut by_shard: Vec<(usize, Vec<&str>)> = Vec::new();
+        for t in &targets {
+            let i = core.shards.index_for(t);
+            match by_shard.iter_mut().find(|(s, _)| *s == i) {
+                Some((_, names)) => names.push(t),
+                None => by_shard.push((i, vec![t.as_str()])),
             }
         }
-        for a in assignments {
-            core.delivery_index.insert(a.delivery_tag, qname.to_string());
-            let delivery = Delivery {
-                consumer_tag: a.consumer_tag,
-                delivery_tag: a.delivery_tag,
-                redelivered: a.message.redelivered,
-                exchange: a.message.exchange.clone(),
-                routing_key: a.message.routing_key.clone(),
-                body: Arc::clone(&a.message.body),
-                props: a.message.props.clone(),
-            };
-            if let Some(c) = core.connections.get(&a.connection) {
-                // A send failure means the connection's receiver is gone;
-                // the disconnect path will requeue shortly. Nack it back
-                // right away so nothing is stranded.
-                if c.sender.send(ServerMsg::Deliver(delivery)).is_err() {
-                    if let Some(q) = core.queues.get_mut(qname) {
-                        q.nack(a.delivery_tag, true);
-                    }
-                    core.delivery_index.remove(&a.delivery_tag);
+        let mut routed = 0usize;
+        for (i, names) in by_shard {
+            let mut st = core.shards.get(i).lock();
+            let mut to_enqueue: Vec<(String, QueuedMessage, bool)> = Vec::new();
+            for qname in names {
+                let Some(q) = st.queues.get(qname) else { continue }; // raced a delete
+                let msg_id = core.next_msg.fetch_add(1, Ordering::Relaxed);
+                to_enqueue.push((
+                    qname.to_string(),
+                    QueuedMessage {
+                        msg_id,
+                        exchange: exchange.to_string(),
+                        routing_key: routing_key.to_string(),
+                        body: Arc::clone(&body),
+                        props: props.clone(),
+                        deadline: None,
+                        redelivered: false,
+                    },
+                    q.options.durable,
+                ));
+            }
+            {
+                // Write-ahead, group-committed: one WAL append (and at most
+                // one fsync) for every durable copy this shard receives.
+                //
+                // Deliberate trade-off: the WAL write happens while this
+                // shard's lock is held, so the existence check, the log
+                // append and the enqueue are atomic (no orphan WAL records
+                // for concurrently-deleted queues, and queue order always
+                // matches WAL order). Under `SyncPolicy::Always` that means
+                // an fsync inside the shard lock — durable publishes to one
+                // shard serialise on it, exactly as the whole broker used to
+                // on the old global lock; non-durable traffic and other
+                // shards are unaffected. Use `EveryN` (the default) to
+                // amortise.
+                let wal_batch: Vec<(&str, &QueuedMessage)> = to_enqueue
+                    .iter()
+                    .filter(|(_, _, durable)| *durable)
+                    .map(|(q, m, _)| (q.as_str(), m))
+                    .collect();
+                if !wal_batch.is_empty() {
+                    core.persister.lock().unwrap().record_publish_batch(&wal_batch)?;
                 }
             }
+            for (qname, msg, durable) in to_enqueue {
+                let dropped = {
+                    let q = st.queues.get_mut(&qname).unwrap();
+                    q.publish(msg, now)
+                };
+                if durable && !dropped.is_empty() {
+                    core.persister.lock().unwrap().record_retire_batch(&qname, &dropped)?;
+                }
+                dispatches.push(qname);
+                routed += 1;
+            }
         }
+        Ok(routed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::protocol::{Delivery, ExchangeKind, MessageProps};
     use std::sync::mpsc::{channel, Receiver};
     use std::time::Duration;
 
@@ -710,9 +930,26 @@ mod tests {
             .unwrap();
     }
 
+    /// Pull deliveries out of a channel, flattening batches.
+    fn drain_deliveries(rx: &Receiver<ServerMsg>) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        for msg in rx.try_iter() {
+            match msg {
+                ServerMsg::Deliver(d) => out.push(d),
+                ServerMsg::DeliverBatch(ds) => out.extend(ds),
+                _ => {}
+            }
+        }
+        out
+    }
+
     fn recv_delivery(rx: &Receiver<ServerMsg>) -> Delivery {
         match rx.recv_timeout(Duration::from_secs(1)).unwrap() {
             ServerMsg::Deliver(d) => d,
+            ServerMsg::DeliverBatch(mut ds) => {
+                assert!(!ds.is_empty());
+                ds.remove(0)
+            }
             other => panic!("expected delivery, got {other:?}"),
         }
     }
@@ -729,6 +966,7 @@ mod tests {
         broker.handle(conn, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
         assert_eq!(broker.queue_depth("tasks"), Some(0));
         assert_eq!(broker.queue_unacked("tasks"), Some(0));
+        assert_eq!(broker.delivery_index_len(), 0, "ack must prune the delivery index");
     }
 
     #[test]
@@ -785,6 +1023,29 @@ mod tests {
         let d2 = recv_delivery(&rx2);
         assert_eq!(*d2.body, Value::str("t1"));
         assert!(d2.redelivered, "requeued message must be marked redelivered");
+    }
+
+    #[test]
+    fn disconnect_prunes_delivery_index() {
+        // The delivery-tag leak regression test: tags held by a dying
+        // connection must not survive it (their messages are requeued and
+        // get fresh tags on redelivery).
+        let broker = BrokerHandle::new();
+        let (tx1, _rx1) = channel();
+        let conn1 = broker.connect("doomed", 0, tx1);
+        declare(&broker, conn1, "tasks");
+        for i in 0..10 {
+            publish(&broker, conn1, "tasks", Value::I64(i));
+        }
+        consume(&broker, conn1, "tasks", "c1", 0);
+        assert_eq!(broker.delivery_index_len(), 10);
+        broker.disconnect(conn1);
+        assert_eq!(
+            broker.delivery_index_len(),
+            0,
+            "delivery index must not leak tags of a dead connection"
+        );
+        assert_eq!(broker.queue_depth("tasks"), Some(10));
     }
 
     #[test]
@@ -924,6 +1185,7 @@ mod tests {
         let stats = status.get("queues").unwrap().get("tasks").unwrap();
         assert_eq!(stats.get_u64("ready").unwrap(), 1);
         assert_eq!(stats.get_u64("published").unwrap(), 1);
+        assert_eq!(status.get_u64("shards").unwrap(), broker.shard_count() as u64);
     }
 
     #[test]
@@ -939,8 +1201,8 @@ mod tests {
         for i in 0..10 {
             publish(&broker, c1, "tasks", Value::I64(i));
         }
-        let n1 = rx1.try_iter().count();
-        let n2 = rx2.try_iter().count();
+        let n1 = drain_deliveries(&rx1).len();
+        let n2 = drain_deliveries(&rx2).len();
         assert_eq!(n1 + n2, 10);
         assert_eq!(n1, 5);
     }
@@ -955,5 +1217,84 @@ mod tests {
             ServerMsg::CancelConsumer { consumer_tag } => assert_eq!(consumer_tag, "c1"),
             other => panic!("expected cancel, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn batched_dispatch_delivers_backlog_in_order() {
+        // A backlog drained into a consumer arrives as one or more
+        // DeliverBatch units, in FIFO order, each no larger than the
+        // configured batch.
+        let broker = BrokerHandle::with_config(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+            BrokerConfig { shards: 4, delivery_batch: 16 },
+        );
+        let (tx, rx) = channel();
+        let conn = broker.connect("batch", 0, tx);
+        declare(&broker, conn, "bulk");
+        for i in 0..50 {
+            publish(&broker, conn, "bulk", Value::I64(i));
+        }
+        consume(&broker, conn, "bulk", "c1", 0);
+        let mut seen = Vec::new();
+        let mut batches = 0usize;
+        for msg in rx.try_iter() {
+            match msg {
+                ServerMsg::Ok { .. } | ServerMsg::Err { .. } => {}
+                ServerMsg::Deliver(d) => seen.push(d.body.as_i64().unwrap()),
+                ServerMsg::DeliverBatch(ds) => {
+                    assert!(ds.len() <= 16, "batch exceeds configured bound");
+                    batches += 1;
+                    seen.extend(ds.iter().map(|d| d.body.as_i64().unwrap()));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(seen, (0..50).collect::<Vec<i64>>(), "backlog must arrive in order");
+        assert!(batches >= 3, "a 50-deep backlog at batch 16 must coalesce");
+    }
+
+    #[test]
+    fn ack_multi_retires_everything() {
+        let (broker, conn, rx) = setup();
+        declare(&broker, conn, "tasks");
+        for i in 0..8 {
+            publish(&broker, conn, "tasks", Value::I64(i));
+        }
+        consume(&broker, conn, "tasks", "c1", 0);
+        let tags: Vec<u64> = drain_deliveries(&rx).iter().map(|d| d.delivery_tag).collect();
+        assert_eq!(tags.len(), 8);
+        broker
+            .handle(conn, &ClientRequest::AckMulti { delivery_tags: tags.clone() })
+            .unwrap();
+        assert_eq!(broker.queue_unacked("tasks"), Some(0));
+        assert_eq!(broker.delivery_index_len(), 0);
+        // Double multi-ack is idempotent.
+        broker.handle(conn, &ClientRequest::AckMulti { delivery_tags: tags }).unwrap();
+    }
+
+    #[test]
+    fn queues_spread_across_shards_stay_independent() {
+        let broker = BrokerHandle::with_config(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+            BrokerConfig { shards: 8, delivery_batch: 64 },
+        );
+        let (tx, _rx) = channel();
+        let conn = broker.connect("spread", 0, tx);
+        for i in 0..32 {
+            let name = format!("q{i}");
+            declare(&broker, conn, &name);
+            for j in 0..3 {
+                publish(&broker, conn, &name, Value::I64(j));
+            }
+        }
+        for i in 0..32 {
+            assert_eq!(broker.queue_depth(&format!("q{i}")), Some(3));
+        }
+        // Deleting one queue leaves the others untouched.
+        broker.handle(conn, &ClientRequest::QueueDelete { queue: "q7".into() }).unwrap();
+        assert_eq!(broker.queue_depth("q7"), None);
+        assert_eq!(broker.queue_depth("q8"), Some(3));
     }
 }

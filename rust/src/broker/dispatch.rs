@@ -1,0 +1,145 @@
+//! Batched delivery: drain up to `batch` ready messages from a queue per
+//! shard-lock acquisition and hand each connection its share as a single
+//! multi-delivery unit ([`ServerMsg::DeliverBatch`]).
+//!
+//! Compared to the old one-message-per-lock pump this amortises the lock
+//! acquisition, the per-connection channel send and (downstream) the
+//! session's write syscall across the whole batch, while the `batch` bound
+//! keeps any one drain from starving concurrent publishers to the same
+//! shard.
+//!
+//! Assignment and channel-send happen under the shard lock, which is what
+//! preserves per-queue FIFO delivery order when several threads pump the
+//! same queue concurrently (sends never interleave out of assignment
+//! order). Channel sends are non-blocking, so the lock hold stays short.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::broker::persistence::Persister;
+use crate::broker::protocol::{Delivery, ServerMsg};
+use crate::broker::shard::ShardSet;
+use crate::metrics::{Counter, Registry};
+
+/// The delivery pump. Holds pre-resolved per-shard metric handles so the
+/// hot path never touches the registry's name map.
+pub struct Dispatcher {
+    batch: usize,
+    shard_delivered: Vec<Arc<Counter>>,
+    shard_batches: Vec<Arc<Counter>>,
+    delivered: Arc<Counter>,
+}
+
+impl Dispatcher {
+    pub fn new(batch: usize, nshards: usize, metrics: &Registry) -> Self {
+        Dispatcher {
+            batch: batch.max(1),
+            shard_delivered: (0..nshards)
+                .map(|i| metrics.counter(&format!("broker.shard.{i}.delivered")))
+                .collect(),
+            shard_batches: (0..nshards)
+                .map(|i| metrics.counter(&format!("broker.shard.{i}.batches")))
+                .collect(),
+            delivered: metrics.counter("broker.delivered"),
+        }
+    }
+
+    /// Max deliveries handed out per lock acquisition.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Pump one queue until it runs dry (no ready messages or no consumer
+    /// capacity), one bounded batch per shard-lock acquisition.
+    pub fn pump(&self, shards: &ShardSet, persister: &Mutex<Box<dyn Persister>>, qname: &str) {
+        let shard = shards.shard_for(qname);
+        loop {
+            let now = Instant::now();
+            let assigned;
+            let expired_ids;
+            let durable;
+            let mut send_failed = false;
+            {
+                let mut st = shard.lock();
+                let (queues, delivery_index, conns, mut tags) = st.for_dispatch();
+                let assignments = {
+                    let Some(q) = queues.get_mut(qname) else { return };
+                    let assignments = q.assign_up_to(now, self.batch, || tags.next());
+                    expired_ids = q.drain_expired_ids();
+                    durable = q.options.durable;
+                    assignments
+                };
+                assigned = assignments.len();
+                // Group the batch per connection, preserving per-connection
+                // assignment order.
+                let mut groups: Vec<(u64, Vec<Delivery>, Vec<u64>)> = Vec::new();
+                for a in assignments {
+                    delivery_index.insert(a.delivery_tag, qname.to_string());
+                    let delivery = Delivery {
+                        consumer_tag: a.consumer_tag,
+                        delivery_tag: a.delivery_tag,
+                        redelivered: a.message.redelivered,
+                        exchange: a.message.exchange.clone(),
+                        routing_key: a.message.routing_key.clone(),
+                        body: Arc::clone(&a.message.body),
+                        props: a.message.props.clone(),
+                    };
+                    match groups.iter_mut().find(|(c, _, _)| *c == a.connection) {
+                        Some((_, ds, ts)) => {
+                            ds.push(delivery);
+                            ts.push(a.delivery_tag);
+                        }
+                        None => groups.push((a.connection, vec![delivery], vec![a.delivery_tag])),
+                    }
+                }
+                for (conn, mut deliveries, tags_of) in groups {
+                    let sent = match conns.get(&conn) {
+                        Some(entry) => {
+                            if deliveries.len() == 1 {
+                                entry.send(ServerMsg::Deliver(deliveries.pop().unwrap()))
+                            } else {
+                                entry.send(ServerMsg::DeliverBatch(deliveries))
+                            }
+                        }
+                        None => false,
+                    };
+                    if !sent {
+                        // The connection's receiver is gone (session tearing
+                        // down); the disconnect path will requeue whatever it
+                        // still holds — nack these back right away so nothing
+                        // is stranded in the meantime.
+                        send_failed = true;
+                        if let Some(q) = queues.get_mut(qname) {
+                            for t in &tags_of {
+                                q.nack(*t, true);
+                                delivery_index.remove(t);
+                            }
+                        }
+                    }
+                }
+            }
+            // WAL retirement of messages that expired during assignment —
+            // after the shard lock is released (lock order: never hold the
+            // WAL lock while acquiring a shard lock, and keep shard holds
+            // short).
+            if durable && !expired_ids.is_empty() {
+                persister.lock().unwrap().record_retire_batch(qname, &expired_ids).ok();
+            }
+            if assigned > 0 {
+                self.delivered.add(assigned as u64);
+                self.shard_delivered[shard.index()].add(assigned as u64);
+                self.shard_batches[shard.index()].inc();
+            }
+            if send_failed {
+                // Nacked-back messages would be reassigned to the same dead
+                // consumer on the next round — an unbounded hot spin. Stop;
+                // the disconnect path removes the consumer and re-pumps, and
+                // any later ack/publish re-triggers delivery too.
+                return;
+            }
+            if assigned < self.batch {
+                return; // queue ran dry (or out of consumer capacity)
+            }
+        }
+    }
+}

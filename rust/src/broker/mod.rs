@@ -18,21 +18,29 @@
 //! * **Durability**: durable queues persist messages to a write-ahead log
 //!   and survive broker restarts.
 //!
-//! The [`core::BrokerCore`] is transport-agnostic; [`server`] exposes it
-//! over TCP and [`inproc`] embeds it in-process (used by tests, benches and
-//! single-machine deployments — AiiDA's "individual laptop" scale).
+//! The [`core::BrokerCore`] is transport-agnostic and sharded: [`router`]
+//! resolves exchanges/bindings behind read-mostly locks, [`shard`] holds N
+//! independent queue shards (hash of queue name → shard) so traffic to
+//! different queues never contends, and [`dispatch`] drains ready messages
+//! in batches, coalescing them into per-connection multi-delivery frames.
+//! [`server`] exposes the core over TCP and [`inproc`] embeds it
+//! in-process (used by tests, benches and single-machine deployments —
+//! AiiDA's "individual laptop" scale).
 
 pub mod core;
+pub mod dispatch;
 pub mod exchange;
 pub mod heartbeat;
 pub mod inproc;
 pub mod persistence;
 pub mod protocol;
 pub mod queue;
+pub mod router;
 pub mod server;
 pub mod session;
+pub mod shard;
 
-pub use self::core::{BrokerCore, BrokerHandle, ConnectionId};
+pub use self::core::{BrokerConfig, BrokerCore, BrokerHandle, ConnectionId};
 pub use inproc::InprocBroker;
 pub use protocol::{ClientRequest, Delivery, MessageProps, ServerMsg};
 pub use server::BrokerServer;

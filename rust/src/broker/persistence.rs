@@ -48,6 +48,22 @@ pub trait Persister: Send {
     fn record_retire(&mut self, queue: &str, msg_id: u64) -> Result<()>;
     fn record_queue_declare(&mut self, queue: &str, options: &QueueOptions) -> Result<()>;
     fn record_queue_delete(&mut self, queue: &str) -> Result<()>;
+    /// Group commit: log a batch of publishes with (at most) one flush /
+    /// fsync for the whole batch. The default just loops `record_publish`;
+    /// [`WalPersister`] overrides it to amortise the sync.
+    fn record_publish_batch(&mut self, entries: &[(&str, &QueuedMessage)]) -> Result<()> {
+        for (queue, msg) in entries.iter().copied() {
+            self.record_publish(queue, msg)?;
+        }
+        Ok(())
+    }
+    /// Batched retirement (acks, purges, expiries): one flush per batch.
+    fn record_retire_batch(&mut self, queue: &str, msg_ids: &[u64]) -> Result<()> {
+        for id in msg_ids {
+            self.record_retire(queue, *id)?;
+        }
+        Ok(())
+    }
     /// Force everything to stable storage.
     fn sync(&mut self) -> Result<()>;
     /// Opportunity to compact; called periodically by the broker.
@@ -185,16 +201,34 @@ impl WalPersister {
         Ok(())
     }
 
-    fn after_publish(&mut self) -> Result<()> {
-        self.unsynced += 1;
+    /// Apply the sync policy after `n` publish records were appended —
+    /// one flush (and at most one fsync) regardless of `n`, which is what
+    /// makes batched durable publishes group-commit.
+    fn commit_publishes(&mut self, n: u32) -> Result<()> {
+        self.unsynced += n;
         match self.policy {
             SyncPolicy::Always => self.sync(),
-            SyncPolicy::EveryN(n) if self.unsynced >= n => self.sync(),
+            SyncPolicy::EveryN(limit) if self.unsynced >= limit => self.sync(),
             _ => {
                 self.writer.flush()?;
                 Ok(())
             }
         }
+    }
+
+    /// Append one retirement record without flushing (batch building block).
+    fn retire_one(&mut self, queue: &str, msg_id: u64) -> Result<()> {
+        self.append(
+            KIND_RETIRE,
+            &Value::map([("queue", Value::str(queue)), ("msg_id", Value::from(msg_id))]),
+        )?;
+        self.live = self.live.saturating_sub(1);
+        if let Some(msgs) = self.shadow.messages.get_mut(queue) {
+            if let Some(pos) = msgs.iter().position(|m| m.msg_id == msg_id) {
+                msgs.remove(pos);
+            }
+        }
+        Ok(())
     }
 
     /// Fraction of the log that is dead records.
@@ -256,19 +290,33 @@ impl Persister for WalPersister {
         self.append(KIND_PUBLISH, &msg_to_value(queue, msg))?;
         self.live += 1;
         self.shadow.messages.entry(queue.to_string()).or_default().push(msg.clone());
-        self.after_publish()
+        self.commit_publishes(1)
+    }
+
+    fn record_publish_batch(&mut self, entries: &[(&str, &QueuedMessage)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        for (queue, msg) in entries.iter().copied() {
+            self.append(KIND_PUBLISH, &msg_to_value(queue, msg))?;
+            self.live += 1;
+            self.shadow.messages.entry(queue.to_string()).or_default().push(msg.clone());
+        }
+        self.commit_publishes(entries.len() as u32)
     }
 
     fn record_retire(&mut self, queue: &str, msg_id: u64) -> Result<()> {
-        self.append(
-            KIND_RETIRE,
-            &Value::map([("queue", Value::str(queue)), ("msg_id", Value::from(msg_id))]),
-        )?;
-        self.live = self.live.saturating_sub(1);
-        if let Some(msgs) = self.shadow.messages.get_mut(queue) {
-            if let Some(pos) = msgs.iter().position(|m| m.msg_id == msg_id) {
-                msgs.remove(pos);
-            }
+        self.retire_one(queue, msg_id)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn record_retire_batch(&mut self, queue: &str, msg_ids: &[u64]) -> Result<()> {
+        if msg_ids.is_empty() {
+            return Ok(());
+        }
+        for id in msg_ids {
+            self.retire_one(queue, *id)?;
         }
         self.writer.flush()?;
         Ok(())
@@ -547,6 +595,41 @@ mod tests {
             assert_eq!(rec.message_count(), 20, "policy {policy:?}");
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn publish_batch_group_commits_and_recovers() {
+        let path = temp_wal();
+        {
+            // EveryN(1000) with a 50-record batch: group commit must count
+            // all 50 toward the sync budget but flush only once.
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::EveryN(1000)).unwrap();
+            wal.record_queue_declare("a", &QueueOptions::durable()).unwrap();
+            wal.record_queue_declare("b", &QueueOptions::durable()).unwrap();
+            let msgs: Vec<QueuedMessage> = (0..50).map(|i| msg(i, "bulk")).collect();
+            let entries: Vec<(&str, &QueuedMessage)> = msgs
+                .iter()
+                .map(|m| (if m.msg_id % 2 == 0 { "a" } else { "b" }, m))
+                .collect();
+            wal.record_publish_batch(&entries).unwrap();
+            wal.record_retire_batch("a", &[0, 2, 4]).unwrap();
+            wal.sync().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(rec.messages["a"].len(), 22);
+        assert_eq!(rec.messages["b"].len(), 25);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn publish_batch_triggers_fsync_when_budget_crossed() {
+        let path = temp_wal();
+        let (mut wal, _) = WalPersister::open(&path, SyncPolicy::EveryN(8)).unwrap();
+        let msgs: Vec<QueuedMessage> = (0..10).map(|i| msg(i, "x")).collect();
+        let entries: Vec<(&str, &QueuedMessage)> = msgs.iter().map(|m| ("q", m)).collect();
+        wal.record_publish_batch(&entries).unwrap();
+        assert_eq!(wal.unsynced, 0, "batch of 10 must cross the EveryN(8) budget and sync");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -192,6 +192,10 @@ pub enum ClientRequest {
     Consume { queue: String, consumer_tag: String, prefetch: u32 },
     Cancel { consumer_tag: String },
     Ack { delivery_tag: u64 },
+    /// Acknowledge many deliveries in one frame (the client-side ack
+    /// pipeline coalesces acks issued while a delivery batch is being
+    /// dispatched). Each tag is acked independently and idempotently.
+    AckMulti { delivery_tags: Vec<u64> },
     Nack { delivery_tag: u64, requeue: bool },
     /// Broker status snapshot (queue depths, counters).
     Status,
@@ -216,6 +220,10 @@ pub enum ServerMsg {
     Ok { req_id: u64, reply: Value },
     Err { req_id: u64, code: String, message: String },
     Deliver(Delivery),
+    /// Several deliveries coalesced into one frame by the batched
+    /// dispatcher — one channel-send / one syscall for the whole batch.
+    /// Clients dispatch the contained deliveries in order.
+    DeliverBatch(Vec<Delivery>),
     /// Consumer cancelled server-side (queue deleted / exclusivity).
     CancelConsumer { consumer_tag: String },
 }
@@ -300,6 +308,14 @@ impl ClientRequest {
             ClientRequest::Ack { delivery_tag } => {
                 req("ack", req_id, vec![("delivery_tag", Value::from(*delivery_tag))])
             }
+            ClientRequest::AckMulti { delivery_tags } => req(
+                "ack_multi",
+                req_id,
+                vec![(
+                    "delivery_tags",
+                    Value::List(delivery_tags.iter().map(|t| Value::from(*t)).collect()),
+                )],
+            ),
             ClientRequest::Nack { delivery_tag, requeue } => req(
                 "nack",
                 req_id,
@@ -358,6 +374,14 @@ impl ClientRequest {
                 ClientRequest::Cancel { consumer_tag: v.get_str("consumer_tag")?.to_string() }
             }
             "ack" => ClientRequest::Ack { delivery_tag: v.get_u64("delivery_tag")? },
+            "ack_multi" => ClientRequest::AckMulti {
+                delivery_tags: v
+                    .get("delivery_tags")?
+                    .as_list()?
+                    .iter()
+                    .map(|t| t.as_u64())
+                    .collect::<Result<Vec<u64>>>()?,
+            },
             "nack" => ClientRequest::Nack {
                 delivery_tag: v.get_u64("delivery_tag")?,
                 requeue: v.get_bool("requeue")?,
@@ -412,6 +436,10 @@ impl ServerMsg {
                 ("message", Value::str(message)),
             ]),
             ServerMsg::Deliver(d) => d.to_value(),
+            ServerMsg::DeliverBatch(ds) => Value::map([
+                ("kind", Value::str("deliver_batch")),
+                ("deliveries", Value::List(ds.iter().map(Delivery::to_value).collect())),
+            ]),
             ServerMsg::CancelConsumer { consumer_tag } => Value::map([
                 ("kind", Value::str("cancel_consumer")),
                 ("consumer_tag", Value::str(consumer_tag)),
@@ -431,6 +459,13 @@ impl ServerMsg {
                 message: v.get_str("message")?.to_string(),
             }),
             "deliver" => Ok(ServerMsg::Deliver(Delivery::from_value(v)?)),
+            "deliver_batch" => Ok(ServerMsg::DeliverBatch(
+                v.get("deliveries")?
+                    .as_list()?
+                    .iter()
+                    .map(Delivery::from_value)
+                    .collect::<Result<Vec<Delivery>>>()?,
+            )),
             "cancel_consumer" => Ok(ServerMsg::CancelConsumer {
                 consumer_tag: v.get_str("consumer_tag")?.to_string(),
             }),
@@ -492,6 +527,8 @@ mod tests {
             prefetch: 1,
         });
         roundtrip_req(ClientRequest::Ack { delivery_tag: 99 });
+        roundtrip_req(ClientRequest::AckMulti { delivery_tags: vec![3, 5, 8, 13] });
+        roundtrip_req(ClientRequest::AckMulti { delivery_tags: vec![] });
         roundtrip_req(ClientRequest::Nack { delivery_tag: 100, requeue: true });
         roundtrip_req(ClientRequest::Status);
         roundtrip_req(ClientRequest::Close);
@@ -511,6 +548,19 @@ mod tests {
                 body: Arc::new(Value::str("payload")),
                 props: MessageProps::default(),
             }),
+            ServerMsg::DeliverBatch(
+                (0..3)
+                    .map(|i| Delivery {
+                        consumer_tag: "ct".into(),
+                        delivery_tag: i,
+                        redelivered: false,
+                        exchange: "".into(),
+                        routing_key: "tasks".into(),
+                        body: Arc::new(Value::I64(i as i64)),
+                        props: MessageProps::default(),
+                    })
+                    .collect(),
+            ),
             ServerMsg::CancelConsumer { consumer_tag: "ct".into() },
         ] {
             let v = m.to_value();

@@ -2,8 +2,8 @@
 //! tracking, consumer round-robin with prefetch accounting, TTL expiry.
 //!
 //! This module is pure data structure — no locks, no I/O — which is what
-//! makes it property-testable. The [`super::core`] module wraps one
-//! `BrokerCore` lock around many `Queue`s.
+//! makes it property-testable. The [`super::shard`] module wraps a shard
+//! lock around a subset of `Queue`s; [`super::core`] composes the shards.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -140,6 +140,12 @@ impl Queue {
         self.consumers.iter().any(|c| c.consumer_tag == tag)
     }
 
+    /// The attached consumers (the core uses this to notify owners when a
+    /// queue is deleted out from under them).
+    pub fn consumers(&self) -> &[Consumer] {
+        &self.consumers
+    }
+
     /// Enqueue a message. Applies the queue default TTL when the message
     /// has none, and enforces `max_length` by dropping the oldest ready
     /// message. Returns ids of messages dropped by overflow (for WAL acks).
@@ -203,6 +209,18 @@ impl Queue {
         self.consumers.len() != before
     }
 
+    /// Remove a consumer only if it is owned by `connection`. Used by
+    /// rollback paths so they cannot tear down a same-tag consumer that a
+    /// different (live) connection registered in the meantime.
+    pub fn remove_consumer_of(&mut self, tag: &str, connection: u64) -> bool {
+        let before = self.consumers.len();
+        self.consumers.retain(|c| !(c.consumer_tag == tag && c.connection == connection));
+        if self.rr_cursor >= self.consumers.len() {
+            self.rr_cursor = 0;
+        }
+        self.consumers.len() != before
+    }
+
     /// Drive delivery: assign ready messages to consumers with free
     /// prefetch capacity, round-robin. `next_tag` allocates delivery tags.
     ///
@@ -210,12 +228,24 @@ impl Queue {
     /// moved from `ready` to `unacked` *atomically* with the decision to
     /// hand it to exactly one consumer — the "no race conditions between
     /// multiple daemon processes" guarantee in the paper.
-    pub fn assign(&mut self, now: Instant, mut next_tag: impl FnMut() -> u64) -> Vec<Assignment> {
+    pub fn assign(&mut self, now: Instant, next_tag: impl FnMut() -> u64) -> Vec<Assignment> {
+        self.assign_up_to(now, usize::MAX, next_tag)
+    }
+
+    /// Like [`Queue::assign`] but hands out at most `limit` messages — the
+    /// batched-dispatch entry point, bounding how long a shard lock is held
+    /// per drain round.
+    pub fn assign_up_to(
+        &mut self,
+        now: Instant,
+        limit: usize,
+        mut next_tag: impl FnMut() -> u64,
+    ) -> Vec<Assignment> {
         let mut out = Vec::new();
-        if self.consumers.is_empty() {
+        if self.consumers.is_empty() || limit == 0 {
             return out;
         }
-        'outer: while self.ready_count > 0 {
+        'outer: while self.ready_count > 0 && out.len() < limit {
             // Find the next consumer with capacity, starting at the cursor.
             let n = self.consumers.len();
             let mut found = None;
@@ -290,17 +320,25 @@ impl Queue {
 
     /// Requeue every unacked message belonging to `connection` and remove
     /// its consumers — what the broker does when a client dies (abrupt
-    /// shutdown, two missed heartbeats). Returns how many were requeued.
-    pub fn drop_connection(&mut self, connection: u64) -> usize {
-        let tags: Vec<u64> = self
+    /// shutdown, two missed heartbeats). Returns the now-dead delivery tags
+    /// so the caller can prune its delivery index (requeued messages get
+    /// fresh tags on redelivery).
+    ///
+    /// Requeued messages are re-inserted at the *front* of their priority
+    /// lane in ascending delivery-tag order, so a batch taken in order
+    /// `m1, m2, m3` comes back as `m1, m2, m3` — redelivery preserves the
+    /// original FIFO order.
+    pub fn drop_connection(&mut self, connection: u64) -> Vec<u64> {
+        let mut tags: Vec<u64> = self
             .unacked
             .iter()
             .filter(|(_, f)| f.connection == connection)
             .map(|(t, _)| *t)
             .collect();
-        let n = tags.len();
-        for tag in tags {
-            let inflight = self.unacked.remove(&tag).unwrap();
+        // Descending tag order + push_front = oldest delivery ends up first.
+        tags.sort_unstable_by(|a, b| b.cmp(a));
+        for tag in &tags {
+            let inflight = self.unacked.remove(tag).unwrap();
             let mut msg = inflight.message;
             msg.redelivered = true;
             let lane = msg.lane();
@@ -312,7 +350,7 @@ impl Queue {
         if self.rr_cursor >= self.consumers.len() {
             self.rr_cursor = 0;
         }
-        n
+        tags
     }
 
     /// Drop all ready messages; returns their ids (for WAL retirement).
@@ -523,15 +561,35 @@ mod tests {
         q.add_consumer(consumer("dead", 7, 0));
         let a = q.assign(now, tagger());
         assert_eq!(a.len(), 10);
-        assert_eq!(q.drop_connection(7), 10);
+        assert_eq!(q.drop_connection(7).len(), 10);
         assert_eq!(q.ready_len(), 10);
         assert_eq!(q.unacked_len(), 0);
         assert_eq!(q.consumer_count(), 0);
-        // A new consumer picks everything up, marked redelivered.
+        // A new consumer picks everything up, marked redelivered, in the
+        // original FIFO order.
         q.add_consumer(consumer("alive", 8, 0));
         let b = q.assign(now, tagger());
         assert_eq!(b.len(), 10);
         assert!(b.iter().all(|x| x.message.redelivered));
+        let ids: Vec<u64> = b.iter().map(|x| x.message.msg_id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>(), "redelivery must preserve order");
+    }
+
+    #[test]
+    fn assign_up_to_bounds_batch_size() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..10 {
+            q.publish(msg(i, 0), now);
+        }
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        let a = q.assign_up_to(now, 4, &mut tags);
+        assert_eq!(a.len(), 4);
+        assert_eq!(q.ready_len(), 6);
+        let b = q.assign_up_to(now, 100, &mut tags);
+        assert_eq!(b.len(), 6);
+        assert_eq!(b[0].message.msg_id, 4, "batches drain in FIFO order");
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! The control plane of the sharded broker: exchange declarations,
+//! bindings and route resolution, behind read-mostly `RwLock`s.
+//!
+//! Publishes only ever take read locks here (route resolution), so
+//! concurrent publishers to different queues proceed in parallel; binds,
+//! unbinds and queue (un)registration — rare, control-plane operations —
+//! take the write lock.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::RwLock;
+
+use crate::broker::exchange::Exchange;
+use crate::broker::protocol::ExchangeKind;
+use crate::error::{Error, Result};
+
+/// Exchange/binding tables + the set of live queue names (the default
+/// exchange routes on bare queue names, so existence lives here too).
+#[derive(Default)]
+pub struct Router {
+    exchanges: RwLock<HashMap<String, Exchange>>,
+    queue_names: RwLock<HashSet<String>>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that a queue exists (declare). Idempotent.
+    pub fn register_queue(&self, name: &str) {
+        self.queue_names.write().unwrap().insert(name.to_string());
+    }
+
+    /// Record that a queue is gone (delete) and drop all its bindings.
+    pub fn unregister_queue(&self, name: &str) {
+        self.queue_names.write().unwrap().remove(name);
+        for ex in self.exchanges.write().unwrap().values_mut() {
+            ex.unbind_queue(name);
+        }
+    }
+
+    pub fn queue_exists(&self, name: &str) -> bool {
+        self.queue_names.read().unwrap().contains(name)
+    }
+
+    /// Declare an exchange. Redeclaring with the same kind is idempotent;
+    /// with a different kind it is an error (AMQP behaviour).
+    pub fn declare_exchange(&self, exchange: &str, kind: ExchangeKind) -> Result<()> {
+        if exchange.is_empty() {
+            return Err(Error::Broker("cannot declare the default exchange".into()));
+        }
+        let mut exchanges = self.exchanges.write().unwrap();
+        match exchanges.get(exchange) {
+            Some(ex) if ex.kind != kind => Err(Error::Broker(format!(
+                "exchange '{exchange}' exists with kind {}",
+                ex.kind.as_str()
+            ))),
+            Some(_) => Ok(()),
+            None => {
+                exchanges.insert(exchange.to_string(), Exchange::new(exchange, kind));
+                Ok(())
+            }
+        }
+    }
+
+    pub fn bind(&self, exchange: &str, queue: &str, routing_key: &str) -> Result<()> {
+        // The existence check happens *inside* the exchanges write lock so a
+        // concurrent queue deletion cannot interleave between check and
+        // insert: `unregister_queue` removes the name first, then takes this
+        // same write lock to strip bindings — so either our binding lands
+        // before the strip (and is stripped) or the name is already gone
+        // (and we error). No stale binding can survive.
+        let mut exchanges = self.exchanges.write().unwrap();
+        if !self.queue_exists(queue) {
+            return Err(Error::Broker(format!("no such queue '{queue}'")));
+        }
+        let ex = exchanges
+            .get_mut(exchange)
+            .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
+        ex.bind(routing_key, queue);
+        Ok(())
+    }
+
+    pub fn unbind(&self, exchange: &str, queue: &str, routing_key: &str) -> Result<()> {
+        let mut exchanges = self.exchanges.write().unwrap();
+        let ex = exchanges
+            .get_mut(exchange)
+            .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
+        ex.unbind(routing_key, queue);
+        Ok(())
+    }
+
+    /// Resolve `(exchange, routing_key)` to target queue names. The empty
+    /// exchange is the AMQP default exchange: direct to the queue named by
+    /// the key, if it exists.
+    pub fn route(&self, exchange: &str, routing_key: &str) -> Result<Vec<String>> {
+        if exchange.is_empty() {
+            return Ok(if self.queue_exists(routing_key) {
+                vec![routing_key.to_string()]
+            } else {
+                vec![]
+            });
+        }
+        let exchanges = self.exchanges.read().unwrap();
+        let ex = exchanges
+            .get(exchange)
+            .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
+        Ok(ex.route(routing_key).into_iter().map(String::from).collect())
+    }
+
+    pub fn exchange_count(&self) -> usize {
+        self.exchanges.read().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_exchange_routes_to_existing_queue_only() {
+        let r = Router::new();
+        assert!(r.route("", "tasks").unwrap().is_empty());
+        r.register_queue("tasks");
+        assert_eq!(r.route("", "tasks").unwrap(), vec!["tasks"]);
+        r.unregister_queue("tasks");
+        assert!(r.route("", "tasks").unwrap().is_empty());
+    }
+
+    #[test]
+    fn declare_is_idempotent_kind_conflict_rejected() {
+        let r = Router::new();
+        r.declare_exchange("x", ExchangeKind::Direct).unwrap();
+        r.declare_exchange("x", ExchangeKind::Direct).unwrap();
+        assert!(r.declare_exchange("x", ExchangeKind::Fanout).is_err());
+        assert!(r.declare_exchange("", ExchangeKind::Direct).is_err());
+        assert_eq!(r.exchange_count(), 1);
+    }
+
+    #[test]
+    fn bind_requires_queue_and_exchange() {
+        let r = Router::new();
+        r.declare_exchange("x", ExchangeKind::Direct).unwrap();
+        assert!(r.bind("x", "missing", "k").is_err());
+        r.register_queue("q");
+        assert!(r.bind("nope", "q", "k").is_err());
+        r.bind("x", "q", "k").unwrap();
+        assert_eq!(r.route("x", "k").unwrap(), vec!["q"]);
+    }
+
+    #[test]
+    fn unregister_queue_drops_bindings_everywhere() {
+        let r = Router::new();
+        r.declare_exchange("a", ExchangeKind::Fanout).unwrap();
+        r.declare_exchange("b", ExchangeKind::Topic).unwrap();
+        r.register_queue("q");
+        r.bind("a", "q", "").unwrap();
+        r.bind("b", "q", "ev.#").unwrap();
+        r.unregister_queue("q");
+        assert!(r.route("a", "x").unwrap().is_empty());
+        assert!(r.route("b", "ev.1").unwrap().is_empty());
+    }
+
+    #[test]
+    fn route_to_unknown_exchange_is_error() {
+        let r = Router::new();
+        assert!(r.route("ghost", "k").is_err());
+    }
+}

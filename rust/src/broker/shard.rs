@@ -1,0 +1,220 @@
+//! Queue shards: the broker's data plane is split into N independent
+//! shards, each a `Mutex` over a disjoint subset of queues (hash of the
+//! queue name picks the shard). Publishes, acks and delivery pumping for
+//! queues in different shards never contend on a lock — the hot path
+//! scales with cores instead of serialising on one `Mutex<Core>`.
+//!
+//! Delivery tags are *stride-encoded*: shard `i` of `N` allocates tags
+//! `i + N, i + 2N, i + 3N, …`, so `tag % N` recovers the owning shard.
+//! An ack therefore routes straight to the right shard without any shared
+//! lookup structure, and each shard keeps its own `delivery_tag → queue`
+//! index.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::broker::core::{ConnectionEntry, ConnectionId};
+use crate::broker::queue::Queue;
+
+/// One shard: a lock over its queues, its share of the delivery index, and
+/// a cache of connection entries for lock-free-ish delivery sends.
+pub struct Shard {
+    index: usize,
+    state: Mutex<ShardState>,
+}
+
+/// The state guarded by one shard lock.
+pub struct ShardState {
+    /// Queues owned by this shard.
+    pub queues: HashMap<String, Queue>,
+    /// delivery_tag -> queue name, for tags allocated by this shard.
+    /// Entries are pruned on ack/nack, on queue deletion and on connection
+    /// disconnect (requeued messages get fresh tags on redelivery).
+    pub delivery_index: HashMap<u64, String>,
+    /// Delivery targets: connections with consumers on this shard's
+    /// queues. Populated on `Consume`, pruned on disconnect. Keeping the
+    /// `Arc`s here lets the dispatcher send while holding only the shard
+    /// lock — no excursion into the global connection registry.
+    pub conns: HashMap<ConnectionId, Arc<ConnectionEntry>>,
+    index: u64,
+    stride: u64,
+    next_tag: u64,
+}
+
+impl ShardState {
+    /// Allocate the next stride-encoded delivery tag for this shard.
+    /// (Same allocator the dispatcher borrows via [`ShardState::for_dispatch`].)
+    pub fn alloc_tag(&mut self) -> u64 {
+        TagAlloc { index: self.index, stride: self.stride, next_tag: &mut self.next_tag }.next()
+    }
+
+    /// Drop `conn` from every queue in this shard: requeue its unacked
+    /// messages, remove its consumers, prune its delivery-index entries
+    /// (requeued messages get fresh tags on redelivery, so stale entries
+    /// would leak forever under connection churn). Returns the number of
+    /// requeued messages and the queues whose delivery pump should run.
+    pub fn drop_connection(&mut self, conn: ConnectionId) -> (usize, Vec<String>) {
+        self.conns.remove(&conn);
+        let mut requeued = 0usize;
+        let mut touched = Vec::new();
+        for (name, q) in self.queues.iter_mut() {
+            let dead_tags = q.drop_connection(conn);
+            for t in &dead_tags {
+                self.delivery_index.remove(t);
+            }
+            if !dead_tags.is_empty() || q.consumer_count() > 0 {
+                touched.push(name.clone());
+            }
+            requeued += dead_tags.len();
+        }
+        (requeued, touched)
+    }
+
+    /// Split the state into the pieces the dispatcher needs with disjoint
+    /// borrows: (queues, delivery_index, conns, tag allocator inputs).
+    pub fn for_dispatch(
+        &mut self,
+    ) -> (
+        &mut HashMap<String, Queue>,
+        &mut HashMap<u64, String>,
+        &HashMap<ConnectionId, Arc<ConnectionEntry>>,
+        TagAlloc<'_>,
+    ) {
+        (
+            &mut self.queues,
+            &mut self.delivery_index,
+            &self.conns,
+            TagAlloc { index: self.index, stride: self.stride, next_tag: &mut self.next_tag },
+        )
+    }
+}
+
+/// A borrowed tag allocator (disjoint from the queue map borrow).
+pub struct TagAlloc<'a> {
+    index: u64,
+    stride: u64,
+    next_tag: &'a mut u64,
+}
+
+impl TagAlloc<'_> {
+    pub fn next(&mut self) -> u64 {
+        *self.next_tag += 1;
+        self.index + self.stride * *self.next_tag
+    }
+}
+
+impl Shard {
+    fn new(index: usize, stride: usize) -> Self {
+        Shard {
+            index,
+            state: Mutex::new(ShardState {
+                queues: HashMap::new(),
+                delivery_index: HashMap::new(),
+                conns: HashMap::new(),
+                index: index as u64,
+                stride: stride as u64,
+                next_tag: 0,
+            }),
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap()
+    }
+}
+
+/// The fixed set of shards. Shard count is chosen at broker construction
+/// and never changes (queue → shard mapping must stay stable).
+pub struct ShardSet {
+    shards: Vec<Shard>,
+}
+
+impl ShardSet {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        ShardSet { shards: (0..n).map(|i| Shard::new(i, n)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty() // never true: `new` clamps to ≥ 1 shard
+    }
+
+    /// Stable queue-name → shard-index mapping.
+    pub fn index_for(&self, queue: &str) -> usize {
+        let mut h = DefaultHasher::new();
+        queue.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    pub fn shard_for(&self, queue: &str) -> &Shard {
+        &self.shards[self.index_for(queue)]
+    }
+
+    /// The shard that allocated `tag` (stride encoding).
+    pub fn shard_for_tag(&self, tag: u64) -> &Shard {
+        &self.shards[(tag % self.shards.len() as u64) as usize]
+    }
+
+    pub fn get(&self, index: usize) -> &Shard {
+        &self.shards[index]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Shard> {
+        self.shards.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_unique_and_route_back_to_their_shard() {
+        let set = ShardSet::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for shard in set.iter() {
+            let mut st = shard.lock();
+            for _ in 0..100 {
+                let tag = st.alloc_tag();
+                assert!(tag > 0, "tags are non-zero");
+                assert!(seen.insert(tag), "tags are globally unique");
+                assert_eq!(set.shard_for_tag(tag).index(), shard.index());
+            }
+        }
+    }
+
+    #[test]
+    fn queue_mapping_is_stable_and_total() {
+        let set = ShardSet::new(8);
+        for name in ["tasks", "replies", "kiwi.rpc.q", "a", ""] {
+            let i = set.index_for(name);
+            assert!(i < set.len());
+            assert_eq!(i, set.index_for(name), "mapping must be deterministic");
+        }
+    }
+
+    #[test]
+    fn single_shard_set_degenerates_to_global_lock() {
+        let set = ShardSet::new(1);
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.index_for("anything"), 0);
+        let mut st = set.get(0).lock();
+        assert_eq!(st.alloc_tag(), 1);
+        assert_eq!(st.alloc_tag(), 2);
+    }
+
+    #[test]
+    fn zero_shards_clamped_to_one() {
+        assert_eq!(ShardSet::new(0).len(), 1);
+    }
+}

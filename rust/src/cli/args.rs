@@ -16,7 +16,8 @@ pub struct Args {
 /// Option names that take a value (everything else starting `--` is a flag).
 const VALUED: &[&str] = &[
     "config", "addr", "workers", "heartbeat-ms", "queue", "process", "inputs", "pid", "reason",
-    "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms",
+    "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
+    "delivery-batch",
 ];
 
 impl Args {
@@ -91,6 +92,13 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(["kiwi".into(), "--addr".into()]).is_err());
+    }
+
+    #[test]
+    fn sharding_options_take_values() {
+        let a = parse("kiwi broker --shards 8 --delivery-batch 128");
+        assert_eq!(a.opt_parse::<usize>("shards").unwrap(), Some(8));
+        assert_eq!(a.opt_parse::<usize>("delivery-batch").unwrap(), Some(128));
     }
 
     #[test]

@@ -33,6 +33,7 @@ USAGE: kiwi <subcommand> [options]
 
 SUBCOMMANDS
   broker    run the message broker            [--addr HOST:PORT] [--wal PATH | --transient]
+                                              [--shards N (0 = per-core)] [--delivery-batch N]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
   ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
@@ -79,6 +80,12 @@ fn load_config(args: &Args) -> Result<Config> {
     if args.flag("transient") {
         config.wal_path = None;
     }
+    if let Some(n) = args.opt_parse::<usize>("shards")? {
+        config.shards = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("delivery-batch")? {
+        config.delivery_batch = n.max(1);
+    }
     Ok(config)
 }
 
@@ -119,6 +126,7 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn cmd_broker(args: &Args) -> Result<()> {
     let config = load_config(args)?;
+    let broker_config = config.broker_config();
     let broker = match &config.wal_path {
         Some(path) => {
             if let Some(parent) = path.parent() {
@@ -129,15 +137,21 @@ fn cmd_broker(args: &Args) -> Result<()> {
             if n > 0 {
                 println!("recovered {n} durable message(s) from {path:?}");
             }
-            BrokerHandle::with_persister(Box::new(wal), recovered)
+            BrokerHandle::with_config(Box::new(wal), recovered, broker_config)
         }
-        None => BrokerHandle::with_persister(
+        None => BrokerHandle::with_config(
             Box::new(crate::broker::persistence::NoopPersister),
             RecoveredState::default(),
+            broker_config,
         ),
     };
     let server = BrokerServer::start(broker, &config.broker_addr)?;
-    println!("kiwi broker listening on {}", server.addr());
+    println!(
+        "kiwi broker listening on {} ({} shards, delivery batch {})",
+        server.addr(),
+        broker_config.shards,
+        broker_config.delivery_batch
+    );
     // Run until killed; the heartbeat monitor and sessions do the work.
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -257,12 +271,15 @@ mod tests {
     #[test]
     fn config_overrides_from_args() {
         let config = load_config(&parse(
-            "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient",
+            "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient \
+             --shards 2 --delivery-batch 32",
         ))
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
         assert_eq!(config.workers, 3);
         assert_eq!(config.heartbeat_ms, 250);
         assert!(config.wal_path.is_none());
+        assert_eq!(config.shards, 2);
+        assert_eq!(config.delivery_batch, 32);
     }
 }

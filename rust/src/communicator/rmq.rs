@@ -14,6 +14,12 @@
 //! * **broadcast** — a fanout exchange (`kiwi.broadcast`); every subscriber
 //!   binds its own exclusive queue; filtering is subscriber-side
 //!   ([`BroadcastFilter`]), exactly like kiwiPy.
+//!
+//! Acks are pipelined end-to-end: when the broker coalesces a backlog into
+//! a delivery batch, every `ctx.complete(..)` / reply-consumer ack issued
+//! while that batch is dispatched buffers in the connection's ack window
+//! and leaves as a single `AckMulti` frame — one write for the whole
+//! batch's worth of acks instead of one per message.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};

@@ -30,6 +30,10 @@ pub struct Config {
     pub sync_policy: SyncPolicy,
     /// Blocking-call timeout.
     pub request_timeout: Duration,
+    /// Broker queue shards (0 = one per available core).
+    pub shards: usize,
+    /// Max deliveries per shard-lock acquisition / DeliverBatch frame.
+    pub delivery_batch: usize,
 }
 
 impl Default for Config {
@@ -44,6 +48,8 @@ impl Default for Config {
             wal_path: Some(".kiwi/broker.wal".into()),
             sync_policy: SyncPolicy::EveryN(64),
             request_timeout: Duration::from_secs(30),
+            shards: 0, // auto: one shard per available core
+            delivery_batch: 64,
         }
     }
 }
@@ -99,6 +105,12 @@ impl Config {
         if let Some(x) = v.get_opt("request_timeout_ms") {
             c.request_timeout = Duration::from_millis(x.as_u64()?);
         }
+        if let Some(x) = v.get_opt("shards") {
+            c.shards = x.as_u64()? as usize;
+        }
+        if let Some(x) = v.get_opt("delivery_batch") {
+            c.delivery_batch = (x.as_u64()? as usize).max(1);
+        }
         Ok(c)
     }
 
@@ -120,7 +132,21 @@ impl Config {
                 "request_timeout_ms",
                 Value::from(self.request_timeout.as_millis() as u64),
             ),
+            ("shards", Value::from(self.shards)),
+            ("delivery_batch", Value::from(self.delivery_batch)),
         ])
+    }
+
+    /// The broker tuning this config resolves to (0 shards = per-core).
+    pub fn broker_config(&self) -> crate::broker::BrokerConfig {
+        crate::broker::BrokerConfig {
+            shards: if self.shards == 0 {
+                crate::broker::core::default_shards()
+            } else {
+                self.shards
+            },
+            delivery_batch: self.delivery_batch.max(1),
+        }
     }
 
     /// Load from a file, if it exists, then apply env overrides.
@@ -146,7 +172,8 @@ impl Config {
     }
 
     /// `KIWI_BROKER_ADDR`, `KIWI_WORKERS`, `KIWI_HEARTBEAT_MS`,
-    /// `KIWI_ARTIFACTS_DIR`, `KIWI_CHECKPOINT_DIR` override the file.
+    /// `KIWI_ARTIFACTS_DIR`, `KIWI_CHECKPOINT_DIR`, `KIWI_SHARDS`,
+    /// `KIWI_DELIVERY_BATCH` override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -166,6 +193,16 @@ impl Config {
         }
         if let Ok(v) = std::env::var("KIWI_CHECKPOINT_DIR") {
             self.checkpoint_dir = PathBuf::from(v);
+        }
+        if let Ok(v) = std::env::var("KIWI_SHARDS") {
+            if let Ok(n) = v.parse() {
+                self.shards = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_DELIVERY_BATCH") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.delivery_batch = n.max(1);
+            }
         }
     }
 }
@@ -208,6 +245,22 @@ mod tests {
             assert_eq!(c.sync_policy, want);
         }
         assert!(Config::from_value(&json::from_str(r#"{"sync_policy": 5}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sharding_knobs_parse_and_resolve() {
+        let v = json::from_str(r#"{"shards": 4, "delivery_batch": 16}"#).unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.delivery_batch, 16);
+        let bc = c.broker_config();
+        assert_eq!(bc.shards, 4);
+        assert_eq!(bc.delivery_batch, 16);
+        // shards=0 means "one per core": always ≥ 1.
+        assert!(Config::default().broker_config().shards >= 1);
+        // delivery_batch is clamped to ≥ 1.
+        let v = json::from_str(r#"{"delivery_batch": 0}"#).unwrap();
+        assert_eq!(Config::from_value(&v).unwrap().delivery_batch, 1);
     }
 
     #[test]

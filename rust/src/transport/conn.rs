@@ -50,6 +50,10 @@ struct Shared {
     closed: AtomicBool,
     /// Instant of the last frame seen from the broker (liveness).
     last_server_frame: Mutex<Instant>,
+    /// Ack pipeline: `Some` while a delivery batch is being dispatched on
+    /// the communication thread; acks issued in that window buffer here
+    /// and go out as one `AckMulti` frame at the end of the batch.
+    ack_buffer: Mutex<Option<Vec<u64>>>,
 }
 
 impl Shared {
@@ -59,6 +63,50 @@ impl Shared {
             let mut pending = self.pending.lock().unwrap();
             pending.clear(); // dropping senders wakes receivers with Closed
         }
+    }
+
+    /// Fire-and-forget send: no reply waited for (the broker's Ok is
+    /// dropped by the reader when no waiter is found).
+    fn send_noreply(&self, req: &ClientRequest) -> Result<()> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(Error::Closed("connection closed".into()));
+        }
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        self.link.send(&Frame::data(&req.to_value(req_id))).map_err(|e| {
+            self.mark_closed();
+            e
+        })
+    }
+
+    /// Close the window and flush everything buffered as a single frame.
+    fn flush_ack_window(&self) {
+        let tags = self.ack_buffer.lock().unwrap().take();
+        let Some(tags) = tags else { return };
+        let req = match tags.len() {
+            0 => return,
+            1 => ClientRequest::Ack { delivery_tag: tags[0] },
+            _ => ClientRequest::AckMulti { delivery_tags: tags },
+        };
+        self.send_noreply(&req).ok();
+    }
+}
+
+/// RAII handle for the ack-coalescing window: flushes on drop, so the
+/// window closes — and buffered acks still go out — even if a delivery
+/// handler panics mid-batch.
+struct AckWindow {
+    shared: Arc<Shared>,
+}
+
+/// Open the ack-coalescing window (communication thread only).
+fn open_ack_window(shared: &Arc<Shared>) -> AckWindow {
+    *shared.ack_buffer.lock().unwrap() = Some(Vec::new());
+    AckWindow { shared: Arc::clone(shared) }
+}
+
+impl Drop for AckWindow {
+    fn drop(&mut self) {
+        self.shared.flush_ack_window();
     }
 }
 
@@ -81,6 +129,7 @@ impl Connection {
             handlers: Mutex::new(HashMap::new()),
             closed: AtomicBool::new(false),
             last_server_frame: Mutex::new(Instant::now()),
+            ack_buffer: Mutex::new(None),
         });
 
         let reader = {
@@ -165,14 +214,7 @@ impl Connection {
     /// Fire-and-forget request (acks on the hot path): no reply waited for;
     /// the broker's Ok is dropped by the reader when no waiter is found.
     pub fn send_noreply(&self, req: &ClientRequest) -> Result<()> {
-        if self.shared.closed.load(Ordering::Relaxed) {
-            return Err(Error::Closed("connection closed".into()));
-        }
-        let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
-        self.shared.link.send(&Frame::data(&req.to_value(req_id))).map_err(|e| {
-            self.shared.mark_closed();
-            e
-        })
+        self.shared.send_noreply(req)
     }
 
     /// Start consuming `queue`: registers `handler` (invoked on the
@@ -203,8 +245,20 @@ impl Connection {
         Ok(())
     }
 
-    /// Acknowledge a delivery (fire-and-forget).
+    /// Acknowledge a delivery (fire-and-forget). Acks issued while the
+    /// communication thread is dispatching a delivery batch are pipelined:
+    /// they buffer and leave as one `AckMulti` frame when the batch ends.
     pub fn ack(&self, delivery_tag: u64) -> Result<()> {
+        if self.shared.closed.load(Ordering::Relaxed) {
+            return Err(Error::Closed("connection closed".into()));
+        }
+        {
+            let mut buf = self.shared.ack_buffer.lock().unwrap();
+            if let Some(tags) = buf.as_mut() {
+                tags.push(delivery_tag);
+                return Ok(());
+            }
+        }
         self.send_noreply(&ClientRequest::Ack { delivery_tag })
     }
 
@@ -283,6 +337,27 @@ fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
                                     d.consumer_tag
                                 );
                             }
+                        }
+                        Ok(ServerMsg::DeliverBatch(ds)) => {
+                            // Dispatch the whole batch with the ack window
+                            // open: handler acks coalesce into one AckMulti
+                            // frame sent when the batch is done. The guard
+                            // flushes on drop (panic-safe).
+                            let window = open_ack_window(&shared);
+                            {
+                                let mut handlers = shared.handlers.lock().unwrap();
+                                for d in ds {
+                                    if let Some(h) = handlers.get_mut(&d.consumer_tag) {
+                                        h(d);
+                                    } else {
+                                        log::warn!(
+                                            "connection: delivery for unknown consumer '{}'",
+                                            d.consumer_tag
+                                        );
+                                    }
+                                }
+                            }
+                            drop(window);
                         }
                         Ok(ServerMsg::CancelConsumer { consumer_tag }) => {
                             shared.handlers.lock().unwrap().remove(&consumer_tag);
@@ -472,6 +547,53 @@ mod tests {
             assert!(Instant::now() < deadline);
             std::thread::sleep(Duration::from_millis(5));
         }
+    }
+
+    #[test]
+    fn batched_backlog_dispatches_in_order_with_pipelined_acks() {
+        // A pre-existing backlog arrives as DeliverBatch units; handler
+        // acks coalesce into AckMulti frames and still drain the queue.
+        let broker = InprocBroker::new();
+        let conn = Arc::new(open(&broker));
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: "bulk".into(),
+            options: QueueOptions::default(),
+        })
+        .unwrap();
+        for i in 0..40 {
+            conn.request(&ClientRequest::Publish {
+                exchange: "".into(),
+                routing_key: "bulk".into(),
+                body: Arc::new(Value::I64(i)),
+                props: Default::default(),
+                mandatory: true,
+            })
+            .unwrap();
+        }
+        let conn2 = Arc::clone(&conn);
+        let (done_tx, done_rx) = channel();
+        let mut seen: Vec<i64> = Vec::new();
+        conn.consume(
+            "bulk",
+            "c1",
+            0,
+            Box::new(move |d| {
+                seen.push(d.body.as_i64().unwrap());
+                conn2.ack(d.delivery_tag).unwrap();
+                if seen.len() == 40 {
+                    done_tx.send(seen.clone()).unwrap();
+                }
+            }),
+        )
+        .unwrap();
+        let seen = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(seen, (0..40).collect::<Vec<i64>>(), "batch dispatch must preserve order");
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while broker.broker().queue_unacked("bulk") != Some(0) {
+            assert!(Instant::now() < deadline, "pipelined acks must drain the queue");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(broker.broker().delivery_index_len(), 0);
     }
 
     #[test]

@@ -20,6 +20,16 @@ use crate::wire::{read_frame, write_frame, Frame};
 pub trait Link: Send + Sync {
     /// Send one frame (thread-safe).
     fn send(&self, frame: &Frame) -> Result<()>;
+    /// Send several frames as one write unit. The default loops `send`;
+    /// implementations with a buffered writer (TCP) override this to take
+    /// the write lock once and flush once — one syscall per batch instead
+    /// of one per frame.
+    fn send_batch(&self, frames: &[Frame]) -> Result<()> {
+        for frame in frames {
+            self.send(frame)?;
+        }
+        Ok(())
+    }
     /// Receive the next frame, waiting up to `timeout`.
     /// `Err(Timeout)` = nothing arrived; `Err(Closed)`/`Err(Io)` = link dead.
     fn recv_timeout(&self, timeout: Duration) -> Result<Frame>;
@@ -62,6 +72,15 @@ impl Link for TcpLink {
     fn send(&self, frame: &Frame) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
         write_frame(&mut *w, frame)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    fn send_batch(&self, frames: &[Frame]) -> Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        for frame in frames {
+            write_frame(&mut *w, frame)?;
+        }
         w.flush()?;
         Ok(())
     }
@@ -179,6 +198,37 @@ mod tests {
         drop(server);
         assert!(matches!(client.recv_timeout(Duration::from_millis(10)), Err(Error::Closed(_))));
         assert!(matches!(client.send(&Frame::heartbeat()), Err(Error::Closed(_))));
+    }
+
+    #[test]
+    fn send_batch_preserves_frame_order() {
+        let (client, server) = inproc_pair();
+        let frames: Vec<Frame> = (0..5).map(|i| Frame::data(&Value::I64(i))).collect();
+        client.send_batch(&frames).unwrap();
+        for i in 0..5 {
+            let got = server.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!(got.value().unwrap(), Value::I64(i));
+        }
+    }
+
+    #[test]
+    fn tcp_send_batch_is_one_write_unit() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server_thread = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let link = TcpLink::new(stream).unwrap();
+            (0..10)
+                .map(|_| {
+                    link.recv_timeout(Duration::from_secs(2)).unwrap().value().unwrap()
+                })
+                .collect::<Vec<_>>()
+        });
+        let client = connect_tcp(addr).unwrap();
+        let frames: Vec<Frame> = (0..10).map(|i| Frame::data(&Value::I64(i))).collect();
+        client.send_batch(&frames).unwrap();
+        let got = server_thread.join().unwrap();
+        assert_eq!(got, (0..10).map(Value::I64).collect::<Vec<_>>());
     }
 
     #[test]

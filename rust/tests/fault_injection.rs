@@ -187,6 +187,121 @@ fn hung_consumer_evicted_under_load() {
     );
 }
 
+/// A consumer that dies mid-batch (some of a delivery batch acked, the
+/// rest in flight) loses nothing: every unacked message of the batch is
+/// redelivered exactly once, in the original FIFO order, to the surviving
+/// consumer — the sharded dispatcher's redelivery-ordering contract.
+#[test]
+fn mid_batch_consumer_death_redelivers_in_order_exactly_once() {
+    use kiwi::broker::core::BrokerConfig;
+    use kiwi::broker::persistence::NoopPersister;
+    use kiwi::broker::protocol::{
+        ClientRequest, Delivery, MessageProps, QueueOptions, ServerMsg,
+    };
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn drain(rx: &Receiver<ServerMsg>, want: usize) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while out.len() < want {
+            assert!(Instant::now() < deadline, "only got {} of {want} deliveries", out.len());
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(ServerMsg::Deliver(d)) => out.push(d),
+                Ok(ServerMsg::DeliverBatch(ds)) => out.extend(ds),
+                Ok(_) | Err(_) => {}
+            }
+        }
+        out
+    }
+
+    let broker = kiwi::broker::core::BrokerHandle::with_config(
+        Box::new(NoopPersister),
+        kiwi::broker::persistence::RecoveredState::default(),
+        BrokerConfig { shards: 4, delivery_batch: 16 },
+    );
+    let (tx1, rx1) = channel();
+    let doomed = broker.connect("doomed", 0, tx1);
+    broker
+        .handle(
+            doomed,
+            &ClientRequest::QueueDeclare {
+                queue: "redeliver.q".into(),
+                options: QueueOptions::default(),
+            },
+        )
+        .unwrap();
+    for i in 0..40i64 {
+        broker
+            .handle(
+                doomed,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "redeliver.q".into(),
+                    body: Arc::new(Value::I64(i)),
+                    props: MessageProps::default(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+    broker
+        .handle(
+            doomed,
+            &ClientRequest::Consume {
+                queue: "redeliver.q".into(),
+                consumer_tag: "dying".into(),
+                prefetch: 0,
+            },
+        )
+        .unwrap();
+    // The 40-deep backlog arrives as batches (≤ 16 each). Ack the first 6,
+    // then die with the remaining 34 in flight — mid-batch.
+    let deliveries = drain(&rx1, 40);
+    assert_eq!(deliveries.len(), 40);
+    for d in &deliveries[..6] {
+        broker.handle(doomed, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
+    }
+    broker.disconnect(doomed);
+    assert_eq!(broker.queue_unacked("redeliver.q"), Some(0));
+    assert_eq!(broker.queue_depth("redeliver.q"), Some(34));
+    assert_eq!(
+        broker.delivery_index_len(),
+        0,
+        "dead connection's delivery tags must be pruned"
+    );
+
+    // Survivor picks up everything that was unacked: bodies 6..40, in
+    // order, each exactly once, all marked redelivered.
+    let (tx2, rx2) = channel();
+    let survivor = broker.connect("survivor", 0, tx2);
+    broker
+        .handle(
+            survivor,
+            &ClientRequest::Consume {
+                queue: "redeliver.q".into(),
+                consumer_tag: "alive".into(),
+                prefetch: 0,
+            },
+        )
+        .unwrap();
+    let redelivered = drain(&rx2, 34);
+    let bodies: Vec<i64> = redelivered.iter().map(|d| d.body.as_i64().unwrap()).collect();
+    assert_eq!(bodies, (6..40).collect::<Vec<i64>>(), "redelivery must preserve FIFO order");
+    assert!(redelivered.iter().all(|d| d.redelivered), "all must be marked redelivered");
+    let mut unique = bodies.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    assert_eq!(unique.len(), 34, "each message must be redelivered exactly once");
+    // Nothing further arrives (no duplicates trickling in).
+    assert!(rx2.recv_timeout(Duration::from_millis(200)).is_err());
+    // Ack everything; the broker is fully clean.
+    let tags: Vec<u64> = redelivered.iter().map(|d| d.delivery_tag).collect();
+    broker.handle(survivor, &ClientRequest::AckMulti { delivery_tags: tags }).unwrap();
+    assert_eq!(broker.queue_depth("redeliver.q"), Some(0));
+    assert_eq!(broker.queue_unacked("redeliver.q"), Some(0));
+    assert_eq!(broker.delivery_index_len(), 0);
+}
+
 /// WAL compaction under churn does not lose live messages.
 #[test]
 fn wal_compaction_under_churn() {
