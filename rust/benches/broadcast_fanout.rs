@@ -1,7 +1,14 @@
 //! E3 — broadcast fan-out (paper §I.C: decoupled flow control).
 //!
 //! One sender, N subscribers; measure time from `broadcast_send` until
-//! every subscriber has the message, for N up to 256, filtered and not.
+//! every subscriber has the message — across subscriber counts, filters
+//! and payload sizes. With the zero-copy payload path the sender encodes
+//! once and every subscriber's delivery shares that buffer, so per-payload
+//! cost should be one encode + N decodes, not N re-encodes; MB/s columns
+//! come from the broker's `bytes_in_total`/`bytes_out_total` counters.
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks rounds and the sweep so CI can run this as
+//! a payload-path regression tripwire.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -12,7 +19,9 @@ use kiwi::broker::InprocBroker;
 use kiwi::communicator::{BroadcastFilter, Communicator, RmqCommunicator, RmqConfig};
 use kiwi::wire::Value;
 
-const ROUNDS: usize = 100;
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
 
 struct Gate {
     count: AtomicU64,
@@ -21,7 +30,14 @@ struct Gate {
     cv: Condvar,
 }
 
-fn run_case(subscribers: usize, filtered: bool) -> (Duration, Duration, f64) {
+struct CaseResult {
+    p50: Duration,
+    p99: Duration,
+    deliveries_per_s: f64,
+    egress_mb_s: f64,
+}
+
+fn run_case(subscribers: usize, payload_bytes: usize, filtered: bool, rounds: usize) -> CaseResult {
     let broker = InprocBroker::new();
     let sender = RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap();
     let gate = Arc::new(Gate {
@@ -56,16 +72,19 @@ fn run_case(subscribers: usize, filtered: bool) -> (Duration, Duration, f64) {
         subs.push(comm);
     }
 
+    let payload = Value::map([("data", Value::Bytes(vec![0xAB; payload_bytes]))]);
     let hist = kiwi::metrics::Histogram::new();
+    let bytes_out_before =
+        broker.broker().metrics().counter("broker.bytes_out_total").get();
     let t_all = Instant::now();
-    for round in 0..ROUNDS {
+    for _ in 0..rounds {
         let generation_before = *gate.mx.lock().unwrap();
         let t0 = Instant::now();
         if filtered {
             // One dropped message + one wanted message per round.
-            sender.broadcast_send(Value::I64(round as i64), None, Some("noise.x")).unwrap();
+            sender.broadcast_send(payload.clone(), None, Some("noise.x")).unwrap();
         }
-        sender.broadcast_send(Value::I64(round as i64), None, Some("wanted.x")).unwrap();
+        sender.broadcast_send(payload.clone(), None, Some("wanted.x")).unwrap();
         let mut generation = gate.mx.lock().unwrap();
         while *generation <= generation_before {
             let (g, timeout) =
@@ -75,33 +94,78 @@ fn run_case(subscribers: usize, filtered: bool) -> (Duration, Duration, f64) {
         }
         hist.record_duration(t0.elapsed());
     }
-    let msgs = ROUNDS * subscribers;
-    (
-        Duration::from_nanos(hist.quantile(0.5)),
-        Duration::from_nanos(hist.quantile(0.99)),
-        msgs as f64 / t_all.elapsed().as_secs_f64(),
-    )
+    let elapsed = t_all.elapsed();
+    let egress = broker.broker().metrics().counter("broker.bytes_out_total").get()
+        - bytes_out_before;
+    let msgs = rounds * subscribers;
+    CaseResult {
+        p50: Duration::from_nanos(hist.quantile(0.5)),
+        p99: Duration::from_nanos(hist.quantile(0.99)),
+        deliveries_per_s: msgs as f64 / elapsed.as_secs_f64(),
+        egress_mb_s: egress as f64 / 1e6 / elapsed.as_secs_f64(),
+    }
 }
 
 fn main() {
+    let rounds = if smoke() { 5 } else { 100 };
+    let fan_counts: &[usize] = if smoke() { &[1, 4] } else { &[1, 4, 16, 64, 256] };
+
     let mut table = Table::new(
-        "E3 broadcast fan-out (100 rounds, inproc broker)",
-        &["subscribers", "filtered", "p50 all-received", "p99", "deliveries/s"],
+        "E3 broadcast fan-out (inproc broker)",
+        &[
+            "subscribers",
+            "payload",
+            "filtered",
+            "p50 all-received",
+            "p99",
+            "deliveries/s",
+            "egress MB/s",
+        ],
     );
-    for &n in &[1usize, 4, 16, 64, 256] {
+    for &n in fan_counts {
         for &filtered in &[false, true] {
-            let (p50, p99, thpt) = run_case(n, filtered);
+            let r = run_case(n, 64, filtered, rounds);
             table.row(&[
                 n.to_string(),
+                "64B".into(),
                 filtered.to_string(),
-                fmt_dur(p50),
-                fmt_dur(p99),
-                format!("{thpt:.0}"),
+                fmt_dur(r.p50),
+                fmt_dur(r.p99),
+                format!("{:.0}", r.deliveries_per_s),
+                format!("{:.1}", r.egress_mb_s),
             ]);
         }
     }
+    // Payload sweep: the encode-once win grows with payload size (the
+    // per-subscriber copy used to be a re-encode; now it's a refcount).
+    let sweep: &[(usize, usize, &str)] = if smoke() {
+        &[(4, 64 * 1024, "64KiB")]
+    } else {
+        &[
+            (4, 64 * 1024, "64KiB"),
+            (64, 64 * 1024, "64KiB"),
+            (4, 1024 * 1024, "1MiB"),
+            (64, 1024 * 1024, "1MiB"),
+        ]
+    };
+    let sweep_rounds = if smoke() { 5 } else { 50 };
+    for &(n, size, label) in sweep {
+        let r = run_case(n, size, false, sweep_rounds);
+        table.row(&[
+            n.to_string(),
+            label.into(),
+            "false".into(),
+            fmt_dur(r.p50),
+            fmt_dur(r.p99),
+            format!("{:.0}", r.deliveries_per_s),
+            format!("{:.1}", r.egress_mb_s),
+        ]);
+    }
     table.emit();
     println!("expected shape: all-received latency grows ~linearly with\n\
-              subscribers (one queue copy each); filtering costs one extra\n\
-              dropped delivery per subscriber, not a broker-side scan.");
+              subscribers (one queue copy each, but all copies share one\n\
+              encoded buffer); large payloads cost one encode + N decodes,\n\
+              so egress MB/s holds up where the old path re-encoded per\n\
+              recipient. Filtering costs one extra dropped delivery per\n\
+              subscriber, not a broker-side scan.");
 }

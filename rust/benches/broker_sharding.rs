@@ -11,7 +11,6 @@
 //! one-message-per-lock dispatch.
 
 use std::sync::mpsc::channel;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kiwi::benchutil::Table;
@@ -90,8 +89,8 @@ fn run_case(shards: usize, delivery_batch: usize) -> (f64, Duration) {
                     &ClientRequest::Publish {
                         exchange: "".into(),
                         routing_key: format!("bench.q{q}"),
-                        body: Arc::new(Value::I64(i as i64)),
-                        props: MessageProps::default(),
+                        body: kiwi::wire::Bytes::encode(&Value::I64(i as i64)),
+                        props: MessageProps::default().into(),
                         mandatory: true,
                     },
                 )

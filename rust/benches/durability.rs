@@ -5,7 +5,6 @@
 //! durable queues under each sync policy, plus recovery time and
 //! completeness after a broker restart.
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kiwi::benchutil::Table;
@@ -28,7 +27,8 @@ fn publish_n(broker: &BrokerHandle, durable: bool, n: usize) -> Duration {
             },
         )
         .unwrap();
-    let body = Arc::new(Value::map([("data", Value::Bytes(vec![7u8; 512]))]));
+    // Encoded once; every publish (and WAL record) shares this buffer.
+    let body = kiwi::wire::Bytes::encode(&Value::map([("data", Value::Bytes(vec![7u8; 512]))]));
     let t0 = Instant::now();
     for _ in 0..n {
         broker
@@ -37,8 +37,8 @@ fn publish_n(broker: &BrokerHandle, durable: bool, n: usize) -> Duration {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: "q".into(),
-                    body: Arc::clone(&body),
-                    props: MessageProps { persistent: durable, ..Default::default() },
+                    body: body.clone(),
+                    props: MessageProps { persistent: durable, ..Default::default() }.into(),
                     mandatory: true,
                 },
             )

@@ -5,7 +5,6 @@
 //! silent to its task being requeued, vs the negotiated heartbeat
 //! interval — the spec says ≈ 2×interval; (b) idle heartbeat traffic.
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kiwi::benchutil::{runner::fmt_dur, Table};
@@ -34,8 +33,8 @@ fn detection_latency(heartbeat_ms: u64) -> Duration {
             &ClientRequest::Publish {
                 exchange: "".into(),
                 routing_key: "q".into(),
-                body: Arc::new(Value::str("work")),
-                props: MessageProps::default(),
+                body: kiwi::wire::Bytes::encode(&Value::str("work")),
+                props: MessageProps::default().into(),
                 mandatory: true,
             },
         )

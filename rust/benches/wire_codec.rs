@@ -1,19 +1,31 @@
 //! §Perf — wire codec microbenchmark: encode/decode/clone cost of the
 //! message shapes that dominate the hot path (small control maps, 64 KiB
-//! blob tasks, 12 KiB f32 tensors). Drives the §Perf iteration log in
-//! EXPERIMENTS.md.
+//! blob tasks, 12 KiB f32 tensors), plus a payload-size sweep
+//! (1 KiB / 64 KiB / 1 MiB) that tracks the zero-copy path: one encode
+//! into `Bytes`, O(1) refcount clones for every fanout copy, one decode at
+//! the consumer. Drives the §Perf iteration log in EXPERIMENTS.md; the
+//! sweep CSV is the perf-trajectory artifact the CI smoke job regenerates.
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks the measurement budget so CI can run this
+//! as a regression tripwire rather than a measurement.
 
 use std::time::Duration;
 
 use kiwi::benchutil::{bench, Table};
-use kiwi::wire::{codec, Value};
+use kiwi::wire::{codec, Bytes, Value};
 
 fn throughput_mb(bytes: usize, r: &kiwi::benchutil::BenchResult) -> String {
     let mb = bytes as f64 * r.iterations as f64 / 1e6;
     format!("{:.0} MB/s", mb / r.total.as_secs_f64())
 }
 
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 fn main() {
+    let target = if smoke() { Duration::from_millis(20) } else { Duration::from_millis(300) };
+
     let small = Value::map([
         ("op", Value::str("publish")),
         ("req_id", Value::I64(12345)),
@@ -27,7 +39,6 @@ fn main() {
         "Perf: wire codec microbench",
         &["case", "op", "mean", "throughput"],
     );
-    let target = Duration::from_millis(300);
     for (name, value, payload_bytes) in [
         ("small map", &small, 64usize),
         ("64KiB bytes", &blob, 64 * 1024),
@@ -63,4 +74,57 @@ fn main() {
         ]);
     }
     table.emit();
+
+    // Payload-size sweep: the old per-recipient cost (value clone + encode)
+    // vs the zero-copy path's per-recipient cost (a Bytes refcount bump).
+    let mut sweep = Table::new(
+        "Perf: payload path sweep",
+        &["payload", "op", "mean", "throughput"],
+    );
+    for (label, size) in [("1KiB", 1024usize), ("64KiB", 64 * 1024), ("1MiB", 1024 * 1024)] {
+        let value = Value::map([("data", Value::Bytes(vec![0xCD; size]))]);
+        let body = Bytes::encode(&value);
+
+        let r = bench("encode_once", target, || {
+            std::hint::black_box(Bytes::encode(std::hint::black_box(&value)));
+        });
+        sweep.row(&[
+            label.into(),
+            "encode-once".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(size, &r),
+        ]);
+        let r = bench("bytes_clone", target, || {
+            std::hint::black_box(std::hint::black_box(&body).clone());
+        });
+        sweep.row(&[
+            label.into(),
+            "per-recipient share (Bytes clone)".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(size, &r),
+        ]);
+        let r = bench("value_clone_encode", target, || {
+            let v = std::hint::black_box(&value).clone();
+            std::hint::black_box(codec::encode_to_vec(&v));
+        });
+        sweep.row(&[
+            label.into(),
+            "per-recipient re-encode (old path)".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(size, &r),
+        ]);
+        let r = bench("decode_at_consumer", target, || {
+            std::hint::black_box(std::hint::black_box(&body).decode().unwrap());
+        });
+        sweep.row(&[
+            label.into(),
+            "decode-at-consumer".into(),
+            format!("{:.2?}", r.mean()),
+            throughput_mb(size, &r),
+        ]);
+    }
+    sweep.emit();
+    println!("expected shape: encode-once and decode-at-consumer scale with\n\
+              payload size; the per-recipient share is O(1) regardless of\n\
+              size — that flat line is the fanout win.");
 }

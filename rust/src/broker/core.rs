@@ -33,13 +33,13 @@ use std::time::Instant;
 
 use crate::broker::dispatch::Dispatcher;
 use crate::broker::persistence::{NoopPersister, Persister, RecoveredState};
-use crate::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+use crate::broker::protocol::{ClientRequest, EncodedProps, QueueOptions, ServerMsg};
 use crate::broker::queue::{Consumer, Queue, QueuedMessage};
 use crate::broker::router::Router;
 use crate::broker::shard::ShardSet;
 use crate::error::{Error, Result};
 use crate::metrics::{Counter, Registry};
-use crate::wire::Value;
+use crate::wire::{Bytes, Value};
 
 /// Identifies one client connection to the broker.
 pub type ConnectionId = u64;
@@ -128,6 +128,8 @@ pub struct BrokerCore {
     /// Pre-resolved hot-path counters (skip the registry name map).
     ctr_published: Arc<Counter>,
     ctr_acked: Arc<Counter>,
+    /// Ingress payload bytes (props + body) accepted by `Publish`.
+    ctr_bytes_in: Arc<Counter>,
 }
 
 impl Default for BrokerHandle {
@@ -181,6 +183,7 @@ impl BrokerHandle {
         let dispatcher = Dispatcher::new(config.delivery_batch, shards.len(), &metrics);
         let ctr_published = metrics.counter("broker.published");
         let ctr_acked = metrics.counter("broker.acked");
+        let ctr_bytes_in = metrics.counter("broker.bytes_in_total");
         BrokerHandle {
             core: Arc::new(BrokerCore {
                 router,
@@ -197,6 +200,7 @@ impl BrokerHandle {
                 metrics,
                 ctr_published,
                 ctr_acked,
+                ctr_bytes_in,
             }),
         }
     }
@@ -395,7 +399,7 @@ impl BrokerHandle {
                 let n = self.publish_message(
                     exchange,
                     routing_key,
-                    Arc::clone(body),
+                    body.clone(),
                     props.clone(),
                     dispatches,
                 )?;
@@ -793,12 +797,15 @@ impl BrokerHandle {
     /// Route and enqueue. Returns the number of queues the message reached.
     /// Durable targets are WAL-logged as one group-committed batch per
     /// shard *before* enqueueing (write-AHEAD).
+    ///
+    /// The body stays the publisher's encoded buffer end-to-end: each queue
+    /// copy is a refcount bump of `body`/`props`, never a re-encode.
     fn publish_message(
         &self,
         exchange: &str,
         routing_key: &str,
-        body: Arc<Value>,
-        props: crate::broker::protocol::MessageProps,
+        body: Bytes,
+        props: EncodedProps,
         dispatches: &mut Vec<String>,
     ) -> Result<usize> {
         let core = &*self.core;
@@ -806,6 +813,8 @@ impl BrokerHandle {
         if targets.is_empty() {
             return Ok(0);
         }
+        let exchange: Arc<str> = Arc::from(exchange);
+        let routing_key: Arc<str> = Arc::from(routing_key);
         let now = Instant::now();
         // Group targets by shard so each shard is locked exactly once.
         let mut by_shard: Vec<(usize, Vec<&str>)> = Vec::new();
@@ -827,9 +836,9 @@ impl BrokerHandle {
                     qname.to_string(),
                     QueuedMessage {
                         msg_id,
-                        exchange: exchange.to_string(),
-                        routing_key: routing_key.to_string(),
-                        body: Arc::clone(&body),
+                        exchange: Arc::clone(&exchange),
+                        routing_key: Arc::clone(&routing_key),
+                        body: body.clone(),
                         props: props.clone(),
                         deadline: None,
                         redelivered: false,
@@ -872,6 +881,12 @@ impl BrokerHandle {
                 routed += 1;
             }
         }
+        // Counted only after at least one queue actually accepted a copy:
+        // unroutable, raced-delete and WAL-failed publishes are not
+        // "accepted ingress".
+        if routed > 0 {
+            core.ctr_bytes_in.add((body.len() + props.bytes().len()) as u64);
+        }
         Ok(routed)
     }
 }
@@ -909,8 +924,8 @@ mod tests {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: queue.into(),
-                    body: Arc::new(body),
-                    props: MessageProps::default(),
+                    body: Bytes::encode(&body),
+                    props: MessageProps::default().into(),
                     mandatory: true,
                 },
             )
@@ -961,7 +976,7 @@ mod tests {
         publish(&broker, conn, "tasks", Value::str("do-work"));
         consume(&broker, conn, "tasks", "c1", 1);
         let d = recv_delivery(&rx);
-        assert_eq!(*d.body, Value::str("do-work"));
+        assert_eq!(d.body.decode().unwrap(), Value::str("do-work"));
         assert!(!d.redelivered);
         broker.handle(conn, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
         assert_eq!(broker.queue_depth("tasks"), Some(0));
@@ -978,8 +993,8 @@ mod tests {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: "nowhere".into(),
-                    body: Arc::new(Value::Null),
-                    props: MessageProps::default(),
+                    body: Bytes::encode(&Value::Null),
+                    props: MessageProps::default().into(),
                     mandatory: true,
                 },
             )
@@ -996,8 +1011,8 @@ mod tests {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: "nowhere".into(),
-                    body: Arc::new(Value::Null),
-                    props: MessageProps::default(),
+                    body: Bytes::encode(&Value::Null),
+                    props: MessageProps::default().into(),
                     mandatory: false,
                 },
             )
@@ -1021,7 +1036,7 @@ mod tests {
         consume(&broker, conn2, "tasks", "c2", 0);
         broker.disconnect(conn1);
         let d2 = recv_delivery(&rx2);
-        assert_eq!(*d2.body, Value::str("t1"));
+        assert_eq!(d2.body.decode().unwrap(), Value::str("t1"));
         assert!(d2.redelivered, "requeued message must be marked redelivered");
     }
 
@@ -1080,8 +1095,8 @@ mod tests {
                 &ClientRequest::Publish {
                     exchange: "broadcast".into(),
                     routing_key: "".into(),
-                    body: Arc::new(Value::str("hello")),
-                    props: MessageProps::default(),
+                    body: Bytes::encode(&Value::str("hello")),
+                    props: MessageProps::default().into(),
                     mandatory: true,
                 },
             )
@@ -1092,6 +1107,76 @@ mod tests {
         let tags: Vec<String> =
             (0..2).map(|_| recv_delivery(&rx).consumer_tag).collect();
         assert!(tags.contains(&"c1".to_string()) && tags.contains(&"c2".to_string()));
+    }
+
+    #[test]
+    fn fanout_deliveries_share_the_publishers_buffer() {
+        // The encode-once invariant, pinned at the broker boundary: one
+        // publish fanned out to N queues/consumers delivers N bodies that
+        // are all refcounted views of the publisher's single encode — and
+        // the cached props encoding is shared the same way.
+        let broker = BrokerHandle::new();
+        let (tx, rx) = channel();
+        let conn = broker.connect("fan", 0, tx);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::ExchangeDeclare {
+                    exchange: "fan".into(),
+                    kind: ExchangeKind::Fanout,
+                },
+            )
+            .unwrap();
+        const N: usize = 8;
+        for i in 0..N {
+            let q = format!("fan.q{i}");
+            declare(&broker, conn, &q);
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::Bind {
+                        exchange: "fan".into(),
+                        queue: q.clone(),
+                        routing_key: "".into(),
+                    },
+                )
+                .unwrap();
+            consume(&broker, conn, &q, &format!("c{i}"), 0);
+        }
+        let body = Bytes::encode(&Value::Bytes(vec![0xEE; 64 * 1024]));
+        let props: crate::broker::protocol::EncodedProps =
+            MessageProps { priority: 2, ..Default::default() }.into();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "fan".into(),
+                    routing_key: "".into(),
+                    body: body.clone(),
+                    props: props.clone(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+        let deliveries = drain_deliveries(&rx);
+        assert_eq!(deliveries.len(), N);
+        for d in &deliveries {
+            assert!(
+                Bytes::same_buffer(&d.body, &body),
+                "every fanout delivery must share the single publish-side encode"
+            );
+            assert!(
+                Bytes::same_buffer(d.props.bytes(), props.bytes()),
+                "props must be encoded once and shared across deliveries"
+            );
+        }
+        // Byte accounting: one ingress copy, N egress copies.
+        let ingress = (body.len() + props.bytes().len()) as u64;
+        assert_eq!(broker.metrics().counter("broker.bytes_in_total").get(), ingress);
+        assert_eq!(
+            broker.metrics().counter("broker.bytes_out_total").get(),
+            ingress * N as u64
+        );
     }
 
     #[test]
@@ -1241,11 +1326,13 @@ mod tests {
         for msg in rx.try_iter() {
             match msg {
                 ServerMsg::Ok { .. } | ServerMsg::Err { .. } => {}
-                ServerMsg::Deliver(d) => seen.push(d.body.as_i64().unwrap()),
+                ServerMsg::Deliver(d) => seen.push(d.body.decode().unwrap().as_i64().unwrap()),
                 ServerMsg::DeliverBatch(ds) => {
                     assert!(ds.len() <= 16, "batch exceeds configured bound");
                     batches += 1;
-                    seen.extend(ds.iter().map(|d| d.body.as_i64().unwrap()));
+                    seen.extend(
+                        ds.iter().map(|d| d.body.decode().unwrap().as_i64().unwrap()),
+                    );
                 }
                 other => panic!("unexpected {other:?}"),
             }

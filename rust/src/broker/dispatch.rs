@@ -21,6 +21,15 @@ use crate::broker::protocol::{Delivery, ServerMsg};
 use crate::broker::shard::ShardSet;
 use crate::metrics::{Counter, Registry};
 
+/// One connection's share of a drained batch, with its payload byte count
+/// (egress bytes are only booked when the group's send lands).
+struct Group {
+    conn: u64,
+    deliveries: Vec<Delivery>,
+    tags: Vec<u64>,
+    bytes: u64,
+}
+
 /// The delivery pump. Holds pre-resolved per-shard metric handles so the
 /// hot path never touches the registry's name map.
 pub struct Dispatcher {
@@ -28,6 +37,8 @@ pub struct Dispatcher {
     shard_delivered: Vec<Arc<Counter>>,
     shard_batches: Vec<Arc<Counter>>,
     delivered: Arc<Counter>,
+    /// Egress payload bytes (props + body) handed to consumers.
+    bytes_out: Arc<Counter>,
 }
 
 impl Dispatcher {
@@ -41,6 +52,7 @@ impl Dispatcher {
                 .map(|i| metrics.counter(&format!("broker.shard.{i}.batches")))
                 .collect(),
             delivered: metrics.counter("broker.delivered"),
+            bytes_out: metrics.counter("broker.bytes_out_total"),
         }
     }
 
@@ -59,6 +71,7 @@ impl Dispatcher {
             let expired_ids;
             let durable;
             let mut send_failed = false;
+            let mut batch_bytes = 0u64;
             {
                 let mut st = shard.lock();
                 let (queues, delivery_index, conns, mut tags) = st.for_dispatch();
@@ -71,28 +84,41 @@ impl Dispatcher {
                 };
                 assigned = assignments.len();
                 // Group the batch per connection, preserving per-connection
-                // assignment order.
-                let mut groups: Vec<(u64, Vec<Delivery>, Vec<u64>)> = Vec::new();
+                // assignment order. Each group tracks its payload bytes so
+                // egress is only counted for sends that actually landed
+                // (failed sends are nacked back and redelivered later —
+                // counting them here would double-book those bytes).
+                let mut groups: Vec<Group> = Vec::new();
                 for a in assignments {
                     delivery_index.insert(a.delivery_tag, qname.to_string());
+                    let bytes = (a.message.body.len() + a.message.props.bytes().len()) as u64;
+                    // Refcount bumps only — the body/props buffers are the
+                    // publisher's original encode, shared with the queue's
+                    // unacked copy and every other fanout recipient.
                     let delivery = Delivery {
                         consumer_tag: a.consumer_tag,
                         delivery_tag: a.delivery_tag,
                         redelivered: a.message.redelivered,
                         exchange: a.message.exchange.clone(),
                         routing_key: a.message.routing_key.clone(),
-                        body: Arc::clone(&a.message.body),
+                        body: a.message.body.clone(),
                         props: a.message.props.clone(),
                     };
-                    match groups.iter_mut().find(|(c, _, _)| *c == a.connection) {
-                        Some((_, ds, ts)) => {
-                            ds.push(delivery);
-                            ts.push(a.delivery_tag);
+                    match groups.iter_mut().find(|g| g.conn == a.connection) {
+                        Some(g) => {
+                            g.deliveries.push(delivery);
+                            g.tags.push(a.delivery_tag);
+                            g.bytes += bytes;
                         }
-                        None => groups.push((a.connection, vec![delivery], vec![a.delivery_tag])),
+                        None => groups.push(Group {
+                            conn: a.connection,
+                            deliveries: vec![delivery],
+                            tags: vec![a.delivery_tag],
+                            bytes,
+                        }),
                     }
                 }
-                for (conn, mut deliveries, tags_of) in groups {
+                for Group { conn, mut deliveries, tags: tags_of, bytes } in groups {
                     let sent = match conns.get(&conn) {
                         Some(entry) => {
                             if deliveries.len() == 1 {
@@ -103,7 +129,9 @@ impl Dispatcher {
                         }
                         None => false,
                     };
-                    if !sent {
+                    if sent {
+                        batch_bytes += bytes;
+                    } else {
                         // The connection's receiver is gone (session tearing
                         // down); the disconnect path will requeue whatever it
                         // still holds — nack these back right away so nothing
@@ -127,6 +155,7 @@ impl Dispatcher {
             }
             if assigned > 0 {
                 self.delivered.add(assigned as u64);
+                self.bytes_out.add(batch_bytes);
                 self.shard_delivered[shard.index()].add(assigned as u64);
                 self.shard_batches[shard.index()].inc();
             }

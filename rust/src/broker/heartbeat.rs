@@ -75,7 +75,6 @@ mod tests {
     use crate::broker::MessageProps;
     use crate::wire::Value;
     use std::sync::mpsc::channel;
-    use std::sync::Arc as StdArc;
 
     #[test]
     fn silent_connection_evicted_after_two_intervals() {
@@ -99,8 +98,8 @@ mod tests {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: "q".into(),
-                    body: StdArc::new(Value::str("work")),
-                    props: MessageProps::default(),
+                    body: crate::wire::Bytes::encode(&Value::str("work")),
+                    props: MessageProps::default().into(),
                     mandatory: true,
                 },
             )

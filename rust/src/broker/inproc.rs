@@ -75,15 +75,15 @@ mod tests {
     fn inproc_broker_serves_protocol() {
         let broker = InprocBroker::new();
         let link = broker.connect();
-        link.send(&Frame::data(
+        link.send(
             &ClientRequest::QueueDeclare { queue: "q".into(), options: QueueOptions::default() }
-                .to_value(1),
-        ))
+                .to_frame(1),
+        )
         .unwrap();
         let f = link.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(f.frame_type, FrameType::Data);
         assert!(matches!(
-            ServerMsg::from_value(&f.value().unwrap()).unwrap(),
+            ServerMsg::from_frame(&f).unwrap(),
             ServerMsg::Ok { req_id: 1, .. }
         ));
         link.send(&Frame::goodbye("done")).unwrap();
@@ -94,30 +94,30 @@ mod tests {
         let broker = InprocBroker::new();
         let a = broker.connect();
         let b = broker.connect();
-        a.send(&Frame::data(
+        a.send(
             &ClientRequest::QueueDeclare {
                 queue: "shared".into(),
                 options: QueueOptions::default(),
             }
-            .to_value(1),
-        ))
+            .to_frame(1),
+        )
         .unwrap();
         a.recv_timeout(Duration::from_secs(2)).unwrap();
         // Client B publishes to the queue A declared.
-        b.send(&Frame::data(
+        b.send(
             &ClientRequest::Publish {
                 exchange: "".into(),
                 routing_key: "shared".into(),
-                body: Arc::new(Value::str("x")),
+                body: crate::wire::Bytes::encode(&Value::str("x")),
                 props: Default::default(),
                 mandatory: true,
             }
-            .to_value(1),
-        ))
+            .to_frame(1),
+        )
         .unwrap();
         let f = b.recv_timeout(Duration::from_secs(2)).unwrap();
         assert!(matches!(
-            ServerMsg::from_value(&f.value().unwrap()).unwrap(),
+            ServerMsg::from_frame(&f).unwrap(),
             ServerMsg::Ok { .. }
         ));
         assert_eq!(broker.broker().queue_depth("shared"), Some(1));

@@ -42,5 +42,5 @@ pub mod shard;
 
 pub use self::core::{BrokerConfig, BrokerCore, BrokerHandle, ConnectionId};
 pub use inproc::InprocBroker;
-pub use protocol::{ClientRequest, Delivery, MessageProps, ServerMsg};
+pub use protocol::{ClientRequest, Delivery, EncodedProps, MessageProps, ServerMsg};
 pub use server::BrokerServer;

@@ -10,6 +10,11 @@
 //! not logged, never half.
 //!
 //! Record layout: `u32-LE len | u32-LE checksum | u8 kind | payload`.
+//! A publish record's payload is a codec-encoded envelope (queue, ids,
+//! declared lengths) followed by the message's already-encoded props and
+//! body bytes, appended verbatim — the WAL never re-encodes a payload, and
+//! recovery hands back refcounted views of the record buffer that are
+//! byte-identical to what the publisher encoded.
 //! The log is compacted (rewritten with only live records) once the dead
 //! fraction passes a threshold.
 
@@ -17,13 +22,12 @@ use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 use std::time::Instant;
 
-use crate::broker::protocol::{MessageProps, QueueOptions};
+use crate::broker::protocol::{EncodedProps, MessageProps, QueueOptions};
 use crate::broker::queue::QueuedMessage;
 use crate::error::{Error, Result};
-use crate::wire::{codec, Value};
+use crate::wire::{codec, Bytes, Value};
 
 const KIND_PUBLISH: u8 = 1;
 const KIND_RETIRE: u8 = 2;
@@ -124,46 +128,121 @@ impl RecoveredState {
     }
 }
 
-fn checksum(kind: u8, payload: &[u8]) -> u32 {
-    // FNV-1a over kind byte + payload; cheap and adequate for detecting
-    // torn writes (not adversarial corruption).
+fn checksum_parts(kind: u8, parts: &[&[u8]]) -> u32 {
+    // FNV-1a over kind byte + payload parts; cheap and adequate for
+    // detecting torn writes (not adversarial corruption). Runs over the
+    // parts in wire order, so it equals the checksum of the concatenation.
     let mut h: u32 = 0x811C_9DC5;
     h ^= u32::from(kind);
     h = h.wrapping_mul(0x0100_0193);
-    for &b in payload {
-        h ^= u32::from(b);
-        h = h.wrapping_mul(0x0100_0193);
+    for part in parts {
+        for &b in *part {
+            h ^= u32::from(b);
+            h = h.wrapping_mul(0x0100_0193);
+        }
     }
     h
 }
 
-fn msg_to_value(queue: &str, msg: &QueuedMessage) -> Value {
+fn checksum(kind: u8, payload: &[u8]) -> u32 {
+    checksum_parts(kind, &[payload])
+}
+
+/// Write one record: header, then each payload part verbatim — no
+/// intermediate assembly buffer, no re-encode of props/body bytes.
+fn write_record<W: Write>(w: &mut W, kind: u8, parts: &[&[u8]]) -> Result<()> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
+    let mut header = [0u8; 9];
+    header[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    header[4..8].copy_from_slice(&checksum_parts(kind, parts).to_le_bytes());
+    header[8] = kind;
+    w.write_all(&header)?;
+    for p in parts {
+        w.write_all(p)?;
+    }
+    Ok(())
+}
+
+/// Envelope of a publish record; the props/body bytes trail it verbatim.
+fn publish_envelope(queue: &str, msg: &QueuedMessage) -> Value {
     Value::map([
         ("queue", Value::str(queue)),
         ("msg_id", Value::from(msg.msg_id)),
-        ("exchange", Value::str(&msg.exchange)),
-        ("routing_key", Value::str(&msg.routing_key)),
-        ("body", (*msg.body).clone()),
-        ("props", msg.props.to_value()),
+        ("exchange", Value::str(msg.exchange.as_ref())),
+        ("routing_key", Value::str(msg.routing_key.as_ref())),
         ("redelivered", Value::Bool(msg.redelivered)),
+        ("props_len", Value::from(msg.props.bytes().len())),
+        ("body_len", Value::from(msg.body.len())),
     ])
 }
 
-fn msg_from_value(v: &Value) -> Result<(String, QueuedMessage)> {
-    Ok((
-        v.get_str("queue")?.to_string(),
+fn write_publish_record<W: Write>(w: &mut W, queue: &str, msg: &QueuedMessage) -> Result<()> {
+    let env = codec::encode_to_vec(&publish_envelope(queue, msg));
+    write_record(
+        w,
+        KIND_PUBLISH,
+        &[env.as_slice(), msg.props.bytes().as_slice(), msg.body.as_slice()],
+    )
+}
+
+/// Parse a publish record. The returned message's props/body are
+/// refcounted views of the record buffer — byte-identical to the
+/// publisher's original encoding, with no decode/re-encode round trip.
+///
+/// `Ok(None)` means the envelope is not decodable codec data — the
+/// corrupt-tail case, which replay treats like any other torn record
+/// (truncate there). Schema errors on a *decodable* envelope propagate as
+/// `Err` so recovery fails loudly instead of silently dropping everything
+/// after the record.
+fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage)>> {
+    let buf = Bytes::from_vec(payload);
+    let (env, consumed) = match codec::decode_prefix(buf.as_slice()) {
+        Ok((env, rest)) => {
+            let consumed = buf.len() - rest.len();
+            (env, consumed)
+        }
+        Err(_) => return Ok(None),
+    };
+    if env.get_opt("props_len").is_none() {
+        // Legacy (pre-zero-copy) record: body/props are inline Value
+        // fields (the body may be Null, so key detection on the absent
+        // `props_len` alone). Migrate on replay — re-encode once here so
+        // an upgraded broker keeps its durable messages; compaction
+        // rewrites the log in the new format.
+        return Ok(Some((
+            env.get_str("queue")?.to_string(),
+            QueuedMessage {
+                msg_id: env.get_u64("msg_id")?,
+                exchange: env.get_str("exchange")?.into(),
+                routing_key: env.get_str("routing_key")?.into(),
+                body: Bytes::encode(env.get("body")?),
+                props: EncodedProps::new(MessageProps::from_value(env.get("props")?)?),
+                deadline: None,
+                redelivered: env.get_bool("redelivered")?,
+            },
+        )));
+    }
+    let props_len = env.get_u64("props_len")? as usize;
+    let body_len = env.get_u64("body_len")? as usize;
+    if consumed + props_len + body_len != buf.len() {
+        return Err(Error::Persistence("publish record section lengths disagree".into()));
+    }
+    let props = EncodedProps::from_wire(buf.slice(consumed..consumed + props_len))?;
+    let body = buf.slice(consumed + props_len..buf.len());
+    Ok(Some((
+        env.get_str("queue")?.to_string(),
         QueuedMessage {
-            msg_id: v.get_u64("msg_id")?,
-            exchange: v.get_str("exchange")?.to_string(),
-            routing_key: v.get_str("routing_key")?.to_string(),
-            body: Arc::new(v.get("body")?.clone()),
-            props: MessageProps::from_value(v.get("props")?)?,
+            msg_id: env.get_u64("msg_id")?,
+            exchange: env.get_str("exchange")?.into(),
+            routing_key: env.get_str("routing_key")?.into(),
+            body,
+            props,
             // TTLs restart on recovery (documented in DESIGN.md): the
             // deadline is re-derived from props on first publish/assign.
             deadline: None,
-            redelivered: v.get_bool("redelivered")?,
+            redelivered: env.get_bool("redelivered")?,
         },
-    ))
+    )))
 }
 
 impl WalPersister {
@@ -191,12 +270,15 @@ impl WalPersister {
 
     fn append(&mut self, kind: u8, payload: &Value) -> Result<()> {
         let bytes = codec::encode_to_vec(payload);
-        let mut header = [0u8; 9];
-        header[..4].copy_from_slice(&(bytes.len() as u32).to_le_bytes());
-        header[4..8].copy_from_slice(&checksum(kind, &bytes).to_le_bytes());
-        header[8] = kind;
-        self.writer.write_all(&header)?;
-        self.writer.write_all(&bytes)?;
+        write_record(&mut self.writer, kind, &[bytes.as_slice()])?;
+        self.total += 1;
+        Ok(())
+    }
+
+    /// Append one publish record: the message's cached props/body bytes go
+    /// to the log verbatim (the single encode happened at the publisher).
+    fn append_publish(&mut self, queue: &str, msg: &QueuedMessage) -> Result<()> {
+        write_publish_record(&mut self.writer, queue, msg)?;
         self.total += 1;
         Ok(())
     }
@@ -253,7 +335,7 @@ impl WalPersister {
             }
             for (q, msgs) in &self.shadow.messages {
                 for m in msgs {
-                    w.append(KIND_PUBLISH, &msg_to_value(q, m))?;
+                    w.append_publish(q, m)?;
                 }
             }
             w.writer.flush()?;
@@ -275,19 +357,17 @@ struct WalWriter {
 impl WalWriter {
     fn append(&mut self, kind: u8, payload: &Value) -> Result<()> {
         let bytes = codec::encode_to_vec(payload);
-        let mut header = [0u8; 9];
-        header[..4].copy_from_slice(&(bytes.len() as u32).to_le_bytes());
-        header[4..8].copy_from_slice(&checksum(kind, &bytes).to_le_bytes());
-        header[8] = kind;
-        self.writer.write_all(&header)?;
-        self.writer.write_all(&bytes)?;
-        Ok(())
+        write_record(&mut self.writer, kind, &[bytes.as_slice()])
+    }
+
+    fn append_publish(&mut self, queue: &str, msg: &QueuedMessage) -> Result<()> {
+        write_publish_record(&mut self.writer, queue, msg)
     }
 }
 
 impl Persister for WalPersister {
     fn record_publish(&mut self, queue: &str, msg: &QueuedMessage) -> Result<()> {
-        self.append(KIND_PUBLISH, &msg_to_value(queue, msg))?;
+        self.append_publish(queue, msg)?;
         self.live += 1;
         self.shadow.messages.entry(queue.to_string()).or_default().push(msg.clone());
         self.commit_publishes(1)
@@ -298,7 +378,7 @@ impl Persister for WalPersister {
             return Ok(());
         }
         for (queue, msg) in entries.iter().copied() {
-            self.append(KIND_PUBLISH, &msg_to_value(queue, msg))?;
+            self.append_publish(queue, msg)?;
             self.live += 1;
             self.shadow.messages.entry(queue.to_string()).or_default().push(msg.clone());
         }
@@ -391,19 +471,35 @@ pub fn replay(path: &Path) -> Result<RecoveredState> {
             log::warn!("wal: checksum mismatch at offset {offset}; truncating");
             break;
         }
+        let record_offset = offset;
+        offset += 9 + len as u64;
+        if kind == KIND_PUBLISH {
+            // Publish records are envelope + raw props/body sections; the
+            // recovered message shares the record buffer byte-for-byte.
+            // A torn/undecodable envelope truncates the replay; a decodable
+            // but schema-invalid record is a hard error (`?`), never silent
+            // loss of everything after it.
+            match read_publish_record(payload)? {
+                Some((queue, msg)) => {
+                    state.messages.entry(queue).or_default().push(msg);
+                }
+                None => {
+                    log::warn!(
+                        "wal: undecodable publish record at offset {record_offset}; truncating"
+                    );
+                    break;
+                }
+            }
+            continue;
+        }
         let v = match codec::decode(&payload) {
             Ok(v) => v,
             Err(_) => {
-                log::warn!("wal: undecodable record at offset {offset}; truncating");
+                log::warn!("wal: undecodable record at offset {record_offset}; truncating");
                 break;
             }
         };
-        offset += 9 + len as u64;
         match kind {
-            KIND_PUBLISH => {
-                let (queue, msg) = msg_from_value(&v)?;
-                state.messages.entry(queue).or_default().push(msg);
-            }
             KIND_RETIRE => {
                 let queue = v.get_str("queue")?;
                 let msg_id = v.get_u64("msg_id")?;
@@ -452,10 +548,10 @@ mod tests {
     fn msg(id: u64, body: &str) -> QueuedMessage {
         QueuedMessage {
             msg_id: id,
-            exchange: String::new(),
+            exchange: "".into(),
             routing_key: "tasks".into(),
-            body: Arc::new(Value::str(body)),
-            props: MessageProps { persistent: true, ..Default::default() },
+            body: Bytes::encode(&Value::str(body)),
+            props: MessageProps { persistent: true, ..Default::default() }.into(),
             deadline: None,
             redelivered: false,
         }
@@ -478,7 +574,7 @@ mod tests {
         let msgs = &rec.messages["tasks"];
         assert_eq!(msgs.len(), 2);
         assert_eq!(msgs[0].msg_id, 1);
-        assert_eq!(*msgs[1].body, Value::str("b"));
+        assert_eq!(msgs[1].body.decode().unwrap(), Value::str("b"));
         std::fs::remove_file(&path).ok();
     }
 
@@ -636,9 +732,14 @@ mod tests {
     fn message_props_survive_roundtrip() {
         let path = temp_wal();
         let mut m = msg(7, "payload");
-        m.props.correlation_id = Some("corr".into());
-        m.props.priority = 5;
-        m.props.headers.insert("sender".into(), Value::str("node-1"));
+        m.props = MessageProps {
+            persistent: true,
+            correlation_id: Some("corr".into()),
+            priority: 5,
+            headers: [("sender".to_string(), Value::str("node-1"))].into_iter().collect(),
+            ..Default::default()
+        }
+        .into();
         m.redelivered = true;
         {
             let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
@@ -649,6 +750,82 @@ mod tests {
         let got = &rec.messages["q"][0];
         assert_eq!(got.props, m.props);
         assert!(got.redelivered);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_inline_publish_records_migrate_on_replay() {
+        // Pre-zero-copy WALs carried body/props as inline Value fields.
+        // Replay must migrate them (one recovery-time re-encode), not
+        // refuse to start or silently truncate.
+        let path = temp_wal();
+        {
+            let file = File::create(&path).unwrap();
+            let mut w = BufWriter::new(file);
+            let legacy = Value::map([
+                ("queue", Value::str("old")),
+                ("msg_id", Value::from(3u64)),
+                ("exchange", Value::str("")),
+                ("routing_key", Value::str("old")),
+                ("body", Value::str("carried-over")),
+                ("props", Value::map([("priority", Value::I64(4))])),
+                ("redelivered", Value::Bool(false)),
+            ]);
+            let bytes = codec::encode_to_vec(&legacy);
+            write_record(&mut w, KIND_PUBLISH, &[bytes.as_slice()]).unwrap();
+            w.flush().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        let m = &rec.messages["old"][0];
+        assert_eq!(m.msg_id, 3);
+        assert_eq!(m.body.decode().unwrap(), Value::str("carried-over"));
+        assert_eq!(m.props.priority, 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn recovered_payload_bytes_are_byte_identical() {
+        // The WAL half of the encode-once invariant: what recovery hands
+        // back is the publisher's encoding, bit for bit — props and body —
+        // with no decode → re-encode round trip in between.
+        let path = temp_wal();
+        let m = {
+            let mut m = msg(1, "x");
+            m.body = Bytes::encode(&Value::map([
+                ("data", Value::Bytes((0..=255u8).cycle().take(64 * 1024).collect())),
+                ("tensor", Value::F32s(vec![1.5; 1024])),
+            ]));
+            m.props = MessageProps {
+                persistent: true,
+                priority: 9,
+                headers: [("k".to_string(), Value::str("v"))].into_iter().collect(),
+                ..Default::default()
+            }
+            .into();
+            m
+        };
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.record_publish("q", &m).unwrap();
+            wal.sync().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        let got = &rec.messages["q"][0];
+        assert_eq!(got.body.as_slice(), m.body.as_slice(), "body bytes must be identical");
+        assert_eq!(
+            got.props.bytes().as_slice(),
+            m.props.bytes().as_slice(),
+            "props bytes must be identical"
+        );
+        // And the record buffer is shared, not copied per field.
+        assert!(Bytes::same_buffer(&got.body, got.props.bytes()));
+        // Compaction rewrites from the shadow — still byte-identical.
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.compact().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(rec.messages["q"][0].body.as_slice(), m.body.as_slice());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -1,15 +1,24 @@
-//! Client ⇄ broker protocol messages and their [`Value`] encodings.
+//! Client ⇄ broker protocol messages and their wire encodings.
 //!
 //! Every request carries a client-chosen `req_id`; the broker answers with
 //! `Ok {req_id, ..}` or `Err {req_id, ..}`. Deliveries are unsolicited
 //! (push) messages tied to a consumer tag, exactly like AMQP's
 //! `basic.deliver`.
+//!
+//! ## Encode-once bodies
+//!
+//! `Publish`, `Deliver` and `DeliverBatch` carry the message body (and the
+//! message props) as opaque [`Bytes`] *sections* appended after the frame's
+//! envelope, not as part of its value tree. The publisher encodes the body
+//! exactly once; the broker routes on the envelope and props alone and
+//! never decodes — or re-encodes — the payload. Consumers decode lazily.
 
 use std::collections::BTreeMap;
+use std::ops::Deref;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::wire::Value;
+use crate::wire::{Bytes, Frame, SectionCursor, Value};
 
 /// Message properties (the AMQP `basic.properties` subset kiwiPy uses).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -29,6 +38,9 @@ pub struct MessageProps {
 }
 
 impl MessageProps {
+    /// Build the value tree for encoding. Clones the headers map — which is
+    /// why the stack carries [`EncodedProps`] (encoded exactly once per
+    /// message) instead of calling this per delivery or per WAL record.
     pub fn to_value(&self) -> Value {
         let mut m = BTreeMap::new();
         if let Some(c) = &self.correlation_id {
@@ -73,6 +85,68 @@ impl MessageProps {
             p.headers = h.as_map()?.clone();
         }
         Ok(p)
+    }
+}
+
+/// [`MessageProps`] paired with their canonical encoding.
+///
+/// The encoding is produced exactly once — at the publisher, or captured
+/// verbatim off the wire — and then shared by refcount across queue
+/// copies, every fanout delivery and every WAL record. This is what kills
+/// the per-delivery `headers.clone()` that used to run on each encode.
+#[derive(Clone, Debug)]
+pub struct EncodedProps {
+    props: Arc<MessageProps>,
+    bytes: Bytes,
+}
+
+impl EncodedProps {
+    /// Encode `props` (the single encode of these props' lifetime).
+    pub fn new(props: MessageProps) -> Self {
+        let bytes = Bytes::encode(&props.to_value());
+        EncodedProps { props: Arc::new(props), bytes }
+    }
+
+    /// Adopt canonical bytes received off the wire — decodes for local
+    /// field access, re-encodes nothing.
+    pub fn from_wire(bytes: Bytes) -> Result<Self> {
+        let props = MessageProps::from_value(&bytes.decode()?)?;
+        Ok(EncodedProps { props: Arc::new(props), bytes })
+    }
+
+    pub fn props(&self) -> &MessageProps {
+        &self.props
+    }
+
+    /// The cached canonical encoding.
+    pub fn bytes(&self) -> &Bytes {
+        &self.bytes
+    }
+}
+
+impl Deref for EncodedProps {
+    type Target = MessageProps;
+
+    fn deref(&self) -> &MessageProps {
+        &self.props
+    }
+}
+
+impl From<MessageProps> for EncodedProps {
+    fn from(props: MessageProps) -> Self {
+        EncodedProps::new(props)
+    }
+}
+
+impl Default for EncodedProps {
+    fn default() -> Self {
+        EncodedProps::new(MessageProps::default())
+    }
+}
+
+impl PartialEq for EncodedProps {
+    fn eq(&self, other: &Self) -> bool {
+        self.props == other.props
     }
 }
 
@@ -183,8 +257,10 @@ pub enum ClientRequest {
         /// named by `routing_key`), as in AMQP.
         exchange: String,
         routing_key: String,
-        body: Arc<Value>,
-        props: MessageProps,
+        /// The body, encoded exactly once by the publisher. Opaque to the
+        /// broker; travels as a trailing frame section.
+        body: Bytes,
+        props: EncodedProps,
         /// When true and the message routes to zero queues, the broker
         /// answers with an `unroutable` error instead of dropping it.
         mandatory: bool,
@@ -208,10 +284,18 @@ pub struct Delivery {
     pub consumer_tag: String,
     pub delivery_tag: u64,
     pub redelivered: bool,
-    pub exchange: String,
-    pub routing_key: String,
-    pub body: Arc<Value>,
-    pub props: MessageProps,
+    pub exchange: Arc<str>,
+    pub routing_key: Arc<str>,
+    /// The publisher's encoded body — shared by refcount all the way from
+    /// the publish; decode at the consumer with [`Bytes::decode`].
+    ///
+    /// Note: on the TCP read side, every delivery of a coalesced
+    /// `DeliverBatch` is a view of the *one* frame receive buffer, so
+    /// retaining a single delivery long-term pins the whole batch's
+    /// allocation — call [`Bytes::detach`] when storing bodies beyond the
+    /// handler's scope.
+    pub body: Bytes,
+    pub props: EncodedProps,
 }
 
 /// Messages the broker sends to a client.
@@ -237,8 +321,31 @@ fn req(op: &str, req_id: u64, fields: Vec<(&str, Value)>) -> Value {
 }
 
 impl ClientRequest {
-    /// Encode with a request id.
-    pub fn to_value(&self, req_id: u64) -> Value {
+    /// Encode into a frame with a request id. Payload-carrying requests
+    /// attach their props/body bytes as sections; everything else is a
+    /// plain envelope frame.
+    pub fn to_frame(&self, req_id: u64) -> Frame {
+        match self {
+            ClientRequest::Publish { exchange, routing_key, body, props, mandatory } => {
+                let envelope = req(
+                    "publish",
+                    req_id,
+                    vec![
+                        ("exchange", Value::str(exchange)),
+                        ("routing_key", Value::str(routing_key)),
+                        ("mandatory", Value::Bool(*mandatory)),
+                        ("props_len", Value::from(props.bytes().len())),
+                        ("body_len", Value::from(body.len())),
+                    ],
+                );
+                Frame::data_with_sections(&envelope, vec![props.bytes().clone(), body.clone()])
+            }
+            other => Frame::data(&other.control_value(req_id)),
+        }
+    }
+
+    /// Envelope encoding for requests that carry no byte sections.
+    fn control_value(&self, req_id: u64) -> Value {
         match self {
             ClientRequest::Hello { client_id, heartbeat_ms } => req(
                 "hello",
@@ -282,17 +389,9 @@ impl ClientRequest {
                     ("routing_key", Value::str(routing_key)),
                 ],
             ),
-            ClientRequest::Publish { exchange, routing_key, body, props, mandatory } => req(
-                "publish",
-                req_id,
-                vec![
-                    ("exchange", Value::str(exchange)),
-                    ("routing_key", Value::str(routing_key)),
-                    ("body", (**body).clone()),
-                    ("props", props.to_value()),
-                    ("mandatory", Value::Bool(*mandatory)),
-                ],
-            ),
+            ClientRequest::Publish { .. } => {
+                unreachable!("publish frames carry sections; encoded in to_frame")
+            }
             ClientRequest::Consume { queue, consumer_tag, prefetch } => req(
                 "consume",
                 req_id,
@@ -329,10 +428,29 @@ impl ClientRequest {
         }
     }
 
-    /// Decode; returns `(request, req_id)`.
-    pub fn from_value(v: &Value) -> Result<(Self, u64)> {
+    /// Decode a frame; returns `(request, req_id)`. A publish's props and
+    /// body come back as refcounted views of the frame's buffers — nothing
+    /// is copied or re-encoded.
+    pub fn from_frame(frame: &Frame) -> Result<(Self, u64)> {
+        let (v, mut sections) = frame.open()?;
         let req_id = v.get_u64("req_id")?;
         let op = v.get_str("op")?;
+        if op == "publish" {
+            let props_len = v.get_u64("props_len")? as usize;
+            let body_len = v.get_u64("body_len")? as usize;
+            let props = EncodedProps::from_wire(sections.take(props_len)?)?;
+            let body = sections.take(body_len)?;
+            sections.finish()?;
+            let request = ClientRequest::Publish {
+                exchange: v.get_str("exchange")?.to_string(),
+                routing_key: v.get_str("routing_key")?.to_string(),
+                body,
+                props,
+                mandatory: v.get_bool("mandatory")?,
+            };
+            return Ok((request, req_id));
+        }
+        sections.finish()?;
         let r = match op {
             "hello" => ClientRequest::Hello {
                 client_id: v.get_str("client_id")?.to_string(),
@@ -357,13 +475,6 @@ impl ClientRequest {
                 exchange: v.get_str("exchange")?.to_string(),
                 queue: v.get_str("queue")?.to_string(),
                 routing_key: v.get_str("routing_key")?.to_string(),
-            },
-            "publish" => ClientRequest::Publish {
-                exchange: v.get_str("exchange")?.to_string(),
-                routing_key: v.get_str("routing_key")?.to_string(),
-                body: Arc::new(v.get("body")?.clone()),
-                props: MessageProps::from_value(v.get("props")?)?,
-                mandatory: v.get_bool("mandatory")?,
             },
             "consume" => ClientRequest::Consume {
                 queue: v.get_str("queue")?.to_string(),
@@ -395,34 +506,73 @@ impl ClientRequest {
 }
 
 impl Delivery {
-    pub fn to_value(&self) -> Value {
+    /// The envelope map: everything except the props/body bytes, whose
+    /// lengths it declares.
+    fn envelope(&self) -> Value {
         Value::map([
             ("kind", Value::str("deliver")),
             ("consumer_tag", Value::str(&self.consumer_tag)),
             ("delivery_tag", Value::from(self.delivery_tag)),
             ("redelivered", Value::Bool(self.redelivered)),
-            ("exchange", Value::str(&self.exchange)),
-            ("routing_key", Value::str(&self.routing_key)),
-            ("body", (*self.body).clone()),
-            ("props", self.props.to_value()),
+            ("exchange", Value::str(self.exchange.as_ref())),
+            ("routing_key", Value::str(self.routing_key.as_ref())),
+            ("props_len", Value::from(self.props.bytes().len())),
+            ("body_len", Value::from(self.body.len())),
         ])
     }
 
-    pub fn from_value(v: &Value) -> Result<Self> {
+    /// Append this delivery's sections in wire order (props, then body).
+    fn push_sections(&self, out: &mut Vec<Bytes>) {
+        out.push(self.props.bytes().clone());
+        out.push(self.body.clone());
+    }
+
+    /// Rebuild from an envelope plus the frame's section cursor.
+    fn from_envelope(v: &Value, sections: &mut SectionCursor) -> Result<Self> {
+        let props_len = v.get_u64("props_len")? as usize;
+        let body_len = v.get_u64("body_len")? as usize;
+        let props = EncodedProps::from_wire(sections.take(props_len)?)?;
+        let body = sections.take(body_len)?;
         Ok(Delivery {
             consumer_tag: v.get_str("consumer_tag")?.to_string(),
             delivery_tag: v.get_u64("delivery_tag")?,
             redelivered: v.get_bool("redelivered")?,
-            exchange: v.get_str("exchange")?.to_string(),
-            routing_key: v.get_str("routing_key")?.to_string(),
-            body: Arc::new(v.get("body")?.clone()),
-            props: MessageProps::from_value(v.get("props")?)?,
+            exchange: v.get_str("exchange")?.into(),
+            routing_key: v.get_str("routing_key")?.into(),
+            body,
+            props,
         })
     }
 }
 
 impl ServerMsg {
-    pub fn to_value(&self) -> Value {
+    /// Encode into a frame. Deliveries attach their props/body bytes as
+    /// sections (one contiguous run per delivery, batch sections in
+    /// delivery order); control messages are plain envelope frames.
+    pub fn to_frame(&self) -> Frame {
+        match self {
+            ServerMsg::Deliver(d) => {
+                let mut sections = Vec::with_capacity(2);
+                d.push_sections(&mut sections);
+                Frame::data_with_sections(&d.envelope(), sections)
+            }
+            ServerMsg::DeliverBatch(ds) => {
+                let envelope = Value::map([
+                    ("kind", Value::str("deliver_batch")),
+                    ("deliveries", Value::List(ds.iter().map(Delivery::envelope).collect())),
+                ]);
+                let mut sections = Vec::with_capacity(2 * ds.len());
+                for d in ds {
+                    d.push_sections(&mut sections);
+                }
+                Frame::data_with_sections(&envelope, sections)
+            }
+            other => Frame::data(&other.control_value()),
+        }
+    }
+
+    /// Envelope encoding for messages that carry no byte sections.
+    fn control_value(&self) -> Value {
         match self {
             ServerMsg::Ok { req_id, reply } => Value::map([
                 ("kind", Value::str("ok")),
@@ -435,11 +585,9 @@ impl ServerMsg {
                 ("code", Value::str(code)),
                 ("message", Value::str(message)),
             ]),
-            ServerMsg::Deliver(d) => d.to_value(),
-            ServerMsg::DeliverBatch(ds) => Value::map([
-                ("kind", Value::str("deliver_batch")),
-                ("deliveries", Value::List(ds.iter().map(Delivery::to_value).collect())),
-            ]),
+            ServerMsg::Deliver(_) | ServerMsg::DeliverBatch(_) => {
+                unreachable!("delivery frames carry sections; encoded in to_frame")
+            }
             ServerMsg::CancelConsumer { consumer_tag } => Value::map([
                 ("kind", Value::str("cancel_consumer")),
                 ("consumer_tag", Value::str(consumer_tag)),
@@ -447,28 +595,41 @@ impl ServerMsg {
         }
     }
 
-    pub fn from_value(v: &Value) -> Result<Self> {
+    pub fn from_frame(frame: &Frame) -> Result<Self> {
+        let (v, mut sections) = frame.open()?;
         match v.get_str("kind")? {
-            "ok" => Ok(ServerMsg::Ok {
-                req_id: v.get_u64("req_id")?,
-                reply: v.get("reply")?.clone(),
-            }),
-            "err" => Ok(ServerMsg::Err {
-                req_id: v.get_u64("req_id")?,
-                code: v.get_str("code")?.to_string(),
-                message: v.get_str("message")?.to_string(),
-            }),
-            "deliver" => Ok(ServerMsg::Deliver(Delivery::from_value(v)?)),
-            "deliver_batch" => Ok(ServerMsg::DeliverBatch(
-                v.get("deliveries")?
-                    .as_list()?
-                    .iter()
-                    .map(Delivery::from_value)
-                    .collect::<Result<Vec<Delivery>>>()?,
-            )),
-            "cancel_consumer" => Ok(ServerMsg::CancelConsumer {
-                consumer_tag: v.get_str("consumer_tag")?.to_string(),
-            }),
+            "deliver" => {
+                let d = Delivery::from_envelope(&v, &mut sections)?;
+                sections.finish()?;
+                Ok(ServerMsg::Deliver(d))
+            }
+            "deliver_batch" => {
+                let list = v.get("deliveries")?.as_list()?;
+                let mut ds = Vec::with_capacity(list.len());
+                for item in list {
+                    ds.push(Delivery::from_envelope(item, &mut sections)?);
+                }
+                sections.finish()?;
+                Ok(ServerMsg::DeliverBatch(ds))
+            }
+            "ok" => {
+                sections.finish()?;
+                Ok(ServerMsg::Ok { req_id: v.get_u64("req_id")?, reply: v.get("reply")?.clone() })
+            }
+            "err" => {
+                sections.finish()?;
+                Ok(ServerMsg::Err {
+                    req_id: v.get_u64("req_id")?,
+                    code: v.get_str("code")?.to_string(),
+                    message: v.get_str("message")?.to_string(),
+                })
+            }
+            "cancel_consumer" => {
+                sections.finish()?;
+                Ok(ServerMsg::CancelConsumer {
+                    consumer_tag: v.get_str("consumer_tag")?.to_string(),
+                })
+            }
             other => Err(Error::Wire(format!("unknown server msg kind '{other}'"))),
         }
     }
@@ -477,12 +638,32 @@ impl ServerMsg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::wire::{read_frame, write_frame};
+    use std::io::Cursor;
 
+    /// Roundtrip a request both in-process (attached sections) and through
+    /// a byte stream (sections sliced out of one receive buffer).
     fn roundtrip_req(r: ClientRequest) {
-        let v = r.to_value(42);
-        let (back, id) = ClientRequest::from_value(&v).unwrap();
+        let frame = r.to_frame(42);
+        let (back, id) = ClientRequest::from_frame(&frame).unwrap();
         assert_eq!(id, 42);
         assert_eq!(back, r);
+
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let read = read_frame(&mut Cursor::new(&buf)).unwrap();
+        let (back, id) = ClientRequest::from_frame(&read).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(back, r);
+    }
+
+    fn roundtrip_msg(m: ServerMsg) {
+        let frame = m.to_frame();
+        assert_eq!(ServerMsg::from_frame(&frame).unwrap(), m);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let read = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(ServerMsg::from_frame(&read).unwrap(), m);
     }
 
     #[test]
@@ -510,7 +691,7 @@ mod tests {
         roundtrip_req(ClientRequest::Publish {
             exchange: "".into(),
             routing_key: "tasks".into(),
-            body: Arc::new(Value::map([("x", Value::I64(1))])),
+            body: Bytes::encode(&Value::map([("x", Value::I64(1))])),
             props: MessageProps {
                 correlation_id: Some("c1".into()),
                 reply_to: Some("replies".into()),
@@ -518,7 +699,8 @@ mod tests {
                 priority: 7,
                 persistent: true,
                 headers: [("sender".to_string(), Value::str("me"))].into_iter().collect(),
-            },
+            }
+            .into(),
             mandatory: true,
         });
         roundtrip_req(ClientRequest::Consume {
@@ -545,8 +727,8 @@ mod tests {
                 redelivered: true,
                 exchange: "".into(),
                 routing_key: "tasks".into(),
-                body: Arc::new(Value::str("payload")),
-                props: MessageProps::default(),
+                body: Bytes::encode(&Value::str("payload")),
+                props: MessageProps::default().into(),
             }),
             ServerMsg::DeliverBatch(
                 (0..3)
@@ -556,16 +738,84 @@ mod tests {
                         redelivered: false,
                         exchange: "".into(),
                         routing_key: "tasks".into(),
-                        body: Arc::new(Value::I64(i as i64)),
-                        props: MessageProps::default(),
+                        body: Bytes::encode(&Value::I64(i as i64)),
+                        props: MessageProps {
+                            priority: (i % 3) as u8,
+                            ..Default::default()
+                        }
+                        .into(),
                     })
                     .collect(),
             ),
             ServerMsg::CancelConsumer { consumer_tag: "ct".into() },
         ] {
-            let v = m.to_value();
-            assert_eq!(ServerMsg::from_value(&v).unwrap(), m);
+            roundtrip_msg(m);
         }
+    }
+
+    #[test]
+    fn publish_body_is_never_reencoded() {
+        // The encode-once pin at the protocol layer: the body bytes inside
+        // a locally decoded publish are the very buffer the caller encoded.
+        let body = Bytes::encode(&Value::Bytes(vec![0xAB; 4096]));
+        let props: EncodedProps = MessageProps { priority: 3, ..Default::default() }.into();
+        let r = ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "q".into(),
+            body: body.clone(),
+            props: props.clone(),
+            mandatory: false,
+        };
+        let frame = r.to_frame(1);
+        let (back, _) = ClientRequest::from_frame(&frame).unwrap();
+        let ClientRequest::Publish { body: got_body, props: got_props, .. } = back else {
+            panic!("expected publish");
+        };
+        assert!(Bytes::same_buffer(&got_body, &body));
+        assert!(Bytes::same_buffer(got_props.bytes(), props.bytes()));
+    }
+
+    #[test]
+    fn deliver_batch_sections_share_one_receive_buffer() {
+        let batch = ServerMsg::DeliverBatch(
+            (0..4)
+                .map(|i| Delivery {
+                    consumer_tag: "ct".into(),
+                    delivery_tag: i,
+                    redelivered: false,
+                    exchange: "".into(),
+                    routing_key: "q".into(),
+                    body: Bytes::encode(&Value::Bytes(vec![i as u8; 256])),
+                    props: MessageProps::default().into(),
+                })
+                .collect(),
+        );
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &batch.to_frame()).unwrap();
+        let read = read_frame(&mut Cursor::new(&buf)).unwrap();
+        let ServerMsg::DeliverBatch(ds) = ServerMsg::from_frame(&read).unwrap() else {
+            panic!("expected batch");
+        };
+        assert_eq!(ds.len(), 4);
+        for pair in ds.windows(2) {
+            assert!(
+                Bytes::same_buffer(&pair[0].body, &pair[1].body),
+                "all bodies of a read batch must be views of the receive buffer"
+            );
+        }
+    }
+
+    #[test]
+    fn encoded_props_cache_is_reused() {
+        let props: EncodedProps = MessageProps {
+            headers: [("k".to_string(), Value::str("v"))].into_iter().collect(),
+            ..Default::default()
+        }
+        .into();
+        let a = props.clone();
+        let b = props.clone();
+        assert!(Bytes::same_buffer(a.bytes(), b.bytes()), "clones share the single encode");
+        assert_eq!(a.bytes().decode().unwrap(), props.props().to_value());
     }
 
     #[test]
@@ -573,6 +823,7 @@ mod tests {
         let v = MessageProps::default().to_value();
         assert_eq!(v, Value::Map(Default::default()));
         assert_eq!(MessageProps::from_value(&v).unwrap(), MessageProps::default());
+        assert_eq!(EncodedProps::default().bytes().decode().unwrap(), v);
     }
 
     #[test]
@@ -583,7 +834,30 @@ mod tests {
 
     #[test]
     fn unknown_op_rejected() {
-        let v = Value::map([("op", Value::str("evil")), ("req_id", Value::I64(1))]);
-        assert!(ClientRequest::from_value(&v).is_err());
+        let frame =
+            Frame::data(&Value::map([("op", Value::str("evil")), ("req_id", Value::I64(1))]));
+        assert!(ClientRequest::from_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn truncated_publish_sections_rejected() {
+        let r = ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "q".into(),
+            body: Bytes::encode(&Value::str("hello")),
+            props: MessageProps::default().into(),
+            mandatory: false,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &r.to_frame(1)).unwrap();
+        // Chop the tail of the frame payload (but keep the header's length
+        // intact by rewriting it) so the declared body_len overruns.
+        let total = buf.len();
+        let cut = total - 3;
+        let mut shorter = buf[..cut].to_vec();
+        let payload_len = (cut - 5) as u32;
+        shorter[..4].copy_from_slice(&payload_len.to_le_bytes());
+        let read = read_frame(&mut Cursor::new(&shorter)).unwrap();
+        assert!(ClientRequest::from_frame(&read).is_err());
     }
 }

@@ -9,21 +9,25 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::broker::protocol::{MessageProps, QueueOptions};
-use crate::wire::Value;
+use crate::broker::protocol::{EncodedProps, QueueOptions};
+use crate::wire::{Bytes, Value};
 
 /// Number of priority lanes (priorities 0–9).
 pub const PRIORITY_LANES: usize = 10;
 
-/// A message held by a queue.
+/// A message held by a queue. Every field that can be large is behind a
+/// refcount (`Arc<str>` names, [`Bytes`] body, [`EncodedProps`]), so the
+/// per-delivery / per-fanout-copy `clone()` is a handful of refcount bumps
+/// — the payload is encoded once at the publisher and never duplicated.
 #[derive(Clone, Debug)]
 pub struct QueuedMessage {
     /// Broker-wide unique id (also the WAL record id for durable queues).
     pub msg_id: u64,
-    pub exchange: String,
-    pub routing_key: String,
-    pub body: Arc<Value>,
-    pub props: MessageProps,
+    pub exchange: Arc<str>,
+    pub routing_key: Arc<str>,
+    /// The publisher's encoded body — opaque to the broker.
+    pub body: Bytes,
+    pub props: EncodedProps,
     /// Instant after which the message is expired (from per-message or
     /// per-queue TTL).
     pub deadline: Option<Instant>,
@@ -266,6 +270,8 @@ impl Queue {
             self.unacked.insert(
                 tag,
                 InFlight {
+                    // Refcount bumps only: body/props/names are shared, so
+                    // keeping the unacked copy costs no payload duplication.
                     message: msg.clone(),
                     consumer_tag: consumer.consumer_tag.clone(),
                     connection: consumer.connection,
@@ -418,16 +424,17 @@ impl Queue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::protocol::MessageProps;
     use crate::proputil::{run_prop, Rng};
     use std::time::Duration;
 
     fn msg(id: u64, priority: u8) -> QueuedMessage {
         QueuedMessage {
             msg_id: id,
-            exchange: String::new(),
+            exchange: "".into(),
             routing_key: "q".into(),
-            body: Arc::new(Value::I64(id as i64)),
-            props: MessageProps { priority, ..Default::default() },
+            body: Bytes::encode(&Value::I64(id as i64)),
+            props: MessageProps { priority, ..Default::default() }.into(),
             deadline: None,
             redelivered: false,
         }
@@ -597,7 +604,7 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         let mut m = msg(0, 0);
-        m.props.expiration_ms = Some(10);
+        m.props = MessageProps { expiration_ms: Some(10), ..Default::default() }.into();
         q.publish(m, now);
         q.publish(msg(1, 0), now);
         q.add_consumer(consumer("c1", 1, 0));

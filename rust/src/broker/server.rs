@@ -143,10 +143,10 @@ mod tests {
         let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
         let addr = server.addr();
         let link = connect_tcp(addr).unwrap();
-        link.send(&Frame::data(
+        link.send(
             &ClientRequest::QueueDeclare { queue: "q".into(), options: QueueOptions::default() }
-                .to_value(1),
-        ))
+                .to_frame(1),
+        )
         .unwrap();
         let f = loop {
             let f = link.recv_timeout(Duration::from_secs(2)).unwrap();
@@ -154,7 +154,7 @@ mod tests {
                 break f;
             }
         };
-        match ServerMsg::from_value(&f.value().unwrap()).unwrap() {
+        match ServerMsg::from_frame(&f).unwrap() {
             ServerMsg::Ok { req_id: 1, reply } => {
                 assert_eq!(reply.get_str("queue").unwrap(), "q");
             }
@@ -171,9 +171,7 @@ mod tests {
         let addr = server.addr();
         {
             let link = connect_tcp(addr).unwrap();
-            let send = |req: &ClientRequest, id: u64| {
-                link.send(&Frame::data(&req.to_value(id))).unwrap()
-            };
+            let send = |req: &ClientRequest, id: u64| link.send(&req.to_frame(id)).unwrap();
             send(
                 &ClientRequest::QueueDeclare {
                     queue: "tasks".into(),
@@ -185,7 +183,7 @@ mod tests {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: "tasks".into(),
-                    body: Arc::new(Value::str("work")),
+                    body: crate::wire::Bytes::encode(&Value::str("work")),
                     props: Default::default(),
                     mandatory: true,
                 },

@@ -49,12 +49,14 @@ pub fn serve_link(broker: BrokerHandle, link: Arc<dyn Link>) {
                     Ok(msg) => {
                         // Coalesce whatever else is already queued into one
                         // write unit (bounded, so a flood cannot starve the
-                        // heartbeat path indefinitely).
-                        let mut frames = vec![Frame::data(&msg.to_value())];
+                        // heartbeat path indefinitely). Delivery frames
+                        // reference the publisher's body buffers as
+                        // sections — no per-frame payload assembly here.
+                        let mut frames = vec![msg.to_frame()];
                         let mut disconnected = false;
                         while frames.len() < WRITE_COALESCE_MAX {
                             match rx.try_recv() {
-                                Ok(m) => frames.push(Frame::data(&m.to_value())),
+                                Ok(m) => frames.push(m.to_frame()),
                                 Err(TryRecvError::Empty) => break,
                                 Err(TryRecvError::Disconnected) => {
                                     disconnected = true;
@@ -86,7 +88,7 @@ pub fn serve_link(broker: BrokerHandle, link: Arc<dyn Link>) {
                     break;
                 }
                 FrameType::Data => {
-                    let parsed = frame.value().and_then(|v| ClientRequest::from_value(&v));
+                    let parsed = ClientRequest::from_frame(&frame);
                     match parsed {
                         Ok((req, req_id)) => {
                             if let ClientRequest::Hello { heartbeat_ms: hb, .. } = &req {
@@ -141,13 +143,13 @@ mod tests {
         let session = std::thread::spawn(move || serve_link(b2, server));
 
         let send = |req: &ClientRequest, id: u64| {
-            client.send(&Frame::data(&req.to_value(id))).unwrap();
+            client.send(&req.to_frame(id)).unwrap();
         };
         let recv_data = || -> ServerMsg {
             loop {
                 let f = client.recv_timeout(Duration::from_secs(2)).unwrap();
                 if f.frame_type == FrameType::Data {
-                    return ServerMsg::from_value(&f.value().unwrap()).unwrap();
+                    return ServerMsg::from_frame(&f).unwrap();
                 }
             }
         };
@@ -165,7 +167,7 @@ mod tests {
             &ClientRequest::Publish {
                 exchange: "".into(),
                 routing_key: "q".into(),
-                body: Arc::new(Value::str("m")),
+                body: crate::wire::Bytes::encode(&Value::str("m")),
                 props: Default::default(),
                 mandatory: true,
             },
@@ -177,7 +179,7 @@ mod tests {
         // Ok for consume, then the delivery (order guaranteed: same channel).
         assert!(matches!(recv_data(), ServerMsg::Ok { req_id: 4, .. }));
         match recv_data() {
-            ServerMsg::Deliver(d) => assert_eq!(*d.body, Value::str("m")),
+            ServerMsg::Deliver(d) => assert_eq!(d.body.decode().unwrap(), Value::str("m")),
             other => panic!("expected delivery, got {other:?}"),
         }
 
@@ -195,17 +197,17 @@ mod tests {
         let session = std::thread::spawn(move || serve_link(b2, server));
 
         client
-            .send(&Frame::data(
+            .send(
                 &ClientRequest::Consume {
                     queue: "missing".into(),
                     consumer_tag: "c".into(),
                     prefetch: 0,
                 }
-                .to_value(9),
-            ))
+                .to_frame(9),
+            )
             .unwrap();
         let f = client.recv_timeout(Duration::from_secs(2)).unwrap();
-        match ServerMsg::from_value(&f.value().unwrap()).unwrap() {
+        match ServerMsg::from_frame(&f).unwrap() {
             ServerMsg::Err { req_id, code, .. } => {
                 assert_eq!(req_id, 9);
                 assert_eq!(code, "broker");
@@ -240,9 +242,7 @@ mod tests {
         let session = std::thread::spawn(move || serve_link(b2, server));
 
         client
-            .send(&Frame::data(
-                &ClientRequest::Hello { client_id: "hb".into(), heartbeat_ms: 20 }.to_value(1),
-            ))
+            .send(&ClientRequest::Hello { client_id: "hb".into(), heartbeat_ms: 20 }.to_frame(1))
             .unwrap();
         let mut saw_heartbeat = false;
         let deadline = std::time::Instant::now() + Duration::from_secs(2);

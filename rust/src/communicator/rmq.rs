@@ -33,7 +33,7 @@ use crate::communicator::{
 };
 use crate::error::{Error, Result};
 use crate::transport::{Connection, ConnectionConfig, Link};
-use crate::wire::Value;
+use crate::wire::{Bytes, Value};
 
 /// Exchange names and client tuning.
 #[derive(Clone, Debug)]
@@ -137,7 +137,9 @@ impl RmqCommunicator {
                     // Late reply for a timed-out/abandoned future.
                     return;
                 };
-                match decode_reply(&d.body) {
+                // Lazy decode: the reply body stays encoded until here,
+                // the one place that actually needs the value tree.
+                match d.body.decode().and_then(|v| decode_reply(&v)) {
                     Ok(v) => p.set_result(v),
                     Err(e) => p.set_error(e),
                 };
@@ -267,11 +269,12 @@ impl TaskContext {
                     conn.send_noreply(&ClientRequest::Publish {
                         exchange: String::new(),
                         routing_key: rq,
-                        body: Arc::new(encode_reply(&result)),
+                        body: Bytes::encode(&encode_reply(&result)),
                         props: MessageProps {
                             correlation_id: Some(corr),
                             ..Default::default()
-                        },
+                        }
+                        .into(),
                         // Not mandatory: sender may be gone; that's fine.
                         mandatory: false,
                     })
@@ -306,16 +309,19 @@ impl Communicator for RmqCommunicator {
     fn task_send(&self, queue: &str, task: Value) -> Result<KiwiFuture<Value>> {
         self.ensure_task_queue(queue)?;
         let (corr, future) = self.register_pending();
+        // The single encode of this task's lifetime: broker routing, WAL
+        // records and every delivery share the buffer built here.
         let publish = ClientRequest::Publish {
             exchange: String::new(),
             routing_key: queue.to_string(),
-            body: Arc::new(task),
+            body: Bytes::encode(&task),
             props: MessageProps {
                 correlation_id: Some(corr.clone()),
                 reply_to: Some(self.reply_queue.clone()),
                 persistent: self.config.durable_tasks,
                 ..Default::default()
-            },
+            }
+            .into(),
             mandatory: true,
         };
         let res = if self.config.confirm_publishes {
@@ -347,7 +353,18 @@ impl Communicator for RmqCommunicator {
                     d.props.reply_to.clone(),
                     d.props.correlation_id.clone(),
                 );
-                handler((*d.body).clone(), ctx);
+                // Decode-on-demand at the consumer — the first (and only)
+                // decode of the task body since the sender encoded it.
+                match d.body.decode() {
+                    Ok(task) => handler(task, ctx),
+                    Err(e) => {
+                        // Complete with the error (reply + ack) so the
+                        // sender's future resolves instead of hanging,
+                        // mirroring the RPC path's decode-failure handling.
+                        log::warn!("rmq: undecodable task body dropped: {e}");
+                        ctx.complete(Err(e));
+                    }
+                }
             }),
         )?;
         self.subscriptions
@@ -370,12 +387,13 @@ impl Communicator for RmqCommunicator {
         let res = self.conn.request(&ClientRequest::Publish {
             exchange: self.config.rpc_exchange.clone(),
             routing_key: recipient_id.to_string(),
-            body: Arc::new(msg),
+            body: Bytes::encode(&msg),
             props: MessageProps {
                 correlation_id: Some(corr.clone()),
                 reply_to: Some(self.reply_queue.clone()),
                 ..Default::default()
-            },
+            }
+            .into(),
             mandatory: true, // nobody listening -> UnroutableMessage
         });
         if let Err(e) = res {
@@ -407,15 +425,21 @@ impl Communicator for RmqCommunicator {
             &consumer_tag,
             0,
             Box::new(move |d| {
-                let result = handler((*d.body).clone());
+                // Lazy decode, then the user handler; a decode error is
+                // reported back to the caller like a handler error.
+                let result = match d.body.decode() {
+                    Ok(v) => handler(v),
+                    Err(e) => Err(e),
+                };
                 if let (Some(rq), Some(corr)) =
                     (d.props.reply_to.clone(), d.props.correlation_id.clone())
                 {
                     conn.send_noreply(&ClientRequest::Publish {
                         exchange: String::new(),
                         routing_key: rq,
-                        body: Arc::new(encode_reply(&result)),
-                        props: MessageProps { correlation_id: Some(corr), ..Default::default() },
+                        body: Bytes::encode(&encode_reply(&result)),
+                        props: MessageProps { correlation_id: Some(corr), ..Default::default() }
+                            .into(),
                         mandatory: false,
                     })
                     .ok();
@@ -455,12 +479,13 @@ impl Communicator for RmqCommunicator {
             correlation_id: None,
         };
         // Broadcasts are fire-and-forget by definition; never wait for a
-        // confirm (§Perf: halves the E3 sender-side cost).
+        // confirm (§Perf: halves the E3 sender-side cost). One encode here
+        // feeds every subscriber's delivery.
         self.conn.send_noreply(&ClientRequest::Publish {
             exchange: self.config.broadcast_exchange.clone(),
             routing_key: subject.unwrap_or("").to_string(),
-            body: Arc::new(msg.to_value()),
-            props: MessageProps::default(),
+            body: Bytes::encode(&msg.to_value()),
+            props: MessageProps::default().into(),
             mandatory: false, // zero subscribers is fine
         })?;
         Ok(())
@@ -489,7 +514,7 @@ impl Communicator for RmqCommunicator {
             0,
             Box::new(move |d| {
                 conn.ack(d.delivery_tag).ok();
-                match BroadcastMessage::from_value(&d.body) {
+                match d.body.decode().and_then(|v| BroadcastMessage::from_value(&v)) {
                     Ok(msg) => {
                         if filter.matches(&msg) {
                             handler(msg);

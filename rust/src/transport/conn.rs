@@ -72,7 +72,7 @@ impl Shared {
             return Err(Error::Closed("connection closed".into()));
         }
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
-        self.link.send(&Frame::data(&req.to_value(req_id))).map_err(|e| {
+        self.link.send(&req.to_frame(req_id)).map_err(|e| {
             self.mark_closed();
             e
         })
@@ -192,7 +192,7 @@ impl Connection {
         let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
         let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
         self.shared.pending.lock().unwrap().insert(req_id, tx);
-        if let Err(e) = self.shared.link.send(&Frame::data(&req.to_value(req_id))) {
+        if let Err(e) = self.shared.link.send(&req.to_frame(req_id)) {
             self.shared.pending.lock().unwrap().remove(&req_id);
             self.shared.mark_closed();
             return Err(e);
@@ -326,7 +326,7 @@ fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
                         shared.mark_closed();
                         break;
                     }
-                    FrameType::Data => match frame.value().and_then(|v| ServerMsg::from_value(&v)) {
+                    FrameType::Data => match ServerMsg::from_frame(&frame) {
                         Ok(ServerMsg::Deliver(d)) => {
                             let mut handlers = shared.handlers.lock().unwrap();
                             if let Some(h) = handlers.get_mut(&d.consumer_tag) {
@@ -406,7 +406,7 @@ mod tests {
     use super::*;
     use crate::broker::protocol::QueueOptions;
     use crate::broker::InprocBroker;
-    use crate::wire::Value;
+    use crate::wire::{Bytes, Value};
 
     fn open(broker: &InprocBroker) -> Connection {
         Connection::open(broker.connect(), ConnectionConfig::default()).unwrap()
@@ -441,14 +441,14 @@ mod tests {
             "c1",
             0,
             Box::new(move |d| {
-                tx.send((*d.body).clone()).unwrap();
+                tx.send(d.body.decode().unwrap()).unwrap();
             }),
         )
         .unwrap();
         conn.request(&ClientRequest::Publish {
             exchange: "".into(),
             routing_key: "q".into(),
-            body: Arc::new(Value::str("hi")),
+            body: Bytes::encode(&Value::str("hi")),
             props: Default::default(),
             mandatory: true,
         })
@@ -465,7 +465,7 @@ mod tests {
             .request(&ClientRequest::Publish {
                 exchange: "".into(),
                 routing_key: "missing".into(),
-                body: Arc::new(Value::Null),
+                body: Bytes::encode(&Value::Null),
                 props: Default::default(),
                 mandatory: true,
             })
@@ -491,7 +491,7 @@ mod tests {
                         conn.request(&ClientRequest::Publish {
                             exchange: "".into(),
                             routing_key: "q".into(),
-                            body: Arc::new(Value::I64(t * 1000 + i)),
+                            body: Bytes::encode(&Value::I64(t * 1000 + i)),
                             props: Default::default(),
                             mandatory: true,
                         })
@@ -519,7 +519,7 @@ mod tests {
             conn.request(&ClientRequest::Publish {
                 exchange: "".into(),
                 routing_key: "q".into(),
-                body: Arc::new(Value::I64(i)),
+                body: Bytes::encode(&Value::I64(i)),
                 props: Default::default(),
                 mandatory: true,
             })
@@ -564,7 +564,7 @@ mod tests {
             conn.request(&ClientRequest::Publish {
                 exchange: "".into(),
                 routing_key: "bulk".into(),
-                body: Arc::new(Value::I64(i)),
+                body: Bytes::encode(&Value::I64(i)),
                 props: Default::default(),
                 mandatory: true,
             })
@@ -578,7 +578,7 @@ mod tests {
             "c1",
             0,
             Box::new(move |d| {
-                seen.push(d.body.as_i64().unwrap());
+                seen.push(d.body.decode().unwrap().as_i64().unwrap());
                 conn2.ack(d.delivery_tag).unwrap();
                 if seen.len() == 40 {
                     done_tx.send(seen.clone()).unwrap();

@@ -1,0 +1,213 @@
+//! [`Bytes`]: a cheaply-cloneable, immutable byte buffer — the unit of the
+//! encode-once payload path.
+//!
+//! A `Bytes` is a `(Arc<[u8]>, offset, len)` slice view: cloning or
+//! sub-slicing is a refcount bump, never a copy. Message bodies are encoded
+//! to `Bytes` exactly once at the publisher; every later stage (framing,
+//! broker queues, fanout copies, WAL records, deliveries) shares the same
+//! underlying allocation and decodes on demand at the consumer.
+//!
+//! The invariant the rest of the stack leans on: **two `Bytes` for which
+//! [`Bytes::same_buffer`] holds were produced by a single encode** — tests
+//! pin the fanout path with exactly that check.
+
+use std::fmt;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::wire::codec;
+use crate::wire::value::Value;
+
+/// An immutable, refcounted byte slice view.
+///
+/// The backing store is `Arc<Vec<u8>>` (not `Arc<[u8]>`) so taking
+/// ownership of an existing vector — the codec's encode output, a frame
+/// read off a socket — is pointer-shuffling, never a copy.
+#[derive(Clone)]
+pub struct Bytes {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// An empty buffer.
+    pub fn new() -> Bytes {
+        Bytes::from_vec(Vec::new())
+    }
+
+    /// Take ownership of a vector (no copy).
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes { buf: Arc::new(v), off: 0, len }
+    }
+
+    /// Copy a slice into a fresh buffer.
+    pub fn copy_from_slice(s: &[u8]) -> Bytes {
+        Bytes::from_vec(s.to_vec())
+    }
+
+    /// Encode a value into a fresh buffer — the *single* encode of the
+    /// payload path. Everything downstream shares the result.
+    pub fn encode(v: &Value) -> Bytes {
+        Bytes::from_vec(codec::encode_to_vec(v))
+    }
+
+    /// Decode the contained value (lazy decode-on-demand; the bytes stay
+    /// shared and untouched).
+    pub fn decode(&self) -> Result<Value> {
+        codec::decode(self.as_slice())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// A sub-view of this buffer (refcount bump, no copy). Panics when the
+    /// range is out of bounds, like slice indexing.
+    pub fn slice(&self, range: Range<usize>) -> Bytes {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "Bytes::slice {range:?} out of range for length {}",
+            self.len
+        );
+        Bytes {
+            buf: Arc::clone(&self.buf),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// True when both views share one underlying allocation — i.e. they
+    /// trace back to a single encode. This is what the encode-once tests
+    /// assert across fanout deliveries.
+    pub fn same_buffer(a: &Bytes, b: &Bytes) -> bool {
+        Arc::ptr_eq(&a.buf, &b.buf)
+    }
+
+    /// Copy this view into its own fresh allocation, releasing the shared
+    /// buffer. Use when retaining a small slice of a large shared buffer
+    /// (e.g. keeping one delivery of a read-side `DeliverBatch` long-term
+    /// would otherwise pin the whole batch's receive allocation).
+    pub fn detach(&self) -> Bytes {
+        Bytes::copy_from_slice(self.as_slice())
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Self {
+        Bytes::new()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Self {
+        Bytes::from_vec(v)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Bytes(<{} bytes>)", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Value::map([("x", Value::I64(7)), ("b", Value::Bytes(vec![1, 2, 3]))]);
+        let b = Bytes::encode(&v);
+        assert_eq!(b.decode().unwrap(), v);
+        assert_eq!(b.as_slice(), codec::encode_to_vec(&v).as_slice());
+    }
+
+    #[test]
+    fn clone_shares_buffer() {
+        let b = Bytes::from_vec(vec![1, 2, 3, 4]);
+        let c = b.clone();
+        assert!(Bytes::same_buffer(&b, &c));
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn slice_is_a_view() {
+        let b = Bytes::from_vec(vec![0, 1, 2, 3, 4, 5]);
+        let s = b.slice(2..5);
+        assert_eq!(s.as_slice(), &[2, 3, 4]);
+        assert!(Bytes::same_buffer(&b, &s));
+        let ss = s.slice(1..2);
+        assert_eq!(ss.as_slice(), &[3]);
+        assert!(Bytes::same_buffer(&b, &ss));
+    }
+
+    #[test]
+    fn slice_empty_and_full() {
+        let b = Bytes::from_vec(vec![9, 9]);
+        assert_eq!(b.slice(0..2), b);
+        assert!(b.slice(1..1).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slice_out_of_range_panics() {
+        Bytes::from_vec(vec![1]).slice(0..2);
+    }
+
+    #[test]
+    fn equality_is_by_content_identity_is_by_buffer() {
+        let a = Bytes::from_vec(vec![1, 2]);
+        let b = Bytes::from_vec(vec![1, 2]);
+        assert_eq!(a, b);
+        assert!(!Bytes::same_buffer(&a, &b));
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let b = Bytes::default();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn detach_copies_out_of_the_shared_buffer() {
+        let big = Bytes::from_vec(vec![7; 1024]);
+        let view = big.slice(10..20);
+        let owned = view.detach();
+        assert_eq!(owned, view);
+        assert!(!Bytes::same_buffer(&owned, &big));
+    }
+}

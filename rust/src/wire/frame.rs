@@ -4,10 +4,26 @@
 //! frames carry no payload and are handled below the protocol layer, so the
 //! connection can keep heartbeating while user code is busy — the property
 //! the paper calls out as essential to RabbitMQ's fault tolerance.
+//!
+//! ## The zero-copy payload path
+//!
+//! A data frame's payload is a codec-encoded *envelope* [`Value`] followed
+//! by zero or more opaque byte **sections** (encoded message props and
+//! bodies). The envelope declares each section's length; the sections are
+//! never part of the envelope's value tree, so:
+//!
+//! * **writing** appends the already-encoded [`Bytes`] directly after the
+//!   envelope — no intermediate assembly `Vec`, no re-encode;
+//! * **reading** pulls the whole payload into one allocation and hands the
+//!   protocol layer refcounted sub-slices of it — every section of a frame
+//!   (all the bodies of a `DeliverBatch`) shares that single buffer;
+//! * **in-process links** pass the `Frame` by clone, so sections keep
+//!   pointing at the publisher's original encode across the whole broker.
 
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
+use crate::wire::bytes::Bytes;
 use crate::wire::codec;
 use crate::wire::value::Value;
 
@@ -19,7 +35,8 @@ pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
 /// Frame discriminator byte.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameType {
-    /// A protocol message; payload is a codec-encoded [`Value`].
+    /// A protocol message; payload is a codec-encoded envelope [`Value`]
+    /// plus the byte sections it declares.
     Data = 0,
     /// Keep-alive; no payload. Exchanged periodically in both directions.
     Heartbeat = 1,
@@ -38,43 +55,156 @@ impl FrameType {
     }
 }
 
-/// A decoded frame.
-#[derive(Clone, Debug, PartialEq)]
+/// A frame: envelope bytes plus appended sections.
+///
+/// Locally-built frames keep `payload` = pure envelope and the sections
+/// separate (so in-proc delivery shares the original buffers). Frames read
+/// off a stream hold the *entire* wire payload in `payload` with
+/// `sections` empty; [`Frame::open`] slices the sections back out as views
+/// of that one buffer. The two shapes compare equal when their wire images
+/// match.
+#[derive(Clone, Debug)]
 pub struct Frame {
     pub frame_type: FrameType,
-    pub payload: Vec<u8>,
+    /// Codec-encoded envelope (locally built) or the whole received
+    /// payload (read off a stream).
+    pub payload: Bytes,
+    /// Byte sections appended after the envelope on the wire. Empty on
+    /// frames read off a stream.
+    pub sections: Vec<Bytes>,
 }
 
 impl Frame {
-    /// Build a data frame from a protocol value.
+    /// Build a data frame from a protocol value (no sections).
     pub fn data(v: &Value) -> Frame {
-        Frame { frame_type: FrameType::Data, payload: codec::encode_to_vec(v) }
+        Frame { frame_type: FrameType::Data, payload: Bytes::encode(v), sections: Vec::new() }
+    }
+
+    /// Build a data frame from an envelope plus opaque sections. The
+    /// envelope must declare each section's length so readers can slice
+    /// them back out.
+    pub fn data_with_sections(envelope: &Value, sections: Vec<Bytes>) -> Frame {
+        Frame { frame_type: FrameType::Data, payload: Bytes::encode(envelope), sections }
     }
 
     /// Build a heartbeat frame.
     pub fn heartbeat() -> Frame {
-        Frame { frame_type: FrameType::Heartbeat, payload: Vec::new() }
+        Frame { frame_type: FrameType::Heartbeat, payload: Bytes::new(), sections: Vec::new() }
     }
 
     /// Build a goodbye frame with a reason.
     pub fn goodbye(reason: &str) -> Frame {
         Frame {
             frame_type: FrameType::Goodbye,
-            payload: codec::encode_to_vec(&Value::str(reason)),
+            payload: Bytes::encode(&Value::str(reason)),
+            sections: Vec::new(),
         }
     }
 
-    /// Decode the payload of a data/goodbye frame as a value.
+    /// Total bytes this frame puts on the wire after the 5-byte header.
+    pub fn wire_len(&self) -> usize {
+        self.payload.len() + self.sections.iter().map(Bytes::len).sum::<usize>()
+    }
+
+    /// Decode the payload of a sectionless data/goodbye frame as a value
+    /// (strict: trailing bytes are an error). Payload-carrying protocol
+    /// messages go through [`Frame::open`] instead.
     pub fn value(&self) -> Result<Value> {
+        if !self.sections.is_empty() {
+            return Err(Error::Wire("frame carries sections; use Frame::open".into()));
+        }
         codec::decode(&self.payload)
+    }
+
+    /// Decode the envelope and return a cursor over the trailing sections.
+    /// Works for both locally-built frames (attached section list) and
+    /// frames read off a stream (sections are views of the payload buffer).
+    pub fn open(&self) -> Result<(Value, SectionCursor)> {
+        let (envelope, rest) = codec::decode_prefix(&self.payload)?;
+        let consumed = self.payload.len() - rest.len();
+        Ok((
+            envelope,
+            SectionCursor {
+                tail: self.payload.slice(consumed..self.payload.len()),
+                pos: 0,
+                list: self.sections.clone(),
+                idx: 0,
+            },
+        ))
     }
 }
 
-/// Write one frame to a stream. The header and payload are written with a
-/// single `write_all` each; callers wrap the stream in a `BufWriter` and
+impl PartialEq for Frame {
+    /// Frames are equal when their wire images are — a locally-built frame
+    /// equals its read-back twin even though the section split differs.
+    fn eq(&self, other: &Self) -> bool {
+        if self.frame_type != other.frame_type || self.wire_len() != other.wire_len() {
+            return false;
+        }
+        let image = |f: &Frame| -> Vec<u8> {
+            let mut out = Vec::with_capacity(f.wire_len());
+            out.extend_from_slice(&f.payload);
+            for s in &f.sections {
+                out.extend_from_slice(s);
+            }
+            out
+        };
+        image(self) == image(other)
+    }
+}
+
+/// Cursor over a frame's trailing sections, consumed in wire order. The
+/// protocol layer calls [`SectionCursor::take`] with each declared length
+/// and [`SectionCursor::finish`] to reject trailing garbage.
+pub struct SectionCursor {
+    /// Contiguous remainder of a stream-read frame (shared buffer).
+    tail: Bytes,
+    pos: usize,
+    /// Attached sections of a locally-built frame (refcount clones).
+    list: Vec<Bytes>,
+    idx: usize,
+}
+
+impl SectionCursor {
+    /// Take the next section, which must be exactly `len` bytes.
+    pub fn take(&mut self, len: usize) -> Result<Bytes> {
+        if self.idx < self.list.len() {
+            let s = self.list[self.idx].clone();
+            self.idx += 1;
+            if s.len() != len {
+                return Err(Error::Wire(format!(
+                    "section length mismatch: declared {len}, attached {}",
+                    s.len()
+                )));
+            }
+            return Ok(s);
+        }
+        if self.tail.len() - self.pos < len {
+            return Err(Error::Wire(format!(
+                "declared section length {len} exceeds remaining frame ({} bytes)",
+                self.tail.len() - self.pos
+            )));
+        }
+        let s = self.tail.slice(self.pos..self.pos + len);
+        self.pos += len;
+        Ok(s)
+    }
+
+    /// Assert every section was consumed (protocol strictness).
+    pub fn finish(self) -> Result<()> {
+        if self.idx != self.list.len() || self.pos != self.tail.len() {
+            return Err(Error::Wire("trailing bytes after message sections".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Write one frame to a stream: header, envelope, then each section —
+/// the already-encoded buffers go straight to the writer with no
+/// intermediate assembly. Callers wrap the stream in a `BufWriter` and
 /// flush at message boundaries.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
-    let len = frame.payload.len();
+    let len = frame.wire_len();
     if len as u64 > MAX_FRAME_LEN as u64 {
         return Err(Error::Wire(format!("frame too large: {len} bytes")));
     }
@@ -83,10 +213,14 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
     header[4] = frame.frame_type as u8;
     w.write_all(&header)?;
     w.write_all(&frame.payload)?;
+    for s in &frame.sections {
+        w.write_all(s)?;
+    }
     Ok(())
 }
 
-/// Read one frame from a stream (blocking).
+/// Read one frame from a stream (blocking). The whole payload lands in one
+/// allocation; section views handed out by [`Frame::open`] share it.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let mut header = [0u8; 5];
     r.read_exact(&mut header)?;
@@ -97,7 +231,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let frame_type = FrameType::from_u8(header[4])?;
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)?;
-    Ok(Frame { frame_type, payload })
+    Ok(Frame { frame_type, payload: Bytes::from_vec(payload), sections: Vec::new() })
 }
 
 #[cfg(test)]
@@ -114,6 +248,70 @@ mod tests {
         let got = read_frame(&mut Cursor::new(&buf)).unwrap();
         assert_eq!(got, frame);
         assert_eq!(got.value().unwrap(), v);
+    }
+
+    #[test]
+    fn roundtrip_frame_with_sections() {
+        let body = Bytes::from_vec(vec![0xAA; 37]);
+        let props = Bytes::from_vec(vec![0xBB; 5]);
+        let env = Value::map([
+            ("kind", Value::str("deliver")),
+            ("props_len", Value::from(props.len())),
+            ("body_len", Value::from(body.len())),
+        ]);
+        let frame = Frame::data_with_sections(&env, vec![props.clone(), body.clone()]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got, frame, "wire image must match regardless of section split");
+
+        let (env2, mut sections) = got.open().unwrap();
+        assert_eq!(env2, env);
+        let p = sections.take(env2.get_u64("props_len").unwrap() as usize).unwrap();
+        let b = sections.take(env2.get_u64("body_len").unwrap() as usize).unwrap();
+        sections.finish().unwrap();
+        assert_eq!(p, props);
+        assert_eq!(b, body);
+        // Both sections of a read frame are views of ONE receive buffer.
+        assert!(Bytes::same_buffer(&p, &b));
+    }
+
+    #[test]
+    fn local_frame_sections_share_original_buffers() {
+        let body = Bytes::from_vec(vec![1, 2, 3]);
+        let env = Value::map([("body_len", Value::from(body.len()))]);
+        let frame = Frame::data_with_sections(&env, vec![body.clone()]);
+        let (_, mut sections) = frame.open().unwrap();
+        let got = sections.take(3).unwrap();
+        sections.finish().unwrap();
+        assert!(Bytes::same_buffer(&got, &body), "in-proc path must not copy sections");
+    }
+
+    #[test]
+    fn section_cursor_rejects_bad_lengths() {
+        let body = Bytes::from_vec(vec![1, 2, 3]);
+        let env = Value::map([("body_len", Value::from(body.len()))]);
+        // Attached-list path: declared length disagrees with the section.
+        let frame = Frame::data_with_sections(&env, vec![body.clone()]);
+        let (_, mut sections) = frame.open().unwrap();
+        assert!(sections.take(2).is_err());
+        // Stream path: declared length exceeds the remaining payload.
+        let frame = Frame::data_with_sections(&env, vec![body]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        let (_, mut sections) = got.open().unwrap();
+        assert!(sections.take(64).is_err());
+    }
+
+    #[test]
+    fn unconsumed_sections_rejected_by_finish() {
+        let frame = Frame::data_with_sections(
+            &Value::map([("x", Value::I64(1))]),
+            vec![Bytes::from_vec(vec![9])],
+        );
+        let (_, sections) = frame.open().unwrap();
+        assert!(sections.finish().is_err());
     }
 
     #[test]

@@ -7,12 +7,18 @@
 //! bodies, process checkpoints and broker protocol messages. This mirrors
 //! kiwiPy, where all message bodies pass through a single (msgpack/pickle)
 //! encoder.
+//!
+//! Message *bodies* are encoded to [`Bytes`] exactly once, at the
+//! publisher; the broker, WAL and fanout deliveries share that buffer by
+//! refcount and consumers decode on demand (see [`bytes`]).
 
+pub mod bytes;
 pub mod codec;
 pub mod frame;
 pub mod json;
 pub mod value;
 
+pub use bytes::Bytes;
 pub use codec::{decode, encode, encoded_len};
-pub use frame::{read_frame, write_frame, Frame, FrameType, MAX_FRAME_LEN};
+pub use frame::{read_frame, write_frame, Frame, FrameType, SectionCursor, MAX_FRAME_LEN};
 pub use value::Value;

@@ -129,7 +129,7 @@ fn checkpoint_continue_resumes_where_left_off() {
 #[test]
 fn hung_consumer_evicted_under_load() {
     use kiwi::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
-    use kiwi::wire::{Frame, FrameType};
+    use kiwi::wire::FrameType;
 
     let broker = InprocBroker::new();
     let client = RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap();
@@ -138,7 +138,7 @@ fn hung_consumer_evicted_under_load() {
     // delivery, then fall silent (no heartbeats, no acks, link open).
     let hung_link = broker.connect();
     let send = |req: &ClientRequest, id: u64| {
-        hung_link.send(&Frame::data(&req.to_value(id))).unwrap();
+        hung_link.send(&req.to_frame(id)).unwrap();
     };
     send(&ClientRequest::Hello { client_id: "hung".into(), heartbeat_ms: 50 }, 1);
     send(
@@ -164,7 +164,7 @@ fn hung_consumer_evicted_under_load() {
         match hung_link.recv_timeout(Duration::from_millis(100)) {
             Ok(f) if f.frame_type == FrameType::Data => {
                 if matches!(
-                    ServerMsg::from_value(&f.value().unwrap()).unwrap(),
+                    ServerMsg::from_frame(&f).unwrap(),
                     ServerMsg::Deliver(_)
                 ) {
                     break;
@@ -237,8 +237,8 @@ fn mid_batch_consumer_death_redelivers_in_order_exactly_once() {
                 &ClientRequest::Publish {
                     exchange: "".into(),
                     routing_key: "redeliver.q".into(),
-                    body: Arc::new(Value::I64(i)),
-                    props: MessageProps::default(),
+                    body: kiwi::wire::Bytes::encode(&Value::I64(i)),
+                    props: MessageProps::default().into(),
                     mandatory: true,
                 },
             )
@@ -285,7 +285,8 @@ fn mid_batch_consumer_death_redelivers_in_order_exactly_once() {
         )
         .unwrap();
     let redelivered = drain(&rx2, 34);
-    let bodies: Vec<i64> = redelivered.iter().map(|d| d.body.as_i64().unwrap()).collect();
+    let bodies: Vec<i64> =
+        redelivered.iter().map(|d| d.body.decode().unwrap().as_i64().unwrap()).collect();
     assert_eq!(bodies, (6..40).collect::<Vec<i64>>(), "redelivery must preserve FIFO order");
     assert!(redelivered.iter().all(|d| d.redelivered), "all must be marked redelivered");
     let mut unique = bodies.clone();

@@ -1,0 +1,146 @@
+//! End-to-end pins for the zero-copy payload path (encode-once invariant).
+//!
+//! The client encodes a message body to `wire::Bytes` exactly once at
+//! publish. These tests assert — by buffer identity, not just content —
+//! that the same allocation travels through framing, the broker's queues,
+//! fanout to N consumers and the WAL, with consumers decoding on demand.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::persistence::{SyncPolicy, WalPersister};
+use kiwi::broker::protocol::{
+    ClientRequest, EncodedProps, ExchangeKind, MessageProps, QueueOptions,
+};
+use kiwi::broker::InprocBroker;
+use kiwi::transport::{Connection, ConnectionConfig};
+use kiwi::wire::{Bytes, Value};
+
+fn open(broker: &InprocBroker) -> Connection {
+    Connection::open(broker.connect(), ConnectionConfig::default()).unwrap()
+}
+
+/// One publish fanned out to N subscribers delivers N bodies that are all
+/// refcounted views of the publisher's single encode — through the full
+/// stack (client framing → session → shards → dispatcher → session writer
+/// → client reader), not just the broker core.
+#[test]
+fn fanout_delivers_the_publishers_exact_buffer_end_to_end() {
+    const SUBS: usize = 4;
+    let broker = InprocBroker::new();
+    let publisher = open(&broker);
+    publisher
+        .request(&ClientRequest::ExchangeDeclare {
+            exchange: "fan".into(),
+            kind: ExchangeKind::Fanout,
+        })
+        .unwrap();
+
+    let subs: Vec<Connection> = (0..SUBS).map(|_| open(&broker)).collect();
+    let (tx, rx) = channel();
+    for (i, sub) in subs.iter().enumerate() {
+        let q = format!("fan.q{i}");
+        sub.request(&ClientRequest::QueueDeclare {
+            queue: q.clone(),
+            options: QueueOptions::default(),
+        })
+        .unwrap();
+        sub.request(&ClientRequest::Bind {
+            exchange: "fan".into(),
+            queue: q.clone(),
+            routing_key: "".into(),
+        })
+        .unwrap();
+        let tx = tx.clone();
+        sub.consume(&q, &format!("c{i}"), 0, Box::new(move |d| tx.send(d).unwrap())).unwrap();
+    }
+
+    // The single encode of this payload's lifetime.
+    let body = Bytes::encode(&Value::map([("blob", Value::Bytes(vec![0x5A; 128 * 1024]))]));
+    let props: EncodedProps = MessageProps { priority: 4, ..Default::default() }.into();
+    publisher
+        .request(&ClientRequest::Publish {
+            exchange: "fan".into(),
+            routing_key: "".into(),
+            body: body.clone(),
+            props: props.clone(),
+            mandatory: true,
+        })
+        .unwrap();
+
+    for _ in 0..SUBS {
+        let d = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(d.body, body, "delivered content must match");
+        assert!(
+            Bytes::same_buffer(&d.body, &body),
+            "delivered body must BE the publisher's single encode (zero copies)"
+        );
+        assert!(
+            Bytes::same_buffer(d.props.bytes(), props.bytes()),
+            "props encoding must be shared across deliveries, not rebuilt"
+        );
+        assert_eq!(d.props.props().priority, 4, "lazy-decoded props stay correct");
+    }
+    assert!(rx.recv_timeout(Duration::from_millis(100)).is_err(), "exactly one copy each");
+
+    for s in &subs {
+        s.close();
+    }
+    publisher.close();
+}
+
+/// Durable publishes survive a broker restart with payload bytes that are
+/// byte-identical to the publisher's encoding: the WAL appends the encoded
+/// body verbatim and recovery hands the same bytes back — no
+/// decode → re-encode round trip anywhere in the loop.
+#[test]
+fn durable_publish_survives_restart_with_identical_bytes() {
+    let wal =
+        std::env::temp_dir().join(format!("kiwi-payload-path-{}.wal", std::process::id()));
+    std::fs::remove_file(&wal).ok();
+
+    let body = Bytes::encode(&Value::map([
+        ("data", Value::Bytes((0..=255u8).cycle().take(70_000).collect())),
+        ("tensor", Value::F32s(vec![0.25; 512])),
+    ]));
+    {
+        let (p, recovered) = WalPersister::open(&wal, SyncPolicy::Always).unwrap();
+        let inproc =
+            InprocBroker::with_broker(BrokerHandle::with_persister(Box::new(p), recovered));
+        let conn = open(&inproc);
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: "dq".into(),
+            options: QueueOptions::durable(),
+        })
+        .unwrap();
+        conn.request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "dq".into(),
+            body: body.clone(),
+            props: MessageProps { persistent: true, ..Default::default() }.into(),
+            mandatory: true,
+        })
+        .unwrap();
+        conn.close();
+        inproc.broker().sync().unwrap();
+    }
+
+    // "Restart": replay the WAL into a fresh broker and consume.
+    let (p, recovered) = WalPersister::open(&wal, SyncPolicy::Always).unwrap();
+    assert_eq!(recovered.message_count(), 1);
+    assert_eq!(
+        recovered.messages["dq"][0].body.as_slice(),
+        body.as_slice(),
+        "recovered payload must be byte-identical to the published encoding"
+    );
+    let inproc = InprocBroker::with_broker(BrokerHandle::with_persister(Box::new(p), recovered));
+    let conn = open(&inproc);
+    let (tx, rx) = channel();
+    conn.consume("dq", "c", 0, Box::new(move |d| tx.send(d).unwrap())).unwrap();
+    let d = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(d.body.as_slice(), body.as_slice(), "delivery after recovery is byte-identical");
+    assert_eq!(d.body.decode().unwrap(), body.decode().unwrap());
+    conn.close();
+    std::fs::remove_file(&wal).ok();
+}
