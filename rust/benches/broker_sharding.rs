@@ -23,11 +23,11 @@ const QUEUES: usize = 8;
 const PUBLISHERS: usize = 4;
 const TOTAL_MSGS: usize = 24_000; // divisible by QUEUES and PUBLISHERS
 
-fn run_case(shards: usize, delivery_batch: usize) -> (f64, Duration) {
+fn run_case(shards: usize, delivery_batch: usize) -> (f64, Duration, u64, u64) {
     let broker = BrokerHandle::with_config(
         Box::new(NoopPersister),
         RecoveredState::default(),
-        BrokerConfig { shards, delivery_batch },
+        BrokerConfig { shards, delivery_batch, ..Default::default() },
     );
     let per_queue = TOTAL_MSGS / QUEUES;
     let mut drainers = Vec::new();
@@ -105,7 +105,12 @@ fn run_case(shards: usize, delivery_batch: usize) -> (f64, Duration) {
         h.join().unwrap();
     }
     let elapsed = t0.elapsed();
-    (TOTAL_MSGS as f64 / elapsed.as_secs_f64(), elapsed)
+    (
+        TOTAL_MSGS as f64 / elapsed.as_secs_f64(),
+        elapsed,
+        broker.metrics().counter("broker.route_cache_hits_total").get(),
+        broker.metrics().counter("broker.route_cache_misses_total").get(),
+    )
 }
 
 fn main() {
@@ -117,21 +122,33 @@ fn main() {
             "E-shard contended throughput ({TOTAL_MSGS} msgs, {QUEUES} queues, \
              {PUBLISHERS} publishers, batch 64)"
         ),
-        &["shards", "msgs/s", "wall"],
+        &["shards", "msgs/s", "wall", "rc_hits", "rc_misses"],
     );
     for &shards in &[1usize, 2, 4, 8] {
-        let (thpt, wall) = run_case(shards, 64);
-        table.row(&[shards.to_string(), format!("{thpt:.0}"), format!("{wall:.2?}")]);
+        let (thpt, wall, hits, misses) = run_case(shards, 64);
+        table.row(&[
+            shards.to_string(),
+            format!("{thpt:.0}"),
+            format!("{wall:.2?}"),
+            hits.to_string(),
+            misses.to_string(),
+        ]);
     }
     table.emit();
 
     let mut table = Table::new(
         "E-shard delivery-batch sweep (shards=4)",
-        &["batch", "msgs/s", "wall"],
+        &["batch", "msgs/s", "wall", "rc_hits", "rc_misses"],
     );
     for &batch in &[1usize, 8, 64, 256] {
-        let (thpt, wall) = run_case(4, batch);
-        table.row(&[batch.to_string(), format!("{thpt:.0}"), format!("{wall:.2?}")]);
+        let (thpt, wall, hits, misses) = run_case(4, batch);
+        table.row(&[
+            batch.to_string(),
+            format!("{thpt:.0}"),
+            format!("{wall:.2?}"),
+            hits.to_string(),
+            misses.to_string(),
+        ]);
     }
     table.emit();
 

@@ -1,0 +1,247 @@
+//! §Perf — topic routing: the trie index + interned route cache vs the
+//! seed linear-scan matcher (every binding through the `topic_matches`
+//! DP table).
+//!
+//! Sweeps bindings ∈ {16, 256, 4096} × key depth ∈ {3, 6} × mode:
+//!
+//! * `seed-linear`   — the seed's routing: scan all bindings with the
+//!   retained reference DP matcher, clone matches into `Vec<String>`.
+//! * `trie`          — trie-indexed resolution, cache disabled
+//!   (`route_cache_cap = 0`): the cache-miss resolution cost.
+//! * `cache-miss`    — trie resolution + cache fill, each key seen once.
+//! * `cache-hit`     — warm cache: one map probe + one atomic generation
+//!   load + a refcount bump; zero allocations.
+//!
+//! Emits the usual table + CSV, a consolidated machine-readable
+//! `target/bench-results/BENCH_routing.json` (the perf-trajectory
+//! artifact the CI smoke job uploads), and the
+//! `broker.route_cache_hits_total` / `route_cache_misses_total` counters.
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks the measurement budget so CI can run this
+//! as a regression tripwire rather than a measurement.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use kiwi::benchutil::{bench, bench_n, BenchResult, Table};
+use kiwi::broker::exchange::topic_matches;
+use kiwi::broker::protocol::ExchangeKind;
+use kiwi::broker::router::Router;
+use kiwi::metrics::Registry;
+use kiwi::wire::{json, Value};
+
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// The seed matcher: a flat binding list scanned end to end per route,
+/// results converted to owned `String`s exactly like the seed
+/// `Router::route` did.
+struct LinearMatcher {
+    bindings: Vec<(String, String)>,
+}
+
+impl LinearMatcher {
+    fn route(&self, key: &str) -> Vec<String> {
+        let mut seen = BTreeSet::new();
+        self.bindings
+            .iter()
+            .filter(|(pat, q)| topic_matches(pat, key) && seen.insert(q.as_str()))
+            .map(|(_, q)| q.clone())
+            .collect()
+    }
+}
+
+/// AiiDA-shaped workload: mostly process-specific literal patterns
+/// (`proc.{i}.terminated`-style, padded to `depth` words), plus a few
+/// wildcard audit subscriptions that match broad key classes.
+fn make_bindings(n: usize, depth: usize) -> Vec<(String, String)> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut words: Vec<String> = vec!["proc".into(), i.to_string(), "done".into()];
+        while words.len() < depth {
+            words.push(format!("s{}", words.len()));
+        }
+        let queue = format!("q{i}");
+        if i % 64 == 63 {
+            // Wildcard audit subscription: one word replaced by '*'.
+            words[1] = "*".into();
+        } else if i % 256 == 129 {
+            // Firehose subscription.
+            words = vec!["proc".into(), "#".into()];
+        }
+        out.push((words.join("."), queue));
+    }
+    out
+}
+
+fn make_key(i: usize, n: usize, depth: usize) -> String {
+    let mut words: Vec<String> = vec!["proc".into(), (i % n).to_string(), "done".into()];
+    while words.len() < depth {
+        words.push(format!("s{}", words.len()));
+    }
+    words.join(".")
+}
+
+fn build_router(cap: usize, bindings: &[(String, String)], registry: &Registry) -> Router {
+    let router = Router::with_cache(
+        cap,
+        registry.counter("broker.route_cache_hits_total"),
+        registry.counter("broker.route_cache_misses_total"),
+    );
+    router.declare_exchange("bench", ExchangeKind::Topic).unwrap();
+    for (pat, q) in bindings {
+        router.register_queue(q);
+        router.bind("bench", q, pat).unwrap();
+    }
+    router
+}
+
+struct Case {
+    bindings: usize,
+    depth: usize,
+    mode: &'static str,
+    result: BenchResult,
+    speedup: f64,
+}
+
+fn main() {
+    let target = if smoke() { Duration::from_millis(15) } else { Duration::from_millis(250) };
+    let mut table = Table::new(
+        "Perf: topic routing (trie + route cache vs seed linear scan)",
+        &["bindings", "depth", "mode", "mean", "routes/s", "speedup vs seed"],
+    );
+    let mut cases: Vec<Case> = Vec::new();
+    let registry = Registry::new();
+
+    for &nbind in &[16usize, 256, 4096] {
+        for &depth in &[3usize, 6] {
+            let bindings = make_bindings(nbind, depth);
+            let linear = LinearMatcher { bindings: bindings.clone() };
+            // Pre-built key pool so every mode measures routing, not
+            // key construction.
+            let keys: Vec<String> =
+                (0..1024).map(|i| make_key(i, nbind, depth)).collect();
+
+            // Baseline: the seed linear scan.
+            let mut i = 0usize;
+            let seed_result = bench(&format!("seed b{nbind} d{depth}"), target, || {
+                let key = &keys[i % keys.len()];
+                i += 1;
+                std::hint::black_box(linear.route(key));
+            });
+            let seed_ns = seed_result.mean().as_nanos().max(1) as f64;
+
+            // Trie, cache disabled: pure resolution cost.
+            let router = build_router(0, &bindings, &registry);
+            let mut i = 0usize;
+            let trie_result = bench(&format!("trie b{nbind} d{depth}"), target, || {
+                let key = &keys[i % keys.len()];
+                i += 1;
+                std::hint::black_box(router.route("bench", key).unwrap());
+            });
+
+            // Cache miss: every key seen exactly once (fill path). A
+            // fixed iteration count bounded by the key list keeps each
+            // measured route a genuine miss; keys are pre-built so the
+            // measurement is the route itself, as in the other modes.
+            let miss_iters: u64 = if smoke() { 2_000 } else { 100_000 };
+            let miss_keys: Vec<String> =
+                (0..miss_iters).map(|i| format!("proc.m{i}.done")).collect();
+            let router = build_router(usize::MAX, &bindings, &registry);
+            let mut i = 0usize;
+            let miss_result = bench_n(&format!("miss b{nbind} d{depth}"), 0, miss_iters, || {
+                let key = &miss_keys[i];
+                i += 1;
+                std::hint::black_box(router.route("bench", key).unwrap());
+            });
+
+            // Cache hit: 16 hot keys, warm.
+            let router = build_router(4096, &bindings, &registry);
+            let hot_keys: Vec<String> =
+                (0..16).map(|i| make_key(i, nbind, depth)).collect();
+            for key in &hot_keys {
+                router.route("bench", key).unwrap();
+            }
+            let mut i = 0usize;
+            let hit_result = bench(&format!("hit b{nbind} d{depth}"), target, || {
+                let key = &hot_keys[i % hot_keys.len()];
+                i += 1;
+                std::hint::black_box(router.route("bench", key).unwrap());
+            });
+
+            for (mode, result) in [
+                ("seed-linear", seed_result),
+                ("trie", trie_result),
+                ("cache-miss", miss_result),
+                ("cache-hit", hit_result),
+            ] {
+                let speedup = seed_ns / result.mean().as_nanos().max(1) as f64;
+                table.row(&[
+                    nbind.to_string(),
+                    depth.to_string(),
+                    mode.into(),
+                    format!("{:.2?}", result.mean()),
+                    format!("{:.0}", result.throughput()),
+                    format!("{speedup:.1}x"),
+                ]);
+                cases.push(Case { bindings: nbind, depth, mode, result, speedup });
+            }
+        }
+    }
+    table.emit();
+
+    let hits = registry.counter("broker.route_cache_hits_total").get();
+    let misses = registry.counter("broker.route_cache_misses_total").get();
+    println!(
+        "route cache counters across the run: broker.route_cache_hits_total={hits} \
+         broker.route_cache_misses_total={misses}"
+    );
+
+    // Consolidated machine-readable summary: the perf-trajectory record.
+    let json_cases: Vec<Value> = cases
+        .iter()
+        .map(|c| {
+            Value::map([
+                ("bindings", Value::from(c.bindings)),
+                ("depth", Value::from(c.depth)),
+                ("mode", Value::from(c.mode)),
+                ("mean_ns", Value::from(c.result.mean().as_nanos() as u64)),
+                ("p99_ns", Value::from(c.result.p99().as_nanos() as u64)),
+                ("routes_per_s", Value::from(c.result.throughput())),
+                ("speedup_vs_seed", Value::from(c.speedup)),
+            ])
+        })
+        .collect();
+    let summary = Value::map([
+        ("bench", Value::from("topic_routing")),
+        ("smoke", Value::from(smoke())),
+        ("cases", Value::List(json_cases)),
+        (
+            "route_cache",
+            Value::map([("hits", Value::from(hits)), ("misses", Value::from(misses))]),
+        ),
+    ]);
+    let path = std::path::Path::new("target/bench-results/BENCH_routing.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(path, json::to_string(&summary)) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+
+    // The acceptance gate this bench exists to demonstrate.
+    for c in cases.iter().filter(|c| c.bindings == 4096 && c.mode == "cache-hit") {
+        println!(
+            "gate: cache-hit at 4096 bindings depth {} is {:.0}x the seed linear scan \
+             (target ≥ 10x)",
+            c.depth, c.speedup
+        );
+    }
+    println!(
+        "\nexpected shape: seed-linear degrades linearly with binding count;\n\
+         trie resolution tracks key depth instead, and cache-hit is flat —\n\
+         a hash probe + atomic load + refcount bump, independent of both."
+    );
+}

@@ -5,7 +5,10 @@
 //! into three parts:
 //!
 //! * [`super::router`] — exchange/binding resolution behind read-mostly
-//!   `RwLock`s (publishes only take read locks here);
+//!   `RwLock`s (publishes only take read locks here), with a trie-indexed
+//!   topic matcher and a generation-invalidated route cache in front, so
+//!   a hot-key publish learns its targets from one cache probe — no
+//!   binding scan, no allocation;
 //! * [`super::shard`] — N independent queue shards (hash of queue name →
 //!   shard), each a `Mutex` over its queues, delivery index and delivery
 //!   targets, so traffic to different queues never contends;
@@ -44,8 +47,9 @@ use crate::wire::{Bytes, Value};
 /// Identifies one client connection to the broker.
 pub type ConnectionId = u64;
 
-/// Broker tuning knobs: how many queue shards to run and how many
-/// messages the dispatcher drains per shard-lock acquisition.
+/// Broker tuning knobs: how many queue shards to run, how many messages
+/// the dispatcher drains per shard-lock acquisition, and how many routes
+/// the router may cache.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BrokerConfig {
     /// Number of queue shards. Queues hash onto shards; publishes to
@@ -55,11 +59,19 @@ pub struct BrokerConfig {
     /// Max deliveries handed out per shard-lock acquisition (and per
     /// coalesced `DeliverBatch` frame).
     pub delivery_batch: usize,
+    /// Route-cache capacity: `(exchange, routing_key) → targets` entries
+    /// kept by the router. 0 disables the cache (every publish resolves
+    /// against the exchange tables — seed behaviour, the bench baseline).
+    pub route_cache_cap: usize,
 }
 
 impl Default for BrokerConfig {
     fn default() -> Self {
-        BrokerConfig { shards: default_shards(), delivery_batch: 64 }
+        BrokerConfig {
+            shards: default_shards(),
+            delivery_batch: 64,
+            route_cache_cap: crate::broker::router::DEFAULT_ROUTE_CACHE_CAP,
+        }
     }
 }
 
@@ -158,7 +170,11 @@ impl BrokerHandle {
     ) -> Self {
         let now = Instant::now();
         let metrics = Registry::new();
-        let router = Router::new();
+        let router = Router::with_cache(
+            config.route_cache_cap,
+            metrics.counter("broker.route_cache_hits_total"),
+            metrics.counter("broker.route_cache_misses_total"),
+        );
         let shards = ShardSet::new(config.shards);
         let mut next_msg = 1u64;
         for msgs in recovered.messages.values() {
@@ -167,7 +183,10 @@ impl BrokerHandle {
             }
         }
         for (name, options) in &recovered.queues {
-            let mut q = Queue::new(name, options.clone(), None);
+            // Intern first: the router's handle is the queue's name and
+            // the shard-map key — one allocation per queue name, ever.
+            let qname = router.register_queue(name);
+            let mut q = Queue::new(Arc::clone(&qname), options.clone(), None);
             if let Some(msgs) = recovered.messages.get(name) {
                 for mut m in msgs.iter().cloned() {
                     crate::broker::persistence::rearm_deadline(&mut m, options.default_ttl_ms, now);
@@ -177,8 +196,7 @@ impl BrokerHandle {
                 // this process's traffic.
                 q.published = 0;
             }
-            shards.shard_for(name).lock().queues.insert(name.clone(), q);
-            router.register_queue(name);
+            shards.shard_for(name).lock().queues.insert(qname, q);
         }
         let dispatcher = Dispatcher::new(config.delivery_batch, shards.len(), &metrics);
         let ctr_published = metrics.counter("broker.published");
@@ -259,7 +277,7 @@ impl BrokerHandle {
             }
         }
         let mut requeued = 0usize;
-        let mut touched: Vec<String> = Vec::new();
+        let mut touched: Vec<Arc<str>> = Vec::new();
         for shard in core.shards.iter() {
             let (n, t) = shard.lock().drop_connection(conn);
             requeued += n;
@@ -279,7 +297,7 @@ impl BrokerHandle {
         for name in &exclusive {
             self.delete_queue_guarded(name, Some(conn)).ok();
         }
-        touched.retain(|q| !exclusive.contains(q));
+        touched.retain(|q| !exclusive.iter().any(|e| e.as_str() == &**q));
         self.run_dispatches(touched);
     }
 
@@ -319,7 +337,7 @@ impl BrokerHandle {
 
     /// Pump every queue named in `dispatches` (deduplicated). Runs with no
     /// locks held; the dispatcher takes each queue's shard lock itself.
-    fn run_dispatches(&self, mut dispatches: Vec<String>) {
+    fn run_dispatches(&self, mut dispatches: Vec<Arc<str>>) {
         if dispatches.is_empty() {
             return;
         }
@@ -336,7 +354,7 @@ impl BrokerHandle {
         &self,
         conn: ConnectionId,
         req: &ClientRequest,
-        dispatches: &mut Vec<String>,
+        dispatches: &mut Vec<Arc<str>>,
     ) -> Result<Value> {
         let core = &*self.core;
         let Some(entry) = core.connections.get(conn) else {
@@ -353,7 +371,7 @@ impl BrokerHandle {
                 self.declare_queue(&entry, queue, options.clone())?;
                 let (ready, consumers) = {
                     let st = core.shards.shard_for(queue).lock();
-                    match st.queues.get(queue) {
+                    match st.queues.get(queue.as_str()) {
                         Some(q) => (q.ready_len(), q.consumer_count()),
                         None => (0, 0), // deleted concurrently
                     }
@@ -373,7 +391,7 @@ impl BrokerHandle {
                     let mut st = core.shards.shard_for(queue).lock();
                     let q = st
                         .queues
-                        .get_mut(queue)
+                        .get_mut(queue.as_str())
                         .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
                     (q.purge(), q.options.durable)
                 };
@@ -416,12 +434,12 @@ impl BrokerHandle {
                 if ci.contains_key(consumer_tag) {
                     return Err(Error::DuplicateSubscriber(consumer_tag.clone()));
                 }
-                {
+                let qname = {
                     let mut st = core.shards.shard_for(queue).lock();
-                    {
+                    let qname = {
                         let q = st
                             .queues
-                            .get_mut(queue)
+                            .get_mut(queue.as_str())
                             .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
                         if let Some(owner) = q.owner {
                             if owner != conn {
@@ -436,9 +454,13 @@ impl BrokerHandle {
                             prefetch: *prefetch,
                             in_flight: 0,
                         });
-                    }
+                        // The queue's own interned handle — no router
+                        // lookup needed to name the dispatch below.
+                        q.name.clone()
+                    };
                     st.conns.insert(conn, Arc::clone(&entry));
-                }
+                    qname
+                };
                 ci.insert(consumer_tag.clone(), queue.clone());
                 drop(ci);
                 entry.consumer_tags.lock().unwrap().insert(consumer_tag.clone());
@@ -453,7 +475,7 @@ impl BrokerHandle {
                     self.remove_consumer(conn, consumer_tag, queue);
                     return Err(Error::Closed(format!("unknown connection {conn}")));
                 }
-                dispatches.push(queue.clone());
+                dispatches.push(qname);
                 Ok(Value::Null)
             }
             ClientRequest::Cancel { consumer_tag } => {
@@ -464,7 +486,7 @@ impl BrokerHandle {
                 entry.consumer_tags.lock().unwrap().remove(consumer_tag);
                 let auto_delete = {
                     let mut st = core.shards.shard_for(&queue).lock();
-                    match st.queues.get_mut(&queue) {
+                    match st.queues.get_mut(queue.as_str()) {
                         Some(q) => {
                             q.remove_consumer(consumer_tag);
                             q.options.auto_delete && q.consumer_count() == 0
@@ -518,7 +540,7 @@ impl BrokerHandle {
                         st.queues.values().map(|q| q.ready_len() as i64).sum(),
                     );
                     for (k, q) in &st.queues {
-                        queue_stats.insert(k.clone(), q.stats());
+                        queue_stats.insert(k.to_string(), q.stats());
                     }
                 }
                 Ok(Value::map([
@@ -538,7 +560,7 @@ impl BrokerHandle {
 
     /// Ack one delivery tag (idempotent). Routes to the owning shard via
     /// the tag's stride encoding.
-    fn ack_tag(&self, tag: u64, dispatches: &mut Vec<String>) -> Result<()> {
+    fn ack_tag(&self, tag: u64, dispatches: &mut Vec<Arc<str>>) -> Result<()> {
         let core = &*self.core;
         let outcome = {
             let mut st = core.shards.shard_for_tag(tag).lock();
@@ -563,7 +585,7 @@ impl BrokerHandle {
     /// Ack a batch of delivery tags: each shard is locked once for its
     /// share, and durable retirements are WAL-logged as one batch (single
     /// flush) per queue instead of one write per tag.
-    fn ack_many(&self, tags: &[u64], dispatches: &mut Vec<String>) -> Result<()> {
+    fn ack_many(&self, tags: &[u64], dispatches: &mut Vec<Arc<str>>) -> Result<()> {
         let core = &*self.core;
         let mut by_shard: Vec<(usize, Vec<u64>)> = Vec::new();
         for tag in tags {
@@ -576,7 +598,7 @@ impl BrokerHandle {
         for (i, shard_tags) in by_shard {
             let mut acked = 0u64;
             // queue -> durable msg ids to retire as one WAL batch.
-            let mut retires: Vec<(String, Vec<u64>)> = Vec::new();
+            let mut retires: Vec<(Arc<str>, Vec<u64>)> = Vec::new();
             {
                 let mut st = core.shards.get(i).lock();
                 for tag in shard_tags {
@@ -627,7 +649,7 @@ impl BrokerHandle {
         let core = &*self.core;
         let now = Instant::now();
         for shard in core.shards.iter() {
-            let mut retired: Vec<(String, Vec<u64>)> = Vec::new();
+            let mut retired: Vec<(Arc<str>, Vec<u64>)> = Vec::new();
             {
                 let mut st = shard.lock();
                 for (name, q) in st.queues.iter_mut() {
@@ -709,7 +731,7 @@ impl BrokerHandle {
             return Err(Error::Broker("queue name must not be empty".into()));
         }
         let core = &*self.core;
-        let created_owner = {
+        let (created_owner, qname) = {
             let mut st = core.shards.shard_for(name).lock();
             if let Some(existing) = st.queues.get(name) {
                 if let Some(owner) = existing.owner {
@@ -728,10 +750,16 @@ impl BrokerHandle {
             if owner.is_some() {
                 entry.exclusive_queues.lock().unwrap().insert(name.to_string());
             }
-            st.queues.insert(name.to_string(), Queue::new(name, options, owner));
-            owner
+            // One allocation for the queue's whole lifetime: the same
+            // handle is the shard-map key, the queue's name, and (after
+            // the shard lock drops — lock order: router is never taken
+            // inside a shard lock) the router's interned entry that
+            // bindings and cached routes will share.
+            let qname: Arc<str> = Arc::from(name);
+            st.queues.insert(Arc::clone(&qname), Queue::new(Arc::clone(&qname), options, owner));
+            (owner, qname)
         };
-        core.router.register_queue(name);
+        core.router.register_queue_arc(qname);
         // Teardown race: if the owning connection disconnected while we were
         // creating its exclusive queue, nobody will ever delete it (the
         // disconnect drained `exclusive_queues` before our insert) — mirror
@@ -773,7 +801,7 @@ impl BrokerHandle {
             let Some(q) = st.queues.remove(name) else {
                 return Err(Error::Broker(format!("no such queue '{name}'")));
             };
-            st.delivery_index.retain(|_, qname| qname != name);
+            st.delivery_index.retain(|_, qname| &**qname != name);
             for c in q.consumers() {
                 ci.remove(&c.consumer_tag);
                 if let Some(e) = st.conns.get(&c.connection) {
@@ -806,9 +834,11 @@ impl BrokerHandle {
         routing_key: &str,
         body: Bytes,
         props: EncodedProps,
-        dispatches: &mut Vec<String>,
+        dispatches: &mut Vec<Arc<str>>,
     ) -> Result<usize> {
         let core = &*self.core;
+        // A cache hit hands back the interned `Arc<[Arc<str>]>` — zero
+        // allocations and no exchange-table lock to learn the targets.
         let targets = core.router.route(exchange, routing_key)?;
         if targets.is_empty() {
             return Ok(0);
@@ -817,23 +847,23 @@ impl BrokerHandle {
         let routing_key: Arc<str> = Arc::from(routing_key);
         let now = Instant::now();
         // Group targets by shard so each shard is locked exactly once.
-        let mut by_shard: Vec<(usize, Vec<&str>)> = Vec::new();
-        for t in &targets {
+        let mut by_shard: Vec<(usize, Vec<&Arc<str>>)> = Vec::new();
+        for t in targets.iter() {
             let i = core.shards.index_for(t);
             match by_shard.iter_mut().find(|(s, _)| *s == i) {
                 Some((_, names)) => names.push(t),
-                None => by_shard.push((i, vec![t.as_str()])),
+                None => by_shard.push((i, vec![t])),
             }
         }
         let mut routed = 0usize;
         for (i, names) in by_shard {
             let mut st = core.shards.get(i).lock();
-            let mut to_enqueue: Vec<(String, QueuedMessage, bool)> = Vec::new();
+            let mut to_enqueue: Vec<(Arc<str>, QueuedMessage, bool)> = Vec::new();
             for qname in names {
-                let Some(q) = st.queues.get(qname) else { continue }; // raced a delete
+                let Some(q) = st.queues.get(&**qname) else { continue }; // raced a delete
                 let msg_id = core.next_msg.fetch_add(1, Ordering::Relaxed);
                 to_enqueue.push((
-                    qname.to_string(),
+                    Arc::clone(qname),
                     QueuedMessage {
                         msg_id,
                         exchange: Arc::clone(&exchange),
@@ -863,7 +893,7 @@ impl BrokerHandle {
                 let wal_batch: Vec<(&str, &QueuedMessage)> = to_enqueue
                     .iter()
                     .filter(|(_, _, durable)| *durable)
-                    .map(|(q, m, _)| (q.as_str(), m))
+                    .map(|(q, m, _)| (&**q, m))
                     .collect();
                 if !wal_batch.is_empty() {
                     core.persister.lock().unwrap().record_publish_batch(&wal_batch)?;
@@ -1312,7 +1342,7 @@ mod tests {
         let broker = BrokerHandle::with_config(
             Box::new(NoopPersister),
             RecoveredState::default(),
-            BrokerConfig { shards: 4, delivery_batch: 16 },
+            BrokerConfig { shards: 4, delivery_batch: 16, ..Default::default() },
         );
         let (tx, rx) = channel();
         let conn = broker.connect("batch", 0, tx);
@@ -1361,11 +1391,96 @@ mod tests {
     }
 
     #[test]
+    fn topic_route_cache_never_serves_stale_routes() {
+        // Publishes between bind/unbind/queue-delete must see each change
+        // immediately even with the route cache on (generation bumps).
+        let (broker, conn, _rx) = setup();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::ExchangeDeclare {
+                    exchange: "ev".into(),
+                    kind: ExchangeKind::Topic,
+                },
+            )
+            .unwrap();
+        declare(&broker, conn, "q1");
+        declare(&broker, conn, "q2");
+        let publish_routed = |key: &str| -> u64 {
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::Publish {
+                        exchange: "ev".into(),
+                        routing_key: key.into(),
+                        body: Bytes::encode(&Value::Null),
+                        props: MessageProps::default().into(),
+                        mandatory: false,
+                    },
+                )
+                .unwrap()
+                .get_u64("routed")
+                .unwrap()
+        };
+        let bind = |q: &str, rk: &str| {
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::Bind {
+                        exchange: "ev".into(),
+                        queue: q.into(),
+                        routing_key: rk.into(),
+                    },
+                )
+                .unwrap();
+        };
+        assert_eq!(publish_routed("ev.a"), 0);
+        bind("q1", "ev.#");
+        assert_eq!(publish_routed("ev.a"), 1, "bind must invalidate the cached route");
+        bind("q2", "ev.*");
+        assert_eq!(publish_routed("ev.a"), 2);
+        // Warm the cache, check a hit is booked, then mutate again.
+        assert_eq!(publish_routed("ev.a"), 2);
+        assert!(broker.metrics().counter("broker.route_cache_hits_total").get() >= 1);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Unbind {
+                    exchange: "ev".into(),
+                    queue: "q1".into(),
+                    routing_key: "ev.#".into(),
+                },
+            )
+            .unwrap();
+        assert_eq!(publish_routed("ev.a"), 1, "unbind must invalidate the cached route");
+        broker.handle(conn, &ClientRequest::QueueDelete { queue: "q2".into() }).unwrap();
+        assert_eq!(publish_routed("ev.a"), 0, "queue delete must invalidate the cached route");
+    }
+
+    #[test]
+    fn route_cache_disabled_reproduces_seed_routing() {
+        let broker = BrokerHandle::with_config(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+            BrokerConfig { route_cache_cap: 0, ..Default::default() },
+        );
+        let (tx, rx) = channel();
+        let conn = broker.connect("nocache", 0, tx);
+        declare(&broker, conn, "tasks");
+        publish(&broker, conn, "tasks", Value::str("x"));
+        consume(&broker, conn, "tasks", "c1", 0);
+        let d = recv_delivery(&rx);
+        assert_eq!(d.body.decode().unwrap(), Value::str("x"));
+        assert_eq!(broker.metrics().counter("broker.route_cache_hits_total").get(), 0);
+        assert_eq!(broker.metrics().counter("broker.route_cache_misses_total").get(), 0);
+    }
+
+    #[test]
     fn queues_spread_across_shards_stay_independent() {
         let broker = BrokerHandle::with_config(
             Box::new(NoopPersister),
             RecoveredState::default(),
-            BrokerConfig { shards: 8, delivery_batch: 64 },
+            BrokerConfig { shards: 8, delivery_batch: 64, ..Default::default() },
         );
         let (tx, _rx) = channel();
         let conn = broker.connect("spread", 0, tx);

@@ -75,12 +75,12 @@ impl Dispatcher {
             {
                 let mut st = shard.lock();
                 let (queues, delivery_index, conns, mut tags) = st.for_dispatch();
-                let assignments = {
+                let (assignments, qarc) = {
                     let Some(q) = queues.get_mut(qname) else { return };
                     let assignments = q.assign_up_to(now, self.batch, || tags.next());
                     expired_ids = q.drain_expired_ids();
                     durable = q.options.durable;
-                    assignments
+                    (assignments, q.name.clone())
                 };
                 assigned = assignments.len();
                 // Group the batch per connection, preserving per-connection
@@ -90,7 +90,9 @@ impl Dispatcher {
                 // counting them here would double-book those bytes).
                 let mut groups: Vec<Group> = Vec::new();
                 for a in assignments {
-                    delivery_index.insert(a.delivery_tag, qname.to_string());
+                    // Interned handle: recording the delivery costs a
+                    // refcount bump, not a per-delivery String.
+                    delivery_index.insert(a.delivery_tag, qarc.clone());
                     let bytes = (a.message.body.len() + a.message.props.bytes().len()) as u64;
                     // Refcount bumps only — the body/props buffers are the
                     // publisher's original encode, shared with the queue's

@@ -2,8 +2,38 @@
 //! queues. Three kinds, mirroring AMQP: direct (exact key), fanout (all
 //! bindings), topic (dotted patterns with `*` = exactly one word and
 //! `#` = zero or more words).
+//!
+//! ## Indexing
+//!
+//! The seed implementation kept one flat `BTreeSet<(pattern, queue)>` and
+//! topic routing was a linear scan running the [`topic_matches`] DP table
+//! against *every* binding — O(bindings × |pattern| × |key|) per publish.
+//! The exchange is now indexed three ways:
+//!
+//! * **direct** — exact-key hash index (as before);
+//! * **topic** — a word-trie ([`TopicTrie`]): dot-separated words are
+//!   edges, `*`/`#` are dedicated wildcard edges, queues hang off the
+//!   node where their pattern ends. A route walks O(|key| words) trie
+//!   edges instead of scanning every binding.
+//! * **reverse** — `queue → {patterns}`, so deleting a queue unbinds it
+//!   in O(its own bindings) with no clone of the whole binding set, and
+//!   fanout routing is just the reverse index's key set.
+//!
+//! Queue names are [`Arc<str>`] handles interned by the router at declare
+//! time; every index entry is a refcount bump of the same allocation, and
+//! route results hand those `Arc`s back — no `String` is ever built on
+//! the publish path.
+//!
+//! Each mutation bumps a **generation counter** (an `Arc<AtomicU64>`
+//! shared with the router's route cache) — a cached route is valid
+//! exactly as long as the generation it was resolved under is current.
+//! [`topic_matches`] is retained verbatim as the reference matcher: the
+//! property suite drives random patterns/keys through both and the
+//! `topic_routing` bench uses it as the seed baseline.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::broker::protocol::ExchangeKind;
 
@@ -11,85 +41,284 @@ use crate::broker::protocol::ExchangeKind;
 pub struct Exchange {
     pub name: String,
     pub kind: ExchangeKind,
-    /// (routing_key_pattern, queue) pairs; a set so duplicate binds are
-    /// idempotent (AMQP behaviour).
-    bindings: BTreeSet<(String, String)>,
+    /// Reverse index: queue → the routing-key patterns bound to it. The
+    /// source of truth for bind idempotence (AMQP: duplicate binds are
+    /// no-ops), `unbind_queue`, and fanout routing (key set).
+    by_queue: HashMap<Arc<str>, BTreeSet<String>>,
     /// Direct exchanges keep an exact-match index for O(1) routing.
-    direct_index: HashMap<String, Vec<String>>,
+    direct_index: HashMap<String, Vec<Arc<str>>>,
+    /// Topic exchanges keep a pattern trie for O(|key|) routing.
+    trie: TopicTrie,
+    /// Total live (pattern, queue) pairs.
+    bindings: usize,
+    /// Bumped on every mutation; shared with cached routes so a cache hit
+    /// can validate itself without touching the exchange tables.
+    generation: Arc<AtomicU64>,
 }
 
 impl Exchange {
     pub fn new(name: &str, kind: ExchangeKind) -> Self {
-        Exchange { name: name.to_string(), kind, bindings: BTreeSet::new(), direct_index: HashMap::new() }
+        Exchange {
+            name: name.to_string(),
+            kind,
+            by_queue: HashMap::new(),
+            direct_index: HashMap::new(),
+            trie: TopicTrie::default(),
+            bindings: 0,
+            generation: Arc::new(AtomicU64::new(0)),
+        }
     }
 
-    /// Add a binding. Idempotent.
-    pub fn bind(&mut self, routing_key: &str, queue: &str) {
-        if self.bindings.insert((routing_key.to_string(), queue.to_string()))
-            && self.kind == ExchangeKind::Direct
-        {
-            self.direct_index.entry(routing_key.to_string()).or_default().push(queue.to_string());
+    /// The generation handle a cached route validates against.
+    pub fn generation(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.generation)
+    }
+
+    fn bump(&self) {
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    /// Add a binding. Idempotent. The queue handle is the router-interned
+    /// `Arc<str>`; all indexes share it by refcount.
+    pub fn bind(&mut self, routing_key: &str, queue: &Arc<str>) {
+        let set = self.by_queue.entry(Arc::clone(queue)).or_default();
+        if !set.insert(routing_key.to_string()) {
+            return; // duplicate bind
         }
+        self.bindings += 1;
+        match self.kind {
+            ExchangeKind::Direct => self
+                .direct_index
+                .entry(routing_key.to_string())
+                .or_default()
+                .push(Arc::clone(queue)),
+            ExchangeKind::Topic => self.trie.insert(routing_key, Arc::clone(queue)),
+            ExchangeKind::Fanout => {}
+        }
+        self.bump();
     }
 
     /// Remove a binding. Returns true if it existed.
     pub fn unbind(&mut self, routing_key: &str, queue: &str) -> bool {
-        let removed = self.bindings.remove(&(routing_key.to_string(), queue.to_string()));
-        if removed && self.kind == ExchangeKind::Direct {
-            if let Some(qs) = self.direct_index.get_mut(routing_key) {
-                qs.retain(|q| q != queue);
-                if qs.is_empty() {
-                    self.direct_index.remove(routing_key);
-                }
-            }
+        let Some(set) = self.by_queue.get_mut(queue) else { return false };
+        if !set.remove(routing_key) {
+            return false;
         }
-        removed
+        if set.is_empty() {
+            self.by_queue.remove(queue);
+        }
+        self.bindings -= 1;
+        self.remove_from_index(routing_key, queue);
+        self.bump();
+        true
     }
 
-    /// Remove every binding that targets `queue` (queue deletion).
-    pub fn unbind_queue(&mut self, queue: &str) {
-        let stale: Vec<(String, String)> =
-            self.bindings.iter().filter(|(_, q)| q == queue).cloned().collect();
-        for (rk, q) in stale {
-            self.unbind(&rk, &q);
+    /// Remove every binding that targets `queue` (queue deletion). Walks
+    /// only the queue's own patterns via the reverse index — O(own
+    /// bindings), no clones. Returns true when anything was removed.
+    pub fn unbind_queue(&mut self, queue: &str) -> bool {
+        let Some(set) = self.by_queue.remove(queue) else { return false };
+        self.bindings -= set.len();
+        for rk in &set {
+            self.remove_from_index(rk, queue);
+        }
+        self.bump();
+        true
+    }
+
+    /// Drop `(routing_key, queue)` from the kind-specific forward index.
+    fn remove_from_index(&mut self, routing_key: &str, queue: &str) {
+        match self.kind {
+            ExchangeKind::Direct => {
+                if let Some(qs) = self.direct_index.get_mut(routing_key) {
+                    qs.retain(|q| &**q != queue);
+                    if qs.is_empty() {
+                        self.direct_index.remove(routing_key);
+                    }
+                }
+            }
+            ExchangeKind::Topic => self.trie.remove(routing_key, queue),
+            ExchangeKind::Fanout => {}
         }
     }
 
     pub fn binding_count(&self) -> usize {
-        self.bindings.len()
+        self.bindings
     }
 
     /// Queues a message with `routing_key` routes to (deduplicated —
     /// a queue bound twice by overlapping patterns receives one copy).
-    pub fn route(&self, routing_key: &str) -> Vec<&str> {
+    /// Every returned handle is a refcount bump of the interned name.
+    pub fn route(&self, routing_key: &str) -> Vec<Arc<str>> {
         match self.kind {
-            ExchangeKind::Direct => self
-                .direct_index
-                .get(routing_key)
-                .map(|qs| qs.iter().map(String::as_str).collect())
-                .unwrap_or_default(),
-            ExchangeKind::Fanout => {
-                let mut seen = BTreeSet::new();
-                self.bindings
-                    .iter()
-                    .filter(|(_, q)| seen.insert(q.as_str()))
-                    .map(|(_, q)| q.as_str())
-                    .collect()
+            ExchangeKind::Direct => {
+                self.direct_index.get(routing_key).cloned().unwrap_or_default()
             }
+            ExchangeKind::Fanout => self.by_queue.keys().cloned().collect(),
             ExchangeKind::Topic => {
-                let mut seen = BTreeSet::new();
-                self.bindings
-                    .iter()
-                    .filter(|(pat, q)| topic_matches(pat, routing_key) && seen.insert(q.as_str()))
-                    .map(|(_, q)| q.as_str())
-                    .collect()
+                let mut out = Vec::new();
+                let mut seen: HashSet<Arc<str>> = HashSet::new();
+                self.trie.route(routing_key, &mut |q| {
+                    if seen.insert(Arc::clone(q)) {
+                        out.push(Arc::clone(q));
+                    }
+                });
+                out
             }
         }
     }
 }
 
+/// Split a pattern or key into dot-separated words; the empty string is
+/// zero words (matching [`topic_matches`]'s treatment).
+fn words_of(s: &str) -> Vec<&str> {
+    if s.is_empty() {
+        vec![]
+    } else {
+        s.split('.').collect()
+    }
+}
+
+/// A RabbitMQ-style topic trie. Literal words are hash-map edges; `*` and
+/// `#` get dedicated edges so a lookup never scans sibling patterns.
+/// Queues bound to a pattern hang off the node where the pattern ends.
+#[derive(Default)]
+struct TopicTrie {
+    root: TrieNode,
+    /// Live `#` edges anywhere in the trie. Without them every walk is a
+    /// strict tree descent (each edge consumes one word), so the
+    /// visited-state guard is pure overhead and is skipped.
+    hash_edges: usize,
+}
+
+#[derive(Default)]
+struct TrieNode {
+    children: HashMap<String, TrieNode>,
+    star: Option<Box<TrieNode>>,
+    hash: Option<Box<TrieNode>>,
+    queues: Vec<Arc<str>>,
+}
+
+impl TrieNode {
+    fn is_empty(&self) -> bool {
+        self.queues.is_empty()
+            && self.children.is_empty()
+            && self.star.is_none()
+            && self.hash.is_none()
+    }
+}
+
+impl TopicTrie {
+    fn insert(&mut self, pattern: &str, queue: Arc<str>) {
+        let mut new_hash_edges = 0usize;
+        let mut node = &mut self.root;
+        for w in words_of(pattern) {
+            node = match w {
+                "*" => &mut **node.star.get_or_insert_with(Default::default),
+                "#" => {
+                    if node.hash.is_none() {
+                        new_hash_edges += 1;
+                    }
+                    &mut **node.hash.get_or_insert_with(Default::default)
+                }
+                w => node.children.entry(w.to_string()).or_default(),
+            };
+        }
+        if !node.queues.iter().any(|q| **q == *queue) {
+            node.queues.push(queue);
+        }
+        self.hash_edges += new_hash_edges;
+    }
+
+    fn remove(&mut self, pattern: &str, queue: &str) {
+        let words = words_of(pattern);
+        let mut pruned_hash_edges = 0usize;
+        remove_rec(&mut self.root, &words, queue, &mut pruned_hash_edges);
+        self.hash_edges -= pruned_hash_edges;
+    }
+
+    /// Emit every queue bound to a pattern matching `key`. Iterative
+    /// (explicit work stack) so hostile key depth cannot overflow the
+    /// thread stack, with a visited-state guard so pathological `#` chains
+    /// stay polynomial like the reference DP matcher.
+    fn route<'a>(&'a self, key: &str, emit: &mut impl FnMut(&'a Arc<str>)) {
+        let words = words_of(key);
+        let mut stack: Vec<(&TrieNode, usize)> = vec![(&self.root, 0)];
+        // States can only re-converge through `#` edges; a `#`-free trie
+        // is walked as a plain tree with no per-node hashing.
+        let guard = self.hash_edges > 0;
+        let mut visited: HashSet<(*const TrieNode, usize)> = HashSet::new();
+        while let Some((node, i)) = stack.pop() {
+            if guard && !visited.insert((node as *const TrieNode, i)) {
+                continue;
+            }
+            if i == words.len() {
+                for q in &node.queues {
+                    emit(q);
+                }
+            } else {
+                if let Some(child) = node.children.get(words[i]) {
+                    stack.push((child, i + 1));
+                }
+                if let Some(s) = node.star.as_deref() {
+                    stack.push((s, i + 1));
+                }
+            }
+            if let Some(h) = node.hash.as_deref() {
+                // `#` consumes zero or more words: try every split point.
+                for k in i..=words.len() {
+                    stack.push((h, k));
+                }
+            }
+        }
+    }
+}
+
+/// Remove `queue` from the node `words` leads to, pruning now-empty nodes
+/// on the way back up (pruned `#` edges are counted into
+/// `pruned_hash_edges` — pruned nodes are empty, so no deeper edges can
+/// be dropped silently). Returns true when `node` became empty.
+fn remove_rec(
+    node: &mut TrieNode,
+    words: &[&str],
+    queue: &str,
+    pruned_hash_edges: &mut usize,
+) -> bool {
+    match words.split_first() {
+        None => node.queues.retain(|q| &**q != queue),
+        Some((&"*", rest)) => {
+            if let Some(s) = node.star.as_deref_mut() {
+                if remove_rec(s, rest, queue, pruned_hash_edges) {
+                    node.star = None;
+                }
+            }
+        }
+        Some((&"#", rest)) => {
+            if let Some(h) = node.hash.as_deref_mut() {
+                if remove_rec(h, rest, queue, pruned_hash_edges) {
+                    node.hash = None;
+                    *pruned_hash_edges += 1;
+                }
+            }
+        }
+        Some((&w, rest)) => {
+            if let Some(child) = node.children.get_mut(w) {
+                if remove_rec(child, rest, queue, pruned_hash_edges) {
+                    node.children.remove(w);
+                }
+            }
+        }
+    }
+    node.is_empty()
+}
+
 /// AMQP topic matching: patterns and keys are dot-separated words;
 /// `*` matches exactly one word, `#` matches zero or more words.
+///
+/// This is the **reference** matcher (the seed's linear-scan kernel): the
+/// trie must agree with it on every (pattern, key) pair — pinned by the
+/// property suite — and the `topic_routing` bench scans bindings with it
+/// as the baseline the trie is measured against.
 pub fn topic_matches(pattern: &str, key: &str) -> bool {
     let pat: Vec<&str> = if pattern.is_empty() { vec![] } else { pattern.split('.').collect() };
     let words: Vec<&str> = if key.is_empty() { vec![] } else { key.split('.').collect() };
@@ -118,13 +347,22 @@ mod tests {
     use super::*;
     use crate::proputil::{run_prop, Rng};
 
+    fn arc(name: &str) -> Arc<str> {
+        Arc::from(name)
+    }
+
+    /// Route and render to plain strings for assertion ergonomics.
+    fn route_strs(ex: &Exchange, key: &str) -> Vec<String> {
+        ex.route(key).iter().map(|q| q.to_string()).collect()
+    }
+
     #[test]
     fn direct_exact_match_only() {
         let mut ex = Exchange::new("rpc", ExchangeKind::Direct);
-        ex.bind("proc.1", "q1");
-        ex.bind("proc.2", "q2");
-        assert_eq!(ex.route("proc.1"), vec!["q1"]);
-        assert_eq!(ex.route("proc.2"), vec!["q2"]);
+        ex.bind("proc.1", &arc("q1"));
+        ex.bind("proc.2", &arc("q2"));
+        assert_eq!(route_strs(&ex, "proc.1"), vec!["q1"]);
+        assert_eq!(route_strs(&ex, "proc.2"), vec!["q2"]);
         assert!(ex.route("proc.3").is_empty());
         assert!(ex.route("proc").is_empty());
     }
@@ -132,9 +370,9 @@ mod tests {
     #[test]
     fn fanout_ignores_key() {
         let mut ex = Exchange::new("bc", ExchangeKind::Fanout);
-        ex.bind("", "q1");
-        ex.bind("anything", "q2");
-        let mut got = ex.route("whatever");
+        ex.bind("", &arc("q1"));
+        ex.bind("anything", &arc("q2"));
+        let mut got = route_strs(&ex, "whatever");
         got.sort_unstable();
         assert_eq!(got, vec!["q1", "q2"]);
     }
@@ -142,17 +380,17 @@ mod tests {
     #[test]
     fn duplicate_bind_single_delivery() {
         let mut ex = Exchange::new("bc", ExchangeKind::Fanout);
-        ex.bind("a", "q1");
-        ex.bind("a", "q1");
-        ex.bind("b", "q1");
-        assert_eq!(ex.route("x"), vec!["q1"]);
+        ex.bind("a", &arc("q1"));
+        ex.bind("a", &arc("q1"));
+        ex.bind("b", &arc("q1"));
+        assert_eq!(route_strs(&ex, "x"), vec!["q1"]);
         assert_eq!(ex.binding_count(), 2);
     }
 
     #[test]
     fn unbind_removes_route() {
         let mut ex = Exchange::new("rpc", ExchangeKind::Direct);
-        ex.bind("k", "q1");
+        ex.bind("k", &arc("q1"));
         assert!(ex.unbind("k", "q1"));
         assert!(!ex.unbind("k", "q1"));
         assert!(ex.route("k").is_empty());
@@ -161,12 +399,43 @@ mod tests {
     #[test]
     fn unbind_queue_removes_all() {
         let mut ex = Exchange::new("t", ExchangeKind::Topic);
-        ex.bind("a.*", "q1");
-        ex.bind("b.#", "q1");
-        ex.bind("a.*", "q2");
-        ex.unbind_queue("q1");
+        ex.bind("a.*", &arc("q1"));
+        ex.bind("b.#", &arc("q1"));
+        ex.bind("a.*", &arc("q2"));
+        assert!(ex.unbind_queue("q1"));
+        assert!(!ex.unbind_queue("q1"), "second unbind_queue is a no-op");
         assert_eq!(ex.binding_count(), 1);
-        assert_eq!(ex.route("a.x"), vec!["q2"]);
+        assert_eq!(route_strs(&ex, "a.x"), vec!["q2"]);
+        assert!(ex.route("b.z").is_empty());
+    }
+
+    #[test]
+    fn generation_bumps_on_mutation_only() {
+        let mut ex = Exchange::new("t", ExchangeKind::Topic);
+        let gen = ex.generation();
+        let g0 = gen.load(Ordering::Acquire);
+        ex.bind("a.*", &arc("q1"));
+        let g1 = gen.load(Ordering::Acquire);
+        assert!(g1 > g0, "bind must bump the generation");
+        ex.bind("a.*", &arc("q1")); // duplicate: no semantic change
+        assert_eq!(gen.load(Ordering::Acquire), g1, "duplicate bind must not bump");
+        assert!(!ex.unbind("missing", "q1"));
+        assert_eq!(gen.load(Ordering::Acquire), g1, "failed unbind must not bump");
+        ex.unbind("a.*", "q1");
+        assert!(gen.load(Ordering::Acquire) > g1, "unbind must bump");
+        let g2 = gen.load(Ordering::Acquire);
+        assert!(!ex.unbind_queue("q1"), "queue with no bindings");
+        assert_eq!(gen.load(Ordering::Acquire), g2);
+    }
+
+    #[test]
+    fn route_returns_interned_handles() {
+        let mut ex = Exchange::new("t", ExchangeKind::Topic);
+        let q1 = arc("q1");
+        ex.bind("a.#", &q1);
+        let got = ex.route("a.b");
+        assert_eq!(got.len(), 1);
+        assert!(Arc::ptr_eq(&got[0], &q1), "route must hand back the interned Arc");
     }
 
     #[test]
@@ -204,13 +473,157 @@ mod tests {
     #[test]
     fn topic_exchange_routes_by_pattern() {
         let mut ex = Exchange::new("events", ExchangeKind::Topic);
-        ex.bind("proc.*.terminated", "waiters");
-        ex.bind("proc.#", "audit");
-        let mut got = ex.route("proc.42.terminated");
+        ex.bind("proc.*.terminated", &arc("waiters"));
+        ex.bind("proc.#", &arc("audit"));
+        let mut got = route_strs(&ex, "proc.42.terminated");
         got.sort_unstable();
         assert_eq!(got, vec!["audit", "waiters"]);
-        assert_eq!(ex.route("proc.42.paused"), vec!["audit"]);
+        assert_eq!(route_strs(&ex, "proc.42.paused"), vec!["audit"]);
         assert!(ex.route("other.42").is_empty());
+    }
+
+    /// Build a topic exchange and the equivalent flat binding list, route
+    /// through both (trie vs reference DP matcher over a linear scan) and
+    /// require identical target sets.
+    fn assert_trie_equals_reference(bindings: &[(String, String)], keys: &[String]) {
+        let mut ex = Exchange::new("t", ExchangeKind::Topic);
+        for (pat, q) in bindings {
+            ex.bind(pat, &arc(q));
+        }
+        for key in keys {
+            let mut got: Vec<String> =
+                ex.route(key).iter().map(|q| q.to_string()).collect();
+            got.sort_unstable();
+            let mut want: Vec<String> = bindings
+                .iter()
+                .filter(|(pat, _)| topic_matches(pat, key))
+                .map(|(_, q)| q.clone())
+                .collect::<BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "trie vs reference diverged on key '{key}'");
+        }
+    }
+
+    #[test]
+    fn prop_trie_equals_reference_matcher() {
+        // The tentpole's correctness pin: the trie is routing-equivalent
+        // to the retained `topic_matches` DP matcher on random inputs
+        // drawn from a small word alphabet (maximising collisions).
+        run_prop("trie ≡ reference", |rng: &Rng| {
+            let vocab = ["a", "b", "c"];
+            let word = |wild: bool| -> String {
+                if wild {
+                    match rng.below(4) {
+                        0 => "*".into(),
+                        1 => "#".into(),
+                        _ => vocab[rng.range(0, vocab.len())].into(),
+                    }
+                } else {
+                    vocab[rng.range(0, vocab.len())].into()
+                }
+            };
+            let nbind = rng.range(1, 12);
+            let bindings: Vec<(String, String)> = (0..nbind)
+                .map(|i| {
+                    let nw = rng.range(0, 5);
+                    let pat =
+                        (0..nw).map(|_| word(true)).collect::<Vec<_>>().join(".");
+                    (pat, format!("q{}", i % 4))
+                })
+                .collect();
+            let keys: Vec<String> = (0..8)
+                .map(|_| {
+                    let nw = rng.range(0, 5);
+                    (0..nw).map(|_| word(false)).collect::<Vec<_>>().join(".")
+                })
+                .collect();
+            assert_trie_equals_reference(&bindings, &keys);
+        });
+    }
+
+    #[test]
+    fn prop_trie_survives_unbind_churn() {
+        // Remove a random subset of bindings and re-check equivalence —
+        // pins trie node pruning.
+        run_prop("trie unbind ≡ reference", |rng: &Rng| {
+            let vocab = ["x", "y"];
+            let nbind = rng.range(2, 10);
+            let mut bindings: Vec<(String, String)> = (0..nbind)
+                .map(|i| {
+                    let nw = rng.range(1, 4);
+                    let pat = (0..nw)
+                        .map(|_| match rng.below(4) {
+                            0 => "*".to_string(),
+                            1 => "#".to_string(),
+                            _ => vocab[rng.range(0, vocab.len())].to_string(),
+                        })
+                        .collect::<Vec<_>>()
+                        .join(".");
+                    (pat, format!("q{i}"))
+                })
+                .collect();
+            let mut ex = Exchange::new("t", ExchangeKind::Topic);
+            for (pat, q) in &bindings {
+                ex.bind(pat, &arc(q));
+            }
+            // Unbind a random half.
+            let mut i = 0;
+            bindings.retain(|(pat, q)| {
+                i += 1;
+                if rng.chance(0.5) {
+                    assert!(ex.unbind(pat, q), "binding {i} must exist");
+                    false
+                } else {
+                    true
+                }
+            });
+            let keys: Vec<String> = (0..6)
+                .map(|_| {
+                    let nw = rng.range(0, 4);
+                    (0..nw)
+                        .map(|_| vocab[rng.range(0, vocab.len())].to_string())
+                        .collect::<Vec<_>>()
+                        .join(".")
+                })
+                .collect();
+            for key in &keys {
+                let mut got: Vec<String> =
+                    ex.route(key).iter().map(|q| q.to_string()).collect();
+                got.sort_unstable();
+                let mut want: Vec<String> = bindings
+                    .iter()
+                    .filter(|(pat, _)| topic_matches(pat, key))
+                    .map(|(_, q)| q.clone())
+                    .collect::<BTreeSet<_>>()
+                    .into_iter()
+                    .collect();
+                want.sort_unstable();
+                assert_eq!(got, want, "post-unbind divergence on key '{key}'");
+            }
+        });
+    }
+
+    #[test]
+    fn hash_chains_stay_polynomial() {
+        // `#.#.#.#` against a long key explodes combinatorially without
+        // the visited-state guard; with it this finishes instantly.
+        let mut ex = Exchange::new("t", ExchangeKind::Topic);
+        ex.bind("#.#.#.#.#.#.#.#", &arc("q"));
+        let key = vec!["w"; 64].join(".");
+        assert_eq!(route_strs(&ex, &key), vec!["q"]);
+        assert!(topic_matches("#.#.#.#.#.#.#.#", &key));
+    }
+
+    #[test]
+    fn empty_words_are_literals() {
+        // "a..b" has an empty middle word; the trie must treat it exactly
+        // like the reference matcher does.
+        assert_trie_equals_reference(
+            &[("a..b".into(), "q1".into()), ("a.*.b".into(), "q2".into())],
+            &["a..b".into(), "a.x.b".into(), "a.b".into()],
+        );
     }
 
     #[test]
@@ -220,6 +633,9 @@ mod tests {
             let key =
                 (0..nwords).map(|_| rng.string(4)).collect::<Vec<_>>().join(".");
             assert!(topic_matches("#", &key), "key: {key}");
+            let mut ex = Exchange::new("t", ExchangeKind::Topic);
+            ex.bind("#", &arc("q"));
+            assert_eq!(route_strs(&ex, &key), vec!["q"], "trie '#' must match '{key}'");
         });
     }
 
@@ -236,6 +652,12 @@ mod tests {
             let mut pat = words.clone();
             pat[i] = "*".into();
             assert!(topic_matches(&pat.join("."), &key));
+            let mut ex = Exchange::new("t", ExchangeKind::Topic);
+            ex.bind(&key, &arc("qx"));
+            ex.bind(&pat.join("."), &arc("qs"));
+            let mut got = route_strs(&ex, &key);
+            got.sort_unstable();
+            assert_eq!(got, vec!["qs", "qx"]);
         });
     }
 }

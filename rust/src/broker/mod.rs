@@ -19,10 +19,13 @@
 //!   and survive broker restarts.
 //!
 //! The [`core::BrokerCore`] is transport-agnostic and sharded: [`router`]
-//! resolves exchanges/bindings behind read-mostly locks, [`shard`] holds N
-//! independent queue shards (hash of queue name → shard) so traffic to
-//! different queues never contends, and [`dispatch`] drains ready messages
-//! in batches, coalescing them into per-connection multi-delivery frames.
+//! resolves exchanges/bindings behind read-mostly locks — topic exchanges
+//! through a word-trie index with an interned, generation-invalidated
+//! route cache in front (a hot-key publish is one cache probe, zero
+//! allocations) — [`shard`] holds N independent queue shards (hash of
+//! queue name → shard) so traffic to different queues never contends, and
+//! [`dispatch`] drains ready messages in batches, coalescing them into
+//! per-connection multi-delivery frames.
 //! [`server`] exposes the core over TCP and [`inproc`] embeds it
 //! in-process (used by tests, benches and single-machine deployments —
 //! AiiDA's "individual laptop" scale).

@@ -527,18 +527,36 @@ impl Delivery {
         out.push(self.body.clone());
     }
 
-    /// Rebuild from an envelope plus the frame's section cursor.
-    fn from_envelope(v: &Value, sections: &mut SectionCursor) -> Result<Self> {
+    /// Rebuild from an envelope plus the frame's section cursor. When
+    /// `prev` (the previously decoded delivery of the same batch) carries
+    /// the same exchange / routing key — the overwhelmingly common case
+    /// for a batch drained from one queue — its `Arc<str>` handles are
+    /// reused instead of allocating fresh strings per delivery.
+    fn from_envelope(
+        v: &Value,
+        sections: &mut SectionCursor,
+        prev: Option<&Delivery>,
+    ) -> Result<Self> {
         let props_len = v.get_u64("props_len")? as usize;
         let body_len = v.get_u64("body_len")? as usize;
         let props = EncodedProps::from_wire(sections.take(props_len)?)?;
         let body = sections.take(body_len)?;
+        let exchange_str = v.get_str("exchange")?;
+        let exchange: Arc<str> = match prev {
+            Some(p) if &*p.exchange == exchange_str => Arc::clone(&p.exchange),
+            _ => exchange_str.into(),
+        };
+        let routing_key_str = v.get_str("routing_key")?;
+        let routing_key: Arc<str> = match prev {
+            Some(p) if &*p.routing_key == routing_key_str => Arc::clone(&p.routing_key),
+            _ => routing_key_str.into(),
+        };
         Ok(Delivery {
             consumer_tag: v.get_str("consumer_tag")?.to_string(),
             delivery_tag: v.get_u64("delivery_tag")?,
             redelivered: v.get_bool("redelivered")?,
-            exchange: v.get_str("exchange")?.into(),
-            routing_key: v.get_str("routing_key")?.into(),
+            exchange,
+            routing_key,
             body,
             props,
         })
@@ -599,15 +617,16 @@ impl ServerMsg {
         let (v, mut sections) = frame.open()?;
         match v.get_str("kind")? {
             "deliver" => {
-                let d = Delivery::from_envelope(&v, &mut sections)?;
+                let d = Delivery::from_envelope(&v, &mut sections, None)?;
                 sections.finish()?;
                 Ok(ServerMsg::Deliver(d))
             }
             "deliver_batch" => {
                 let list = v.get("deliveries")?.as_list()?;
-                let mut ds = Vec::with_capacity(list.len());
+                let mut ds: Vec<Delivery> = Vec::with_capacity(list.len());
                 for item in list {
-                    ds.push(Delivery::from_envelope(item, &mut sections)?);
+                    let d = Delivery::from_envelope(item, &mut sections, ds.last())?;
+                    ds.push(d);
                 }
                 sections.finish()?;
                 Ok(ServerMsg::DeliverBatch(ds))
@@ -801,6 +820,43 @@ mod tests {
             assert!(
                 Bytes::same_buffer(&pair[0].body, &pair[1].body),
                 "all bodies of a read batch must be views of the receive buffer"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_decode_interns_repeated_names() {
+        // A drained batch from one queue repeats the same exchange and
+        // routing key in every envelope — the decoder must share one
+        // Arc<str> per distinct name across the batch, not allocate per
+        // delivery.
+        let batch = ServerMsg::DeliverBatch(
+            (0..4)
+                .map(|i| Delivery {
+                    consumer_tag: "ct".into(),
+                    delivery_tag: i,
+                    redelivered: false,
+                    exchange: "events".into(),
+                    routing_key: "proc.42.done".into(),
+                    body: Bytes::encode(&Value::I64(i as i64)),
+                    props: MessageProps::default().into(),
+                })
+                .collect(),
+        );
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &batch.to_frame()).unwrap();
+        let read = read_frame(&mut Cursor::new(&buf)).unwrap();
+        let ServerMsg::DeliverBatch(ds) = ServerMsg::from_frame(&read).unwrap() else {
+            panic!("expected batch");
+        };
+        for pair in ds.windows(2) {
+            assert!(
+                Arc::ptr_eq(&pair[0].exchange, &pair[1].exchange),
+                "repeated exchange names must share one allocation"
+            );
+            assert!(
+                Arc::ptr_eq(&pair[0].routing_key, &pair[1].routing_key),
+                "repeated routing keys must share one allocation"
             );
         }
     }

@@ -83,13 +83,22 @@ pub struct Assignment {
 
 /// The queue itself.
 pub struct Queue {
-    pub name: String,
+    /// Interned name handle (shared with the router's interner and the
+    /// shard map key — cloning it anywhere is a refcount bump).
+    pub name: Arc<str>,
     pub options: QueueOptions,
     /// Declaring connection (for `exclusive`).
     pub owner: Option<u64>,
     /// Ready messages by priority lane; FIFO within a lane.
     ready: [VecDeque<QueuedMessage>; PRIORITY_LANES],
     ready_count: usize,
+    /// Ready messages carrying a TTL deadline. When zero, the periodic
+    /// expiry sweep skips this queue without scanning it.
+    ttl_ready: usize,
+    /// Lower bound on the earliest deadline among ready TTL'd messages
+    /// (exact after a full sweep, conservative otherwise — popping a
+    /// message never raises it). `Some` iff `ttl_ready > 0`.
+    earliest_deadline: Option<Instant>,
     /// Delivered, awaiting ack, keyed by delivery tag.
     unacked: HashMap<u64, InFlight>,
     consumers: Vec<Consumer>,
@@ -108,13 +117,15 @@ pub struct Queue {
 }
 
 impl Queue {
-    pub fn new(name: &str, options: QueueOptions, owner: Option<u64>) -> Self {
+    pub fn new(name: impl Into<Arc<str>>, options: QueueOptions, owner: Option<u64>) -> Self {
         Queue {
-            name: name.to_string(),
+            name: name.into(),
             options,
             owner,
             ready: Default::default(),
             ready_count: 0,
+            ttl_ready: 0,
+            earliest_deadline: None,
             unacked: HashMap::new(),
             consumers: Vec::new(),
             rr_cursor: 0,
@@ -170,11 +181,40 @@ impl Queue {
                 }
             }
         }
+        self.track_ttl_in(msg.deadline);
         let lane = msg.lane();
         self.ready[lane].push_back(msg);
         self.ready_count += 1;
         self.published += 1;
         dropped
+    }
+
+    /// Bookkeeping when a deadline-carrying message enters a ready lane:
+    /// maintains the earliest-deadline lower bound the sweep gates on.
+    fn track_ttl_in(&mut self, deadline: Option<Instant>) {
+        if let Some(d) = deadline {
+            self.ttl_ready += 1;
+            self.earliest_deadline = Some(self.earliest_deadline.map_or(d, |e| e.min(d)));
+        }
+    }
+
+    /// Bookkeeping when a deadline-carrying message leaves a ready lane.
+    /// The bound is not recomputed (it may now be earlier than any live
+    /// deadline — a sweep then scans needlessly but never skips wrongly);
+    /// it resets exactly when no TTL'd message remains.
+    fn track_ttl_out(&mut self, deadline: Option<Instant>) {
+        if deadline.is_some() {
+            self.ttl_ready -= 1;
+            if self.ttl_ready == 0 {
+                self.earliest_deadline = None;
+            }
+        }
+    }
+
+    /// Ready messages currently carrying a TTL deadline (sweep-skip
+    /// bookkeeping, exposed for tests).
+    pub fn ttl_pending(&self) -> usize {
+        self.ttl_ready
     }
 
     /// Pop the highest-priority, oldest ready message, discarding expired
@@ -183,6 +223,7 @@ impl Queue {
         for lane in (0..PRIORITY_LANES).rev() {
             while let Some(msg) = self.ready[lane].pop_front() {
                 self.ready_count -= 1;
+                self.track_ttl_out(msg.deadline);
                 if msg.expired(now) {
                     self.expired += 1;
                     self.expired_ids.push(msg.msg_id);
@@ -314,6 +355,7 @@ impl Queue {
         if requeue {
             let mut msg = inflight.message;
             msg.redelivered = true;
+            self.track_ttl_in(msg.deadline);
             let lane = msg.lane();
             self.ready[lane].push_front(msg);
             self.ready_count += 1;
@@ -347,6 +389,7 @@ impl Queue {
             let inflight = self.unacked.remove(tag).unwrap();
             let mut msg = inflight.message;
             msg.redelivered = true;
+            self.track_ttl_in(msg.deadline);
             let lane = msg.lane();
             self.ready[lane].push_front(msg);
             self.ready_count += 1;
@@ -368,6 +411,8 @@ impl Queue {
             }
         }
         self.ready_count = 0;
+        self.ttl_ready = 0;
+        self.earliest_deadline = None;
         ids
     }
 
@@ -378,20 +423,41 @@ impl Queue {
     }
 
     /// Remove expired ready messages (periodic sweep). Returns their ids.
+    ///
+    /// O(1) for the common case: when no ready message carries a TTL, or
+    /// the earliest tracked deadline is still in the future, the scan is
+    /// skipped entirely — a broker full of TTL-less queues pays nothing
+    /// for the sweep. A scan recomputes the bound exactly.
     pub fn sweep_expired(&mut self, now: Instant) -> Vec<u64> {
+        if self.ttl_ready == 0 {
+            return Vec::new();
+        }
+        if let Some(earliest) = self.earliest_deadline {
+            if now < earliest {
+                return Vec::new();
+            }
+        }
         let mut ids = Vec::new();
+        let mut remaining = 0usize;
+        let mut earliest: Option<Instant> = None;
         for lane in &mut self.ready {
             lane.retain(|m| {
                 if m.expired(now) {
                     ids.push(m.msg_id);
                     false
                 } else {
+                    if let Some(d) = m.deadline {
+                        remaining += 1;
+                        earliest = Some(earliest.map_or(d, |e| e.min(d)));
+                    }
                     true
                 }
             });
         }
         self.ready_count -= ids.len();
         self.expired += ids.len() as u64;
+        self.ttl_ready = remaining;
+        self.earliest_deadline = earliest;
         ids
     }
 
@@ -627,6 +693,83 @@ mod tests {
         let swept = q.sweep_expired(now + Duration::from_millis(20));
         assert_eq!(swept, vec![0]);
         assert_eq!(q.ready_len(), 0);
+    }
+
+    #[test]
+    fn sweep_skip_bookkeeping_tracks_ttl_messages() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        // No TTLs anywhere: nothing pending, sweep is a no-op.
+        q.publish(msg(0, 0), now);
+        assert_eq!(q.ttl_pending(), 0);
+        assert!(q.sweep_expired(now + Duration::from_secs(60)).is_empty());
+        assert_eq!(q.ready_len(), 1);
+        // A TTL'd message is tracked in...
+        let mut m = msg(1, 0);
+        m.props = MessageProps { expiration_ms: Some(10), ..Default::default() }.into();
+        q.publish(m, now);
+        assert_eq!(q.ttl_pending(), 1);
+        // ...and the sweep gate stays closed before its deadline.
+        assert!(q.sweep_expired(now).is_empty());
+        assert_eq!(q.ready_len(), 2);
+        // After the deadline, exactly the TTL'd message is swept and the
+        // tracking resets.
+        assert_eq!(q.sweep_expired(now + Duration::from_millis(50)), vec![1]);
+        assert_eq!(q.ttl_pending(), 0);
+        assert_eq!(q.ready_len(), 1);
+    }
+
+    #[test]
+    fn sweep_skip_cleared_on_pop_restored_on_requeue() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        let mut m = msg(0, 0);
+        m.props = MessageProps { expiration_ms: Some(10_000), ..Default::default() }.into();
+        q.publish(m, now);
+        assert_eq!(q.ttl_pending(), 1);
+        // Delivery pops it out of ready: no TTL'd ready message remains.
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a.len(), 1);
+        assert_eq!(q.ttl_pending(), 0);
+        // Requeue puts it (and its deadline) back under tracking.
+        q.nack(a[0].delivery_tag, true);
+        assert_eq!(q.ttl_pending(), 1);
+        // Connection-death requeue is tracked too.
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b.len(), 1);
+        assert_eq!(q.ttl_pending(), 0);
+        q.drop_connection(1);
+        assert_eq!(q.ttl_pending(), 1);
+        // Purge resets everything.
+        q.purge();
+        assert_eq!(q.ttl_pending(), 0);
+        assert!(q.sweep_expired(now + Duration::from_secs(60)).is_empty());
+    }
+
+    #[test]
+    fn sweep_bound_is_conservative_after_pop() {
+        // Two TTL'd messages; pop the earlier one. The retained bound may
+        // now be stale (earlier than any live deadline) — the sweep must
+        // still expire correctly, never skip wrongly.
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        let mut early = msg(0, 0);
+        early.props = MessageProps { expiration_ms: Some(10), ..Default::default() }.into();
+        q.publish(early, now);
+        let mut late = msg(1, 0);
+        late.props = MessageProps { expiration_ms: Some(1000), ..Default::default() }.into();
+        q.publish(late, now);
+        q.add_consumer(consumer("c1", 1, 1));
+        let a = q.assign(now, tagger()); // pops msg 0 (prefetch 1)
+        assert_eq!(a[0].message.msg_id, 0);
+        assert_eq!(q.ttl_pending(), 1);
+        // Before either deadline: a scan may run (stale bound) but must
+        // remove nothing; after msg 1's deadline it must expire it.
+        assert!(q.sweep_expired(now).is_empty());
+        assert_eq!(q.sweep_expired(now + Duration::from_secs(5)), vec![1]);
+        assert_eq!(q.ttl_pending(), 0);
     }
 
     #[test]

@@ -5,36 +5,232 @@
 //! concurrent publishers to different queues proceed in parallel; binds,
 //! unbinds and queue (un)registration — rare, control-plane operations —
 //! take the write lock.
+//!
+//! ## Interning
+//!
+//! The router owns the canonical [`Arc<str>`] for every live queue name:
+//! [`Router::register_queue`] interns the name at declare time, bindings
+//! store clones of that handle, and [`Router::route`] hands back an
+//! `Arc<[Arc<str>]>` of those same handles — the string allocated at
+//! declare is the only one that ever exists, and a publish performs zero
+//! `String` allocations to learn its targets.
+//!
+//! ## The route cache
+//!
+//! `(exchange, routing_key) → Arc<[Arc<str>]>`, in front of all three
+//! exchange kinds and the default exchange. Every cached entry carries
+//! the **generation** (an `Arc<AtomicU64>` shared with its exchange) it
+//! was resolved under; binds, unbinds and queue deletion bump the
+//! generation, so a hit validates itself with one atomic load — no lock
+//! on the exchange tables, no rescan, no allocation. Entries resolve
+//! their `(generation, targets)` snapshot under the same read lock, so a
+//! racing bind either bumps before the snapshot (cache refills) or after
+//! (the stored generation is already stale) — a stale route can never be
+//! served as current. Capacity is bounded (`route_cache_cap`); at
+//! capacity the cache is flushed wholesale (rare, self-refilling). A cap
+//! of 0 disables caching entirely, restoring seed behaviour.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, HashSet};
-use std::sync::RwLock;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::broker::exchange::Exchange;
 use crate::broker::protocol::ExchangeKind;
 use crate::error::{Error, Result};
+use crate::metrics::Counter;
+
+/// Default route-cache capacity (entries across all exchanges).
+pub const DEFAULT_ROUTE_CACHE_CAP: usize = 4096;
+
+/// A resolved route: refcounted slice of interned queue-name handles.
+/// Cloning is one refcount bump; a cache hit returns the same allocation
+/// every time (pinned by `Arc::ptr_eq` tests).
+pub type RouteTargets = Arc<[Arc<str>]>;
+
+/// One cached route with the generation snapshot it was resolved under.
+struct CacheEntry {
+    generation: Arc<AtomicU64>,
+    seen: u64,
+    targets: RouteTargets,
+}
+
+impl CacheEntry {
+    fn live(&self) -> bool {
+        self.generation.load(Ordering::Acquire) == self.seen
+    }
+}
+
+/// Nested so a lookup needs no key allocation: exchange → routing key →
+/// entry (a flat `(String, String)` key cannot be probed with borrowed
+/// `&str`s).
+#[derive(Default)]
+struct CacheMap {
+    by_exchange: HashMap<String, HashMap<String, CacheEntry>>,
+    len: usize,
+}
+
+/// Max lock stripes for the cache map. Misses (fills) take one stripe's
+/// write lock instead of a single global one, so publishers with low key
+/// locality don't re-serialize on the cache the way the seed serialized
+/// on its broker mutex; a capacity flush empties one stripe, not the
+/// whole cache.
+const CACHE_STRIPES: usize = 16;
+
+struct RouteCache {
+    /// Per-stripe entry budget (total cap ÷ stripe count).
+    stripe_cap: usize,
+    enabled: bool,
+    stripes: Vec<RwLock<CacheMap>>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+}
+
+impl RouteCache {
+    fn new(cap: usize, hits: Arc<Counter>, misses: Arc<Counter>) -> Self {
+        // Small caps get fewer stripes so the configured bound holds
+        // exactly: stripes ≤ cap, and floor division means the live total
+        // never exceeds `cap`.
+        let nstripes = cap.clamp(1, CACHE_STRIPES);
+        RouteCache {
+            stripe_cap: cap / nstripes,
+            enabled: cap > 0,
+            stripes: (0..nstripes).map(|_| RwLock::new(CacheMap::default())).collect(),
+            hits,
+            misses,
+        }
+    }
+
+    fn stripe(&self, exchange: &str, routing_key: &str) -> &RwLock<CacheMap> {
+        let mut h = DefaultHasher::new();
+        exchange.hash(&mut h);
+        routing_key.hash(&mut h);
+        &self.stripes[(h.finish() % self.stripes.len() as u64) as usize]
+    }
+
+    fn lookup(&self, exchange: &str, routing_key: &str) -> Option<RouteTargets> {
+        let map = self.stripe(exchange, routing_key).read().unwrap();
+        let entry = map.by_exchange.get(exchange)?.get(routing_key)?;
+        if entry.live() {
+            Some(Arc::clone(&entry.targets))
+        } else {
+            None
+        }
+    }
+
+    fn insert(&self, exchange: &str, routing_key: &str, entry: CacheEntry) {
+        let mut map = self.stripe(exchange, routing_key).write().unwrap();
+        if map.len >= self.stripe_cap {
+            // Stripe full: reclaim generation-stale entries first, so one
+            // exchange's bind/unbind churn cannot evict other exchanges'
+            // hot live routes that happen to share the stripe.
+            let mut live = 0usize;
+            map.by_exchange.retain(|_, inner| {
+                inner.retain(|_, e| e.live());
+                live += inner.len();
+                !inner.is_empty()
+            });
+            map.len = live;
+            if map.len >= self.stripe_cap {
+                // Still full of live routes: flush wholesale. Rare (a
+                // stripe's worth of distinct hot keys), cheap, strictly
+                // safe — every dropped entry refills on demand.
+                map.by_exchange.clear();
+                map.len = 0;
+            }
+        }
+        let inner = map.by_exchange.entry(exchange.to_string()).or_default();
+        if inner.insert(routing_key.to_string(), entry).is_none() {
+            map.len += 1;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.read().unwrap().len).sum()
+    }
+}
 
 /// Exchange/binding tables + the set of live queue names (the default
 /// exchange routes on bare queue names, so existence lives here too).
-#[derive(Default)]
 pub struct Router {
     exchanges: RwLock<HashMap<String, Exchange>>,
-    queue_names: RwLock<HashSet<String>>,
+    /// Interner + existence set: the canonical `Arc<str>` per live queue.
+    queue_names: RwLock<HashSet<Arc<str>>>,
+    /// Generation of the default exchange (bumped on queue register /
+    /// unregister, which are its bind/unbind equivalents).
+    default_generation: Arc<AtomicU64>,
+    cache: RouteCache,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Router {
+    /// A router with the default cache capacity and detached counters
+    /// (tests / embedding without a metrics registry).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_cache(
+            DEFAULT_ROUTE_CACHE_CAP,
+            Arc::new(Counter::new()),
+            Arc::new(Counter::new()),
+        )
     }
 
-    /// Record that a queue exists (declare). Idempotent.
-    pub fn register_queue(&self, name: &str) {
-        self.queue_names.write().unwrap().insert(name.to_string());
+    /// Full control: cache capacity (0 disables) and the hit/miss
+    /// counters to book into (the broker wires these to
+    /// `broker.route_cache_hits_total` / `..misses_total`).
+    pub fn with_cache(cap: usize, hits: Arc<Counter>, misses: Arc<Counter>) -> Self {
+        Router {
+            exchanges: RwLock::new(HashMap::new()),
+            queue_names: RwLock::new(HashSet::new()),
+            default_generation: Arc::new(AtomicU64::new(0)),
+            cache: RouteCache::new(cap, hits, misses),
+        }
+    }
+
+    /// Record that a queue exists (declare). Idempotent. Returns the
+    /// interned name handle — the one allocation of this queue name's
+    /// lifetime; the shard map, the `Queue` and every binding share it.
+    pub fn register_queue(&self, name: &str) -> Arc<str> {
+        if let Some(existing) = self.interned(name) {
+            return existing;
+        }
+        // Not interned yet: materialize the Arc and adopt it (a racing
+        // register of the same name is resolved inside the write lock).
+        self.register_queue_arc(Arc::from(name))
+    }
+
+    /// Like [`Router::register_queue`] but adopts an existing handle, so
+    /// callers that already created the `Arc` (queue construction) intern
+    /// that exact allocation.
+    pub fn register_queue_arc(&self, name: Arc<str>) -> Arc<str> {
+        let mut names = self.queue_names.write().unwrap();
+        if let Some(existing) = names.get(&*name) {
+            return Arc::clone(existing);
+        }
+        names.insert(Arc::clone(&name));
+        self.default_generation.fetch_add(1, Ordering::Release);
+        name
+    }
+
+    /// The interned handle for a live queue name, if any.
+    pub fn interned(&self, name: &str) -> Option<Arc<str>> {
+        self.queue_names.read().unwrap().get(name).cloned()
     }
 
     /// Record that a queue is gone (delete) and drop all its bindings.
     pub fn unregister_queue(&self, name: &str) {
-        self.queue_names.write().unwrap().remove(name);
+        if self.queue_names.write().unwrap().remove(name) {
+            self.default_generation.fetch_add(1, Ordering::Release);
+        }
         for ex in self.exchanges.write().unwrap().values_mut() {
+            // `unbind_queue` bumps the exchange generation only when it
+            // actually removed bindings — untouched exchanges keep their
+            // cached routes.
             ex.unbind_queue(name);
         }
     }
@@ -71,13 +267,13 @@ impl Router {
         // before the strip (and is stripped) or the name is already gone
         // (and we error). No stale binding can survive.
         let mut exchanges = self.exchanges.write().unwrap();
-        if !self.queue_exists(queue) {
+        let Some(interned) = self.interned(queue) else {
             return Err(Error::Broker(format!("no such queue '{queue}'")));
-        }
+        };
         let ex = exchanges
             .get_mut(exchange)
             .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
-        ex.bind(routing_key, queue);
+        ex.bind(routing_key, &interned);
         Ok(())
     }
 
@@ -93,23 +289,76 @@ impl Router {
     /// Resolve `(exchange, routing_key)` to target queue names. The empty
     /// exchange is the AMQP default exchange: direct to the queue named by
     /// the key, if it exists.
-    pub fn route(&self, exchange: &str, routing_key: &str) -> Result<Vec<String>> {
+    ///
+    /// A cache hit is the publish fast path: one read lock on the cache
+    /// map, one atomic generation load, one refcount bump — no exchange
+    /// table lock and **zero allocations** (consecutive hits return the
+    /// same `Arc` allocation).
+    pub fn route(&self, exchange: &str, routing_key: &str) -> Result<RouteTargets> {
+        if self.cache.enabled {
+            if let Some(targets) = self.cache.lookup(exchange, routing_key) {
+                self.cache.hits.inc();
+                return Ok(targets);
+            }
+            self.cache.misses.inc();
+        }
+        let entry = self.resolve(exchange, routing_key)?;
+        let targets = Arc::clone(&entry.targets);
+        if self.cache.enabled {
+            self.cache.insert(exchange, routing_key, entry);
+        }
+        Ok(targets)
+    }
+
+    /// Resolve against the live tables, snapshotting `(generation,
+    /// targets)` under one read-lock hold so the pair is consistent: a
+    /// concurrent bind serialises on the write lock, so it either lands
+    /// before our snapshot (we see its effect *and* its generation) or
+    /// after (its bump invalidates what we are about to cache).
+    fn resolve(&self, exchange: &str, routing_key: &str) -> Result<CacheEntry> {
         if exchange.is_empty() {
-            return Ok(if self.queue_exists(routing_key) {
-                vec![routing_key.to_string()]
-            } else {
-                vec![]
+            let names = self.queue_names.read().unwrap();
+            let seen = self.default_generation.load(Ordering::Acquire);
+            let targets: RouteTargets = match names.get(routing_key) {
+                Some(q) => Arc::from(vec![Arc::clone(q)]),
+                None => Arc::from(Vec::new()),
+            };
+            return Ok(CacheEntry {
+                generation: Arc::clone(&self.default_generation),
+                seen,
+                targets,
             });
         }
         let exchanges = self.exchanges.read().unwrap();
         let ex = exchanges
             .get(exchange)
             .ok_or_else(|| Error::Broker(format!("no such exchange '{exchange}'")))?;
-        Ok(ex.route(routing_key).into_iter().map(String::from).collect())
+        let generation = ex.generation();
+        let seen = generation.load(Ordering::Acquire);
+        let targets: RouteTargets = Arc::from(ex.route(routing_key));
+        Ok(CacheEntry { generation, seen, targets })
     }
 
     pub fn exchange_count(&self) -> usize {
         self.exchanges.read().unwrap().len()
+    }
+
+    /// Cached entries across all stripes — live plus generation-stale
+    /// ones not yet reclaimed by a stripe sweep (tests / diagnostics).
+    pub fn route_cache_len(&self) -> usize {
+        if self.cache.enabled {
+            self.cache.len()
+        } else {
+            0
+        }
+    }
+
+    pub fn route_cache_hits(&self) -> u64 {
+        self.cache.hits.get()
+    }
+
+    pub fn route_cache_misses(&self) -> u64 {
+        self.cache.misses.get()
     }
 }
 
@@ -117,12 +366,16 @@ impl Router {
 mod tests {
     use super::*;
 
+    fn strs(targets: &RouteTargets) -> Vec<String> {
+        targets.iter().map(|q| q.to_string()).collect()
+    }
+
     #[test]
     fn default_exchange_routes_to_existing_queue_only() {
         let r = Router::new();
         assert!(r.route("", "tasks").unwrap().is_empty());
         r.register_queue("tasks");
-        assert_eq!(r.route("", "tasks").unwrap(), vec!["tasks"]);
+        assert_eq!(strs(&r.route("", "tasks").unwrap()), vec!["tasks"]);
         r.unregister_queue("tasks");
         assert!(r.route("", "tasks").unwrap().is_empty());
     }
@@ -145,7 +398,7 @@ mod tests {
         r.register_queue("q");
         assert!(r.bind("nope", "q", "k").is_err());
         r.bind("x", "q", "k").unwrap();
-        assert_eq!(r.route("x", "k").unwrap(), vec!["q"]);
+        assert_eq!(strs(&r.route("x", "k").unwrap()), vec!["q"]);
     }
 
     #[test]
@@ -165,5 +418,130 @@ mod tests {
     fn route_to_unknown_exchange_is_error() {
         let r = Router::new();
         assert!(r.route("ghost", "k").is_err());
+    }
+
+    #[test]
+    fn cache_hit_returns_the_same_allocation() {
+        // The zero-allocation pin: consecutive cached routes are the SAME
+        // Arc slice, not equal copies.
+        let r = Router::new();
+        r.declare_exchange("t", ExchangeKind::Topic).unwrap();
+        r.register_queue("q1");
+        r.bind("t", "q1", "proc.*.done").unwrap();
+        let first = r.route("t", "proc.7.done").unwrap();
+        let second = r.route("t", "proc.7.done").unwrap();
+        assert!(Arc::ptr_eq(&first, &second), "cache hit must reuse the allocation");
+        assert_eq!(r.route_cache_hits(), 1);
+        assert_eq!(r.route_cache_misses(), 1);
+        // The names inside are the interned declare-time handles.
+        let interned = r.interned("q1").unwrap();
+        assert!(Arc::ptr_eq(&first[0], &interned));
+    }
+
+    #[test]
+    fn bind_invalidates_cached_route() {
+        let r = Router::new();
+        r.declare_exchange("t", ExchangeKind::Topic).unwrap();
+        r.register_queue("q1");
+        r.bind("t", "q1", "ev.#").unwrap();
+        assert_eq!(strs(&r.route("t", "ev.x").unwrap()), vec!["q1"]);
+        r.register_queue("q2");
+        r.bind("t", "q2", "ev.*").unwrap();
+        let mut got = strs(&r.route("t", "ev.x").unwrap());
+        got.sort_unstable();
+        assert_eq!(got, vec!["q1", "q2"], "cached route must refresh after bind");
+    }
+
+    #[test]
+    fn unbind_and_queue_delete_invalidate_cached_route() {
+        let r = Router::new();
+        r.declare_exchange("t", ExchangeKind::Topic).unwrap();
+        r.register_queue("q1");
+        r.register_queue("q2");
+        r.bind("t", "q1", "ev.#").unwrap();
+        r.bind("t", "q2", "ev.#").unwrap();
+        let mut got = strs(&r.route("t", "ev.a").unwrap());
+        got.sort_unstable();
+        assert_eq!(got, vec!["q1", "q2"]);
+        r.unbind("t", "q1", "ev.#").unwrap();
+        assert_eq!(strs(&r.route("t", "ev.a").unwrap()), vec!["q2"]);
+        r.unregister_queue("q2");
+        assert!(r.route("t", "ev.a").unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_exchange_cache_tracks_registration() {
+        let r = Router::new();
+        assert!(r.route("", "q").unwrap().is_empty());
+        r.register_queue("q");
+        assert_eq!(strs(&r.route("", "q").unwrap()), vec!["q"]);
+        r.unregister_queue("q");
+        assert!(r.route("", "q").unwrap().is_empty());
+    }
+
+    #[test]
+    fn cap_zero_disables_caching() {
+        let r = Router::with_cache(0, Arc::new(Counter::new()), Arc::new(Counter::new()));
+        r.register_queue("q");
+        let a = r.route("", "q").unwrap();
+        let b = r.route("", "q").unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "cap 0 must resolve fresh every time");
+        assert_eq!(r.route_cache_hits(), 0);
+        assert_eq!(r.route_cache_misses(), 0);
+        assert_eq!(r.route_cache_len(), 0);
+    }
+
+    #[test]
+    fn cache_flushes_at_capacity() {
+        // The configured cap bounds the cached total exactly (stripe
+        // count adapts: stripes ≤ cap and floor division never inflate
+        // the budget), including tiny caps below the stripe count.
+        for cap in [4usize, 32] {
+            let r =
+                Router::with_cache(cap, Arc::new(Counter::new()), Arc::new(Counter::new()));
+            r.register_queue("q");
+            for i in 0..500 {
+                r.route("", &format!("k{i}")).unwrap();
+            }
+            assert!(
+                r.route_cache_len() <= cap,
+                "cache exceeded cap {cap}: {}",
+                r.route_cache_len()
+            );
+            // Still correct after stripe flushes.
+            assert_eq!(strs(&r.route("", "q").unwrap()), vec!["q"]);
+        }
+    }
+
+    #[test]
+    fn stale_entries_reclaimed_before_live_ones_are_flushed() {
+        // Fill a small cache, invalidate everything via a generation bump
+        // (register bumps the default exchange), then keep inserting:
+        // stale entries must be swept out rather than forcing wholesale
+        // flushes, and the total stays bounded.
+        let r = Router::with_cache(8, Arc::new(Counter::new()), Arc::new(Counter::new()));
+        r.register_queue("q");
+        for i in 0..8 {
+            r.route("", &format!("a{i}")).unwrap();
+        }
+        r.register_queue("bump"); // invalidates every cached default route
+        for i in 0..8 {
+            r.route("", &format!("b{i}")).unwrap();
+        }
+        assert!(r.route_cache_len() <= 8, "stale entries must not inflate the cache");
+        assert_eq!(strs(&r.route("", "q").unwrap()), vec!["q"]);
+    }
+
+    #[test]
+    fn interning_is_idempotent() {
+        let r = Router::new();
+        let a = r.register_queue("q");
+        let b = r.register_queue("q");
+        assert!(Arc::ptr_eq(&a, &b), "re-register must return the interned handle");
+        let c = r.register_queue_arc(Arc::from("q"));
+        assert!(Arc::ptr_eq(&a, &c), "adopting a duplicate must return the original");
+        let d: Arc<str> = Arc::from("fresh");
+        let e = r.register_queue_arc(Arc::clone(&d));
+        assert!(Arc::ptr_eq(&d, &e), "a new handle is adopted as-is");
     }
 }

@@ -27,12 +27,15 @@ pub struct Shard {
 
 /// The state guarded by one shard lock.
 pub struct ShardState {
-    /// Queues owned by this shard.
-    pub queues: HashMap<String, Queue>,
+    /// Queues owned by this shard, keyed by the router-interned name
+    /// handle (lookups still take `&str` via `Borrow`).
+    pub queues: HashMap<Arc<str>, Queue>,
     /// delivery_tag -> queue name, for tags allocated by this shard.
     /// Entries are pruned on ack/nack, on queue deletion and on connection
     /// disconnect (requeued messages get fresh tags on redelivery).
-    pub delivery_index: HashMap<u64, String>,
+    /// Values are interned handles: recording a delivery is a refcount
+    /// bump, not a `String` allocation.
+    pub delivery_index: HashMap<u64, Arc<str>>,
     /// Delivery targets: connections with consumers on this shard's
     /// queues. Populated on `Consume`, pruned on disconnect. Keeping the
     /// `Arc`s here lets the dispatcher send while holding only the shard
@@ -55,7 +58,7 @@ impl ShardState {
     /// (requeued messages get fresh tags on redelivery, so stale entries
     /// would leak forever under connection churn). Returns the number of
     /// requeued messages and the queues whose delivery pump should run.
-    pub fn drop_connection(&mut self, conn: ConnectionId) -> (usize, Vec<String>) {
+    pub fn drop_connection(&mut self, conn: ConnectionId) -> (usize, Vec<Arc<str>>) {
         self.conns.remove(&conn);
         let mut requeued = 0usize;
         let mut touched = Vec::new();
@@ -77,8 +80,8 @@ impl ShardState {
     pub fn for_dispatch(
         &mut self,
     ) -> (
-        &mut HashMap<String, Queue>,
-        &mut HashMap<u64, String>,
+        &mut HashMap<Arc<str>, Queue>,
+        &mut HashMap<u64, Arc<str>>,
         &HashMap<ConnectionId, Arc<ConnectionEntry>>,
         TagAlloc<'_>,
     ) {

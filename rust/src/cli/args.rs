@@ -17,7 +17,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "config", "addr", "workers", "heartbeat-ms", "queue", "process", "inputs", "pid", "reason",
     "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
-    "delivery-batch",
+    "delivery-batch", "route-cache",
 ];
 
 impl Args {
@@ -96,9 +96,10 @@ mod tests {
 
     #[test]
     fn sharding_options_take_values() {
-        let a = parse("kiwi broker --shards 8 --delivery-batch 128");
+        let a = parse("kiwi broker --shards 8 --delivery-batch 128 --route-cache 1024");
         assert_eq!(a.opt_parse::<usize>("shards").unwrap(), Some(8));
         assert_eq!(a.opt_parse::<usize>("delivery-batch").unwrap(), Some(128));
+        assert_eq!(a.opt_parse::<usize>("route-cache").unwrap(), Some(1024));
     }
 
     #[test]

@@ -34,6 +34,7 @@ USAGE: kiwi <subcommand> [options]
 SUBCOMMANDS
   broker    run the message broker            [--addr HOST:PORT] [--wal PATH | --transient]
                                               [--shards N (0 = per-core)] [--delivery-batch N]
+                                              [--route-cache N (0 = off)]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
   ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
@@ -85,6 +86,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(n) = args.opt_parse::<usize>("delivery-batch")? {
         config.delivery_batch = n.max(1);
+    }
+    if let Some(n) = args.opt_parse::<usize>("route-cache")? {
+        config.route_cache_cap = n;
     }
     Ok(config)
 }
@@ -147,10 +151,11 @@ fn cmd_broker(args: &Args) -> Result<()> {
     };
     let server = BrokerServer::start(broker, &config.broker_addr)?;
     println!(
-        "kiwi broker listening on {} ({} shards, delivery batch {})",
+        "kiwi broker listening on {} ({} shards, delivery batch {}, route cache {})",
         server.addr(),
         broker_config.shards,
-        broker_config.delivery_batch
+        broker_config.delivery_batch,
+        broker_config.route_cache_cap
     );
     // Run until killed; the heartbeat monitor and sessions do the work.
     loop {
@@ -272,7 +277,7 @@ mod tests {
     fn config_overrides_from_args() {
         let config = load_config(&parse(
             "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient \
-             --shards 2 --delivery-batch 32",
+             --shards 2 --delivery-batch 32 --route-cache 0",
         ))
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
@@ -281,5 +286,6 @@ mod tests {
         assert!(config.wal_path.is_none());
         assert_eq!(config.shards, 2);
         assert_eq!(config.delivery_batch, 32);
+        assert_eq!(config.route_cache_cap, 0);
     }
 }

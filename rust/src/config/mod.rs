@@ -34,6 +34,10 @@ pub struct Config {
     pub shards: usize,
     /// Max deliveries per shard-lock acquisition / DeliverBatch frame.
     pub delivery_batch: usize,
+    /// Route-cache capacity: `(exchange, routing_key) → targets` entries
+    /// the broker's router may cache (0 disables caching — every publish
+    /// resolves against the exchange tables, the seed behaviour).
+    pub route_cache_cap: usize,
 }
 
 impl Default for Config {
@@ -50,6 +54,7 @@ impl Default for Config {
             request_timeout: Duration::from_secs(30),
             shards: 0, // auto: one shard per available core
             delivery_batch: 64,
+            route_cache_cap: crate::broker::router::DEFAULT_ROUTE_CACHE_CAP,
         }
     }
 }
@@ -111,6 +116,9 @@ impl Config {
         if let Some(x) = v.get_opt("delivery_batch") {
             c.delivery_batch = (x.as_u64()? as usize).max(1);
         }
+        if let Some(x) = v.get_opt("route_cache_cap") {
+            c.route_cache_cap = x.as_u64()? as usize;
+        }
         Ok(c)
     }
 
@@ -134,6 +142,7 @@ impl Config {
             ),
             ("shards", Value::from(self.shards)),
             ("delivery_batch", Value::from(self.delivery_batch)),
+            ("route_cache_cap", Value::from(self.route_cache_cap)),
         ])
     }
 
@@ -146,6 +155,7 @@ impl Config {
                 self.shards
             },
             delivery_batch: self.delivery_batch.max(1),
+            route_cache_cap: self.route_cache_cap,
         }
     }
 
@@ -173,7 +183,7 @@ impl Config {
 
     /// `KIWI_BROKER_ADDR`, `KIWI_WORKERS`, `KIWI_HEARTBEAT_MS`,
     /// `KIWI_ARTIFACTS_DIR`, `KIWI_CHECKPOINT_DIR`, `KIWI_SHARDS`,
-    /// `KIWI_DELIVERY_BATCH` override the file.
+    /// `KIWI_DELIVERY_BATCH`, `KIWI_ROUTE_CACHE` override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -202,6 +212,11 @@ impl Config {
         if let Ok(v) = std::env::var("KIWI_DELIVERY_BATCH") {
             if let Ok(n) = v.parse::<usize>() {
                 self.delivery_batch = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_ROUTE_CACHE") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.route_cache_cap = n;
             }
         }
     }
@@ -249,13 +264,24 @@ mod tests {
 
     #[test]
     fn sharding_knobs_parse_and_resolve() {
-        let v = json::from_str(r#"{"shards": 4, "delivery_batch": 16}"#).unwrap();
+        let v =
+            json::from_str(r#"{"shards": 4, "delivery_batch": 16, "route_cache_cap": 128}"#)
+                .unwrap();
         let c = Config::from_value(&v).unwrap();
         assert_eq!(c.shards, 4);
         assert_eq!(c.delivery_batch, 16);
+        assert_eq!(c.route_cache_cap, 128);
         let bc = c.broker_config();
         assert_eq!(bc.shards, 4);
         assert_eq!(bc.delivery_batch, 16);
+        assert_eq!(bc.route_cache_cap, 128);
+        // 0 is a valid setting: it disables the route cache.
+        let v = json::from_str(r#"{"route_cache_cap": 0}"#).unwrap();
+        assert_eq!(Config::from_value(&v).unwrap().route_cache_cap, 0);
+        assert_eq!(
+            Config::default().route_cache_cap,
+            crate::broker::router::DEFAULT_ROUTE_CACHE_CAP
+        );
         // shards=0 means "one per core": always ≥ 1.
         assert!(Config::default().broker_config().shards >= 1);
         // delivery_batch is clamped to ≥ 1.

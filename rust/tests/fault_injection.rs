@@ -217,7 +217,7 @@ fn mid_batch_consumer_death_redelivers_in_order_exactly_once() {
     let broker = kiwi::broker::core::BrokerHandle::with_config(
         Box::new(NoopPersister),
         kiwi::broker::persistence::RecoveredState::default(),
-        BrokerConfig { shards: 4, delivery_batch: 16 },
+        BrokerConfig { shards: 4, delivery_batch: 16, ..Default::default() },
     );
     let (tx1, rx1) = channel();
     let doomed = broker.connect("doomed", 0, tx1);

@@ -1,0 +1,269 @@
+//! Topic-routing integration suite: the trie index must be
+//! routing-equivalent to the retained reference DP matcher
+//! ([`kiwi::broker::exchange::topic_matches`]), and the route cache must
+//! never serve a stale route across bind / unbind / queue-delete — even
+//! concurrent with publishes (generation-counter semantics).
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use kiwi::broker::core::{BrokerConfig, BrokerHandle};
+use kiwi::broker::exchange::topic_matches;
+use kiwi::broker::persistence::{NoopPersister, RecoveredState};
+use kiwi::broker::protocol::{ClientRequest, ExchangeKind, MessageProps, QueueOptions};
+use kiwi::broker::router::Router;
+use kiwi::metrics::Counter;
+use kiwi::proputil::{run_prop, Rng};
+use kiwi::wire::{Bytes, Value};
+
+/// Reference resolver: the seed's linear scan — every binding through the
+/// DP matcher, deduplicated.
+fn reference_route(bindings: &[(String, String)], key: &str) -> Vec<String> {
+    let mut out: Vec<String> = bindings
+        .iter()
+        .filter(|(pat, _)| topic_matches(pat, key))
+        .map(|(_, q)| q.clone())
+        .collect::<BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+fn route_sorted(router: &Router, exchange: &str, key: &str) -> Vec<String> {
+    let mut got: Vec<String> =
+        router.route(exchange, key).unwrap().iter().map(|q| q.to_string()).collect();
+    got.sort_unstable();
+    got
+}
+
+fn random_pattern(rng: &Rng, vocab: &[&str]) -> String {
+    let nw = rng.range(0, 5);
+    (0..nw)
+        .map(|_| match rng.below(5) {
+            0 => "*".to_string(),
+            1 => "#".to_string(),
+            _ => vocab[rng.range(0, vocab.len())].to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join(".")
+}
+
+fn random_key(rng: &Rng, vocab: &[&str]) -> String {
+    let nw = rng.range(0, 5);
+    (0..nw)
+        .map(|_| vocab[rng.range(0, vocab.len())].to_string())
+        .collect::<Vec<_>>()
+        .join(".")
+}
+
+/// Drive a random bind/unbind/route interleaving through a cached Router
+/// and a reference binding list; every route must agree. This pins both
+/// trie ≡ DP-matcher equivalence *and* cache invalidation (a stale cached
+/// route after any mutation diverges from the reference immediately).
+#[test]
+fn prop_router_equals_reference_under_churn() {
+    run_prop("router ≡ reference under churn", |rng: &Rng| {
+        let vocab = ["a", "b", "c", "d"];
+        let router = Router::new();
+        router.declare_exchange("t", ExchangeKind::Topic).unwrap();
+        let queues: Vec<String> = (0..4).map(|i| format!("q{i}")).collect();
+        for q in &queues {
+            router.register_queue(q);
+        }
+        let mut reference: Vec<(String, String)> = Vec::new();
+        for _ in 0..rng.range(10, 60) {
+            match rng.below(3) {
+                0 => {
+                    let pat = random_pattern(rng, &vocab);
+                    let q = &queues[rng.range(0, queues.len())];
+                    router.bind("t", q, &pat).unwrap();
+                    if !reference.iter().any(|(p, qq)| p == &pat && qq == q) {
+                        reference.push((pat, q.clone()));
+                    }
+                }
+                1 => {
+                    if !reference.is_empty() {
+                        let i = rng.range(0, reference.len());
+                        let (pat, q) = reference.swap_remove(i);
+                        router.unbind("t", &q, &pat).unwrap();
+                    }
+                }
+                _ => {
+                    let key = random_key(rng, &vocab);
+                    assert_eq!(
+                        route_sorted(&router, "t", &key),
+                        reference_route(&reference, &key),
+                        "divergence on key '{key}' with bindings {reference:?}"
+                    );
+                }
+            }
+        }
+        // Final sweep over a fixed key set.
+        for key in ["", "a", "a.b", "a.b.c", "d.d.d.d"] {
+            assert_eq!(
+                route_sorted(&router, "t", key),
+                reference_route(&reference, key),
+                "final divergence on '{key}'"
+            );
+        }
+    });
+}
+
+#[test]
+fn cache_hit_returns_identical_allocation_and_interned_names() {
+    // The zero-allocation acceptance pin: consecutive cached routes are
+    // the SAME `Arc<[Arc<str>]>` allocation, and the names inside are the
+    // declare-time interned handles.
+    let router = Router::new();
+    router.declare_exchange("ev", ExchangeKind::Topic).unwrap();
+    let interned = router.register_queue("waiters");
+    router.bind("ev", "waiters", "proc.*.terminated").unwrap();
+    let a = router.route("ev", "proc.17.terminated").unwrap();
+    let b = router.route("ev", "proc.17.terminated").unwrap();
+    let c = router.route("ev", "proc.17.terminated").unwrap();
+    assert!(Arc::ptr_eq(&a, &b) && Arc::ptr_eq(&b, &c));
+    assert_eq!(a.len(), 1);
+    assert!(Arc::ptr_eq(&a[0], &interned), "route targets must be the interned handles");
+    assert_eq!(router.route_cache_misses(), 1);
+    assert_eq!(router.route_cache_hits(), 2);
+}
+
+#[test]
+fn cap_zero_restores_seed_resolution() {
+    let router = Router::with_cache(0, Arc::new(Counter::new()), Arc::new(Counter::new()));
+    router.declare_exchange("ev", ExchangeKind::Topic).unwrap();
+    router.register_queue("q");
+    router.bind("ev", "q", "a.#").unwrap();
+    let a = router.route("ev", "a.b").unwrap();
+    let b = router.route("ev", "a.b").unwrap();
+    assert_eq!(route_sorted(&router, "ev", "a.b"), vec!["q"]);
+    assert!(!Arc::ptr_eq(&a, &b), "cap 0 must resolve fresh on every publish");
+    assert_eq!(router.route_cache_len(), 0);
+}
+
+/// Publisher threads hammer `route` while the main thread toggles a
+/// binding on and off. Every observed route must be exactly one of the
+/// two legal sets — a stale mix (generation violation) fails.
+#[test]
+fn concurrent_bind_churn_never_serves_stale_routes() {
+    let router = Arc::new(Router::new());
+    router.declare_exchange("t", ExchangeKind::Topic).unwrap();
+    router.register_queue("stable");
+    router.register_queue("flapper");
+    router.bind("t", "stable", "ev.#").unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for _ in 0..4 {
+        let router = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        readers.push(std::thread::spawn(move || {
+            let mut observed_flapper = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let targets = router.route("t", "ev.x").unwrap();
+                let mut names: Vec<&str> = targets.iter().map(|q| &**q).collect();
+                names.sort_unstable();
+                match names.as_slice() {
+                    ["stable"] => {}
+                    ["flapper", "stable"] => observed_flapper += 1,
+                    other => panic!("illegal route {other:?}"),
+                }
+            }
+            observed_flapper
+        }));
+    }
+    for _ in 0..500 {
+        router.bind("t", "flapper", "ev.*").unwrap();
+        std::hint::black_box(router.route("t", "ev.x").unwrap());
+        router.unbind("t", "flapper", "ev.*").unwrap();
+    }
+    // Leave it bound: after this point every route MUST include it.
+    router.bind("t", "flapper", "ev.*").unwrap();
+    let settled = route_sorted(&router, "t", "ev.x");
+    assert_eq!(settled, vec!["flapper", "stable"]);
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().unwrap();
+    }
+    assert_eq!(route_sorted(&router, "t", "ev.x"), vec!["flapper", "stable"]);
+}
+
+/// End-to-end through the broker: concurrent publishers + bind/unbind
+/// churn on a topic exchange; the delivered message counts must equal
+/// what the binding timeline allows (mandatory publishes to an unbound
+/// key must error, bound ones must route) — and the run must book cache
+/// traffic.
+#[test]
+fn broker_publishes_track_binding_changes_under_cache() {
+    let broker = BrokerHandle::with_config(
+        Box::new(NoopPersister),
+        RecoveredState::default(),
+        BrokerConfig { shards: 4, delivery_batch: 16, ..Default::default() },
+    );
+    let (tx, _rx) = std::sync::mpsc::channel();
+    let conn = broker.connect("pub", 0, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::ExchangeDeclare { exchange: "ev".into(), kind: ExchangeKind::Topic },
+        )
+        .unwrap();
+    broker
+        .handle(
+            conn,
+            &ClientRequest::QueueDeclare {
+                queue: "sink".into(),
+                options: QueueOptions::default(),
+            },
+        )
+        .unwrap();
+    let publish = |mandatory: bool| {
+        broker.handle(
+            conn,
+            &ClientRequest::Publish {
+                exchange: "ev".into(),
+                routing_key: "proc.1.done".into(),
+                body: Bytes::encode(&Value::Null),
+                props: MessageProps::default().into(),
+                mandatory,
+            },
+        )
+    };
+    // Unbound: mandatory publish must fail even after the route was cached.
+    assert!(publish(false).is_ok());
+    assert!(publish(true).is_err());
+    for round in 0..50 {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Bind {
+                    exchange: "ev".into(),
+                    queue: "sink".into(),
+                    routing_key: "proc.*.done".into(),
+                },
+            )
+            .unwrap();
+        assert_eq!(
+            publish(true).unwrap().get_u64("routed").unwrap(),
+            1,
+            "round {round}: bound publish must route"
+        );
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Unbind {
+                    exchange: "ev".into(),
+                    queue: "sink".into(),
+                    routing_key: "proc.*.done".into(),
+                },
+            )
+            .unwrap();
+        assert!(publish(true).is_err(), "round {round}: unbound publish must not route");
+    }
+    assert_eq!(broker.queue_depth("sink"), Some(50));
+    let hits = broker.metrics().counter("broker.route_cache_hits_total").get();
+    let misses = broker.metrics().counter("broker.route_cache_misses_total").get();
+    assert!(misses > 0, "binding churn must produce cache misses");
+    assert!(hits + misses >= 101, "every publish consults the cache");
+}
