@@ -36,13 +36,19 @@ use std::time::Instant;
 
 use crate::broker::dispatch::Dispatcher;
 use crate::broker::persistence::{NoopPersister, Persister, RecoveredState};
-use crate::broker::protocol::{ClientRequest, EncodedProps, QueueOptions, ServerMsg};
-use crate::broker::queue::{Consumer, Queue, QueuedMessage};
+use crate::broker::protocol::{ClientRequest, EncodedProps, MessageProps, QueueOptions, ServerMsg};
+use crate::broker::queue::{Consumer, DeadReason, NackOutcome, PendingDead, Queue, QueuedMessage};
 use crate::broker::router::Router;
 use crate::broker::shard::ShardSet;
 use crate::error::{Error, Result};
 use crate::metrics::{Counter, Registry};
 use crate::wire::{Bytes, Value};
+
+/// Bound on dead-letter *cascades inside one operation* (a DLX target
+/// overflowing into its own DLX, and so on). Messages still pending past
+/// this depth are retired with a warning instead of republished — a
+/// misconfigured DLX cycle degrades to a drop, never to a livelock.
+const MAX_DLX_DEPTH: usize = 16;
 
 /// Identifies one client connection to the broker.
 pub type ConnectionId = u64;
@@ -142,6 +148,13 @@ pub struct BrokerCore {
     ctr_acked: Arc<Counter>,
     /// Ingress payload bytes (props + body) accepted by `Publish`.
     ctr_bytes_in: Arc<Counter>,
+    /// Messages that left a queue dead (rejected / max-delivery / expired
+    /// / overflow), whether or not a DLX caught them.
+    ctr_dead_lettered: Arc<Counter>,
+    /// TTL expiries (subset of the above with reason `expired`).
+    ctr_expired: Arc<Counter>,
+    /// Dead messages actually re-published onto a dead-letter exchange.
+    ctr_dlx_republished: Arc<Counter>,
 }
 
 impl Default for BrokerHandle {
@@ -164,7 +177,7 @@ impl BrokerHandle {
 
     /// Full control over sharding and batching (benches sweep these).
     pub fn with_config(
-        persister: Box<dyn Persister>,
+        mut persister: Box<dyn Persister>,
         recovered: RecoveredState,
         config: BrokerConfig,
     ) -> Self {
@@ -190,7 +203,24 @@ impl BrokerHandle {
             if let Some(msgs) = recovered.messages.get(name) {
                 for mut m in msgs.iter().cloned() {
                     crate::broker::persistence::rearm_deadline(&mut m, options.default_ttl_ms, now);
-                    q.publish(m, now);
+                    let out = q.publish(m, now);
+                    // Recovery can only displace messages when max_length
+                    // shrank between runs; there is no client to answer
+                    // and no DLX pipeline yet, so retire them honestly
+                    // instead of resurrecting them on every restart.
+                    for d in out.dead {
+                        log::warn!(
+                            "broker: recovered message {} overflowed queue '{name}'; retired",
+                            d.message.msg_id
+                        );
+                        persister
+                            .record_retire_reason(
+                                name,
+                                d.message.msg_id,
+                                DeadReason::Overflow.as_str(),
+                            )
+                            .ok();
+                    }
                 }
                 // Recovery re-publishes; reset the counter so stats reflect
                 // this process's traffic.
@@ -202,6 +232,9 @@ impl BrokerHandle {
         let ctr_published = metrics.counter("broker.published");
         let ctr_acked = metrics.counter("broker.acked");
         let ctr_bytes_in = metrics.counter("broker.bytes_in_total");
+        let ctr_dead_lettered = metrics.counter("broker.dead_lettered_total");
+        let ctr_expired = metrics.counter("broker.expired_total");
+        let ctr_dlx_republished = metrics.counter("broker.dlx_republished_total");
         BrokerHandle {
             core: Arc::new(BrokerCore {
                 router,
@@ -219,6 +252,9 @@ impl BrokerHandle {
                 ctr_published,
                 ctr_acked,
                 ctr_bytes_in,
+                ctr_dead_lettered,
+                ctr_expired,
+                ctr_dlx_republished,
             }),
         }
     }
@@ -278,10 +314,21 @@ impl BrokerHandle {
         }
         let mut requeued = 0usize;
         let mut touched: Vec<Arc<str>> = Vec::new();
+        let mut pending: Vec<PendingDead> = Vec::new();
         for shard in core.shards.iter() {
-            let (n, t) = shard.lock().drop_connection(conn);
-            requeued += n;
-            touched.extend(t);
+            let out = shard.lock().drop_connection(conn);
+            requeued += out.requeued;
+            touched.extend(out.touched);
+            pending.extend(out.dead);
+            // Requeue records (shard lock already released): attempt counts
+            // of the requeued messages survive a broker restart, so the
+            // max_delivery cap keeps counting across crashes.
+            if !out.requeue_log.is_empty() {
+                let mut p = core.persister.lock().unwrap();
+                for (qname, entries) in out.requeue_log {
+                    p.record_requeue_batch(&qname, &entries).ok();
+                }
+            }
         }
         if requeued > 0 {
             core.metrics.counter("broker.requeued_on_death").add(requeued as u64);
@@ -298,6 +345,9 @@ impl BrokerHandle {
             self.delete_queue_guarded(name, Some(conn)).ok();
         }
         touched.retain(|q| !exclusive.iter().any(|e| e.as_str() == &**q));
+        // Messages the dying connection pushed over their max_delivery cap
+        // go to their DLX now (their targets join the dispatch round).
+        self.process_dead_letters(pending, &mut touched);
         self.run_dispatches(touched);
     }
 
@@ -337,14 +387,29 @@ impl BrokerHandle {
 
     /// Pump every queue named in `dispatches` (deduplicated). Runs with no
     /// locks held; the dispatcher takes each queue's shard lock itself.
+    ///
+    /// Pumping can surface expired messages, whose dead-letter re-publish
+    /// can in turn make *other* queues deliverable — so this loops until
+    /// no new dispatch targets appear (bounded; each round only exists
+    /// because the previous one dead-lettered something, and the depth cap
+    /// inside `process_dead_letters` breaks cycles).
     fn run_dispatches(&self, mut dispatches: Vec<Arc<str>>) {
-        if dispatches.is_empty() {
-            return;
-        }
-        dispatches.sort_unstable();
-        dispatches.dedup();
-        for q in &dispatches {
-            self.core.dispatcher.pump(&self.core.shards, &self.core.persister, q);
+        let mut rounds = 0usize;
+        while !dispatches.is_empty() {
+            rounds += 1;
+            if rounds > MAX_DLX_DEPTH * 4 {
+                log::warn!("broker: dispatch/dead-letter loop truncated after {rounds} rounds");
+                return;
+            }
+            dispatches.sort_unstable();
+            dispatches.dedup();
+            let mut pending: Vec<PendingDead> = Vec::new();
+            for q in &dispatches {
+                pending.extend(self.core.dispatcher.pump(&self.core.shards, q));
+            }
+            let mut next = Vec::new();
+            self.process_dead_letters(pending, &mut next);
+            dispatches = next;
         }
     }
 
@@ -507,25 +572,13 @@ impl BrokerHandle {
                 self.ack_many(delivery_tags, dispatches)?;
                 Ok(Value::Null)
             }
-            ClientRequest::Nack { delivery_tag, requeue } => {
-                let tag = *delivery_tag;
-                let outcome = {
-                    let mut st = core.shards.shard_for_tag(tag).lock();
-                    let Some(qname) = st.delivery_index.remove(&tag) else {
-                        return Ok(Value::Null);
-                    };
-                    let Some(q) = st.queues.get_mut(&qname) else {
-                        return Ok(Value::Null);
-                    };
-                    let dropped = q.nack(tag, *requeue);
-                    Some((qname, dropped, q.options.durable))
-                };
-                if let Some((qname, dropped, durable)) = outcome {
-                    if let (Some(id), true) = (dropped, durable) {
-                        core.persister.lock().unwrap().record_retire(&qname, id)?;
-                    }
-                    dispatches.push(qname);
-                }
+            ClientRequest::Nack { delivery_tag, requeue }
+            | ClientRequest::Reject { delivery_tag, requeue } => {
+                self.nack_tags(&[*delivery_tag], *requeue, dispatches)?;
+                Ok(Value::Null)
+            }
+            ClientRequest::NackMulti { delivery_tags, requeue } => {
+                self.nack_tags(delivery_tags, *requeue, dispatches)?;
                 Ok(Value::Null)
             }
             ClientRequest::Status => {
@@ -626,6 +679,71 @@ impl BrokerHandle {
         Ok(())
     }
 
+    /// Negative-acknowledge a batch of delivery tags (`Nack`, `Reject`
+    /// and `NackMulti` all land here). Each shard is locked once for its
+    /// share; requeue WAL records and the dead-letter pipeline run after
+    /// the lock is released. Unknown tags are skipped (idempotent).
+    fn nack_tags(
+        &self,
+        tags: &[u64],
+        requeue: bool,
+        dispatches: &mut Vec<Arc<str>>,
+    ) -> Result<()> {
+        let core = &*self.core;
+        let mut by_shard: Vec<(usize, Vec<u64>)> = Vec::new();
+        for tag in tags {
+            let i = core.shards.shard_for_tag(*tag).index();
+            match by_shard.iter_mut().find(|(s, _)| *s == i) {
+                Some((_, ts)) => ts.push(*tag),
+                None => by_shard.push((i, vec![*tag])),
+            }
+        }
+        let mut pending: Vec<PendingDead> = Vec::new();
+        for (i, mut shard_tags) in by_shard {
+            // Descending tag order + push_front = oldest delivery ends up
+            // first, so a requeued batch `m1, m2, m3` redelivers as
+            // `m1, m2, m3` — the same FIFO-preserving trick the
+            // connection-death requeue uses (tags are allocated
+            // monotonically per shard).
+            shard_tags.sort_unstable_by(|a, b| b.cmp(a));
+            // queue -> (msg_id, delivery_count) requeue-log entries.
+            let mut requeue_log: Vec<(Arc<str>, Vec<(u64, u32)>)> = Vec::new();
+            {
+                let mut st = core.shards.get(i).lock();
+                for tag in shard_tags {
+                    let Some(qname) = st.delivery_index.remove(&tag) else { continue };
+                    let Some(q) = st.queues.get_mut(&qname) else { continue };
+                    match q.nack(tag, requeue) {
+                        NackOutcome::Unknown => {}
+                        NackOutcome::Requeued { msg_id, delivery_count } => {
+                            if q.options.durable {
+                                match requeue_log.iter_mut().find(|(n, _)| *n == qname) {
+                                    Some((_, es)) => es.push((msg_id, delivery_count)),
+                                    None => requeue_log
+                                        .push((qname.clone(), vec![(msg_id, delivery_count)])),
+                                }
+                            }
+                            dispatches.push(qname);
+                        }
+                        NackOutcome::Dead(d) => {
+                            pending.extend(q.pend_dead(vec![d]));
+                            // The consumer's prefetch slot is free again.
+                            dispatches.push(qname);
+                        }
+                    }
+                }
+            }
+            if !requeue_log.is_empty() {
+                let mut p = core.persister.lock().unwrap();
+                for (qname, entries) in requeue_log {
+                    p.record_requeue_batch(&qname, &entries)?;
+                }
+            }
+        }
+        self.process_dead_letters(pending, dispatches);
+        Ok(())
+    }
+
     /// Connections that have missed two heartbeat intervals. Used by the
     /// heartbeat monitor; eviction = `disconnect`.
     pub fn stale_connections(&self, now: Instant) -> Vec<ConnectionId> {
@@ -644,28 +762,38 @@ impl BrokerHandle {
             .collect()
     }
 
-    /// Periodic maintenance: expire TTL'd messages, compact the WAL.
+    /// Periodic maintenance: expire TTL'd messages (routing them to their
+    /// queue's DLX instead of dropping them without a trace), compact the
+    /// WAL.
     pub fn sweep(&self) {
         let core = &*self.core;
         let now = Instant::now();
+        let mut dispatches: Vec<Arc<str>> = Vec::new();
         for shard in core.shards.iter() {
-            let mut retired: Vec<(Arc<str>, Vec<u64>)> = Vec::new();
+            let mut pending: Vec<PendingDead> = Vec::new();
             {
                 let mut st = shard.lock();
-                for (name, q) in st.queues.iter_mut() {
-                    let ids = q.sweep_expired(now);
-                    if q.options.durable && !ids.is_empty() {
-                        retired.push((name.clone(), ids));
+                for q in st.queues.values_mut() {
+                    let swept = q.sweep_expired(now);
+                    if swept.is_empty() {
+                        continue;
                     }
+                    pending.extend(q.pend_dead(
+                        swept
+                            .into_iter()
+                            .map(|m| crate::broker::queue::DeadLettered {
+                                reason: DeadReason::Expired,
+                                message: m,
+                            })
+                            .collect(),
+                    ));
                 }
             }
-            if !retired.is_empty() {
-                let mut p = core.persister.lock().unwrap();
-                for (name, ids) in retired {
-                    p.record_retire_batch(&name, &ids).ok();
-                }
-            }
+            // Retire + DLX re-publish with this shard's lock released; a
+            // DLX target on the same shard re-locks it safely.
+            self.process_dead_letters(pending, &mut dispatches);
         }
+        self.run_dispatches(dispatches);
         core.persister.lock().unwrap().maybe_compact().ok();
     }
 
@@ -822,9 +950,10 @@ impl BrokerHandle {
         Ok(())
     }
 
-    /// Route and enqueue. Returns the number of queues the message reached.
-    /// Durable targets are WAL-logged as one group-committed batch per
-    /// shard *before* enqueueing (write-AHEAD).
+    /// Route and enqueue. Returns the number of queues that accepted a
+    /// copy. Durable targets are WAL-logged as one group-committed batch
+    /// per shard *before* enqueueing (write-AHEAD). Overflow-displaced
+    /// messages go through the dead-letter pipeline afterwards.
     ///
     /// The body stays the publisher's encoded buffer end-to-end: each queue
     /// copy is a refcount bump of `body`/`props`, never a re-encode.
@@ -845,6 +974,44 @@ impl BrokerHandle {
         }
         let exchange: Arc<str> = Arc::from(exchange);
         let routing_key: Arc<str> = Arc::from(routing_key);
+        let mut pending: Vec<PendingDead> = Vec::new();
+        let routed = self.enqueue_to_targets(
+            &targets,
+            &exchange,
+            &routing_key,
+            &body,
+            &props,
+            dispatches,
+            &mut pending,
+        )?;
+        // Counted only after at least one queue actually accepted a copy:
+        // unroutable, raced-delete, overflow-refused and WAL-failed
+        // publishes are not "accepted ingress".
+        if routed > 0 {
+            core.ctr_bytes_in.add((body.len() + props.bytes().len()) as u64);
+        }
+        self.process_dead_letters(pending, dispatches);
+        Ok(routed)
+    }
+
+    /// Enqueue one already-routed message into `targets`, locking each
+    /// shard exactly once. The single building block under both the client
+    /// publish path and the dead-letter re-publish path; it never recurses
+    /// into dead-letter processing itself — displaced messages are pushed
+    /// onto `pending` for the caller's worklist. Returns how many queues
+    /// accepted the message.
+    #[allow(clippy::too_many_arguments)]
+    fn enqueue_to_targets(
+        &self,
+        targets: &[Arc<str>],
+        exchange: &Arc<str>,
+        routing_key: &Arc<str>,
+        body: &Bytes,
+        props: &EncodedProps,
+        dispatches: &mut Vec<Arc<str>>,
+        pending: &mut Vec<PendingDead>,
+    ) -> Result<usize> {
+        let core = &*self.core;
         let now = Instant::now();
         // Group targets by shard so each shard is locked exactly once.
         let mut by_shard: Vec<(usize, Vec<&Arc<str>>)> = Vec::new();
@@ -866,12 +1033,13 @@ impl BrokerHandle {
                     Arc::clone(qname),
                     QueuedMessage {
                         msg_id,
-                        exchange: Arc::clone(&exchange),
-                        routing_key: Arc::clone(&routing_key),
+                        exchange: Arc::clone(exchange),
+                        routing_key: Arc::clone(routing_key),
                         body: body.clone(),
                         props: props.clone(),
                         deadline: None,
                         redelivered: false,
+                        delivery_count: 0,
                     },
                     q.options.durable,
                 ));
@@ -899,26 +1067,206 @@ impl BrokerHandle {
                     core.persister.lock().unwrap().record_publish_batch(&wal_batch)?;
                 }
             }
-            for (qname, msg, durable) in to_enqueue {
-                let dropped = {
+            for (qname, msg, _durable) in to_enqueue {
+                let accepted = {
                     let q = st.queues.get_mut(&qname).unwrap();
-                    q.publish(msg, now)
+                    let out = q.publish(msg, now);
+                    if !out.dead.is_empty() {
+                        pending.extend(q.pend_dead(out.dead));
+                    }
+                    out.accepted
                 };
-                if durable && !dropped.is_empty() {
-                    core.persister.lock().unwrap().record_retire_batch(&qname, &dropped)?;
+                if accepted {
+                    dispatches.push(qname);
+                    routed += 1;
                 }
-                dispatches.push(qname);
-                routed += 1;
             }
-        }
-        // Counted only after at least one queue actually accepted a copy:
-        // unroutable, raced-delete and WAL-failed publishes are not
-        // "accepted ingress".
-        if routed > 0 {
-            core.ctr_bytes_in.add((body.len() + props.bytes().len()) as u64);
         }
         Ok(routed)
     }
+
+    /// The dead-letter pipeline. Runs with **no locks held** (callers
+    /// release every shard lock first): for each dead message it books the
+    /// counters, WAL-retires it from its durable source queue (with the
+    /// reason), and — when the source queue has a DLX — re-publishes it
+    /// through the router with `x-death` metadata in the props and the
+    /// body's original `Bytes` shared untouched. Re-publishes that displace
+    /// further messages (overflow in a DLX target) feed back into the
+    /// worklist, bounded by [`MAX_DLX_DEPTH`].
+    fn process_dead_letters(&self, pending: Vec<PendingDead>, dispatches: &mut Vec<Arc<str>>) {
+        if pending.is_empty() {
+            return;
+        }
+        let core = &*self.core;
+        let mut work = pending;
+        let mut depth = 0usize;
+        while !work.is_empty() {
+            depth += 1;
+            let over_depth = depth > MAX_DLX_DEPTH;
+            let batch = std::mem::take(&mut work);
+            // 1. Counters + WAL retirement (grouped per source queue and
+            //    reason so a sweep's worth of expiries is one flush).
+            let mut retires: Vec<(Arc<str>, DeadReason, Vec<u64>)> = Vec::new();
+            for pd in &batch {
+                core.ctr_dead_lettered.inc();
+                if pd.reason == DeadReason::Expired {
+                    core.ctr_expired.inc();
+                }
+                if pd.durable {
+                    match retires
+                        .iter_mut()
+                        .find(|(q, r, _)| *q == pd.source && *r == pd.reason)
+                    {
+                        Some((_, _, ids)) => ids.push(pd.message.msg_id),
+                        None => {
+                            retires.push((pd.source.clone(), pd.reason, vec![pd.message.msg_id]))
+                        }
+                    }
+                }
+            }
+            // Groups whose retire record could not be written: their
+            // durable messages must NOT be re-published — the source
+            // publish record is still live in the WAL, so a DLX copy
+            // would come back as a duplicate after recovery. Skipping the
+            // republish degrades to at-least-once (recovery resurrects
+            // the message in its source queue), never to duplication.
+            let mut retire_failed: Vec<(Arc<str>, DeadReason)> = Vec::new();
+            if !retires.is_empty() {
+                let mut p = core.persister.lock().unwrap();
+                for (q, reason, ids) in retires {
+                    if let Err(e) = p.record_retire_reason_batch(&q, &ids, reason.as_str()) {
+                        log::error!(
+                            "broker: WAL retire of {} dead message(s) from '{q}' failed: {e}; \
+                             deferring them to recovery",
+                            ids.len()
+                        );
+                        retire_failed.push((q, reason));
+                    }
+                }
+            }
+            if over_depth {
+                log::warn!(
+                    "broker: dead-letter cascade deeper than {MAX_DLX_DEPTH}; \
+                     dropping {} message(s) (DLX cycle?)",
+                    batch.len()
+                );
+                return;
+            }
+            // 2. Re-publish to each source queue's DLX.
+            for pd in batch {
+                if pd.durable
+                    && retire_failed.iter().any(|(q, r)| *q == pd.source && *r == pd.reason)
+                {
+                    continue;
+                }
+                let Some(dlx) = pd.dead_letter_exchange else { continue };
+                let rk_str: &str =
+                    pd.dead_letter_routing_key.as_deref().unwrap_or(&*pd.message.routing_key);
+                // Resolved through the same route cache as client
+                // publishes; a missing DLX degrades to a logged drop.
+                let Some(targets) = core.router.route_if_exists(&dlx, rk_str) else {
+                    log::warn!(
+                        "broker: dead-letter exchange '{dlx}' of queue '{}' does not exist; \
+                         message {} dropped",
+                        pd.source,
+                        pd.message.msg_id
+                    );
+                    continue;
+                };
+                if targets.is_empty() {
+                    log::warn!(
+                        "broker: dead-letter message {} from '{}' unroutable on '{dlx}' \
+                         (key '{rk_str}'); dropped",
+                        pd.message.msg_id,
+                        pd.source
+                    );
+                    continue;
+                }
+                let props = death_props(
+                    &pd.message.props,
+                    &pd.source,
+                    pd.reason,
+                    &pd.message.exchange,
+                    &pd.message.routing_key,
+                );
+                let exchange: Arc<str> = Arc::from(dlx.as_str());
+                let routing_key: Arc<str> = Arc::from(rk_str);
+                match self.enqueue_to_targets(
+                    &targets,
+                    &exchange,
+                    &routing_key,
+                    // The body is the publisher's original encode — the
+                    // dead-letter hop is another refcount bump, not a copy.
+                    &pd.message.body,
+                    &props,
+                    dispatches,
+                    &mut work,
+                ) {
+                    Ok(n) if n > 0 => core.ctr_dlx_republished.inc(),
+                    Ok(_) => {}
+                    Err(e) => {
+                        log::warn!("broker: dead-letter republish from '{}': {e}", pd.source)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build the death-annotated props for a dead-letter re-publish: the
+/// original props plus RabbitMQ-style `x-death` metadata (one list entry
+/// per `(queue, reason)`, with a running `count` so cycles are visible),
+/// `x-first-death-queue` / `x-first-death-reason` stamped once. The TTL is
+/// stripped when the death *was* an expiry, so the message does not
+/// instantly re-expire on the dead-letter queue. This is the one place the
+/// lifecycle re-encodes props — once per death, on the failure path; the
+/// body bytes are never touched.
+fn death_props(
+    orig: &EncodedProps,
+    queue: &str,
+    reason: DeadReason,
+    exchange: &str,
+    routing_key: &str,
+) -> EncodedProps {
+    let mut props: MessageProps = orig.props().clone();
+    if reason == DeadReason::Expired {
+        props.expiration_ms = None;
+    }
+    let mut deaths: Vec<Value> = match props.headers.get("x-death") {
+        Some(Value::List(l)) => l.clone(),
+        _ => Vec::new(),
+    };
+    let mut bumped = false;
+    for d in deaths.iter_mut() {
+        let same = d.get_opt("queue").and_then(|q| q.as_str().ok()) == Some(queue)
+            && d.get_opt("reason").and_then(|r| r.as_str().ok()) == Some(reason.as_str());
+        if same {
+            let count = d.get_opt("count").and_then(|c| c.as_u64().ok()).unwrap_or(0) + 1;
+            if let Value::Map(m) = d {
+                m.insert("count".into(), Value::from(count));
+            }
+            bumped = true;
+            break;
+        }
+    }
+    if !bumped {
+        deaths.insert(
+            0,
+            Value::map([
+                ("queue", Value::str(queue)),
+                ("reason", Value::str(reason.as_str())),
+                ("exchange", Value::str(exchange)),
+                ("routing_key", Value::str(routing_key)),
+                ("count", Value::from(1u64)),
+            ]),
+        );
+    }
+    props.headers.insert("x-death".into(), Value::List(deaths));
+    if !props.headers.contains_key("x-first-death-queue") {
+        props.headers.insert("x-first-death-queue".into(), Value::str(queue));
+        props.headers.insert("x-first-death-reason".into(), Value::str(reason.as_str()));
+    }
+    EncodedProps::new(props)
 }
 
 #[cfg(test)]
@@ -1498,5 +1846,407 @@ mod tests {
         broker.handle(conn, &ClientRequest::QueueDelete { queue: "q7".into() }).unwrap();
         assert_eq!(broker.queue_depth("q7"), None);
         assert_eq!(broker.queue_depth("q8"), Some(3));
+    }
+
+    // ---- delivery lifecycle: nack/reject, DLX, overflow, TTL ----
+
+    use crate::broker::protocol::OverflowPolicy;
+
+    /// Declare `queue` (with `options`), a direct DLX exchange `dlx`, and
+    /// a catch queue `dlq` bound under `queue`'s name.
+    fn declare_with_dlx(
+        broker: &BrokerHandle,
+        conn: ConnectionId,
+        queue: &str,
+        mut options: QueueOptions,
+    ) {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::ExchangeDeclare {
+                    exchange: "dlx".into(),
+                    kind: ExchangeKind::Direct,
+                },
+            )
+            .unwrap();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "dlq".into(),
+                    options: QueueOptions::default(),
+                },
+            )
+            .unwrap();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Bind {
+                    exchange: "dlx".into(),
+                    queue: "dlq".into(),
+                    routing_key: queue.into(),
+                },
+            )
+            .unwrap();
+        options.dead_letter_exchange = Some("dlx".into());
+        broker
+            .handle(conn, &ClientRequest::QueueDeclare { queue: queue.into(), options })
+            .unwrap();
+    }
+
+    #[test]
+    fn nack_without_requeue_dead_letters_with_reason_and_identical_body() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(&broker, conn, "jobs", QueueOptions::default());
+        let body = Bytes::encode(&Value::map([("payload", Value::Bytes(vec![0x5A; 2048]))]));
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "jobs".into(),
+                    body: body.clone(),
+                    props: MessageProps { priority: 3, ..Default::default() }.into(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+        consume(&broker, conn, "jobs", "worker", 1);
+        let d = recv_delivery(&rx);
+        broker
+            .handle(conn, &ClientRequest::Nack { delivery_tag: d.delivery_tag, requeue: false })
+            .unwrap();
+        assert_eq!(broker.queue_depth("jobs"), Some(0));
+        assert_eq!(broker.queue_unacked("jobs"), Some(0));
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+        consume(&broker, conn, "dlq", "undertaker", 0);
+        let dead = recv_delivery(&rx);
+        // Byte-identical body: the dead-letter hop shares the publisher's
+        // single encode, it does not copy or re-encode.
+        assert!(Bytes::same_buffer(&dead.body, &body), "DLX hop must share the body buffer");
+        // Reason metadata in the (re-encoded once) props.
+        assert_eq!(dead.props.priority, 3, "original props fields survive");
+        let deaths = dead.props.headers.get("x-death").unwrap().as_list().unwrap();
+        assert_eq!(deaths.len(), 1);
+        assert_eq!(deaths[0].get_str("queue").unwrap(), "jobs");
+        assert_eq!(deaths[0].get_str("reason").unwrap(), "rejected");
+        assert_eq!(deaths[0].get_u64("count").unwrap(), 1);
+        assert_eq!(
+            dead.props.headers.get("x-first-death-reason").unwrap().as_str().unwrap(),
+            "rejected"
+        );
+        assert_eq!(broker.metrics().counter("broker.dead_lettered_total").get(), 1);
+        assert_eq!(broker.metrics().counter("broker.dlx_republished_total").get(), 1);
+        assert_eq!(broker.delivery_index_len(), 1, "only the dlq delivery is outstanding");
+    }
+
+    #[test]
+    fn reject_frame_behaves_like_single_nack() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(&broker, conn, "jobs", QueueOptions::default());
+        publish(&broker, conn, "jobs", Value::str("bad"));
+        consume(&broker, conn, "jobs", "w", 0);
+        let d = recv_delivery(&rx);
+        broker
+            .handle(conn, &ClientRequest::Reject { delivery_tag: d.delivery_tag, requeue: false })
+            .unwrap();
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+        // Idempotent on unknown tags.
+        broker
+            .handle(conn, &ClientRequest::Reject { delivery_tag: d.delivery_tag, requeue: false })
+            .unwrap();
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+    }
+
+    #[test]
+    fn max_delivery_cap_dead_letters_requeue_requests() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(
+            &broker,
+            conn,
+            "jobs",
+            QueueOptions { max_delivery: Some(2), ..Default::default() },
+        );
+        publish(&broker, conn, "jobs", Value::str("poison"));
+        consume(&broker, conn, "jobs", "w", 1);
+        // Attempt 1: delivered, nacked back (under the cap).
+        let d1 = recv_delivery(&rx);
+        assert!(!d1.redelivered);
+        broker
+            .handle(conn, &ClientRequest::Nack { delivery_tag: d1.delivery_tag, requeue: true })
+            .unwrap();
+        // Attempt 2: delivered again; this requeue request hits the cap.
+        let d2 = recv_delivery(&rx);
+        assert!(d2.redelivered);
+        broker
+            .handle(conn, &ClientRequest::Nack { delivery_tag: d2.delivery_tag, requeue: true })
+            .unwrap();
+        assert_eq!(broker.queue_depth("jobs"), Some(0), "poison must not redeliver forever");
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+        consume(&broker, conn, "dlq", "u", 0);
+        let dead = recv_delivery(&rx);
+        let deaths = dead.props.headers.get("x-death").unwrap().as_list().unwrap();
+        assert_eq!(deaths[0].get_str("reason").unwrap(), "max-delivery");
+    }
+
+    #[test]
+    fn nack_multi_requeues_or_dead_letters_each_tag() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(&broker, conn, "jobs", QueueOptions::default());
+        for i in 0..6 {
+            publish(&broker, conn, "jobs", Value::I64(i));
+        }
+        consume(&broker, conn, "jobs", "w", 0);
+        let tags: Vec<u64> = drain_deliveries(&rx).iter().map(|d| d.delivery_tag).collect();
+        assert_eq!(tags.len(), 6);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::NackMulti { delivery_tags: tags.clone(), requeue: false },
+            )
+            .unwrap();
+        assert_eq!(broker.queue_unacked("jobs"), Some(0));
+        assert_eq!(broker.queue_depth("dlq"), Some(6));
+        assert_eq!(broker.metrics().counter("broker.dead_lettered_total").get(), 6);
+        // Idempotent double multi-nack.
+        broker
+            .handle(conn, &ClientRequest::NackMulti { delivery_tags: tags, requeue: false })
+            .unwrap();
+        assert_eq!(broker.queue_depth("dlq"), Some(6));
+    }
+
+    #[test]
+    fn nack_multi_requeue_preserves_fifo_order() {
+        // Same invariant the connection-death requeue pins: a batch taken
+        // as m1..mN and nack-requeued in one frame redelivers as m1..mN.
+        let (broker, conn, rx) = setup();
+        declare(&broker, conn, "ordered");
+        for i in 0..8 {
+            publish(&broker, conn, "ordered", Value::I64(i));
+        }
+        consume(&broker, conn, "ordered", "w1", 0);
+        let first = drain_deliveries(&rx);
+        let tags: Vec<u64> = first.iter().map(|d| d.delivery_tag).collect();
+        assert_eq!(tags.len(), 8);
+        // Cancel so the requeued batch is not instantly redelivered to us
+        // out from under the assertion below.
+        broker.handle(conn, &ClientRequest::Cancel { consumer_tag: "w1".into() }).unwrap();
+        broker
+            .handle(conn, &ClientRequest::NackMulti { delivery_tags: tags, requeue: true })
+            .unwrap();
+        assert_eq!(broker.queue_depth("ordered"), Some(8));
+        consume(&broker, conn, "ordered", "w2", 0);
+        let redelivered: Vec<i64> = drain_deliveries(&rx)
+            .iter()
+            .map(|d| d.body.decode().unwrap().as_i64().unwrap())
+            .collect();
+        assert_eq!(
+            redelivered,
+            (0..8).collect::<Vec<i64>>(),
+            "batched nack-requeue must preserve FIFO order"
+        );
+    }
+
+    #[test]
+    fn rejected_message_without_dlx_is_dropped_but_counted() {
+        let (broker, conn, rx) = setup();
+        declare(&broker, conn, "plain");
+        publish(&broker, conn, "plain", Value::str("x"));
+        consume(&broker, conn, "plain", "w", 0);
+        let d = recv_delivery(&rx);
+        broker
+            .handle(conn, &ClientRequest::Nack { delivery_tag: d.delivery_tag, requeue: false })
+            .unwrap();
+        assert_eq!(broker.queue_depth("plain"), Some(0));
+        assert_eq!(broker.queue_unacked("plain"), Some(0));
+        assert_eq!(broker.delivery_index_len(), 0);
+        assert_eq!(broker.metrics().counter("broker.dead_lettered_total").get(), 1);
+        assert_eq!(broker.metrics().counter("broker.dlx_republished_total").get(), 0);
+    }
+
+    #[test]
+    fn drop_head_overflow_dead_letters_the_oldest() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(
+            &broker,
+            conn,
+            "jobs",
+            QueueOptions { max_length: Some(2), ..Default::default() },
+        );
+        for i in 0..4 {
+            publish(&broker, conn, "jobs", Value::I64(i));
+        }
+        assert_eq!(broker.queue_depth("jobs"), Some(2));
+        assert_eq!(broker.queue_depth("dlq"), Some(2));
+        consume(&broker, conn, "dlq", "u", 0);
+        let dead = drain_deliveries(&rx);
+        let ids: Vec<i64> =
+            dead.iter().map(|d| d.body.decode().unwrap().as_i64().unwrap()).collect();
+        assert_eq!(ids, vec![0, 1], "drop-head evicts the oldest first");
+        for d in &dead {
+            let deaths = d.props.headers.get("x-death").unwrap().as_list().unwrap();
+            assert_eq!(deaths[0].get_str("reason").unwrap(), "overflow");
+        }
+    }
+
+    #[test]
+    fn reject_new_overflow_refuses_the_incoming_message() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(
+            &broker,
+            conn,
+            "jobs",
+            QueueOptions {
+                max_length: Some(2),
+                overflow: OverflowPolicy::RejectNew,
+                ..Default::default()
+            },
+        );
+        publish(&broker, conn, "jobs", Value::I64(0));
+        publish(&broker, conn, "jobs", Value::I64(1));
+        // The third publish is refused: mandatory surfaces it as
+        // unroutable-style backpressure to the publisher.
+        let err = broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "jobs".into(),
+                    body: Bytes::encode(&Value::I64(2)),
+                    props: MessageProps::default().into(),
+                    mandatory: true,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::UnroutableMessage(_)));
+        // The queued work is untouched; the refused message went to the DLX.
+        assert_eq!(broker.queue_depth("jobs"), Some(2));
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+        consume(&broker, conn, "dlq", "u", 0);
+        let dead = recv_delivery(&rx);
+        assert_eq!(dead.body.decode().unwrap(), Value::I64(2));
+    }
+
+    #[test]
+    fn ttl_sweep_routes_expired_to_dlx_and_counts() {
+        let (broker, conn, rx) = setup();
+        declare_with_dlx(
+            &broker,
+            conn,
+            "jobs",
+            QueueOptions { default_ttl_ms: Some(1), ..Default::default() },
+        );
+        publish(&broker, conn, "jobs", Value::str("stale"));
+        std::thread::sleep(Duration::from_millis(10));
+        broker.sweep();
+        assert_eq!(broker.queue_depth("jobs"), Some(0));
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+        assert_eq!(broker.metrics().counter("broker.expired_total").get(), 1);
+        assert_eq!(broker.metrics().counter("broker.dead_lettered_total").get(), 1);
+        consume(&broker, conn, "dlq", "u", 0);
+        let dead = recv_delivery(&rx);
+        let deaths = dead.props.headers.get("x-death").unwrap().as_list().unwrap();
+        assert_eq!(deaths[0].get_str("reason").unwrap(), "expired");
+        // The TTL was stripped on the expiry hop: the copy on the DLQ must
+        // not re-expire.
+        assert_eq!(dead.props.expiration_ms, None);
+    }
+
+    #[test]
+    fn expired_without_dlx_still_counted() {
+        let (broker, conn, _rx) = setup();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "ephemeral".into(),
+                    options: QueueOptions { default_ttl_ms: Some(1), ..Default::default() },
+                },
+            )
+            .unwrap();
+        publish(&broker, conn, "ephemeral", Value::str("gone"));
+        std::thread::sleep(Duration::from_millis(10));
+        broker.sweep();
+        assert_eq!(broker.queue_depth("ephemeral"), Some(0));
+        assert_eq!(broker.metrics().counter("broker.expired_total").get(), 1);
+        assert_eq!(broker.metrics().counter("broker.dead_lettered_total").get(), 1);
+        assert_eq!(broker.metrics().counter("broker.dlx_republished_total").get(), 0);
+    }
+
+    #[test]
+    fn consumer_death_respects_max_delivery_cap() {
+        // A task that crashes its worker on every delivery must stop
+        // crash-looping at the cap and land on the DLX.
+        let broker = BrokerHandle::new();
+        let (tx0, _rx0) = channel();
+        let admin = broker.connect("admin", 0, tx0);
+        declare_with_dlx(
+            &broker,
+            admin,
+            "jobs",
+            QueueOptions { max_delivery: Some(2), ..Default::default() },
+        );
+        publish(&broker, admin, "jobs", Value::str("crashy"));
+        for round in 0..2 {
+            let (tx, rx) = channel();
+            let worker = broker.connect(&format!("w{round}"), 0, tx);
+            consume(&broker, worker, "jobs", &format!("c{round}"), 1);
+            let _ = recv_delivery(&rx); // worker takes the task...
+            broker.disconnect(worker); // ...and "crashes"
+        }
+        assert_eq!(broker.queue_depth("jobs"), Some(0), "cap must stop the crash loop");
+        assert_eq!(broker.queue_depth("dlq"), Some(1));
+        assert_eq!(broker.queue_unacked("jobs"), Some(0));
+        assert_eq!(broker.delivery_index_len(), 0);
+    }
+
+    #[test]
+    fn dlx_cycle_terminates_via_depth_cap() {
+        // q1 and q2 dead-letter into each other with zero-length bounds —
+        // a configuration cycle. The depth cap must break it (messages
+        // dropped with a warning), never hang or overflow the stack.
+        let (broker, conn, _rx) = setup();
+        broker
+            .handle(
+                conn,
+                &ClientRequest::ExchangeDeclare {
+                    exchange: "cyc".into(),
+                    kind: ExchangeKind::Direct,
+                },
+            )
+            .unwrap();
+        for (q, other) in [("cq1", "cq2"), ("cq2", "cq1")] {
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::QueueDeclare {
+                        queue: q.into(),
+                        options: QueueOptions {
+                            max_length: Some(1),
+                            dead_letter_exchange: Some("cyc".into()),
+                            dead_letter_routing_key: Some(other.into()),
+                            ..Default::default()
+                        },
+                    },
+                )
+                .unwrap();
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::Bind {
+                        exchange: "cyc".into(),
+                        queue: q.into(),
+                        routing_key: q.into(),
+                    },
+                )
+                .unwrap();
+        }
+        // Fill both queues, then keep publishing: every overflow bounces
+        // between the two queues until the depth cap retires it.
+        for i in 0..8 {
+            publish(&broker, conn, "cq1", Value::I64(i));
+        }
+        assert_eq!(broker.queue_depth("cq1"), Some(1));
+        assert_eq!(broker.queue_depth("cq2"), Some(1));
     }
 }

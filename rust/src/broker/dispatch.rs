@@ -13,11 +13,11 @@
 //! same queue concurrently (sends never interleave out of assignment
 //! order). Channel sends are non-blocking, so the lock hold stays short.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::broker::persistence::Persister;
 use crate::broker::protocol::{Delivery, ServerMsg};
+use crate::broker::queue::{DeadLettered, DeadReason, PendingDead};
 use crate::broker::shard::ShardSet;
 use crate::metrics::{Counter, Registry};
 
@@ -63,23 +63,38 @@ impl Dispatcher {
 
     /// Pump one queue until it runs dry (no ready messages or no consumer
     /// capacity), one bounded batch per shard-lock acquisition.
-    pub fn pump(&self, shards: &ShardSet, persister: &Mutex<Box<dyn Persister>>, qname: &str) {
+    ///
+    /// Messages found expired during assignment come back as
+    /// [`PendingDead`] — the caller (the core) dead-letters or retires
+    /// them once no shard lock is held; the pump itself never touches the
+    /// router or the WAL.
+    #[must_use]
+    pub fn pump(&self, shards: &ShardSet, qname: &str) -> Vec<PendingDead> {
         let shard = shards.shard_for(qname);
+        let mut pending: Vec<PendingDead> = Vec::new();
         loop {
             let now = Instant::now();
             let assigned;
-            let expired_ids;
-            let durable;
             let mut send_failed = false;
             let mut batch_bytes = 0u64;
             {
                 let mut st = shard.lock();
                 let (queues, delivery_index, conns, mut tags) = st.for_dispatch();
                 let (assignments, qarc) = {
-                    let Some(q) = queues.get_mut(qname) else { return };
+                    let Some(q) = queues.get_mut(qname) else { return pending };
                     let assignments = q.assign_up_to(now, self.batch, || tags.next());
-                    expired_ids = q.drain_expired_ids();
-                    durable = q.options.durable;
+                    let expired = q.drain_expired();
+                    if !expired.is_empty() {
+                        pending.extend(q.pend_dead(
+                            expired
+                                .into_iter()
+                                .map(|m| DeadLettered {
+                                    reason: DeadReason::Expired,
+                                    message: m,
+                                })
+                                .collect(),
+                        ));
+                    }
                     (assignments, q.name.clone())
                 };
                 assigned = assignments.len();
@@ -136,24 +151,20 @@ impl Dispatcher {
                     } else {
                         // The connection's receiver is gone (session tearing
                         // down); the disconnect path will requeue whatever it
-                        // still holds — nack these back right away so nothing
-                        // is stranded in the meantime.
+                        // still holds — put these back right away so nothing
+                        // is stranded in the meantime. The attempt is not
+                        // counted (the send never reached the consumer), so
+                        // a dying connection can never push a message over
+                        // its `max_delivery` cap from here.
                         send_failed = true;
                         if let Some(q) = queues.get_mut(qname) {
                             for t in &tags_of {
-                                q.nack(*t, true);
+                                q.requeue_undelivered(*t);
                                 delivery_index.remove(t);
                             }
                         }
                     }
                 }
-            }
-            // WAL retirement of messages that expired during assignment —
-            // after the shard lock is released (lock order: never hold the
-            // WAL lock while acquiring a shard lock, and keep shard holds
-            // short).
-            if durable && !expired_ids.is_empty() {
-                persister.lock().unwrap().record_retire_batch(qname, &expired_ids).ok();
             }
             if assigned > 0 {
                 self.delivered.add(assigned as u64);
@@ -162,14 +173,14 @@ impl Dispatcher {
                 self.shard_batches[shard.index()].inc();
             }
             if send_failed {
-                // Nacked-back messages would be reassigned to the same dead
+                // Requeued messages would be reassigned to the same dead
                 // consumer on the next round — an unbounded hot spin. Stop;
                 // the disconnect path removes the consumer and re-pumps, and
                 // any later ack/publish re-triggers delivery too.
-                return;
+                return pending;
             }
             if assigned < self.batch {
-                return; // queue ran dry (or out of consumer capacity)
+                return pending; // queue ran dry (or out of consumer capacity)
             }
         }
     }

@@ -45,5 +45,7 @@ pub mod shard;
 
 pub use self::core::{BrokerConfig, BrokerCore, BrokerHandle, ConnectionId};
 pub use inproc::InprocBroker;
-pub use protocol::{ClientRequest, Delivery, EncodedProps, MessageProps, ServerMsg};
+pub use protocol::{
+    ClientRequest, Delivery, EncodedProps, MessageProps, OverflowPolicy, QueueOptions, ServerMsg,
+};
 pub use server::BrokerServer;

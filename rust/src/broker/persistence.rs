@@ -33,6 +33,16 @@ const KIND_PUBLISH: u8 = 1;
 const KIND_RETIRE: u8 = 2;
 const KIND_QUEUE_DECLARE: u8 = 3;
 const KIND_QUEUE_DELETE: u8 = 4;
+/// Retirement with a dead-letter reason (rejected / max-delivery /
+/// expired / overflow). Replays like a retire; the reason makes the log
+/// auditable ("why did this durable message leave its queue?") and marks
+/// deaths whose DLX re-publish — when the target queue is durable — is
+/// its own `KIND_PUBLISH` record on the target queue.
+const KIND_RETIRE_REASON: u8 = 5;
+/// A failed-delivery requeue: `(queue, msg_id, delivery_count)`. Replay
+/// patches the live message's attempt counter (and marks it redelivered)
+/// so `max_delivery` enforcement survives a broker restart.
+const KIND_REQUEUE: u8 = 6;
 
 /// When to fsync the log.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,6 +75,36 @@ pub trait Persister: Send {
     fn record_retire_batch(&mut self, queue: &str, msg_ids: &[u64]) -> Result<()> {
         for id in msg_ids {
             self.record_retire(queue, *id)?;
+        }
+        Ok(())
+    }
+    /// Retire with a dead-letter reason. The default forwards to a plain
+    /// retire (reason dropped); [`WalPersister`] logs it.
+    fn record_retire_reason(&mut self, queue: &str, msg_id: u64, _reason: &str) -> Result<()> {
+        self.record_retire(queue, msg_id)
+    }
+    /// Batched reason-retirement: one flush per batch.
+    fn record_retire_reason_batch(
+        &mut self,
+        queue: &str,
+        msg_ids: &[u64],
+        reason: &str,
+    ) -> Result<()> {
+        for id in msg_ids {
+            self.record_retire_reason(queue, *id, reason)?;
+        }
+        Ok(())
+    }
+    /// Record a failed-delivery requeue so the message's attempt count
+    /// survives recovery. Default: no-op (transient brokers don't care).
+    fn record_requeue(&mut self, _queue: &str, _msg_id: u64, _delivery_count: u32) -> Result<()> {
+        Ok(())
+    }
+    /// Batched requeue records (connection death can requeue thousands):
+    /// one flush per batch.
+    fn record_requeue_batch(&mut self, queue: &str, entries: &[(u64, u32)]) -> Result<()> {
+        for (id, count) in entries {
+            self.record_requeue(queue, *id, *count)?;
         }
         Ok(())
     }
@@ -164,6 +204,8 @@ fn write_record<W: Write>(w: &mut W, kind: u8, parts: &[&[u8]]) -> Result<()> {
 }
 
 /// Envelope of a publish record; the props/body bytes trail it verbatim.
+/// `delivery_count` rides along so compaction (which rewrites live
+/// messages as fresh publish records) preserves attempt counts.
 fn publish_envelope(queue: &str, msg: &QueuedMessage) -> Value {
     Value::map([
         ("queue", Value::str(queue)),
@@ -171,6 +213,7 @@ fn publish_envelope(queue: &str, msg: &QueuedMessage) -> Value {
         ("exchange", Value::str(msg.exchange.as_ref())),
         ("routing_key", Value::str(msg.routing_key.as_ref())),
         ("redelivered", Value::Bool(msg.redelivered)),
+        ("delivery_count", Value::from(u64::from(msg.delivery_count))),
         ("props_len", Value::from(msg.props.bytes().len())),
         ("body_len", Value::from(msg.body.len())),
     ])
@@ -219,6 +262,7 @@ fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage
                 props: EncodedProps::new(MessageProps::from_value(env.get("props")?)?),
                 deadline: None,
                 redelivered: env.get_bool("redelivered")?,
+                delivery_count: 0,
             },
         )));
     }
@@ -241,6 +285,12 @@ fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage
             // deadline is re-derived from props on first publish/assign.
             deadline: None,
             redelivered: env.get_bool("redelivered")?,
+            // Absent on pre-lifecycle records: no attempts on record.
+            delivery_count: env
+                .get_opt("delivery_count")
+                .map(|x| x.as_u64().map(|n| n as u32))
+                .transpose()?
+                .unwrap_or(0),
         },
     )))
 }
@@ -304,13 +354,52 @@ impl WalPersister {
             KIND_RETIRE,
             &Value::map([("queue", Value::str(queue)), ("msg_id", Value::from(msg_id))]),
         )?;
+        self.forget(queue, msg_id);
+        Ok(())
+    }
+
+    /// Append one reason-retirement record without flushing.
+    fn retire_reason_one(&mut self, queue: &str, msg_id: u64, reason: &str) -> Result<()> {
+        self.append(
+            KIND_RETIRE_REASON,
+            &Value::map([
+                ("queue", Value::str(queue)),
+                ("msg_id", Value::from(msg_id)),
+                ("reason", Value::str(reason)),
+            ]),
+        )?;
+        self.forget(queue, msg_id);
+        Ok(())
+    }
+
+    /// Append one requeue record without flushing, mirroring the counter
+    /// bump into the shadow so compaction preserves it.
+    fn requeue_one(&mut self, queue: &str, msg_id: u64, delivery_count: u32) -> Result<()> {
+        self.append(
+            KIND_REQUEUE,
+            &Value::map([
+                ("queue", Value::str(queue)),
+                ("msg_id", Value::from(msg_id)),
+                ("delivery_count", Value::from(u64::from(delivery_count))),
+            ]),
+        )?;
+        if let Some(msgs) = self.shadow.messages.get_mut(queue) {
+            if let Some(m) = msgs.iter_mut().find(|m| m.msg_id == msg_id) {
+                m.delivery_count = delivery_count;
+                m.redelivered = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a retired message from the live accounting and the shadow.
+    fn forget(&mut self, queue: &str, msg_id: u64) {
         self.live = self.live.saturating_sub(1);
         if let Some(msgs) = self.shadow.messages.get_mut(queue) {
             if let Some(pos) = msgs.iter().position(|m| m.msg_id == msg_id) {
                 msgs.remove(pos);
             }
         }
-        Ok(())
     }
 
     /// Fraction of the log that is dead records.
@@ -397,6 +486,45 @@ impl Persister for WalPersister {
         }
         for id in msg_ids {
             self.retire_one(queue, *id)?;
+        }
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn record_retire_reason(&mut self, queue: &str, msg_id: u64, reason: &str) -> Result<()> {
+        self.retire_reason_one(queue, msg_id, reason)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn record_retire_reason_batch(
+        &mut self,
+        queue: &str,
+        msg_ids: &[u64],
+        reason: &str,
+    ) -> Result<()> {
+        if msg_ids.is_empty() {
+            return Ok(());
+        }
+        for id in msg_ids {
+            self.retire_reason_one(queue, *id, reason)?;
+        }
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn record_requeue(&mut self, queue: &str, msg_id: u64, delivery_count: u32) -> Result<()> {
+        self.requeue_one(queue, msg_id, delivery_count)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn record_requeue_batch(&mut self, queue: &str, entries: &[(u64, u32)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        for (id, count) in entries {
+            self.requeue_one(queue, *id, *count)?;
         }
         self.writer.flush()?;
         Ok(())
@@ -500,12 +628,26 @@ pub fn replay(path: &Path) -> Result<RecoveredState> {
             }
         };
         match kind {
-            KIND_RETIRE => {
+            KIND_RETIRE | KIND_RETIRE_REASON => {
+                // Reason-retirements replay like plain retires: the reason
+                // is audit metadata, and the DLX copy (if the target queue
+                // is durable) is its own publish record.
                 let queue = v.get_str("queue")?;
                 let msg_id = v.get_u64("msg_id")?;
                 if let Some(msgs) = state.messages.get_mut(queue) {
                     if let Some(pos) = msgs.iter().position(|m| m.msg_id == msg_id) {
                         msgs.remove(pos);
+                    }
+                }
+            }
+            KIND_REQUEUE => {
+                let queue = v.get_str("queue")?;
+                let msg_id = v.get_u64("msg_id")?;
+                let count = v.get_u64("delivery_count")? as u32;
+                if let Some(msgs) = state.messages.get_mut(queue) {
+                    if let Some(m) = msgs.iter_mut().find(|m| m.msg_id == msg_id) {
+                        m.delivery_count = count;
+                        m.redelivered = true;
                     }
                 }
             }
@@ -554,7 +696,75 @@ mod tests {
             props: MessageProps { persistent: true, ..Default::default() }.into(),
             deadline: None,
             redelivered: false,
+            delivery_count: 0,
         }
+    }
+
+    #[test]
+    fn retire_with_reason_replays_like_retire() {
+        let path = temp_wal();
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.record_queue_declare("tasks", &QueueOptions::durable()).unwrap();
+            wal.record_publish("tasks", &msg(1, "poison")).unwrap();
+            wal.record_publish("tasks", &msg(2, "fine")).unwrap();
+            wal.record_retire_reason("tasks", 1, "rejected").unwrap();
+            wal.sync().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        let ids: Vec<u64> = rec.messages["tasks"].iter().map(|m| m.msg_id).collect();
+        assert_eq!(ids, vec![2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn requeue_records_preserve_attempt_counts() {
+        let path = temp_wal();
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.record_queue_declare("tasks", &QueueOptions::durable()).unwrap();
+            wal.record_publish("tasks", &msg(1, "flaky")).unwrap();
+            wal.record_requeue("tasks", 1, 3).unwrap();
+            wal.sync().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        let m = &rec.messages["tasks"][0];
+        assert_eq!(m.delivery_count, 3, "attempt count must survive recovery");
+        assert!(m.redelivered);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compaction_preserves_attempt_counts() {
+        // Compaction rewrites live messages as fresh publish records — the
+        // requeue-patched delivery_count must be baked into them.
+        let path = temp_wal();
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.record_queue_declare("q", &QueueOptions::durable()).unwrap();
+            wal.record_publish("q", &msg(1, "x")).unwrap();
+            wal.record_requeue("q", 1, 7).unwrap();
+            wal.compact().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(rec.messages["q"][0].delivery_count, 7);
+        assert!(rec.messages["q"][0].redelivered);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn requeue_of_unknown_message_is_harmless() {
+        // A requeue record can outlive its publish record after a partial
+        // compaction/crash interleaving; replay must just skip it.
+        let path = temp_wal();
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.record_requeue("ghost", 99, 2).unwrap();
+            wal.sync().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(rec.message_count(), 0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

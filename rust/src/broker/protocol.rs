@@ -180,6 +180,37 @@ impl ExchangeKind {
     }
 }
 
+/// What a queue at `max_length` does with the overflow (mirrors RabbitMQ's
+/// `x-overflow`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Drop the *oldest* ready message to make room (dead-lettering it
+    /// when the queue has a DLX). RabbitMQ's default.
+    #[default]
+    DropHead,
+    /// Refuse the *incoming* message instead (dead-lettering it when the
+    /// queue has a DLX) — backpressure on publishers rather than silent
+    /// loss of queued work.
+    RejectNew,
+}
+
+impl OverflowPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OverflowPolicy::DropHead => "drop-head",
+            OverflowPolicy::RejectNew => "reject-new",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "drop-head" => Ok(OverflowPolicy::DropHead),
+            "reject-new" => Ok(OverflowPolicy::RejectNew),
+            other => Err(Error::Wire(format!("unknown overflow policy '{other}'"))),
+        }
+    }
+}
+
 /// Options for queue declaration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QueueOptions {
@@ -191,9 +222,21 @@ pub struct QueueOptions {
     pub auto_delete: bool,
     /// Default TTL applied to messages without their own expiration.
     pub default_ttl_ms: Option<u64>,
-    /// Maximum queue length; publishes beyond it drop the *oldest* ready
-    /// message (RabbitMQ default-on-overflow behaviour).
+    /// Maximum queue length; what happens beyond it is [`OverflowPolicy`].
     pub max_length: Option<usize>,
+    /// Overflow behaviour once `max_length` is reached.
+    pub overflow: OverflowPolicy,
+    /// Max delivery attempts per message; a message nack-requeued at this
+    /// count is dead-lettered instead of requeued (poison-message cap).
+    /// `None` = unlimited (seed behaviour: a poison task redelivers
+    /// forever).
+    pub max_delivery: Option<u32>,
+    /// Dead-letter exchange: rejected, max-redelivered, expired and
+    /// overflowed messages are re-published here instead of vanishing.
+    pub dead_letter_exchange: Option<String>,
+    /// Routing key for dead-letter re-publishes; `None` keeps the
+    /// message's original routing key.
+    pub dead_letter_routing_key: Option<String>,
 }
 
 impl Default for QueueOptions {
@@ -204,6 +247,10 @@ impl Default for QueueOptions {
             auto_delete: false,
             default_ttl_ms: None,
             max_length: None,
+            overflow: OverflowPolicy::DropHead,
+            max_delivery: None,
+            dead_letter_exchange: None,
+            dead_letter_routing_key: None,
         }
     }
 }
@@ -220,6 +267,10 @@ impl QueueOptions {
             ("auto_delete", Value::Bool(self.auto_delete)),
             ("default_ttl_ms", self.default_ttl_ms.into()),
             ("max_length", self.max_length.map(|n| n as u64).into()),
+            ("overflow", Value::str(self.overflow.as_str())),
+            ("max_delivery", self.max_delivery.map(u64::from).into()),
+            ("dead_letter_exchange", self.dead_letter_exchange.clone().into()),
+            ("dead_letter_routing_key", self.dead_letter_routing_key.clone().into()),
         ])
     }
 
@@ -236,6 +287,25 @@ impl QueueOptions {
             max_length: v
                 .get_opt("max_length")
                 .map(|x| x.as_u64().map(|n| n as usize))
+                .transpose()?,
+            // Absent on pre-lifecycle records (old WALs, old clients):
+            // default to the seed behaviour.
+            overflow: v
+                .get_opt("overflow")
+                .map(|x| x.as_str().and_then(OverflowPolicy::parse))
+                .transpose()?
+                .unwrap_or_default(),
+            max_delivery: v
+                .get_opt("max_delivery")
+                .map(|x| x.as_u64().map(|n| n as u32))
+                .transpose()?,
+            dead_letter_exchange: v
+                .get_opt("dead_letter_exchange")
+                .map(|x| x.as_str().map(String::from))
+                .transpose()?,
+            dead_letter_routing_key: v
+                .get_opt("dead_letter_routing_key")
+                .map(|x| x.as_str().map(String::from))
                 .transpose()?,
         })
     }
@@ -273,6 +343,14 @@ pub enum ClientRequest {
     /// dispatched). Each tag is acked independently and idempotently.
     AckMulti { delivery_tags: Vec<u64> },
     Nack { delivery_tag: u64, requeue: bool },
+    /// Negative-acknowledge many deliveries in one frame (same coalescing
+    /// rationale as `AckMulti`). Each tag is handled independently and
+    /// idempotently; `requeue` applies to all of them.
+    NackMulti { delivery_tags: Vec<u64>, requeue: bool },
+    /// AMQP `basic.reject`: refuse a single delivery. Semantically
+    /// identical to `Nack` with one tag; kept as its own frame for
+    /// protocol parity with AMQP clients.
+    Reject { delivery_tag: u64, requeue: bool },
     /// Broker status snapshot (queue depths, counters).
     Status,
     Close,
@@ -423,6 +501,25 @@ impl ClientRequest {
                     ("requeue", Value::Bool(*requeue)),
                 ],
             ),
+            ClientRequest::NackMulti { delivery_tags, requeue } => req(
+                "nack_multi",
+                req_id,
+                vec![
+                    (
+                        "delivery_tags",
+                        Value::List(delivery_tags.iter().map(|t| Value::from(*t)).collect()),
+                    ),
+                    ("requeue", Value::Bool(*requeue)),
+                ],
+            ),
+            ClientRequest::Reject { delivery_tag, requeue } => req(
+                "reject",
+                req_id,
+                vec![
+                    ("delivery_tag", Value::from(*delivery_tag)),
+                    ("requeue", Value::Bool(*requeue)),
+                ],
+            ),
             ClientRequest::Status => req("status", req_id, vec![]),
             ClientRequest::Close => req("close", req_id, vec![]),
         }
@@ -494,6 +591,19 @@ impl ClientRequest {
                     .collect::<Result<Vec<u64>>>()?,
             },
             "nack" => ClientRequest::Nack {
+                delivery_tag: v.get_u64("delivery_tag")?,
+                requeue: v.get_bool("requeue")?,
+            },
+            "nack_multi" => ClientRequest::NackMulti {
+                delivery_tags: v
+                    .get("delivery_tags")?
+                    .as_list()?
+                    .iter()
+                    .map(|t| t.as_u64())
+                    .collect::<Result<Vec<u64>>>()?,
+                requeue: v.get_bool("requeue")?,
+            },
+            "reject" => ClientRequest::Reject {
                 delivery_tag: v.get_u64("delivery_tag")?,
                 requeue: v.get_bool("requeue")?,
             },
@@ -696,6 +806,10 @@ mod tests {
                 auto_delete: true,
                 default_ttl_ms: Some(1000),
                 max_length: Some(100),
+                overflow: OverflowPolicy::RejectNew,
+                max_delivery: Some(5),
+                dead_letter_exchange: Some("dlx".into()),
+                dead_letter_routing_key: Some("dead.tasks".into()),
             },
         });
         roundtrip_req(ClientRequest::ExchangeDeclare {
@@ -731,8 +845,36 @@ mod tests {
         roundtrip_req(ClientRequest::AckMulti { delivery_tags: vec![3, 5, 8, 13] });
         roundtrip_req(ClientRequest::AckMulti { delivery_tags: vec![] });
         roundtrip_req(ClientRequest::Nack { delivery_tag: 100, requeue: true });
+        roundtrip_req(ClientRequest::NackMulti { delivery_tags: vec![2, 4, 6], requeue: false });
+        roundtrip_req(ClientRequest::NackMulti { delivery_tags: vec![], requeue: true });
+        roundtrip_req(ClientRequest::Reject { delivery_tag: 11, requeue: false });
         roundtrip_req(ClientRequest::Status);
         roundtrip_req(ClientRequest::Close);
+    }
+
+    #[test]
+    fn queue_options_lifecycle_fields_default_when_absent() {
+        // Old clients / pre-lifecycle WAL records omit the new fields —
+        // decoding must fall back to seed behaviour, not error.
+        let legacy = Value::map([
+            ("durable", Value::Bool(true)),
+            ("max_length", Value::from(8u64)),
+        ]);
+        let opts = QueueOptions::from_value(&legacy).unwrap();
+        assert!(opts.durable);
+        assert_eq!(opts.max_length, Some(8));
+        assert_eq!(opts.overflow, OverflowPolicy::DropHead);
+        assert_eq!(opts.max_delivery, None);
+        assert_eq!(opts.dead_letter_exchange, None);
+        assert_eq!(opts.dead_letter_routing_key, None);
+    }
+
+    #[test]
+    fn overflow_policy_parses_and_rejects_unknown() {
+        for p in [OverflowPolicy::DropHead, OverflowPolicy::RejectNew] {
+            assert_eq!(OverflowPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(OverflowPolicy::parse("explode").is_err());
     }
 
     #[test]

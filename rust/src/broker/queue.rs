@@ -9,7 +9,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::broker::protocol::{EncodedProps, QueueOptions};
+use crate::broker::protocol::{EncodedProps, OverflowPolicy, QueueOptions};
 use crate::wire::{Bytes, Value};
 
 /// Number of priority lanes (priorities 0–9).
@@ -33,6 +33,11 @@ pub struct QueuedMessage {
     pub deadline: Option<Instant>,
     /// True once the message has been delivered at least once before.
     pub redelivered: bool,
+    /// Completed delivery attempts (incremented when the message is
+    /// assigned to a consumer; decremented back when the send never
+    /// reached the wire). Checked against `max_delivery` at requeue time
+    /// and preserved across WAL recovery.
+    pub delivery_count: u32,
 }
 
 impl QueuedMessage {
@@ -43,6 +48,90 @@ impl QueuedMessage {
     fn expired(&self, now: Instant) -> bool {
         self.deadline.map(|d| now >= d).unwrap_or(false)
     }
+}
+
+/// Why a message left its queue without being acked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadReason {
+    /// Consumer refused it with `requeue = false`.
+    Rejected,
+    /// Requeue requested, but the message hit the `max_delivery` cap.
+    MaxDelivery,
+    /// TTL deadline passed.
+    Expired,
+    /// Evicted (drop-head) or refused (reject-new) by `max_length`.
+    Overflow,
+}
+
+impl DeadReason {
+    /// Stable wire/WAL name (used in `x-death` metadata and retire
+    /// records).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DeadReason::Rejected => "rejected",
+            DeadReason::MaxDelivery => "max-delivery",
+            DeadReason::Expired => "expired",
+            DeadReason::Overflow => "overflow",
+        }
+    }
+}
+
+/// A message that left its queue dead, before dead-letter routing.
+#[derive(Clone, Debug)]
+pub struct DeadLettered {
+    pub reason: DeadReason,
+    pub message: QueuedMessage,
+}
+
+/// A dead message annotated with everything the core needs to route it to
+/// the source queue's DLX (or retire it) *after* all shard locks are
+/// released — the dead-letter pipeline never publishes from inside a shard
+/// lock, which is what keeps it deadlock-free.
+#[derive(Clone, Debug)]
+pub struct PendingDead {
+    /// Queue the message died in.
+    pub source: Arc<str>,
+    pub dead_letter_exchange: Option<String>,
+    pub dead_letter_routing_key: Option<String>,
+    /// Source queue durability — governs WAL retire-with-reason records.
+    pub durable: bool,
+    pub reason: DeadReason,
+    pub message: QueuedMessage,
+}
+
+/// Result of [`Queue::publish`].
+#[must_use]
+pub struct PublishOutcome {
+    /// False only when a `reject-new` overflow refused the message (it is
+    /// then in `dead`, not in the queue).
+    pub accepted: bool,
+    /// Messages the publish displaced (overflow evictions, or the refused
+    /// message itself) — the core dead-letters or retires them.
+    pub dead: Vec<DeadLettered>,
+}
+
+/// Result of [`Queue::nack`].
+#[must_use]
+pub enum NackOutcome {
+    /// Unknown delivery tag (double-nack is idempotent).
+    Unknown,
+    /// Returned to the front of its priority lane.
+    Requeued { msg_id: u64, delivery_count: u32 },
+    /// Left the queue: rejected outright, or requeue refused by the
+    /// `max_delivery` cap.
+    Dead(DeadLettered),
+}
+
+/// Result of [`Queue::drop_connection`].
+pub struct DropOutcome {
+    /// Delivery tags that died with the connection (caller prunes its
+    /// delivery index; requeued messages get fresh tags on redelivery).
+    pub dead_tags: Vec<u64>,
+    /// Messages that could not be requeued (over the `max_delivery` cap).
+    pub dead: Vec<DeadLettered>,
+    /// `(msg_id, delivery_count)` of requeued messages — WAL requeue
+    /// records for durable queues, so attempt counts survive recovery.
+    pub requeued: Vec<(u64, u32)>,
 }
 
 /// A consumer attached to a queue.
@@ -111,9 +200,12 @@ pub struct Queue {
     pub requeued: u64,
     pub expired: u64,
     pub dropped_overflow: u64,
-    /// Ids of expired messages encountered during assignment, buffered for
-    /// the core to retire from the WAL (see `drain_expired_ids`).
-    expired_ids: Vec<u64>,
+    /// Messages that left this queue dead (rejected / max-delivery /
+    /// overflow; expiries are counted in `expired`).
+    pub dead_lettered: u64,
+    /// Expired messages encountered during assignment, buffered for the
+    /// core to dead-letter / retire (see `drain_expired`).
+    expired_buf: Vec<QueuedMessage>,
 }
 
 impl Queue {
@@ -135,7 +227,8 @@ impl Queue {
             requeued: 0,
             expired: 0,
             dropped_overflow: 0,
-            expired_ids: Vec::new(),
+            dead_lettered: 0,
+            expired_buf: Vec::new(),
         }
     }
 
@@ -162,22 +255,41 @@ impl Queue {
     }
 
     /// Enqueue a message. Applies the queue default TTL when the message
-    /// has none, and enforces `max_length` by dropping the oldest ready
-    /// message. Returns ids of messages dropped by overflow (for WAL acks).
-    pub fn publish(&mut self, mut msg: QueuedMessage, now: Instant) -> Vec<u64> {
+    /// has none and enforces `max_length` per the queue's overflow policy:
+    /// `drop-head` evicts the oldest ready message(s), `reject-new`
+    /// refuses the incoming one. Displaced messages come back in the
+    /// outcome so the core can dead-letter (or retire) them — nothing is
+    /// silently dropped here.
+    pub fn publish(&mut self, mut msg: QueuedMessage, now: Instant) -> PublishOutcome {
         if msg.deadline.is_none() {
             let ttl = msg.props.expiration_ms.or(self.options.default_ttl_ms);
             msg.deadline =
                 ttl.map(|ms| now + std::time::Duration::from_millis(ms));
         }
-        let mut dropped = Vec::new();
+        let mut dead = Vec::new();
         if let Some(max) = self.options.max_length {
-            while self.ready_count >= max.max(1) {
-                if let Some(old) = self.pop_ready(now) {
-                    self.dropped_overflow += 1;
-                    dropped.push(old.msg_id);
-                } else {
-                    break;
+            if self.ready_count >= max.max(1) {
+                match self.options.overflow {
+                    OverflowPolicy::DropHead => {
+                        while self.ready_count >= max.max(1) {
+                            if let Some(old) = self.pop_ready(now) {
+                                self.dropped_overflow += 1;
+                                self.dead_lettered += 1;
+                                dead.push(DeadLettered {
+                                    reason: DeadReason::Overflow,
+                                    message: old,
+                                });
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    OverflowPolicy::RejectNew => {
+                        self.dropped_overflow += 1;
+                        self.dead_lettered += 1;
+                        dead.push(DeadLettered { reason: DeadReason::Overflow, message: msg });
+                        return PublishOutcome { accepted: false, dead };
+                    }
                 }
             }
         }
@@ -186,7 +298,7 @@ impl Queue {
         self.ready[lane].push_back(msg);
         self.ready_count += 1;
         self.published += 1;
-        dropped
+        PublishOutcome { accepted: true, dead }
     }
 
     /// Bookkeeping when a deadline-carrying message enters a ready lane:
@@ -217,8 +329,9 @@ impl Queue {
         self.ttl_ready
     }
 
-    /// Pop the highest-priority, oldest ready message, discarding expired
-    /// ones along the way (their ids are recorded in `expired`).
+    /// Pop the highest-priority, oldest ready message, setting aside
+    /// expired ones along the way (buffered in `expired_buf` for the core
+    /// to dead-letter / retire).
     fn pop_ready(&mut self, now: Instant) -> Option<QueuedMessage> {
         for lane in (0..PRIORITY_LANES).rev() {
             while let Some(msg) = self.ready[lane].pop_front() {
@@ -226,13 +339,19 @@ impl Queue {
                 self.track_ttl_out(msg.deadline);
                 if msg.expired(now) {
                     self.expired += 1;
-                    self.expired_ids.push(msg.msg_id);
+                    self.expired_buf.push(msg);
                     continue;
                 }
                 return Some(msg);
             }
         }
         None
+    }
+
+    /// True when another delivery of `m` would exceed the queue's
+    /// `max_delivery` cap — i.e. the message may no longer be requeued.
+    fn over_delivery_cap(&self, m: &QueuedMessage) -> bool {
+        self.options.max_delivery.is_some_and(|max| m.delivery_count >= max.max(1))
     }
 
     /// Register a consumer. Fails (returns false) if the tag is taken.
@@ -302,7 +421,14 @@ impl Queue {
                 }
             }
             let Some(idx) = found else { break 'outer };
-            let Some(msg) = self.pop_ready(now) else { break 'outer };
+            let Some(mut msg) = self.pop_ready(now) else { break 'outer };
+            // This is the one place a delivery attempt is counted; a prior
+            // attempt (including one recovered from the WAL) marks the
+            // message redelivered.
+            msg.delivery_count += 1;
+            if msg.delivery_count > 1 {
+                msg.redelivered = true;
+            }
             let tag = next_tag();
             let consumer = &mut self.consumers[idx];
             consumer.in_flight += 1;
@@ -341,42 +467,73 @@ impl Queue {
         Some(inflight.message.msg_id)
     }
 
-    /// Negative-acknowledge. When `requeue`, the message returns to the
-    /// front of its priority lane marked redelivered; otherwise it is
-    /// dropped (dead-lettered out of existence). Returns the message id
-    /// when the message was dropped (for WAL retirement).
-    pub fn nack(&mut self, delivery_tag: u64, requeue: bool) -> Option<u64> {
-        let inflight = self.unacked.remove(&delivery_tag)?;
+    /// Negative-acknowledge. When `requeue` (and the message is under the
+    /// `max_delivery` cap), it returns to the front of its priority lane
+    /// marked redelivered; otherwise it leaves the queue dead — the core
+    /// routes it to the queue's DLX or retires it.
+    pub fn nack(&mut self, delivery_tag: u64, requeue: bool) -> NackOutcome {
+        let Some(inflight) = self.unacked.remove(&delivery_tag) else {
+            return NackOutcome::Unknown;
+        };
         if let Some(c) =
             self.consumers.iter_mut().find(|c| c.consumer_tag == inflight.consumer_tag)
         {
             c.in_flight = c.in_flight.saturating_sub(1);
         }
-        if requeue {
-            let mut msg = inflight.message;
+        let mut msg = inflight.message;
+        if requeue && !self.over_delivery_cap(&msg) {
             msg.redelivered = true;
             self.track_ttl_in(msg.deadline);
             let lane = msg.lane();
+            let (msg_id, delivery_count) = (msg.msg_id, msg.delivery_count);
             self.ready[lane].push_front(msg);
             self.ready_count += 1;
             self.requeued += 1;
-            None
+            NackOutcome::Requeued { msg_id, delivery_count }
         } else {
-            Some(inflight.message.msg_id)
+            let reason =
+                if requeue { DeadReason::MaxDelivery } else { DeadReason::Rejected };
+            self.dead_lettered += 1;
+            NackOutcome::Dead(DeadLettered { reason, message: msg })
         }
+    }
+
+    /// Return an unacked message to the head of its lane *without*
+    /// counting the attempt — used when a delivery's send never reached
+    /// the consumer (session channel already torn down). Never
+    /// dead-letters: a failed send is the broker's fault, not the
+    /// message's.
+    pub fn requeue_undelivered(&mut self, delivery_tag: u64) -> bool {
+        let Some(inflight) = self.unacked.remove(&delivery_tag) else { return false };
+        if let Some(c) =
+            self.consumers.iter_mut().find(|c| c.consumer_tag == inflight.consumer_tag)
+        {
+            c.in_flight = c.in_flight.saturating_sub(1);
+        }
+        let mut msg = inflight.message;
+        msg.delivery_count = msg.delivery_count.saturating_sub(1);
+        self.track_ttl_in(msg.deadline);
+        let lane = msg.lane();
+        self.ready[lane].push_front(msg);
+        self.ready_count += 1;
+        self.requeued += 1;
+        true
     }
 
     /// Requeue every unacked message belonging to `connection` and remove
     /// its consumers — what the broker does when a client dies (abrupt
-    /// shutdown, two missed heartbeats). Returns the now-dead delivery tags
-    /// so the caller can prune its delivery index (requeued messages get
-    /// fresh tags on redelivery).
+    /// shutdown, two missed heartbeats). The outcome carries the now-dead
+    /// delivery tags (caller prunes its delivery index; requeued messages
+    /// get fresh tags on redelivery), any messages over the `max_delivery`
+    /// cap (dead-lettered instead of requeued — a crash counts as a failed
+    /// attempt, so a poison task cannot crash-loop forever), and the
+    /// requeue log for durable WAL records.
     ///
     /// Requeued messages are re-inserted at the *front* of their priority
     /// lane in ascending delivery-tag order, so a batch taken in order
     /// `m1, m2, m3` comes back as `m1, m2, m3` — redelivery preserves the
     /// original FIFO order.
-    pub fn drop_connection(&mut self, connection: u64) -> Vec<u64> {
+    pub fn drop_connection(&mut self, connection: u64) -> DropOutcome {
         let mut tags: Vec<u64> = self
             .unacked
             .iter()
@@ -385,10 +542,18 @@ impl Queue {
             .collect();
         // Descending tag order + push_front = oldest delivery ends up first.
         tags.sort_unstable_by(|a, b| b.cmp(a));
+        let mut dead = Vec::new();
+        let mut requeued = Vec::new();
         for tag in &tags {
             let inflight = self.unacked.remove(tag).unwrap();
             let mut msg = inflight.message;
+            if self.over_delivery_cap(&msg) {
+                self.dead_lettered += 1;
+                dead.push(DeadLettered { reason: DeadReason::MaxDelivery, message: msg });
+                continue;
+            }
             msg.redelivered = true;
+            requeued.push((msg.msg_id, msg.delivery_count));
             self.track_ttl_in(msg.deadline);
             let lane = msg.lane();
             self.ready[lane].push_front(msg);
@@ -399,7 +564,7 @@ impl Queue {
         if self.rr_cursor >= self.consumers.len() {
             self.rr_cursor = 0;
         }
-        tags
+        DropOutcome { dead_tags: tags, dead, requeued }
     }
 
     /// Drop all ready messages; returns their ids (for WAL retirement).
@@ -416,19 +581,22 @@ impl Queue {
         ids
     }
 
-    /// Take the ids of messages that expired during assignment since the
-    /// last call (the core retires them from the WAL).
-    pub fn drain_expired_ids(&mut self) -> Vec<u64> {
-        std::mem::take(&mut self.expired_ids)
+    /// Take the messages that expired during assignment since the last
+    /// call (the core dead-letters them to the queue's DLX, or retires
+    /// them from the WAL when there is none).
+    pub fn drain_expired(&mut self) -> Vec<QueuedMessage> {
+        std::mem::take(&mut self.expired_buf)
     }
 
-    /// Remove expired ready messages (periodic sweep). Returns their ids.
+    /// Remove expired ready messages (periodic sweep) and return them —
+    /// the core dead-letters or retires them; the sweep itself no longer
+    /// makes anything vanish without a trace.
     ///
     /// O(1) for the common case: when no ready message carries a TTL, or
     /// the earliest tracked deadline is still in the future, the scan is
     /// skipped entirely — a broker full of TTL-less queues pays nothing
     /// for the sweep. A scan recomputes the bound exactly.
-    pub fn sweep_expired(&mut self, now: Instant) -> Vec<u64> {
+    pub fn sweep_expired(&mut self, now: Instant) -> Vec<QueuedMessage> {
         if self.ttl_ready == 0 {
             return Vec::new();
         }
@@ -437,28 +605,47 @@ impl Queue {
                 return Vec::new();
             }
         }
-        let mut ids = Vec::new();
+        let mut swept = Vec::new();
         let mut remaining = 0usize;
         let mut earliest: Option<Instant> = None;
         for lane in &mut self.ready {
-            lane.retain(|m| {
+            // `retain` cannot move the element out; collect indices first
+            // would also copy — a drain-and-rebuild keeps it simple and
+            // runs only when the deadline gate is already open.
+            let mut kept = VecDeque::with_capacity(lane.len());
+            for m in lane.drain(..) {
                 if m.expired(now) {
-                    ids.push(m.msg_id);
-                    false
+                    swept.push(m);
                 } else {
                     if let Some(d) = m.deadline {
                         remaining += 1;
                         earliest = Some(earliest.map_or(d, |e| e.min(d)));
                     }
-                    true
+                    kept.push_back(m);
                 }
-            });
+            }
+            *lane = kept;
         }
-        self.ready_count -= ids.len();
-        self.expired += ids.len() as u64;
+        self.ready_count -= swept.len();
+        self.expired += swept.len() as u64;
         self.ttl_ready = remaining;
         self.earliest_deadline = earliest;
-        ids
+        swept
+    }
+
+    /// Wrap dead messages with this queue's dead-letter routing config —
+    /// everything the core needs once the shard lock is gone.
+    pub fn pend_dead(&self, dead: Vec<DeadLettered>) -> Vec<PendingDead> {
+        dead.into_iter()
+            .map(|d| PendingDead {
+                source: Arc::clone(&self.name),
+                dead_letter_exchange: self.options.dead_letter_exchange.clone(),
+                dead_letter_routing_key: self.options.dead_letter_routing_key.clone(),
+                durable: self.options.durable,
+                reason: d.reason,
+                message: d.message,
+            })
+            .collect()
     }
 
     /// All messages (ready + unacked) — used for durable-queue snapshots.
@@ -483,6 +670,7 @@ impl Queue {
             ("requeued", Value::from(self.requeued)),
             ("expired", Value::from(self.expired)),
             ("dropped_overflow", Value::from(self.dropped_overflow)),
+            ("dead_lettered", Value::from(self.dead_lettered)),
         ])
     }
 }
@@ -503,7 +691,15 @@ mod tests {
             props: MessageProps { priority, ..Default::default() }.into(),
             deadline: None,
             redelivered: false,
+            delivery_count: 0,
         }
+    }
+
+    /// Publish expecting clean acceptance (no overflow displacement).
+    fn put(q: &mut Queue, m: QueuedMessage, now: Instant) {
+        let out = q.publish(m, now);
+        assert!(out.accepted);
+        assert!(out.dead.is_empty());
     }
 
     fn consumer(tag: &str, conn: u64, prefetch: u32) -> Consumer {
@@ -523,7 +719,7 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         for i in 0..5 {
-            q.publish(msg(i, 0), now);
+            put(&mut q, msg(i, 0), now);
         }
         q.add_consumer(consumer("c1", 1, 0));
         let a = q.assign(now, tagger());
@@ -535,9 +731,9 @@ mod tests {
     fn higher_priority_first() {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
-        q.publish(msg(1, 0), now);
-        q.publish(msg(2, 9), now);
-        q.publish(msg(3, 5), now);
+        put(&mut q, msg(1, 0), now);
+        put(&mut q, msg(2, 9), now);
+        put(&mut q, msg(3, 5), now);
         q.add_consumer(consumer("c1", 1, 0));
         let ids: Vec<u64> = q.assign(now, tagger()).iter().map(|x| x.message.msg_id).collect();
         assert_eq!(ids, vec![2, 3, 1]);
@@ -548,7 +744,7 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         for i in 0..100 {
-            q.publish(msg(i, 0), now);
+            put(&mut q, msg(i, 0), now);
         }
         q.add_consumer(consumer("c1", 1, 0));
         q.add_consumer(consumer("c2", 2, 0));
@@ -568,7 +764,7 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         for i in 0..10 {
-            q.publish(msg(i, 0), now);
+            put(&mut q, msg(i, 0), now);
         }
         q.add_consumer(consumer("c1", 1, 1));
         let mut tags = tagger();
@@ -587,7 +783,7 @@ mod tests {
     fn ack_is_idempotent() {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
-        q.publish(msg(0, 0), now);
+        put(&mut q, msg(0, 0), now);
         q.add_consumer(consumer("c1", 1, 0));
         let a = q.assign(now, tagger());
         assert!(q.ack(a[0].delivery_tag).is_some());
@@ -599,12 +795,12 @@ mod tests {
     fn nack_requeue_preserves_message_marks_redelivered() {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
-        q.publish(msg(0, 0), now);
+        put(&mut q, msg(0, 0), now);
         q.add_consumer(consumer("c1", 1, 0));
         let mut tags = tagger();
         let a = q.assign(now, &mut tags);
         assert!(!a[0].message.redelivered);
-        q.nack(a[0].delivery_tag, true);
+        assert!(matches!(q.nack(a[0].delivery_tag, true), NackOutcome::Requeued { .. }));
         let b = q.assign(now, &mut tags);
         assert_eq!(b.len(), 1);
         assert!(b[0].message.redelivered);
@@ -614,10 +810,16 @@ mod tests {
     fn nack_drop_discards() {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
-        q.publish(msg(0, 0), now);
+        put(&mut q, msg(0, 0), now);
         q.add_consumer(consumer("c1", 1, 0));
         let a = q.assign(now, tagger());
-        assert_eq!(q.nack(a[0].delivery_tag, false), Some(0));
+        match q.nack(a[0].delivery_tag, false) {
+            NackOutcome::Dead(d) => {
+                assert_eq!(d.reason, DeadReason::Rejected);
+                assert_eq!(d.message.msg_id, 0);
+            }
+            _ => panic!("expected dead"),
+        }
         assert_eq!(q.ready_len(), 0);
         assert_eq!(q.unacked_len(), 0);
     }
@@ -629,12 +831,12 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         for i in 0..10 {
-            q.publish(msg(i, 0), now);
+            put(&mut q, msg(i, 0), now);
         }
         q.add_consumer(consumer("dead", 7, 0));
         let a = q.assign(now, tagger());
         assert_eq!(a.len(), 10);
-        assert_eq!(q.drop_connection(7).len(), 10);
+        assert_eq!(q.drop_connection(7).dead_tags.len(), 10);
         assert_eq!(q.ready_len(), 10);
         assert_eq!(q.unacked_len(), 0);
         assert_eq!(q.consumer_count(), 0);
@@ -653,7 +855,7 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         for i in 0..10 {
-            q.publish(msg(i, 0), now);
+            put(&mut q, msg(i, 0), now);
         }
         q.add_consumer(consumer("c1", 1, 0));
         let mut tags = tagger();
@@ -671,8 +873,8 @@ mod tests {
         let now = Instant::now();
         let mut m = msg(0, 0);
         m.props = MessageProps { expiration_ms: Some(10), ..Default::default() }.into();
-        q.publish(m, now);
-        q.publish(msg(1, 0), now);
+        put(&mut q, m, now);
+        put(&mut q, msg(1, 0), now);
         q.add_consumer(consumer("c1", 1, 0));
         let later = now + Duration::from_millis(50);
         let a = q.assign(later, tagger());
@@ -689,8 +891,9 @@ mod tests {
             None,
         );
         let now = Instant::now();
-        q.publish(msg(0, 0), now);
-        let swept = q.sweep_expired(now + Duration::from_millis(20));
+        put(&mut q, msg(0, 0), now);
+        let swept: Vec<u64> =
+            q.sweep_expired(now + Duration::from_millis(20)).iter().map(|m| m.msg_id).collect();
         assert_eq!(swept, vec![0]);
         assert_eq!(q.ready_len(), 0);
     }
@@ -700,21 +903,27 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         // No TTLs anywhere: nothing pending, sweep is a no-op.
-        q.publish(msg(0, 0), now);
+        put(&mut q, msg(0, 0), now);
         assert_eq!(q.ttl_pending(), 0);
         assert!(q.sweep_expired(now + Duration::from_secs(60)).is_empty());
         assert_eq!(q.ready_len(), 1);
         // A TTL'd message is tracked in...
         let mut m = msg(1, 0);
         m.props = MessageProps { expiration_ms: Some(10), ..Default::default() }.into();
-        q.publish(m, now);
+        put(&mut q, m, now);
         assert_eq!(q.ttl_pending(), 1);
         // ...and the sweep gate stays closed before its deadline.
         assert!(q.sweep_expired(now).is_empty());
         assert_eq!(q.ready_len(), 2);
         // After the deadline, exactly the TTL'd message is swept and the
         // tracking resets.
-        assert_eq!(q.sweep_expired(now + Duration::from_millis(50)), vec![1]);
+        assert_eq!(
+            q.sweep_expired(now + Duration::from_millis(50))
+                .iter()
+                .map(|m| m.msg_id)
+                .collect::<Vec<u64>>(),
+            vec![1]
+        );
         assert_eq!(q.ttl_pending(), 0);
         assert_eq!(q.ready_len(), 1);
     }
@@ -725,7 +934,7 @@ mod tests {
         let now = Instant::now();
         let mut m = msg(0, 0);
         m.props = MessageProps { expiration_ms: Some(10_000), ..Default::default() }.into();
-        q.publish(m, now);
+        put(&mut q, m, now);
         assert_eq!(q.ttl_pending(), 1);
         // Delivery pops it out of ready: no TTL'd ready message remains.
         q.add_consumer(consumer("c1", 1, 0));
@@ -734,13 +943,13 @@ mod tests {
         assert_eq!(a.len(), 1);
         assert_eq!(q.ttl_pending(), 0);
         // Requeue puts it (and its deadline) back under tracking.
-        q.nack(a[0].delivery_tag, true);
+        assert!(matches!(q.nack(a[0].delivery_tag, true), NackOutcome::Requeued { .. }));
         assert_eq!(q.ttl_pending(), 1);
         // Connection-death requeue is tracked too.
         let b = q.assign(now, &mut tags);
         assert_eq!(b.len(), 1);
         assert_eq!(q.ttl_pending(), 0);
-        q.drop_connection(1);
+        let _ = q.drop_connection(1);
         assert_eq!(q.ttl_pending(), 1);
         // Purge resets everything.
         q.purge();
@@ -757,10 +966,10 @@ mod tests {
         let now = Instant::now();
         let mut early = msg(0, 0);
         early.props = MessageProps { expiration_ms: Some(10), ..Default::default() }.into();
-        q.publish(early, now);
+        put(&mut q, early, now);
         let mut late = msg(1, 0);
         late.props = MessageProps { expiration_ms: Some(1000), ..Default::default() }.into();
-        q.publish(late, now);
+        put(&mut q, late, now);
         q.add_consumer(consumer("c1", 1, 1));
         let a = q.assign(now, tagger()); // pops msg 0 (prefetch 1)
         assert_eq!(a[0].message.msg_id, 0);
@@ -768,7 +977,13 @@ mod tests {
         // Before either deadline: a scan may run (stale bound) but must
         // remove nothing; after msg 1's deadline it must expire it.
         assert!(q.sweep_expired(now).is_empty());
-        assert_eq!(q.sweep_expired(now + Duration::from_secs(5)), vec![1]);
+        assert_eq!(
+            q.sweep_expired(now + Duration::from_secs(5))
+                .iter()
+                .map(|m| m.msg_id)
+                .collect::<Vec<u64>>(),
+            vec![1]
+        );
         assert_eq!(q.ttl_pending(), 0);
     }
 
@@ -780,14 +995,154 @@ mod tests {
             None,
         );
         let now = Instant::now();
+        let mut displaced = Vec::new();
         for i in 0..5 {
-            q.publish(msg(i, 0), now);
+            let out = q.publish(msg(i, 0), now);
+            assert!(out.accepted, "drop-head always accepts the incoming message");
+            displaced.extend(out.dead);
         }
         assert_eq!(q.ready_len(), 3);
         assert_eq!(q.dropped_overflow, 2);
+        assert_eq!(q.dead_lettered, 2);
+        let dead_ids: Vec<u64> = displaced.iter().map(|d| d.message.msg_id).collect();
+        assert_eq!(dead_ids, vec![0, 1], "oldest evicted first, handed back for dead-lettering");
+        assert!(displaced.iter().all(|d| d.reason == DeadReason::Overflow));
         q.add_consumer(consumer("c1", 1, 0));
         let ids: Vec<u64> = q.assign(now, tagger()).iter().map(|x| x.message.msg_id).collect();
         assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn reject_new_overflow_refuses_incoming() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions {
+                max_length: Some(2),
+                overflow: OverflowPolicy::RejectNew,
+                ..Default::default()
+            },
+            None,
+        );
+        let now = Instant::now();
+        put(&mut q, msg(0, 0), now);
+        put(&mut q, msg(1, 0), now);
+        let out = q.publish(msg(2, 0), now);
+        assert!(!out.accepted);
+        assert_eq!(out.dead.len(), 1);
+        assert_eq!(out.dead[0].message.msg_id, 2, "the incoming message is the casualty");
+        assert_eq!(out.dead[0].reason, DeadReason::Overflow);
+        assert_eq!(q.ready_len(), 2, "queued work is untouched");
+        assert_eq!(q.published, 2, "a refused message was never published");
+        // Room frees up after a pop; publishes resume.
+        q.add_consumer(consumer("c1", 1, 1));
+        let a = q.assign(now, tagger());
+        assert!(q.ack(a[0].delivery_tag).is_some());
+        put(&mut q, msg(3, 0), now);
+    }
+
+    #[test]
+    fn max_delivery_cap_blocks_requeue() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions { max_delivery: Some(2), ..Default::default() },
+            None,
+        );
+        let now = Instant::now();
+        put(&mut q, msg(0, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        // First delivery: requeue allowed.
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a[0].message.delivery_count, 1);
+        match q.nack(a[0].delivery_tag, true) {
+            NackOutcome::Requeued { delivery_count, .. } => assert_eq!(delivery_count, 1),
+            _ => panic!("first requeue must be allowed"),
+        }
+        // Second delivery: the cap refuses the requeue.
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b[0].message.delivery_count, 2);
+        assert!(b[0].message.redelivered);
+        match q.nack(b[0].delivery_tag, true) {
+            NackOutcome::Dead(d) => {
+                assert_eq!(d.reason, DeadReason::MaxDelivery);
+                assert_eq!(d.message.delivery_count, 2);
+            }
+            _ => panic!("cap must dead-letter the second requeue"),
+        }
+        assert_eq!(q.ready_len(), 0);
+        assert_eq!(q.unacked_len(), 0);
+        assert_eq!(q.dead_lettered, 1);
+    }
+
+    #[test]
+    fn connection_death_over_cap_dead_letters() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions { max_delivery: Some(1), ..Default::default() },
+            None,
+        );
+        let now = Instant::now();
+        put(&mut q, msg(0, 0), now);
+        put(&mut q, msg(1, 0), now);
+        q.add_consumer(consumer("c1", 7, 0));
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 2);
+        let out = q.drop_connection(7);
+        assert_eq!(out.dead_tags.len(), 2);
+        assert_eq!(out.dead.len(), 2, "cap of 1: a crash consumes the only attempt");
+        assert!(out.requeued.is_empty());
+        assert_eq!(q.ready_len(), 0);
+    }
+
+    #[test]
+    fn requeue_undelivered_does_not_count_attempt() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions { max_delivery: Some(1), ..Default::default() },
+            None,
+        );
+        let now = Instant::now();
+        put(&mut q, msg(0, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a[0].message.delivery_count, 1);
+        // The send never landed: attempt refunded, message ready again.
+        assert!(q.requeue_undelivered(a[0].delivery_tag));
+        assert_eq!(q.ready_len(), 1);
+        // The refunded attempt means the next real delivery is attempt 1
+        // again — a failed send can never push a message over the cap.
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b[0].message.delivery_count, 1);
+        assert!(!q.requeue_undelivered(999), "unknown tag is a no-op");
+    }
+
+    #[test]
+    fn pend_dead_carries_queue_dlx_config() {
+        let mut q = Queue::new(
+            "q",
+            QueueOptions {
+                durable: true,
+                dead_letter_exchange: Some("dlx".into()),
+                dead_letter_routing_key: Some("graveyard".into()),
+                ..Default::default()
+            },
+            None,
+        );
+        let now = Instant::now();
+        put(&mut q, msg(0, 0), now);
+        q.add_consumer(consumer("c1", 1, 0));
+        let a = q.assign(now, tagger());
+        let NackOutcome::Dead(d) = q.nack(a[0].delivery_tag, false) else {
+            panic!("expected dead")
+        };
+        let pd = q.pend_dead(vec![d]);
+        assert_eq!(pd.len(), 1);
+        assert_eq!(&*pd[0].source, "q");
+        assert_eq!(pd[0].dead_letter_exchange.as_deref(), Some("dlx"));
+        assert_eq!(pd[0].dead_letter_routing_key.as_deref(), Some("graveyard"));
+        assert!(pd[0].durable);
+        assert_eq!(pd[0].reason, DeadReason::Rejected);
     }
 
     #[test]
@@ -802,7 +1157,7 @@ mod tests {
         let mut q = Queue::new("q", QueueOptions::default(), None);
         let now = Instant::now();
         for i in 0..4 {
-            q.publish(msg(i, (i % 2) as u8), now);
+            put(&mut q, msg(i, (i % 2) as u8), now);
         }
         let mut ids = q.purge();
         ids.sort_unstable();
@@ -829,7 +1184,7 @@ mod tests {
             for _ in 0..rng.range(1, 200) {
                 match rng.below(4) {
                     0 => {
-                        q.publish(msg(next_id, rng.below(10) as u8), now);
+                        put(&mut q, msg(next_id, rng.below(10) as u8), now);
                         next_id += 1;
                     }
                     1 => {
@@ -852,10 +1207,13 @@ mod tests {
                             let i = rng.range(0, outstanding.len());
                             let tag = outstanding.swap_remove(i);
                             let requeue = rng.chance(0.5);
-                            let r = q.nack(tag, requeue);
-                            if !requeue {
-                                assert!(r.is_some());
-                                dropped += 1;
+                            match q.nack(tag, requeue) {
+                                NackOutcome::Requeued { .. } => assert!(requeue),
+                                NackOutcome::Dead(_) => {
+                                    assert!(!requeue);
+                                    dropped += 1;
+                                }
+                                NackOutcome::Unknown => panic!("live tag must be known"),
                             }
                         }
                     }
@@ -882,7 +1240,7 @@ mod tests {
             let mut next_tag = 0u64;
             let mut outstanding = Vec::new();
             for i in 0..rng.range(1, 100) {
-                q.publish(msg(i as u64, 0), now);
+                put(&mut q, msg(i as u64, 0), now);
                 if rng.chance(0.7) {
                     let a = q.assign(now, || {
                         next_tag += 1;

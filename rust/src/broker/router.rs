@@ -310,6 +310,15 @@ impl Router {
         Ok(targets)
     }
 
+    /// Resolve like [`Router::route`] (same cache, same fast path) but
+    /// treat a missing exchange as "no targets" instead of an error — the
+    /// dead-letter pipeline uses this so a misconfigured DLX drops the
+    /// message (with a warning and a counter) rather than failing the
+    /// ack/nack/sweep that triggered the death.
+    pub fn route_if_exists(&self, exchange: &str, routing_key: &str) -> Option<RouteTargets> {
+        self.route(exchange, routing_key).ok()
+    }
+
     /// Resolve against the live tables, snapshotting `(generation,
     /// targets)` under one read-lock hold so the pair is consistent: a
     /// concurrent bind serialises on the write lock, so it either lands

@@ -16,7 +16,7 @@ use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::broker::core::{ConnectionEntry, ConnectionId};
-use crate::broker::queue::Queue;
+use crate::broker::queue::{PendingDead, Queue};
 
 /// One shard: a lock over its queues, its share of the delivery index, and
 /// a cache of connection entries for lock-free-ish delivery sends.
@@ -54,25 +54,30 @@ impl ShardState {
     }
 
     /// Drop `conn` from every queue in this shard: requeue its unacked
-    /// messages, remove its consumers, prune its delivery-index entries
-    /// (requeued messages get fresh tags on redelivery, so stale entries
-    /// would leak forever under connection churn). Returns the number of
-    /// requeued messages and the queues whose delivery pump should run.
-    pub fn drop_connection(&mut self, conn: ConnectionId) -> (usize, Vec<Arc<str>>) {
+    /// messages (dead-lettering any over the `max_delivery` cap), remove
+    /// its consumers, prune its delivery-index entries (requeued messages
+    /// get fresh tags on redelivery, so stale entries would leak forever
+    /// under connection churn).
+    pub fn drop_connection(&mut self, conn: ConnectionId) -> ShardDropOutcome {
         self.conns.remove(&conn);
-        let mut requeued = 0usize;
-        let mut touched = Vec::new();
+        let mut out = ShardDropOutcome::default();
         for (name, q) in self.queues.iter_mut() {
-            let dead_tags = q.drop_connection(conn);
-            for t in &dead_tags {
+            let dropped = q.drop_connection(conn);
+            for t in &dropped.dead_tags {
                 self.delivery_index.remove(t);
             }
-            if !dead_tags.is_empty() || q.consumer_count() > 0 {
-                touched.push(name.clone());
+            if !dropped.dead_tags.is_empty() || q.consumer_count() > 0 {
+                out.touched.push(name.clone());
             }
-            requeued += dead_tags.len();
+            out.requeued += dropped.dead_tags.len() - dropped.dead.len();
+            if !dropped.dead.is_empty() {
+                out.dead.extend(q.pend_dead(dropped.dead));
+            }
+            if q.options.durable && !dropped.requeued.is_empty() {
+                out.requeue_log.push((name.clone(), dropped.requeued));
+            }
         }
-        (requeued, touched)
+        out
     }
 
     /// Split the state into the pieces the dispatcher needs with disjoint
@@ -92,6 +97,21 @@ impl ShardState {
             TagAlloc { index: self.index, stride: self.stride, next_tag: &mut self.next_tag },
         )
     }
+}
+
+/// Aggregate result of dropping a connection from one shard.
+#[derive(Default)]
+pub struct ShardDropOutcome {
+    /// Messages returned to their queues.
+    pub requeued: usize,
+    /// Queues whose delivery pump should run.
+    pub touched: Vec<Arc<str>>,
+    /// Messages over their queue's `max_delivery` cap — the core
+    /// dead-letters them once no shard lock is held.
+    pub dead: Vec<PendingDead>,
+    /// Per durable queue: `(msg_id, delivery_count)` requeue log entries
+    /// for WAL records (attempt counts survive recovery).
+    pub requeue_log: Vec<(Arc<str>, Vec<(u64, u32)>)>,
 }
 
 /// A borrowed tag allocator (disjoint from the queue map borrow).

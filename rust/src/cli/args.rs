@@ -17,7 +17,8 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "config", "addr", "workers", "heartbeat-ms", "queue", "process", "inputs", "pid", "reason",
     "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
-    "delivery-batch", "route-cache",
+    "delivery-batch", "route-cache", "max-delivery", "dead-letter-exchange", "max-length",
+    "overflow",
 ];
 
 impl Args {
@@ -100,6 +101,18 @@ mod tests {
         assert_eq!(a.opt_parse::<usize>("shards").unwrap(), Some(8));
         assert_eq!(a.opt_parse::<usize>("delivery-batch").unwrap(), Some(128));
         assert_eq!(a.opt_parse::<usize>("route-cache").unwrap(), Some(1024));
+    }
+
+    #[test]
+    fn lifecycle_options_take_values() {
+        let a = parse(
+            "kiwi worker --max-delivery 3 --dead-letter-exchange kiwi.dlx \
+             --max-length 500 --overflow reject-new",
+        );
+        assert_eq!(a.opt_parse::<u32>("max-delivery").unwrap(), Some(3));
+        assert_eq!(a.opt("dead-letter-exchange"), Some("kiwi.dlx"));
+        assert_eq!(a.opt_parse::<usize>("max-length").unwrap(), Some(500));
+        assert_eq!(a.opt("overflow"), Some("reject-new"));
     }
 
     #[test]

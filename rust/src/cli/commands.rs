@@ -45,6 +45,12 @@ COMMON OPTIONS
   --heartbeat-ms N    heartbeat interval (0 = off)
   --artifacts DIR     AOT artifacts (default: artifacts)
   --checkpoints DIR   checkpoint store (default: .kiwi/checkpoints)
+
+TASK LIFECYCLE (worker / submit; declared on the task queue)
+  --max-delivery N           dead-letter a task after N attempts (0 = unlimited)
+  --dead-letter-exchange EX  route dead tasks to EX (catch queue: <queue>.dlq)
+  --max-length N             bound task-queue depth (0 = unbounded)
+  --overflow POLICY          drop-head | reject-new when the queue is full
 ";
 
 /// Entrypoint for `main`; returns the process exit code.
@@ -90,6 +96,19 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(n) = args.opt_parse::<usize>("route-cache")? {
         config.route_cache_cap = n;
     }
+    if let Some(n) = args.opt_parse::<u32>("max-delivery")? {
+        config.max_delivery = (n > 0).then_some(n);
+    }
+    if let Some(ex) = args.opt("dead-letter-exchange") {
+        config.dead_letter_exchange = (!ex.is_empty()).then(|| ex.to_string());
+    }
+    if let Some(n) = args.opt_parse::<usize>("max-length")? {
+        config.max_length = (n > 0).then_some(n);
+    }
+    if let Some(p) = args.opt("overflow") {
+        config.overflow = crate::broker::protocol::OverflowPolicy::parse(p)
+            .map_err(|_| Error::Config(format!("--overflow: unknown policy '{p}'")))?;
+    }
     Ok(config)
 }
 
@@ -100,6 +119,10 @@ fn connect_communicator(config: &Config) -> Result<Arc<dyn Communicator>> {
         RmqConfig {
             heartbeat_ms: config.heartbeat_ms,
             request_timeout: config.request_timeout,
+            task_max_delivery: config.max_delivery,
+            task_dead_letter_exchange: config.dead_letter_exchange.clone(),
+            task_max_length: config.max_length,
+            task_overflow: config.overflow,
             ..Default::default()
         },
     )?;
@@ -277,7 +300,9 @@ mod tests {
     fn config_overrides_from_args() {
         let config = load_config(&parse(
             "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient \
-             --shards 2 --delivery-batch 32 --route-cache 0",
+             --shards 2 --delivery-batch 32 --route-cache 0 \
+             --max-delivery 4 --dead-letter-exchange kiwi.dlx --max-length 100 \
+             --overflow reject-new",
         ))
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
@@ -287,5 +312,15 @@ mod tests {
         assert_eq!(config.shards, 2);
         assert_eq!(config.delivery_batch, 32);
         assert_eq!(config.route_cache_cap, 0);
+        assert_eq!(config.max_delivery, Some(4));
+        assert_eq!(config.dead_letter_exchange.as_deref(), Some("kiwi.dlx"));
+        assert_eq!(config.max_length, Some(100));
+        assert_eq!(config.overflow, crate::broker::protocol::OverflowPolicy::RejectNew);
+    }
+
+    #[test]
+    fn bad_overflow_policy_is_config_error() {
+        let err = load_config(&parse("kiwi worker --overflow sideways")).unwrap_err();
+        assert!(err.to_string().contains("overflow"));
     }
 }

@@ -28,7 +28,7 @@ use crate::wire::Value;
 pub use filters::BroadcastFilter;
 pub use futures::{KiwiFuture, Promise};
 pub use local::LocalCommunicator;
-pub use rmq::{RmqCommunicator, RmqConfig, TaskContext};
+pub use rmq::{dead_letter_queue_name, RmqCommunicator, RmqConfig, TaskContext};
 
 /// A broadcast message as seen by subscribers.
 #[derive(Clone, Debug, PartialEq)]

@@ -25,7 +25,9 @@ use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::broker::protocol::{ClientRequest, ExchangeKind, MessageProps, QueueOptions};
+use crate::broker::protocol::{
+    ClientRequest, ExchangeKind, MessageProps, OverflowPolicy, QueueOptions,
+};
 use crate::communicator::filters::BroadcastFilter;
 use crate::communicator::futures::{promise, KiwiFuture, Promise};
 use crate::communicator::{
@@ -53,6 +55,23 @@ pub struct RmqConfig {
     /// (§Perf E1b). Unroutable drops are still impossible once the queue
     /// is declared, which `task_send` guarantees.
     pub confirm_publishes: bool,
+    /// Max delivery attempts per task; a task nack-requeued at this count
+    /// (or whose worker keeps crashing) is dead-lettered instead of
+    /// redelivered forever. `None` = unlimited (seed behaviour).
+    pub task_max_delivery: Option<u32>,
+    /// Dead-letter exchange for task queues. When set, this communicator
+    /// declares the exchange (direct), a `<queue>.dlq` catch queue bound
+    /// under the task queue's name, and declares task queues with the DLX
+    /// attached — poisoned/expired/overflowed tasks land on the catch
+    /// queue with `x-death` metadata instead of vanishing.
+    pub task_dead_letter_exchange: Option<String>,
+    /// Bound on task-queue depth (backpressure), applied with
+    /// `task_overflow`.
+    pub task_max_length: Option<usize>,
+    /// What a full task queue does: evict the oldest task (`drop-head`)
+    /// or refuse the incoming one (`reject-new` — a confirming
+    /// `task_send` then surfaces the refusal to the submitter).
+    pub task_overflow: OverflowPolicy,
 }
 
 impl Default for RmqConfig {
@@ -65,8 +84,19 @@ impl Default for RmqConfig {
             broadcast_exchange: "kiwi.broadcast".into(),
             durable_tasks: true,
             confirm_publishes: true,
+            task_max_delivery: None,
+            task_dead_letter_exchange: None,
+            task_max_length: None,
+            task_overflow: OverflowPolicy::DropHead,
         }
     }
+}
+
+/// Conventional name of the catch queue this communicator binds to its
+/// dead-letter exchange for `queue` (see
+/// [`RmqConfig::task_dead_letter_exchange`]).
+pub fn dead_letter_queue_name(queue: &str) -> String {
+    format!("{queue}.dlq")
 }
 
 enum Subscription {
@@ -161,7 +191,11 @@ impl RmqCommunicator {
         &self.conn
     }
 
-    /// Declare a task queue once per communicator.
+    /// Declare a task queue once per communicator, wiring up the
+    /// dead-letter topology first when configured: the DLX (direct), the
+    /// `<queue>.dlq` catch queue, and its binding under the task queue's
+    /// name — dead tasks keep their original routing key, so a direct DLX
+    /// funnels each queue's casualties into its own catch queue.
     fn ensure_task_queue(&self, queue: &str) -> Result<()> {
         {
             let declared = self.declared.lock().unwrap();
@@ -169,10 +203,33 @@ impl RmqCommunicator {
                 return Ok(());
             }
         }
+        if let Some(dlx) = &self.config.task_dead_letter_exchange {
+            let dlq = dead_letter_queue_name(queue);
+            self.conn.request(&ClientRequest::ExchangeDeclare {
+                exchange: dlx.clone(),
+                kind: ExchangeKind::Direct,
+            })?;
+            self.conn.request(&ClientRequest::QueueDeclare {
+                queue: dlq.clone(),
+                options: QueueOptions {
+                    durable: self.config.durable_tasks,
+                    ..Default::default()
+                },
+            })?;
+            self.conn.request(&ClientRequest::Bind {
+                exchange: dlx.clone(),
+                queue: dlq,
+                routing_key: queue.to_string(),
+            })?;
+        }
         self.conn.request(&ClientRequest::QueueDeclare {
             queue: queue.to_string(),
             options: QueueOptions {
                 durable: self.config.durable_tasks,
+                max_delivery: self.config.task_max_delivery,
+                dead_letter_exchange: self.config.task_dead_letter_exchange.clone(),
+                max_length: self.config.task_max_length,
+                overflow: self.config.task_overflow,
                 ..Default::default()
             },
         })?;
@@ -292,11 +349,14 @@ impl TaskContext {
     }
 
     /// Refuse the task. With `requeue` the broker hands it to another
-    /// consumer; otherwise it is dropped.
+    /// consumer (until the queue's `max_delivery` cap says otherwise);
+    /// with `requeue = false` this is the poison pill — the broker
+    /// dead-letters the task to the queue's DLX (or drops it when none is
+    /// configured) instead of redelivering it forever.
     pub fn reject(self, requeue: bool) {
         match self.inner {
             ContextInner::Remote { conn, delivery_tag, .. } => {
-                conn.nack(delivery_tag, requeue).ok();
+                conn.reject(delivery_tag, requeue).ok();
             }
             ContextInner::Local { promise } => {
                 promise.set_error(Error::RemoteException("task rejected".into()));

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::broker::persistence::SyncPolicy;
+use crate::broker::protocol::OverflowPolicy;
 use crate::error::{Error, Result};
 use crate::wire::{json, Value};
 
@@ -38,6 +39,18 @@ pub struct Config {
     /// the broker's router may cache (0 disables caching — every publish
     /// resolves against the exchange tables, the seed behaviour).
     pub route_cache_cap: usize,
+    /// Max delivery attempts per task before it is dead-lettered (None =
+    /// unlimited; a poison task then redelivers forever).
+    pub max_delivery: Option<u32>,
+    /// Dead-letter exchange for task queues. When set, workers/submitters
+    /// declare it plus a `<queue>.dlq` catch queue, and task queues route
+    /// rejected / max-redelivered / expired / overflowed tasks there.
+    pub dead_letter_exchange: Option<String>,
+    /// Bound on task-queue depth (None = unbounded).
+    pub max_length: Option<usize>,
+    /// Overflow policy once `max_length` is reached: `drop-head` or
+    /// `reject-new`.
+    pub overflow: OverflowPolicy,
 }
 
 impl Default for Config {
@@ -55,6 +68,10 @@ impl Default for Config {
             shards: 0, // auto: one shard per available core
             delivery_batch: 64,
             route_cache_cap: crate::broker::router::DEFAULT_ROUTE_CACHE_CAP,
+            max_delivery: None,
+            dead_letter_exchange: None,
+            max_length: None,
+            overflow: OverflowPolicy::DropHead,
         }
     }
 }
@@ -119,6 +136,24 @@ impl Config {
         if let Some(x) = v.get_opt("route_cache_cap") {
             c.route_cache_cap = x.as_u64()? as usize;
         }
+        if let Some(x) = v.get_opt("max_delivery") {
+            // 0 = unlimited, matching the CLI and env spellings.
+            let n = x.as_u64()? as u32;
+            c.max_delivery = (n > 0).then_some(n);
+        }
+        if let Some(x) = v.get_opt("dead_letter_exchange") {
+            let ex = x.as_str()?.to_string();
+            c.dead_letter_exchange = (!ex.is_empty()).then_some(ex);
+        }
+        if let Some(x) = v.get_opt("max_length") {
+            // 0 = unbounded, matching the CLI and env spellings.
+            let n = x.as_u64()? as usize;
+            c.max_length = (n > 0).then_some(n);
+        }
+        if let Some(x) = v.get_opt("overflow") {
+            c.overflow = OverflowPolicy::parse(x.as_str()?)
+                .map_err(|_| Error::Config(format!("bad overflow policy: {x}")))?;
+        }
         Ok(c)
     }
 
@@ -143,6 +178,10 @@ impl Config {
             ("shards", Value::from(self.shards)),
             ("delivery_batch", Value::from(self.delivery_batch)),
             ("route_cache_cap", Value::from(self.route_cache_cap)),
+            ("max_delivery", self.max_delivery.map(u64::from).into()),
+            ("dead_letter_exchange", self.dead_letter_exchange.clone().into()),
+            ("max_length", self.max_length.map(|n| n as u64).into()),
+            ("overflow", Value::str(self.overflow.as_str())),
         ])
     }
 
@@ -183,7 +222,10 @@ impl Config {
 
     /// `KIWI_BROKER_ADDR`, `KIWI_WORKERS`, `KIWI_HEARTBEAT_MS`,
     /// `KIWI_ARTIFACTS_DIR`, `KIWI_CHECKPOINT_DIR`, `KIWI_SHARDS`,
-    /// `KIWI_DELIVERY_BATCH`, `KIWI_ROUTE_CACHE` override the file.
+    /// `KIWI_DELIVERY_BATCH`, `KIWI_ROUTE_CACHE`, `KIWI_MAX_DELIVERY`
+    /// (0 = unlimited), `KIWI_DEAD_LETTER_EXCHANGE` (empty = off),
+    /// `KIWI_MAX_LENGTH` (0 = unbounded), `KIWI_OVERFLOW`
+    /// (`drop-head`/`reject-new`) override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -217,6 +259,24 @@ impl Config {
         if let Ok(v) = std::env::var("KIWI_ROUTE_CACHE") {
             if let Ok(n) = v.parse::<usize>() {
                 self.route_cache_cap = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_MAX_DELIVERY") {
+            if let Ok(n) = v.parse::<u32>() {
+                self.max_delivery = (n > 0).then_some(n);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_DEAD_LETTER_EXCHANGE") {
+            self.dead_letter_exchange = (!v.is_empty()).then_some(v);
+        }
+        if let Ok(v) = std::env::var("KIWI_MAX_LENGTH") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.max_length = (n > 0).then_some(n);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_OVERFLOW") {
+            if let Ok(p) = OverflowPolicy::parse(&v) {
+                self.overflow = p;
             }
         }
     }
@@ -287,6 +347,42 @@ mod tests {
         // delivery_batch is clamped to ≥ 1.
         let v = json::from_str(r#"{"delivery_batch": 0}"#).unwrap();
         assert_eq!(Config::from_value(&v).unwrap().delivery_batch, 1);
+    }
+
+    #[test]
+    fn lifecycle_knobs_parse_and_roundtrip() {
+        let v = json::from_str(
+            r#"{"max_delivery": 3, "dead_letter_exchange": "kiwi.dlx",
+                "max_length": 1000, "overflow": "reject-new"}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.max_delivery, Some(3));
+        assert_eq!(c.dead_letter_exchange.as_deref(), Some("kiwi.dlx"));
+        assert_eq!(c.max_length, Some(1000));
+        assert_eq!(c.overflow, OverflowPolicy::RejectNew);
+        let back = Config::from_value(&json::from_str(&json::to_string(&c.to_value())).unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+        // Defaults: lifecycle off, seed behaviour.
+        let d = Config::default();
+        assert_eq!(d.max_delivery, None);
+        assert_eq!(d.dead_letter_exchange, None);
+        assert_eq!(d.overflow, OverflowPolicy::DropHead);
+        // Bad policy is a config error.
+        assert!(
+            Config::from_value(&json::from_str(r#"{"overflow": "explode"}"#).unwrap()).is_err()
+        );
+        // 0 / "" mean off, exactly like the CLI and env spellings — a
+        // file saying {"max_length": 0} must NOT become a 1-deep queue.
+        let v = json::from_str(
+            r#"{"max_delivery": 0, "max_length": 0, "dead_letter_exchange": ""}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.max_delivery, None);
+        assert_eq!(c.max_length, None);
+        assert_eq!(c.dead_letter_exchange, None);
     }
 
     #[test]

@@ -93,6 +93,42 @@ impl Rng {
     }
 }
 
+/// Generators for the crate's core data types, shared by the in-tree
+/// property tests and the protocol fuzz suite (`tests/protocol_fuzz.rs`).
+pub mod generators {
+    use super::Rng;
+    use crate::wire::Value;
+    use std::collections::BTreeMap;
+
+    /// A random [`Value`] tree of bounded depth. At depth 0 only leaves
+    /// are produced, so generation always terminates; sizes are kept
+    /// small — fuzz throughput beats individual-case bulk.
+    pub fn value(rng: &Rng, depth: usize) -> Value {
+        let scalar_only = depth == 0;
+        match rng.below(if scalar_only { 7 } else { 9 }) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::I64(rng.i64()),
+            3 => {
+                // Finite floats only: NaN breaks `decode(encode(x)) == x`
+                // for reasons that are the float's fault, not the codec's.
+                Value::F64((rng.f64() - 0.5) * 1e12)
+            }
+            4 => Value::Str(rng.string(24)),
+            5 => Value::Bytes(rng.bytes(48)),
+            6 => Value::F32s((0..rng.range(0, 9)).map(|_| rng.f32()).collect()),
+            7 => Value::List((0..rng.range(0, 5)).map(|_| value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = BTreeMap::new();
+                for _ in 0..rng.range(0, 5) {
+                    m.insert(rng.string(12), value(rng, depth - 1));
+                }
+                Value::Map(m)
+            }
+        }
+    }
+}
+
 /// Number of cases `run_prop` executes per property (overridable with
 /// `KIWI_PROP_CASES`).
 pub fn default_cases() -> u32 {

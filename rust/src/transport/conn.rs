@@ -262,9 +262,26 @@ impl Connection {
         self.send_noreply(&ClientRequest::Ack { delivery_tag })
     }
 
-    /// Reject a delivery, optionally requeueing (fire-and-forget).
+    /// Reject a delivery, optionally requeueing (fire-and-forget). With
+    /// `requeue = false` — or when the message has hit its queue's
+    /// `max_delivery` cap — the broker dead-letters it instead of
+    /// redelivering.
     pub fn nack(&self, delivery_tag: u64, requeue: bool) -> Result<()> {
         self.send_noreply(&ClientRequest::Nack { delivery_tag, requeue })
+    }
+
+    /// Negative-acknowledge many deliveries in one frame.
+    pub fn nack_multi(&self, delivery_tags: Vec<u64>, requeue: bool) -> Result<()> {
+        if delivery_tags.is_empty() {
+            return Ok(());
+        }
+        self.send_noreply(&ClientRequest::NackMulti { delivery_tags, requeue })
+    }
+
+    /// AMQP `basic.reject`: refuse a single delivery (fire-and-forget).
+    /// Same broker semantics as [`Connection::nack`].
+    pub fn reject(&self, delivery_tag: u64, requeue: bool) -> Result<()> {
+        self.send_noreply(&ClientRequest::Reject { delivery_tag, requeue })
     }
 
     /// True when the connection is no longer usable.

@@ -126,6 +126,16 @@ impl ProcessLauncher {
                 let result = runner.run().map(|outcome| outcome.to_record());
                 ctx.complete(result);
             }
+            Err(Error::Persistence(m)) => {
+                // A `continue` task whose checkpoint this daemon cannot
+                // see: checkpoint stores are per-daemon, so hand the task
+                // back for a daemon that owns it. The task queue's
+                // `max_delivery` cap turns a checkpoint *nobody* holds
+                // into a dead-letter instead of an infinite redelivery
+                // loop (the poison-pill path).
+                log::warn!("launcher: cannot continue here ({m}); returning task to the queue");
+                ctx.reject(true);
+            }
             Err(e) => {
                 log::warn!("launcher: task rejected: {e}");
                 ctx.complete(Err(e));

@@ -1,0 +1,286 @@
+//! Delivery-lifecycle acceptance, end to end: a task nacked with
+//! `requeue = false` (or pushed over `max_delivery`) lands on the
+//! configured dead-letter queue with reason metadata and a byte-identical
+//! body — verified over real TCP, and again after WAL recovery.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::persistence::{replay, SyncPolicy, WalPersister};
+use kiwi::broker::protocol::{
+    ClientRequest, ExchangeKind, MessageProps, OverflowPolicy, QueueOptions,
+};
+use kiwi::broker::BrokerServer;
+use kiwi::communicator::{dead_letter_queue_name, Communicator, RmqCommunicator, RmqConfig};
+use kiwi::error::Error;
+use kiwi::transport::{connect_tcp, Connection, ConnectionConfig};
+use kiwi::wire::{Bytes, Value};
+
+fn temp_wal(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("kiwi-lifecycle-{tag}-{}.wal", std::process::id()))
+}
+
+fn tcp_conn(addr: std::net::SocketAddr) -> Connection {
+    Connection::open(
+        Arc::new(connect_tcp(addr).unwrap()),
+        ConnectionConfig { heartbeat_ms: 0, ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Declare the DLX topology on `conn`: direct exchange `dlx`, durable
+/// catch queue `dlq` bound under "jobs", durable "jobs" queue with the
+/// given lifecycle options.
+fn declare_topology(conn: &Connection, max_delivery: Option<u32>) {
+    conn.request(&ClientRequest::ExchangeDeclare {
+        exchange: "dlx".into(),
+        kind: ExchangeKind::Direct,
+    })
+    .unwrap();
+    conn.request(&ClientRequest::QueueDeclare {
+        queue: "dlq".into(),
+        options: QueueOptions::durable(),
+    })
+    .unwrap();
+    conn.request(&ClientRequest::Bind {
+        exchange: "dlx".into(),
+        queue: "dlq".into(),
+        routing_key: "jobs".into(),
+    })
+    .unwrap();
+    conn.request(&ClientRequest::QueueDeclare {
+        queue: "jobs".into(),
+        options: QueueOptions {
+            durable: true,
+            max_delivery,
+            dead_letter_exchange: Some("dlx".into()),
+            ..Default::default()
+        },
+    })
+    .unwrap();
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn rejected_task_reaches_dlq_over_tcp_and_survives_recovery() {
+    let wal_path = temp_wal("reject");
+    std::fs::remove_file(&wal_path).ok();
+    let body = Bytes::encode(&Value::map([
+        ("task", Value::str("simulate")),
+        ("blob", Value::Bytes((0..=255u8).cycle().take(8 * 1024).collect())),
+    ]));
+    {
+        let (wal, rec) = WalPersister::open(&wal_path, SyncPolicy::Always).unwrap();
+        let broker = BrokerHandle::with_persister(Box::new(wal), rec);
+        let server = BrokerServer::start(broker.clone(), "127.0.0.1:0").unwrap();
+        let conn = tcp_conn(server.addr());
+        declare_topology(&conn, None);
+        conn.request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "jobs".into(),
+            body: body.clone(),
+            props: MessageProps { persistent: true, priority: 5, ..Default::default() }.into(),
+            mandatory: true,
+        })
+        .unwrap();
+        // Worker takes the task and poison-pills it.
+        let (dtx, drx) = channel();
+        conn.consume("jobs", "worker", 1, Box::new(move |d| dtx.send(d).unwrap())).unwrap();
+        let d = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        conn.nack(d.delivery_tag, false).unwrap();
+        wait_until("dead letter on dlq", || broker.queue_depth("dlq") == Some(1));
+        assert_eq!(broker.queue_depth("jobs"), Some(0));
+        // Consume it from the DLQ over TCP: byte-identical body + reason.
+        let (ltx, lrx) = channel();
+        conn.consume("dlq", "undertaker", 1, Box::new(move |d| ltx.send(d).unwrap())).unwrap();
+        let dead = lrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(
+            dead.body.as_slice(),
+            body.as_slice(),
+            "dead-lettered body must be byte-identical end-to-end"
+        );
+        assert_eq!(dead.props.priority, 5);
+        let deaths = dead.props.headers.get("x-death").unwrap().as_list().unwrap();
+        assert_eq!(deaths[0].get_str("queue").unwrap(), "jobs");
+        assert_eq!(deaths[0].get_str("reason").unwrap(), "rejected");
+        // Leave the DLQ copy unacked; close. It must survive recovery.
+        conn.close();
+        // Let the session's disconnect path finish (it requeues the
+        // unacked DLQ copy and logs the requeue) before reading the WAL.
+        wait_until("session teardown", || {
+            broker.metrics().gauge("broker.connections").get() == 0
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        broker.sync().unwrap();
+        server.shutdown();
+    }
+    // Cold restart from the WAL: the dead letter is on the DLQ, its body
+    // still byte-identical, and the jobs queue is clean.
+    let (wal, rec) = WalPersister::open(&wal_path, SyncPolicy::Always).unwrap();
+    assert_eq!(rec.messages.get("jobs").map(Vec::len).unwrap_or(0), 0);
+    let dlq_msgs = &rec.messages["dlq"];
+    assert_eq!(dlq_msgs.len(), 1);
+    assert_eq!(dlq_msgs[0].body.as_slice(), body.as_slice(), "WAL must preserve bytes");
+    let deaths = dlq_msgs[0].props.headers.get("x-death").unwrap().as_list().unwrap();
+    assert_eq!(deaths[0].get_str("reason").unwrap(), "rejected");
+    // And a recovered broker serves it.
+    let broker = BrokerHandle::with_persister(Box::new(wal), rec);
+    assert_eq!(broker.queue_depth("dlq"), Some(1));
+    assert_eq!(broker.queue_depth("jobs"), Some(0));
+    std::fs::remove_file(&wal_path).ok();
+}
+
+#[test]
+fn max_delivery_exceeded_reaches_dlq_and_attempt_counts_survive_recovery() {
+    let wal_path = temp_wal("cap");
+    std::fs::remove_file(&wal_path).ok();
+    {
+        let (wal, rec) = WalPersister::open(&wal_path, SyncPolicy::Always).unwrap();
+        let broker = BrokerHandle::with_persister(Box::new(wal), rec);
+        let server = BrokerServer::start(broker.clone(), "127.0.0.1:0").unwrap();
+        let conn = tcp_conn(server.addr());
+        declare_topology(&conn, Some(2));
+        conn.request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "jobs".into(),
+            body: Bytes::encode(&Value::str("poison")),
+            props: MessageProps { persistent: true, ..Default::default() }.into(),
+            mandatory: true,
+        })
+        .unwrap();
+        let (dtx, drx) = channel();
+        conn.consume("jobs", "worker", 1, Box::new(move |d| dtx.send(d).unwrap())).unwrap();
+        // Attempt 1: nack-requeue — a requeue record hits the WAL, so the
+        // attempt count survives a crash right here.
+        let d1 = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!d1.redelivered);
+        conn.nack(d1.delivery_tag, true).unwrap();
+        // (Mid-flight recovery check: replay the WAL as it is on disk.)
+        let d2 = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(d2.redelivered, "second delivery must be flagged redelivered");
+        broker.sync().unwrap();
+        let mid = replay(&wal_path).unwrap();
+        assert_eq!(
+            mid.messages["jobs"][0].delivery_count, 1,
+            "attempt count must be recoverable mid-flight"
+        );
+        // Attempt 2 is in flight; requeueing it again breaches the cap.
+        conn.nack(d2.delivery_tag, true).unwrap();
+        wait_until("cap breach dead-letters", || broker.queue_depth("dlq") == Some(1));
+        assert_eq!(broker.queue_depth("jobs"), Some(0), "no infinite redelivery");
+        assert_eq!(broker.queue_unacked("jobs"), Some(0));
+        conn.close();
+        wait_until("session teardown", || {
+            broker.metrics().gauge("broker.connections").get() == 0
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        broker.sync().unwrap();
+        server.shutdown();
+    }
+    // After restart the poison message is (only) on the DLQ with the
+    // max-delivery reason.
+    let rec = replay(&wal_path).unwrap();
+    assert_eq!(rec.messages.get("jobs").map(Vec::len).unwrap_or(0), 0);
+    let dead = &rec.messages["dlq"][0];
+    let deaths = dead.props.headers.get("x-death").unwrap().as_list().unwrap();
+    assert_eq!(deaths[0].get_str("reason").unwrap(), "max-delivery");
+    assert_eq!(dead.body.decode().unwrap(), Value::str("poison"));
+    std::fs::remove_file(&wal_path).ok();
+}
+
+#[test]
+fn reject_new_overflow_backpressures_publisher_over_tcp() {
+    let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+    let conn = tcp_conn(server.addr());
+    conn.request(&ClientRequest::QueueDeclare {
+        queue: "bounded".into(),
+        options: QueueOptions {
+            max_length: Some(2),
+            overflow: OverflowPolicy::RejectNew,
+            ..Default::default()
+        },
+    })
+    .unwrap();
+    for i in 0..2 {
+        conn.request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "bounded".into(),
+            body: Bytes::encode(&Value::I64(i)),
+            props: MessageProps::default().into(),
+            mandatory: true,
+        })
+        .unwrap();
+    }
+    let err = conn
+        .request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "bounded".into(),
+            body: Bytes::encode(&Value::I64(2)),
+            props: MessageProps::default().into(),
+            mandatory: true,
+        })
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::UnroutableMessage(_)),
+        "a full reject-new queue must surface backpressure, got {err:?}"
+    );
+    conn.close();
+}
+
+#[test]
+fn communicator_dlx_config_gives_poison_tasks_a_grave() {
+    // The daemon-workflow shape from the README: a worker that always
+    // rejects; the task ends up on the conventional `<queue>.dlq` with
+    // metadata instead of redelivering forever.
+    let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+    let lifecycle = RmqConfig {
+        durable_tasks: false,
+        task_max_delivery: Some(2),
+        task_dead_letter_exchange: Some("kiwi.dlx".into()),
+        ..Default::default()
+    };
+    let worker = RmqCommunicator::connect(
+        Arc::new(connect_tcp(server.addr()).unwrap()),
+        lifecycle.clone(),
+    )
+    .unwrap();
+    let client = RmqCommunicator::connect(
+        Arc::new(connect_tcp(server.addr()).unwrap()),
+        lifecycle.clone(),
+    )
+    .unwrap();
+    worker
+        .task_queue(
+            "fragile",
+            1,
+            Box::new(move |_task, ctx| ctx.reject(false)), // poison pill
+        )
+        .unwrap();
+    let _pending = client.task_send("fragile", Value::str("doomed")).unwrap();
+    let dlq = dead_letter_queue_name("fragile");
+    let broker = server.broker().clone();
+    wait_until("poison task on the dlq", || broker.queue_depth(&dlq) == Some(1));
+    assert_eq!(broker.queue_depth("fragile"), Some(0));
+    // The grave is inspectable: a fresh consumer reads the task back with
+    // its death certificate.
+    let conn = tcp_conn(server.addr());
+    let (tx, rx) = channel();
+    conn.consume(&dlq, "inspector", 1, Box::new(move |d| tx.send(d).unwrap())).unwrap();
+    let dead = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(dead.body.decode().unwrap(), Value::str("doomed"));
+    let deaths = dead.props.headers.get("x-death").unwrap().as_list().unwrap();
+    assert_eq!(deaths[0].get_str("queue").unwrap(), "fragile");
+    assert_eq!(deaths[0].get_str("reason").unwrap(), "rejected");
+    conn.close();
+    worker.close();
+    client.close();
+}

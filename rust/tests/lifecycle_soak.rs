@@ -1,0 +1,226 @@
+//! Lifecycle soak: consumer churn with mixed ack / nack / abrupt death
+//! under prefetch, against a queue with a `max_delivery` cap and a
+//! dead-letter exchange. The global invariant checked after every round:
+//!
+//! `published == acked + dead-lettered + in-flight + ready`
+//!
+//! — no message is ever lost or duplicated, whatever mix of rejections,
+//! requeues and crashes the workers produce — and at the end the unacked
+//! map and the delivery-tag index are both empty (no leaks).
+
+use std::sync::mpsc::{channel, Receiver};
+
+use kiwi::broker::core::{BrokerConfig, BrokerHandle, ConnectionId};
+use kiwi::broker::persistence::{NoopPersister, RecoveredState};
+use kiwi::broker::protocol::{
+    ClientRequest, Delivery, ExchangeKind, MessageProps, QueueOptions, ServerMsg,
+};
+use kiwi::proputil::Rng;
+use kiwi::wire::{Bytes, Value};
+
+const WORK: &str = "soak.work";
+const DLQ: &str = "soak.work.dead";
+const DLX: &str = "soak.dlx";
+const MESSAGES: u64 = 400;
+const MAX_DELIVERY: u32 = 5;
+
+struct Worker {
+    conn: ConnectionId,
+    rx: Receiver<ServerMsg>,
+}
+
+fn spawn_worker(broker: &BrokerHandle, id: usize, generation: usize) -> Worker {
+    let (tx, rx) = channel();
+    let conn = broker.connect(&format!("soak-w{id}-g{generation}"), 0, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Consume {
+                queue: WORK.into(),
+                consumer_tag: format!("soak-c{id}-g{generation}"),
+                prefetch: 4,
+            },
+        )
+        .unwrap();
+    Worker { conn, rx }
+}
+
+fn deliveries(rx: &Receiver<ServerMsg>) -> Vec<Delivery> {
+    let mut out = Vec::new();
+    for msg in rx.try_iter() {
+        match msg {
+            ServerMsg::Deliver(d) => out.push(d),
+            ServerMsg::DeliverBatch(ds) => out.extend(ds),
+            _ => {}
+        }
+    }
+    out
+}
+
+fn depth(broker: &BrokerHandle, q: &str) -> u64 {
+    broker.queue_depth(q).unwrap() as u64
+}
+
+fn unacked(broker: &BrokerHandle, q: &str) -> u64 {
+    broker.queue_unacked(q).unwrap() as u64
+}
+
+#[test]
+fn churn_soak_conserves_every_message() {
+    let broker = BrokerHandle::with_config(
+        Box::new(NoopPersister),
+        RecoveredState::default(),
+        BrokerConfig { shards: 4, delivery_batch: 8, ..Default::default() },
+    );
+    let (admin_tx, _admin_rx) = channel();
+    let admin = broker.connect("soak-admin", 0, admin_tx);
+    // Topology: work queue with a delivery cap, dead-lettering into DLQ.
+    broker
+        .handle(
+            admin,
+            &ClientRequest::ExchangeDeclare { exchange: DLX.into(), kind: ExchangeKind::Direct },
+        )
+        .unwrap();
+    broker
+        .handle(
+            admin,
+            &ClientRequest::QueueDeclare { queue: DLQ.into(), options: QueueOptions::default() },
+        )
+        .unwrap();
+    broker
+        .handle(
+            admin,
+            &ClientRequest::Bind {
+                exchange: DLX.into(),
+                queue: DLQ.into(),
+                routing_key: WORK.into(),
+            },
+        )
+        .unwrap();
+    broker
+        .handle(
+            admin,
+            &ClientRequest::QueueDeclare {
+                queue: WORK.into(),
+                options: QueueOptions {
+                    max_delivery: Some(MAX_DELIVERY),
+                    dead_letter_exchange: Some(DLX.into()),
+                    ..Default::default()
+                },
+            },
+        )
+        .unwrap();
+
+    for i in 0..MESSAGES {
+        broker
+            .handle(
+                admin,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: WORK.into(),
+                    body: Bytes::encode(&Value::I64(i as i64)),
+                    props: MessageProps::default().into(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+
+    let rng = Rng::new(
+        std::env::var("KIWI_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0x50AC),
+    );
+    let mut workers: Vec<Worker> = (0..4).map(|i| spawn_worker(&broker, i, 0)).collect();
+    let mut generation = 1usize;
+    let mut acked = 0u64;
+
+    let check_conservation = |acked: u64, where_: &str| {
+        let dead = depth(&broker, DLQ) + unacked(&broker, DLQ);
+        let ready = depth(&broker, WORK);
+        let in_flight = unacked(&broker, WORK);
+        assert_eq!(
+            MESSAGES,
+            acked + dead + in_flight + ready,
+            "conservation violated ({where_}): acked={acked} dead={dead} \
+             in_flight={in_flight} ready={ready}"
+        );
+    };
+
+    let mut rounds = 0usize;
+    loop {
+        rounds += 1;
+        assert!(rounds < 50_000, "soak failed to converge");
+        let mut any = false;
+        for w in &workers {
+            for d in deliveries(&w.rx) {
+                any = true;
+                let roll = rng.f64();
+                if roll < 0.55 {
+                    broker
+                        .handle(w.conn, &ClientRequest::Ack { delivery_tag: d.delivery_tag })
+                        .unwrap();
+                    acked += 1;
+                } else if roll < 0.80 {
+                    broker
+                        .handle(
+                            w.conn,
+                            &ClientRequest::Nack { delivery_tag: d.delivery_tag, requeue: true },
+                        )
+                        .unwrap();
+                } else if roll < 0.90 {
+                    broker
+                        .handle(
+                            w.conn,
+                            &ClientRequest::Reject {
+                                delivery_tag: d.delivery_tag,
+                                requeue: false,
+                            },
+                        )
+                        .unwrap();
+                }
+                // else: sit on it unacked (a slow consumer) — a later
+                // round or its death settles it.
+            }
+        }
+        // Random churn: kill a worker (its unacked requeue or die to the
+        // DLX via the cap), replace it with a fresh one.
+        if rng.chance(0.10) {
+            let victim = workers.swap_remove(rng.range(0, workers.len()));
+            broker.disconnect(victim.conn);
+            workers.push(spawn_worker(&broker, workers.len(), generation));
+            generation += 1;
+        }
+        check_conservation(acked, "mid-churn");
+        if depth(&broker, WORK) == 0 && unacked(&broker, WORK) == 0 {
+            break;
+        }
+        if !any {
+            // Nothing was delivered this round (all workers were sitting
+            // on unacked messages): force progress by recycling everyone.
+            for w in workers.drain(..) {
+                broker.disconnect(w.conn);
+            }
+            workers = (0..4).map(|i| spawn_worker(&broker, i, generation + i)).collect();
+            generation += 4;
+        }
+    }
+
+    // Every message is accounted for: acked or dead-lettered, nothing
+    // in flight, nothing ready, no leaked delivery tags.
+    check_conservation(acked, "final");
+    assert_eq!(unacked(&broker, WORK), 0);
+    assert_eq!(unacked(&broker, DLQ), 0, "nobody consumes the DLQ");
+    let dead = depth(&broker, DLQ);
+    assert_eq!(acked + dead, MESSAGES);
+    assert!(dead > 0, "with a {MAX_DELIVERY}-delivery cap and 45% refusals some must die");
+    assert!(acked > 0, "most messages should complete");
+    // Counter cross-check: every death was booked and republished.
+    assert_eq!(broker.metrics().counter("broker.dead_lettered_total").get(), dead);
+    assert_eq!(broker.metrics().counter("broker.dlx_republished_total").get(), dead);
+    assert_eq!(broker.metrics().counter("broker.expired_total").get(), 0);
+    // Workers are still connected and idle; tear them down and verify the
+    // delivery index is empty (no tag leaks across the whole churn).
+    for w in workers {
+        broker.disconnect(w.conn);
+    }
+    assert_eq!(broker.delivery_index_len(), 0, "delivery index must not leak tags");
+}
