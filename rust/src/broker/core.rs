@@ -39,7 +39,7 @@ use crate::broker::persistence::{NoopPersister, Persister, RecoveredState};
 use crate::broker::protocol::{ClientRequest, EncodedProps, MessageProps, QueueOptions, ServerMsg};
 use crate::broker::queue::{Consumer, DeadReason, NackOutcome, PendingDead, Queue, QueuedMessage};
 use crate::broker::router::Router;
-use crate::broker::shard::ShardSet;
+use crate::broker::shard::{boot_tag_origin, ShardSet};
 use crate::error::{Error, Result};
 use crate::metrics::{Counter, Registry};
 use crate::wire::{Bytes, Value};
@@ -188,7 +188,10 @@ impl BrokerHandle {
             metrics.counter("broker.route_cache_hits_total"),
             metrics.counter("broker.route_cache_misses_total"),
         );
-        let shards = ShardSet::new(config.shards);
+        // Boot-origin tag counters: tags stay monotonic across broker
+        // restarts, so reconnecting clients can safely drop acks for tags
+        // issued by a previous boot (they can never name a live message).
+        let shards = ShardSet::with_tag_origin(config.shards, boot_tag_origin());
         let mut next_msg = 1u64;
         for msgs in recovered.messages.values() {
             for m in msgs {

@@ -129,7 +129,7 @@ impl TagAlloc<'_> {
 }
 
 impl Shard {
-    fn new(index: usize, stride: usize) -> Self {
+    fn new(index: usize, stride: usize, tag_origin: u64) -> Self {
         Shard {
             index,
             state: Mutex::new(ShardState {
@@ -138,7 +138,7 @@ impl Shard {
                 conns: HashMap::new(),
                 index: index as u64,
                 stride: stride as u64,
-                next_tag: 0,
+                next_tag: tag_origin,
             }),
         }
     }
@@ -152,6 +152,20 @@ impl Shard {
     }
 }
 
+/// Per-boot origin for delivery-tag counters: seconds since the epoch,
+/// shifted left 20 bits (≈1M tags of headroom per shard per second of
+/// wall-clock separation between boots). A restarted broker therefore
+/// issues tags strictly greater than anything a previous boot handed
+/// out, so a client holding a tag across the restart can never have its
+/// stale ack collide with a freshly issued tag.
+pub fn boot_tag_origin() -> u64 {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(1);
+    secs << 20
+}
+
 /// The fixed set of shards. Shard count is chosen at broker construction
 /// and never changes (queue → shard mapping must stay stable).
 pub struct ShardSet {
@@ -159,9 +173,20 @@ pub struct ShardSet {
 }
 
 impl ShardSet {
+    /// Tag counters start at 0 — deterministic, for tests and benches.
     pub fn new(n: usize) -> Self {
+        Self::with_tag_origin(n, 0)
+    }
+
+    /// Tag counters start at `origin`. Real brokers pass
+    /// [`boot_tag_origin`] so delivery tags are monotonic *across
+    /// restarts*: a tag issued by a previous boot is never reissued by
+    /// this one, which is what lets a reconnecting client's stale-tag
+    /// guard (`transport/conn.rs`) distinguish pre-outage tags from live
+    /// ones by value.
+    pub fn with_tag_origin(n: usize, origin: u64) -> Self {
         let n = n.max(1);
-        ShardSet { shards: (0..n).map(|i| Shard::new(i, n)).collect() }
+        ShardSet { shards: (0..n).map(|i| Shard::new(i, n, origin)).collect() }
     }
 
     pub fn len(&self) -> usize {
@@ -239,5 +264,31 @@ mod tests {
     #[test]
     fn zero_shards_clamped_to_one() {
         assert_eq!(ShardSet::new(0).len(), 1);
+    }
+
+    #[test]
+    fn tag_origins_keep_boots_disjoint() {
+        // A "restarted broker" (later origin) must never reissue a tag
+        // value an earlier boot handed out — the client-side stale-tag
+        // guard distinguishes pre-outage tags by value.
+        let boot1 = ShardSet::with_tag_origin(4, 100);
+        let boot2 = ShardSet::with_tag_origin(4, 200);
+        let mut first = std::collections::HashSet::new();
+        for shard in boot1.iter() {
+            let mut st = shard.lock();
+            for _ in 0..100 {
+                first.insert(st.alloc_tag());
+            }
+        }
+        for shard in boot2.iter() {
+            let mut st = shard.lock();
+            for _ in 0..100 {
+                let tag = st.alloc_tag();
+                assert!(!first.contains(&tag), "boot 2 reissued tag {tag}");
+                assert_eq!(boot2.shard_for_tag(tag).index(), shard.index());
+            }
+        }
+        // The real origin is wall-clock-derived and strictly positive.
+        assert!(boot_tag_origin() > 0);
     }
 }

@@ -18,7 +18,7 @@ const VALUED: &[&str] = &[
     "config", "addr", "workers", "heartbeat-ms", "queue", "process", "inputs", "pid", "reason",
     "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
     "delivery-batch", "route-cache", "max-delivery", "dead-letter-exchange", "max-length",
-    "overflow",
+    "overflow", "reconnect-max-retries", "reconnect-backoff-ms",
 ];
 
 impl Args {
@@ -113,6 +113,13 @@ mod tests {
         assert_eq!(a.opt("dead-letter-exchange"), Some("kiwi.dlx"));
         assert_eq!(a.opt_parse::<usize>("max-length").unwrap(), Some(500));
         assert_eq!(a.opt("overflow"), Some("reject-new"));
+    }
+
+    #[test]
+    fn reconnect_options_take_values() {
+        let a = parse("kiwi worker --reconnect-max-retries 12 --reconnect-backoff-ms 100");
+        assert_eq!(a.opt_parse::<u32>("reconnect-max-retries").unwrap(), Some(12));
+        assert_eq!(a.opt_parse::<u64>("reconnect-backoff-ms").unwrap(), Some(100));
     }
 
     #[test]

@@ -46,6 +46,10 @@ COMMON OPTIONS
   --artifacts DIR     AOT artifacts (default: artifacts)
   --checkpoints DIR   checkpoint store (default: .kiwi/checkpoints)
 
+CONNECTION RESILIENCE (clients; outages are repaired transparently)
+  --reconnect-max-retries N  give up after N failed re-dials (0 = no reconnect)
+  --reconnect-backoff-ms N   base re-dial backoff (exponential, capped, jittered)
+
 TASK LIFECYCLE (worker / submit; declared on the task queue)
   --max-delivery N           dead-letter a task after N attempts (0 = unlimited)
   --dead-letter-exchange EX  route dead tasks to EX (catch queue: <queue>.dlq)
@@ -109,13 +113,21 @@ fn load_config(args: &Args) -> Result<Config> {
         config.overflow = crate::broker::protocol::OverflowPolicy::parse(p)
             .map_err(|_| Error::Config(format!("--overflow: unknown policy '{p}'")))?;
     }
+    if let Some(n) = args.opt_parse::<u32>("reconnect-max-retries")? {
+        config.reconnect_max_retries = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("reconnect-backoff-ms")? {
+        config.reconnect_backoff_ms = n;
+    }
     Ok(config)
 }
 
 fn connect_communicator(config: &Config) -> Result<Arc<dyn Communicator>> {
-    let link = connect_tcp(&config.broker_addr as &str)?;
-    let comm = RmqCommunicator::connect(
-        Arc::new(link),
+    // Factory-connected: workers and submitters ride out broker restarts
+    // (re-dial with backoff + topology revival) instead of dying with the
+    // first link error.
+    let comm = RmqCommunicator::connect_tcp(
+        config.broker_addr.clone(),
         RmqConfig {
             heartbeat_ms: config.heartbeat_ms,
             request_timeout: config.request_timeout,
@@ -123,6 +135,8 @@ fn connect_communicator(config: &Config) -> Result<Arc<dyn Communicator>> {
             task_dead_letter_exchange: config.dead_letter_exchange.clone(),
             task_max_length: config.max_length,
             task_overflow: config.overflow,
+            reconnect_max_retries: config.reconnect_max_retries,
+            reconnect_backoff_ms: config.reconnect_backoff_ms,
             ..Default::default()
         },
     )?;

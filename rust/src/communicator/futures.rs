@@ -4,15 +4,24 @@
 //! blocking semantics without touching coroutines; this is the Rust
 //! equivalent: a `Condvar`-backed future that any thread can wait on, with
 //! optional done-callbacks that run on the completing thread.
+//!
+//! Done-callbacks run with *no lock held*: the state transitions to `Done`
+//! first, then callbacks observe the result through a shared handle — so a
+//! callback touching the same future (`is_done`, `on_done`, a clone's
+//! `wait` from another thread) works instead of deadlocking on the
+//! non-reentrant state mutex.
 
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 
 enum State<T> {
     Pending(Vec<Box<dyn FnOnce(&Result<T>) + Send>>),
-    Done(Result<T>),
+    /// Result decided. The completing thread holds its own `Arc` clone
+    /// while callbacks run, so `wait` may briefly contend for sole
+    /// ownership right after completion.
+    Done(Arc<Result<T>>),
     /// Result already consumed by `wait`.
     Taken,
 }
@@ -53,23 +62,28 @@ impl<T> Promise<T> {
     }
 
     fn complete(&self, result: Result<T>) -> bool {
-        let mut state = self.inner.state.lock().unwrap();
-        match &mut *state {
-            State::Pending(callbacks) => {
-                let callbacks = std::mem::take(callbacks);
-                *state = State::Done(result);
-                // Run callbacks with the lock *held state read-only*: we
-                // re-borrow the stored result after the transition.
-                if let State::Done(res) = &*state {
-                    for cb in callbacks {
-                        cb(res);
-                    }
+        let res = Arc::new(result);
+        let callbacks = {
+            let mut state = self.inner.state.lock().unwrap();
+            match &mut *state {
+                State::Pending(callbacks) => {
+                    let callbacks = std::mem::take(callbacks);
+                    *state = State::Done(Arc::clone(&res));
+                    self.inner.cond.notify_all();
+                    callbacks
                 }
-                self.inner.cond.notify_all();
-                true
+                _ => return false,
             }
-            _ => false,
+        };
+        // Lock released: a callback that re-enters this future sees `Done`.
+        for cb in callbacks {
+            cb(&res);
         }
+        // Release our borrow of the result and wake any `wait` that raced
+        // the callbacks (it needs sole ownership to move the result out).
+        drop(res);
+        self.inner.cond.notify_all();
+        true
     }
 }
 
@@ -80,19 +94,38 @@ impl<T> KiwiFuture<T> {
     }
 
     /// Block until completed or `timeout` elapses; consumes the result.
+    ///
+    /// Note: calling `wait` from *inside* a done-callback of this same
+    /// future times out instead of returning — the callback itself borrows
+    /// the result it would be waiting to own.
     pub fn wait(self, timeout: Duration) -> Result<T> {
+        let deadline = Instant::now() + timeout;
         let mut state = self.inner.state.lock().unwrap();
-        let deadline = std::time::Instant::now() + timeout;
         loop {
             match &mut *state {
                 State::Done(_) => {
                     let done = std::mem::replace(&mut *state, State::Taken);
-                    let State::Done(res) = done else { unreachable!() };
-                    return res;
+                    let State::Done(arc) = done else { unreachable!() };
+                    match Arc::try_unwrap(arc) {
+                        Ok(res) => return res,
+                        Err(arc) => {
+                            // Done-callbacks are still running with a
+                            // borrow of the result; put it back and wait
+                            // for the completing thread to finish.
+                            *state = State::Done(arc);
+                            let now = Instant::now();
+                            if now >= deadline {
+                                return Err(Error::Timeout("future wait".into()));
+                            }
+                            let wait = (deadline - now).min(Duration::from_millis(5));
+                            let (guard, _) = self.inner.cond.wait_timeout(state, wait).unwrap();
+                            state = guard;
+                        }
+                    }
                 }
                 State::Taken => return Err(Error::Closed("future already consumed".into())),
                 State::Pending(_) => {
-                    let now = std::time::Instant::now();
+                    let now = Instant::now();
                     if now >= deadline {
                         return Err(Error::Timeout("future wait".into()));
                     }
@@ -105,13 +138,23 @@ impl<T> KiwiFuture<T> {
     }
 
     /// Register a callback to run when the future completes (immediately if
-    /// it already has). Runs on the completing thread — keep it short.
+    /// it already has). Runs on the completing thread — keep it short. The
+    /// callback runs without the state lock, so it may freely touch this
+    /// future again.
     pub fn on_done(&self, cb: impl FnOnce(&Result<T>) + Send + 'static) {
-        let mut state = self.inner.state.lock().unwrap();
-        match &mut *state {
-            State::Pending(callbacks) => callbacks.push(Box::new(cb)),
-            State::Done(res) => cb(res),
-            State::Taken => {}
+        let run_now = {
+            let mut state = self.inner.state.lock().unwrap();
+            match &mut *state {
+                State::Pending(callbacks) => {
+                    callbacks.push(Box::new(cb));
+                    return;
+                }
+                State::Done(res) => Some(Arc::clone(res)),
+                State::Taken => None,
+            }
+        };
+        if let Some(res) = run_now {
+            cb(&res);
         }
     }
 }
@@ -194,5 +237,55 @@ mod tests {
             tx.send(r.as_ref().copied().unwrap()).unwrap();
         });
         assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 3);
+    }
+
+    #[test]
+    fn reentrant_callback_does_not_deadlock() {
+        // Regression: callbacks used to run while `complete` held the
+        // state mutex, so a callback touching the same future deadlocked.
+        let (p, f) = promise();
+        let f2 = f.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        f.on_done(move |r| {
+            assert!(f2.is_done(), "state must be Done before callbacks run");
+            let value = *r.as_ref().unwrap();
+            let tx2 = tx.clone();
+            // Late registration runs immediately — also reentrant.
+            f2.on_done(move |r2| {
+                tx2.send(*r2.as_ref().unwrap() + 100).unwrap();
+            });
+            tx.send(value).unwrap();
+        });
+        let completer = std::thread::spawn(move || p.set_result(5));
+        let mut got = vec![
+            rx.recv_timeout(Duration::from_secs(2)).expect("reentrant callback deadlocked"),
+            rx.recv_timeout(Duration::from_secs(2)).expect("nested on_done deadlocked"),
+        ];
+        got.sort_unstable();
+        assert_eq!(got, vec![5, 105]);
+        completer.join().unwrap();
+    }
+
+    #[test]
+    fn clone_can_wait_while_callbacks_run() {
+        let (p, f) = promise();
+        let waiter_f = f.clone();
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let gate2 = Arc::clone(&gate);
+        f.on_done(move |_| {
+            started_tx.send(()).unwrap();
+            while !gate2.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let waiter = std::thread::spawn(move || waiter_f.wait(Duration::from_secs(5)));
+        let completer = std::thread::spawn(move || p.set_result(9));
+        // Callback is running (completion decided); the waiter blocks
+        // until the callback releases its borrow, then gets the value.
+        started_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        gate.store(true, std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(waiter.join().unwrap().unwrap(), 9);
+        completer.join().unwrap();
     }
 }

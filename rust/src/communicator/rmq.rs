@@ -34,7 +34,7 @@ use crate::communicator::{
     unique_id, BroadcastHandler, BroadcastMessage, Communicator, RpcHandler, TaskHandler,
 };
 use crate::error::{Error, Result};
-use crate::transport::{Connection, ConnectionConfig, Link};
+use crate::transport::{tcp_factory, Connection, ConnectionConfig, Link, LinkFactory};
 use crate::wire::{Bytes, Value};
 
 /// Exchange names and client tuning.
@@ -72,6 +72,13 @@ pub struct RmqConfig {
     /// or refuse the incoming one (`reject-new` — a confirming
     /// `task_send` then surfaces the refusal to the submitter).
     pub task_overflow: OverflowPolicy,
+    /// Consecutive failed re-dials before a factory-connected communicator
+    /// gives up on an outage (0 disables reconnection). Ignored for
+    /// communicators connected over a bare link.
+    pub reconnect_max_retries: u32,
+    /// Base reconnect backoff (capped exponential + jitter; see
+    /// [`ConnectionConfig::reconnect_backoff_ms`]).
+    pub reconnect_backoff_ms: u64,
 }
 
 impl Default for RmqConfig {
@@ -88,6 +95,8 @@ impl Default for RmqConfig {
             task_dead_letter_exchange: None,
             task_max_length: None,
             task_overflow: OverflowPolicy::DropHead,
+            reconnect_max_retries: 8,
+            reconnect_backoff_ms: 250,
         }
     }
 }
@@ -124,16 +133,42 @@ pub struct RmqCommunicator {
 }
 
 impl RmqCommunicator {
-    /// Connect over any [`Link`] (TCP or in-process).
+    /// Connect over an existing [`Link`] (TCP or in-process). A link
+    /// failure permanently closes this communicator; use
+    /// [`RmqCommunicator::connect_with_factory`] (or
+    /// [`RmqCommunicator::connect_tcp`]) for a communicator that survives
+    /// broker outages.
     pub fn connect(link: Arc<dyn Link>, config: RmqConfig) -> Result<Self> {
-        let conn = Arc::new(Connection::open(
-            link,
-            ConnectionConfig {
-                client_id: config.client_id.clone(),
-                heartbeat_ms: config.heartbeat_ms,
-                request_timeout: config.request_timeout,
-            },
-        )?);
+        let conn = Arc::new(Connection::open(link, Self::conn_config(&config))?);
+        Self::bootstrap(conn, config)
+    }
+
+    /// Connect through a re-dialing [`LinkFactory`]: on link death the
+    /// underlying connection reconnects with backoff and replays its
+    /// topology journal, so task subscriptions, RPC reply queues and
+    /// broadcast bindings are all re-established with no user code — a
+    /// daemon keeps consuming across a full broker restart.
+    pub fn connect_with_factory(factory: LinkFactory, config: RmqConfig) -> Result<Self> {
+        let conn = Arc::new(Connection::open_with_factory(factory, Self::conn_config(&config))?);
+        Self::bootstrap(conn, config)
+    }
+
+    /// Convenience: a reconnecting communicator dialing `addr` over TCP.
+    pub fn connect_tcp(addr: impl Into<String>, config: RmqConfig) -> Result<Self> {
+        Self::connect_with_factory(tcp_factory(addr), config)
+    }
+
+    fn conn_config(config: &RmqConfig) -> ConnectionConfig {
+        ConnectionConfig {
+            client_id: config.client_id.clone(),
+            heartbeat_ms: config.heartbeat_ms,
+            request_timeout: config.request_timeout,
+            reconnect_max_retries: config.reconnect_max_retries,
+            reconnect_backoff_ms: config.reconnect_backoff_ms,
+        }
+    }
+
+    fn bootstrap(conn: Arc<Connection>, config: RmqConfig) -> Result<Self> {
         // Topology: the two shared exchanges.
         conn.request(&ClientRequest::ExchangeDeclare {
             exchange: config.rpc_exchange.clone(),
@@ -189,6 +224,12 @@ impl RmqCommunicator {
     /// The underlying connection (used by the daemon for raw operations).
     pub fn connection(&self) -> &Arc<Connection> {
         &self.conn
+    }
+
+    /// Client-side metrics (`client.reconnects_total`,
+    /// `client.replayed_consumers_total`).
+    pub fn metrics(&self) -> &crate::metrics::Registry {
+        self.conn.metrics()
     }
 
     /// Declare a task queue once per communicator, wiring up the

@@ -51,6 +51,11 @@ pub struct Config {
     /// Overflow policy once `max_length` is reached: `drop-head` or
     /// `reject-new`.
     pub overflow: OverflowPolicy,
+    /// Consecutive failed re-dials before a client gives up on a broker
+    /// outage and closes (0 disables automatic reconnection).
+    pub reconnect_max_retries: u32,
+    /// Base client reconnect backoff in ms (capped exponential + jitter).
+    pub reconnect_backoff_ms: u64,
 }
 
 impl Default for Config {
@@ -72,6 +77,8 @@ impl Default for Config {
             dead_letter_exchange: None,
             max_length: None,
             overflow: OverflowPolicy::DropHead,
+            reconnect_max_retries: 8,
+            reconnect_backoff_ms: 250,
         }
     }
 }
@@ -154,6 +161,12 @@ impl Config {
             c.overflow = OverflowPolicy::parse(x.as_str()?)
                 .map_err(|_| Error::Config(format!("bad overflow policy: {x}")))?;
         }
+        if let Some(x) = v.get_opt("reconnect_max_retries") {
+            c.reconnect_max_retries = x.as_u64()? as u32;
+        }
+        if let Some(x) = v.get_opt("reconnect_backoff_ms") {
+            c.reconnect_backoff_ms = x.as_u64()?;
+        }
         Ok(c)
     }
 
@@ -182,6 +195,8 @@ impl Config {
             ("dead_letter_exchange", self.dead_letter_exchange.clone().into()),
             ("max_length", self.max_length.map(|n| n as u64).into()),
             ("overflow", Value::str(self.overflow.as_str())),
+            ("reconnect_max_retries", Value::from(u64::from(self.reconnect_max_retries))),
+            ("reconnect_backoff_ms", Value::from(self.reconnect_backoff_ms)),
         ])
     }
 
@@ -225,7 +240,8 @@ impl Config {
     /// `KIWI_DELIVERY_BATCH`, `KIWI_ROUTE_CACHE`, `KIWI_MAX_DELIVERY`
     /// (0 = unlimited), `KIWI_DEAD_LETTER_EXCHANGE` (empty = off),
     /// `KIWI_MAX_LENGTH` (0 = unbounded), `KIWI_OVERFLOW`
-    /// (`drop-head`/`reject-new`) override the file.
+    /// (`drop-head`/`reject-new`), `KIWI_RECONNECT_MAX_RETRIES` (0 = no
+    /// reconnection) and `KIWI_RECONNECT_BACKOFF_MS` override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -277,6 +293,16 @@ impl Config {
         if let Ok(v) = std::env::var("KIWI_OVERFLOW") {
             if let Ok(p) = OverflowPolicy::parse(&v) {
                 self.overflow = p;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_RECONNECT_MAX_RETRIES") {
+            if let Ok(n) = v.parse() {
+                self.reconnect_max_retries = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_RECONNECT_BACKOFF_MS") {
+            if let Ok(n) = v.parse() {
+                self.reconnect_backoff_ms = n;
             }
         }
     }
@@ -383,6 +409,24 @@ mod tests {
         assert_eq!(c.max_delivery, None);
         assert_eq!(c.max_length, None);
         assert_eq!(c.dead_letter_exchange, None);
+    }
+
+    #[test]
+    fn reconnect_knobs_parse_and_roundtrip() {
+        let v = json::from_str(
+            r#"{"reconnect_max_retries": 3, "reconnect_backoff_ms": 50}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.reconnect_max_retries, 3);
+        assert_eq!(c.reconnect_backoff_ms, 50);
+        let back = Config::from_value(&json::from_str(&json::to_string(&c.to_value())).unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+        // 0 retries = reconnection off; defaults are on.
+        let v = json::from_str(r#"{"reconnect_max_retries": 0}"#).unwrap();
+        assert_eq!(Config::from_value(&v).unwrap().reconnect_max_retries, 0);
+        assert!(Config::default().reconnect_max_retries > 0);
     }
 
     #[test]

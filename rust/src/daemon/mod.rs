@@ -2,6 +2,12 @@
 //! communicator, runs each process on a worker-pool thread, and survives
 //! both graceful and abrupt shutdown — in the abrupt case the broker
 //! requeues its unacked tasks to the surviving workers (§I.A).
+//!
+//! A daemon whose communicator was connected through a link factory
+//! (`RmqCommunicator::connect_tcp`, which `kiwi worker` uses) also
+//! survives *broker* outages: the connection re-dials with backoff and
+//! replays its topology journal, so the task subscription resumes after a
+//! broker restart with no daemon-side code.
 
 pub mod pool;
 pub mod worker;

@@ -1,18 +1,29 @@
 //! Client connection: request/reply correlation, consumer delivery
-//! dispatch, and heartbeats — all driven by a hidden communication thread,
-//! kiwiPy's signature usability feature ("a separate communication thread
-//! that the user never sees", maintaining heartbeats "whilst the user code
-//! can be doing other things").
+//! dispatch, heartbeats and transparent reconnection — all driven by a
+//! hidden communication thread, kiwiPy's signature usability feature ("a
+//! separate communication thread that the user never sees", maintaining
+//! heartbeats "whilst the user code can be doing other things").
+//!
+//! Opened with a [`LinkFactory`], the connection *survives broker
+//! outages*: link death (recv/send errors, two missed heartbeats) parks
+//! in-flight requests, re-dials with capped exponential backoff + jitter,
+//! replays the recorded topology (exchanges, queues, bindings) and
+//! re-issues every consumer, so delivery handlers keep firing with no user
+//! code — the paper's core robustness property. Unacked deliveries from
+//! the dead link are redelivered by the broker's existing requeue path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::thread::{JoinHandle, ThreadId};
 use std::time::{Duration, Instant};
 
 use crate::broker::protocol::{ClientRequest, Delivery, ServerMsg};
 use crate::error::{Error, Result};
+use crate::metrics::{Counter, Registry};
+use crate::proputil::Rng;
+use crate::transport::reconnect::{backoff_delay, LinkFactory, LinkSlot, TopologyJournal};
 use crate::transport::Link;
 use crate::wire::{Frame, FrameType};
 
@@ -28,8 +39,17 @@ pub struct ConnectionConfig {
     /// evicts us (requeueing our unacked messages); symmetrically we treat
     /// a silent broker as dead after two intervals.
     pub heartbeat_ms: u64,
-    /// Default timeout for request/reply calls.
+    /// Default timeout for request/reply calls. Also bounds how long a
+    /// request issued during an outage parks awaiting revival.
     pub request_timeout: Duration,
+    /// Consecutive failed re-dial attempts before the connection gives up
+    /// and closes for good. 0 disables reconnection even when a factory is
+    /// available. Only meaningful for factory-opened connections.
+    pub reconnect_max_retries: u32,
+    /// Base reconnect backoff: attempt n sleeps `min(base·2ⁿ⁻¹, base·32)`
+    /// plus uniform jitter in `[0, delay/2)`; the first re-dial is
+    /// immediate.
+    pub reconnect_backoff_ms: u64,
 }
 
 impl Default for ConnectionConfig {
@@ -38,54 +58,134 @@ impl Default for ConnectionConfig {
             client_id: format!("kiwi-{}", std::process::id()),
             heartbeat_ms: 0,
             request_timeout: Duration::from_secs(10),
+            reconnect_max_retries: 8,
+            reconnect_backoff_ms: 250,
         }
     }
 }
 
+/// The ack-coalescing buffer, scoped to the thread that opened the window
+/// (the communication thread dispatching a delivery batch). Acks from any
+/// *other* thread bypass the window and go out immediately — a user thread
+/// acking an old delivery must not have its ack parked behind unrelated
+/// handlers.
+struct AckBatch {
+    owner: ThreadId,
+    tags: Vec<u64>,
+}
+
 struct Shared {
-    link: Arc<dyn Link>,
+    slot: LinkSlot,
+    factory: Option<LinkFactory>,
+    config: ConnectionConfig,
     next_req: AtomicU64,
     pending: Mutex<HashMap<u64, Sender<ServerMsg>>>,
     handlers: Mutex<HashMap<String, DeliveryHandler>>,
+    /// Topology to replay on reconnect (recorded from acknowledged
+    /// requests).
+    journal: Mutex<TopologyJournal>,
+    /// Permanently closed: retries exhausted or `close()` called.
     closed: AtomicBool,
     /// Instant of the last frame seen from the broker (liveness).
     last_server_frame: Mutex<Instant>,
     /// Ack pipeline: `Some` while a delivery batch is being dispatched on
-    /// the communication thread; acks issued in that window buffer here
-    /// and go out as one `AckMulti` frame at the end of the batch.
-    ack_buffer: Mutex<Option<Vec<u64>>>,
+    /// the communication thread; acks issued *by that thread* in that
+    /// window buffer here and go out as one `AckMulti` frame at the end of
+    /// the batch.
+    ack_buffer: Mutex<Option<AckBatch>>,
+    /// Delivery tags handed to handlers on the *current* link and not yet
+    /// resolved. Maintained only on reconnecting connections: an
+    /// ack/nack/reject for a tag outside this set is *stale* — delivered
+    /// on a link that has since died. The broker already requeued it, so
+    /// the frame must not be sent (and could not safely be matched by
+    /// value anyway; the broker's boot-origin tag counters guarantee a
+    /// restarted broker never reissues an old boot's tag values, see
+    /// `broker::shard::boot_tag_origin`).
+    live_tags: Option<Mutex<HashSet<u64>>>,
+    /// When the current link was installed (flap detection: a link that
+    /// dies right after install skips the free immediate re-dial).
+    last_install: Mutex<Instant>,
+    metrics: Registry,
+    reconnects: Arc<Counter>,
+    replayed_consumers: Arc<Counter>,
 }
 
 impl Shared {
+    fn reconnect_enabled(&self) -> bool {
+        self.factory.is_some() && self.config.reconnect_max_retries > 0
+    }
+
     fn mark_closed(&self) {
         if !self.closed.swap(true, Ordering::SeqCst) {
-            // Fail every waiter.
-            let mut pending = self.pending.lock().unwrap();
-            pending.clear(); // dropping senders wakes receivers with Closed
+            self.slot.close();
+            self.fail_pending();
+        }
+    }
+
+    /// Fail every in-flight request waiter: dropping the senders wakes the
+    /// receivers, which either retry (reconnecting connection, deadline
+    /// permitting) or surface `Closed`.
+    fn fail_pending(&self) {
+        self.pending.lock().unwrap().clear();
+    }
+
+    /// React to a send failure on the link stamped `epoch`: flag the
+    /// outage for the communication thread to repair, or — without
+    /// reconnection — poison the connection as before.
+    fn link_failed(&self, epoch: u64) {
+        if self.reconnect_enabled() {
+            self.slot.report_failure(epoch);
+        } else {
+            self.mark_closed();
         }
     }
 
     /// Fire-and-forget send: no reply waited for (the broker's Ok is
-    /// dropped by the reader when no waiter is found).
+    /// dropped by the reader when no waiter is found). Fails fast during
+    /// an outage — callers on the ack path must not block.
     fn send_noreply(&self, req: &ClientRequest) -> Result<()> {
         if self.closed.load(Ordering::Relaxed) {
             return Err(Error::Closed("connection closed".into()));
         }
+        let (link, epoch) = self.slot.current()?;
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
-        self.link.send(&req.to_frame(req_id)).map_err(|e| {
-            self.mark_closed();
+        link.send(&req.to_frame(req_id)).map_err(|e| {
+            self.link_failed(epoch);
             e
         })
     }
 
+    /// Record tags about to be dispatched on the current link.
+    fn track_deliveries(&self, tags: impl Iterator<Item = u64>) {
+        if let Some(live) = &self.live_tags {
+            live.lock().unwrap().extend(tags);
+        }
+    }
+
+    /// Resolve a tag (ack/nack/reject path). False = the tag is stale
+    /// (pre-outage, or already resolved) and must not go on the wire.
+    fn resolve_tag(&self, tag: u64) -> bool {
+        match &self.live_tags {
+            Some(live) => live.lock().unwrap().remove(&tag),
+            None => true,
+        }
+    }
+
+    /// Every outstanding tag died with its link.
+    fn clear_live_tags(&self) {
+        if let Some(live) = &self.live_tags {
+            live.lock().unwrap().clear();
+        }
+    }
+
     /// Close the window and flush everything buffered as a single frame.
     fn flush_ack_window(&self) {
-        let tags = self.ack_buffer.lock().unwrap().take();
-        let Some(tags) = tags else { return };
-        let req = match tags.len() {
+        let batch = self.ack_buffer.lock().unwrap().take();
+        let Some(batch) = batch else { return };
+        let req = match batch.tags.len() {
             0 => return,
-            1 => ClientRequest::Ack { delivery_tag: tags[0] },
-            _ => ClientRequest::AckMulti { delivery_tags: tags },
+            1 => ClientRequest::Ack { delivery_tag: batch.tags[0] },
+            _ => ClientRequest::AckMulti { delivery_tags: batch.tags },
         };
         self.send_noreply(&req).ok();
     }
@@ -98,9 +198,11 @@ struct AckWindow {
     shared: Arc<Shared>,
 }
 
-/// Open the ack-coalescing window (communication thread only).
+/// Open the ack-coalescing window (communication thread only); only acks
+/// issued by the opening thread coalesce into it.
 fn open_ack_window(shared: &Arc<Shared>) -> AckWindow {
-    *shared.ack_buffer.lock().unwrap() = Some(Vec::new());
+    *shared.ack_buffer.lock().unwrap() =
+        Some(AckBatch { owner: std::thread::current().id(), tags: Vec::new() });
     AckWindow { shared: Arc::clone(shared) }
 }
 
@@ -108,6 +210,19 @@ impl Drop for AckWindow {
     fn drop(&mut self) {
         self.shared.flush_ack_window();
     }
+}
+
+/// Does this request mutate broker topology (and so belong in the
+/// reconnect journal once acknowledged)?
+fn is_topology(req: &ClientRequest) -> bool {
+    matches!(
+        req,
+        ClientRequest::ExchangeDeclare { .. }
+            | ClientRequest::QueueDeclare { .. }
+            | ClientRequest::Bind { .. }
+            | ClientRequest::Unbind { .. }
+            | ClientRequest::QueueDelete { .. }
+    )
 }
 
 /// A client connection to a broker (TCP or in-process — any [`Link`]).
@@ -119,25 +234,52 @@ pub struct Connection {
 }
 
 impl Connection {
-    /// Open a connection over `link`: spawn the communication thread, send
-    /// `Hello`, wait for the broker's ack.
+    /// Open a connection over an existing `link`. Without a factory there
+    /// is nothing to re-dial: any link failure permanently closes the
+    /// connection (use [`Connection::open_with_factory`] for resilience).
     pub fn open(link: Arc<dyn Link>, config: ConnectionConfig) -> Result<Self> {
+        Self::open_inner(link, None, config)
+    }
+
+    /// Open a *reconnecting* connection: `factory` dials the broker, and
+    /// re-dials it whenever the link dies, replaying topology and
+    /// consumers so the outage is invisible to user code (bounded by
+    /// `reconnect_max_retries`).
+    pub fn open_with_factory(factory: LinkFactory, config: ConnectionConfig) -> Result<Self> {
+        let link = factory()?;
+        Self::open_inner(link, Some(factory), config)
+    }
+
+    fn open_inner(
+        link: Arc<dyn Link>,
+        factory: Option<LinkFactory>,
+        config: ConnectionConfig,
+    ) -> Result<Self> {
+        let metrics = Registry::new();
+        let reconnectable = factory.is_some() && config.reconnect_max_retries > 0;
         let shared = Arc::new(Shared {
-            link: Arc::clone(&link),
+            slot: LinkSlot::new(link),
+            factory,
+            config: config.clone(),
             next_req: AtomicU64::new(1),
             pending: Mutex::new(HashMap::new()),
             handlers: Mutex::new(HashMap::new()),
+            journal: Mutex::new(TopologyJournal::default()),
             closed: AtomicBool::new(false),
             last_server_frame: Mutex::new(Instant::now()),
             ack_buffer: Mutex::new(None),
+            live_tags: reconnectable.then(|| Mutex::new(HashSet::new())),
+            last_install: Mutex::new(Instant::now()),
+            reconnects: metrics.counter("client.reconnects_total"),
+            replayed_consumers: metrics.counter("client.replayed_consumers_total"),
+            metrics,
         });
 
         let reader = {
             let shared = Arc::clone(&shared);
-            let hb = config.heartbeat_ms;
             std::thread::Builder::new()
                 .name("kiwi-comm".into())
-                .spawn(move || reader_loop(shared, hb))
+                .spawn(move || reader_loop(shared))
                 .expect("spawn communication thread")
         };
 
@@ -150,9 +292,12 @@ impl Connection {
                     .spawn(move || {
                         while !shared.closed.load(Ordering::Relaxed) {
                             std::thread::sleep(interval);
-                            if shared.link.send(&Frame::heartbeat()).is_err() {
-                                shared.mark_closed();
-                                break;
+                            // During an outage the slot is Down: skip the
+                            // beat, the comm thread is re-dialing.
+                            if let Ok((link, epoch)) = shared.slot.current() {
+                                if link.send(&Frame::heartbeat()).is_err() {
+                                    shared.link_failed(epoch);
+                                }
                             }
                         }
                     })
@@ -175,38 +320,73 @@ impl Connection {
         Ok(conn)
     }
 
+    /// Client-side metrics: `client.reconnects_total`,
+    /// `client.replayed_consumers_total`.
+    pub fn metrics(&self) -> &Registry {
+        &self.shared.metrics
+    }
+
     /// Send a request and wait for the broker's reply.
     pub fn request(&self, req: &ClientRequest) -> Result<crate::wire::Value> {
         self.request_timeout(req, self.config.request_timeout)
     }
 
-    /// Send a request and wait up to `timeout`.
+    /// Send a request and wait up to `timeout`. On a reconnecting
+    /// connection a request that hits an outage *parks* and is re-sent
+    /// after revival (still bounded by `timeout`) instead of failing with
+    /// `Closed`; a request whose link dies mid-flight is retried the same
+    /// way, so delivery is at-least-once across an outage.
     pub fn request_timeout(
         &self,
         req: &ClientRequest,
         timeout: Duration,
     ) -> Result<crate::wire::Value> {
-        if self.shared.closed.load(Ordering::Relaxed) {
-            return Err(Error::Closed("connection closed".into()));
-        }
-        let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
-        self.shared.pending.lock().unwrap().insert(req_id, tx);
-        if let Err(e) = self.shared.link.send(&req.to_frame(req_id)) {
-            self.shared.pending.lock().unwrap().remove(&req_id);
-            self.shared.mark_closed();
-            return Err(e);
-        }
-        match rx.recv_timeout(timeout) {
-            Ok(ServerMsg::Ok { reply, .. }) => Ok(reply),
-            Ok(ServerMsg::Err { code, message, .. }) => Err(decode_remote_error(&code, message)),
-            Ok(other) => Err(Error::Wire(format!("unexpected reply {other:?}"))),
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                self.shared.pending.lock().unwrap().remove(&req_id);
-                Err(Error::Timeout(format!("request {req_id}")))
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.shared.closed.load(Ordering::Relaxed) {
+                return Err(Error::Closed("connection closed".into()));
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                Err(Error::Closed("connection lost".into()))
+            let (link, epoch) = if self.shared.reconnect_enabled() {
+                self.shared.slot.await_up(deadline)?
+            } else {
+                self.shared.slot.current()?
+            };
+            let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
+            self.shared.pending.lock().unwrap().insert(req_id, tx);
+            if let Err(e) = self.shared.link_send(&link, epoch, &req.to_frame(req_id), req_id) {
+                if self.shared.reconnect_enabled() && Instant::now() < deadline {
+                    continue; // park on the next await_up
+                }
+                return Err(e);
+            }
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(wait) {
+                Ok(ServerMsg::Ok { reply, .. }) => {
+                    if is_topology(req) {
+                        self.shared.journal.lock().unwrap().observe(req);
+                    }
+                    return Ok(reply);
+                }
+                Ok(ServerMsg::Err { code, message, .. }) => {
+                    return Err(decode_remote_error(&code, message))
+                }
+                Ok(other) => return Err(Error::Wire(format!("unexpected reply {other:?}"))),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    self.shared.pending.lock().unwrap().remove(&req_id);
+                    return Err(Error::Timeout(format!("request {req_id}")));
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    // The link died with our request in flight (pending map
+                    // cleared by the outage path). Retry after revival.
+                    if self.shared.reconnect_enabled()
+                        && !self.shared.closed.load(Ordering::Relaxed)
+                        && Instant::now() < deadline
+                    {
+                        continue;
+                    }
+                    return Err(Error::Closed("connection lost".into()));
+                }
             }
         }
     }
@@ -218,7 +398,10 @@ impl Connection {
     }
 
     /// Start consuming `queue`: registers `handler` (invoked on the
-    /// communication thread) and issues `Consume`.
+    /// communication thread) and issues `Consume`. A tag already held by a
+    /// live consumer on this connection is refused up front — registering
+    /// first and rolling back on a broker error must never clobber (or
+    /// tear down) a healthy subscription.
     pub fn consume(
         &self,
         queue: &str,
@@ -226,37 +409,66 @@ impl Connection {
         prefetch: u32,
         handler: DeliveryHandler,
     ) -> Result<()> {
-        self.shared.handlers.lock().unwrap().insert(consumer_tag.to_string(), handler);
+        {
+            let mut handlers = self.shared.handlers.lock().unwrap();
+            if handlers.contains_key(consumer_tag) {
+                return Err(Error::DuplicateSubscriber(format!(
+                    "consumer tag '{consumer_tag}' already registered on this connection"
+                )));
+            }
+            handlers.insert(consumer_tag.to_string(), handler);
+        }
         let res = self.request(&ClientRequest::Consume {
             queue: queue.to_string(),
             consumer_tag: consumer_tag.to_string(),
             prefetch,
         });
-        if res.is_err() {
-            self.shared.handlers.lock().unwrap().remove(consumer_tag);
+        match res {
+            Ok(_) => {
+                let mut journal = self.shared.journal.lock().unwrap();
+                journal.record_consumer(consumer_tag, queue, prefetch);
+                Ok(())
+            }
+            Err(e) => {
+                // Remove exactly what this call inserted; the guard above
+                // means the tag cannot belong to anyone else.
+                self.shared.handlers.lock().unwrap().remove(consumer_tag);
+                Err(e)
+            }
         }
-        res.map(|_| ())
     }
 
     /// Stop consuming.
     pub fn cancel(&self, consumer_tag: &str) -> Result<()> {
         self.request(&ClientRequest::Cancel { consumer_tag: consumer_tag.to_string() })?;
         self.shared.handlers.lock().unwrap().remove(consumer_tag);
+        self.shared.journal.lock().unwrap().remove_consumer(consumer_tag);
         Ok(())
     }
 
-    /// Acknowledge a delivery (fire-and-forget). Acks issued while the
-    /// communication thread is dispatching a delivery batch are pipelined:
-    /// they buffer and leave as one `AckMulti` frame when the batch ends.
+    /// Acknowledge a delivery (fire-and-forget). Acks issued *by the
+    /// communication thread* while it is dispatching a delivery batch are
+    /// pipelined: they buffer and leave as one `AckMulti` frame when the
+    /// batch ends. Acks from any other thread go out immediately — they
+    /// must not wait on unrelated handlers finishing the batch.
     pub fn ack(&self, delivery_tag: u64) -> Result<()> {
         if self.shared.closed.load(Ordering::Relaxed) {
             return Err(Error::Closed("connection closed".into()));
         }
+        if !self.shared.resolve_tag(delivery_tag) {
+            // Pre-outage delivery: the broker already requeued it, and the
+            // tag value may since name a different message. Dropping the
+            // ack is the safe outcome — the redelivery carries a new tag.
+            log::debug!("connection: dropping stale ack for tag {delivery_tag}");
+            return Ok(());
+        }
         {
             let mut buf = self.shared.ack_buffer.lock().unwrap();
-            if let Some(tags) = buf.as_mut() {
-                tags.push(delivery_tag);
-                return Ok(());
+            if let Some(batch) = buf.as_mut() {
+                if batch.owner == std::thread::current().id() {
+                    batch.tags.push(delivery_tag);
+                    return Ok(());
+                }
             }
         }
         self.send_noreply(&ClientRequest::Ack { delivery_tag })
@@ -267,11 +479,17 @@ impl Connection {
     /// `max_delivery` cap — the broker dead-letters it instead of
     /// redelivering.
     pub fn nack(&self, delivery_tag: u64, requeue: bool) -> Result<()> {
+        if !self.shared.resolve_tag(delivery_tag) {
+            log::debug!("connection: dropping stale nack for tag {delivery_tag}");
+            return Ok(());
+        }
         self.send_noreply(&ClientRequest::Nack { delivery_tag, requeue })
     }
 
     /// Negative-acknowledge many deliveries in one frame.
     pub fn nack_multi(&self, delivery_tags: Vec<u64>, requeue: bool) -> Result<()> {
+        let delivery_tags: Vec<u64> =
+            delivery_tags.into_iter().filter(|t| self.shared.resolve_tag(*t)).collect();
         if delivery_tags.is_empty() {
             return Ok(());
         }
@@ -281,10 +499,16 @@ impl Connection {
     /// AMQP `basic.reject`: refuse a single delivery (fire-and-forget).
     /// Same broker semantics as [`Connection::nack`].
     pub fn reject(&self, delivery_tag: u64, requeue: bool) -> Result<()> {
+        if !self.shared.resolve_tag(delivery_tag) {
+            log::debug!("connection: dropping stale reject for tag {delivery_tag}");
+            return Ok(());
+        }
         self.send_noreply(&ClientRequest::Reject { delivery_tag, requeue })
     }
 
-    /// True when the connection is no longer usable.
+    /// True when the connection is permanently closed (explicit `close()`
+    /// or reconnect retries exhausted). False during an outage the
+    /// connection is still trying to repair.
     pub fn is_closed(&self) -> bool {
         self.shared.closed.load(Ordering::Relaxed)
     }
@@ -292,13 +516,13 @@ impl Connection {
     /// Graceful close: `Close` to the broker, stop threads, clear delivery
     /// handlers (breaking any `Arc<Connection>` cycles closures hold).
     /// Idempotent; callable from any thread except the communication
-    /// thread itself.
+    /// thread itself. Called mid-outage it aborts any backoff sleep and
+    /// terminates promptly.
     pub fn close(&self) {
         if !self.shared.closed.load(Ordering::Relaxed) {
             self.request_timeout(&ClientRequest::Close, Duration::from_millis(500)).ok();
         }
         self.shared.mark_closed();
-        self.shared.link.close();
         if let Some(h) = self.reader.lock().unwrap().take() {
             h.join().ok();
         }
@@ -315,6 +539,25 @@ impl Drop for Connection {
     }
 }
 
+impl Shared {
+    /// Send one request frame, cleaning up the pending entry and flagging
+    /// the outage on failure.
+    fn link_send(
+        &self,
+        link: &Arc<dyn Link>,
+        epoch: u64,
+        frame: &Frame,
+        req_id: u64,
+    ) -> Result<()> {
+        if let Err(e) = link.send(frame) {
+            self.pending.lock().unwrap().remove(&req_id);
+            self.link_failed(epoch);
+            return Err(e);
+        }
+        Ok(())
+    }
+}
+
 fn decode_remote_error(code: &str, message: String) -> Error {
     match code {
         "unroutable" => Error::UnroutableMessage(message),
@@ -325,26 +568,101 @@ fn decode_remote_error(code: &str, message: String) -> Error {
     }
 }
 
+/// Dispatch deliveries to their handlers with the ack window open: handler
+/// acks coalesce into one `AckMulti` frame sent when the batch is done.
+/// The guard flushes on drop (panic-safe).
+fn dispatch_batch(shared: &Arc<Shared>, deliveries: Vec<Delivery>) {
+    if deliveries.is_empty() {
+        return;
+    }
+    shared.track_deliveries(deliveries.iter().map(|d| d.delivery_tag));
+    let window = open_ack_window(shared);
+    {
+        let mut handlers = shared.handlers.lock().unwrap();
+        for d in deliveries {
+            if let Some(h) = handlers.get_mut(&d.consumer_tag) {
+                h(d);
+            } else {
+                log::warn!("connection: delivery for unknown consumer '{}'", d.consumer_tag);
+            }
+        }
+    }
+    drop(window);
+}
+
+/// Why the pump stopped reading the current link.
+enum PumpExit {
+    /// Graceful: `closed` was set.
+    Closed,
+    /// The link is dead (recv error, goodbye, corrupt frame, heartbeat
+    /// expiry) — reconnect if we can.
+    LinkDead,
+}
+
 /// The hidden communication thread: demultiplexes replies, deliveries and
-/// server heartbeats.
-fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
-    let poll = Duration::from_millis(if heartbeat_ms > 0 { (heartbeat_ms / 2).max(1) } else { 200 });
+/// server heartbeats on the current link; when the link dies, drives
+/// recovery (backoff → re-dial → topology replay) and resumes.
+fn reader_loop(shared: Arc<Shared>) {
     loop {
         if shared.closed.load(Ordering::Relaxed) {
             break;
         }
-        match shared.link.recv_timeout(poll) {
+        let (link, epoch) = match shared.slot.current() {
+            Ok(x) => x,
+            Err(_) => {
+                // Closed terminally, or a sender flagged the link Down
+                // before we noticed: fall through to recovery.
+                if shared.slot.is_closed() {
+                    break;
+                }
+                shared.fail_pending();
+                shared.clear_live_tags();
+                if !(shared.reconnect_enabled() && recover(&shared)) {
+                    shared.mark_closed();
+                    break;
+                }
+                continue;
+            }
+        };
+        match pump_link(&shared, &link) {
+            PumpExit::Closed => break,
+            PumpExit::LinkDead => {
+                shared.slot.report_failure(epoch);
+                // Wake parked requesters; deadline permitting they re-send
+                // after revival. Outstanding delivery tags died with the
+                // link — the broker requeues them, so late acks are stale.
+                shared.fail_pending();
+                shared.clear_live_tags();
+                if !(shared.reconnect_enabled() && recover(&shared)) {
+                    shared.mark_closed();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Read frames off one link until it dies or the connection closes.
+fn pump_link(shared: &Arc<Shared>, link: &Arc<dyn Link>) -> PumpExit {
+    let heartbeat_ms = shared.config.heartbeat_ms;
+    let poll =
+        Duration::from_millis(if heartbeat_ms > 0 { (heartbeat_ms / 2).max(1) } else { 200 });
+    loop {
+        if shared.closed.load(Ordering::Relaxed) {
+            return PumpExit::Closed;
+        }
+        match link.recv_timeout(poll) {
             Ok(frame) => {
                 *shared.last_server_frame.lock().unwrap() = Instant::now();
                 match frame.frame_type {
                     FrameType::Heartbeat => {}
                     FrameType::Goodbye => {
                         log::debug!("connection: broker said goodbye");
-                        shared.mark_closed();
-                        break;
+                        return PumpExit::LinkDead;
                     }
                     FrameType::Data => match ServerMsg::from_frame(&frame) {
                         Ok(ServerMsg::Deliver(d)) => {
+                            shared.track_deliveries(std::iter::once(d.delivery_tag));
                             let mut handlers = shared.handlers.lock().unwrap();
                             if let Some(h) = handlers.get_mut(&d.consumer_tag) {
                                 h(d);
@@ -355,29 +673,10 @@ fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
                                 );
                             }
                         }
-                        Ok(ServerMsg::DeliverBatch(ds)) => {
-                            // Dispatch the whole batch with the ack window
-                            // open: handler acks coalesce into one AckMulti
-                            // frame sent when the batch is done. The guard
-                            // flushes on drop (panic-safe).
-                            let window = open_ack_window(&shared);
-                            {
-                                let mut handlers = shared.handlers.lock().unwrap();
-                                for d in ds {
-                                    if let Some(h) = handlers.get_mut(&d.consumer_tag) {
-                                        h(d);
-                                    } else {
-                                        log::warn!(
-                                            "connection: delivery for unknown consumer '{}'",
-                                            d.consumer_tag
-                                        );
-                                    }
-                                }
-                            }
-                            drop(window);
-                        }
+                        Ok(ServerMsg::DeliverBatch(ds)) => dispatch_batch(shared, ds),
                         Ok(ServerMsg::CancelConsumer { consumer_tag }) => {
                             shared.handlers.lock().unwrap().remove(&consumer_tag);
+                            shared.journal.lock().unwrap().remove_consumer(&consumer_tag);
                         }
                         Ok(msg @ (ServerMsg::Ok { .. } | ServerMsg::Err { .. })) => {
                             let req_id = match &msg {
@@ -393,8 +692,7 @@ fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
                         }
                         Err(e) => {
                             log::warn!("connection: bad frame from broker: {e}");
-                            shared.mark_closed();
-                            break;
+                            return PumpExit::LinkDead;
                         }
                     },
                 }
@@ -405,15 +703,174 @@ fn reader_loop(shared: Arc<Shared>, heartbeat_ms: u64) {
                     let last = *shared.last_server_frame.lock().unwrap();
                     if last.elapsed().as_millis() as u64 > 2 * heartbeat_ms {
                         log::warn!("connection: broker silent for 2 heartbeat intervals");
-                        shared.mark_closed();
-                        break;
+                        return PumpExit::LinkDead;
                     }
                 }
             }
-            Err(_) => {
-                shared.mark_closed();
-                break;
-            }
+            Err(_) => return PumpExit::LinkDead,
+        }
+    }
+}
+
+/// Drive the reconnect loop: backoff, re-dial, replay. Returns true once a
+/// replayed link is installed, false when retries are exhausted or the
+/// connection closed mid-recovery. Runs on the communication thread.
+fn recover(shared: &Arc<Shared>) -> bool {
+    let Some(factory) = shared.factory.as_ref() else { return false };
+    let max_retries = shared.config.reconnect_max_retries.max(1);
+    let base_ms = shared.config.reconnect_backoff_ms;
+    let rng = Rng::new(jitter_seed());
+    // Flap guard: a link that died almost immediately after install means
+    // a crash-looping (or Goodbye-spamming) broker — skip the free
+    // immediate re-dial so each flap cycle still pays a backoff, instead
+    // of hammering the broker in a tight dial+replay loop.
+    let flap_window = Duration::from_millis(base_ms.max(1).saturating_mul(2));
+    let flapping = shared.last_install.lock().unwrap().elapsed() < flap_window;
+    let mut attempt: u32 = u32::from(flapping);
+    loop {
+        if shared.closed.load(Ordering::Relaxed) || shared.slot.is_closed() {
+            return false;
+        }
+        let delay = backoff_delay(attempt, base_ms, rng.next_u64());
+        if !delay.is_zero() && !shared.slot.sleep_unless_closed(delay) {
+            return false;
+        }
+        let failure = match factory() {
+            Ok(link) => match replay_topology(shared, &link) {
+                Ok(buffered) => {
+                    *shared.last_server_frame.lock().unwrap() = Instant::now();
+                    *shared.last_install.lock().unwrap() = Instant::now();
+                    let Some(epoch) = shared.slot.install(Arc::clone(&link)) else {
+                        // close() won the race during the dial/replay; the
+                        // fresh link (and its broker session) was severed.
+                        return false;
+                    };
+                    shared.reconnects.inc();
+                    log::info!(
+                        "connection: reconnected to {} (epoch {epoch}, attempt {})",
+                        link.peer(),
+                        attempt + 1
+                    );
+                    // Deliveries that raced the replay tail dispatch now,
+                    // through the normal batched path.
+                    dispatch_batch(shared, buffered);
+                    return true;
+                }
+                Err(e) => {
+                    link.close();
+                    e
+                }
+            },
+            Err(e) => e,
+        };
+        attempt += 1;
+        if attempt >= max_retries {
+            log::error!("connection: giving up after {attempt} reconnect attempts: {failure}");
+            return false;
+        }
+        log::warn!("connection: reconnect attempt {attempt}/{max_retries} failed: {failure}");
+    }
+}
+
+fn jitter_seed() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64)
+        .unwrap_or(1);
+    nanos ^ ((std::process::id() as u64) << 32)
+}
+
+/// Re-teach a fresh link everything the dead one knew: `Hello`, then the
+/// journal (exchanges → queues → bindings), then every consumer whose
+/// handler is still registered. Runs request/reply synchronously on the
+/// new link *before* it is installed, so user traffic stays parked until
+/// the broker is fully revived. Deliveries that start arriving once
+/// consumers re-register are buffered and returned for normal dispatch.
+fn replay_topology(shared: &Arc<Shared>, link: &Arc<dyn Link>) -> Result<Vec<Delivery>> {
+    let mut buffered = Vec::new();
+    sync_request(
+        shared,
+        link,
+        &ClientRequest::Hello {
+            client_id: shared.config.client_id.clone(),
+            heartbeat_ms: shared.config.heartbeat_ms,
+        },
+        &mut buffered,
+    )?;
+    let (requests, consumers) = {
+        let journal = shared.journal.lock().unwrap();
+        (journal.replay_requests(), journal.consumers())
+    };
+    for req in &requests {
+        sync_request(shared, link, req, &mut buffered)?;
+    }
+    let mut replayed = 0u64;
+    for c in &consumers {
+        if !shared.handlers.lock().unwrap().contains_key(&c.consumer_tag) {
+            continue; // handler vanished (cancelled mid-outage)
+        }
+        sync_request(
+            shared,
+            link,
+            &ClientRequest::Consume {
+                queue: c.queue.clone(),
+                consumer_tag: c.consumer_tag.clone(),
+                prefetch: c.prefetch,
+            },
+            &mut buffered,
+        )?;
+        replayed += 1;
+    }
+    shared.replayed_consumers.add(replayed);
+    Ok(buffered)
+}
+
+/// One synchronous request/reply exchange on a not-yet-installed link.
+/// Deliveries arriving mid-replay (consumers re-registered earlier in the
+/// same replay) are buffered, not dispatched — handlers must not run until
+/// the link is installed and sends work again.
+fn sync_request(
+    shared: &Arc<Shared>,
+    link: &Arc<dyn Link>,
+    req: &ClientRequest,
+    buffered: &mut Vec<Delivery>,
+) -> Result<crate::wire::Value> {
+    let req_id = shared.next_req.fetch_add(1, Ordering::Relaxed);
+    link.send(&req.to_frame(req_id))?;
+    let deadline = Instant::now() + shared.config.request_timeout;
+    loop {
+        if shared.closed.load(Ordering::Relaxed) {
+            return Err(Error::Closed("connection closed".into()));
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(Error::Timeout(format!("replay request {req_id}")));
+        }
+        let wait = (deadline - now).min(Duration::from_millis(200));
+        match link.recv_timeout(wait) {
+            Ok(frame) => match frame.frame_type {
+                FrameType::Heartbeat => {}
+                FrameType::Goodbye => {
+                    return Err(Error::Closed("broker said goodbye during replay".into()))
+                }
+                FrameType::Data => match ServerMsg::from_frame(&frame)? {
+                    ServerMsg::Ok { req_id: id, reply } if id == req_id => return Ok(reply),
+                    ServerMsg::Err { req_id: id, code, message } if id == req_id => {
+                        return Err(decode_remote_error(&code, message))
+                    }
+                    ServerMsg::Deliver(d) => buffered.push(d),
+                    ServerMsg::DeliverBatch(ds) => buffered.extend(ds),
+                    ServerMsg::CancelConsumer { consumer_tag } => {
+                        shared.handlers.lock().unwrap().remove(&consumer_tag);
+                        shared.journal.lock().unwrap().remove_consumer(&consumer_tag);
+                    }
+                    // A reply to some pre-outage request: its waiter was
+                    // already failed (and will retry); drop it.
+                    ServerMsg::Ok { .. } | ServerMsg::Err { .. } => {}
+                },
+            },
+            Err(Error::Timeout(_)) => {}
+            Err(e) => return Err(e),
         }
     }
 }
@@ -427,6 +884,25 @@ mod tests {
 
     fn open(broker: &InprocBroker) -> Connection {
         Connection::open(broker.connect(), ConnectionConfig::default()).unwrap()
+    }
+
+    fn declare(conn: &Connection, queue: &str) {
+        conn.request(&ClientRequest::QueueDeclare {
+            queue: queue.into(),
+            options: QueueOptions::default(),
+        })
+        .unwrap();
+    }
+
+    fn publish(conn: &Connection, queue: &str, v: Value) {
+        conn.request(&ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: queue.into(),
+            body: Bytes::encode(&v),
+            props: Default::default(),
+            mandatory: true,
+        })
+        .unwrap();
     }
 
     #[test]
@@ -447,11 +923,7 @@ mod tests {
     fn consume_dispatches_to_handler() {
         let broker = InprocBroker::new();
         let conn = open(&broker);
-        conn.request(&ClientRequest::QueueDeclare {
-            queue: "q".into(),
-            options: QueueOptions::default(),
-        })
-        .unwrap();
+        declare(&conn, "q");
         let (tx, rx) = channel();
         conn.consume(
             "q",
@@ -462,14 +934,7 @@ mod tests {
             }),
         )
         .unwrap();
-        conn.request(&ClientRequest::Publish {
-            exchange: "".into(),
-            routing_key: "q".into(),
-            body: Bytes::encode(&Value::str("hi")),
-            props: Default::default(),
-            mandatory: true,
-        })
-        .unwrap();
+        publish(&conn, "q", Value::str("hi"));
         assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), Value::str("hi"));
         conn.close();
     }
@@ -495,24 +960,13 @@ mod tests {
     fn concurrent_requests_from_many_threads() {
         let broker = InprocBroker::new();
         let conn = Arc::new(open(&broker));
-        conn.request(&ClientRequest::QueueDeclare {
-            queue: "q".into(),
-            options: QueueOptions::default(),
-        })
-        .unwrap();
+        declare(&conn, "q");
         let handles: Vec<_> = (0..8)
             .map(|t| {
                 let conn = Arc::clone(&conn);
                 std::thread::spawn(move || {
                     for i in 0..50 {
-                        conn.request(&ClientRequest::Publish {
-                            exchange: "".into(),
-                            routing_key: "q".into(),
-                            body: Bytes::encode(&Value::I64(t * 1000 + i)),
-                            props: Default::default(),
-                            mandatory: true,
-                        })
-                        .unwrap();
+                        publish(&conn, "q", Value::I64(t * 1000 + i));
                     }
                 })
             })
@@ -527,20 +981,9 @@ mod tests {
     fn ack_fire_and_forget_drains_queue() {
         let broker = InprocBroker::new();
         let conn = Arc::new(open(&broker));
-        conn.request(&ClientRequest::QueueDeclare {
-            queue: "q".into(),
-            options: QueueOptions::default(),
-        })
-        .unwrap();
+        declare(&conn, "q");
         for i in 0..10 {
-            conn.request(&ClientRequest::Publish {
-                exchange: "".into(),
-                routing_key: "q".into(),
-                body: Bytes::encode(&Value::I64(i)),
-                props: Default::default(),
-                mandatory: true,
-            })
-            .unwrap();
+            publish(&conn, "q", Value::I64(i));
         }
         let conn2 = Arc::clone(&conn);
         let (done_tx, done_rx) = channel();
@@ -572,20 +1015,9 @@ mod tests {
         // acks coalesce into AckMulti frames and still drain the queue.
         let broker = InprocBroker::new();
         let conn = Arc::new(open(&broker));
-        conn.request(&ClientRequest::QueueDeclare {
-            queue: "bulk".into(),
-            options: QueueOptions::default(),
-        })
-        .unwrap();
+        declare(&conn, "bulk");
         for i in 0..40 {
-            conn.request(&ClientRequest::Publish {
-                exchange: "".into(),
-                routing_key: "bulk".into(),
-                body: Bytes::encode(&Value::I64(i)),
-                props: Default::default(),
-                mandatory: true,
-            })
-            .unwrap();
+            publish(&conn, "bulk", Value::I64(i));
         }
         let conn2 = Arc::clone(&conn);
         let (done_tx, done_rx) = channel();
@@ -623,5 +1055,302 @@ mod tests {
         let conn2 = open(&broker);
         assert!(conn2.request(&ClientRequest::Status).is_ok());
         conn2.close();
+    }
+
+    #[test]
+    fn duplicate_consume_tag_refused_without_killing_original() {
+        // Regression: `consume` used to insert the new handler before the
+        // broker answered, clobbering a live consumer's handler — and its
+        // error path then removed the original's registration entirely.
+        let broker = InprocBroker::new();
+        let conn = open(&broker);
+        declare(&conn, "q");
+        let (tx, rx) = channel();
+        conn.consume(
+            "q",
+            "c1",
+            0,
+            Box::new(move |d| {
+                tx.send(d.body.decode().unwrap()).unwrap();
+            }),
+        )
+        .unwrap();
+        // Same tag again: refused up front…
+        let err = conn.consume("q", "c1", 0, Box::new(|_| {})).unwrap_err();
+        assert!(matches!(err, Error::DuplicateSubscriber(_)), "{err:?}");
+        // …and the original consumer still works.
+        publish(&conn, "q", Value::str("still-alive"));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(2)).unwrap(),
+            Value::str("still-alive")
+        );
+        conn.close();
+    }
+
+    #[test]
+    fn failed_consume_rolls_back_its_own_registration() {
+        let broker = InprocBroker::new();
+        let conn = open(&broker);
+        // Consuming a queue that does not exist fails broker-side…
+        assert!(conn.consume("ghost", "c1", 0, Box::new(|_| {})).is_err());
+        // …and the rollback frees the tag for a later, valid consume.
+        declare(&conn, "q");
+        let (tx, rx) = channel();
+        conn.consume(
+            "q",
+            "c1",
+            0,
+            Box::new(move |d| {
+                tx.send(d.body.decode().unwrap()).unwrap();
+            }),
+        )
+        .unwrap();
+        publish(&conn, "q", Value::I64(9));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), Value::I64(9));
+        conn.close();
+    }
+
+    #[test]
+    fn cross_thread_ack_escapes_open_batch_window() {
+        // Regression: acks from *any* thread used to coalesce into the
+        // comm thread's open batch window, so a user thread acking an old
+        // delivery mid-batch had its ack parked behind unrelated handlers.
+        let broker = InprocBroker::new();
+        let conn = Arc::new(open(&broker));
+        declare(&conn, "q");
+        for i in 0..8 {
+            publish(&conn, "q", Value::I64(i));
+        }
+        let (tag_tx, tag_rx) = channel();
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let gate2 = Arc::clone(&gate);
+        let conn2 = Arc::clone(&conn);
+        let mut first = true;
+        conn.consume(
+            "q",
+            "c1",
+            0,
+            Box::new(move |d| {
+                if first {
+                    first = false;
+                    // Hand the tag to the main thread and stall the batch.
+                    tag_tx.send(d.delivery_tag).unwrap();
+                    while !gate2.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                } else {
+                    conn2.ack(d.delivery_tag).unwrap();
+                }
+            }),
+        )
+        .unwrap();
+        let tag = tag_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // The comm thread is stalled inside the batch (window open). An
+        // ack from this thread must go out NOW, not when the batch ends.
+        conn.ack(tag).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let unacked = broker.broker().queue_unacked("q").unwrap();
+            if unacked == 7 {
+                break; // our ack landed while the batch is still stalled
+            }
+            assert!(
+                Instant::now() < deadline,
+                "cross-thread ack was parked in the batch window (unacked={unacked})"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        gate.store(true, Ordering::Relaxed);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while broker.broker().queue_unacked("q") != Some(0) {
+            assert!(Instant::now() < deadline, "remaining handler acks must drain");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        conn.close();
+    }
+
+    /// Links a spying factory has produced, so tests can sever them.
+    type LinkLog = Arc<Mutex<Vec<Arc<dyn Link>>>>;
+
+    /// A factory over an [`InprocBroker`] that keeps handles to every link
+    /// it has produced, so tests can sever the live one.
+    fn spying_factory(broker: Arc<InprocBroker>, produced: LinkLog) -> LinkFactory {
+        Box::new(move || {
+            let link = broker.connect();
+            produced.lock().unwrap().push(Arc::clone(&link));
+            Ok(link)
+        })
+    }
+
+    fn reconnecting_config() -> ConnectionConfig {
+        ConnectionConfig {
+            reconnect_max_retries: 20,
+            reconnect_backoff_ms: 5,
+            request_timeout: Duration::from_secs(10),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn link_death_revives_consumers_transparently() {
+        let broker = Arc::new(InprocBroker::new());
+        let produced: LinkLog = Arc::new(Mutex::new(Vec::new()));
+        let conn = Connection::open_with_factory(
+            spying_factory(Arc::clone(&broker), Arc::clone(&produced)),
+            reconnecting_config(),
+        )
+        .unwrap();
+        declare(&conn, "q");
+        let (tx, rx) = channel();
+        conn.consume(
+            "q",
+            "c1",
+            0,
+            Box::new(move |d| {
+                tx.send(d.body.decode().unwrap()).unwrap();
+            }),
+        )
+        .unwrap();
+        publish(&conn, "q", Value::I64(1));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), Value::I64(1));
+
+        // Sever the live link out from under the connection.
+        produced.lock().unwrap()[0].close();
+
+        // The next publish either parks across the outage or goes through
+        // post-revival; the revived consumer must still receive it.
+        publish(&conn, "q", Value::I64(2));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), Value::I64(2));
+        assert!(!conn.is_closed(), "outage must not poison the connection");
+        assert!(conn.metrics().counter("client.reconnects_total").get() >= 1);
+        assert!(conn.metrics().counter("client.replayed_consumers_total").get() >= 1);
+        conn.close();
+    }
+
+    #[test]
+    fn topology_replay_reteaches_a_fresh_broker() {
+        // Second dial lands on a brand-new broker (process restart that
+        // lost all state): the journal must re-declare queue + consumer.
+        let broker_a = Arc::new(InprocBroker::new());
+        let broker_b = Arc::new(InprocBroker::new());
+        let dials = Arc::new(AtomicU64::new(0));
+        let links: LinkLog = Arc::new(Mutex::new(Vec::new()));
+        let factory: LinkFactory = {
+            let (a, b) = (Arc::clone(&broker_a), Arc::clone(&broker_b));
+            let (dials, links) = (Arc::clone(&dials), Arc::clone(&links));
+            Box::new(move || {
+                let n = dials.fetch_add(1, Ordering::Relaxed);
+                let link = if n == 0 { a.connect() } else { b.connect() };
+                links.lock().unwrap().push(Arc::clone(&link));
+                Ok(link)
+            })
+        };
+        let conn = Connection::open_with_factory(factory, reconnecting_config()).unwrap();
+        declare(&conn, "q");
+        let (tx, rx) = channel();
+        conn.consume(
+            "q",
+            "c1",
+            0,
+            Box::new(move |d| {
+                tx.send(d.body.decode().unwrap()).unwrap();
+            }),
+        )
+        .unwrap();
+        links.lock().unwrap()[0].close();
+        publish(&conn, "q", Value::str("reborn"));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), Value::str("reborn"));
+        // The new broker was re-taught the queue; the old one is history.
+        assert!(broker_b.broker().queue_depth("q").is_some());
+        conn.close();
+    }
+
+    #[test]
+    fn stale_pre_outage_ack_is_dropped_not_misapplied() {
+        // A tag delivered before an outage names nothing after it (the
+        // broker requeued the message; a restarted broker may even reuse
+        // the value for a different message). Acking it post-revival must
+        // be a no-op — the redelivery's new tag is the live one.
+        let broker = Arc::new(InprocBroker::new());
+        let produced: LinkLog = Arc::new(Mutex::new(Vec::new()));
+        let conn = Connection::open_with_factory(
+            spying_factory(Arc::clone(&broker), Arc::clone(&produced)),
+            reconnecting_config(),
+        )
+        .unwrap();
+        declare(&conn, "q");
+        publish(&conn, "q", Value::str("once"));
+        let (tag_tx, tag_rx) = channel();
+        conn.consume(
+            "q",
+            "c1",
+            1,
+            Box::new(move |d| {
+                tag_tx.send(d.delivery_tag).unwrap(); // never acks itself
+            }),
+        )
+        .unwrap();
+        let stale_tag = tag_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        produced.lock().unwrap()[0].close();
+        // The broker requeues the unacked message on disconnect; the
+        // revived consumer gets it again under a fresh tag.
+        let live_tag = tag_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_ne!(stale_tag, live_tag);
+        conn.ack(stale_tag).unwrap(); // dropped as stale
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            broker.broker().queue_unacked("q"),
+            Some(1),
+            "stale ack must not retire the redelivered message"
+        );
+        conn.ack(live_tag).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while broker.broker().queue_unacked("q") != Some(0) {
+            assert!(Instant::now() < deadline, "live ack must drain");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        conn.close();
+    }
+
+    #[test]
+    fn retries_exhausted_closes_terminally() {
+        let broker = Arc::new(InprocBroker::new());
+        let dials = Arc::new(AtomicU64::new(0));
+        let links: LinkLog = Arc::new(Mutex::new(Vec::new()));
+        let factory: LinkFactory = {
+            let broker = Arc::clone(&broker);
+            let (dials, links) = (Arc::clone(&dials), Arc::clone(&links));
+            Box::new(move || {
+                if dials.fetch_add(1, Ordering::Relaxed) == 0 {
+                    let link = broker.connect();
+                    links.lock().unwrap().push(Arc::clone(&link));
+                    Ok(link)
+                } else {
+                    Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::ConnectionRefused,
+                        "broker gone",
+                    )))
+                }
+            })
+        };
+        let conn = Connection::open_with_factory(
+            factory,
+            ConnectionConfig {
+                reconnect_max_retries: 3,
+                reconnect_backoff_ms: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        declare(&conn, "q");
+        // Sever the only link; every re-dial is then refused.
+        links.lock().unwrap()[0].close();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !conn.is_closed() {
+            assert!(Instant::now() < deadline, "exhausted retries must close the connection");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(conn.request(&ClientRequest::Status).is_err());
+        conn.close();
     }
 }

@@ -119,6 +119,24 @@ pub fn connect_tcp(addr: impl ToSocketAddrs) -> Result<TcpLink> {
     TcpLink::new(stream)
 }
 
+/// Connect with a per-dial timeout. The reconnect path uses this: a
+/// blackholed broker host must not pin the dialing (communication) thread
+/// for the OS connect timeout — that would make `close()` during an
+/// outage block for minutes instead of the dial budget.
+pub fn connect_tcp_bounded(addr: &str, timeout: Duration) -> Result<TcpLink> {
+    let mut last: Option<std::io::Error> = None;
+    for sock_addr in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sock_addr, timeout) {
+            Ok(stream) => return TcpLink::new(stream),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => Error::Io(e),
+        None => Error::Config(format!("cannot resolve '{addr}'")),
+    })
+}
+
 // ------------------------------------------------------------- inproc --
 
 /// In-process link: a crossed channel pair.

@@ -1,9 +1,15 @@
 //! Client-side transport: a [`Link`] abstraction (framed, bidirectional,
 //! thread-safe send) with TCP and in-process implementations, plus the
-//! reconnecting connection used by the communicator.
+//! reconnecting [`Connection`] used by the communicator — opened with a
+//! [`LinkFactory`] it survives broker outages by re-dialing with capped
+//! exponential backoff and replaying its topology journal (exchanges,
+//! queues, bindings, consumers), so handlers keep firing across a broker
+//! restart with no user code (see [`reconnect`]).
 
 pub mod conn;
 pub mod link;
+pub mod reconnect;
 
 pub use conn::{Connection, ConnectionConfig};
-pub use link::{connect_tcp, inproc_pair, Link};
+pub use link::{connect_tcp, connect_tcp_bounded, inproc_pair, Link};
+pub use reconnect::{tcp_factory, LinkFactory, TopologyJournal};

@@ -1,0 +1,447 @@
+//! Connection resilience: the mechanism behind the transparently
+//! reconnecting [`Connection`](crate::transport::Connection).
+//!
+//! Three pieces, all driven by the communication thread:
+//!
+//! * [`LinkFactory`] — how to dial the broker again. A connection opened
+//!   with a factory survives link death; one opened around a bare link
+//!   keeps the old fail-fast behaviour.
+//! * [`LinkSlot`] — the current link stamped with an *epoch*. Senders read
+//!   `(link, epoch)` atomically; a failure report carrying a stale epoch is
+//!   ignored, so an old link's death can never tear down its replacement,
+//!   and sends during an outage fail fast (retryable) instead of
+//!   interleaving onto a half-dead socket.
+//! * [`TopologyJournal`] — everything the broker must be re-taught after a
+//!   restart: exchanges, queues, bindings and consumers, recorded as the
+//!   live connection declares them and replayed in dependency order
+//!   (exchanges → queues → bindings → consumers) on revival.
+//!
+//! Re-dials back off exponentially (base `reconnect_backoff_ms`, doubling,
+//! capped at 32× base) with uniform jitter in `[0, delay/2)` so a herd of
+//! daemons does not stampede a broker that just came back.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::broker::protocol::{ClientRequest, ExchangeKind, QueueOptions};
+use crate::error::{Error, Result};
+use crate::transport::Link;
+
+/// Produces a fresh link to the broker. Called once per dial attempt, from
+/// the communication thread.
+pub type LinkFactory = Box<dyn Fn() -> Result<Arc<dyn Link>> + Send + Sync>;
+
+/// Per-dial budget for [`tcp_factory`]: bounds how long one reconnect
+/// attempt (and therefore a `close()` that joins mid-dial) can block on a
+/// blackholed host.
+pub const TCP_DIAL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Build a [`LinkFactory`] that dials `addr` over TCP — the standard way to
+/// get a reconnecting connection to a remote broker. Each dial is bounded
+/// by [`TCP_DIAL_TIMEOUT`].
+pub fn tcp_factory(addr: impl Into<String>) -> LinkFactory {
+    let addr = addr.into();
+    Box::new(move || {
+        let link = crate::transport::link::connect_tcp_bounded(&addr, TCP_DIAL_TIMEOUT)?;
+        Ok(Arc::new(link) as Arc<dyn Link>)
+    })
+}
+
+/// Backoff for dial attempt `attempt` (0-based; attempt 0 is immediate):
+/// `min(base << (attempt-1), base * 32)` plus jitter in `[0, delay/2)`.
+pub(crate) fn backoff_delay(attempt: u32, base_ms: u64, jitter: u64) -> Duration {
+    if attempt == 0 {
+        return Duration::ZERO;
+    }
+    let base = base_ms.max(1);
+    let exp = (attempt - 1).min(5); // 2^5 = 32× cap
+    let delay = base.saturating_mul(1u64 << exp);
+    Duration::from_millis(delay + jitter % (delay / 2 + 1))
+}
+
+// ---------------------------------------------------------------- slot --
+
+/// Lifecycle of the slot's link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Link believed healthy; senders use it.
+    Up,
+    /// Link dead, reconnect in progress; sends fail fast (retryable).
+    Down,
+    /// Connection permanently closed; sends fail terminally.
+    Closed,
+}
+
+struct SlotState {
+    link: Arc<dyn Link>,
+    epoch: u64,
+    phase: Phase,
+}
+
+/// The current link + epoch, with a condvar so parked senders learn about
+/// revival (and `close()` interrupts any backoff sleep promptly).
+pub(crate) struct LinkSlot {
+    state: Mutex<SlotState>,
+    cond: Condvar,
+}
+
+impl LinkSlot {
+    pub fn new(link: Arc<dyn Link>) -> Self {
+        LinkSlot {
+            state: Mutex::new(SlotState { link, epoch: 0, phase: Phase::Up }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// The live link and its epoch, or a retryable/terminal error.
+    pub fn current(&self) -> Result<(Arc<dyn Link>, u64)> {
+        let st = self.state.lock().unwrap();
+        match st.phase {
+            Phase::Up => Ok((Arc::clone(&st.link), st.epoch)),
+            Phase::Down => Err(Error::Closed("connection lost (reconnecting)".into())),
+            Phase::Closed => Err(Error::Closed("connection closed".into())),
+        }
+    }
+
+    /// Park until the slot is `Up` (revival) or `deadline` passes. Used by
+    /// `request` to ride out an outage instead of failing with `Closed`.
+    pub fn await_up(&self, deadline: Instant) -> Result<(Arc<dyn Link>, u64)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match st.phase {
+                Phase::Up => return Ok((Arc::clone(&st.link), st.epoch)),
+                Phase::Closed => return Err(Error::Closed("connection closed".into())),
+                Phase::Down => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(Error::Timeout("request parked across outage".into()));
+                    }
+                    let (guard, _) = self.cond.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                }
+            }
+        }
+    }
+
+    /// Report that the link stamped `epoch` failed. Stale reports (an older
+    /// link's death, observed after a successful reconnect) are ignored.
+    /// Closes the dead link so the communication thread's blocking `recv`
+    /// wakes and drives recovery. Returns true if this report transitioned
+    /// the slot `Up → Down`.
+    pub fn report_failure(&self, epoch: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.phase != Phase::Up || st.epoch != epoch {
+            return false;
+        }
+        st.phase = Phase::Down;
+        st.link.close();
+        self.cond.notify_all();
+        true
+    }
+
+    /// Install a freshly dialed (and replayed) link; bumps the epoch and
+    /// wakes every parked sender. Refused (`None`, severing the link) when
+    /// the slot was closed while the dial/replay ran — a completing
+    /// reconnect must not race `close()` back to life, or the fresh
+    /// broker session (with its replayed consumers) would leak, soaking up
+    /// deliveries nobody reads.
+    pub fn install(&self, link: Arc<dyn Link>) -> Option<u64> {
+        let mut st = self.state.lock().unwrap();
+        if st.phase == Phase::Closed {
+            link.close();
+            return None;
+        }
+        st.link = link;
+        st.epoch += 1;
+        st.phase = Phase::Up;
+        self.cond.notify_all();
+        Some(st.epoch)
+    }
+
+    /// Permanently close: terminal phase, current link severed, everyone
+    /// woken (parked senders fail with `Closed`; backoff sleeps abort).
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.phase = Phase::Closed;
+        st.link.close();
+        self.cond.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().phase == Phase::Closed
+    }
+
+    /// Interruptible backoff sleep: returns false if the slot was closed
+    /// while sleeping (caller must abandon the reconnect).
+    pub fn sleep_unless_closed(&self, dur: Duration) -> bool {
+        let deadline = Instant::now() + dur;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.phase == Phase::Closed {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            let (guard, _) = self.cond.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+}
+
+// ------------------------------------------------------------- journal --
+
+/// A consumer registration to be re-issued on revival.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConsumerSpec {
+    pub consumer_tag: String,
+    pub queue: String,
+    pub prefetch: u32,
+}
+
+/// Topology recorded on the live connection and replayed after a
+/// reconnect, so a broker that lost its state (process restart) is
+/// re-taught every exchange, queue, binding and consumer without any user
+/// code. Entries are deduplicated and kept in dependency order.
+#[derive(Default)]
+pub struct TopologyJournal {
+    exchanges: Vec<(String, ExchangeKind)>,
+    queues: Vec<(String, QueueOptions)>,
+    /// (exchange, queue, routing_key)
+    bindings: Vec<(String, String, String)>,
+    consumers: Vec<ConsumerSpec>,
+}
+
+impl TopologyJournal {
+    /// Record the effect of a *successfully acknowledged* request. Called
+    /// from the request path, so everything the broker accepted — and
+    /// nothing it refused — lands in the journal.
+    pub fn observe(&mut self, req: &ClientRequest) {
+        match req {
+            ClientRequest::ExchangeDeclare { exchange, kind } => {
+                match self.exchanges.iter_mut().find(|(e, _)| e == exchange) {
+                    Some(entry) => entry.1 = *kind,
+                    None => self.exchanges.push((exchange.clone(), *kind)),
+                }
+            }
+            ClientRequest::QueueDeclare { queue, options } => {
+                match self.queues.iter_mut().find(|(q, _)| q == queue) {
+                    Some(entry) => entry.1 = options.clone(),
+                    None => self.queues.push((queue.clone(), options.clone())),
+                }
+            }
+            ClientRequest::Bind { exchange, queue, routing_key } => {
+                let b = (exchange.clone(), queue.clone(), routing_key.clone());
+                if !self.bindings.contains(&b) {
+                    self.bindings.push(b);
+                }
+            }
+            ClientRequest::Unbind { exchange, queue, routing_key } => {
+                self.bindings
+                    .retain(|(e, q, k)| !(e == exchange && q == queue && k == routing_key));
+            }
+            ClientRequest::QueueDelete { queue } => {
+                self.queues.retain(|(q, _)| q != queue);
+                self.bindings.retain(|(_, q, _)| q != queue);
+                self.consumers.retain(|c| &c.queue != queue);
+            }
+            _ => {}
+        }
+    }
+
+    pub fn record_consumer(&mut self, consumer_tag: &str, queue: &str, prefetch: u32) {
+        self.remove_consumer(consumer_tag);
+        self.consumers.push(ConsumerSpec {
+            consumer_tag: consumer_tag.to_string(),
+            queue: queue.to_string(),
+            prefetch,
+        });
+    }
+
+    pub fn remove_consumer(&mut self, consumer_tag: &str) {
+        self.consumers.retain(|c| c.consumer_tag != consumer_tag);
+    }
+
+    /// Declaration requests in replay order (exchanges → queues →
+    /// bindings); consumers are re-issued separately so the caller can
+    /// count them and skip tags whose handlers are gone.
+    pub fn replay_requests(&self) -> Vec<ClientRequest> {
+        let mut reqs = Vec::with_capacity(
+            self.exchanges.len() + self.queues.len() + self.bindings.len(),
+        );
+        for (exchange, kind) in &self.exchanges {
+            reqs.push(ClientRequest::ExchangeDeclare { exchange: exchange.clone(), kind: *kind });
+        }
+        for (queue, options) in &self.queues {
+            reqs.push(ClientRequest::QueueDeclare {
+                queue: queue.clone(),
+                options: options.clone(),
+            });
+        }
+        for (exchange, queue, routing_key) in &self.bindings {
+            reqs.push(ClientRequest::Bind {
+                exchange: exchange.clone(),
+                queue: queue.clone(),
+                routing_key: routing_key.clone(),
+            });
+        }
+        reqs
+    }
+
+    pub fn consumers(&self) -> Vec<ConsumerSpec> {
+        self.consumers.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_orders_and_dedupes() {
+        let mut j = TopologyJournal::default();
+        j.observe(&ClientRequest::Bind {
+            exchange: "x".into(),
+            queue: "q".into(),
+            routing_key: "k".into(),
+        });
+        j.observe(&ClientRequest::QueueDeclare {
+            queue: "q".into(),
+            options: QueueOptions::default(),
+        });
+        j.observe(&ClientRequest::ExchangeDeclare {
+            exchange: "x".into(),
+            kind: ExchangeKind::Direct,
+        });
+        // Re-declares overwrite, not duplicate.
+        j.observe(&ClientRequest::QueueDeclare {
+            queue: "q".into(),
+            options: QueueOptions { durable: true, ..Default::default() },
+        });
+        j.observe(&ClientRequest::Bind {
+            exchange: "x".into(),
+            queue: "q".into(),
+            routing_key: "k".into(),
+        });
+        let reqs = j.replay_requests();
+        assert_eq!(reqs.len(), 3, "{reqs:?}");
+        let is_x = |r: &ClientRequest| {
+            matches!(r, ClientRequest::ExchangeDeclare { exchange, .. } if exchange == "x")
+        };
+        assert!(is_x(&reqs[0]));
+        let durable_q = |r: &ClientRequest| match r {
+            ClientRequest::QueueDeclare { queue, options } => queue == "q" && options.durable,
+            _ => false,
+        };
+        assert!(durable_q(&reqs[1]));
+        assert!(matches!(&reqs[2], ClientRequest::Bind { .. }));
+    }
+
+    #[test]
+    fn journal_forgets_deleted_topology() {
+        let mut j = TopologyJournal::default();
+        j.observe(&ClientRequest::QueueDeclare {
+            queue: "q".into(),
+            options: QueueOptions::default(),
+        });
+        j.observe(&ClientRequest::Bind {
+            exchange: "x".into(),
+            queue: "q".into(),
+            routing_key: "k".into(),
+        });
+        j.record_consumer("c1", "q", 4);
+        j.observe(&ClientRequest::Unbind {
+            exchange: "x".into(),
+            queue: "q".into(),
+            routing_key: "k".into(),
+        });
+        assert!(j.replay_requests().iter().all(|r| !matches!(r, ClientRequest::Bind { .. })));
+        j.observe(&ClientRequest::QueueDelete { queue: "q".into() });
+        assert!(j.replay_requests().is_empty());
+        assert!(j.consumers().is_empty());
+    }
+
+    #[test]
+    fn consumer_records_replace_by_tag() {
+        let mut j = TopologyJournal::default();
+        j.record_consumer("c1", "a", 1);
+        j.record_consumer("c1", "b", 2);
+        assert_eq!(j.consumers(), vec![ConsumerSpec {
+            consumer_tag: "c1".into(),
+            queue: "b".into(),
+            prefetch: 2,
+        }]);
+        j.remove_consumer("c1");
+        assert!(j.consumers().is_empty());
+    }
+
+    #[test]
+    fn backoff_is_capped_and_jittered() {
+        let base = 100;
+        assert_eq!(backoff_delay(0, base, 7), Duration::ZERO);
+        // attempt 1 = base .. 1.5*base
+        let d1 = backoff_delay(1, base, 0);
+        assert_eq!(d1, Duration::from_millis(100));
+        let d1j = backoff_delay(1, base, 49);
+        assert!(d1j >= d1 && d1j < Duration::from_millis(151), "{d1j:?}");
+        // Far attempts cap at 32x base (+ jitter < half).
+        for attempt in [6, 7, 20, u32::MAX] {
+            let d = backoff_delay(attempt, base, u64::MAX - 3);
+            assert!(d >= Duration::from_millis(3200), "{attempt}: {d:?}");
+            assert!(d < Duration::from_millis(3200 + 1601), "{attempt}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn slot_epochs_reject_stale_failure_reports() {
+        let (a, _a_peer) = crate::transport::link::inproc_pair();
+        let slot = LinkSlot::new(Arc::new(a));
+        let (_, e0) = slot.current().unwrap();
+        assert!(slot.report_failure(e0));
+        assert!(slot.current().is_err(), "down slot must fail senders fast");
+        let (b, _b_peer) = crate::transport::link::inproc_pair();
+        let e1 = slot.install(Arc::new(b)).unwrap();
+        assert_ne!(e0, e1);
+        // A late report about the dead epoch must not poison the new link.
+        assert!(!slot.report_failure(e0));
+        assert!(slot.current().is_ok());
+        slot.close();
+        assert!(slot.is_closed());
+        assert!(!slot.report_failure(e1));
+        // A reconnect completing after close() must not resurrect the slot.
+        let (c, _c_peer) = crate::transport::link::inproc_pair();
+        assert!(slot.install(Arc::new(c)).is_none());
+        assert!(slot.is_closed());
+    }
+
+    #[test]
+    fn await_up_wakes_on_install() {
+        let (a, _a_peer) = crate::transport::link::inproc_pair();
+        let slot = Arc::new(LinkSlot::new(Arc::new(a)));
+        let (_, e0) = slot.current().unwrap();
+        slot.report_failure(e0);
+        let slot2 = Arc::clone(&slot);
+        let waiter = std::thread::spawn(move || {
+            slot2.await_up(Instant::now() + Duration::from_secs(5)).map(|(_, e)| e)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let (b, _b_peer) = crate::transport::link::inproc_pair();
+        let e1 = slot.install(Arc::new(b)).unwrap();
+        assert_eq!(waiter.join().unwrap().unwrap(), e1);
+    }
+
+    #[test]
+    fn close_interrupts_backoff_sleep() {
+        let (a, _a_peer) = crate::transport::link::inproc_pair();
+        let slot = Arc::new(LinkSlot::new(Arc::new(a)));
+        let slot2 = Arc::clone(&slot);
+        let sleeper =
+            std::thread::spawn(move || slot2.sleep_unless_closed(Duration::from_secs(60)));
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        slot.close();
+        assert!(!sleeper.join().unwrap(), "sleep must report closure");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}
