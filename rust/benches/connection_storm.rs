@@ -1,0 +1,329 @@
+//! §Scale — connection storm: the epoll reactor front-end under
+//! thousands of concurrent connections with churn.
+//!
+//! Phases:
+//!
+//! 1. **Storm** — dial N connections from 16 threads, complete the Hello
+//!    handshake on each and keep them parked. Reports accept+Hello RTT
+//!    p50/p99, accepts/sec and resident-memory delta per connection.
+//! 2. **Churn** — open/handshake/Goodbye/close cycles on top of the
+//!    parked fleet; reports cycle p99 and that the process fd count
+//!    returns to its pre-churn baseline (no leaked sockets).
+//! 3. **Throughput** — one publisher → one consumer pumping messages
+//!    across a queue while the idle fleet stays parked; reports msgs/sec
+//!    (idle connections must not tax the data path).
+//!
+//! Also records the process thread count before/after the fleet: the
+//! reactor front-end must stay O(shards + reactor), not O(connections).
+//!
+//! Emits the usual table + CSV and a machine-readable
+//! `target/bench-results/BENCH_connection_storm.json`. With
+//! `KIWI_BENCH_RECORD=1` the run is appended to the tracked trajectory
+//! series at the repository root (`BENCH_connection_storm.json`).
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks the fleet so CI can run this as a
+//! regression tripwire; `KIWI_NET=threads` exercises the legacy
+//! front-end for comparison.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::Table;
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+use kiwi::broker::reactor;
+use kiwi::broker::server::{BrokerServer, NetOptions};
+use kiwi::metrics::Histogram;
+use kiwi::wire::{json, read_frame, write_frame, Bytes, FrameType, Value};
+
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Parse a `Key: value kB`-style line out of /proc/self/status.
+fn proc_status_field(key: &str) -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let rest = rest.trim_start_matches(':').trim();
+            let first = rest.split_whitespace().next()?;
+            return first.parse().ok();
+        }
+    }
+    None
+}
+
+fn rss_kb() -> u64 {
+    proc_status_field("VmRSS").unwrap_or(0)
+}
+
+fn thread_count() -> u64 {
+    proc_status_field("Threads").unwrap_or(0)
+}
+
+fn fd_count() -> usize {
+    std::fs::read_dir("/proc/self/fd").map(|d| d.count()).unwrap_or(0)
+}
+
+fn send(stream: &TcpStream, req: &ClientRequest, id: u64) {
+    let mut w = stream;
+    write_frame(&mut w, &req.to_frame(id)).expect("send frame");
+}
+
+fn recv_data(stream: &TcpStream) -> ServerMsg {
+    let mut r = stream;
+    loop {
+        let f = read_frame(&mut r).expect("recv frame");
+        if f.frame_type == FrameType::Data {
+            return ServerMsg::from_frame(&f).expect("decode server msg");
+        }
+    }
+}
+
+/// Dial + Hello handshake, with a few retries to ride out SYN-backlog
+/// pressure during the storm. Returns the stream and the handshake RTT.
+fn dial(addr: SocketAddr, id: u64) -> (TcpStream, Duration) {
+    let mut attempt = 0;
+    loop {
+        let t0 = Instant::now();
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                send(
+                    &stream,
+                    &ClientRequest::Hello { client_id: format!("storm-{id}"), heartbeat_ms: 0 },
+                    1,
+                );
+                match recv_data(&stream) {
+                    ServerMsg::Ok { .. } => return (stream, t0.elapsed()),
+                    other => panic!("hello rejected: {other:?}"),
+                }
+            }
+            Err(e) => {
+                attempt += 1;
+                assert!(attempt < 50, "connect kept failing: {e}");
+                std::thread::sleep(Duration::from_millis(10 * attempt));
+            }
+        }
+    }
+}
+
+fn main() {
+    let smoke = smoke();
+    // Each parked connection is two fds in this process (client + broker
+    // side). Ask for headroom, then size the fleet to what we got.
+    let fleet_target: usize = if smoke { 256 } else { 10_000 };
+    let nofile = reactor::raise_nofile_limit(65_536).unwrap_or(1024);
+    let fleet: usize = fleet_target.min(((nofile.saturating_sub(256)) / 3) as usize).max(8);
+    let churn_cycles: usize = if smoke { 128 } else { 2_000 };
+    let messages: usize = if smoke { 2_000 } else { 50_000 };
+    let dialers: usize = 16;
+
+    let opts = NetOptions::from_env();
+    let server = BrokerServer::start_with(BrokerHandle::new(), "127.0.0.1:0", opts)
+        .expect("start broker server");
+    let addr = server.addr();
+    println!(
+        "connection storm: {:?} front-end, fleet={fleet} (nofile={nofile}), \
+         churn={churn_cycles}, messages={messages}",
+        server.net_mode()
+    );
+
+    let threads_before = thread_count();
+    let rss_before = rss_kb();
+
+    // ---- Phase 1: the storm ----
+    let storm_t0 = Instant::now();
+    let mut workers = Vec::new();
+    for w in 0..dialers {
+        let lo = fleet * w / dialers;
+        let hi = fleet * (w + 1) / dialers;
+        workers.push(std::thread::spawn(move || {
+            let mut conns = Vec::with_capacity(hi - lo);
+            let mut rtts = Vec::with_capacity(hi - lo);
+            for i in lo..hi {
+                let (stream, rtt) = dial(addr, i as u64);
+                conns.push(stream);
+                rtts.push(rtt);
+            }
+            (conns, rtts)
+        }));
+    }
+    let mut fleet_conns: Vec<TcpStream> = Vec::with_capacity(fleet);
+    let connect_hist = Histogram::new();
+    for w in workers {
+        let (conns, rtts) = w.join().expect("dialer panicked");
+        fleet_conns.extend(conns);
+        for rtt in rtts {
+            connect_hist.record_duration(rtt);
+        }
+    }
+    let storm_elapsed = storm_t0.elapsed();
+    let accepts_per_sec = fleet as f64 / storm_elapsed.as_secs_f64().max(1e-9);
+    let threads_after = thread_count();
+    let rss_after = rss_kb();
+    let rss_delta = rss_after.saturating_sub(rss_before);
+    let rss_per_conn_kb = rss_delta as f64 / fleet as f64;
+
+    // ---- Phase 2: churn on top of the parked fleet ----
+    let fd_baseline = fd_count();
+    let churn_hist = Histogram::new();
+    for i in 0..churn_cycles {
+        let t0 = Instant::now();
+        let (stream, _) = dial(addr, (fleet + i) as u64);
+        send(&stream, &ClientRequest::Close, 2);
+        let _ = recv_data(&stream);
+        drop(stream);
+        churn_hist.record_duration(t0.elapsed());
+    }
+    // Give teardown a moment, then verify fds returned to baseline
+    // (small slack for transient /proc entries).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut fd_after = fd_count();
+    while fd_after > fd_baseline + 4 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+        fd_after = fd_count();
+    }
+
+    // ---- Phase 3: throughput with the fleet parked ----
+    let (publisher, _) = dial(addr, 900_000);
+    let (consumer, _) = dial(addr, 900_001);
+    send(
+        &publisher,
+        &ClientRequest::QueueDeclare { queue: "storm".into(), options: QueueOptions::default() },
+        3,
+    );
+    let _ = recv_data(&publisher);
+    send(
+        &consumer,
+        &ClientRequest::Consume { queue: "storm".into(), consumer_tag: "c".into(), prefetch: 0 },
+        4,
+    );
+    let _ = recv_data(&consumer);
+    let body = Bytes::encode(&Value::Bytes(vec![0x5a; 256]));
+    let pump_t0 = Instant::now();
+    let pub_handle = {
+        let publisher = publisher.try_clone().expect("clone publisher");
+        let body = body.clone();
+        std::thread::spawn(move || {
+            for i in 0..messages {
+                send(
+                    &publisher,
+                    &ClientRequest::Publish {
+                        exchange: "".into(),
+                        routing_key: "storm".into(),
+                        body: body.clone(),
+                        props: Default::default(),
+                        mandatory: false,
+                    },
+                    10 + i as u64,
+                );
+            }
+        })
+    };
+    let mut received = 0usize;
+    while received < messages {
+        match recv_data(&consumer) {
+            ServerMsg::Deliver(_) => received += 1,
+            ServerMsg::DeliverBatch(ds) => received += ds.len(),
+            ServerMsg::Ok { .. } => {}
+            other => panic!("unexpected during pump: {other:?}"),
+        }
+    }
+    pub_handle.join().expect("publisher panicked");
+    let pump_elapsed = pump_t0.elapsed();
+    let msgs_per_sec = messages as f64 / pump_elapsed.as_secs_f64().max(1e-9);
+
+    // ---- Teardown the fleet before reporting ----
+    drop(publisher);
+    drop(consumer);
+    drop(fleet_conns);
+
+    let fmt_ns = |ns: u64| format!("{:.2?}", Duration::from_nanos(ns));
+    let mut table = Table::new(
+        "connection_storm",
+        &["metric", "value"],
+    );
+    table.row(&["net_mode".into(), format!("{:?}", server.net_mode())]);
+    table.row(&["fleet".into(), fleet.to_string()]);
+    table.row(&["connect_p50".into(), fmt_ns(connect_hist.quantile(0.5))]);
+    table.row(&["connect_p99".into(), fmt_ns(connect_hist.quantile(0.99))]);
+    table.row(&["accepts_per_sec".into(), format!("{accepts_per_sec:.0}")]);
+    table.row(&["rss_delta_kb".into(), rss_delta.to_string()]);
+    table.row(&["rss_per_conn_kb".into(), format!("{rss_per_conn_kb:.1}")]);
+    table.row(&["threads_before".into(), threads_before.to_string()]);
+    table.row(&["threads_with_fleet".into(), threads_after.to_string()]);
+    table.row(&["churn_cycles".into(), churn_cycles.to_string()]);
+    table.row(&["churn_p99".into(), fmt_ns(churn_hist.quantile(0.99))]);
+    table.row(&["fd_baseline".into(), fd_baseline.to_string()]);
+    table.row(&["fd_after_churn".into(), fd_after.to_string()]);
+    table.row(&["msgs_per_sec".into(), format!("{msgs_per_sec:.0}")]);
+    table.emit();
+
+    // Tripwires the CI smoke run can catch without measuring anything:
+    // churned fds must come back, and an O(connections) thread model
+    // would show up as fleet-sized thread growth in reactor mode.
+    println!(
+        "gate: fd_after_churn={} fd_baseline={} (leak if it keeps growing)",
+        fd_after, fd_baseline
+    );
+    println!(
+        "gate: thread growth with {} parked conns: {} -> {}",
+        fleet, threads_before, threads_after
+    );
+
+    let run = Value::map([
+        ("bench", Value::from("connection_storm")),
+        ("smoke", Value::from(smoke)),
+        ("net_mode", Value::from(format!("{:?}", server.net_mode()))),
+        ("fleet", Value::from(fleet)),
+        ("connect_p50_ns", Value::from(connect_hist.quantile(0.5))),
+        ("connect_p99_ns", Value::from(connect_hist.quantile(0.99))),
+        ("accepts_per_sec", Value::from(accepts_per_sec)),
+        ("rss_delta_kb", Value::from(rss_delta)),
+        ("rss_per_conn_kb", Value::from(rss_per_conn_kb)),
+        ("threads_before", Value::from(threads_before)),
+        ("threads_with_fleet", Value::from(threads_after)),
+        ("churn_cycles", Value::from(churn_cycles)),
+        ("churn_p99_ns", Value::from(churn_hist.quantile(0.99))),
+        ("fd_baseline", Value::from(fd_baseline)),
+        ("fd_after_churn", Value::from(fd_after)),
+        ("msgs_per_sec", Value::from(msgs_per_sec)),
+    ]);
+    let path = std::path::Path::new("target/bench-results/BENCH_connection_storm.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(path, json::to_string(&run)) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+
+    // Tracked trajectory series at the repo root: append this run when
+    // recording is requested (benches run from rust/, the series lives
+    // one level up).
+    if std::env::var("KIWI_BENCH_RECORD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        let series_path = std::path::Path::new("../BENCH_connection_storm.json");
+        let mut series = std::fs::read_to_string(series_path)
+            .ok()
+            .and_then(|t| json::from_str(&t).ok())
+            .unwrap_or_else(|| {
+                Value::map([
+                    ("bench", Value::from("connection_storm")),
+                    ("runs", Value::List(Vec::new())),
+                ])
+            });
+        if let Value::Map(m) = &mut series {
+            let runs = m.entry("runs".to_string()).or_insert_with(|| Value::List(Vec::new()));
+            if let Value::List(list) = runs {
+                list.push(run);
+            }
+        }
+        match std::fs::write(series_path, json::to_string_pretty(&series)) {
+            Ok(()) => println!("recorded run into {}", series_path.display()),
+            Err(e) => eprintln!("warning: could not record series: {e}"),
+        }
+    }
+
+    server.shutdown();
+}

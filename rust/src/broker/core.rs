@@ -25,8 +25,10 @@
 //!
 //! Lock order (a thread only ever acquires rightward while holding
 //! leftward, never the reverse): connection registry → router →
-//! consumer index → shard → {connection sender, WAL}. The sender and WAL
-//! mutexes are leaves; nothing is acquired while holding them.
+//! consumer index → shard → {connection outbound (channel or sink), WAL}.
+//! The outbound and WAL mutexes are leaves; nothing is acquired while
+//! holding them — in particular a [`DeliverySink`] implementation must
+//! never call back into the broker from `push`/`ready`/`close`.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -86,6 +88,40 @@ pub fn default_shards() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Where a connection's outbound server messages go. The thread-per-
+/// connection path (and the inproc broker) hand the broker an mpsc
+/// `Sender` drained by a writer thread; the epoll reactor hands it a
+/// [`DeliverySink`] — a bounded outbox the reactor thread drains onto the
+/// socket when it is writable.
+pub enum Outbound {
+    Channel(Sender<ServerMsg>),
+    Sink(Arc<dyn DeliverySink>),
+}
+
+/// A pluggable outbound queue for one connection (implemented by the
+/// reactor's per-connection outbox; tests plug their own).
+///
+/// Implementations are leaf locks in the broker's lock order: `push` /
+/// `ready` / `close` are called under shard locks by the dispatcher and
+/// must not call back into the broker.
+pub trait DeliverySink: Send + Sync {
+    /// Enqueue one message. Returns false when the connection is gone
+    /// (the dispatcher then requeues the deliveries it was carrying).
+    /// Must not block: the outbox is unbounded in count — backpressure is
+    /// applied upstream by `ready()` gating delivery *assignment*, so
+    /// replies and cancels are never lost to a full outbox.
+    fn push(&self, msg: ServerMsg) -> bool;
+    /// False while the connection's outbox is over its cap — the
+    /// dispatcher skips assigning new deliveries to its consumers until
+    /// the socket drains (the sink owner then calls
+    /// [`BrokerHandle::resume_deliveries`]).
+    fn ready(&self) -> bool;
+    /// Connection torn down broker-side (disconnect / heartbeat eviction):
+    /// reject further pushes and wake the sink's owner so it releases the
+    /// socket. Idempotent.
+    fn close(&self);
+}
+
 /// Per-connection state, shared between the registry and the shards'
 /// delivery-target caches. All interior mutability; the contained mutexes
 /// are leaf locks in the broker's lock order.
@@ -95,17 +131,39 @@ pub struct ConnectionEntry {
     heartbeat_ms: AtomicU64,
     /// Milliseconds since the registry epoch at the last sign of life.
     last_seen_ms: AtomicU64,
-    sender: Mutex<Sender<ServerMsg>>,
+    outbound: Mutex<Outbound>,
     consumer_tags: Mutex<HashSet<String>>,
     /// Queues declared exclusive by this connection.
     exclusive_queues: Mutex<HashSet<String>>,
 }
 
 impl ConnectionEntry {
-    /// Push a server message into the connection's channel. Returns false
-    /// when the receiving session is gone.
+    /// Push a server message into the connection's outbound queue. Returns
+    /// false when the receiving session is gone.
     pub(crate) fn send(&self, msg: ServerMsg) -> bool {
-        self.sender.lock().unwrap().send(msg).is_ok()
+        match &*self.outbound.lock().unwrap() {
+            Outbound::Channel(tx) => tx.send(msg).is_ok(),
+            Outbound::Sink(sink) => sink.push(msg),
+        }
+    }
+
+    /// True when the connection can absorb new delivery assignments.
+    /// Channel-backed connections are always ready (their writer thread
+    /// blocks on the socket, the historical behaviour); sink-backed ones
+    /// report their outbox state.
+    pub(crate) fn ready(&self) -> bool {
+        match &*self.outbound.lock().unwrap() {
+            Outbound::Channel(_) => true,
+            Outbound::Sink(sink) => sink.ready(),
+        }
+    }
+
+    /// Tell a sink-backed outbound its connection is gone (no-op for
+    /// channels — dropping the registry entry hangs up the receiver side).
+    fn close_outbound(&self) {
+        if let Outbound::Sink(sink) = &*self.outbound.lock().unwrap() {
+            sink.close();
+        }
     }
 
     fn touch(&self, epoch: Instant) {
@@ -278,6 +336,17 @@ impl BrokerHandle {
         heartbeat_ms: u64,
         sender: Sender<ServerMsg>,
     ) -> ConnectionId {
+        self.connect_with_outbound(client_id, heartbeat_ms, Outbound::Channel(sender))
+    }
+
+    /// Register a connection with an explicit outbound queue (the reactor
+    /// path hands a [`DeliverySink`] here).
+    pub fn connect_with_outbound(
+        &self,
+        client_id: &str,
+        heartbeat_ms: u64,
+        outbound: Outbound,
+    ) -> ConnectionId {
         let conns = &self.core.connections;
         let id = conns.next.fetch_add(1, Ordering::Relaxed);
         let entry = Arc::new(ConnectionEntry {
@@ -285,7 +354,7 @@ impl BrokerHandle {
             client_id: Mutex::new(client_id.to_string()),
             heartbeat_ms: AtomicU64::new(heartbeat_ms),
             last_seen_ms: AtomicU64::new(conns.epoch.elapsed().as_millis() as u64),
-            sender: Mutex::new(sender),
+            outbound: Mutex::new(outbound),
             consumer_tags: Mutex::new(HashSet::new()),
             exclusive_queues: Mutex::new(HashSet::new()),
         });
@@ -302,12 +371,43 @@ impl BrokerHandle {
         }
     }
 
+    /// Re-pump every queue `conn` consumes from. The backpressure-release
+    /// hook: while a connection's outbox is over its cap the dispatcher
+    /// skips its consumers, so ready messages can sit in queues with no
+    /// other trigger — the sink owner (the reactor) calls this when the
+    /// outbox drains below its low-water mark.
+    pub fn resume_deliveries(&self, conn: ConnectionId) {
+        let core = &*self.core;
+        let Some(entry) = core.connections.get(conn) else { return };
+        let tags: Vec<String> = entry.consumer_tags.lock().unwrap().iter().cloned().collect();
+        if tags.is_empty() {
+            return;
+        }
+        let mut queues: Vec<Arc<str>> = Vec::new();
+        {
+            let ci = core.consumer_index.lock().unwrap();
+            for tag in &tags {
+                if let Some(q) = ci.get(tag) {
+                    if let Some(handle) = core.router.interned(q) {
+                        queues.push(handle);
+                    }
+                }
+            }
+        }
+        self.run_dispatches(queues);
+    }
+
     /// Tear down a connection: remove its consumers, requeue its unacked
     /// messages, delete its exclusive queues, redistribute work.
     pub fn disconnect(&self, conn: ConnectionId) {
         let core = &*self.core;
         let Some(entry) = core.connections.map.write().unwrap().remove(&conn) else { return };
         core.metrics.gauge("broker.connections").dec();
+        // Sink-backed sessions (reactor): mark the outbox dead and wake its
+        // owner so the event loop releases the fd — this is how heartbeat
+        // eviction and broker-initiated teardown route through the one
+        // event loop. Idempotent with the reactor's own teardown path.
+        entry.close_outbound();
         let tags: Vec<String> = entry.consumer_tags.lock().unwrap().drain().collect();
         {
             let mut ci = core.consumer_index.lock().unwrap();

@@ -82,7 +82,17 @@ impl Dispatcher {
                 let (queues, delivery_index, conns, mut tags) = st.for_dispatch();
                 let (assignments, qarc) = {
                     let Some(q) = queues.get_mut(qname) else { return pending };
-                    let assignments = q.assign_up_to(now, self.batch, || tags.next());
+                    // Per-connection backpressure: skip consumers whose
+                    // connection reports an over-cap outbox (reactor path).
+                    // Unknown connections pass — the send-failure branch
+                    // below already handles genuinely dead ones, and the
+                    // filter must not mask that requeue logic.
+                    let assignments = q.assign_up_to_filtered(
+                        now,
+                        self.batch,
+                        || tags.next(),
+                        |conn| conns.get(&conn).is_none_or(|e| e.ready()),
+                    );
                     let expired = q.drain_expired();
                     if !expired.is_empty() {
                         pending.extend(q.pend_dead(

@@ -26,7 +26,10 @@
 //! queue name → shard) so traffic to different queues never contends, and
 //! [`dispatch`] drains ready messages in batches, coalescing them into
 //! per-connection multi-delivery frames.
-//! [`server`] exposes the core over TCP and [`inproc`] embeds it
+//! [`server`] exposes the core over TCP — by default through the
+//! [`reactor`], a single epoll event loop serving every connection with
+//! per-connection outbox backpressure (`KIWI_NET=threads` selects the
+//! historical thread-per-connection front-end) — and [`inproc`] embeds it
 //! in-process (used by tests, benches and single-machine deployments —
 //! AiiDA's "individual laptop" scale).
 
@@ -38,14 +41,18 @@ pub mod inproc;
 pub mod persistence;
 pub mod protocol;
 pub mod queue;
+pub mod reactor;
 pub mod router;
 pub mod server;
 pub mod session;
 pub mod shard;
 
-pub use self::core::{BrokerConfig, BrokerCore, BrokerHandle, ConnectionId};
+pub use self::core::{
+    BrokerConfig, BrokerCore, BrokerHandle, ConnectionId, DeliverySink, Outbound,
+};
 pub use inproc::InprocBroker;
 pub use protocol::{
     ClientRequest, Delivery, EncodedProps, MessageProps, OverflowPolicy, QueueOptions, ServerMsg,
 };
-pub use server::BrokerServer;
+pub use reactor::ReactorOptions;
+pub use server::{BrokerServer, NetMode, NetOptions};

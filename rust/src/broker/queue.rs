@@ -403,7 +403,22 @@ impl Queue {
         &mut self,
         now: Instant,
         limit: usize,
+        next_tag: impl FnMut() -> u64,
+    ) -> Vec<Assignment> {
+        self.assign_up_to_filtered(now, limit, next_tag, |_| true)
+    }
+
+    /// Like [`Queue::assign_up_to`] with a connection-readiness filter:
+    /// consumers whose connection reports an over-cap outbox are skipped
+    /// (their prefetch capacity is left untouched, and the messages stay
+    /// ready) — per-connection output backpressure. A paused connection
+    /// never stalls assignment to ready consumers on other connections.
+    pub fn assign_up_to_filtered(
+        &mut self,
+        now: Instant,
+        limit: usize,
         mut next_tag: impl FnMut() -> u64,
+        conn_ready: impl Fn(u64) -> bool,
     ) -> Vec<Assignment> {
         let mut out = Vec::new();
         if self.consumers.is_empty() || limit == 0 {
@@ -415,7 +430,9 @@ impl Queue {
             let mut found = None;
             for i in 0..n {
                 let idx = (self.rr_cursor + i) % n;
-                if self.consumers[idx].has_capacity() {
+                if self.consumers[idx].has_capacity()
+                    && conn_ready(self.consumers[idx].connection)
+                {
                     found = Some(idx);
                     break;
                 }
@@ -848,6 +865,32 @@ mod tests {
         assert!(b.iter().all(|x| x.message.redelivered));
         let ids: Vec<u64> = b.iter().map(|x| x.message.msg_id).collect();
         assert_eq!(ids, (0..10).collect::<Vec<_>>(), "redelivery must preserve order");
+    }
+
+    #[test]
+    fn assign_filter_skips_unready_connections_without_stalling_others() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..6 {
+            put(&mut q, msg(i, 0), now);
+        }
+        // Two consumers on distinct connections; connection 7 is paused
+        // (over-cap outbox).
+        q.add_consumer(consumer("slow", 7, 0));
+        q.add_consumer(consumer("fast", 8, 0));
+        let mut tags = tagger();
+        let a = q.assign_up_to_filtered(now, 4, &mut tags, |conn| conn != 7);
+        assert_eq!(a.len(), 4, "the ready connection absorbs the whole batch");
+        assert!(a.iter().all(|x| x.connection == 8));
+        // Messages stay ready (not in-flight) for the paused connection.
+        assert_eq!(q.ready_len(), 2);
+        // Resume: the filter opens and the paused consumer gets its share.
+        let b = q.assign_up_to_filtered(now, 4, &mut tags, |_| true);
+        assert_eq!(b.len(), 2);
+        assert!(b.iter().any(|x| x.connection == 7));
+        // Nothing ready and nobody gains in-flight slots spuriously.
+        assert_eq!(q.ready_len(), 0);
+        assert_eq!(q.unacked_len(), 6);
     }
 
     #[test]

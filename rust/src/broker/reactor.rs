@@ -1,0 +1,1271 @@
+//! Event-driven broker networking: one epoll reactor thread serving every
+//! TCP connection.
+//!
+//! The thread-per-connection front-end (`broker::server` in `threads`
+//! mode) costs two OS threads and two stacks per client, which caps a
+//! broker at a few thousand connections. This module replaces it with a
+//! single reactor thread:
+//!
+//! * a nonblocking listener accepted in bursts,
+//! * readiness-driven reads decoded incrementally by [`FrameReader`]
+//!   (large payload bodies land in their final buffer — no copy),
+//! * a per-connection [`WriteQueue`] drained on writable edges, staging
+//!   small frames into one buffer and shipping large delivery sections
+//!   zero-copy by `Bytes` refcount,
+//! * per-connection backpressure: when a connection's pending output
+//!   exceeds `outbox_cap`, its [`ConnSink`] reports not-ready and the
+//!   dispatcher stops *assigning* deliveries to that connection's
+//!   consumers (messages stay in the ready queue for other consumers);
+//!   when the socket drains below half the cap the reactor calls
+//!   [`BrokerHandle::resume_deliveries`]. A slow consumer therefore
+//!   stalls only itself, never the broker or its queue peers.
+//!
+//! Everything that ends a connection — Goodbye, `Close`, protocol
+//! corruption, EOF, write error, heartbeat eviction, broker shutdown —
+//! funnels through one teardown path on the reactor thread, so fd
+//! deregistration and `disconnect` can never race.
+//!
+//! The epoll plumbing is hand-rolled over raw `syscall(2)` (no external
+//! crates, per the crate's no-dependency rule) and gated to
+//! linux/x86_64|aarch64; elsewhere [`supported`] returns false and the
+//! server falls back to the threads front-end.
+
+/// Default max epoll events handled per wakeup (`KIWI_EVENT_BATCH`).
+pub const DEFAULT_EVENT_BATCH: usize = 256;
+/// Default per-connection outbox soft cap in bytes (`KIWI_OUTBOX_CAP`).
+pub const DEFAULT_OUTBOX_CAP: usize = 1 << 20;
+
+/// Reactor tuning knobs (see `Config::net_options`).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorOptions {
+    /// Max epoll events handled per wakeup.
+    pub event_batch: usize,
+    /// Per-connection outbox soft cap in bytes; crossing it pauses
+    /// delivery assignment to that connection until it drains below half.
+    pub outbox_cap: usize,
+}
+
+impl Default for ReactorOptions {
+    fn default() -> Self {
+        ReactorOptions { event_batch: DEFAULT_EVENT_BATCH, outbox_cap: DEFAULT_OUTBOX_CAP }
+    }
+}
+
+/// Whether the epoll reactor can run on this target. When false the
+/// server silently uses the threads front-end regardless of `KIWI_NET`.
+pub fn supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use std::collections::{HashMap, VecDeque};
+    use std::io::{self, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use super::ReactorOptions;
+    use crate::broker::core::{BrokerHandle, ConnectionId, DeliverySink, Outbound};
+    use crate::broker::protocol::ServerMsg;
+    use crate::broker::session::{FrameOutcome, SessionState};
+    use crate::error::{Error, Result};
+    use crate::metrics::Counter;
+    use crate::wire::{Bytes, Frame, FrameReader};
+
+    /// Raw syscall shims for the handful of interfaces std does not
+    /// expose. Numbers are per-arch; everything funnels through glibc's
+    /// variadic `syscall(2)` so errno handling stays standard.
+    mod sys {
+        use std::io;
+        use std::os::fd::{FromRawFd, OwnedFd, RawFd};
+        use std::os::raw::{c_int, c_long};
+        use std::time::Duration;
+
+        extern "C" {
+            fn syscall(num: c_long, ...) -> c_long;
+        }
+
+        #[cfg(target_arch = "x86_64")]
+        mod nr {
+            use std::os::raw::c_long;
+            pub const EPOLL_CTL: c_long = 233;
+            pub const PPOLL: c_long = 271;
+            pub const EPOLL_PWAIT: c_long = 281;
+            pub const EPOLL_CREATE1: c_long = 291;
+            pub const PRLIMIT64: c_long = 302;
+        }
+        #[cfg(target_arch = "aarch64")]
+        mod nr {
+            use std::os::raw::c_long;
+            pub const EPOLL_CREATE1: c_long = 20;
+            pub const EPOLL_CTL: c_long = 21;
+            pub const EPOLL_PWAIT: c_long = 22;
+            pub const PPOLL: c_long = 73;
+            pub const PRLIMIT64: c_long = 261;
+        }
+
+        pub const EPOLLIN: u32 = 0x1;
+        pub const EPOLLOUT: u32 = 0x4;
+        pub const EPOLLERR: u32 = 0x8;
+        pub const EPOLLHUP: u32 = 0x10;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+        const EPOLL_CLOEXEC: c_long = 0o2000000;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+
+        /// Kernel epoll_event. Packed on x86_64 (the kernel ABI there),
+        /// naturally aligned on aarch64. Fields are only ever read by
+        /// value — never take a reference into a packed instance.
+        #[repr(C)]
+        #[cfg_attr(target_arch = "x86_64", repr(packed))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        pub fn epoll_create1() -> io::Result<OwnedFd> {
+            let r = unsafe { syscall(nr::EPOLL_CREATE1, EPOLL_CLOEXEC) };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(unsafe { OwnedFd::from_raw_fd(r as RawFd) })
+        }
+
+        pub fn epoll_ctl(
+            epfd: RawFd,
+            op: c_int,
+            fd: RawFd,
+            event: Option<EpollEvent>,
+        ) -> io::Result<()> {
+            let mut ev = event.unwrap_or(EpollEvent { events: 0, data: 0 });
+            let ptr: *mut EpollEvent = match event {
+                Some(_) => &mut ev,
+                None => std::ptr::null_mut(),
+            };
+            let r =
+                unsafe { syscall(nr::EPOLL_CTL, epfd as c_long, op as c_long, fd as c_long, ptr) };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Wait for events. Uses `epoll_pwait` (plain `epoll_wait` does
+        /// not exist on aarch64) with a null sigmask. EINTR reports as
+        /// zero events — the caller just loops.
+        pub fn epoll_pwait(
+            epfd: RawFd,
+            events: &mut [EpollEvent],
+            timeout: Duration,
+        ) -> io::Result<usize> {
+            let ms = timeout.as_millis().min(i32::MAX as u128) as c_long;
+            let r = unsafe {
+                syscall(
+                    nr::EPOLL_PWAIT,
+                    epfd as c_long,
+                    events.as_mut_ptr(),
+                    events.len() as c_long,
+                    ms,
+                    std::ptr::null::<u8>(),
+                    8 as c_long,
+                )
+            };
+            if r < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(e);
+            }
+            Ok(r as usize)
+        }
+
+        #[repr(C)]
+        struct PollFd {
+            fd: c_int,
+            events: i16,
+            revents: i16,
+        }
+        #[repr(C)]
+        struct Timespec {
+            tv_sec: i64,
+            tv_nsec: i64,
+        }
+        const POLLIN: i16 = 0x1;
+
+        /// Block until `fd` is readable or `timeout` elapses (via ppoll).
+        pub fn poll_readable(fd: RawFd, timeout: Duration) -> io::Result<bool> {
+            let mut pfd = PollFd { fd, events: POLLIN, revents: 0 };
+            let ts = Timespec {
+                tv_sec: timeout.as_secs().min(i64::MAX as u64) as i64,
+                tv_nsec: i64::from(timeout.subsec_nanos()),
+            };
+            let r = unsafe {
+                syscall(
+                    nr::PPOLL,
+                    &mut pfd as *mut PollFd,
+                    1 as c_long,
+                    &ts as *const Timespec,
+                    std::ptr::null::<u8>(),
+                    8 as c_long,
+                )
+            };
+            if r < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(false);
+                }
+                return Err(e);
+            }
+            Ok(r > 0 && (pfd.revents & POLLIN) != 0)
+        }
+
+        #[repr(C)]
+        struct RLimit64 {
+            rlim_cur: u64,
+            rlim_max: u64,
+        }
+        const RLIMIT_NOFILE: c_long = 7;
+
+        /// Raise this process's soft RLIMIT_NOFILE toward `want` (capped
+        /// at the hard limit). Returns the resulting soft limit.
+        pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+            let mut cur = RLimit64 { rlim_cur: 0, rlim_max: 0 };
+            let r = unsafe {
+                syscall(
+                    nr::PRLIMIT64,
+                    0 as c_long,
+                    RLIMIT_NOFILE,
+                    std::ptr::null::<RLimit64>(),
+                    &mut cur as *mut RLimit64,
+                )
+            };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let target = want.min(cur.rlim_max);
+            if target <= cur.rlim_cur {
+                return Ok(cur.rlim_cur);
+            }
+            let new = RLimit64 { rlim_cur: target, rlim_max: cur.rlim_max };
+            let r = unsafe {
+                syscall(
+                    nr::PRLIMIT64,
+                    0 as c_long,
+                    RLIMIT_NOFILE,
+                    &new as *const RLimit64,
+                    std::ptr::null_mut::<RLimit64>(),
+                )
+            };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(target)
+        }
+    }
+
+    /// Raise the soft fd limit toward `want` — connection-storm tooling
+    /// calls this before opening tens of thousands of sockets.
+    pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+        sys::raise_nofile_limit(want)
+    }
+
+    /// Block until the listener is readable or `timeout` elapses. The
+    /// threads-mode accept loop uses this instead of a fixed sleep so
+    /// accept latency is bounded by the kernel, not a poll interval.
+    pub fn listener_wait_readable(listener: &TcpListener, timeout: Duration) -> bool {
+        sys::poll_readable(listener.as_raw_fd(), timeout).unwrap_or(false)
+    }
+
+    /// Thin level-triggered epoll wrapper keyed by u64 tokens.
+    struct Poller {
+        ep: std::os::fd::OwnedFd,
+    }
+
+    fn interest(writable: bool) -> u32 {
+        sys::EPOLLIN | sys::EPOLLRDHUP | if writable { sys::EPOLLOUT } else { 0 }
+    }
+
+    impl Poller {
+        fn new() -> io::Result<Poller> {
+            Ok(Poller { ep: sys::epoll_create1()? })
+        }
+
+        fn add(&self, fd: std::os::fd::RawFd, token: u64, writable: bool) -> io::Result<()> {
+            sys::epoll_ctl(
+                self.ep.as_raw_fd(),
+                sys::EPOLL_CTL_ADD,
+                fd,
+                Some(sys::EpollEvent { events: interest(writable), data: token }),
+            )
+        }
+
+        fn modify(&self, fd: std::os::fd::RawFd, token: u64, writable: bool) -> io::Result<()> {
+            sys::epoll_ctl(
+                self.ep.as_raw_fd(),
+                sys::EPOLL_CTL_MOD,
+                fd,
+                Some(sys::EpollEvent { events: interest(writable), data: token }),
+            )
+        }
+
+        fn delete(&self, fd: std::os::fd::RawFd) {
+            let _ = sys::epoll_ctl(self.ep.as_raw_fd(), sys::EPOLL_CTL_DEL, fd, None);
+        }
+
+        fn wait(&self, events: &mut [sys::EpollEvent], timeout: Duration) -> io::Result<usize> {
+            sys::epoll_pwait(self.ep.as_raw_fd(), events, timeout)
+        }
+    }
+
+    /// Wakes the reactor from other threads (dispatcher shards, the
+    /// heartbeat monitor, shutdown) and carries the set of connections
+    /// with freshly-queued output ("dirty" tokens).
+    ///
+    /// The pipe is a nonblocking socketpair: a full pipe means a wakeup
+    /// is already pending, so dropped writes are harmless. Dirty-token
+    /// dedup lives in each sink's `enqueued` flag; the flag is cleared by
+    /// the reactor *before* it drains the sink's queue, so a concurrent
+    /// push always lands either in the drained batch or back on the
+    /// dirty list — never lost.
+    pub(super) struct Waker {
+        pipe: UnixStream,
+        dirty: Mutex<Vec<u64>>,
+    }
+
+    impl Waker {
+        fn notify(&self, token: u64, enqueued: &AtomicBool) {
+            if !enqueued.swap(true, Ordering::AcqRel) {
+                self.dirty.lock().unwrap().push(token);
+                self.ring();
+            }
+        }
+
+        pub(super) fn ring(&self) {
+            let _ = (&self.pipe).write(&[1u8]);
+        }
+
+        fn drain_dirty(&self) -> Vec<u64> {
+            std::mem::take(&mut *self.dirty.lock().unwrap())
+        }
+    }
+
+    fn waker_pair() -> io::Result<(Arc<Waker>, UnixStream)> {
+        let (w, r) = UnixStream::pair()?;
+        w.set_nonblocking(true)?;
+        r.set_nonblocking(true)?;
+        Ok((Arc::new(Waker { pipe: w, dirty: Mutex::new(Vec::new()) }), r))
+    }
+
+    struct SinkInner {
+        queue: VecDeque<ServerMsg>,
+        /// Estimated encoded bytes of `queue` (payload + small overhead).
+        est_bytes: usize,
+        closed: bool,
+    }
+
+    /// The reactor's [`DeliverySink`]: an unbounded-in-count,
+    /// byte-estimated outbox. Capacity is enforced upstream — `ready()`
+    /// turning false stops delivery *assignment*, so control messages
+    /// (replies, cancels) always fit and are never dropped.
+    ///
+    /// Leaf lock: `push`/`ready`/`close` are called under shard locks and
+    /// must not call back into the broker (see core's lock order).
+    pub(super) struct ConnSink {
+        token: u64,
+        cap: usize,
+        waker: Arc<Waker>,
+        inner: Mutex<SinkInner>,
+        /// Token-on-dirty-list dedup flag (see [`Waker`]).
+        enqueued: AtomicBool,
+        /// True while delivery assignment to this connection is paused.
+        paused: AtomicBool,
+        closed: AtomicBool,
+        pauses: Arc<Counter>,
+    }
+
+    /// Rough wire size of one outbound message: exact for the dominant
+    /// payload bytes (shared buffers, not copied here), a small constant
+    /// for envelope overhead. Only used for backpressure accounting.
+    fn estimate_msg_bytes(msg: &ServerMsg) -> usize {
+        match msg {
+            ServerMsg::Deliver(d) => 96 + d.body.len() + d.props.bytes().len(),
+            ServerMsg::DeliverBatch(ds) => {
+                32 + ds.iter().map(|d| 96 + d.body.len() + d.props.bytes().len()).sum::<usize>()
+            }
+            _ => 128,
+        }
+    }
+
+    impl ConnSink {
+        fn new(token: u64, cap: usize, waker: Arc<Waker>, pauses: Arc<Counter>) -> Arc<ConnSink> {
+            Arc::new(ConnSink {
+                token,
+                cap: cap.max(1),
+                waker,
+                inner: Mutex::new(SinkInner {
+                    queue: VecDeque::new(),
+                    est_bytes: 0,
+                    closed: false,
+                }),
+                enqueued: AtomicBool::new(false),
+                paused: AtomicBool::new(false),
+                closed: AtomicBool::new(false),
+                pauses,
+            })
+        }
+
+        /// Take everything queued, returning (messages, closed). Resets
+        /// the byte estimate; the reactor re-books those bytes in the
+        /// connection's [`WriteQueue`].
+        fn drain(&self) -> (Vec<ServerMsg>, bool) {
+            let mut g = self.inner.lock().unwrap();
+            g.est_bytes = 0;
+            (g.queue.drain(..).collect(), g.closed)
+        }
+
+        fn pending_est(&self) -> usize {
+            self.inner.lock().unwrap().est_bytes
+        }
+
+        fn set_paused(&self, v: bool) {
+            if v {
+                if !self.paused.swap(true, Ordering::AcqRel) {
+                    self.pauses.inc();
+                }
+            } else {
+                self.paused.store(false, Ordering::Release);
+            }
+        }
+
+        fn is_paused(&self) -> bool {
+            self.paused.load(Ordering::Acquire)
+        }
+
+        /// Mark closed without waking the reactor — used by the reactor's
+        /// own teardown, where a wakeup for a just-removed token would be
+        /// noise.
+        fn clear_enqueued(&self) {
+            self.enqueued.store(false, Ordering::Release);
+        }
+
+        fn close_silent(&self) {
+            self.inner.lock().unwrap().closed = true;
+            self.closed.store(true, Ordering::Release);
+        }
+    }
+
+    impl DeliverySink for ConnSink {
+        fn push(&self, msg: ServerMsg) -> bool {
+            let est = estimate_msg_bytes(&msg);
+            let should_pause = {
+                let mut g = self.inner.lock().unwrap();
+                if g.closed {
+                    return false;
+                }
+                g.est_bytes += est;
+                g.queue.push_back(msg);
+                g.est_bytes >= self.cap
+            };
+            if should_pause {
+                self.set_paused(true);
+            }
+            self.waker.notify(self.token, &self.enqueued);
+            true
+        }
+
+        fn ready(&self) -> bool {
+            !self.paused.load(Ordering::Acquire) && !self.closed.load(Ordering::Acquire)
+        }
+
+        fn close(&self) {
+            {
+                let mut g = self.inner.lock().unwrap();
+                if g.closed {
+                    return;
+                }
+                g.closed = true;
+            }
+            self.closed.store(true, Ordering::Release);
+            // Wake the reactor so it flushes what it can and drops the fd.
+            self.waker.notify(self.token, &self.enqueued);
+        }
+    }
+
+    /// Small frames staged into one contiguous buffer before this many
+    /// bytes force a chunk cut.
+    const STAGE_FLUSH_BYTES: usize = 32 * 1024;
+    /// Frame sections at or above this size ship as their own chunk —
+    /// a refcount clone of the publisher's buffer, no copy.
+    const SECTION_ZERO_COPY_MIN: usize = 1024;
+
+    /// Per-connection pending output: a chunk list written with plain
+    /// nonblocking `write(2)`. Small frames coalesce into staged buffers
+    /// (one syscall per burst); large delivery bodies are appended as
+    /// shared [`Bytes`] views of the publisher's original encode.
+    pub(super) struct WriteQueue {
+        chunks: VecDeque<Bytes>,
+        /// Bytes of `chunks.front()` already written.
+        head_pos: usize,
+        staged: Vec<u8>,
+        /// Total unwritten bytes (staged + chunked).
+        queued: usize,
+    }
+
+    impl WriteQueue {
+        fn new() -> WriteQueue {
+            WriteQueue { chunks: VecDeque::new(), head_pos: 0, staged: Vec::new(), queued: 0 }
+        }
+
+        fn queued_bytes(&self) -> usize {
+            self.queued
+        }
+
+        fn is_empty(&self) -> bool {
+            self.queued == 0
+        }
+
+        fn push_frame(&mut self, frame: &Frame) {
+            let len = frame.wire_len();
+            let mut header = [0u8; 5];
+            header[..4].copy_from_slice(&(len as u32).to_le_bytes());
+            header[4] = frame.frame_type as u8;
+            self.staged.extend_from_slice(&header);
+            self.staged.extend_from_slice(&frame.payload);
+            for s in &frame.sections {
+                if s.len() >= SECTION_ZERO_COPY_MIN {
+                    self.flush_staged();
+                    self.chunks.push_back(s.clone());
+                } else {
+                    self.staged.extend_from_slice(s);
+                }
+            }
+            if self.staged.len() >= STAGE_FLUSH_BYTES {
+                self.flush_staged();
+            }
+            self.queued += 5 + len;
+        }
+
+        fn flush_staged(&mut self) {
+            if !self.staged.is_empty() {
+                self.chunks.push_back(Bytes::from_vec(std::mem::take(&mut self.staged)));
+            }
+        }
+
+        /// Write until drained or the socket would block. Returns true
+        /// when everything queued has been written.
+        fn write_to<W: Write>(&mut self, mut w: W) -> io::Result<bool> {
+            self.flush_staged();
+            loop {
+                let (n, front_len) = {
+                    let Some(front) = self.chunks.front() else { return Ok(true) };
+                    match w.write(&front[self.head_pos..]) {
+                        Ok(0) => {
+                            return Err(io::Error::new(
+                                io::ErrorKind::WriteZero,
+                                "connection write returned zero",
+                            ))
+                        }
+                        Ok(n) => (n, front.len()),
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(e) => return Err(e),
+                    }
+                };
+                self.head_pos += n;
+                self.queued -= n;
+                if self.head_pos == front_len {
+                    self.chunks.pop_front();
+                    self.head_pos = 0;
+                }
+            }
+        }
+    }
+
+    const LISTENER_TOKEN: u64 = 0;
+    const WAKE_TOKEN: u64 = 1;
+    const FIRST_CONN_TOKEN: u64 = 2;
+    /// Shared read buffer for small frames (large payloads bypass it via
+    /// `FrameReader::direct_buf`).
+    const SCRATCH_BYTES: usize = 64 * 1024;
+    /// Max read() calls per connection per readiness event — bounds how
+    /// long one firehose connection can hog the loop.
+    const READ_BURST: usize = 16;
+    /// Max accepts per listener readiness event.
+    const ACCEPT_BURST: usize = 256;
+    /// Upper bound on one epoll wait (keeps the stop flag responsive).
+    const MAX_POLL: Duration = Duration::from_millis(250);
+
+    struct Conn {
+        stream: TcpStream,
+        session: SessionState,
+        sink: Arc<ConnSink>,
+        reader: FrameReader,
+        out: WriteQueue,
+        /// Whether EPOLLOUT is currently part of this fd's interest set.
+        want_write: bool,
+        /// Next server->client heartbeat due time (None until Hello
+        /// negotiates an interval).
+        next_hb: Option<Instant>,
+        /// End-of-session seen; flush `out`, then tear down.
+        closing: bool,
+        peer: String,
+    }
+
+    struct Reactor {
+        broker: BrokerHandle,
+        poller: Poller,
+        listener: TcpListener,
+        wake_rx: UnixStream,
+        waker: Arc<Waker>,
+        stop: Arc<AtomicBool>,
+        conns: HashMap<u64, Conn>,
+        next_token: u64,
+        opts: ReactorOptions,
+        scratch: Vec<u8>,
+        next_hb_scan: Instant,
+        ctr_accepts: Arc<Counter>,
+        ctr_pauses: Arc<Counter>,
+    }
+
+    impl Reactor {
+        fn run(&mut self) {
+            let nevents = self.opts.event_batch.clamp(8, 4096);
+            let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; nevents];
+            while !self.stop.load(Ordering::Acquire) {
+                let now = Instant::now();
+                let timeout = if now >= self.next_hb_scan {
+                    Duration::from_millis(1)
+                } else {
+                    (self.next_hb_scan - now).min(MAX_POLL)
+                };
+                let n = match self.poller.wait(&mut events, timeout) {
+                    Ok(n) => n,
+                    Err(e) => {
+                        log::error!("reactor: epoll wait failed: {e}; shutting down front-end");
+                        break;
+                    }
+                };
+                for ev in events.iter().take(n) {
+                    // Copy fields out by value (the struct is packed on
+                    // x86_64; references into it are not allowed).
+                    let token = ev.data;
+                    let bits = ev.events;
+                    match token {
+                        LISTENER_TOKEN => self.accept_ready(),
+                        WAKE_TOKEN => self.drain_wake_pipe(),
+                        _ => {
+                            if bits & sys::EPOLLOUT != 0 {
+                                self.write_conn(token);
+                            }
+                            if bits
+                                & (sys::EPOLLIN | sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP)
+                                != 0
+                            {
+                                self.read_ready(token);
+                            }
+                        }
+                    }
+                }
+                for token in self.waker.drain_dirty() {
+                    self.flush_outbound(token);
+                }
+                self.tick_heartbeats();
+            }
+            self.shutdown_all();
+        }
+
+        fn accept_ready(&mut self) {
+            for _ in 0..ACCEPT_BURST {
+                match self.listener.accept() {
+                    Ok((stream, addr)) => self.install_conn(stream, addr.to_string()),
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        // EMFILE and friends: back off briefly so a fd
+                        // exhaustion storm cannot hot-spin the loop.
+                        log::warn!("reactor: accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(5));
+                        return;
+                    }
+                }
+            }
+        }
+
+        fn install_conn(&mut self, stream: TcpStream, peer: String) {
+            if let Err(e) = stream.set_nonblocking(true) {
+                log::warn!("reactor: {peer}: set_nonblocking failed: {e}");
+                return;
+            }
+            // Delivery batches are already coalesced into single writes;
+            // Nagle on top of that only adds latency.
+            let _ = stream.set_nodelay(true);
+            let token = self.next_token;
+            self.next_token += 1;
+            // Register with epoll *before* creating broker state so a
+            // registration failure leaves nothing to unwind.
+            if let Err(e) = self.poller.add(stream.as_raw_fd(), token, false) {
+                log::warn!("reactor: {peer}: epoll register failed: {e}");
+                return;
+            }
+            let sink = ConnSink::new(
+                token,
+                self.opts.outbox_cap,
+                Arc::clone(&self.waker),
+                Arc::clone(&self.ctr_pauses),
+            );
+            let dyn_sink: Arc<dyn DeliverySink> = sink.clone();
+            let session = SessionState::open(&self.broker, Outbound::Sink(dyn_sink));
+            self.ctr_accepts.inc();
+            self.conns.insert(
+                token,
+                Conn {
+                    stream,
+                    session,
+                    sink,
+                    reader: FrameReader::new(),
+                    out: WriteQueue::new(),
+                    want_write: false,
+                    next_hb: None,
+                    closing: false,
+                    peer,
+                },
+            );
+        }
+
+        fn read_ready(&mut self, token: u64) {
+            let broker = self.broker.clone();
+            let mut dead = false;
+            let mut end = false;
+            {
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                if conn.closing {
+                    // Draining our side; ignore further input.
+                    return;
+                }
+                'burst: for _ in 0..READ_BURST {
+                    // Large payloads read straight into the frame's final
+                    // buffer; everything else goes through scratch.
+                    let (r, used_direct, want) = match conn.reader.direct_buf() {
+                        Some(dst) => {
+                            let want = dst.len();
+                            ((&conn.stream).read(dst), true, want)
+                        }
+                        None => {
+                            ((&conn.stream).read(&mut self.scratch[..]), false, self.scratch.len())
+                        }
+                    };
+                    match r {
+                        Ok(0) => {
+                            dead = true;
+                            break 'burst;
+                        }
+                        Ok(n) => {
+                            if used_direct {
+                                conn.reader.advance_direct(n);
+                            } else if let Err(e) = conn.reader.feed(&self.scratch[..n]) {
+                                log::warn!("reactor: {}: protocol error: {e}", conn.peer);
+                                dead = true;
+                                break 'burst;
+                            }
+                            while let Some(frame) = conn.reader.next_frame() {
+                                if conn.session.on_frame(&broker, &frame) == FrameOutcome::End {
+                                    end = true;
+                                    break;
+                                }
+                            }
+                            if end || n < want {
+                                break 'burst;
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break 'burst,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            log::debug!("reactor: {}: read error: {e}", conn.peer);
+                            dead = true;
+                            break 'burst;
+                        }
+                    }
+                }
+            }
+            if dead {
+                self.teardown(token);
+            } else if end {
+                self.begin_close(token);
+            }
+        }
+
+        /// Orderly end (Goodbye / Close / corruption): flush the sink
+        /// into the write queue, stop reading, tear down once drained —
+        /// so the Close reply reaches the wire before the fd drops.
+        fn begin_close(&mut self, token: u64) {
+            self.encode_pending(token);
+            match self.conns.get_mut(&token) {
+                Some(conn) => conn.closing = true,
+                None => return,
+            }
+            self.write_conn(token);
+        }
+
+        /// Move everything queued in the connection's sink into its write
+        /// queue. Returns true when the sink was closed by the broker
+        /// side. Clears the dirty-dedup flag *before* draining so a
+        /// concurrent push cannot be lost.
+        fn encode_pending(&mut self, token: u64) -> bool {
+            let Some(conn) = self.conns.get_mut(&token) else { return false };
+            conn.sink.clear_enqueued();
+            let (msgs, closed) = conn.sink.drain();
+            for m in &msgs {
+                conn.out.push_frame(&m.to_frame());
+            }
+            closed
+        }
+
+        /// Dirty-token handler: encode freshly-queued messages and write.
+        fn flush_outbound(&mut self, token: u64) {
+            if !self.conns.contains_key(&token) {
+                // Teardown raced the wakeup; nothing left to flush.
+                return;
+            }
+            let closed = self.encode_pending(token);
+            let already_closing = self.conns.get(&token).is_some_and(|c| c.closing);
+            if closed && !already_closing {
+                // Broker-initiated eviction (heartbeat death, duplicate
+                // client, shutdown): one best-effort flush, then drop.
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.closing = true;
+                }
+                self.write_conn(token);
+                if self.conns.contains_key(&token) {
+                    self.teardown(token);
+                }
+            } else {
+                self.write_conn(token);
+            }
+        }
+
+        /// Drain the write queue into the socket; manage EPOLLOUT
+        /// interest, closing-drain teardown and backpressure transitions.
+        fn write_conn(&mut self, token: u64) {
+            enum After {
+                None,
+                Teardown,
+                Resume(ConnectionId),
+            }
+            let mut after = After::None;
+            {
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                match conn.out.write_to(&conn.stream) {
+                    Ok(drained) => {
+                        let want_write = !drained;
+                        if want_write != conn.want_write {
+                            // Edge-manage EPOLLOUT: only subscribed while
+                            // output is actually pending, so an idle
+                            // writable socket never spins the loop.
+                            match self.poller.modify(conn.stream.as_raw_fd(), token, want_write) {
+                                Ok(()) => conn.want_write = want_write,
+                                Err(e) => {
+                                    log::warn!("reactor: {}: epoll modify failed: {e}", conn.peer);
+                                    after = After::Teardown;
+                                }
+                            }
+                        }
+                        if matches!(after, After::None) {
+                            if drained && conn.closing {
+                                after = After::Teardown;
+                            } else if !conn.closing {
+                                let backlog = conn.out.queued_bytes() + conn.sink.pending_est();
+                                if backlog >= self.opts.outbox_cap {
+                                    conn.sink.set_paused(true);
+                                } else if conn.sink.is_paused()
+                                    && backlog <= self.opts.outbox_cap / 2
+                                {
+                                    // Low-water resume: re-run dispatch for
+                                    // this connection's queues now that the
+                                    // socket caught up.
+                                    conn.sink.set_paused(false);
+                                    after = After::Resume(conn.session.conn());
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        log::debug!("reactor: {}: write error: {e}", conn.peer);
+                        after = After::Teardown;
+                    }
+                }
+            }
+            match after {
+                After::None => {}
+                After::Teardown => self.teardown(token),
+                After::Resume(conn_id) => self.broker.resume_deliveries(conn_id),
+            }
+        }
+
+        /// The single exit path: deregister, close the sink, disconnect
+        /// the broker side (requeues unacked), drop the fd.
+        fn teardown(&mut self, token: u64) {
+            let Some(conn) = self.conns.remove(&token) else { return };
+            self.poller.delete(conn.stream.as_raw_fd());
+            conn.sink.close_silent();
+            conn.session.finish(&self.broker);
+            // `conn.stream` drops here — the fd closes after leaving the
+            // epoll set, never before.
+        }
+
+        /// Emit server->client heartbeats at half each connection's
+        /// negotiated interval. Unconditional emission is always safe:
+        /// clients only *require* traffic, they never penalise extra.
+        fn tick_heartbeats(&mut self) {
+            let now = Instant::now();
+            if now < self.next_hb_scan {
+                return;
+            }
+            let mut due: Vec<u64> = Vec::new();
+            let mut min_half: Option<u64> = None;
+            for (token, conn) in self.conns.iter_mut() {
+                if conn.closing {
+                    continue;
+                }
+                let hb = conn.session.heartbeat_ms();
+                if hb == 0 {
+                    conn.next_hb = None;
+                    continue;
+                }
+                let half = (hb / 2).max(1);
+                min_half = Some(min_half.map_or(half, |m| m.min(half)));
+                match conn.next_hb {
+                    None => conn.next_hb = Some(now + Duration::from_millis(half)),
+                    Some(t) if now >= t => {
+                        conn.out.push_frame(&Frame::heartbeat());
+                        conn.next_hb = Some(now + Duration::from_millis(half));
+                        due.push(*token);
+                    }
+                    Some(_) => {}
+                }
+            }
+            for token in due {
+                self.write_conn(token);
+            }
+            // Scan again at a quarter of the tightest interval (bounded)
+            // so a due heartbeat is never more than half a period late.
+            self.next_hb_scan = now
+                + min_half.map_or(MAX_POLL, |h| {
+                    Duration::from_millis(h / 2)
+                        .clamp(Duration::from_millis(5), Duration::from_secs(1))
+                });
+        }
+
+        fn drain_wake_pipe(&mut self) {
+            let mut buf = [0u8; 256];
+            loop {
+                match (&self.wake_rx).read(&mut buf) {
+                    Ok(0) => return,
+                    Ok(_) => continue,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return,
+                }
+            }
+        }
+
+        fn shutdown_all(&mut self) {
+            let tokens: Vec<u64> = self.conns.keys().copied().collect();
+            for token in tokens {
+                self.teardown(token);
+            }
+        }
+    }
+
+    /// Handle to a running reactor. The server sets the shared stop flag,
+    /// calls [`ReactorHandle::wake`], then [`ReactorHandle::join`].
+    pub struct ReactorHandle {
+        waker: Arc<Waker>,
+        thread: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl ReactorHandle {
+        pub(crate) fn wake(&self) {
+            self.waker.ring();
+        }
+
+        pub(crate) fn join(&mut self) {
+            if let Some(t) = self.thread.take() {
+                t.join().ok();
+            }
+        }
+    }
+
+    /// Start the reactor thread serving `listener` for `broker`.
+    pub fn spawn(
+        broker: BrokerHandle,
+        listener: TcpListener,
+        opts: ReactorOptions,
+        stop: Arc<AtomicBool>,
+    ) -> Result<ReactorHandle> {
+        listener.set_nonblocking(true).map_err(Error::Io)?;
+        let poller = Poller::new().map_err(Error::Io)?;
+        let (waker, wake_rx) = waker_pair().map_err(Error::Io)?;
+        poller.add(listener.as_raw_fd(), LISTENER_TOKEN, false).map_err(Error::Io)?;
+        poller.add(wake_rx.as_raw_fd(), WAKE_TOKEN, false).map_err(Error::Io)?;
+        let ctr_accepts = broker.metrics().counter("broker.reactor.accepts");
+        let ctr_pauses = broker.metrics().counter("broker.reactor.backpressure_pauses_total");
+        let mut reactor = Reactor {
+            broker,
+            poller,
+            listener,
+            wake_rx,
+            waker: Arc::clone(&waker),
+            stop,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            opts,
+            scratch: vec![0u8; SCRATCH_BYTES],
+            next_hb_scan: Instant::now(),
+            ctr_accepts,
+            ctr_pauses,
+        };
+        let thread = std::thread::Builder::new()
+            .name("kiwi-broker-reactor".into())
+            .spawn(move || reactor.run())
+            .map_err(Error::Io)?;
+        Ok(ReactorHandle { waker, thread: Some(thread) })
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::broker::protocol::{ClientRequest, QueueOptions};
+        use crate::wire::{read_frame, write_frame, FrameType, Value};
+
+        #[test]
+        fn write_queue_ships_large_sections_zero_copy() {
+            let body = Bytes::from_vec(vec![7u8; 8 * 1024]);
+            let frame = Frame::data_with_sections(
+                &Value::map([("len", Value::from(body.len()))]),
+                vec![body.clone()],
+            );
+            let mut wq = WriteQueue::new();
+            wq.push_frame(&frame);
+            assert_eq!(wq.queued_bytes(), 5 + frame.wire_len());
+            // The big section must be a refcount clone, not a copy.
+            assert!(
+                wq.chunks.iter().any(|c| Bytes::same_buffer(c, &body)),
+                "large section should share the publisher's buffer"
+            );
+            let mut wire = Vec::new();
+            assert!(wq.write_to(&mut wire).unwrap());
+            assert!(wq.is_empty());
+            let mut expect = Vec::new();
+            write_frame(&mut expect, &frame).unwrap();
+            assert_eq!(wire, expect);
+        }
+
+        #[test]
+        fn write_queue_coalesces_small_frames_and_tracks_bytes() {
+            let mut wq = WriteQueue::new();
+            let frames: Vec<Frame> =
+                (0..10).map(|i| Frame::data(&Value::str(format!("m{i}")))).collect();
+            let mut expect = Vec::new();
+            for f in &frames {
+                wq.push_frame(f);
+                write_frame(&mut expect, f).unwrap();
+            }
+            assert_eq!(wq.queued_bytes(), expect.len());
+            // All ten frames staged into one contiguous chunk.
+            wq.flush_staged();
+            assert_eq!(wq.chunks.len(), 1);
+            let mut wire = Vec::new();
+            assert!(wq.write_to(&mut wire).unwrap());
+            assert_eq!(wire, expect);
+            assert_eq!(wq.queued_bytes(), 0);
+        }
+
+        #[test]
+        fn conn_sink_pauses_dedups_and_closes() {
+            let (waker, _rx) = waker_pair().unwrap();
+            let pauses = crate::metrics::Registry::new().counter("t.pauses");
+            let sink = ConnSink::new(5, 256, Arc::clone(&waker), Arc::clone(&pauses));
+            assert!(sink.ready());
+            let msg = || ServerMsg::Ok { req_id: 1, reply: Value::Null };
+            assert!(sink.push(msg()));
+            assert!(sink.push(msg()));
+            // Two pushes, one dirty entry (the dedup flag).
+            assert_eq!(waker.drain_dirty(), vec![5]);
+            assert!(waker.drain_dirty().is_empty());
+            // 128 bytes estimated per control message: the third crosses
+            // the 256-byte cap and pauses the sink.
+            assert!(sink.push(msg()));
+            assert!(!sink.ready());
+            assert_eq!(pauses.get(), 1);
+            let (msgs, closed) = sink.drain();
+            assert_eq!(msgs.len(), 3);
+            assert!(!closed);
+            sink.set_paused(false);
+            assert!(sink.ready());
+            sink.close();
+            assert!(!sink.ready());
+            assert!(!sink.push(msg()), "push after close must fail");
+        }
+
+        #[test]
+        fn poller_reports_readable() {
+            let poller = Poller::new().unwrap();
+            let (a, b) = UnixStream::pair().unwrap();
+            a.set_nonblocking(true).unwrap();
+            poller.add(a.as_raw_fd(), 42, false).unwrap();
+            let mut events = [sys::EpollEvent { events: 0, data: 0 }; 4];
+            // Nothing readable yet.
+            assert_eq!(poller.wait(&mut events, Duration::from_millis(10)).unwrap(), 0);
+            (&b).write_all(&[1u8]).unwrap();
+            let n = poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+            assert_eq!(n, 1);
+            let token = events[0].data;
+            let bits = events[0].events;
+            assert_eq!(token, 42);
+            assert_ne!(bits & sys::EPOLLIN, 0);
+            poller.delete(a.as_raw_fd());
+        }
+
+        #[test]
+        fn raise_nofile_limit_is_monotone() {
+            let got = raise_nofile_limit(1024).unwrap();
+            assert!(got >= 1024 || got > 0, "soft limit should be positive");
+        }
+
+        /// Full protocol conversation against a live reactor over real
+        /// TCP: hello, declare, publish, consume, delivery, close — then
+        /// a clean shutdown with no connections left behind.
+        #[test]
+        fn reactor_serves_a_raw_tcp_conversation() {
+            let broker = BrokerHandle::new();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let stop = Arc::new(AtomicBool::new(false));
+            let mut handle =
+                spawn(broker.clone(), listener, ReactorOptions::default(), Arc::clone(&stop))
+                    .unwrap();
+
+            let client = TcpStream::connect(addr).unwrap();
+            client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+            fn send(client: &TcpStream, req: &ClientRequest, id: u64) {
+                let mut w = client;
+                write_frame(&mut w, &req.to_frame(id)).unwrap();
+            }
+            fn recv_data(client: &TcpStream) -> ServerMsg {
+                let mut r = client;
+                loop {
+                    let f = read_frame(&mut r).unwrap();
+                    if f.frame_type == FrameType::Data {
+                        return ServerMsg::from_frame(&f).unwrap();
+                    }
+                }
+            }
+
+            send(&client, &ClientRequest::Hello { client_id: "rx".into(), heartbeat_ms: 0 }, 1);
+            assert!(matches!(recv_data(&client), ServerMsg::Ok { req_id: 1, .. }));
+            send(
+                &client,
+                &ClientRequest::QueueDeclare {
+                    queue: "q".into(),
+                    options: QueueOptions::default(),
+                },
+                2,
+            );
+            assert!(matches!(recv_data(&client), ServerMsg::Ok { req_id: 2, .. }));
+            send(
+                &client,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "q".into(),
+                    body: Bytes::encode(&Value::str("payload")),
+                    props: Default::default(),
+                    mandatory: true,
+                },
+                3,
+            );
+            assert!(matches!(recv_data(&client), ServerMsg::Ok { req_id: 3, .. }));
+            send(
+                &client,
+                &ClientRequest::Consume {
+                    queue: "q".into(),
+                    consumer_tag: "c".into(),
+                    prefetch: 0,
+                },
+                4,
+            );
+            assert!(matches!(recv_data(&client), ServerMsg::Ok { req_id: 4, .. }));
+            match recv_data(&client) {
+                ServerMsg::Deliver(d) => {
+                    assert_eq!(d.body.decode().unwrap(), Value::str("payload"))
+                }
+                other => panic!("expected delivery, got {other:?}"),
+            }
+            send(&client, &ClientRequest::Close, 5);
+            assert!(matches!(recv_data(&client), ServerMsg::Ok { req_id: 5, .. }));
+
+            // The reactor tears the connection down after Close.
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while broker.metrics().gauge("broker.connections").get() != 0 {
+                assert!(Instant::now() < deadline, "connection should be torn down");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            stop.store(true, Ordering::Release);
+            handle.wake();
+            handle.join();
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub use imp::{listener_wait_readable, raise_nofile_limit, spawn, ReactorHandle};
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod fallback {
+    use std::io;
+    use std::net::TcpListener;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::ReactorOptions;
+    use crate::broker::core::BrokerHandle;
+    use crate::error::{Error, Result};
+
+    /// Stub handle for unsupported targets (never constructed).
+    pub struct ReactorHandle;
+
+    impl ReactorHandle {
+        pub(crate) fn wake(&self) {}
+        pub(crate) fn join(&mut self) {}
+    }
+
+    pub fn spawn(
+        _broker: BrokerHandle,
+        _listener: TcpListener,
+        _opts: ReactorOptions,
+        _stop: Arc<AtomicBool>,
+    ) -> Result<ReactorHandle> {
+        Err(Error::Config(
+            "epoll reactor requires linux on x86_64/aarch64; use KIWI_NET=threads".into(),
+        ))
+    }
+
+    pub fn raise_nofile_limit(_want: u64) -> io::Result<u64> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "prlimit64 unavailable on this platform"))
+    }
+
+    pub fn listener_wait_readable(_listener: &TcpListener, timeout: Duration) -> bool {
+        std::thread::sleep(timeout.min(Duration::from_millis(10)));
+        false
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub use fallback::{listener_wait_readable, raise_nofile_limit, spawn, ReactorHandle};

@@ -1,4 +1,11 @@
-//! TCP front-end: accepts connections and runs a [`session`] per client.
+//! TCP front-end for the broker, in one of two modes:
+//!
+//! * [`NetMode::Reactor`] (default where supported): a single epoll event
+//!   loop (`broker::reactor`) serves every connection — O(1) threads for
+//!   the whole front-end, per-connection outbox backpressure.
+//! * [`NetMode::Threads`] (`KIWI_NET=threads`, and the automatic fallback
+//!   on targets without the reactor): the historical pair of blocking
+//!   reader/writer threads per client.
 
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -8,36 +15,133 @@ use std::time::Duration;
 
 use crate::broker::core::BrokerHandle;
 use crate::broker::heartbeat::HeartbeatMonitor;
+use crate::broker::reactor::{self, ReactorHandle, ReactorOptions};
 use crate::broker::session::serve_link;
 use crate::error::Result;
 use crate::transport::link::TcpLink;
 use crate::transport::Link;
 
-/// A running broker server: TCP acceptor + heartbeat monitor.
+/// Which networking front-end serves TCP clients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetMode {
+    /// Single epoll reactor thread (default where supported).
+    Reactor,
+    /// Blocking reader + writer thread pair per connection.
+    Threads,
+}
+
+/// Front-end selection plus reactor tuning, resolved from the
+/// environment by [`NetOptions::from_env`] or built explicitly.
+#[derive(Clone, Copy, Debug)]
+pub struct NetOptions {
+    pub mode: NetMode,
+    pub reactor: ReactorOptions,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            mode: if reactor::supported() { NetMode::Reactor } else { NetMode::Threads },
+            reactor: ReactorOptions::default(),
+        }
+    }
+}
+
+impl NetOptions {
+    /// Resolve from `KIWI_NET` / `KIWI_EVENT_BATCH` / `KIWI_OUTBOX_CAP`.
+    /// Unknown or unsupported values fall back to the default mode.
+    pub fn from_env() -> NetOptions {
+        let mut opts = NetOptions::default();
+        if let Ok(v) = std::env::var("KIWI_NET") {
+            match v.as_str() {
+                "threads" => opts.mode = NetMode::Threads,
+                "reactor" if reactor::supported() => opts.mode = NetMode::Reactor,
+                "reactor" => {
+                    log::warn!("KIWI_NET=reactor unsupported on this target; using threads");
+                    opts.mode = NetMode::Threads;
+                }
+                other => log::warn!("ignoring unknown KIWI_NET={other}"),
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_EVENT_BATCH") {
+            if let Ok(n) = v.parse::<usize>() {
+                opts.reactor.event_batch = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_OUTBOX_CAP") {
+            if let Ok(n) = v.parse::<usize>() {
+                opts.reactor.outbox_cap = n.max(1);
+            }
+        }
+        opts
+    }
+}
+
+/// The running front-end's threads and teardown state.
+enum FrontEnd {
+    Threads {
+        acceptor: Option<JoinHandle<()>>,
+        /// Live session links, so shutdown can sever clients that have
+        /// not disconnected themselves (sessions exit on a closed link).
+        links: Arc<std::sync::Mutex<Vec<std::sync::Weak<dyn Link>>>>,
+    },
+    Reactor { handle: Option<ReactorHandle> },
+}
+
+/// A running broker server: network front-end + heartbeat monitor.
 pub struct BrokerServer {
     broker: BrokerHandle,
     addr: SocketAddr,
+    mode: NetMode,
     stop: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
-    /// Live session links, so shutdown can sever clients that have not
-    /// disconnected themselves (sessions exit on a closed link).
-    links: Arc<std::sync::Mutex<Vec<std::sync::Weak<dyn Link>>>>,
+    front: FrontEnd,
     _monitor: HeartbeatMonitor,
 }
 
 impl BrokerServer {
-    /// Bind and start serving. Use port 0 for an ephemeral port (tests).
+    /// Bind and start serving with environment-resolved networking
+    /// options. Use port 0 for an ephemeral port (tests).
     pub fn start(broker: BrokerHandle, bind: &str) -> Result<Self> {
+        Self::start_with(broker, bind, NetOptions::from_env())
+    }
+
+    /// Bind and start serving with explicit networking options.
+    pub fn start_with(broker: BrokerHandle, bind: &str, opts: NetOptions) -> Result<Self> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let broker2 = broker.clone();
-        let links: Arc<std::sync::Mutex<Vec<std::sync::Weak<dyn Link>>>> =
-            Arc::new(std::sync::Mutex::new(Vec::new()));
-        let links2 = Arc::clone(&links);
-        let acceptor = std::thread::Builder::new()
+        let front = match opts.mode {
+            NetMode::Reactor => {
+                let handle =
+                    reactor::spawn(broker.clone(), listener, opts.reactor, Arc::clone(&stop))?;
+                FrontEnd::Reactor { handle: Some(handle) }
+            }
+            NetMode::Threads => FrontEnd::Threads {
+                acceptor: None,
+                links: Arc::new(std::sync::Mutex::new(Vec::new())),
+            },
+        };
+        let mut server = BrokerServer {
+            broker: broker.clone(),
+            addr,
+            mode: opts.mode,
+            stop,
+            front,
+            _monitor: HeartbeatMonitor::spawn(broker, Duration::from_millis(100)),
+        };
+        if opts.mode == NetMode::Threads {
+            server.start_threads_acceptor(listener)?;
+        }
+        Ok(server)
+    }
+
+    fn start_threads_acceptor(&mut self, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        let stop2 = Arc::clone(&self.stop);
+        let broker2 = self.broker.clone();
+        let FrontEnd::Threads { acceptor, links } = &mut self.front else { unreachable!() };
+        let links2 = Arc::clone(links);
+        let handle = std::thread::Builder::new()
             .name("kiwi-broker-acceptor".into())
             .spawn(move || {
                 let mut sessions: Vec<JoinHandle<()>> = Vec::new();
@@ -46,6 +150,7 @@ impl BrokerServer {
                         Ok((stream, peer)) => {
                             log::info!("broker: accepted {peer}");
                             stream.set_nonblocking(false).ok();
+                            stream.set_nodelay(true).ok();
                             match TcpLink::new(stream) {
                                 Ok(link) => {
                                     let b = broker2.clone();
@@ -67,7 +172,13 @@ impl BrokerServer {
                             }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(10));
+                            // Kernel-reported readiness instead of a fixed
+                            // sleep: accepts land immediately while the
+                            // stop flag is still polled on a bound.
+                            reactor::listener_wait_readable(
+                                &listener,
+                                Duration::from_millis(100),
+                            );
                         }
                         Err(e) => {
                             log::error!("broker: accept error: {e}");
@@ -87,13 +198,18 @@ impl BrokerServer {
                 }
             })
             .expect("spawn acceptor");
-        let monitor = HeartbeatMonitor::spawn(broker.clone(), Duration::from_millis(100));
-        Ok(BrokerServer { broker, addr, stop, acceptor: Some(acceptor), links, _monitor: monitor })
+        *acceptor = Some(handle);
+        Ok(())
     }
 
     /// Address the server is listening on (resolves port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Which front-end is serving clients.
+    pub fn net_mode(&self) -> NetMode {
+        self.mode
     }
 
     /// The underlying broker (for embedding / inspection).
@@ -108,24 +224,41 @@ impl BrokerServer {
 
     fn stop_internal(&mut self) {
         self.broker.sync().ok();
-        self.stop.store(true, Ordering::Relaxed);
-        // Sever clients immediately (the acceptor also does this on its
-        // way out; doing it here makes shutdown prompt even while the
-        // acceptor sleeps between polls).
-        for weak in self.links.lock().unwrap().drain(..) {
-            if let Some(link) = weak.upgrade() {
-                link.close();
+        self.stop.store(true, Ordering::Release);
+        match &mut self.front {
+            FrontEnd::Threads { acceptor, links } => {
+                // Sever clients immediately (the acceptor also does this
+                // on its way out; doing it here makes shutdown prompt
+                // even while the acceptor waits for readiness).
+                for weak in links.lock().unwrap().drain(..) {
+                    if let Some(link) = weak.upgrade() {
+                        link.close();
+                    }
+                }
+                if let Some(h) = acceptor.take() {
+                    h.join().ok();
+                }
+            }
+            FrontEnd::Reactor { handle } => {
+                if let Some(mut h) = handle.take() {
+                    h.wake();
+                    h.join();
+                }
             }
         }
-        if let Some(h) = self.acceptor.take() {
-            h.join().ok();
+    }
+
+    fn is_running(&self) -> bool {
+        match &self.front {
+            FrontEnd::Threads { acceptor, .. } => acceptor.is_some(),
+            FrontEnd::Reactor { handle } => handle.is_some(),
         }
     }
 }
 
 impl Drop for BrokerServer {
     fn drop(&mut self) {
-        if self.acceptor.is_some() {
+        if self.is_running() {
             self.stop_internal();
         }
     }
@@ -138,9 +271,18 @@ mod tests {
     use crate::transport::connect_tcp;
     use crate::wire::{Frame, FrameType, Value};
 
+    fn start_default(broker: BrokerHandle) -> BrokerServer {
+        // Tests pin the default mode explicitly so a KIWI_NET set in the
+        // environment cannot change what this file asserts.
+        BrokerServer::start_with(broker, "127.0.0.1:0", NetOptions::default()).unwrap()
+    }
+
     #[test]
     fn server_accepts_and_serves_tcp_clients() {
-        let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+        let server = start_default(BrokerHandle::new());
+        if reactor::supported() {
+            assert_eq!(server.net_mode(), NetMode::Reactor);
+        }
         let addr = server.addr();
         let link = connect_tcp(addr).unwrap();
         link.send(
@@ -166,7 +308,7 @@ mod tests {
 
     #[test]
     fn abrupt_tcp_disconnect_requeues() {
-        let server = BrokerServer::start(BrokerHandle::new(), "127.0.0.1:0").unwrap();
+        let server = start_default(BrokerHandle::new());
         let broker = server.broker().clone();
         let addr = server.addr();
         {
@@ -211,6 +353,30 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "message was not requeued");
             std::thread::sleep(Duration::from_millis(5));
         }
+        server.shutdown();
+    }
+
+    /// The threads front-end stays available behind `KIWI_NET=threads`.
+    #[test]
+    fn threads_escape_hatch_serves_clients() {
+        let opts = NetOptions { mode: NetMode::Threads, ..NetOptions::default() };
+        let server =
+            BrokerServer::start_with(BrokerHandle::new(), "127.0.0.1:0", opts).unwrap();
+        assert_eq!(server.net_mode(), NetMode::Threads);
+        let link = connect_tcp(server.addr()).unwrap();
+        link.send(
+            &ClientRequest::QueueDeclare { queue: "t".into(), options: QueueOptions::default() }
+                .to_frame(7),
+        )
+        .unwrap();
+        let f = loop {
+            let f = link.recv_timeout(Duration::from_secs(2)).unwrap();
+            if f.frame_type == FrameType::Data {
+                break f;
+            }
+        };
+        assert!(matches!(ServerMsg::from_frame(&f).unwrap(), ServerMsg::Ok { req_id: 7, .. }));
+        link.send(&Frame::goodbye("done")).unwrap();
         server.shutdown();
     }
 }

@@ -1,9 +1,15 @@
-//! One broker-side session: pumps a [`Link`] against the [`BrokerHandle`].
+//! One broker-side session: the per-connection protocol state machine,
+//! plus the blocking [`Link`] driver used by the thread-per-connection
+//! path and the inproc broker.
 //!
-//! Two threads per session: the caller's thread reads frames and executes
-//! requests; a writer thread serialises everything going the other way
-//! (replies, deliveries, consumer cancellations, server heartbeats) so a
-//! slow reader on the far side never blocks broker internals.
+//! [`SessionState`] is transport-free: it owns the broker-side
+//! `ConnectionId` and turns incoming frames into broker calls. The epoll
+//! reactor (`broker::reactor`) drives it from one event loop with no
+//! per-session threads; [`serve_link`] drives it the historical way — the
+//! caller's thread reads frames and a writer thread serialises everything
+//! going the other way (replies, deliveries, consumer cancellations,
+//! server heartbeats) so a slow reader on the far side never blocks broker
+//! internals.
 //!
 //! The writer coalesces: after blocking for one message it drains whatever
 //! else is already queued (bounded) and ships the lot via
@@ -15,7 +21,7 @@ use std::sync::mpsc::{channel, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::broker::core::BrokerHandle;
+use crate::broker::core::{BrokerHandle, ConnectionId, Outbound};
 use crate::broker::protocol::{ClientRequest, ServerMsg};
 use crate::error::Error;
 use crate::transport::Link;
@@ -24,17 +30,106 @@ use crate::wire::{Frame, FrameType};
 /// Max frames coalesced into one write unit by the session writer.
 const WRITE_COALESCE_MAX: usize = 64;
 
+/// What the session should do after a frame was handled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameOutcome {
+    /// Keep reading.
+    Continue,
+    /// Orderly end of session (Goodbye, `Close`, or protocol corruption):
+    /// flush pending output, then tear the connection down.
+    End,
+}
+
+/// The transport-free half of a broker session: one registered broker
+/// connection plus the frame-to-request state machine. Both the blocking
+/// [`serve_link`] driver and the epoll reactor feed it frames; neither
+/// owns any protocol logic of its own.
+pub struct SessionState {
+    conn: ConnectionId,
+    /// Heartbeat interval negotiated by Hello (0 = none). Shared with
+    /// whoever emits server->client heartbeats (writer thread / reactor),
+    /// which sends at half this.
+    heartbeat_ms: Arc<AtomicU64>,
+}
+
+impl SessionState {
+    /// Register a broker connection whose server messages flow into
+    /// `outbound`.
+    pub fn open(broker: &BrokerHandle, outbound: Outbound) -> SessionState {
+        let conn = broker.connect_with_outbound("<pre-hello>", 0, outbound);
+        SessionState { conn, heartbeat_ms: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// The broker-side connection id.
+    pub fn conn(&self) -> ConnectionId {
+        self.conn
+    }
+
+    /// Negotiated heartbeat interval in ms (0 until Hello, or when the
+    /// client opted out).
+    pub fn heartbeat_ms(&self) -> u64 {
+        self.heartbeat_ms.load(Ordering::Relaxed)
+    }
+
+    /// Shared handle to the negotiated interval (for writer threads).
+    pub(crate) fn heartbeat_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.heartbeat_ms)
+    }
+
+    /// Feed one received frame through the protocol state machine.
+    /// Replies are pushed into the connection's outbound by the broker
+    /// itself, guaranteeing the reply precedes any deliveries the request
+    /// triggers.
+    pub fn on_frame(&self, broker: &BrokerHandle, frame: &Frame) -> FrameOutcome {
+        match frame.frame_type {
+            FrameType::Heartbeat => {
+                broker.touch(self.conn);
+                FrameOutcome::Continue
+            }
+            FrameType::Goodbye => {
+                log::debug!("session {}: peer said goodbye", self.conn);
+                FrameOutcome::End
+            }
+            FrameType::Data => match ClientRequest::from_frame(frame) {
+                Ok((req, req_id)) => {
+                    if let ClientRequest::Hello { heartbeat_ms: hb, .. } = &req {
+                        self.heartbeat_ms.store(*hb, Ordering::Relaxed);
+                    }
+                    let is_close = matches!(req, ClientRequest::Close);
+                    broker.handle_with_reply(self.conn, &req, req_id);
+                    if is_close {
+                        FrameOutcome::End
+                    } else {
+                        FrameOutcome::Continue
+                    }
+                }
+                Err(e) => {
+                    // Protocol corruption: this connection cannot be
+                    // trusted any further.
+                    log::warn!("session {}: protocol error: {e}; dropping", self.conn);
+                    FrameOutcome::End
+                }
+            },
+        }
+    }
+
+    /// Tear the broker side down (requeues unacked messages, etc.).
+    /// Idempotent — `disconnect` ignores unknown connections.
+    pub fn finish(&self, broker: &BrokerHandle) {
+        broker.disconnect(self.conn);
+    }
+}
+
 /// Serve one connection until the peer closes, errors, or sends `Close`.
-/// Blocks; callers spawn a thread (the TCP server and inproc broker do).
+/// Blocks; callers spawn a thread (the threads-mode TCP server and the
+/// inproc broker do).
 pub fn serve_link(broker: BrokerHandle, link: Arc<dyn Link>) {
     let (tx, rx) = channel::<ServerMsg>();
-    let conn = broker.connect("<pre-hello>", 0, tx.clone());
-    // Heartbeat interval, negotiated by Hello (0 = none). Shared with the
-    // writer thread, which emits server->client heartbeats at half this.
-    let heartbeat_ms = Arc::new(AtomicU64::new(0));
+    let session = SessionState::open(&broker, Outbound::Channel(tx.clone()));
+    let conn = session.conn();
 
     let writer_link = Arc::clone(&link);
-    let writer_hb = Arc::clone(&heartbeat_ms);
+    let writer_hb = session.heartbeat_handle();
     let writer = std::thread::Builder::new()
         .name("kiwi-session-writer".into())
         .spawn(move || {
@@ -81,37 +176,11 @@ pub fn serve_link(broker: BrokerHandle, link: Arc<dyn Link>) {
 
     loop {
         match link.recv_timeout(Duration::from_millis(500)) {
-            Ok(frame) => match frame.frame_type {
-                FrameType::Heartbeat => broker.touch(conn),
-                FrameType::Goodbye => {
-                    log::debug!("session {conn}: peer said goodbye");
+            Ok(frame) => {
+                if session.on_frame(&broker, &frame) == FrameOutcome::End {
                     break;
                 }
-                FrameType::Data => {
-                    let parsed = ClientRequest::from_frame(&frame);
-                    match parsed {
-                        Ok((req, req_id)) => {
-                            if let ClientRequest::Hello { heartbeat_ms: hb, .. } = &req {
-                                heartbeat_ms.store(*hb, Ordering::Relaxed);
-                            }
-                            let is_close = matches!(req, ClientRequest::Close);
-                            // The broker pushes the reply into this
-                            // session's channel itself, guaranteeing the
-                            // reply precedes any deliveries it triggers.
-                            broker.handle_with_reply(conn, &req, req_id);
-                            if is_close {
-                                break;
-                            }
-                        }
-                        Err(e) => {
-                            // Protocol corruption: this connection cannot be
-                            // trusted any further.
-                            log::warn!("session {conn}: protocol error: {e}; dropping");
-                            break;
-                        }
-                    }
-                }
-            },
+            }
             Err(Error::Timeout(_)) => continue, // liveness is the monitor's job
             Err(e) => {
                 log::debug!("session {conn}: link error: {e}");
@@ -119,7 +188,7 @@ pub fn serve_link(broker: BrokerHandle, link: Arc<dyn Link>) {
             }
         }
     }
-    broker.disconnect(conn);
+    session.finish(&broker);
     drop(tx);
     link.close();
     writer.join().ok();
@@ -175,7 +244,10 @@ mod tests {
         );
         assert!(matches!(recv_data(), ServerMsg::Ok { req_id: 3, .. }));
 
-        send(&ClientRequest::Consume { queue: "q".into(), consumer_tag: "c".into(), prefetch: 0 }, 4);
+        send(
+            &ClientRequest::Consume { queue: "q".into(), consumer_tag: "c".into(), prefetch: 0 },
+            4,
+        );
         // Ok for consume, then the delivery (order guaranteed: same channel).
         assert!(matches!(recv_data(), ServerMsg::Ok { req_id: 4, .. }));
         match recv_data() {

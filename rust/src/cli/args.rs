@@ -18,7 +18,8 @@ const VALUED: &[&str] = &[
     "config", "addr", "workers", "heartbeat-ms", "queue", "process", "inputs", "pid", "reason",
     "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
     "delivery-batch", "route-cache", "max-delivery", "dead-letter-exchange", "max-length",
-    "overflow", "reconnect-max-retries", "reconnect-backoff-ms",
+    "overflow", "reconnect-max-retries", "reconnect-backoff-ms", "net", "event-batch",
+    "outbox-cap",
 ];
 
 impl Args {
@@ -120,6 +121,14 @@ mod tests {
         let a = parse("kiwi worker --reconnect-max-retries 12 --reconnect-backoff-ms 100");
         assert_eq!(a.opt_parse::<u32>("reconnect-max-retries").unwrap(), Some(12));
         assert_eq!(a.opt_parse::<u64>("reconnect-backoff-ms").unwrap(), Some(100));
+    }
+
+    #[test]
+    fn net_options_take_values() {
+        let a = parse("kiwi broker --net threads --event-batch 128 --outbox-cap 65536");
+        assert_eq!(a.opt("net"), Some("threads"));
+        assert_eq!(a.opt_parse::<usize>("event-batch").unwrap(), Some(128));
+        assert_eq!(a.opt_parse::<usize>("outbox-cap").unwrap(), Some(65536));
     }
 
     #[test]

@@ -35,6 +35,8 @@ SUBCOMMANDS
   broker    run the message broker            [--addr HOST:PORT] [--wal PATH | --transient]
                                               [--shards N (0 = per-core)] [--delivery-batch N]
                                               [--route-cache N (0 = off)]
+                                              [--net reactor|threads] [--event-batch N]
+                                              [--outbox-cap BYTES]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
   ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
@@ -119,6 +121,18 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(n) = args.opt_parse::<u64>("reconnect-backoff-ms")? {
         config.reconnect_backoff_ms = n;
     }
+    if let Some(m) = args.opt("net") {
+        if m != "reactor" && m != "threads" {
+            return Err(Error::Config(format!("--net: unknown mode '{m}'")));
+        }
+        config.net = m.to_string();
+    }
+    if let Some(n) = args.opt_parse::<usize>("event-batch")? {
+        config.event_batch = n.max(1);
+    }
+    if let Some(n) = args.opt_parse::<usize>("outbox-cap")? {
+        config.outbox_cap = n.max(1);
+    }
     Ok(config)
 }
 
@@ -186,10 +200,11 @@ fn cmd_broker(args: &Args) -> Result<()> {
             broker_config,
         ),
     };
-    let server = BrokerServer::start(broker, &config.broker_addr)?;
+    let server = BrokerServer::start_with(broker, &config.broker_addr, config.net_options())?;
     println!(
-        "kiwi broker listening on {} ({} shards, delivery batch {}, route cache {})",
+        "kiwi broker listening on {} ({:?} front-end, {} shards, delivery batch {}, route cache {})",
         server.addr(),
+        server.net_mode(),
         broker_config.shards,
         broker_config.delivery_batch,
         broker_config.route_cache_cap
@@ -316,7 +331,7 @@ mod tests {
             "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient \
              --shards 2 --delivery-batch 32 --route-cache 0 \
              --max-delivery 4 --dead-letter-exchange kiwi.dlx --max-length 100 \
-             --overflow reject-new",
+             --overflow reject-new --net threads --event-batch 64 --outbox-cap 4096",
         ))
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
@@ -330,6 +345,15 @@ mod tests {
         assert_eq!(config.dead_letter_exchange.as_deref(), Some("kiwi.dlx"));
         assert_eq!(config.max_length, Some(100));
         assert_eq!(config.overflow, crate::broker::protocol::OverflowPolicy::RejectNew);
+        assert_eq!(config.net, "threads");
+        assert_eq!(config.event_batch, 64);
+        assert_eq!(config.outbox_cap, 4096);
+    }
+
+    #[test]
+    fn bad_net_mode_is_config_error() {
+        let err = load_config(&parse("kiwi broker --net uring")).unwrap_err();
+        assert!(err.to_string().contains("--net"));
     }
 
     #[test]

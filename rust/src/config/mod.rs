@@ -56,6 +56,14 @@ pub struct Config {
     pub reconnect_max_retries: u32,
     /// Base client reconnect backoff in ms (capped exponential + jitter).
     pub reconnect_backoff_ms: u64,
+    /// Broker networking front-end: `reactor` (single epoll event loop)
+    /// or `threads` (blocking thread pair per connection).
+    pub net: String,
+    /// Max epoll events the reactor handles per wakeup.
+    pub event_batch: usize,
+    /// Per-connection outbox soft cap in bytes before delivery
+    /// assignment to that connection pauses (reactor mode).
+    pub outbox_cap: usize,
 }
 
 impl Default for Config {
@@ -79,6 +87,9 @@ impl Default for Config {
             overflow: OverflowPolicy::DropHead,
             reconnect_max_retries: 8,
             reconnect_backoff_ms: 250,
+            net: "reactor".into(),
+            event_batch: crate::broker::reactor::DEFAULT_EVENT_BATCH,
+            outbox_cap: crate::broker::reactor::DEFAULT_OUTBOX_CAP,
         }
     }
 }
@@ -167,6 +178,19 @@ impl Config {
         if let Some(x) = v.get_opt("reconnect_backoff_ms") {
             c.reconnect_backoff_ms = x.as_u64()?;
         }
+        if let Some(x) = v.get_opt("net") {
+            let m = x.as_str()?;
+            if m != "reactor" && m != "threads" {
+                return Err(Error::Config(format!("bad net mode: {m}")));
+            }
+            c.net = m.to_string();
+        }
+        if let Some(x) = v.get_opt("event_batch") {
+            c.event_batch = (x.as_u64()? as usize).max(1);
+        }
+        if let Some(x) = v.get_opt("outbox_cap") {
+            c.outbox_cap = (x.as_u64()? as usize).max(1);
+        }
         Ok(c)
     }
 
@@ -197,6 +221,9 @@ impl Config {
             ("overflow", Value::str(self.overflow.as_str())),
             ("reconnect_max_retries", Value::from(u64::from(self.reconnect_max_retries))),
             ("reconnect_backoff_ms", Value::from(self.reconnect_backoff_ms)),
+            ("net", Value::str(&self.net)),
+            ("event_batch", Value::from(self.event_batch)),
+            ("outbox_cap", Value::from(self.outbox_cap)),
         ])
     }
 
@@ -210,6 +237,24 @@ impl Config {
             },
             delivery_batch: self.delivery_batch.max(1),
             route_cache_cap: self.route_cache_cap,
+        }
+    }
+
+    /// The networking front-end options this config resolves to.
+    /// `net: "reactor"` silently falls back to threads on targets
+    /// without epoll support.
+    pub fn net_options(&self) -> crate::broker::NetOptions {
+        use crate::broker::{NetMode, NetOptions, ReactorOptions};
+        NetOptions {
+            mode: if self.net == "threads" || !crate::broker::reactor::supported() {
+                NetMode::Threads
+            } else {
+                NetMode::Reactor
+            },
+            reactor: ReactorOptions {
+                event_batch: self.event_batch.max(1),
+                outbox_cap: self.outbox_cap.max(1),
+            },
         }
     }
 
@@ -241,7 +286,9 @@ impl Config {
     /// (0 = unlimited), `KIWI_DEAD_LETTER_EXCHANGE` (empty = off),
     /// `KIWI_MAX_LENGTH` (0 = unbounded), `KIWI_OVERFLOW`
     /// (`drop-head`/`reject-new`), `KIWI_RECONNECT_MAX_RETRIES` (0 = no
-    /// reconnection) and `KIWI_RECONNECT_BACKOFF_MS` override the file.
+    /// reconnection), `KIWI_RECONNECT_BACKOFF_MS`, `KIWI_NET`
+    /// (`reactor`/`threads`), `KIWI_EVENT_BATCH` and `KIWI_OUTBOX_CAP`
+    /// override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -303,6 +350,21 @@ impl Config {
         if let Ok(v) = std::env::var("KIWI_RECONNECT_BACKOFF_MS") {
             if let Ok(n) = v.parse() {
                 self.reconnect_backoff_ms = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_NET") {
+            if v == "reactor" || v == "threads" {
+                self.net = v;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_EVENT_BATCH") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.event_batch = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_OUTBOX_CAP") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.outbox_cap = n.max(1);
             }
         }
     }
@@ -427,6 +489,36 @@ mod tests {
         let v = json::from_str(r#"{"reconnect_max_retries": 0}"#).unwrap();
         assert_eq!(Config::from_value(&v).unwrap().reconnect_max_retries, 0);
         assert!(Config::default().reconnect_max_retries > 0);
+    }
+
+    #[test]
+    fn net_knobs_parse_resolve_and_roundtrip() {
+        let v =
+            json::from_str(r#"{"net": "threads", "event_batch": 64, "outbox_cap": 65536}"#)
+                .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.net, "threads");
+        assert_eq!(c.event_batch, 64);
+        assert_eq!(c.outbox_cap, 65536);
+        let no = c.net_options();
+        assert_eq!(no.mode, crate::broker::NetMode::Threads);
+        assert_eq!(no.reactor.event_batch, 64);
+        assert_eq!(no.reactor.outbox_cap, 65536);
+        let back = Config::from_value(&json::from_str(&json::to_string(&c.to_value())).unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+        // Default is the reactor (where supported).
+        let d = Config::default();
+        assert_eq!(d.net, "reactor");
+        if crate::broker::reactor::supported() {
+            assert_eq!(d.net_options().mode, crate::broker::NetMode::Reactor);
+        }
+        // Unknown modes are config errors, and knobs clamp to ≥ 1.
+        assert!(Config::from_value(&json::from_str(r#"{"net": "uring"}"#).unwrap()).is_err());
+        let v = json::from_str(r#"{"event_batch": 0, "outbox_cap": 0}"#).unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.event_batch, 1);
+        assert_eq!(c.outbox_cap, 1);
     }
 
     #[test]

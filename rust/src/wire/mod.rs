@@ -20,5 +20,7 @@ pub mod value;
 
 pub use bytes::Bytes;
 pub use codec::{decode, encode, encoded_len};
-pub use frame::{read_frame, write_frame, Frame, FrameType, SectionCursor, MAX_FRAME_LEN};
+pub use frame::{
+    read_frame, write_frame, Frame, FrameReader, FrameType, SectionCursor, MAX_FRAME_LEN,
+};
 pub use value::Value;

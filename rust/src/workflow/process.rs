@@ -52,7 +52,7 @@ pub enum WaitCondition {
     /// All the given child processes reached a terminal state.
     ProcessesTerminated(Vec<String>),
     /// A fixed delay (restarts from zero if resumed from checkpoint —
-    /// documented behaviour, DESIGN.md §10 durability notes).
+    /// documented behaviour, DESIGN.md §11 durability notes).
     Timer(Duration),
 }
 

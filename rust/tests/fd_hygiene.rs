@@ -1,0 +1,233 @@
+//! File-descriptor hygiene under connection churn: every way a
+//! connection can die — Goodbye, orderly Close, heartbeat eviction,
+//! mid-frame EOF, abrupt drop with deliveries in flight — must
+//! deregister the socket and return the process fd count to its
+//! baseline. The broker runs in-process, so /proc/self/fd covers both
+//! the client and broker halves of every connection.
+//!
+//! Runs under whichever front-end `KIWI_NET` selects (CI runs the matrix
+//! of reactor and threads), except the thread-growth test, which is a
+//! reactor-only property.
+
+#![cfg(target_os = "linux")]
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+use kiwi::broker::server::{BrokerServer, NetMode, NetOptions};
+use kiwi::wire::{read_frame, write_frame, Bytes, Frame, FrameType, Value};
+
+fn fd_count() -> usize {
+    std::fs::read_dir("/proc/self/fd").map(|d| d.count()).unwrap_or(0)
+}
+
+fn thread_count() -> u64 {
+    let text = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    text.lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+fn start_server() -> BrokerServer {
+    BrokerServer::start_with(BrokerHandle::new(), "127.0.0.1:0", NetOptions::from_env()).unwrap()
+}
+
+fn send(stream: &TcpStream, req: &ClientRequest, id: u64) {
+    let mut w = stream;
+    write_frame(&mut w, &req.to_frame(id)).unwrap();
+}
+
+fn recv_data(stream: &TcpStream) -> ServerMsg {
+    let mut r = stream;
+    loop {
+        let f = read_frame(&mut r).unwrap();
+        if f.frame_type == FrameType::Data {
+            return ServerMsg::from_frame(&f).unwrap();
+        }
+    }
+}
+
+fn dial(addr: SocketAddr, id: &str, heartbeat_ms: u64) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    send(&stream, &ClientRequest::Hello { client_id: id.into(), heartbeat_ms }, 1);
+    match recv_data(&stream) {
+        ServerMsg::Ok { .. } => stream,
+        other => panic!("hello rejected: {other:?}"),
+    }
+}
+
+/// Wait until `cond` holds (poll), failing the test on timeout.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn connections(broker: &BrokerHandle) -> i64 {
+    broker.metrics().gauge("broker.connections").get()
+}
+
+/// Open/handshake/Goodbye churn returns the fd count to baseline: no
+/// socket leaks in the accept or teardown paths.
+#[test]
+fn churn_returns_fd_count_to_baseline() {
+    let server = start_server();
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    // Let one connection through first so lazily-created fds (epoll,
+    // wake pipe, listener) are part of the baseline.
+    drop(dial(addr, "warmup", 0));
+    wait_for("warmup teardown", || connections(&broker) == 0);
+    let baseline = fd_count();
+
+    for i in 0..64 {
+        let stream = dial(addr, &format!("churn-{i}"), 0);
+        let mut w = &stream;
+        write_frame(&mut w, &Frame::goodbye("done")).unwrap();
+        drop(stream);
+    }
+    wait_for("all sessions gone", || connections(&broker) == 0);
+    wait_for("fd count back to baseline", || fd_count() <= baseline);
+    server.shutdown();
+}
+
+/// Heartbeat eviction (the monitor, not the peer) must deregister the
+/// socket and release its fds, exactly like a client-initiated close.
+#[test]
+fn heartbeat_death_deregisters() {
+    let server = start_server();
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    drop(dial(addr, "warmup", 0));
+    wait_for("warmup teardown", || connections(&broker) == 0);
+    let baseline = fd_count();
+
+    // Negotiate a 30ms heartbeat, then go silent: the monitor evicts
+    // after two missed intervals.
+    let stream = dial(addr, "silent", 30);
+    wait_for("heartbeat eviction", || connections(&broker) == 0);
+    if server.net_mode() == NetMode::Reactor {
+        // The reactor closes the broker-side fd proactively on eviction;
+        // only the client half (still held here) remains.
+        wait_for("broker side released after eviction", || fd_count() <= baseline + 1);
+    }
+    drop(stream);
+    wait_for("fd count back to baseline", || fd_count() <= baseline);
+    server.shutdown();
+}
+
+/// EOF in the middle of a frame header tears the connection down — a
+/// half-written header must not wedge a session or leak its socket.
+#[test]
+fn midframe_eof_deregisters() {
+    let server = start_server();
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    drop(dial(addr, "warmup", 0));
+    wait_for("warmup teardown", || connections(&broker) == 0);
+    let baseline = fd_count();
+
+    let stream = dial(addr, "truncated", 0);
+    // Three bytes of a five-byte header, then hang up.
+    let mut w = &stream;
+    w.write_all(&[0x10, 0x00, 0x00]).unwrap();
+    w.flush().unwrap();
+    drop(stream);
+
+    wait_for("mid-frame EOF teardown", || connections(&broker) == 0);
+    wait_for("fd count back to baseline", || fd_count() <= baseline);
+    server.shutdown();
+}
+
+/// Abrupt disconnects with unacked deliveries in flight: the delivery
+/// index must shrink back to zero every cycle (requeue on teardown), and
+/// the messages survive for the next consumer.
+#[test]
+fn delivery_index_stays_leak_free_under_churn() {
+    let server = start_server();
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    let setup = dial(addr, "setup", 0);
+    send(
+        &setup,
+        &ClientRequest::QueueDeclare { queue: "jobs".into(), options: QueueOptions::default() },
+        2,
+    );
+    let _ = recv_data(&setup);
+    send(
+        &setup,
+        &ClientRequest::Publish {
+            exchange: "".into(),
+            routing_key: "jobs".into(),
+            body: Bytes::encode(&Value::str("payload")),
+            props: Default::default(),
+            mandatory: true,
+        },
+        3,
+    );
+    let _ = recv_data(&setup);
+
+    for i in 0..16 {
+        let doomed = dial(addr, &format!("doomed-{i}"), 0);
+        send(
+            &doomed,
+            &ClientRequest::Consume {
+                queue: "jobs".into(),
+                consumer_tag: format!("c{i}"),
+                prefetch: 0,
+            },
+            4,
+        );
+        // Wait for the delivery to be in flight, then die without acking.
+        wait_for("delivery in flight", || broker.queue_unacked("jobs") == Some(1));
+        assert_eq!(broker.delivery_index_len(), 1);
+        drop(doomed);
+        wait_for("teardown requeues", || {
+            broker.delivery_index_len() == 0 && broker.queue_depth("jobs") == Some(1)
+        });
+    }
+    // Two connections total: setup plus (already gone) consumers.
+    wait_for("only setup remains", || connections(&broker) == 1);
+    server.shutdown();
+}
+
+/// Reactor-mode scaling property: parked idle connections add zero
+/// threads — the front-end is O(shards + reactor), not O(connections).
+#[test]
+fn idle_connections_add_no_threads() {
+    let opts = NetOptions::from_env();
+    if opts.mode != NetMode::Reactor {
+        eprintln!("skipping: thread-growth bound is a reactor-mode property");
+        return;
+    }
+    let server = BrokerServer::start_with(BrokerHandle::new(), "127.0.0.1:0", opts).unwrap();
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    drop(dial(addr, "warmup", 0));
+    wait_for("warmup teardown", || connections(&broker) == 0);
+    let before = thread_count();
+
+    let fleet: Vec<TcpStream> =
+        (0..64).map(|i| dial(addr, &format!("parked-{i}"), 0)).collect();
+    wait_for("fleet registered", || connections(&broker) == 64);
+    let after = thread_count();
+    assert_eq!(
+        after, before,
+        "64 parked connections must not grow the thread count ({before} -> {after})"
+    );
+    drop(fleet);
+    wait_for("fleet torn down", || connections(&broker) == 0);
+    server.shutdown();
+}

@@ -1,0 +1,325 @@
+//! Per-connection output backpressure: a slow consumer whose socket
+//! stops draining must stall only its *own* connection's outbox — other
+//! connections keep receiving, and the stalled queue's ready messages
+//! wait in the broker (bounded memory) instead of piling up in an
+//! unbounded outbox.
+//!
+//! Two layers are pinned here:
+//!
+//! 1. A unit-level test drives the dispatcher through a hand-rolled
+//!    [`DeliverySink`] whose `ready()` is a switch, proving assignment
+//!    gating and [`BrokerHandle::resume_deliveries`] without sockets.
+//! 2. A socket-level test runs the real epoll reactor with a small
+//!    outbox cap and a consumer that never reads, and checks the fast
+//!    consumer finishes, the pause counter fires, and the wedged queue
+//!    drains fully once the slow consumer starts reading again.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::protocol::{ClientRequest, QueueOptions, ServerMsg};
+use kiwi::broker::reactor::{self, ReactorOptions};
+use kiwi::broker::server::{BrokerServer, NetMode, NetOptions};
+use kiwi::broker::{DeliverySink, Outbound};
+use kiwi::wire::{read_frame, write_frame, Bytes, FrameType};
+
+// ---------------------------------------------------------------------
+// Unit level: assignment gating through a scripted sink.
+// ---------------------------------------------------------------------
+
+/// A [`DeliverySink`] with a togglable `ready()` switch, recording every
+/// message the dispatcher pushes.
+struct SwitchSink {
+    ready: AtomicBool,
+    closed: AtomicBool,
+    msgs: Mutex<Vec<ServerMsg>>,
+}
+
+impl SwitchSink {
+    fn new() -> Arc<SwitchSink> {
+        Arc::new(SwitchSink {
+            ready: AtomicBool::new(true),
+            closed: AtomicBool::new(false),
+            msgs: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Deliveries received so far (batch-aware).
+    fn delivered(&self) -> usize {
+        self.msgs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|m| match m {
+                ServerMsg::Deliver(_) => 1,
+                ServerMsg::DeliverBatch(ds) => ds.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+impl DeliverySink for SwitchSink {
+    fn push(&self, msg: ServerMsg) -> bool {
+        if self.closed.load(Ordering::Acquire) {
+            return false;
+        }
+        self.msgs.lock().unwrap().push(msg);
+        true
+    }
+
+    fn ready(&self) -> bool {
+        self.ready.load(Ordering::Acquire) && !self.closed.load(Ordering::Acquire)
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+    }
+}
+
+fn publish(broker: &BrokerHandle, conn: u64, queue: &str, body: &[u8]) {
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Publish {
+                exchange: String::new(),
+                routing_key: queue.into(),
+                body: Bytes::copy_from_slice(body),
+                props: Default::default(),
+                mandatory: true,
+            },
+        )
+        .unwrap();
+}
+
+/// While a sink reports not-ready the dispatcher must leave its
+/// consumer's messages in the queue (ready, not in flight), and
+/// `resume_deliveries` must hand them over once the sink recovers.
+#[test]
+fn dispatch_skips_unready_sink_until_resume() {
+    let broker = BrokerHandle::new();
+    let sink = SwitchSink::new();
+    let dyn_sink: Arc<dyn DeliverySink> = sink.clone();
+    let conn = broker.connect_with_outbound("unit", 0, Outbound::Sink(dyn_sink));
+
+    broker
+        .handle(
+            conn,
+            &ClientRequest::QueueDeclare { queue: "q".into(), options: QueueOptions::default() },
+        )
+        .unwrap();
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Consume { queue: "q".into(), consumer_tag: "c".into(), prefetch: 0 },
+        )
+        .unwrap();
+
+    // Ready sink: the publish's dispatch pump hands the delivery over.
+    publish(&broker, conn, "q", b"one");
+    assert_eq!(sink.delivered(), 1, "ready sink receives immediately");
+
+    // Not-ready sink: messages stay *ready* in the queue — not assigned
+    // (no unacked growth), not pushed.
+    sink.ready.store(false, Ordering::Release);
+    publish(&broker, conn, "q", b"two");
+    publish(&broker, conn, "q", b"three");
+    assert_eq!(sink.delivered(), 1, "paused sink must not be assigned deliveries");
+    assert_eq!(broker.queue_depth("q"), Some(2), "messages wait in the queue");
+    assert_eq!(broker.queue_unacked("q"), Some(1), "only the first is in flight");
+
+    // Recovery: the sink owner flips ready and pumps the queues.
+    sink.ready.store(true, Ordering::Release);
+    broker.resume_deliveries(conn);
+    assert_eq!(sink.delivered(), 3, "resume delivers the backlog");
+    assert_eq!(broker.queue_depth("q"), Some(0));
+
+    broker.disconnect(conn);
+    assert!(sink.closed.load(Ordering::Acquire), "disconnect closes the sink");
+}
+
+// ---------------------------------------------------------------------
+// Socket level: the real reactor with a small outbox cap.
+// ---------------------------------------------------------------------
+
+fn send(stream: &TcpStream, req: &ClientRequest, id: u64) {
+    let mut w = stream;
+    write_frame(&mut w, &req.to_frame(id)).unwrap();
+}
+
+fn recv_data(stream: &TcpStream) -> ServerMsg {
+    let mut r = stream;
+    loop {
+        let f = read_frame(&mut r).unwrap();
+        if f.frame_type == FrameType::Data {
+            return ServerMsg::from_frame(&f).unwrap();
+        }
+    }
+}
+
+fn dial(addr: SocketAddr, id: &str) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    send(&stream, &ClientRequest::Hello { client_id: id.into(), heartbeat_ms: 0 }, 1);
+    match recv_data(&stream) {
+        ServerMsg::Ok { .. } => stream,
+        other => panic!("hello rejected: {other:?}"),
+    }
+}
+
+fn declare(stream: &TcpStream, queue: &str) {
+    send(
+        stream,
+        &ClientRequest::QueueDeclare { queue: queue.into(), options: QueueOptions::default() },
+        2,
+    );
+    match recv_data(stream) {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("queue_declare failed: {other:?}"),
+    }
+}
+
+fn consume(stream: &TcpStream, queue: &str, tag: &str) {
+    send(
+        stream,
+        &ClientRequest::Consume { queue: queue.into(), consumer_tag: tag.into(), prefetch: 0 },
+        3,
+    );
+    match recv_data(stream) {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("consume failed: {other:?}"),
+    }
+}
+
+/// Read server messages until `want` deliveries have arrived, acking each
+/// one so the broker's unacked set drains too. Ignores the interleaved Ok
+/// replies the acks generate.
+fn drain_deliveries(stream: &TcpStream, want: usize) {
+    let mut got = 0usize;
+    let mut next_req = 100u64;
+    let mut r = stream;
+    while got < want {
+        let f = read_frame(&mut r).unwrap();
+        if f.frame_type != FrameType::Data {
+            continue;
+        }
+        let mut tags = Vec::new();
+        match ServerMsg::from_frame(&f).unwrap() {
+            ServerMsg::Deliver(d) => tags.push(d.delivery_tag),
+            ServerMsg::DeliverBatch(ds) => tags.extend(ds.iter().map(|d| d.delivery_tag)),
+            _ => {}
+        }
+        got += tags.len();
+        for tag in tags {
+            send(stream, &ClientRequest::Ack { delivery_tag: tag }, next_req);
+            next_req += 1;
+        }
+    }
+}
+
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The acceptance pin: a consumer that never reads its socket wedges only
+/// its own connection. A second consumer on the same broker keeps
+/// streaming, the wedged queue's backlog stays in the broker (ready, not
+/// in an unbounded outbox), the backpressure counter records the pause —
+/// and once the slow consumer starts reading, everything drains.
+#[test]
+fn slow_consumer_stalls_only_its_own_connection() {
+    if !reactor::supported() {
+        eprintln!("skipping: epoll reactor unsupported on this platform");
+        return;
+    }
+    // A small outbox cap so a handful of large bodies trips the pause.
+    let opts = NetOptions {
+        mode: NetMode::Reactor,
+        reactor: ReactorOptions { outbox_cap: 64 * 1024, ..Default::default() },
+    };
+    let server = BrokerServer::start_with(BrokerHandle::new(), "127.0.0.1:0", opts).unwrap();
+    assert_eq!(server.net_mode(), NetMode::Reactor);
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    let setup = dial(addr, "publisher");
+    declare(&setup, "slow");
+    declare(&setup, "fast");
+
+    let slow = dial(addr, "slow-consumer");
+    consume(&slow, "slow", "slow-c");
+    let fast = dial(addr, "fast-consumer");
+    consume(&fast, "fast", "fast-c");
+
+    // 128 × 256 KiB to the wedged queue: far more than the kernel's
+    // socket buffering can absorb, so most of it must wait in the broker.
+    const SLOW_MSGS: usize = 128;
+    const FAST_MSGS: usize = 32;
+    let big = vec![0xa5u8; 256 * 1024];
+    let mut req = 10u64;
+    for _ in 0..SLOW_MSGS {
+        send(
+            &setup,
+            &ClientRequest::Publish {
+                exchange: String::new(),
+                routing_key: "slow".into(),
+                body: Bytes::copy_from_slice(&big),
+                props: Default::default(),
+                mandatory: true,
+            },
+            req,
+        );
+        req += 1;
+        let _ = recv_data(&setup);
+    }
+    for i in 0..FAST_MSGS {
+        send(
+            &setup,
+            &ClientRequest::Publish {
+                exchange: String::new(),
+                routing_key: "fast".into(),
+                body: Bytes::copy_from_slice(format!("fast-{i}").as_bytes()),
+                props: Default::default(),
+                mandatory: true,
+            },
+            req,
+        );
+        req += 1;
+        let _ = recv_data(&setup);
+    }
+
+    // The fast consumer streams to completion while the slow one is
+    // wedged — the stall is per-connection, not broker-wide.
+    drain_deliveries(&fast, FAST_MSGS);
+    wait_for("fast queue drains", || {
+        broker.queue_depth("fast") == Some(0) && broker.queue_unacked("fast") == Some(0)
+    });
+
+    // The wedged queue still holds *ready* messages: the dispatcher
+    // stopped assigning when the outbox went over its cap instead of
+    // buffering all 32 MiB in process memory.
+    let held = broker.queue_depth("slow").unwrap();
+    assert!(
+        held > 0,
+        "paused connection must leave backlog in the queue (depth {held})"
+    );
+    let pauses = broker.metrics().counter("broker.reactor.backpressure_pauses_total").get();
+    assert!(pauses > 0, "backpressure pause counter must fire");
+
+    // Recovery: the slow consumer starts reading. Outbox drains → reactor
+    // resumes delivery assignment → the whole backlog flows out.
+    drain_deliveries(&slow, SLOW_MSGS);
+    wait_for("slow queue drains after recovery", || {
+        broker.queue_depth("slow") == Some(0) && broker.queue_unacked("slow") == Some(0)
+    });
+
+    drop((setup, slow, fast));
+    server.shutdown();
+}
