@@ -1,112 +1,303 @@
 //! E4 — durability & atomicity (paper §I: the broker "takes responsibility
 //! for guaranteeing the durability and atomicity of messages").
 //!
-//! Cost of the write-ahead log: publish throughput for transient vs
-//! durable queues under each sync policy, plus recovery time and
-//! completeness after a broker restart.
+//! Two questions:
+//!
+//! * **E4a — policy cost**: what does each sync policy cost a single
+//!   publisher, transient vs durable?
+//! * **E4b — durable scaling**: does durable-publish throughput scale
+//!   with publisher threads? The single-mutex `WalPersister` baseline
+//!   serialises every durable publish (fsync held under the lock); the
+//!   `SegmentedWal` shards the log per queue shard and pipelines group
+//!   commit, so threads on different queues should scale until the disk
+//!   itself saturates.
+//!
+//! Each `SegmentedWal` row also reports the WAL observability counters
+//! (`appends`/`fsyncs`/`bytes`/`batch_max`) so the CSV shows *why* a
+//! configuration is fast (group-commit batching) or slow (fsync per
+//! publish). `KIWI_BENCH_SMOKE=1` shrinks the matrix for CI;
+//! `KIWI_BENCH_RECORD=1` appends the run to `../BENCH_durability.json`.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kiwi::benchutil::Table;
-use kiwi::broker::core::BrokerHandle;
-use kiwi::broker::persistence::{NoopPersister, RecoveredState, SyncPolicy, WalPersister};
+use kiwi::broker::core::{BrokerConfig, BrokerHandle};
+use kiwi::broker::persistence::{
+    NoopPersister, PersistBackend, RecoveredState, SegmentedWal, SyncPolicy, WalPersister,
+};
 use kiwi::broker::protocol::{ClientRequest, MessageProps, QueueOptions};
-use kiwi::wire::Value;
+use kiwi::wire::{json, Value};
 
-const MSGS: usize = 2_000;
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
 
-fn publish_n(broker: &BrokerHandle, durable: bool, n: usize) -> Duration {
-    let (tx, _rx) = std::sync::mpsc::channel();
-    let conn = broker.connect("bench", 0, tx);
-    broker
-        .handle(
-            conn,
-            &ClientRequest::QueueDeclare {
-                queue: "q".into(),
-                options: QueueOptions { durable, ..Default::default() },
-            },
-        )
-        .unwrap();
+/// Publish `per_thread` 512-byte durable messages from each of `threads`
+/// publishers, one queue per thread (queues hash across shards and WAL
+/// segments), then sync. Returns the wall time for the whole batch.
+fn publish_threads(
+    broker: &BrokerHandle,
+    durable: bool,
+    threads: usize,
+    per_thread: usize,
+) -> Duration {
     // Encoded once; every publish (and WAL record) shares this buffer.
     let body = kiwi::wire::Bytes::encode(&Value::map([("data", Value::Bytes(vec![7u8; 512]))]));
-    let t0 = Instant::now();
-    for _ in 0..n {
+    for t in 0..threads {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let conn = broker.connect(&format!("bench-{t}"), 0, tx);
         broker
             .handle(
                 conn,
-                &ClientRequest::Publish {
-                    exchange: "".into(),
-                    routing_key: "q".into(),
-                    body: body.clone(),
-                    props: MessageProps { persistent: durable, ..Default::default() }.into(),
-                    mandatory: true,
+                &ClientRequest::QueueDeclare {
+                    queue: format!("q{t}"),
+                    options: QueueOptions { durable, ..Default::default() },
                 },
             )
             .unwrap();
+        broker.disconnect(conn);
     }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let body = body.clone();
+            scope.spawn(move || {
+                let (tx, _rx) = std::sync::mpsc::channel();
+                let conn = broker.connect(&format!("bench-pub-{t}"), 0, tx);
+                for _ in 0..per_thread {
+                    broker
+                        .handle(
+                            conn,
+                            &ClientRequest::Publish {
+                                exchange: "".into(),
+                                routing_key: format!("q{t}"),
+                                body: body.clone(),
+                                props: MessageProps { persistent: durable, ..Default::default() }
+                                    .into(),
+                                mandatory: true,
+                            },
+                        )
+                        .unwrap();
+                }
+            });
+        }
+    });
     broker.sync().unwrap();
     t0.elapsed()
 }
 
-fn wal_dir(tag: &str) -> std::path::PathBuf {
+fn bench_root(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("kiwi-bench-wal-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    dir.join(format!("{tag}.wal"))
+    dir.join(tag)
+}
+
+fn policy_tag(policy: SyncPolicy) -> &'static str {
+    match policy {
+        SyncPolicy::Os => "os",
+        SyncPolicy::EveryN(_) => "every-64",
+        SyncPolicy::Always => "always",
+    }
+}
+
+struct RunOut {
+    wall: Duration,
+    msgs_per_sec: f64,
+    /// (appends, fsyncs, bytes, batch_max) — segmented backend only.
+    counters: Option<(u64, u64, u64, u64)>,
+}
+
+/// One durable matrix cell. `segmented = false` is the baseline: the old
+/// single-file `WalPersister` behind the compatibility mutex.
+fn run_case(segmented: bool, policy: SyncPolicy, threads: usize, per_thread: usize) -> RunOut {
+    let tag = format!(
+        "{}-{}-t{threads}",
+        if segmented { "seg" } else { "mutex" },
+        policy_tag(policy)
+    );
+    let path = bench_root(&tag);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir_all(&path).ok();
+    let config = BrokerConfig::default();
+    let (broker, wal) = if segmented {
+        let (wal, rec) =
+            SegmentedWal::open(&path, config.shards, policy, Duration::from_micros(500)).unwrap();
+        let wal = Arc::new(wal);
+        let backend: Arc<dyn PersistBackend> = Arc::clone(&wal);
+        (BrokerHandle::with_backend(backend, rec, config), Some(wal))
+    } else {
+        let (wal, rec) = WalPersister::open(&path, policy).unwrap();
+        (BrokerHandle::with_config(Box::new(wal), rec, config), None)
+    };
+    let wall = publish_threads(&broker, true, threads, per_thread);
+    let total = (threads * per_thread) as f64;
+    RunOut {
+        wall,
+        msgs_per_sec: total / wall.as_secs_f64(),
+        counters: wal.map(|w| {
+            let s = w.stats();
+            (s.appends.get(), s.fsyncs.get(), s.bytes.get(), s.batch_max.get())
+        }),
+    }
 }
 
 fn main() {
-    let mut table = Table::new(
-        "E4 durability: publish cost (2000 x 512B msgs)",
-        &["mode", "wall", "msgs/s", "vs transient"],
-    );
+    let smoke = smoke();
+    // Always is fsync-bound; fewer messages keep its rows affordable.
+    let n_fast: usize = if smoke { 200 } else { 2_000 };
+    let n_always: usize = if smoke { 40 } else { 250 };
+    let thread_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let policies = [SyncPolicy::Os, SyncPolicy::EveryN(64), SyncPolicy::Always];
+
+    // E4a: single-publisher policy cost, transient as the reference.
     let transient = {
-        let broker = BrokerHandle::with_persister(
-            Box::new(NoopPersister),
-            RecoveredState::default(),
-        );
-        publish_n(&broker, false, MSGS)
+        let broker =
+            BrokerHandle::with_persister(Box::new(NoopPersister), RecoveredState::default());
+        publish_threads(&broker, false, 1, n_fast)
     };
-    table.row(&[
+    let mut e4a = Table::new(
+        "E4a durability: single-publisher policy cost (512B msgs)",
+        &["mode", "msgs", "wall", "msgs/s", "vs transient"],
+    );
+    e4a.row(&[
         "transient".into(),
+        n_fast.to_string(),
         format!("{transient:.2?}"),
-        format!("{:.0}", MSGS as f64 / transient.as_secs_f64()),
+        format!("{:.0}", n_fast as f64 / transient.as_secs_f64()),
         "1.0x".into(),
     ]);
-    for (label, policy) in [
-        ("wal os-sync", SyncPolicy::Os),
-        ("wal every-64", SyncPolicy::EveryN(64)),
-        ("wal always", SyncPolicy::Always),
-    ] {
-        let path = wal_dir(label);
-        std::fs::remove_file(&path).ok();
-        let (wal, rec) = WalPersister::open(&path, policy).unwrap();
-        let broker = BrokerHandle::with_persister(Box::new(wal), rec);
-        let wall = publish_n(&broker, true, MSGS);
-        table.row(&[
-            label.into(),
-            format!("{wall:.2?}"),
-            format!("{:.0}", MSGS as f64 / wall.as_secs_f64()),
-            format!("{:.1}x", wall.as_secs_f64() / transient.as_secs_f64()),
+    for policy in policies {
+        let n = if matches!(policy, SyncPolicy::Always) { n_always } else { n_fast };
+        let out = run_case(true, policy, 1, n);
+        let per_msg_transient = transient.as_secs_f64() / n_fast as f64;
+        let per_msg = out.wall.as_secs_f64() / n as f64;
+        e4a.row(&[
+            format!("seg wal {}", policy_tag(policy)),
+            n.to_string(),
+            format!("{:.2?}", out.wall),
+            format!("{:.0}", out.msgs_per_sec),
+            format!("{:.1}x", per_msg / per_msg_transient),
         ]);
     }
-    table.emit();
+    e4a.emit();
 
-    // Recovery: restart the broker from the every-64 WAL and verify that
-    // all messages survive, timing the replay.
-    let path = wal_dir("wal every-64");
-    let t0 = Instant::now();
-    let (_wal, recovered) = WalPersister::open(&path, SyncPolicy::EveryN(64)).unwrap();
-    let replay = t0.elapsed();
-    let mut recovery = Table::new(
-        "E4b recovery after restart",
-        &["metric", "value"],
+    // E4b: the scaling matrix — threads x policy x backend.
+    let mut e4b = Table::new(
+        "E4b durability: durable-publish scaling (per-thread queues)",
+        &[
+            "backend", "policy", "threads", "msgs", "wall", "msgs/s", "appends", "fsyncs",
+            "bytes", "batch_max",
+        ],
     );
-    recovery.row(&["messages recovered".into(), recovered.message_count().to_string()]);
-    recovery.row(&["expected".into(), MSGS.to_string()]);
-    recovery.row(&["replay time".into(), format!("{replay:.2?}")]);
-    recovery.emit();
-    assert_eq!(recovered.message_count(), MSGS, "durable messages must survive restart");
-    println!("expected shape: os-sync ~ transient; every-64 a small constant\n\
-              factor; fsync-always dominated by disk flushes. Recovery is\n\
-              linear in live messages and loses nothing.");
+    let mut curve: Vec<(String, f64)> = Vec::new();
+    for &segmented in &[false, true] {
+        for policy in policies {
+            let per_thread = if matches!(policy, SyncPolicy::Always) { n_always } else { n_fast };
+            for &threads in thread_counts {
+                let out = run_case(segmented, policy, threads, per_thread);
+                let (appends, fsyncs, bytes, batch_max) = match out.counters {
+                    Some((a, f, b, m)) => {
+                        (a.to_string(), f.to_string(), b.to_string(), m.to_string())
+                    }
+                    None => ("-".into(), "-".into(), "-".into(), "-".into()),
+                };
+                let backend = if segmented { "segmented" } else { "mutex" };
+                e4b.row(&[
+                    backend.into(),
+                    policy_tag(policy).into(),
+                    threads.to_string(),
+                    (threads * per_thread).to_string(),
+                    format!("{:.2?}", out.wall),
+                    format!("{:.0}", out.msgs_per_sec),
+                    appends,
+                    fsyncs,
+                    bytes,
+                    batch_max,
+                ]);
+                curve.push((
+                    format!("{backend}_{}_t{threads}", policy_tag(policy).replace('-', "")),
+                    out.msgs_per_sec,
+                ));
+            }
+        }
+    }
+    e4b.emit();
+
+    let rate = |key: &str| curve.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0);
+    let gate_threads = *thread_counts.last().unwrap();
+    let seg_rate = rate(&format!("segmented_every64_t{gate_threads}"));
+    let speedup_every64 = seg_rate / rate(&format!("mutex_every64_t{gate_threads}"));
+    let os_ratio = rate("segmented_os_t1") / rate("mutex_os_t1");
+    // Acceptance tripwires (printed, not asserted: CI hardware varies, the
+    // series file is the judge): every-64 at max threads should be >=2x
+    // the single-mutex baseline, and the os path must not regress.
+    println!(
+        "gate: every-64 x{gate_threads} segmented/mutex speedup = {speedup_every64:.2}x \
+         (want >= 2x)"
+    );
+    println!("gate: os x1 segmented/mutex ratio = {os_ratio:.2} (want ~1x, no regression)");
+
+    // Recovery: reopen the segmented every-64 log from the widest run and
+    // verify nothing durable was lost, timing the (parallel) replay.
+    let expect = gate_threads * n_fast;
+    let path = bench_root(&format!("seg-every-64-t{gate_threads}"));
+    let t0 = Instant::now();
+    let recovered = kiwi::broker::persistence::replay_dir(&path).unwrap();
+    let replay = t0.elapsed();
+    let mut e4c = Table::new("E4c recovery after restart", &["metric", "value"]);
+    e4c.row(&["messages recovered".into(), recovered.message_count().to_string()]);
+    e4c.row(&["expected".into(), expect.to_string()]);
+    e4c.row(&["replay time".into(), format!("{replay:.2?}")]);
+    e4c.emit();
+    assert_eq!(recovered.message_count(), expect, "durable messages must survive restart");
+
+    let mut run_fields = vec![
+        ("bench", Value::from("durability")),
+        ("smoke", Value::from(smoke)),
+        ("msgs_fast", Value::from(n_fast)),
+        ("msgs_always", Value::from(n_always)),
+        ("speedup_every64_max_threads", Value::F64(speedup_every64)),
+        ("os_ratio_t1", Value::F64(os_ratio)),
+        ("recovered", Value::from(recovered.message_count())),
+        ("replay_ns", Value::from(replay.as_nanos() as u64)),
+    ];
+    for (k, v) in &curve {
+        run_fields.push((k.as_str(), Value::F64(*v)));
+    }
+    let run = Value::map(run_fields);
+    let path = std::path::Path::new("target/bench-results/BENCH_durability.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(path, json::to_string(&run)) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+
+    // Tracked trajectory series at the repo root: append this run when
+    // recording is requested (benches run from rust/, the series lives
+    // one level up).
+    if std::env::var("KIWI_BENCH_RECORD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        let series_path = std::path::Path::new("../BENCH_durability.json");
+        let mut series = std::fs::read_to_string(series_path)
+            .ok()
+            .and_then(|t| json::from_str(&t).ok())
+            .unwrap_or_else(|| {
+                Value::map([
+                    ("bench", Value::from("durability")),
+                    ("runs", Value::List(Vec::new())),
+                ])
+            });
+        if let Value::Map(m) = &mut series {
+            let runs = m.entry("runs".to_string()).or_insert_with(|| Value::List(Vec::new()));
+            if let Value::List(list) = runs {
+                list.push(run);
+            }
+        }
+        match std::fs::write(series_path, json::to_string_pretty(&series)) {
+            Ok(()) => println!("recorded run into {}", series_path.display()),
+            Err(e) => eprintln!("warning: could not record series: {e}"),
+        }
+    }
 }

@@ -37,7 +37,9 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::broker::dispatch::Dispatcher;
-use crate::broker::persistence::{NoopPersister, Persister, RecoveredState};
+use crate::broker::persistence::{
+    MutexBackend, NoopPersister, PersistBackend, Persister, RecoveredState,
+};
 use crate::broker::protocol::{ClientRequest, EncodedProps, MessageProps, QueueOptions, ServerMsg};
 use crate::broker::queue::{Consumer, DeadReason, NackOutcome, PendingDead, Queue, QueuedMessage};
 use crate::broker::router::Router;
@@ -197,7 +199,12 @@ pub struct BrokerCore {
     connections: Connections,
     /// consumer_tag -> queue name (global duplicate detection + cancel).
     consumer_index: Mutex<HashMap<String, String>>,
-    persister: Mutex<Box<dyn Persister>>,
+    /// The durability backend. Internally synchronised (`&self` record
+    /// surface) — a `SegmentedWal` appends under per-segment locks and
+    /// group-commits on a syncer thread, so shards no longer serialise on
+    /// one global persister mutex. Legacy `Persister` impls ride behind a
+    /// [`MutexBackend`] adapter.
+    persister: Arc<dyn PersistBackend>,
     dispatcher: Dispatcher,
     next_msg: AtomicU64,
     pub metrics: Registry,
@@ -213,6 +220,9 @@ pub struct BrokerCore {
     ctr_expired: Arc<Counter>,
     /// Dead messages actually re-published onto a dead-letter exchange.
     ctr_dlx_republished: Arc<Counter>,
+    /// WAL compaction failures (disk full, I/O error) — surfaced instead
+    /// of swallowed so operators see a log that can no longer shrink.
+    ctr_wal_compact_errors: Arc<Counter>,
 }
 
 impl Default for BrokerHandle {
@@ -234,8 +244,20 @@ impl BrokerHandle {
     }
 
     /// Full control over sharding and batching (benches sweep these).
+    /// The boxed [`Persister`] is adapted behind one mutex; use
+    /// [`BrokerHandle::with_backend`] with a `SegmentedWal` for durability
+    /// that scales with the shards.
     pub fn with_config(
-        mut persister: Box<dyn Persister>,
+        persister: Box<dyn Persister>,
+        recovered: RecoveredState,
+        config: BrokerConfig,
+    ) -> Self {
+        Self::with_backend(Arc::new(MutexBackend::new(persister)), recovered, config)
+    }
+
+    /// A broker on a concurrent durability backend (see [`PersistBackend`]).
+    pub fn with_backend(
+        persister: Arc<dyn PersistBackend>,
         recovered: RecoveredState,
         config: BrokerConfig,
     ) -> Self {
@@ -296,6 +318,10 @@ impl BrokerHandle {
         let ctr_dead_lettered = metrics.counter("broker.dead_lettered_total");
         let ctr_expired = metrics.counter("broker.expired_total");
         let ctr_dlx_republished = metrics.counter("broker.dlx_republished_total");
+        let ctr_wal_compact_errors = metrics.counter("broker.wal_compact_errors_total");
+        // Backends with internal counters (the segmented WAL's append /
+        // fsync / byte totals) surface them through the broker registry.
+        persister.register_metrics(&metrics);
         BrokerHandle {
             core: Arc::new(BrokerCore {
                 router,
@@ -306,7 +332,7 @@ impl BrokerHandle {
                     map: RwLock::new(HashMap::new()),
                 },
                 consumer_index: Mutex::new(HashMap::new()),
-                persister: Mutex::new(persister),
+                persister,
                 dispatcher,
                 next_msg: AtomicU64::new(next_msg),
                 metrics,
@@ -316,6 +342,7 @@ impl BrokerHandle {
                 ctr_dead_lettered,
                 ctr_expired,
                 ctr_dlx_republished,
+                ctr_wal_compact_errors,
             }),
         }
     }
@@ -427,9 +454,8 @@ impl BrokerHandle {
             // of the requeued messages survive a broker restart, so the
             // max_delivery cap keeps counting across crashes.
             if !out.requeue_log.is_empty() {
-                let mut p = core.persister.lock().unwrap();
                 for (qname, entries) in out.requeue_log {
-                    p.record_requeue_batch(&qname, &entries).ok();
+                    core.persister.record_requeue_batch(&qname, &entries).ok();
                 }
             }
         }
@@ -565,7 +591,7 @@ impl BrokerHandle {
                 };
                 let n = ids.len();
                 if durable && !ids.is_empty() {
-                    core.persister.lock().unwrap().record_retire_batch(queue, &ids)?;
+                    core.persister.record_retire_batch(queue, &ids)?;
                 }
                 Ok(Value::map([("purged", Value::from(n))]))
             }
@@ -730,7 +756,7 @@ impl BrokerHandle {
         };
         if let Some((msg_id, durable, qname)) = outcome {
             if let (Some(id), true) = (msg_id, durable) {
-                core.persister.lock().unwrap().record_retire(&qname, id)?;
+                core.persister.record_retire(&qname, id)?;
             }
             core.ctr_acked.inc();
             dispatches.push(qname);
@@ -772,9 +798,8 @@ impl BrokerHandle {
                 }
             }
             if !retires.is_empty() {
-                let mut p = core.persister.lock().unwrap();
                 for (qname, ids) in retires {
-                    p.record_retire_batch(&qname, &ids)?;
+                    core.persister.record_retire_batch(&qname, &ids)?;
                 }
             }
             core.ctr_acked.add(acked);
@@ -837,9 +862,8 @@ impl BrokerHandle {
                 }
             }
             if !requeue_log.is_empty() {
-                let mut p = core.persister.lock().unwrap();
                 for (qname, entries) in requeue_log {
-                    p.record_requeue_batch(&qname, &entries)?;
+                    core.persister.record_requeue_batch(&qname, &entries)?;
                 }
             }
         }
@@ -897,12 +921,18 @@ impl BrokerHandle {
             self.process_dead_letters(pending, &mut dispatches);
         }
         self.run_dispatches(dispatches);
-        core.persister.lock().unwrap().maybe_compact().ok();
+        // Compaction failure means the log can no longer shrink (disk
+        // full, I/O error) — log it and count it; swallowing it here hid
+        // exactly the failures an operator needs to see coming.
+        if let Err(e) = core.persister.maybe_compact() {
+            core.ctr_wal_compact_errors.inc();
+            log::error!("broker: WAL compaction failed: {e}");
+        }
     }
 
     /// Force WAL sync (graceful shutdown path).
     pub fn sync(&self) -> Result<()> {
-        self.core.persister.lock().unwrap().sync()
+        self.core.persister.sync()
     }
 
     /// Queue depth (ready) — test/bench convenience.
@@ -976,7 +1006,7 @@ impl BrokerHandle {
             }
             let owner = options.exclusive.then_some(entry.id);
             if options.durable {
-                core.persister.lock().unwrap().record_queue_declare(name, &options)?;
+                core.persister.record_queue_declare(name, &options)?;
             }
             if owner.is_some() {
                 entry.exclusive_queues.lock().unwrap().insert(name.to_string());
@@ -1042,7 +1072,7 @@ impl BrokerHandle {
             q.options.durable
         };
         if durable {
-            core.persister.lock().unwrap().record_queue_delete(name)?;
+            core.persister.record_queue_delete(name)?;
         }
         core.router.unregister_queue(name);
         // Tell owners their consumer is gone.
@@ -1148,26 +1178,29 @@ impl BrokerHandle {
                 ));
             }
             {
-                // Write-ahead, group-committed: one WAL append (and at most
-                // one fsync) for every durable copy this shard receives.
+                // Write-ahead, group-committed: one WAL append pass for
+                // every durable copy this shard receives.
                 //
                 // Deliberate trade-off: the WAL write happens while this
                 // shard's lock is held, so the existence check, the log
                 // append and the enqueue are atomic (no orphan WAL records
                 // for concurrently-deleted queues, and queue order always
-                // matches WAL order). Under `SyncPolicy::Always` that means
-                // an fsync inside the shard lock — durable publishes to one
-                // shard serialise on it, exactly as the whole broker used to
-                // on the old global lock; non-durable traffic and other
-                // shards are unaffected. Use `EveryN` (the default) to
-                // amortise.
+                // matches WAL order). With the segmented backend the append
+                // itself only takes this shard's own segment lock, and
+                // fsync runs on the syncer thread — under
+                // `SyncPolicy::Always` the publisher parks on the segment's
+                // commit point (shard lock still held, so durable publishes
+                // to ONE shard serialise on its commit latency), while
+                // other shards append and commit in parallel. `EveryN`
+                // (the default) doesn't wait at all — the fsync is
+                // pipelined behind the publish.
                 let wal_batch: Vec<(&str, &QueuedMessage)> = to_enqueue
                     .iter()
                     .filter(|(_, _, durable)| *durable)
                     .map(|(q, m, _)| (&**q, m))
                     .collect();
                 if !wal_batch.is_empty() {
-                    core.persister.lock().unwrap().record_publish_batch(&wal_batch)?;
+                    core.persister.record_publish_batch(&wal_batch)?;
                 }
             }
             for (qname, msg, _durable) in to_enqueue {
@@ -1235,9 +1268,10 @@ impl BrokerHandle {
             // the message in its source queue), never to duplication.
             let mut retire_failed: Vec<(Arc<str>, DeadReason)> = Vec::new();
             if !retires.is_empty() {
-                let mut p = core.persister.lock().unwrap();
                 for (q, reason, ids) in retires {
-                    if let Err(e) = p.record_retire_reason_batch(&q, &ids, reason.as_str()) {
+                    if let Err(e) =
+                        core.persister.record_retire_reason_batch(&q, &ids, reason.as_str())
+                    {
                         log::error!(
                             "broker: WAL retire of {} dead message(s) from '{q}' failed: {e}; \
                              deferring them to recovery",

@@ -17,16 +17,40 @@
 //! byte-identical to what the publisher encoded.
 //! The log is compacted (rewritten with only live records) once the dead
 //! fraction passes a threshold.
+//!
+//! Two write paths exist:
+//!
+//! * [`WalPersister`] — the original single-file log behind a [`Persister`]
+//!   trait object; still used by tests and as the single-mutex baseline in
+//!   the durability bench (wrapped in a [`MutexBackend`]).
+//! * [`SegmentedWal`] — the production path: the log is sharded into
+//!   per-queue-shard segment files (`seg-<i>.log` inside a directory, the
+//!   same name hash as `ShardSet::index_for`), so durable traffic on
+//!   different shards appends under different locks. Within a segment,
+//!   *append* is split from *commit*: appenders hold a short per-segment
+//!   lock only long enough to buffer+flush their records and bump the
+//!   segment's append sequence; `fsync` runs on a dedicated syncer thread
+//!   that batches every segment's dirty file into one pass (pipelined
+//!   group commit), and callers that need durability (`SyncPolicy::Always`)
+//!   park on the segment's commit sequence — no lock is ever held across
+//!   `sync_all`. Recovery replays all segments in parallel and merges
+//!   them; compaction rewrites one segment at a time, stalling only the
+//!   shard that owns it.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
+use std::hash::{Hash, Hasher};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::broker::protocol::{EncodedProps, MessageProps, QueueOptions};
 use crate::broker::queue::QueuedMessage;
 use crate::error::{Error, Result};
+use crate::metrics::{Counter, Registry};
 use crate::wire::{codec, Bytes, Value};
 
 const KIND_PUBLISH: u8 = 1;
@@ -669,6 +693,859 @@ pub fn replay(path: &Path) -> Result<RecoveredState> {
     Ok(state)
 }
 
+/// Stable queue-name → segment-index mapping. Deliberately the same hash
+/// as `ShardSet::index_for`, so with `segments == shards` a queue's WAL
+/// records land in exactly its shard's segment file and durable publishes
+/// on different shards never touch the same segment lock.
+pub fn segment_index_for(queue: &str, segments: usize) -> usize {
+    let mut h = DefaultHasher::new();
+    queue.hash(&mut h);
+    (h.finish() % segments.max(1) as u64) as usize
+}
+
+/// A concurrent durability backend: the same record surface as
+/// [`Persister`] but through `&self` — implementations synchronise
+/// internally, so the broker core holds a plain `Arc` instead of a global
+/// `Mutex<Box<dyn Persister>>` and shards stop serialising on durability.
+pub trait PersistBackend: Send + Sync {
+    /// Group-commit a batch of publishes. Entries may span queues; the
+    /// backend routes each to its queue's segment.
+    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)]) -> Result<()>;
+    fn record_retire(&self, queue: &str, msg_id: u64) -> Result<()>;
+    fn record_retire_batch(&self, queue: &str, msg_ids: &[u64]) -> Result<()>;
+    fn record_retire_reason(&self, queue: &str, msg_id: u64, reason: &str) -> Result<()>;
+    fn record_retire_reason_batch(&self, queue: &str, msg_ids: &[u64], reason: &str)
+        -> Result<()>;
+    fn record_requeue_batch(&self, queue: &str, entries: &[(u64, u32)]) -> Result<()>;
+    fn record_queue_declare(&self, queue: &str, options: &QueueOptions) -> Result<()>;
+    fn record_queue_delete(&self, queue: &str) -> Result<()>;
+    /// Force everything to stable storage (shutdown, explicit flushes).
+    fn sync(&self) -> Result<()>;
+    /// Opportunity to compact; called periodically by the broker's sweep.
+    fn maybe_compact(&self) -> Result<()>;
+    /// Install any internally-maintained counters into the broker's
+    /// metrics registry. Default: nothing to expose.
+    fn register_metrics(&self, _registry: &Registry) {}
+}
+
+/// Adapter: any [`Persister`] behind one mutex. This is both the
+/// compatibility path for existing constructors/tests and the
+/// "single global lock" baseline the durability bench compares against.
+pub struct MutexBackend {
+    inner: Mutex<Box<dyn Persister>>,
+}
+
+impl MutexBackend {
+    pub fn new(persister: Box<dyn Persister>) -> Self {
+        MutexBackend { inner: Mutex::new(persister) }
+    }
+}
+
+impl PersistBackend for MutexBackend {
+    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)]) -> Result<()> {
+        self.inner.lock().unwrap().record_publish_batch(entries)
+    }
+    fn record_retire(&self, queue: &str, msg_id: u64) -> Result<()> {
+        self.inner.lock().unwrap().record_retire(queue, msg_id)
+    }
+    fn record_retire_batch(&self, queue: &str, msg_ids: &[u64]) -> Result<()> {
+        self.inner.lock().unwrap().record_retire_batch(queue, msg_ids)
+    }
+    fn record_retire_reason(&self, queue: &str, msg_id: u64, reason: &str) -> Result<()> {
+        self.inner.lock().unwrap().record_retire_reason(queue, msg_id, reason)
+    }
+    fn record_retire_reason_batch(
+        &self,
+        queue: &str,
+        msg_ids: &[u64],
+        reason: &str,
+    ) -> Result<()> {
+        self.inner.lock().unwrap().record_retire_reason_batch(queue, msg_ids, reason)
+    }
+    fn record_requeue_batch(&self, queue: &str, entries: &[(u64, u32)]) -> Result<()> {
+        self.inner.lock().unwrap().record_requeue_batch(queue, entries)
+    }
+    fn record_queue_declare(&self, queue: &str, options: &QueueOptions) -> Result<()> {
+        self.inner.lock().unwrap().record_queue_declare(queue, options)
+    }
+    fn record_queue_delete(&self, queue: &str) -> Result<()> {
+        self.inner.lock().unwrap().record_queue_delete(queue)
+    }
+    fn sync(&self) -> Result<()> {
+        self.inner.lock().unwrap().sync()
+    }
+    fn maybe_compact(&self) -> Result<()> {
+        self.inner.lock().unwrap().maybe_compact()
+    }
+}
+
+/// Shared WAL counters: records appended, fsync passes, bytes written and
+/// the largest record batch one group-commit fsync retired. The broker
+/// installs these into its metrics registry (`broker.wal_*`); the
+/// durability bench reads the same handles directly.
+#[derive(Clone, Default)]
+pub struct WalStats {
+    pub appends: Arc<Counter>,
+    pub fsyncs: Arc<Counter>,
+    pub bytes: Arc<Counter>,
+    pub batch_max: Arc<Counter>,
+}
+
+/// Commit point of one segment: how far the file is known durable, plus
+/// the last failed attempt (so waiters surface fsync errors instead of
+/// hanging). `failed` is cleared by the next successful pass.
+#[derive(Default)]
+struct CommitPoint {
+    committed_seq: u64,
+    failed: Option<(u64, String)>,
+}
+
+/// Mutable half of one segment, behind its short append lock.
+struct SegmentInner {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    /// Publishes since the last requested fsync (`SyncPolicy::EveryN`).
+    unsynced: u32,
+    live: u64,
+    total: u64,
+    /// In-memory shadow used for compaction, as in [`WalPersister`].
+    shadow: RecoveredState,
+    /// Records appended *and flushed to the file* so far — the sequence
+    /// number committers park on. Monotonic across compactions.
+    appended_seq: u64,
+}
+
+impl SegmentInner {
+    /// Append one codec-encoded record; returns its on-disk size.
+    fn append_value(&mut self, kind: u8, payload: &Value) -> Result<u64> {
+        let bytes = codec::encode_to_vec(payload);
+        write_record(&mut self.writer, kind, &[bytes.as_slice()])?;
+        self.total += 1;
+        Ok(9 + bytes.len() as u64)
+    }
+
+    fn append_publish(&mut self, queue: &str, msg: &QueuedMessage) -> Result<u64> {
+        let env = codec::encode_to_vec(&publish_envelope(queue, msg));
+        let size = 9 + env.len() as u64 + msg.props.bytes().len() as u64 + msg.body.len() as u64;
+        write_record(
+            &mut self.writer,
+            KIND_PUBLISH,
+            &[env.as_slice(), msg.props.bytes().as_slice(), msg.body.as_slice()],
+        )?;
+        self.total += 1;
+        self.live += 1;
+        self.shadow.messages.entry(queue.to_string()).or_default().push(msg.clone());
+        Ok(size)
+    }
+
+    fn retire_one(&mut self, queue: &str, msg_id: u64) -> Result<u64> {
+        let n = self.append_value(
+            KIND_RETIRE,
+            &Value::map([("queue", Value::str(queue)), ("msg_id", Value::from(msg_id))]),
+        )?;
+        self.forget(queue, msg_id);
+        Ok(n)
+    }
+
+    fn retire_reason_one(&mut self, queue: &str, msg_id: u64, reason: &str) -> Result<u64> {
+        let n = self.append_value(
+            KIND_RETIRE_REASON,
+            &Value::map([
+                ("queue", Value::str(queue)),
+                ("msg_id", Value::from(msg_id)),
+                ("reason", Value::str(reason)),
+            ]),
+        )?;
+        self.forget(queue, msg_id);
+        Ok(n)
+    }
+
+    fn requeue_one(&mut self, queue: &str, msg_id: u64, delivery_count: u32) -> Result<u64> {
+        let n = self.append_value(
+            KIND_REQUEUE,
+            &Value::map([
+                ("queue", Value::str(queue)),
+                ("msg_id", Value::from(msg_id)),
+                ("delivery_count", Value::from(u64::from(delivery_count))),
+            ]),
+        )?;
+        if let Some(msgs) = self.shadow.messages.get_mut(queue) {
+            if let Some(m) = msgs.iter_mut().find(|m| m.msg_id == msg_id) {
+                m.delivery_count = delivery_count;
+                m.redelivered = true;
+            }
+        }
+        Ok(n)
+    }
+
+    fn forget(&mut self, queue: &str, msg_id: u64) {
+        self.live = self.live.saturating_sub(1);
+        if let Some(msgs) = self.shadow.messages.get_mut(queue) {
+            if let Some(pos) = msgs.iter().position(|m| m.msg_id == msg_id) {
+                msgs.remove(pos);
+            }
+        }
+    }
+
+    fn dead_fraction(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        1.0 - self.live as f64 / self.total as f64
+    }
+
+    /// Rewrite this segment with only live content. Atomic via temp +
+    /// rename; holds only this segment's lock, so other shards publish on.
+    fn compact(&mut self) -> Result<()> {
+        let tmp = self.path.with_extension("log.tmp");
+        {
+            let file = File::create(&tmp)?;
+            let mut w = WalWriter { writer: BufWriter::new(file) };
+            for (q, opts) in &self.shadow.queues {
+                w.append(
+                    KIND_QUEUE_DECLARE,
+                    &Value::map([("queue", Value::str(q)), ("options", opts.to_value())]),
+                )?;
+            }
+            for (q, msgs) in &self.shadow.messages {
+                for m in msgs {
+                    w.append_publish(q, m)?;
+                }
+            }
+            w.writer.flush()?;
+            w.writer.get_ref().sync_all()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        let file = OpenOptions::new().append(true).open(&self.path)?;
+        self.writer = BufWriter::new(file);
+        self.live = self.shadow.message_count() as u64;
+        self.total = self.live;
+        Ok(())
+    }
+}
+
+/// One WAL segment: short append lock + separate commit point, so a
+/// committer waiting for fsync never blocks appenders.
+struct WalSegment {
+    index: usize,
+    inner: Mutex<SegmentInner>,
+    commit: Mutex<CommitPoint>,
+    commit_cv: Condvar,
+}
+
+impl WalSegment {
+    /// Park until `seq` is durable (or its fsync failed).
+    fn wait_committed(&self, seq: u64) -> Result<()> {
+        let mut point = self.commit.lock().unwrap();
+        loop {
+            if point.committed_seq >= seq {
+                return Ok(());
+            }
+            if let Some((failed_seq, msg)) = &point.failed {
+                if *failed_seq >= seq {
+                    return Err(Error::Persistence(format!(
+                        "wal segment {} fsync failed: {msg}",
+                        self.index
+                    )));
+                }
+            }
+            point = self.commit_cv.wait(point).unwrap();
+        }
+    }
+
+    /// Record the outcome of a durability attempt up to `seq` and wake
+    /// parked committers. Returns how many records this attempt newly
+    /// committed (0 on failure or a stale seq).
+    fn complete(&self, seq: u64, result: std::result::Result<(), String>) -> u64 {
+        let mut point = self.commit.lock().unwrap();
+        let newly = match result {
+            Ok(()) => {
+                let prev = point.committed_seq;
+                if seq > prev {
+                    point.committed_seq = seq;
+                }
+                point.failed = None;
+                seq.saturating_sub(prev)
+            }
+            Err(msg) => {
+                point.failed = Some((seq, msg));
+                0
+            }
+        };
+        drop(point);
+        self.commit_cv.notify_all();
+        newly
+    }
+}
+
+/// Wakeup channel between appenders and the syncer thread.
+struct SyncShared {
+    state: Mutex<SyncState>,
+    cv: Condvar,
+    /// Upper bound on commit latency: the syncer also scans on this tick
+    /// even without a kick, so `EveryN` residue still reaches disk.
+    interval: Duration,
+}
+
+#[derive(Default)]
+struct SyncState {
+    pending: bool,
+    stop: bool,
+}
+
+/// The pipelined group-commit loop: one pass fsyncs every dirty segment.
+/// Runs with NO segment lock held during `sync_all` — appenders on all
+/// shards keep appending while the disk works; their records simply join
+/// the next pass. `try_lock` keeps a compacting segment (which advances
+/// its own commit point when done) from stalling the others.
+fn syncer_loop(segments: Vec<Arc<WalSegment>>, shared: Arc<SyncShared>, stats: WalStats) {
+    let mut state = shared.state.lock().unwrap();
+    loop {
+        while !state.pending && !state.stop {
+            let (s, timeout) = shared.cv.wait_timeout(state, shared.interval).unwrap();
+            state = s;
+            if timeout.timed_out() {
+                break; // interval tick: scan even without a kick
+            }
+        }
+        if state.stop {
+            return;
+        }
+        state.pending = false;
+        drop(state);
+
+        for seg in &segments {
+            // Capture the durability target under the short append lock:
+            // appenders flush before releasing it, so a dup of the fd
+            // covers everything up to appended_seq.
+            let captured = match seg.inner.try_lock() {
+                Ok(inner) => {
+                    let committed = seg.commit.lock().unwrap().committed_seq;
+                    if inner.appended_seq == committed {
+                        None
+                    } else {
+                        match inner.writer.get_ref().try_clone() {
+                            Ok(f) => Some((f, inner.appended_seq)),
+                            Err(e) => {
+                                let seq = inner.appended_seq;
+                                drop(inner);
+                                log::error!(
+                                    "wal: cannot dup segment {} fd for fsync: {e}",
+                                    seg.index
+                                );
+                                seg.complete(seq, Err(e.to_string()));
+                                None
+                            }
+                        }
+                    }
+                }
+                // Busy (append in flight or compaction); the next kick or
+                // interval tick catches it.
+                Err(_) => None,
+            };
+            if let Some((file, seq)) = captured {
+                // The expensive part: no segment lock held.
+                let result = file.sync_all().map_err(|e| e.to_string());
+                match &result {
+                    Ok(()) => stats.fsyncs.inc(),
+                    Err(e) => log::error!("wal: fsync of segment {} failed: {e}", seg.index),
+                }
+                let newly = seg.complete(seq, result);
+                if newly > 0 {
+                    stats.batch_max.record_max(newly);
+                }
+            }
+        }
+
+        state = shared.state.lock().unwrap();
+    }
+}
+
+/// The segmented, group-committing WAL (see the module docs for the
+/// design). Open one with [`SegmentedWal::open`]; it is `Sync` and meant
+/// to live in an `Arc` shared by every broker shard.
+pub struct SegmentedWal {
+    dir: PathBuf,
+    segments: Vec<Arc<WalSegment>>,
+    policy: SyncPolicy,
+    shared: Arc<SyncShared>,
+    stats: WalStats,
+    syncer: Option<JoinHandle<()>>,
+}
+
+impl SegmentedWal {
+    /// Open (or create) a segmented WAL directory at `path` with
+    /// `segments` segment files, replaying any existing content — all
+    /// segments in parallel — into the returned [`RecoveredState`].
+    ///
+    /// Migrations handled here: a legacy single-file WAL at `path` is
+    /// replayed, moved aside to `<path>.legacy`, and its records re-homed
+    /// into segments; a directory written with a *different* segment
+    /// count is detected (stray file indexes, or queues whose hash no
+    /// longer matches their file) and re-partitioned the same way.
+    pub fn open(
+        path: impl AsRef<Path>,
+        segments: usize,
+        policy: SyncPolicy,
+        commit_interval: Duration,
+    ) -> Result<(Self, RecoveredState)> {
+        let dir = path.as_ref().to_path_buf();
+        let n = segments.max(1);
+
+        let mut legacy: Option<RecoveredState> = None;
+        if dir.is_file() {
+            let state = replay(&dir)?;
+            let mut backup = dir.clone().into_os_string();
+            backup.push(".legacy");
+            std::fs::rename(&dir, PathBuf::from(backup))?;
+            log::info!(
+                "wal: migrated legacy single-file log ({} live messages) into {n} segments",
+                state.message_count()
+            );
+            legacy = Some(state);
+        }
+        std::fs::create_dir_all(&dir)?;
+
+        let files = list_segment_files(&dir)?;
+        let replayed = replay_segments_parallel(&files)?;
+
+        let needs_rehome = legacy.is_some()
+            || replayed.iter().any(|(idx, _)| *idx >= n)
+            || replayed.iter().any(|(idx, st)| {
+                st.queues
+                    .keys()
+                    .chain(st.messages.keys())
+                    .any(|q| segment_index_for(q, n) != *idx)
+            });
+
+        let mut merged = RecoveredState::default();
+        for (_, st) in &replayed {
+            merge_into(&mut merged, st);
+        }
+        if let Some(st) = &legacy {
+            merge_into(&mut merged, st);
+        }
+        // msg_ids are allocated monotonically (and the broker re-seeds the
+        // allocator past the recovered max), so per-queue id order IS
+        // publish order — relevant only after a re-homing merge.
+        for msgs in merged.messages.values_mut() {
+            msgs.sort_by_key(|m| m.msg_id);
+        }
+
+        let mut shadows: Vec<RecoveredState> = (0..n).map(|_| RecoveredState::default()).collect();
+        if needs_rehome {
+            for (q, opts) in &merged.queues {
+                shadows[segment_index_for(q, n)].queues.insert(q.clone(), opts.clone());
+            }
+            for (q, msgs) in &merged.messages {
+                shadows[segment_index_for(q, n)].messages.insert(q.clone(), msgs.clone());
+            }
+        } else {
+            for (idx, st) in replayed {
+                shadows[idx] = st;
+            }
+        }
+
+        let mut segs = Vec::with_capacity(n);
+        for (i, shadow) in shadows.into_iter().enumerate() {
+            let seg_path = dir.join(format!("seg-{i}.log"));
+            let file = OpenOptions::new().create(true).append(true).open(&seg_path)?;
+            let live = shadow.message_count() as u64;
+            segs.push(Arc::new(WalSegment {
+                index: i,
+                inner: Mutex::new(SegmentInner {
+                    path: seg_path,
+                    writer: BufWriter::new(file),
+                    unsynced: 0,
+                    live,
+                    total: live,
+                    shadow,
+                    appended_seq: 0,
+                }),
+                commit: Mutex::new(CommitPoint::default()),
+                commit_cv: Condvar::new(),
+            }));
+        }
+
+        if needs_rehome {
+            // Materialise the new partition: rewrite every segment from
+            // its shadow, then drop files the new mapping no longer owns.
+            for seg in &segs {
+                seg.inner.lock().unwrap().compact()?;
+            }
+            for (idx, stray) in &files {
+                if *idx >= n {
+                    std::fs::remove_file(stray).ok();
+                }
+            }
+        }
+
+        let stats = WalStats::default();
+        let shared = Arc::new(SyncShared {
+            state: Mutex::new(SyncState::default()),
+            cv: Condvar::new(),
+            interval: commit_interval.max(Duration::from_micros(50)),
+        });
+        // `Os` never fsyncs in-line with traffic, so it needs no syncer;
+        // explicit `sync()` (shutdown) still flushes synchronously.
+        let syncer = if matches!(policy, SyncPolicy::Os) {
+            None
+        } else {
+            let segs2 = segs.clone();
+            let shared2 = Arc::clone(&shared);
+            let stats2 = stats.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("kiwi-wal-sync".into())
+                    .spawn(move || syncer_loop(segs2, shared2, stats2))?,
+            )
+        };
+
+        let wal = SegmentedWal { dir, segments: segs, policy, shared, stats, syncer };
+        wal.maybe_compact()?;
+        Ok((wal, merged))
+    }
+
+    /// The directory holding the segment files.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Live WAL counters — the same handles `register_metrics` installs.
+    pub fn stats(&self) -> &WalStats {
+        &self.stats
+    }
+
+    fn segment_for(&self, queue: &str) -> &Arc<WalSegment> {
+        &self.segments[segment_index_for(queue, self.segments.len())]
+    }
+
+    /// Wake the syncer for a new group-commit pass.
+    fn kick(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.pending {
+            st.pending = true;
+            self.shared.cv.notify_one();
+        }
+    }
+
+    /// Append side records (retires, requeues, declares) for one queue
+    /// under its segment's short lock; the closure returns
+    /// `(records, bytes)` appended. Side records never fsync inline —
+    /// exactly the original `WalPersister` semantics.
+    fn append_side(
+        &self,
+        queue: &str,
+        f: impl FnOnce(&mut SegmentInner) -> Result<(u64, u64)>,
+    ) -> Result<()> {
+        let seg = self.segment_for(queue);
+        let mut inner = seg.inner.lock().unwrap();
+        let (records, bytes) = f(&mut inner)?;
+        if records == 0 {
+            return Ok(());
+        }
+        inner.writer.flush()?;
+        inner.appended_seq += records;
+        drop(inner);
+        self.stats.appends.add(records);
+        self.stats.bytes.add(bytes);
+        Ok(())
+    }
+
+    /// Append a publish batch to one segment and apply the sync policy:
+    /// `Always` parks on the commit point (lock released), a crossed
+    /// `EveryN` budget kicks the syncer without waiting (pipelined), `Os`
+    /// just flushes.
+    fn publish_to_segment(
+        &self,
+        seg: &Arc<WalSegment>,
+        entries: &[(&str, &QueuedMessage)],
+    ) -> Result<()> {
+        let mut wait = false;
+        let mut kick = false;
+        let seq;
+        {
+            let mut inner = seg.inner.lock().unwrap();
+            let mut bytes = 0u64;
+            for (queue, m) in entries.iter().copied() {
+                bytes += inner.append_publish(queue, m)?;
+            }
+            inner.writer.flush()?;
+            inner.appended_seq += entries.len() as u64;
+            seq = inner.appended_seq;
+            match self.policy {
+                SyncPolicy::Always => {
+                    wait = true;
+                    kick = true;
+                }
+                SyncPolicy::EveryN(limit) => {
+                    inner.unsynced = inner.unsynced.saturating_add(entries.len() as u32);
+                    if inner.unsynced >= limit {
+                        inner.unsynced = 0;
+                        kick = true;
+                    }
+                }
+                SyncPolicy::Os => {}
+            }
+            self.stats.appends.add(entries.len() as u64);
+            self.stats.bytes.add(bytes);
+        }
+        if kick {
+            self.kick();
+        }
+        if wait {
+            seg.wait_committed(seq)?;
+        }
+        Ok(())
+    }
+}
+
+impl PersistBackend for SegmentedWal {
+    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        let n = self.segments.len();
+        if n == 1 {
+            return self.publish_to_segment(&self.segments[0], entries);
+        }
+        if entries.len() == 1 {
+            let seg = self.segment_for(entries[0].0);
+            return self.publish_to_segment(seg, entries);
+        }
+        let mut groups: Vec<Vec<(&str, &QueuedMessage)>> = (0..n).map(|_| Vec::new()).collect();
+        for (q, m) in entries.iter().copied() {
+            groups[segment_index_for(q, n)].push((q, m));
+        }
+        for (i, group) in groups.iter().enumerate() {
+            if !group.is_empty() {
+                self.publish_to_segment(&self.segments[i], group)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn record_retire(&self, queue: &str, msg_id: u64) -> Result<()> {
+        self.append_side(queue, |inner| Ok((1, inner.retire_one(queue, msg_id)?)))
+    }
+
+    fn record_retire_batch(&self, queue: &str, msg_ids: &[u64]) -> Result<()> {
+        if msg_ids.is_empty() {
+            return Ok(());
+        }
+        self.append_side(queue, |inner| {
+            let mut bytes = 0;
+            for id in msg_ids {
+                bytes += inner.retire_one(queue, *id)?;
+            }
+            Ok((msg_ids.len() as u64, bytes))
+        })
+    }
+
+    fn record_retire_reason(&self, queue: &str, msg_id: u64, reason: &str) -> Result<()> {
+        self.append_side(queue, |inner| Ok((1, inner.retire_reason_one(queue, msg_id, reason)?)))
+    }
+
+    fn record_retire_reason_batch(
+        &self,
+        queue: &str,
+        msg_ids: &[u64],
+        reason: &str,
+    ) -> Result<()> {
+        if msg_ids.is_empty() {
+            return Ok(());
+        }
+        self.append_side(queue, |inner| {
+            let mut bytes = 0;
+            for id in msg_ids {
+                bytes += inner.retire_reason_one(queue, *id, reason)?;
+            }
+            Ok((msg_ids.len() as u64, bytes))
+        })
+    }
+
+    fn record_requeue_batch(&self, queue: &str, entries: &[(u64, u32)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        self.append_side(queue, |inner| {
+            let mut bytes = 0;
+            for (id, count) in entries {
+                bytes += inner.requeue_one(queue, *id, *count)?;
+            }
+            Ok((entries.len() as u64, bytes))
+        })
+    }
+
+    fn record_queue_declare(&self, queue: &str, options: &QueueOptions) -> Result<()> {
+        self.append_side(queue, |inner| {
+            let n = inner.append_value(
+                KIND_QUEUE_DECLARE,
+                &Value::map([("queue", Value::str(queue)), ("options", options.to_value())]),
+            )?;
+            inner.shadow.queues.insert(queue.to_string(), options.clone());
+            Ok((1, n))
+        })
+    }
+
+    fn record_queue_delete(&self, queue: &str) -> Result<()> {
+        self.append_side(queue, |inner| {
+            let n = inner
+                .append_value(KIND_QUEUE_DELETE, &Value::map([("queue", Value::str(queue))]))?;
+            inner.shadow.queues.remove(queue);
+            if let Some(msgs) = inner.shadow.messages.remove(queue) {
+                inner.live = inner.live.saturating_sub(msgs.len() as u64);
+            }
+            Ok((1, n))
+        })
+    }
+
+    fn sync(&self) -> Result<()> {
+        let mut first_err = None;
+        for seg in &self.segments {
+            let mut inner = seg.inner.lock().unwrap();
+            let r = inner.writer.flush().and_then(|()| inner.writer.get_ref().sync_all());
+            inner.unsynced = 0;
+            let seq = inner.appended_seq;
+            drop(inner);
+            match r {
+                Ok(()) => {
+                    self.stats.fsyncs.inc();
+                    let newly = seg.complete(seq, Ok(()));
+                    if newly > 0 {
+                        self.stats.batch_max.record_max(newly);
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    seg.complete(seq, Err(msg.clone()));
+                    if first_err.is_none() {
+                        first_err = Some(Error::Persistence(format!(
+                            "wal segment {} sync failed: {msg}",
+                            seg.index
+                        )));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn maybe_compact(&self) -> Result<()> {
+        for seg in &self.segments {
+            let mut inner = seg.inner.lock().unwrap();
+            if inner.total > 1024 && inner.dead_fraction() > 0.5 {
+                inner.compact()?;
+                let seq = inner.appended_seq;
+                drop(inner);
+                // The rewrite fsynced everything live in this segment.
+                seg.complete(seq, Ok(()));
+            }
+        }
+        Ok(())
+    }
+
+    fn register_metrics(&self, registry: &Registry) {
+        registry.register_counter("broker.wal_appends_total", Arc::clone(&self.stats.appends));
+        registry.register_counter("broker.wal_fsyncs_total", Arc::clone(&self.stats.fsyncs));
+        registry.register_counter("broker.wal_bytes_total", Arc::clone(&self.stats.bytes));
+        registry.register_counter(
+            "broker.wal_group_commit_batch_max",
+            Arc::clone(&self.stats.batch_max),
+        );
+    }
+}
+
+impl Drop for SegmentedWal {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stop = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.syncer.take() {
+            h.join().ok();
+        }
+        // Clean shutdown loses nothing even under Os/EveryN: flush and
+        // fsync whatever is still buffered.
+        let _ = PersistBackend::sync(self);
+    }
+}
+
+fn merge_into(dst: &mut RecoveredState, src: &RecoveredState) {
+    for (q, opts) in &src.queues {
+        dst.queues.insert(q.clone(), opts.clone());
+    }
+    for (q, msgs) in &src.messages {
+        dst.messages.entry(q.clone()).or_default().extend(msgs.iter().cloned());
+    }
+}
+
+fn list_segment_files(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+    let mut files = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        if let Some(name) = name.to_str() {
+            if let Some(stem) = name.strip_prefix("seg-").and_then(|s| s.strip_suffix(".log")) {
+                if let Ok(idx) = stem.parse::<usize>() {
+                    files.push((idx, entry.path()));
+                }
+            }
+        }
+    }
+    files.sort_by_key(|(i, _)| *i);
+    Ok(files)
+}
+
+/// Replay each segment file on its own thread. Per-segment corruption
+/// handling is [`replay`]'s: every segment independently keeps its intact
+/// prefix, so damage in one file never costs another shard's messages.
+fn replay_segments_parallel(
+    files: &[(usize, PathBuf)],
+) -> Result<Vec<(usize, RecoveredState)>> {
+    if files.is_empty() {
+        return Ok(Vec::new());
+    }
+    std::thread::scope(|scope| -> Result<Vec<(usize, RecoveredState)>> {
+        let handles: Vec<_> = files
+            .iter()
+            .map(|(idx, path)| (*idx, scope.spawn(move || replay(path))))
+            .collect();
+        let mut out = Vec::with_capacity(handles.len());
+        for (idx, h) in handles {
+            let state = h
+                .join()
+                .map_err(|_| Error::Persistence("wal segment replay thread panicked".into()))??;
+            out.push((idx, state));
+        }
+        Ok(out)
+    })
+}
+
+/// Replay a segmented WAL directory read-only: all `seg-*.log` files in
+/// parallel, merged into one state. What [`SegmentedWal::open`] does
+/// before attaching writers; used by recovery tests and tooling.
+pub fn replay_dir(dir: &Path) -> Result<RecoveredState> {
+    let files = list_segment_files(dir)?;
+    let replayed = replay_segments_parallel(&files)?;
+    let mut merged = RecoveredState::default();
+    for (_, st) in &replayed {
+        merge_into(&mut merged, st);
+    }
+    for msgs in merged.messages.values_mut() {
+        msgs.sort_by_key(|m| m.msg_id);
+    }
+    Ok(merged)
+}
+
 /// Reconstitute a deadline for recovered messages at broker start.
 pub fn rearm_deadline(msg: &mut QueuedMessage, default_ttl_ms: Option<u64>, now: Instant) {
     let ttl = msg.props.expiration_ms.or(default_ttl_ms);
@@ -1037,5 +1914,280 @@ mod tests {
         let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(rec.messages["q"][0].body.as_slice(), m.body.as_slice());
         std::fs::remove_file(&path).ok();
+    }
+
+    // ---- segmented WAL ----
+
+    fn temp_seg_dir() -> PathBuf {
+        let id = TEST_ID.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("kiwi-walseg-test-{}-{id}", std::process::id()))
+    }
+
+    const TICK: Duration = Duration::from_micros(200);
+
+    #[test]
+    fn mutex_backend_delegates_to_persister() {
+        let path = temp_wal();
+        {
+            let (wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            let backend = MutexBackend::new(Box::new(wal));
+            backend.record_queue_declare("mb", &QueueOptions::durable()).unwrap();
+            let m = msg(1, "via-backend");
+            backend.record_publish_batch(&[("mb", &m)]).unwrap();
+            backend.sync().unwrap();
+        }
+        let (_, rec) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(rec.message_count(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn segmented_publish_recovers_across_reopen() {
+        let dir = temp_seg_dir();
+        let queues = ["seg-q-a", "seg-q-b", "seg-q-c", "seg-q-d", "seg-q-e"];
+        {
+            let (wal, rec) = SegmentedWal::open(&dir, 4, SyncPolicy::EveryN(8), TICK).unwrap();
+            assert_eq!(rec.message_count(), 0);
+            assert_eq!(wal.segment_count(), 4);
+            let mut id = 0u64;
+            for q in &queues {
+                wal.record_queue_declare(q, &QueueOptions::durable()).unwrap();
+                for _ in 0..3 {
+                    id += 1;
+                    let m = msg(id, "x");
+                    wal.record_publish_batch(&[(*q, &m)]).unwrap();
+                }
+            }
+            PersistBackend::sync(&wal).unwrap();
+        }
+        let (_wal, rec) = SegmentedWal::open(&dir, 4, SyncPolicy::EveryN(8), TICK).unwrap();
+        assert_eq!(rec.message_count(), 15);
+        assert_eq!(rec.queues.len(), 5);
+        // Each queue's records live in exactly its hash-mapped segment.
+        for q in &queues {
+            let seg_file = dir.join(format!("seg-{}.log", segment_index_for(q, 4)));
+            let st = replay(&seg_file).unwrap();
+            assert_eq!(st.messages.get(*q).map(Vec::len).unwrap_or(0), 3, "queue {q}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_spanning_segments_lands_each_queue_in_its_segment() {
+        let dir = temp_seg_dir();
+        let queues: Vec<String> = (0..6).map(|i| format!("span-q-{i}")).collect();
+        let msgs: Vec<QueuedMessage> = (0..6).map(|i| msg(i as u64 + 1, "spread")).collect();
+        {
+            let (wal, _) = SegmentedWal::open(&dir, 3, SyncPolicy::Os, TICK).unwrap();
+            let entries: Vec<(&str, &QueuedMessage)> =
+                queues.iter().map(String::as_str).zip(msgs.iter()).collect();
+            wal.record_publish_batch(&entries).unwrap();
+            PersistBackend::sync(&wal).unwrap();
+        }
+        let rec = replay_dir(&dir).unwrap();
+        assert_eq!(rec.message_count(), 6);
+        for q in &queues {
+            let st = replay(&dir.join(format!("seg-{}.log", segment_index_for(q, 3)))).unwrap();
+            assert_eq!(st.messages.get(q.as_str()).map(Vec::len).unwrap_or(0), 1, "queue {q}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn always_policy_survives_a_kill_after_publish_returns() {
+        // The kill-mid-group-commit property: once a durable publish
+        // returns under `Always`, its record must already be on disk —
+        // copy the files as-is (no clean shutdown) and recover from the
+        // copy, as a restart after SIGKILL would.
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 2, SyncPolicy::Always, TICK).unwrap();
+        wal.record_queue_declare("durable-q", &QueueOptions::durable()).unwrap();
+        let m = msg(1, "must-survive");
+        wal.record_publish_batch(&[("durable-q", &m)]).unwrap();
+        let crash_dir = temp_seg_dir();
+        std::fs::create_dir_all(&crash_dir).unwrap();
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let entry = entry.unwrap();
+            std::fs::copy(entry.path(), crash_dir.join(entry.file_name())).unwrap();
+        }
+        let rec = replay_dir(&crash_dir).unwrap();
+        assert_eq!(rec.message_count(), 1);
+        assert_eq!(rec.messages["durable-q"][0].body.as_slice(), m.body.as_slice());
+        drop(wal);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&crash_dir).ok();
+    }
+
+    #[test]
+    fn wal_counters_track_appends_fsyncs_and_batches() {
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 2, SyncPolicy::Always, TICK).unwrap();
+        let m1 = msg(1, "a");
+        let m2 = msg(2, "b");
+        wal.record_publish_batch(&[("counted", &m1), ("counted", &m2)]).unwrap();
+        let stats = wal.stats();
+        assert_eq!(stats.appends.get(), 2);
+        assert!(stats.fsyncs.get() >= 1, "Always publish must have fsynced");
+        assert!(stats.bytes.get() > 0);
+        assert!(stats.batch_max.get() >= 1);
+        drop(wal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncating_one_segment_leaves_the_others_whole() {
+        let dir = temp_seg_dir();
+        let queues: Vec<String> = (0..6).map(|i| format!("trunc-q-{i}")).collect();
+        {
+            let (wal, _) = SegmentedWal::open(&dir, 3, SyncPolicy::Os, TICK).unwrap();
+            for (i, q) in queues.iter().enumerate() {
+                let m = msg(i as u64 + 1, "independent");
+                wal.record_publish_batch(&[(q.as_str(), &m)]).unwrap();
+            }
+            PersistBackend::sync(&wal).unwrap();
+        }
+        // Find a non-empty segment and chop bytes off its tail.
+        let victim = (0..3)
+            .map(|i| dir.join(format!("seg-{i}.log")))
+            .find(|p| std::fs::metadata(p).map(|m| m.len() > 0).unwrap_or(false))
+            .expect("some segment has records");
+        let victim_msgs = replay(&victim).unwrap().message_count();
+        let len = std::fs::metadata(&victim).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&victim).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+        // The victim keeps its intact prefix (all but the torn last
+        // record); every other segment recovers everything it had.
+        assert_eq!(replay(&victim).unwrap().message_count(), victim_msgs - 1);
+        let rec = replay_dir(&dir).unwrap();
+        assert_eq!(rec.message_count(), queues.len() - 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_flat_file_wal_migrates_into_segments() {
+        let path = temp_seg_dir(); // starts life as a plain file path
+        {
+            let (mut wal, _) = WalPersister::open(&path, SyncPolicy::Os).unwrap();
+            wal.record_queue_declare("legacy-q", &QueueOptions::durable()).unwrap();
+            wal.record_publish("legacy-q", &msg(1, "old-world")).unwrap();
+            wal.record_publish("legacy-q", &msg(2, "old-world")).unwrap();
+            wal.sync().unwrap();
+        }
+        let (wal, rec) = SegmentedWal::open(&path, 2, SyncPolicy::Os, TICK).unwrap();
+        assert_eq!(rec.message_count(), 2);
+        assert!(rec.queues.contains_key("legacy-q"));
+        assert!(path.is_dir(), "wal path must have become a segment directory");
+        let mut backup = path.clone().into_os_string();
+        backup.push(".legacy");
+        let backup = PathBuf::from(backup);
+        assert!(backup.is_file(), "legacy file kept as a backup");
+        // Still usable: publish, close, replay.
+        let m = msg(3, "new-world");
+        wal.record_publish_batch(&[("legacy-q", &m)]).unwrap();
+        drop(wal); // clean close syncs
+        let rec = replay_dir(&path).unwrap();
+        assert_eq!(rec.message_count(), 3);
+        let ids: Vec<u64> = rec.messages["legacy-q"].iter().map(|m| m.msg_id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::remove_file(&backup).ok();
+    }
+
+    #[test]
+    fn changing_segment_count_rehomes_queues() {
+        let dir = temp_seg_dir();
+        let queues: Vec<String> = (0..8).map(|i| format!("rehome-q-{i}")).collect();
+        {
+            let (wal, _) = SegmentedWal::open(&dir, 2, SyncPolicy::Os, TICK).unwrap();
+            for (i, q) in queues.iter().enumerate() {
+                wal.record_queue_declare(q, &QueueOptions::durable()).unwrap();
+                let m = msg(i as u64 + 1, "payload");
+                wal.record_publish_batch(&[(q.as_str(), &m)]).unwrap();
+            }
+            PersistBackend::sync(&wal).unwrap();
+        }
+        {
+            let (wal, rec) = SegmentedWal::open(&dir, 5, SyncPolicy::Os, TICK).unwrap();
+            assert_eq!(rec.message_count(), 8, "nothing lost in the re-partition");
+            assert_eq!(rec.queues.len(), 8);
+            drop(wal);
+        }
+        for q in &queues {
+            let st = replay(&dir.join(format!("seg-{}.log", segment_index_for(q, 5)))).unwrap();
+            assert_eq!(
+                st.messages.get(q.as_str()).map(Vec::len).unwrap_or(0),
+                1,
+                "queue {q} must live in its new segment"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_of_one_segment_does_not_block_other_segments() {
+        // The isolation pin: hold one segment's append lock (what a
+        // long compaction does) and require a publish on a queue hashed
+        // to a DIFFERENT segment to complete anyway.
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 4, SyncPolicy::EveryN(64), TICK).unwrap();
+        let wal = Arc::new(wal);
+        let names =
+            ["iso-q-a", "iso-q-b", "iso-q-c", "iso-q-d", "iso-q-e", "iso-q-f", "iso-q-g"];
+        let qa = names[0];
+        let qb = names
+            .iter()
+            .copied()
+            .find(|q| segment_index_for(q, 4) != segment_index_for(qa, 4))
+            .expect("two queues on different segments");
+        let guard = wal.segments[segment_index_for(qa, 4)].inner.lock().unwrap();
+        let w2 = Arc::clone(&wal);
+        let t = std::thread::spawn(move || {
+            let m = msg(1, "other-shard");
+            w2.record_publish_batch(&[(qb, &m)]).unwrap();
+        });
+        let t0 = Instant::now();
+        while !t.is_finished() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "publish on segment {} must not block on held segment {}",
+                segment_index_for(qb, 4),
+                segment_index_for(qa, 4)
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        t.join().unwrap();
+        drop(guard);
+        drop(wal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_always_publishers_all_durable() {
+        // Many threads parking on per-segment commit points at once: all
+        // publishes must come back durable, none lost or double-counted.
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 4, SyncPolicy::Always, TICK).unwrap();
+        let wal = Arc::new(wal);
+        let threads = 4;
+        let per = 25u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let w = Arc::clone(&wal);
+            handles.push(std::thread::spawn(move || {
+                let q = format!("conc-q-{t}");
+                for i in 0..per {
+                    let m = msg(t * 1000 + i + 1, "concurrent");
+                    w.record_publish_batch(&[(q.as_str(), &m)]).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        drop(wal);
+        let rec = replay_dir(&dir).unwrap();
+        assert_eq!(rec.message_count(), threads as usize * per as usize);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -19,7 +19,7 @@ const VALUED: &[&str] = &[
     "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
     "delivery-batch", "route-cache", "max-delivery", "dead-letter-exchange", "max-length",
     "overflow", "reconnect-max-retries", "reconnect-backoff-ms", "net", "event-batch",
-    "outbox-cap",
+    "outbox-cap", "wal-segments", "wal-commit-interval-us",
 ];
 
 impl Args {
@@ -121,6 +121,13 @@ mod tests {
         let a = parse("kiwi worker --reconnect-max-retries 12 --reconnect-backoff-ms 100");
         assert_eq!(a.opt_parse::<u32>("reconnect-max-retries").unwrap(), Some(12));
         assert_eq!(a.opt_parse::<u64>("reconnect-backoff-ms").unwrap(), Some(100));
+    }
+
+    #[test]
+    fn wal_options_take_values() {
+        let a = parse("kiwi broker --wal-segments 8 --wal-commit-interval-us 250");
+        assert_eq!(a.opt_parse::<usize>("wal-segments").unwrap(), Some(8));
+        assert_eq!(a.opt_parse::<u64>("wal-commit-interval-us").unwrap(), Some(250));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::broker::core::BrokerHandle;
-use crate::broker::persistence::{RecoveredState, WalPersister};
+use crate::broker::persistence::{RecoveredState, SegmentedWal};
 use crate::broker::protocol::ClientRequest;
 use crate::broker::BrokerServer;
 use crate::cli::args::Args;
@@ -37,6 +37,8 @@ SUBCOMMANDS
                                               [--route-cache N (0 = off)]
                                               [--net reactor|threads] [--event-batch N]
                                               [--outbox-cap BYTES]
+                                              [--wal-segments N (0 = match shards)]
+                                              [--wal-commit-interval-us N]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
   ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
@@ -133,6 +135,12 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(n) = args.opt_parse::<usize>("outbox-cap")? {
         config.outbox_cap = n.max(1);
     }
+    if let Some(n) = args.opt_parse::<usize>("wal-segments")? {
+        config.wal_segments = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("wal-commit-interval-us")? {
+        config.wal_commit_interval_us = n;
+    }
     Ok(config)
 }
 
@@ -187,12 +195,18 @@ fn cmd_broker(args: &Args) -> Result<()> {
             if let Some(parent) = path.parent() {
                 std::fs::create_dir_all(parent)?;
             }
-            let (wal, recovered) = WalPersister::open(path, config.sync_policy)?;
+            let segments = config.wal_segments_resolved();
+            let (wal, recovered) = SegmentedWal::open(
+                path,
+                segments,
+                config.sync_policy,
+                Duration::from_micros(config.wal_commit_interval_us),
+            )?;
             let n = recovered.message_count();
             if n > 0 {
-                println!("recovered {n} durable message(s) from {path:?}");
+                println!("recovered {n} durable message(s) from {path:?} ({segments} segments)");
             }
-            BrokerHandle::with_config(Box::new(wal), recovered, broker_config)
+            BrokerHandle::with_backend(Arc::new(wal), recovered, broker_config)
         }
         None => BrokerHandle::with_config(
             Box::new(crate::broker::persistence::NoopPersister),

@@ -29,6 +29,13 @@ pub struct Config {
     pub wal_path: Option<PathBuf>,
     /// WAL sync policy.
     pub sync_policy: SyncPolicy,
+    /// WAL segment count (0 = match the resolved queue-shard count, so
+    /// a queue's records land in its own shard's segment).
+    pub wal_segments: usize,
+    /// Group-commit syncer interval in microseconds: how long appended
+    /// records may wait before the syncer's next fsync pass picks them
+    /// up when no `Always`-policy caller kicks it sooner.
+    pub wal_commit_interval_us: u64,
     /// Blocking-call timeout.
     pub request_timeout: Duration,
     /// Broker queue shards (0 = one per available core).
@@ -77,6 +84,8 @@ impl Default for Config {
             checkpoint_dir: ".kiwi/checkpoints".into(),
             wal_path: Some(".kiwi/broker.wal".into()),
             sync_policy: SyncPolicy::EveryN(64),
+            wal_segments: 0, // auto: one segment per queue shard
+            wal_commit_interval_us: 500,
             request_timeout: Duration::from_secs(30),
             shards: 0, // auto: one shard per available core
             delivery_batch: 64,
@@ -141,6 +150,12 @@ impl Config {
         }
         if let Some(x) = v.get_opt("sync_policy") {
             c.sync_policy = sync_policy_from(x)?;
+        }
+        if let Some(x) = v.get_opt("wal_segments") {
+            c.wal_segments = x.as_u64()? as usize;
+        }
+        if let Some(x) = v.get_opt("wal_commit_interval_us") {
+            c.wal_commit_interval_us = x.as_u64()?;
         }
         if let Some(x) = v.get_opt("request_timeout_ms") {
             c.request_timeout = Duration::from_millis(x.as_u64()?);
@@ -208,6 +223,8 @@ impl Config {
             ),
             ("transient", Value::Bool(self.wal_path.is_none())),
             ("sync_policy", sync_policy_to(self.sync_policy)),
+            ("wal_segments", Value::from(self.wal_segments)),
+            ("wal_commit_interval_us", Value::from(self.wal_commit_interval_us)),
             (
                 "request_timeout_ms",
                 Value::from(self.request_timeout.as_millis() as u64),
@@ -237,6 +254,18 @@ impl Config {
             },
             delivery_batch: self.delivery_batch.max(1),
             route_cache_cap: self.route_cache_cap,
+        }
+    }
+
+    /// The WAL segment count this config resolves to (0 = match the
+    /// resolved queue-shard count so the queue→segment hash lines up
+    /// with queue→shard and durable publishes on different shards never
+    /// share a segment lock).
+    pub fn wal_segments_resolved(&self) -> usize {
+        if self.wal_segments == 0 {
+            self.broker_config().shards
+        } else {
+            self.wal_segments
         }
     }
 
@@ -287,8 +316,9 @@ impl Config {
     /// `KIWI_MAX_LENGTH` (0 = unbounded), `KIWI_OVERFLOW`
     /// (`drop-head`/`reject-new`), `KIWI_RECONNECT_MAX_RETRIES` (0 = no
     /// reconnection), `KIWI_RECONNECT_BACKOFF_MS`, `KIWI_NET`
-    /// (`reactor`/`threads`), `KIWI_EVENT_BATCH` and `KIWI_OUTBOX_CAP`
-    /// override the file.
+    /// (`reactor`/`threads`), `KIWI_EVENT_BATCH`, `KIWI_OUTBOX_CAP`,
+    /// `KIWI_WAL_SEGMENTS` (0 = match shards) and
+    /// `KIWI_WAL_COMMIT_INTERVAL_US` override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -308,6 +338,16 @@ impl Config {
         }
         if let Ok(v) = std::env::var("KIWI_CHECKPOINT_DIR") {
             self.checkpoint_dir = PathBuf::from(v);
+        }
+        if let Ok(v) = std::env::var("KIWI_WAL_SEGMENTS") {
+            if let Ok(n) = v.parse() {
+                self.wal_segments = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_WAL_COMMIT_INTERVAL_US") {
+            if let Ok(n) = v.parse() {
+                self.wal_commit_interval_us = n;
+            }
         }
         if let Ok(v) = std::env::var("KIWI_SHARDS") {
             if let Ok(n) = v.parse() {
@@ -519,6 +559,28 @@ mod tests {
         let c = Config::from_value(&v).unwrap();
         assert_eq!(c.event_batch, 1);
         assert_eq!(c.outbox_cap, 1);
+    }
+
+    #[test]
+    fn wal_knobs_parse_resolve_and_roundtrip() {
+        let v = json::from_str(
+            r#"{"wal_segments": 8, "wal_commit_interval_us": 250, "shards": 2}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.wal_segments, 8);
+        assert_eq!(c.wal_commit_interval_us, 250);
+        // Explicit count wins over the shard count.
+        assert_eq!(c.wal_segments_resolved(), 8);
+        let back = Config::from_value(&json::from_str(&json::to_string(&c.to_value())).unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+        // Default 0 = match the resolved shard count exactly.
+        let d = Config::default();
+        assert_eq!(d.wal_segments, 0);
+        assert_eq!(d.wal_segments_resolved(), d.broker_config().shards);
+        let v = json::from_str(r#"{"wal_segments": 0, "shards": 3}"#).unwrap();
+        assert_eq!(Config::from_value(&v).unwrap().wal_segments_resolved(), 3);
     }
 
     #[test]

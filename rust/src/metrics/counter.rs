@@ -28,6 +28,13 @@ impl Counter {
         self.value.load(Ordering::Relaxed)
     }
 
+    /// Raise the value to `v` if it is currently lower — a high-water
+    /// mark (e.g. the largest group-commit batch observed). Monotonic
+    /// like the counter itself, just driven by max instead of sum.
+    pub fn record_max(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
     pub fn reset(&self) -> u64 {
         self.value.swap(0, Ordering::Relaxed)
     }
@@ -77,6 +84,16 @@ mod tests {
         assert_eq!(c.get(), 5);
         assert_eq!(c.reset(), 5);
         assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn counter_record_max_is_high_water() {
+        let c = Counter::new();
+        c.record_max(5);
+        c.record_max(3);
+        assert_eq!(c.get(), 5);
+        c.record_max(9);
+        assert_eq!(c.get(), 9);
     }
 
     #[test]

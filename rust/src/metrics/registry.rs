@@ -32,6 +32,15 @@ impl Registry {
         Arc::clone(m.entry(name.to_string()).or_default())
     }
 
+    /// Register an existing counter under this name. Components that
+    /// maintain their own `Arc<Counter>` handles (e.g. the WAL's syncer
+    /// thread) install them here so snapshots and reporters see them;
+    /// if the name already exists the provided counter replaces it.
+    pub fn register_counter(&self, name: &str, counter: Arc<Counter>) {
+        let mut m = self.inner.counters.lock().unwrap();
+        m.insert(name.to_string(), counter);
+    }
+
     /// Get or create a gauge with this name.
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         let mut m = self.inner.gauges.lock().unwrap();
@@ -155,6 +164,17 @@ mod tests {
         r.counter("msgs").inc();
         r.counter("msgs").inc();
         assert_eq!(r.counter("msgs").get(), 2);
+    }
+
+    #[test]
+    fn register_counter_installs_external_handle() {
+        let r = Registry::new();
+        let mine = Arc::new(Counter::new());
+        mine.add(7);
+        r.register_counter("ext", Arc::clone(&mine));
+        assert_eq!(r.counter("ext").get(), 7);
+        mine.inc();
+        assert_eq!(r.snapshot().counters["ext"], 8);
     }
 
     #[test]
