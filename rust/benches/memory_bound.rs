@@ -1,0 +1,299 @@
+//! E8 — memory-bounded deep queues (paper §IV: big-data workflows park
+//! "large numbers of messages" behind slow consumers; the broker must not
+//! trade that backlog for its own heap).
+//!
+//! Three questions:
+//!
+//! * **E8a — bounded backlog**: wedge the consumer, publish a deep 1 KiB
+//!   backlog into one durable queue, and watch the paging machinery hold
+//!   resident queue bytes at `page_out_threshold` while the tail rides the
+//!   WAL. Process RSS (from `/proc/self/statm`) must stay under a budget
+//!   that is a small multiple of the threshold — *not* of the backlog.
+//! * **E8b — zero-loss drain**: un-wedge the consumer and drain the whole
+//!   backlog through the page-in path; every message must come back.
+//! * **E8c — no-backlog tax**: with a shallow queue the paging code must
+//!   be pure bookkeeping; compare publish+drain throughput with paging
+//!   enabled (untripped) vs compiled-out (`page_out_threshold = 0`) and
+//!   gate on <5% regression (printed, not asserted: CI hardware varies,
+//!   the series file is the judge).
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks the backlog for CI; `KIWI_BENCH_RECORD=1`
+//! appends the run to `../BENCH_memory_bound.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::Table;
+use kiwi::broker::core::{process_rss_bytes, BrokerConfig, BrokerHandle};
+use kiwi::broker::persistence::{
+    NoopPersister, PersistBackend, RecoveredState, SegmentedWal, SyncPolicy,
+};
+use kiwi::broker::protocol::{ClientRequest, MessageProps, QueueOptions, ServerMsg};
+use kiwi::wire::{json, Bytes, Value};
+
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+const MIB: u64 = 1024 * 1024;
+
+fn body_1kib() -> Bytes {
+    Bytes::encode(&Value::map([("data", Value::Bytes(vec![0x5A; 1024]))]))
+}
+
+fn declare(broker: &BrokerHandle, queue: &str, durable: bool) {
+    let (tx, _rx) = std::sync::mpsc::channel();
+    let conn = broker.connect("bench-declare", 0, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::QueueDeclare {
+                queue: queue.into(),
+                options: QueueOptions { durable, ..Default::default() },
+            },
+        )
+        .unwrap();
+    broker.disconnect(conn);
+}
+
+fn publish_n(broker: &BrokerHandle, queue: &str, durable: bool, n: usize) -> Duration {
+    let body = body_1kib();
+    let (tx, _rx) = std::sync::mpsc::channel();
+    let conn = broker.connect("bench-pub", 0, tx);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        broker
+            .handle(
+                conn,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: queue.into(),
+                    body: body.clone(),
+                    props: MessageProps { persistent: durable, ..Default::default() }.into(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+    let wall = t0.elapsed();
+    broker.disconnect(conn);
+    wall
+}
+
+/// Consume-and-ack the whole queue with a bounded prefetch (so the drain
+/// itself cannot balloon memory) and return `(received, wall)`.
+fn drain(broker: &BrokerHandle, queue: &str, expect: usize) -> (usize, Duration) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let conn = broker.connect("bench-drain", 0, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Consume {
+                queue: queue.into(),
+                consumer_tag: "drain".into(),
+                prefetch: 256,
+            },
+        )
+        .unwrap();
+    let t0 = Instant::now();
+    let mut received = 0usize;
+    while received < expect {
+        let msg = match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let tags: Vec<u64> = match msg {
+            ServerMsg::Deliver(d) => vec![d.delivery_tag],
+            ServerMsg::DeliverBatch(ds) => ds.iter().map(|d| d.delivery_tag).collect(),
+            _ => continue,
+        };
+        for tag in tags {
+            received += 1;
+            broker.handle(conn, &ClientRequest::Ack { delivery_tag: tag }).unwrap();
+        }
+    }
+    let wall = t0.elapsed();
+    broker.disconnect(conn);
+    (received, wall)
+}
+
+fn wal_broker(tag: &str, config: BrokerConfig) -> (BrokerHandle, std::path::PathBuf) {
+    let dir =
+        std::env::temp_dir().join(format!("kiwi-bench-membound-{}-{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (wal, rec) =
+        SegmentedWal::open(&dir, config.shards, SyncPolicy::Os, Duration::from_micros(500))
+            .unwrap();
+    let backend: Arc<dyn PersistBackend> = Arc::new(wal);
+    (BrokerHandle::with_backend(backend, rec, config), dir)
+}
+
+/// E8c helper: shallow publish+drain cycle throughput (transient queue,
+/// no WAL, so the measurement isolates the paging bookkeeping itself).
+fn shallow_cycle_rate(page_out_threshold: usize, msgs: usize) -> f64 {
+    let config = BrokerConfig { page_out_threshold, ..Default::default() };
+    let broker = BrokerHandle::with_config(
+        Box::new(NoopPersister),
+        RecoveredState::default(),
+        config,
+    );
+    declare(&broker, "shallow", false);
+    let t0 = Instant::now();
+    let publish = publish_n(&broker, "shallow", false, msgs);
+    let (received, _) = drain(&broker, "shallow", msgs);
+    assert_eq!(received, msgs, "shallow cycle must not lose messages");
+    let _ = publish;
+    msgs as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke = smoke();
+    // Full run: a 2 GiB backlog held at a 64 MiB resident budget — the
+    // soak the memory-bounding work is pinned by. Smoke keeps the same
+    // shape at 1/100 scale so CI exercises every path in seconds.
+    let backlog_msgs: usize = if smoke { 20_000 } else { 2_000_000 };
+    let threshold: u64 = if smoke { 2 * MIB } else { 64 * MIB };
+    // RSS may grow by the resident window, WAL write buffers, allocator
+    // slack and the (unpaged) per-message envelopes — but never by
+    // anything proportional to the paged backlog.
+    let rss_budget: u64 = 4 * threshold + 192 * MIB + (backlog_msgs as u64 * 256);
+
+    let config = BrokerConfig {
+        page_out_threshold: threshold as usize,
+        page_in_batch: 64,
+        ..Default::default()
+    };
+    let (broker, dir) = wal_broker("backlog", config);
+    declare(&broker, "deep", true);
+
+    // E8a: wedged consumer — publish the whole backlog with nobody
+    // draining it.
+    let rss_before = process_rss_bytes().unwrap_or(0);
+    let publish_wall = publish_n(&broker, "deep", true, backlog_msgs);
+    broker.sync().unwrap();
+    let rss_peak = process_rss_bytes().unwrap_or(0);
+    let rss_growth = rss_peak.saturating_sub(rss_before);
+    let resident = broker.queue_resident_bytes("deep").unwrap_or(0);
+    let paged = broker.queue_paged("deep").unwrap_or(0);
+    let page_outs = broker.metrics().counter("broker.page_outs_total").get();
+
+    let mut e8a = Table::new(
+        "E8a memory bound: wedged-consumer backlog (1KiB msgs)",
+        &["metric", "value"],
+    );
+    e8a.row(&["backlog msgs".into(), backlog_msgs.to_string()]);
+    e8a.row(&["backlog bytes".into(), format!("{} MiB", backlog_msgs as u64 / 1024)]);
+    e8a.row(&["page_out_threshold".into(), format!("{} MiB", threshold / MIB)]);
+    e8a.row(&["resident bytes".into(), resident.to_string()]);
+    e8a.row(&["paged msgs".into(), paged.to_string()]);
+    e8a.row(&["page_outs_total".into(), page_outs.to_string()]);
+    e8a.row(&["publish wall".into(), format!("{publish_wall:.2?}")]);
+    e8a.row(&[
+        "publish msgs/s".into(),
+        format!("{:.0}", backlog_msgs as f64 / publish_wall.as_secs_f64()),
+    ]);
+    e8a.row(&["rss before".into(), format!("{} MiB", rss_before / MIB)]);
+    e8a.row(&["rss after backlog".into(), format!("{} MiB", rss_peak / MIB)]);
+    e8a.row(&["rss growth".into(), format!("{} MiB", rss_growth / MIB)]);
+    e8a.row(&["rss budget".into(), format!("{} MiB", rss_budget / MIB)]);
+    e8a.emit();
+
+    assert!(paged > 0, "a backlog this deep must page out");
+    assert!(
+        resident <= threshold,
+        "resident bytes ({resident}) must respect the threshold ({threshold})"
+    );
+    if rss_before > 0 {
+        assert!(
+            rss_growth <= rss_budget,
+            "RSS grew {rss_growth} bytes holding a paged backlog; budget {rss_budget}"
+        );
+    }
+
+    // E8b: un-wedge and drain everything back through the page-in path.
+    let (received, drain_wall) = drain(&broker, "deep", backlog_msgs);
+    let page_ins = broker.metrics().counter("broker.page_ins_total").get();
+    let mut e8b = Table::new("E8b memory bound: full drain after paging", &["metric", "value"]);
+    e8b.row(&["received".into(), received.to_string()]);
+    e8b.row(&["expected".into(), backlog_msgs.to_string()]);
+    e8b.row(&["page_ins_total".into(), page_ins.to_string()]);
+    e8b.row(&["drain wall".into(), format!("{drain_wall:.2?}")]);
+    e8b.row(&[
+        "drain msgs/s".into(),
+        format!("{:.0}", received as f64 / drain_wall.as_secs_f64().max(1e-9)),
+    ]);
+    e8b.emit();
+    assert_eq!(received, backlog_msgs, "every paged message must survive the round-trip");
+    assert_eq!(broker.queue_depth("deep"), Some(0), "the drain must empty the queue");
+    assert_eq!(broker.queue_paged("deep"), Some(0), "nothing may stay paged after the drain");
+    assert!(page_ins > 0, "the drain must exercise the page-in path");
+    drop(broker);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // E8c: paging-enabled-but-untripped vs paging-disabled throughput.
+    let tax_msgs: usize = if smoke { 5_000 } else { 100_000 };
+    let rate_off = shallow_cycle_rate(0, tax_msgs);
+    let rate_on = shallow_cycle_rate(usize::MAX / 2, tax_msgs);
+    let tax = 1.0 - rate_on / rate_off;
+    let mut e8c = Table::new(
+        "E8c memory bound: no-backlog paging tax (transient queue)",
+        &["paging", "msgs", "msgs/s"],
+    );
+    e8c.row(&["disabled".into(), tax_msgs.to_string(), format!("{rate_off:.0}")]);
+    e8c.row(&["enabled-untripped".into(), tax_msgs.to_string(), format!("{rate_on:.0}")]);
+    e8c.emit();
+    println!("gate: no-backlog paging tax = {:.1}% (want < 5%)", tax * 100.0);
+
+    let run = Value::map([
+        ("bench", Value::from("memory_bound")),
+        ("smoke", Value::from(smoke)),
+        ("backlog_msgs", Value::from(backlog_msgs)),
+        ("threshold_bytes", Value::from(threshold)),
+        ("resident_bytes", Value::from(resident)),
+        ("paged_msgs", Value::from(paged)),
+        ("page_outs", Value::from(page_outs)),
+        ("page_ins", Value::from(page_ins)),
+        ("rss_growth_bytes", Value::from(rss_growth)),
+        ("rss_budget_bytes", Value::from(rss_budget)),
+        ("publish_msgs_per_sec", Value::F64(backlog_msgs as f64 / publish_wall.as_secs_f64())),
+        (
+            "drain_msgs_per_sec",
+            Value::F64(received as f64 / drain_wall.as_secs_f64().max(1e-9)),
+        ),
+        ("no_backlog_rate_off", Value::F64(rate_off)),
+        ("no_backlog_rate_on", Value::F64(rate_on)),
+        ("no_backlog_tax", Value::F64(tax)),
+    ]);
+    let path = std::path::Path::new("target/bench-results/BENCH_memory_bound.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(path, json::to_string(&run)) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+
+    if std::env::var("KIWI_BENCH_RECORD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        let series_path = std::path::Path::new("../BENCH_memory_bound.json");
+        let mut series = std::fs::read_to_string(series_path)
+            .ok()
+            .and_then(|t| json::from_str(&t).ok())
+            .unwrap_or_else(|| {
+                Value::map([
+                    ("bench", Value::from("memory_bound")),
+                    ("runs", Value::List(Vec::new())),
+                ])
+            });
+        if let Value::Map(m) = &mut series {
+            let runs = m.entry("runs".to_string()).or_insert_with(|| Value::List(Vec::new()));
+            if let Value::List(list) = runs {
+                list.push(run);
+            }
+        }
+        match std::fs::write(series_path, json::to_string_pretty(&series)) {
+            Ok(()) => println!("recorded run into {}", series_path.display()),
+            Err(e) => eprintln!("warning: could not record series: {e}"),
+        }
+    }
+}

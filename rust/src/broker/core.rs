@@ -38,14 +38,14 @@ use std::time::Instant;
 
 use crate::broker::dispatch::Dispatcher;
 use crate::broker::persistence::{
-    MutexBackend, NoopPersister, PersistBackend, Persister, RecoveredState,
+    BodyLocator, MutexBackend, NoopPersister, PersistBackend, Persister, RecoveredState,
 };
 use crate::broker::protocol::{ClientRequest, EncodedProps, MessageProps, QueueOptions, ServerMsg};
 use crate::broker::queue::{Consumer, DeadReason, NackOutcome, PendingDead, Queue, QueuedMessage};
 use crate::broker::router::Router;
 use crate::broker::shard::{boot_tag_origin, ShardSet};
 use crate::error::{Error, Result};
-use crate::metrics::{Counter, Registry};
+use crate::metrics::{Counter, Gauge, Registry};
 use crate::wire::{Bytes, Value};
 
 /// Bound on dead-letter *cascades inside one operation* (a DLX target
@@ -73,6 +73,29 @@ pub struct BrokerConfig {
     /// kept by the router. 0 disables the cache (every publish resolves
     /// against the exchange tables — seed behaviour, the bench baseline).
     pub route_cache_cap: usize,
+    /// Per-queue resident-byte budget: when the in-memory bodies of a
+    /// queue's ready messages exceed this, tail bodies are paged out to
+    /// the WAL (durable queues: free — the record already holds the body)
+    /// or the backend's spill file (non-durable). Also the high-water mark
+    /// for publish-credit pressure. 0 disables paging and pressure.
+    pub page_out_threshold: usize,
+    /// Hot head window per queue: this many head-of-queue messages are
+    /// kept (and restored, per page-in pass of the dispatch pump)
+    /// resident, so assignment latency stays flat while the tail lives
+    /// on disk.
+    pub page_in_batch: usize,
+    /// Publish credits granted per connection (credit-based flow control,
+    /// mirroring RabbitMQ channel flow). The broker decrements one credit
+    /// per publish and re-grants below the half-way mark while no queue is
+    /// over `page_out_threshold`; at zero credit under pressure the
+    /// publisher blocks client-side until the backlog drains. 0 disables
+    /// credit entirely (no `Credit` frames are ever sent).
+    pub publish_credit: u32,
+    /// Prefetch applied at Consume time to consumers that ask for 0
+    /// (= unlimited in-flight). 0 keeps the seed behaviour — but an
+    /// unlimited consumer on a paged queue defeats memory bounding, so
+    /// the broker logs a warning for that combination.
+    pub default_prefetch: u32,
 }
 
 impl Default for BrokerConfig {
@@ -81,6 +104,10 @@ impl Default for BrokerConfig {
             shards: default_shards(),
             delivery_batch: 64,
             route_cache_cap: crate::broker::router::DEFAULT_ROUTE_CACHE_CAP,
+            page_out_threshold: 64 * 1024 * 1024,
+            page_in_batch: 64,
+            publish_credit: 0,
+            default_prefetch: 0,
         }
     }
 }
@@ -137,6 +164,19 @@ pub struct ConnectionEntry {
     consumer_tags: Mutex<HashSet<String>>,
     /// Queues declared exclusive by this connection.
     exclusive_queues: Mutex<HashSet<String>>,
+    /// Publish-credit bookkeeping (leaf lock; never held across a send).
+    credit: Mutex<CreditState>,
+}
+
+/// Broker-side view of one connection's publish credit.
+#[derive(Default)]
+struct CreditState {
+    /// Credits left from the last grant.
+    remaining: u32,
+    /// True once the credit ran to zero under queue pressure — the sweep
+    /// re-grants (and clears this) when the backlog drains below the
+    /// low-water mark.
+    stalled: bool,
 }
 
 impl ConnectionEntry {
@@ -170,6 +210,18 @@ impl ConnectionEntry {
 
     fn touch(&self, epoch: Instant) {
         self.last_seen_ms.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+
+    /// Top the connection's publish credit back up to `n` and tell the
+    /// client. The credit lock is released before the send (the outbound
+    /// mutex is a sibling leaf lock — never nest them).
+    fn grant_credit(&self, n: u32) {
+        {
+            let mut c = self.credit.lock().unwrap();
+            c.remaining = n;
+            c.stalled = false;
+        }
+        self.send(ServerMsg::Credit { channel_credit: n });
     }
 }
 
@@ -223,6 +275,19 @@ pub struct BrokerCore {
     /// WAL compaction failures (disk full, I/O error) — surfaced instead
     /// of swallowed so operators see a log that can no longer shrink.
     ctr_wal_compact_errors: Arc<Counter>,
+    /// The knobs this broker was built with (paging thresholds, credit).
+    config: BrokerConfig,
+    /// Bodies evicted to disk / restored from disk (monotonic).
+    ctr_page_outs: Arc<Counter>,
+    ctr_page_ins: Arc<Counter>,
+    /// Times a connection's publish credit ran dry under queue pressure.
+    ctr_credit_stalls: Arc<Counter>,
+    /// Broker-wide resident / paged ready-body bytes (refreshed by the
+    /// sweep and by `Status`).
+    g_bytes_resident: Arc<Gauge>,
+    g_bytes_paged: Arc<Gauge>,
+    /// Process RSS sampled from `/proc/self/statm` (Linux; 0 elsewhere).
+    g_rss: Arc<Gauge>,
 }
 
 impl Default for BrokerHandle {
@@ -319,6 +384,12 @@ impl BrokerHandle {
         let ctr_expired = metrics.counter("broker.expired_total");
         let ctr_dlx_republished = metrics.counter("broker.dlx_republished_total");
         let ctr_wal_compact_errors = metrics.counter("broker.wal_compact_errors_total");
+        let ctr_page_outs = metrics.counter("broker.page_outs_total");
+        let ctr_page_ins = metrics.counter("broker.page_ins_total");
+        let ctr_credit_stalls = metrics.counter("broker.credit_stalls_total");
+        let g_bytes_resident = metrics.gauge("broker.queue_bytes_resident");
+        let g_bytes_paged = metrics.gauge("broker.queue_bytes_paged");
+        let g_rss = metrics.gauge("broker.rss_bytes");
         // Backends with internal counters (the segmented WAL's append /
         // fsync / byte totals) surface them through the broker registry.
         persister.register_metrics(&metrics);
@@ -343,6 +414,13 @@ impl BrokerHandle {
                 ctr_expired,
                 ctr_dlx_republished,
                 ctr_wal_compact_errors,
+                config,
+                ctr_page_outs,
+                ctr_page_ins,
+                ctr_credit_stalls,
+                g_bytes_resident,
+                g_bytes_paged,
+                g_rss,
             }),
         }
     }
@@ -384,6 +462,7 @@ impl BrokerHandle {
             outbound: Mutex::new(outbound),
             consumer_tags: Mutex::new(HashSet::new()),
             exclusive_queues: Mutex::new(HashSet::new()),
+            credit: Mutex::new(CreditState::default()),
         });
         conns.map.write().unwrap().insert(id, entry);
         self.core.metrics.gauge("broker.connections").inc();
@@ -534,7 +613,16 @@ impl BrokerHandle {
             dispatches.dedup();
             let mut pending: Vec<PendingDead> = Vec::new();
             for q in &dispatches {
-                pending.extend(self.core.dispatcher.pump(&self.core.shards, q));
+                // The pump stops cold at a paged-out head (a body on disk
+                // must never be assigned); restore the next head window off
+                // the shard lock and pump again until the queue is either
+                // drained, consumer-limited, or fully resident.
+                loop {
+                    pending.extend(self.core.dispatcher.pump(&self.core.shards, q));
+                    if !self.page_in(q) {
+                        break;
+                    }
+                }
             }
             let mut next = Vec::new();
             self.process_dead_letters(pending, &mut next);
@@ -559,6 +647,12 @@ impl BrokerHandle {
             ClientRequest::Hello { client_id, heartbeat_ms } => {
                 *entry.client_id.lock().unwrap() = client_id.clone();
                 entry.heartbeat_ms.store(*heartbeat_ms, Ordering::Relaxed);
+                // Initial publish-credit grant. Connections that never
+                // receive one (credit disabled, old broker) publish
+                // uncredited — backward compatible in both directions.
+                if core.config.publish_credit > 0 {
+                    entry.grant_credit(core.config.publish_credit);
+                }
                 Ok(Value::map([("connection", Value::from(conn))]))
             }
             ClientRequest::QueueDeclare { queue, options } => {
@@ -581,7 +675,7 @@ impl BrokerHandle {
                 Ok(Value::Null)
             }
             ClientRequest::QueuePurge { queue } => {
-                let (ids, durable) = {
+                let (purged, durable) = {
                     let mut st = core.shards.shard_for(queue).lock();
                     let q = st
                         .queues
@@ -589,9 +683,17 @@ impl BrokerHandle {
                         .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
                     (q.purge(), q.options.durable)
                 };
-                let n = ids.len();
-                if durable && !ids.is_empty() {
+                let n = purged.len();
+                if durable && n > 0 {
+                    let ids: Vec<u64> = purged.iter().map(|(id, _)| *id).collect();
                     core.persister.record_retire_batch(queue, &ids)?;
+                }
+                // Purged messages owned their paged bodies — free the
+                // spill-file space (no-op for WAL-backed locators).
+                for (_, loc) in &purged {
+                    if let Some(loc) = *loc {
+                        core.persister.release_body(loc);
+                    }
                 }
                 Ok(Value::map([("purged", Value::from(n))]))
             }
@@ -608,13 +710,18 @@ impl BrokerHandle {
                 Ok(Value::Null)
             }
             ClientRequest::Publish { exchange, routing_key, body, props, mandatory } => {
+                let mut pressured = false;
                 let n = self.publish_message(
                     exchange,
                     routing_key,
                     body.clone(),
                     props.clone(),
                     dispatches,
+                    &mut pressured,
                 )?;
+                if core.config.publish_credit > 0 {
+                    self.consume_credit(&entry, pressured);
+                }
                 if *mandatory && n == 0 {
                     return Err(Error::UnroutableMessage(format!(
                         "exchange '{exchange}' routing key '{routing_key}' matched no queue"
@@ -642,10 +749,26 @@ impl BrokerHandle {
                                 )));
                             }
                         }
+                        // prefetch 0 = unlimited; the broker-side default
+                        // caps careless consumers (0 keeps seed behaviour).
+                        let prefetch = if *prefetch == 0 {
+                            core.config.default_prefetch
+                        } else {
+                            *prefetch
+                        };
+                        if prefetch == 0 && q.paged_len() > 0 {
+                            log::warn!(
+                                "broker: consumer '{consumer_tag}' attached to paged queue \
+                                 '{queue}' ({} bodies on disk) with unlimited prefetch; \
+                                 draining the whole backlog in-flight defeats memory bounding \
+                                 — set a prefetch or the broker's default_prefetch",
+                                q.paged_len()
+                            );
+                        }
                         q.add_consumer(Consumer {
                             consumer_tag: consumer_tag.clone(),
                             connection: conn,
-                            prefetch: *prefetch,
+                            prefetch,
                             in_flight: 0,
                         });
                         // The queue's own interned handle — no router
@@ -712,6 +835,7 @@ impl BrokerHandle {
             }
             ClientRequest::Status => {
                 let mut queue_stats: BTreeMap<String, Value> = BTreeMap::new();
+                let (mut resident, mut paged) = (0u64, 0u64);
                 for shard in core.shards.iter() {
                     let st = shard.lock();
                     let i = shard.index();
@@ -722,8 +846,15 @@ impl BrokerHandle {
                         st.queues.values().map(|q| q.ready_len() as i64).sum(),
                     );
                     for (k, q) in &st.queues {
+                        resident += q.resident_bytes();
+                        paged += q.paged_bytes();
                         queue_stats.insert(k.to_string(), q.stats());
                     }
+                }
+                core.g_bytes_resident.set(resident as i64);
+                core.g_bytes_paged.set(paged as i64);
+                if let Some(rss) = process_rss_bytes() {
+                    core.g_rss.set(rss as i64);
                 }
                 Ok(Value::map([
                     ("queues", Value::Map(queue_stats)),
@@ -928,6 +1059,43 @@ impl BrokerHandle {
             core.ctr_wal_compact_errors.inc();
             log::error!("broker: WAL compaction failed: {e}");
         }
+        // Memory-bounding bookkeeping: refresh the broker-wide gauges and,
+        // once every queue's total backlog (resident + paged) is back under
+        // the low-water mark (half the page-out threshold), re-open the
+        // window of every credit-stalled publisher.
+        let threshold = core.config.page_out_threshold as u64;
+        let (mut resident, mut paged) = (0u64, 0u64);
+        let mut over_low_water = false;
+        for shard in core.shards.iter() {
+            let st = shard.lock();
+            for q in st.queues.values() {
+                let (r, p) = (q.resident_bytes(), q.paged_bytes());
+                resident += r;
+                paged += p;
+                if threshold > 0 && r + p > threshold / 2 {
+                    over_low_water = true;
+                }
+            }
+        }
+        core.g_bytes_resident.set(resident as i64);
+        core.g_bytes_paged.set(paged as i64);
+        if let Some(rss) = process_rss_bytes() {
+            core.g_rss.set(rss as i64);
+        }
+        if core.config.publish_credit > 0 && !over_low_water {
+            let stalled: Vec<Arc<ConnectionEntry>> = core
+                .connections
+                .map
+                .read()
+                .unwrap()
+                .values()
+                .filter(|e| e.credit.lock().unwrap().stalled)
+                .cloned()
+                .collect();
+            for e in stalled {
+                e.grant_credit(core.config.publish_credit);
+            }
+        }
     }
 
     /// Force WAL sync (graceful shutdown path).
@@ -953,7 +1121,101 @@ impl BrokerHandle {
         self.core.shards.iter().map(|s| s.lock().delivery_index.len()).sum()
     }
 
+    /// Ready messages whose body currently lives on disk — test/bench
+    /// convenience.
+    pub fn queue_paged(&self, queue: &str) -> Option<usize> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).map(|q| q.paged_len())
+    }
+
+    /// In-memory body+props bytes held by the queue — test/bench
+    /// convenience.
+    pub fn queue_resident_bytes(&self, queue: &str) -> Option<u64> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).map(|q| q.resident_bytes())
+    }
+
     // ---- internals ----
+
+    /// Per-publish credit bookkeeping for one connection. Unpressured
+    /// publishers get topped back up once they burn through half their
+    /// window (grants are batched, not per-publish chatter); a pressured
+    /// publisher's window runs dry and stays dry — `sweep()` re-grants
+    /// when the backlog falls below the low-water mark.
+    fn consume_credit(&self, entry: &Arc<ConnectionEntry>, pressured: bool) {
+        let core = &*self.core;
+        let limit = core.config.publish_credit;
+        let top_up = {
+            let mut c = entry.credit.lock().unwrap();
+            c.remaining = c.remaining.saturating_sub(1);
+            if c.remaining > limit / 2 {
+                false
+            } else if !pressured {
+                true
+            } else {
+                if c.remaining == 0 && !c.stalled {
+                    c.stalled = true;
+                    core.ctr_credit_stalls.inc();
+                }
+                false
+            }
+        };
+        if top_up {
+            entry.grant_credit(limit);
+        }
+    }
+
+    /// Restore up to `page_in_batch` paged bodies at the head of `queue`.
+    /// Three phases so the disk read never holds the shard lock: snapshot
+    /// the paged head (locked) → `read_body` (unlocked) → `restore_body`
+    /// (locked). A message consumed or purged during the unlocked window
+    /// simply isn't restored; `restore_body` hands back the locator of
+    /// every body it DID take so its spill space can be freed. Returns
+    /// true when at least one body came back (the caller pumps again).
+    fn page_in(&self, queue: &str) -> bool {
+        let core = &*self.core;
+        let batch = core.config.page_in_batch.max(1);
+        let head: Vec<(u64, BodyLocator)> = {
+            let st = core.shards.shard_for(queue).lock();
+            match st.queues.get(queue) {
+                Some(q) if q.paged_len() > 0 => q.paged_head(batch),
+                _ => return false,
+            }
+        };
+        if head.is_empty() {
+            return false;
+        }
+        let mut bodies: Vec<(u64, Bytes)> = Vec::with_capacity(head.len());
+        for (msg_id, loc) in &head {
+            match core.persister.read_body(queue, *msg_id, *loc) {
+                Ok(b) => bodies.push((*msg_id, b)),
+                Err(e) => {
+                    log::error!("broker: page-in of message {msg_id} on '{queue}' failed: {e}");
+                }
+            }
+        }
+        if bodies.is_empty() {
+            return false;
+        }
+        let mut released: Vec<BodyLocator> = Vec::new();
+        {
+            let mut st = core.shards.shard_for(queue).lock();
+            let Some(q) = st.queues.get_mut(queue) else { return false };
+            for (msg_id, body) in bodies {
+                if let Some(loc) = q.restore_body(msg_id, body) {
+                    released.push(loc);
+                }
+            }
+        }
+        let restored = released.len();
+        for loc in released {
+            core.persister.release_body(loc);
+        }
+        if restored > 0 {
+            core.ctr_page_ins.add(restored as u64);
+        }
+        restored > 0
+    }
 
     /// Undo a consumer registration (idempotent): used when a `Consume`
     /// raced a `disconnect` for the same connection. Ownership-checked so
@@ -1050,7 +1312,7 @@ impl BrokerHandle {
     ) -> Result<()> {
         let core = &*self.core;
         let mut cancels: Vec<(Arc<ConnectionEntry>, String)> = Vec::new();
-        let durable = {
+        let (durable, paged_locs) = {
             let mut ci = core.consumer_index.lock().unwrap();
             let mut st = core.shards.shard_for(name).lock();
             if let Some(owner) = required_owner {
@@ -1069,10 +1331,17 @@ impl BrokerHandle {
                     cancels.push((Arc::clone(e), c.consumer_tag.clone()));
                 }
             }
-            q.options.durable
+            let paged_locs: Vec<BodyLocator> =
+                q.all_messages().into_iter().filter_map(|m| m.paged).collect();
+            (q.options.durable, paged_locs)
         };
         if durable {
             core.persister.record_queue_delete(name)?;
+        }
+        // The queue's paged bodies die with it — free their spill space
+        // (no-op for WAL-backed locators) with every lock released.
+        for loc in paged_locs {
+            core.persister.release_body(loc);
         }
         core.router.unregister_queue(name);
         // Tell owners their consumer is gone.
@@ -1097,6 +1366,7 @@ impl BrokerHandle {
         body: Bytes,
         props: EncodedProps,
         dispatches: &mut Vec<Arc<str>>,
+        pressured: &mut bool,
     ) -> Result<usize> {
         let core = &*self.core;
         // A cache hit hands back the interned `Arc<[Arc<str>]>` — zero
@@ -1116,6 +1386,7 @@ impl BrokerHandle {
             &props,
             dispatches,
             &mut pending,
+            pressured,
         )?;
         // Counted only after at least one queue actually accepted a copy:
         // unroutable, raced-delete, overflow-refused and WAL-failed
@@ -1143,6 +1414,7 @@ impl BrokerHandle {
         props: &EncodedProps,
         dispatches: &mut Vec<Arc<str>>,
         pending: &mut Vec<PendingDead>,
+        pressured: &mut bool,
     ) -> Result<usize> {
         let core = &*self.core;
         let now = Instant::now();
@@ -1173,6 +1445,8 @@ impl BrokerHandle {
                         deadline: None,
                         redelivered: false,
                         delivery_count: 0,
+                        stored: None,
+                        paged: None,
                     },
                     q.options.durable,
                 ));
@@ -1194,21 +1468,58 @@ impl BrokerHandle {
                 // other shards append and commit in parallel. `EveryN`
                 // (the default) doesn't wait at all — the fsync is
                 // pipelined behind the publish.
-                let wal_batch: Vec<(&str, &QueuedMessage)> = to_enqueue
+                let durable_idx: Vec<usize> = to_enqueue
                     .iter()
-                    .filter(|(_, _, durable)| *durable)
-                    .map(|(q, m, _)| (&**q, m))
+                    .enumerate()
+                    .filter(|(_, (_, _, durable))| *durable)
+                    .map(|(i, _)| i)
                     .collect();
-                if !wal_batch.is_empty() {
-                    core.persister.record_publish_batch(&wal_batch)?;
+                if !durable_idx.is_empty() {
+                    let locs = {
+                        let wal_batch: Vec<(&str, &QueuedMessage)> = durable_idx
+                            .iter()
+                            .map(|&i| (&*to_enqueue[i].0, &to_enqueue[i].1))
+                            .collect();
+                        core.persister.record_publish_batch(&wal_batch)?
+                    };
+                    // A locator-returning backend (SegmentedWal) tells each
+                    // durable copy where its body just landed, making a
+                    // later page-out of that copy free (no second write).
+                    for (k, loc) in locs.into_iter().enumerate() {
+                        if let Some(loc) = loc {
+                            to_enqueue[durable_idx[k]].1.stored = Some(loc);
+                        }
+                    }
                 }
             }
+            let threshold = core.config.page_out_threshold as u64;
             for (qname, msg, _durable) in to_enqueue {
                 let accepted = {
                     let q = st.queues.get_mut(&qname).unwrap();
                     let out = q.publish(msg, now);
                     if !out.dead.is_empty() {
                         pending.extend(q.pend_dead(out.dead));
+                    }
+                    // Memory bounding: past the threshold, evict ready-tail
+                    // bodies to the backend (WAL locator when the copy is
+                    // durable, spill file otherwise), keeping a hot head
+                    // window so assignment latency stays flat.
+                    if threshold > 0 && q.resident_bytes() > threshold {
+                        let evicted = q.page_out_tail(
+                            threshold,
+                            core.config.page_in_batch.max(1),
+                            |m| core.persister.page_out(&qname, m),
+                        );
+                        if evicted > 0 {
+                            core.ctr_page_outs.add(evicted as u64);
+                        }
+                    }
+                    // Total backlog bytes (resident + on disk) drive the
+                    // publisher-credit pressure signal — resident alone
+                    // would never trip it once paging holds it at the
+                    // threshold.
+                    if threshold > 0 && q.resident_bytes() + q.paged_bytes() > threshold {
+                        *pressured = true;
                     }
                     out.accepted
                 };
@@ -1287,14 +1598,37 @@ impl BrokerHandle {
                      dropping {} message(s) (DLX cycle?)",
                     batch.len()
                 );
+                for pd in &batch {
+                    if let Some(loc) = pd.message.paged {
+                        core.persister.release_body(loc);
+                    }
+                }
                 return;
             }
             // 2. Re-publish to each source queue's DLX.
-            for pd in batch {
+            for mut pd in batch {
                 if pd.durable
                     && retire_failed.iter().any(|(q, r)| *q == pd.source && *r == pd.reason)
                 {
                     continue;
+                }
+                // A paged body must come back from disk before the DLX hop
+                // can re-publish it. Whatever happens, the locator's spill
+                // space is released — the source copy is retired either way.
+                if let Some(loc) = pd.message.paged.take() {
+                    match core.persister.read_body(&pd.source, pd.message.msg_id, loc) {
+                        Ok(b) => pd.message.body = b,
+                        Err(e) => {
+                            log::error!(
+                                "broker: page-in of dead-lettered message {} from '{}' \
+                                 failed: {e}; its dead-letter hop is dropped",
+                                pd.message.msg_id,
+                                pd.source
+                            );
+                            pd.dead_letter_exchange = None;
+                        }
+                    }
+                    core.persister.release_body(loc);
                 }
                 let Some(dlx) = pd.dead_letter_exchange else { continue };
                 let rk_str: &str =
@@ -1328,6 +1662,10 @@ impl BrokerHandle {
                 );
                 let exchange: Arc<str> = Arc::from(dlx.as_str());
                 let routing_key: Arc<str> = Arc::from(rk_str);
+                // Dead-letter hops never stall a publisher's credit: the
+                // pressure signal is discarded (the DLX target pages and
+                // bounds itself like any other queue).
+                let mut dlx_pressured = false;
                 match self.enqueue_to_targets(
                     &targets,
                     &exchange,
@@ -1338,6 +1676,7 @@ impl BrokerHandle {
                     &props,
                     dispatches,
                     &mut work,
+                    &mut dlx_pressured,
                 ) {
                     Ok(n) if n > 0 => core.ctr_dlx_republished.inc(),
                     Ok(_) => {}
@@ -1404,6 +1743,21 @@ fn death_props(
         props.headers.insert("x-first-death-reason".into(), Value::str(reason.as_str()));
     }
     EncodedProps::new(props)
+}
+
+/// Resident-set size of this process in bytes, read from
+/// `/proc/self/statm` (second field, in pages). `None` off Linux or when
+/// the file is unreadable — callers treat that as "no sample", never 0.
+#[cfg(target_os = "linux")]
+pub fn process_rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096)
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn process_rss_bytes() -> Option<u64> {
+    None
 }
 
 #[cfg(test)]
@@ -2385,5 +2739,225 @@ mod tests {
         }
         assert_eq!(broker.queue_depth("cq1"), Some(1));
         assert_eq!(broker.queue_depth("cq2"), Some(1));
+    }
+
+    // ---- memory bounding: paging + credit ----
+
+    fn paging_broker(tag: &str, config: BrokerConfig) -> (BrokerHandle, std::path::PathBuf) {
+        use crate::broker::persistence::{SegmentedWal, SyncPolicy};
+        let dir = std::env::temp_dir()
+            .join(format!("kiwi-core-page-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let (wal, rec) =
+            SegmentedWal::open(&dir, 1, SyncPolicy::Os, Duration::from_micros(200)).unwrap();
+        (BrokerHandle::with_backend(Arc::new(wal), rec, config), dir)
+    }
+
+    fn pad_body(i: i64) -> Value {
+        Value::str(format!("{i:0>256}"))
+    }
+
+    #[test]
+    fn deep_queue_pages_out_and_drains_with_zero_loss() {
+        let (broker, dir) = paging_broker(
+            "drain",
+            BrokerConfig {
+                shards: 1,
+                page_out_threshold: 2048,
+                page_in_batch: 4,
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = channel();
+        let conn = broker.connect("test", 0, tx);
+        declare(&broker, conn, "q"); // transient queue: paging uses the spill file
+        for i in 0..64 {
+            publish(&broker, conn, "q", pad_body(i));
+        }
+        let paged = broker.queue_paged("q").unwrap();
+        assert!(paged > 0, "a 64×256B backlog over a 2KiB budget must page its tail");
+        assert!(
+            broker.queue_resident_bytes("q").unwrap() <= 2048,
+            "paging must hold resident bytes at the threshold"
+        );
+        assert!(broker.metrics().counter("broker.page_outs_total").get() >= paged as u64);
+        assert!(dir.join("spill.dat").exists(), "transient bodies land in the spill file");
+        // Attach a consumer: the pump + page-in loop must hand over the
+        // whole backlog, in publish order, bodies intact.
+        consume(&broker, conn, "q", "c1", 0);
+        let bodies: Vec<i64> = drain_deliveries(&rx)
+            .iter()
+            .map(|d| d.body.decode().unwrap().as_str().unwrap().parse::<i64>().unwrap())
+            .collect();
+        assert_eq!(bodies, (0..64).collect::<Vec<i64>>(), "zero loss, publish order");
+        assert_eq!(broker.queue_paged("q"), Some(0));
+        assert!(broker.metrics().counter("broker.page_ins_total").get() >= paged as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn durable_queue_pages_against_the_wal_for_free() {
+        let (broker, dir) = paging_broker(
+            "durable",
+            BrokerConfig {
+                shards: 1,
+                page_out_threshold: 1024,
+                page_in_batch: 2,
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = channel();
+        let conn = broker.connect("test", 0, tx);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "dq".into(),
+                    options: QueueOptions::durable(),
+                },
+            )
+            .unwrap();
+        for i in 0..32 {
+            publish(&broker, conn, "dq", pad_body(i));
+        }
+        assert!(broker.queue_paged("dq").unwrap() > 0);
+        // Durable bodies page out against their WAL publish record — the
+        // spill file stays empty (file may exist from backend init).
+        let spill_len =
+            std::fs::metadata(dir.join("spill.dat")).map(|m| m.len()).unwrap_or(0);
+        assert_eq!(spill_len, 0, "durable page-out must not copy into the spill file");
+        consume(&broker, conn, "dq", "c1", 0);
+        let bodies: Vec<i64> = drain_deliveries(&rx)
+            .iter()
+            .map(|d| d.body.decode().unwrap().as_str().unwrap().parse::<i64>().unwrap())
+            .collect();
+        assert_eq!(bodies, (0..32).collect::<Vec<i64>>());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn purge_and_delete_release_paged_spill_space() {
+        let (broker, dir) = paging_broker(
+            "purge",
+            BrokerConfig { shards: 1, page_out_threshold: 512, ..Default::default() },
+        );
+        let (tx, _rx) = channel();
+        let conn = broker.connect("test", 0, tx);
+        declare(&broker, conn, "q");
+        for i in 0..16 {
+            publish(&broker, conn, "q", pad_body(i));
+        }
+        assert!(broker.queue_paged("q").unwrap() > 0);
+        assert!(std::fs::metadata(dir.join("spill.dat")).unwrap().len() > 0);
+        broker.handle(conn, &ClientRequest::QueuePurge { queue: "q".into() }).unwrap();
+        assert_eq!(
+            std::fs::metadata(dir.join("spill.dat")).unwrap().len(),
+            0,
+            "purging the last paged messages must truncate the spill file"
+        );
+        for i in 0..16 {
+            publish(&broker, conn, "q", pad_body(i));
+        }
+        assert!(broker.queue_paged("q").unwrap() > 0);
+        broker.handle(conn, &ClientRequest::QueueDelete { queue: "q".into() }).unwrap();
+        assert_eq!(
+            std::fs::metadata(dir.join("spill.dat")).unwrap().len(),
+            0,
+            "deleting a paged queue must free its spill space"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn credit_grants_on_hello_and_stalls_under_pressure() {
+        let broker = BrokerHandle::with_config(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+            BrokerConfig {
+                shards: 1,
+                page_out_threshold: 1,
+                publish_credit: 4,
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = channel();
+        let conn = broker.connect("test", 0, tx);
+        broker
+            .handle(conn, &ClientRequest::Hello { client_id: "t".into(), heartbeat_ms: 0 })
+            .unwrap();
+        let grants: Vec<u32> = rx
+            .try_iter()
+            .filter_map(|m| match m {
+                ServerMsg::Credit { channel_credit } => Some(channel_credit),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(grants, vec![4], "Hello must carry the initial grant");
+        declare(&broker, conn, "q");
+        for i in 0..4 {
+            publish(&broker, conn, "q", Value::I64(i));
+        }
+        assert_eq!(
+            broker.metrics().counter("broker.credit_stalls_total").get(),
+            1,
+            "running the window dry against a pressured queue is one stall"
+        );
+        // No re-grant while the backlog sits above the low-water mark.
+        broker.sweep();
+        assert_eq!(rx.try_iter().count(), 0, "no grant while over low-water");
+        // Drain, sweep: the stalled connection gets a fresh window.
+        broker.handle(conn, &ClientRequest::QueuePurge { queue: "q".into() }).unwrap();
+        broker.sweep();
+        let regrants: Vec<u32> = rx
+            .try_iter()
+            .filter_map(|m| match m {
+                ServerMsg::Credit { channel_credit } => Some(channel_credit),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(regrants, vec![4], "draining below low-water re-grants automatically");
+    }
+
+    #[test]
+    fn unpressured_publisher_is_topped_up_not_stalled() {
+        let broker = BrokerHandle::with_config(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+            BrokerConfig {
+                shards: 1,
+                // Huge threshold: the queue never counts as pressured.
+                page_out_threshold: usize::MAX / 2,
+                publish_credit: 4,
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = channel();
+        let conn = broker.connect("test", 0, tx);
+        broker
+            .handle(conn, &ClientRequest::Hello { client_id: "t".into(), heartbeat_ms: 0 })
+            .unwrap();
+        declare(&broker, conn, "q");
+        for i in 0..20 {
+            publish(&broker, conn, "q", Value::I64(i));
+        }
+        let grants = rx
+            .try_iter()
+            .filter(|m| matches!(m, ServerMsg::Credit { .. }))
+            .count();
+        assert!(grants >= 5, "an unpressured publisher is continually topped up");
+        assert_eq!(broker.metrics().counter("broker.credit_stalls_total").get(), 0);
+    }
+
+    #[test]
+    fn rss_gauge_samples_statm() {
+        #[cfg(target_os = "linux")]
+        {
+            let rss = process_rss_bytes().expect("statm readable on linux");
+            assert!(rss > 0);
+            let (broker, _conn, _rx) = setup();
+            broker.sweep();
+            assert!(broker.metrics().gauge("broker.rss_bytes").get() > 0);
+        }
     }
 }

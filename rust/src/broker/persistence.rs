@@ -41,7 +41,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::hash::{Hash, Hasher};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -67,6 +67,29 @@ const KIND_RETIRE_REASON: u8 = 5;
 /// patches the live message's attempt counter (and marks it redelivered)
 /// so `max_delivery` enforcement survives a broker restart.
 const KIND_REQUEUE: u8 = 6;
+
+/// Where a paged-out message body lives on disk: a byte range inside a
+/// WAL segment file (durable messages — their publish record already
+/// carries the body verbatim, so paging them out is free) or inside the
+/// backend's spill file (`segment == SPILL_SEGMENT`, used for messages
+/// with no durable record).
+///
+/// `generation` pins the locator to one lifetime of the segment file:
+/// compaction rewrites the file and bumps the segment's generation, so a
+/// stale locator is detected by mismatch and re-resolved through the
+/// segment's in-memory shadow instead of reading garbage at a dead offset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BodyLocator {
+    pub segment: u32,
+    pub generation: u32,
+    pub offset: u64,
+    pub len: u32,
+}
+
+/// Sentinel segment index marking a locator into the spill file. Spill
+/// offsets never move (the file is only truncated when it holds no live
+/// bodies), so spill locators always carry generation 0.
+pub const SPILL_SEGMENT: u32 = u32::MAX;
 
 /// When to fsync the log.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -261,7 +284,16 @@ fn write_publish_record<W: Write>(w: &mut W, queue: &str, msg: &QueuedMessage) -
 /// (truncate there). Schema errors on a *decodable* envelope propagate as
 /// `Err` so recovery fails loudly instead of silently dropping everything
 /// after the record.
-fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage)>> {
+///
+/// `stamp` is `(segment_index, payload_file_offset)` when the caller is a
+/// segmented replay: the body's exact byte range in the segment file is
+/// then recorded as the message's `stored` locator, so recovered messages
+/// can be paged out without any extra I/O. Legacy inline records get no
+/// locator — their re-encoded body is not byte-identical to the file.
+fn read_publish_record(
+    payload: Vec<u8>,
+    stamp: Option<(u32, u64)>,
+) -> Result<Option<(String, QueuedMessage)>> {
     let buf = Bytes::from_vec(payload);
     let (env, consumed) = match codec::decode_prefix(buf.as_slice()) {
         Ok((env, rest)) => {
@@ -287,6 +319,8 @@ fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage
                 deadline: None,
                 redelivered: env.get_bool("redelivered")?,
                 delivery_count: 0,
+                stored: None,
+                paged: None,
             },
         )));
     }
@@ -297,6 +331,12 @@ fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage
     }
     let props = EncodedProps::from_wire(buf.slice(consumed..consumed + props_len))?;
     let body = buf.slice(consumed + props_len..buf.len());
+    let stored = stamp.map(|(segment, payload_off)| BodyLocator {
+        segment,
+        generation: 0,
+        offset: payload_off + (consumed + props_len) as u64,
+        len: body_len as u32,
+    });
     Ok(Some((
         env.get_str("queue")?.to_string(),
         QueuedMessage {
@@ -305,6 +345,8 @@ fn read_publish_record(payload: Vec<u8>) -> Result<Option<(String, QueuedMessage
             routing_key: env.get_str("routing_key")?.into(),
             body,
             props,
+            stored,
+            paged: None,
             // TTLs restart on recovery (documented in DESIGN.md): the
             // deadline is re-derived from props on first publish/assign.
             deadline: None,
@@ -592,6 +634,13 @@ impl Persister for WalPersister {
 /// Replay a WAL file. A corrupt or truncated tail ends the replay (a
 /// warning is logged); everything before it is kept.
 pub fn replay(path: &Path) -> Result<RecoveredState> {
+    replay_stamped(path, None)
+}
+
+/// [`replay`], optionally stamping every recovered message's `stored`
+/// body locator against segment `stamp` (generation 0 — the locators are
+/// valid until that segment's first compaction).
+fn replay_stamped(path: &Path, stamp: Option<u32>) -> Result<RecoveredState> {
     let file = File::open(path)?;
     let mut r = BufReader::new(file);
     let mut state = RecoveredState::default();
@@ -631,7 +680,7 @@ pub fn replay(path: &Path) -> Result<RecoveredState> {
             // A torn/undecodable envelope truncates the replay; a decodable
             // but schema-invalid record is a hard error (`?`), never silent
             // loss of everything after it.
-            match read_publish_record(payload)? {
+            match read_publish_record(payload, stamp.map(|seg| (seg, record_offset + 9)))? {
                 Some((queue, msg)) => {
                     state.messages.entry(queue).or_default().push(msg);
                 }
@@ -709,8 +758,12 @@ pub fn segment_index_for(queue: &str, segments: usize) -> usize {
 /// `Mutex<Box<dyn Persister>>` and shards stop serialising on durability.
 pub trait PersistBackend: Send + Sync {
     /// Group-commit a batch of publishes. Entries may span queues; the
-    /// backend routes each to its queue's segment.
-    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)]) -> Result<()>;
+    /// backend routes each to its queue's segment. Backends that can
+    /// later serve `read_body` return one [`BodyLocator`] per entry, in
+    /// entry order, pointing at the body bytes inside the just-written
+    /// records; backends without locator support return an empty vec.
+    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)])
+        -> Result<Vec<Option<BodyLocator>>>;
     fn record_retire(&self, queue: &str, msg_id: u64) -> Result<()>;
     fn record_retire_batch(&self, queue: &str, msg_ids: &[u64]) -> Result<()>;
     fn record_retire_reason(&self, queue: &str, msg_id: u64, reason: &str) -> Result<()>;
@@ -726,6 +779,30 @@ pub trait PersistBackend: Send + Sync {
     /// Install any internally-maintained counters into the broker's
     /// metrics registry. Default: nothing to expose.
     fn register_metrics(&self, _registry: &Registry) {}
+
+    /// Ask the backend to take custody of `msg`'s body so the broker can
+    /// drop the in-memory copy. Durable messages already have their body
+    /// in a WAL record (`msg.stored`), so this is free; others are
+    /// appended to the backend's spill file. `None` means the backend
+    /// cannot page this body (no spill support — the default) and the
+    /// broker must keep it resident.
+    fn page_out(&self, _queue: &str, _msg: &QueuedMessage) -> Option<BodyLocator> {
+        None
+    }
+
+    /// Read a paged-out body back. `queue`/`msg_id` identify the message
+    /// so a locator staled by compaction can be re-resolved through the
+    /// backend's shadow state.
+    fn read_body(&self, queue: &str, msg_id: u64, _loc: BodyLocator) -> Result<Bytes> {
+        Err(Error::Persistence(format!(
+            "backend cannot read paged body for {queue}/{msg_id}"
+        )))
+    }
+
+    /// Release a paged body that will never be read again (the message
+    /// was restored, consumed, purged or dropped). Only spill locators
+    /// hold backend resources; segment locators are no-ops.
+    fn release_body(&self, _loc: BodyLocator) {}
 }
 
 /// Adapter: any [`Persister`] behind one mutex. This is both the
@@ -742,8 +819,12 @@ impl MutexBackend {
 }
 
 impl PersistBackend for MutexBackend {
-    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)]) -> Result<()> {
-        self.inner.lock().unwrap().record_publish_batch(entries)
+    fn record_publish_batch(
+        &self,
+        entries: &[(&str, &QueuedMessage)],
+    ) -> Result<Vec<Option<BodyLocator>>> {
+        self.inner.lock().unwrap().record_publish_batch(entries)?;
+        Ok(Vec::new())
     }
     fn record_retire(&self, queue: &str, msg_id: u64) -> Result<()> {
         self.inner.lock().unwrap().record_retire(queue, msg_id)
@@ -803,12 +884,29 @@ struct CommitPoint {
 /// Mutable half of one segment, behind its short append lock.
 struct SegmentInner {
     path: PathBuf,
+    /// This segment's index, baked into the locators it hands out.
+    seg_index: u32,
     writer: BufWriter<File>,
+    /// Lazily-opened read handle for paged-body reads. Invalidated (set
+    /// to `None`) by compaction, which replaces the file behind it.
+    reader: Option<File>,
+    /// Lifetime counter of the segment *file*: bumped by every
+    /// compaction. Locators carry the generation they were minted under;
+    /// a mismatch means the offset is dead and must be re-resolved
+    /// through the shadow.
+    generation: u32,
+    /// Logical length of the segment file — the offset the next record
+    /// lands at. Advanced by every append, recomputed by compaction.
+    pos: u64,
     /// Publishes since the last requested fsync (`SyncPolicy::EveryN`).
     unsynced: u32,
     live: u64,
     total: u64,
-    /// In-memory shadow used for compaction, as in [`WalPersister`].
+    /// In-memory shadow used for compaction, as in [`WalPersister`] —
+    /// except *body-free*: every shadow message holds an empty `body`
+    /// plus a `paged` locator into this segment's file. This is what
+    /// makes queue paging actually shrink RSS: without it the shadow
+    /// would pin every durable body in memory anyway.
     shadow: RecoveredState,
     /// Records appended *and flushed to the file* so far — the sequence
     /// number committers park on. Monotonic across compactions.
@@ -821,21 +919,57 @@ impl SegmentInner {
         let bytes = codec::encode_to_vec(payload);
         write_record(&mut self.writer, kind, &[bytes.as_slice()])?;
         self.total += 1;
-        Ok(9 + bytes.len() as u64)
+        let size = 9 + bytes.len() as u64;
+        self.pos += size;
+        Ok(size)
     }
 
-    fn append_publish(&mut self, queue: &str, msg: &QueuedMessage) -> Result<u64> {
+    /// Append one publish record; returns its on-disk size and the
+    /// locator of the body bytes inside it. The shadow keeps a body-free
+    /// clone carrying the same locator.
+    fn append_publish(&mut self, queue: &str, msg: &QueuedMessage) -> Result<(u64, BodyLocator)> {
         let env = codec::encode_to_vec(&publish_envelope(queue, msg));
-        let size = 9 + env.len() as u64 + msg.props.bytes().len() as u64 + msg.body.len() as u64;
+        let head = 9 + env.len() as u64 + msg.props.bytes().len() as u64;
+        let size = head + msg.body.len() as u64;
         write_record(
             &mut self.writer,
             KIND_PUBLISH,
             &[env.as_slice(), msg.props.bytes().as_slice(), msg.body.as_slice()],
         )?;
+        let loc = BodyLocator {
+            segment: self.seg_index,
+            generation: self.generation,
+            offset: self.pos + head,
+            len: msg.body.len() as u32,
+        };
+        self.pos += size;
         self.total += 1;
         self.live += 1;
-        self.shadow.messages.entry(queue.to_string()).or_default().push(msg.clone());
-        Ok(size)
+        let mut shadow_msg = msg.clone();
+        shadow_msg.body = Bytes::new();
+        // Detach the props from the publisher's frame buffer: a shadow
+        // copy that shares it would pin the whole receive frame (body
+        // included) in memory, defeating the body-free shadow.
+        shadow_msg.props = shadow_msg.props.detach();
+        shadow_msg.stored = Some(loc);
+        shadow_msg.paged = Some(loc);
+        self.shadow.messages.entry(queue.to_string()).or_default().push(shadow_msg);
+        Ok((size, loc))
+    }
+
+    /// Read `loc.len` body bytes at `loc.offset`. The caller has already
+    /// checked the generation; appenders flush before releasing this
+    /// lock, so everything a locator can point at is readable.
+    fn read_body_at(&mut self, loc: BodyLocator) -> Result<Bytes> {
+        self.writer.flush()?;
+        if self.reader.is_none() {
+            self.reader = Some(File::open(&self.path)?);
+        }
+        let f = self.reader.as_mut().unwrap();
+        f.seek(SeekFrom::Start(loc.offset))?;
+        let mut buf = vec![0u8; loc.len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(Bytes::from_vec(buf))
     }
 
     fn retire_one(&mut self, queue: &str, msg_id: u64) -> Result<u64> {
@@ -895,29 +1029,65 @@ impl SegmentInner {
     }
 
     /// Rewrite this segment with only live content. Atomic via temp +
-    /// rename; holds only this segment's lock, so other shards publish on.
+    /// rename; holds only this segment's lock, so other shards publish
+    /// on. Paged shadow bodies are read back from the old file as they
+    /// are rewritten, and every shadow message comes out body-free with
+    /// a fresh locator under the bumped generation — locators minted
+    /// before the rewrite go stale and re-resolve through the shadow.
     fn compact(&mut self) -> Result<()> {
         let tmp = self.path.with_extension("log.tmp");
+        let next_gen = self.generation.wrapping_add(1);
+        let mut pos = 0u64;
         {
+            self.writer.flush()?;
+            let mut old = File::open(&self.path)?;
             let file = File::create(&tmp)?;
-            let mut w = WalWriter { writer: BufWriter::new(file) };
+            let mut w = BufWriter::new(file);
             for (q, opts) in &self.shadow.queues {
-                w.append(
-                    KIND_QUEUE_DECLARE,
-                    &Value::map([("queue", Value::str(q)), ("options", opts.to_value())]),
-                )?;
+                let bytes = codec::encode_to_vec(&Value::map([
+                    ("queue", Value::str(q)),
+                    ("options", opts.to_value()),
+                ]));
+                write_record(&mut w, KIND_QUEUE_DECLARE, &[bytes.as_slice()])?;
+                pos += 9 + bytes.len() as u64;
             }
-            for (q, msgs) in &self.shadow.messages {
-                for m in msgs {
-                    w.append_publish(q, m)?;
+            let seg_index = self.seg_index;
+            for (q, msgs) in self.shadow.messages.iter_mut() {
+                for m in msgs.iter_mut() {
+                    if let Some(loc) = m.paged {
+                        old.seek(SeekFrom::Start(loc.offset))?;
+                        let mut buf = vec![0u8; loc.len as usize];
+                        old.read_exact(&mut buf)?;
+                        m.body = Bytes::from_vec(buf);
+                    }
+                    let env = codec::encode_to_vec(&publish_envelope(q, m));
+                    let head = 9 + env.len() as u64 + m.props.bytes().len() as u64;
+                    write_record(
+                        &mut w,
+                        KIND_PUBLISH,
+                        &[env.as_slice(), m.props.bytes().as_slice(), m.body.as_slice()],
+                    )?;
+                    let loc = BodyLocator {
+                        segment: seg_index,
+                        generation: next_gen,
+                        offset: pos + head,
+                        len: m.body.len() as u32,
+                    };
+                    pos += head + m.body.len() as u64;
+                    m.body = Bytes::new();
+                    m.stored = Some(loc);
+                    m.paged = Some(loc);
                 }
             }
-            w.writer.flush()?;
-            w.writer.get_ref().sync_all()?;
+            w.flush()?;
+            w.get_ref().sync_all()?;
         }
         std::fs::rename(&tmp, &self.path)?;
         let file = OpenOptions::new().append(true).open(&self.path)?;
         self.writer = BufWriter::new(file);
+        self.reader = None;
+        self.generation = next_gen;
+        self.pos = pos;
         self.live = self.shadow.message_count() as u64;
         self.total = self.live;
         Ok(())
@@ -1061,6 +1231,64 @@ fn syncer_loop(segments: Vec<Arc<WalSegment>>, shared: Arc<SyncShared>, stats: W
     }
 }
 
+/// Overflow store for paged bodies that have no durable WAL record
+/// (messages on non-durable queues). Raw body bytes appended under one
+/// mutex; offsets never move once handed out, and the file is truncated
+/// back to zero whenever the last live body is released — so spill
+/// locators need no generation tracking. Spill content is meaningless
+/// across restarts (non-durable messages die with the process); the file
+/// is removed on open.
+struct SpillFile {
+    path: PathBuf,
+    file: Option<File>,
+    end: u64,
+    live: u64,
+    live_bytes: u64,
+}
+
+impl SpillFile {
+    fn append(&mut self, body: &[u8]) -> Result<(u64, u32)> {
+        if self.file.is_none() {
+            self.file =
+                Some(OpenOptions::new().read(true).append(true).create(true).open(&self.path)?);
+        }
+        let f = self.file.as_mut().unwrap();
+        f.write_all(body)?;
+        let off = self.end;
+        self.end += body.len() as u64;
+        self.live += 1;
+        self.live_bytes += body.len() as u64;
+        Ok((off, body.len() as u32))
+    }
+
+    fn read(&mut self, loc: BodyLocator) -> Result<Bytes> {
+        let f = self
+            .file
+            .as_mut()
+            .ok_or_else(|| Error::Persistence("spill file holds no bodies".into()))?;
+        f.seek(SeekFrom::Start(loc.offset))?;
+        let mut buf = vec![0u8; loc.len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(Bytes::from_vec(buf))
+    }
+
+    fn release(&mut self, loc: BodyLocator) {
+        self.live = self.live.saturating_sub(1);
+        self.live_bytes = self.live_bytes.saturating_sub(u64::from(loc.len));
+        if self.live == 0 && self.end > 0 {
+            // No locator can reference the file any more: reclaim it.
+            let ok = match &self.file {
+                Some(f) => f.set_len(0).is_ok(),
+                None => true,
+            };
+            if ok {
+                self.end = 0;
+                self.live_bytes = 0;
+            }
+        }
+    }
+}
+
 /// The segmented, group-committing WAL (see the module docs for the
 /// design). Open one with [`SegmentedWal::open`]; it is `Sync` and meant
 /// to live in an `Arc` shared by every broker shard.
@@ -1070,6 +1298,7 @@ pub struct SegmentedWal {
     policy: SyncPolicy,
     shared: Arc<SyncShared>,
     stats: WalStats,
+    spill: Mutex<SpillFile>,
     syncer: Option<JoinHandle<()>>,
 }
 
@@ -1144,18 +1373,44 @@ impl SegmentedWal {
             for (idx, st) in replayed {
                 shadows[idx] = st;
             }
+            // The shadow must be body-free (see [`SegmentInner::shadow`]):
+            // the stamped replay pointed every recovered `stored` locator
+            // at the body bytes already in this segment's file, so the
+            // in-memory copies can go. Props are detached because they are
+            // refcounted views of the same record buffers as the bodies —
+            // keeping them would pin every body allocation anyway. (Legacy
+            // inline records have no locator and stay resident until the
+            // next compaction rewrites them.)
+            for shadow in shadows.iter_mut() {
+                for msgs in shadow.messages.values_mut() {
+                    for m in msgs.iter_mut() {
+                        if let Some(loc) = m.stored {
+                            m.body = Bytes::new();
+                            m.paged = Some(loc);
+                            m.props = m.props.detach();
+                        }
+                    }
+                }
+            }
         }
 
         let mut segs = Vec::with_capacity(n);
         for (i, shadow) in shadows.into_iter().enumerate() {
             let seg_path = dir.join(format!("seg-{i}.log"));
             let file = OpenOptions::new().create(true).append(true).open(&seg_path)?;
+            // Physical end of the file — where the next record lands and
+            // what freshly-minted locator offsets are measured against.
+            let pos = file.metadata()?.len();
             let live = shadow.message_count() as u64;
             segs.push(Arc::new(WalSegment {
                 index: i,
                 inner: Mutex::new(SegmentInner {
                     path: seg_path,
+                    seg_index: i as u32,
                     writer: BufWriter::new(file),
+                    reader: None,
+                    generation: 0,
+                    pos,
                     unsynced: 0,
                     live,
                     total: live,
@@ -1201,7 +1456,19 @@ impl SegmentedWal {
             )
         };
 
-        let wal = SegmentedWal { dir, segments: segs, policy, shared, stats, syncer };
+        // Spill content is meaningless across restarts: remove any stale
+        // file so locators can never alias old bytes.
+        let spill_path = dir.join("spill.dat");
+        std::fs::remove_file(&spill_path).ok();
+        let spill = Mutex::new(SpillFile {
+            path: spill_path,
+            file: None,
+            end: 0,
+            live: 0,
+            live_bytes: 0,
+        });
+
+        let wal = SegmentedWal { dir, segments: segs, policy, shared, stats, spill, syncer };
         wal.maybe_compact()?;
         Ok((wal, merged))
     }
@@ -1264,7 +1531,8 @@ impl SegmentedWal {
         &self,
         seg: &Arc<WalSegment>,
         entries: &[(&str, &QueuedMessage)],
-    ) -> Result<()> {
+    ) -> Result<Vec<BodyLocator>> {
+        let mut locs = Vec::with_capacity(entries.len());
         let mut wait = false;
         let mut kick = false;
         let seq;
@@ -1272,7 +1540,9 @@ impl SegmentedWal {
             let mut inner = seg.inner.lock().unwrap();
             let mut bytes = 0u64;
             for (queue, m) in entries.iter().copied() {
-                bytes += inner.append_publish(queue, m)?;
+                let (size, loc) = inner.append_publish(queue, m)?;
+                bytes += size;
+                locs.push(loc);
             }
             inner.writer.flush()?;
             inner.appended_seq += entries.len() as u64;
@@ -1300,33 +1570,42 @@ impl SegmentedWal {
         if wait {
             seg.wait_committed(seq)?;
         }
-        Ok(())
+        Ok(locs)
     }
 }
 
 impl PersistBackend for SegmentedWal {
-    fn record_publish_batch(&self, entries: &[(&str, &QueuedMessage)]) -> Result<()> {
+    fn record_publish_batch(
+        &self,
+        entries: &[(&str, &QueuedMessage)],
+    ) -> Result<Vec<Option<BodyLocator>>> {
         if entries.is_empty() {
-            return Ok(());
+            return Ok(Vec::new());
         }
         let n = self.segments.len();
-        if n == 1 {
-            return self.publish_to_segment(&self.segments[0], entries);
+        if n == 1 || entries.len() == 1 {
+            let seg =
+                if n == 1 { &self.segments[0] } else { self.segment_for(entries[0].0) };
+            let locs = self.publish_to_segment(seg, entries)?;
+            return Ok(locs.into_iter().map(Some).collect());
         }
-        if entries.len() == 1 {
-            let seg = self.segment_for(entries[0].0);
-            return self.publish_to_segment(seg, entries);
+        // Scatter by segment, then gather locators back into entry order.
+        let mut groups: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+        for (i, (q, _)) in entries.iter().enumerate() {
+            groups[segment_index_for(q, n)].push(i);
         }
-        let mut groups: Vec<Vec<(&str, &QueuedMessage)>> = (0..n).map(|_| Vec::new()).collect();
-        for (q, m) in entries.iter().copied() {
-            groups[segment_index_for(q, n)].push((q, m));
-        }
-        for (i, group) in groups.iter().enumerate() {
-            if !group.is_empty() {
-                self.publish_to_segment(&self.segments[i], group)?;
+        let mut out: Vec<Option<BodyLocator>> = vec![None; entries.len()];
+        for (seg_i, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let sub: Vec<(&str, &QueuedMessage)> = group.iter().map(|&i| entries[i]).collect();
+            let locs = self.publish_to_segment(&self.segments[seg_i], &sub)?;
+            for (&i, loc) in group.iter().zip(locs.into_iter()) {
+                out[i] = Some(loc);
             }
         }
-        Ok(())
+        Ok(out)
     }
 
     fn record_retire(&self, queue: &str, msg_id: u64) -> Result<()> {
@@ -1461,6 +1740,61 @@ impl PersistBackend for SegmentedWal {
             Arc::clone(&self.stats.batch_max),
         );
     }
+
+    fn page_out(&self, queue: &str, msg: &QueuedMessage) -> Option<BodyLocator> {
+        // Durable bodies are already on disk verbatim — the publish record
+        // is the page. Costs nothing.
+        if let Some(loc) = msg.stored {
+            return Some(loc);
+        }
+        let mut spill = self.spill.lock().unwrap();
+        match spill.append(msg.body.as_slice()) {
+            Ok((offset, len)) => {
+                Some(BodyLocator { segment: SPILL_SEGMENT, generation: 0, offset, len })
+            }
+            Err(e) => {
+                // Paging must never lose a body: on spill I/O failure the
+                // message just stays resident.
+                log::warn!("wal: spill append for {queue} failed, keeping body resident: {e}");
+                None
+            }
+        }
+    }
+
+    fn read_body(&self, queue: &str, msg_id: u64, loc: BodyLocator) -> Result<Bytes> {
+        if loc.segment == SPILL_SEGMENT {
+            return self.spill.lock().unwrap().read(loc);
+        }
+        // Never trust `loc.segment` for file selection — the queue's hash
+        // decides which segment (and lock) owns its records. A locator
+        // whose segment or generation disagrees with the live segment is
+        // stale (minted before a compaction or re-partition) and is
+        // re-resolved through the shadow, which always carries a fresh one.
+        let seg = self.segment_for(queue);
+        let mut inner = seg.inner.lock().unwrap();
+        let fresh = if loc.segment == seg.index as u32 && loc.generation == inner.generation {
+            loc
+        } else {
+            inner
+                .shadow
+                .messages
+                .get(queue)
+                .and_then(|msgs| msgs.iter().find(|m| m.msg_id == msg_id))
+                .and_then(|m| m.paged)
+                .ok_or_else(|| {
+                    Error::Persistence(format!(
+                        "paged body for {queue}/{msg_id} not found in wal shadow"
+                    ))
+                })?
+        };
+        inner.read_body_at(fresh)
+    }
+
+    fn release_body(&self, loc: BodyLocator) {
+        if loc.segment == SPILL_SEGMENT {
+            self.spill.lock().unwrap().release(loc);
+        }
+    }
 }
 
 impl Drop for SegmentedWal {
@@ -1476,6 +1810,12 @@ impl Drop for SegmentedWal {
         // Clean shutdown loses nothing even under Os/EveryN: flush and
         // fsync whatever is still buffered.
         let _ = PersistBackend::sync(self);
+        // Spill bodies are non-durable by definition; don't leave the file
+        // behind (open() would remove a stale one anyway).
+        let spill = self.spill.lock().unwrap();
+        if spill.file.is_some() || spill.path.exists() {
+            std::fs::remove_file(&spill.path).ok();
+        }
     }
 }
 
@@ -1517,7 +1857,12 @@ fn replay_segments_parallel(
     std::thread::scope(|scope| -> Result<Vec<(usize, RecoveredState)>> {
         let handles: Vec<_> = files
             .iter()
-            .map(|(idx, path)| (*idx, scope.spawn(move || replay(path))))
+            .map(|(idx, path)| {
+                // Stamp every recovered message's `stored` locator with its
+                // segment: paging recovered durable bodies back out is then
+                // free, exactly like freshly-published ones.
+                (*idx, scope.spawn(move || replay_stamped(path, Some(*idx as u32))))
+            })
             .collect();
         let mut out = Vec::with_capacity(handles.len());
         for (idx, h) in handles {
@@ -1574,6 +1919,8 @@ mod tests {
             deadline: None,
             redelivered: false,
             delivery_count: 0,
+            stored: None,
+            paged: None,
         }
     }
 
@@ -2188,6 +2535,130 @@ mod tests {
         drop(wal);
         let rec = replay_dir(&dir).unwrap();
         assert_eq!(rec.message_count(), threads as usize * per as usize);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- paged bodies ----
+
+    #[test]
+    fn publish_locators_read_back_byte_identical_bodies() {
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 2, SyncPolicy::Os, TICK).unwrap();
+        let m1 = msg(1, "alpha");
+        let m2 = msg(2, "beta");
+        let locs = wal.record_publish_batch(&[("page-q", &m1), ("page-q", &m2)]).unwrap();
+        assert_eq!(locs.len(), 2);
+        let l1 = locs[0].unwrap();
+        assert_eq!(l1.len as usize, m1.body.len());
+        assert_eq!(wal.read_body("page-q", 1, l1).unwrap().as_slice(), m1.body.as_slice());
+        let l2 = locs[1].unwrap();
+        assert_eq!(wal.read_body("page-q", 2, l2).unwrap().as_slice(), m2.body.as_slice());
+        drop(wal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_spanning_segments_returns_entry_ordered_locators() {
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 3, SyncPolicy::Os, TICK).unwrap();
+        let queues: Vec<String> = (0..6).map(|i| format!("loc-q-{i}")).collect();
+        let msgs: Vec<QueuedMessage> =
+            (0..6).map(|i| msg(i as u64 + 1, &format!("payload-{i}"))).collect();
+        let entries: Vec<(&str, &QueuedMessage)> =
+            queues.iter().map(String::as_str).zip(msgs.iter()).collect();
+        let locs = wal.record_publish_batch(&entries).unwrap();
+        assert_eq!(locs.len(), 6);
+        for (i, (q, m)) in entries.iter().enumerate() {
+            let loc = locs[i].expect("segmented wal mints a locator per entry");
+            assert_eq!(
+                wal.read_body(q, m.msg_id, loc).unwrap().as_slice(),
+                m.body.as_slice(),
+                "entry {i} locator must point at its own body"
+            );
+        }
+        drop(wal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn page_out_durable_is_free_and_spill_serves_transients() {
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 1, SyncPolicy::Os, TICK).unwrap();
+        let durable = msg(1, "durable-body");
+        let locs = wal.record_publish_batch(&[("q", &durable)]).unwrap();
+        let stored = locs[0].unwrap();
+        let mut d = durable.clone();
+        d.stored = Some(stored);
+        let loc = wal.page_out("q", &d).unwrap();
+        assert_eq!(loc, stored, "durable page-out reuses the publish record");
+        // Non-durable: the body goes to the spill file.
+        let transient = msg(2, "transient-body");
+        let sloc = wal.page_out("q", &transient).unwrap();
+        assert_eq!(sloc.segment, SPILL_SEGMENT);
+        assert_eq!(
+            wal.read_body("q", 2, sloc).unwrap().as_slice(),
+            transient.body.as_slice()
+        );
+        assert!(dir.join("spill.dat").exists());
+        // Releasing the last live body truncates the file.
+        wal.release_body(sloc);
+        assert_eq!(std::fs::metadata(dir.join("spill.dat")).unwrap().len(), 0);
+        drop(wal);
+        assert!(!dir.join("spill.dat").exists(), "drop removes the spill file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_locator_re_resolves_through_shadow_after_compaction() {
+        let dir = temp_seg_dir();
+        let (wal, _) = SegmentedWal::open(&dir, 1, SyncPolicy::Os, TICK).unwrap();
+        wal.record_queue_declare("q", &QueueOptions::durable()).unwrap();
+        let msgs: Vec<QueuedMessage> =
+            (1..=20u64).map(|i| msg(i, &format!("body-{i}"))).collect();
+        let entries: Vec<(&str, &QueuedMessage)> = msgs.iter().map(|m| ("q", m)).collect();
+        let locs = wal.record_publish_batch(&entries).unwrap();
+        // Retire most and compact: the file is rewritten, offsets move and
+        // the generation bumps, so pre-compaction locators are all stale.
+        let dead: Vec<u64> = (1..=15).collect();
+        wal.record_retire_batch("q", &dead).unwrap();
+        wal.segments[0].inner.lock().unwrap().compact().unwrap();
+        for i in 16..=20u64 {
+            let old = locs[i as usize - 1].unwrap();
+            let got = wal.read_body("q", i, old).unwrap();
+            assert_eq!(
+                got.as_slice(),
+                msgs[i as usize - 1].body.as_slice(),
+                "stale locator for live msg {i} must re-resolve via the shadow"
+            );
+        }
+        // A retired message's stale locator errors instead of reading junk.
+        assert!(wal.read_body("q", 3, locs[2].unwrap()).is_err());
+        drop(wal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_stamps_stored_locators() {
+        let dir = temp_seg_dir();
+        let body;
+        {
+            let (wal, _) = SegmentedWal::open(&dir, 2, SyncPolicy::Os, TICK).unwrap();
+            wal.record_queue_declare("rq", &QueueOptions::durable()).unwrap();
+            let m = msg(7, "survives-restart");
+            body = m.body.clone();
+            wal.record_publish_batch(&[("rq", &m)]).unwrap();
+            PersistBackend::sync(&wal).unwrap();
+        }
+        let (wal, rec) = SegmentedWal::open(&dir, 2, SyncPolicy::Os, TICK).unwrap();
+        let m = &rec.messages["rq"][0];
+        assert_eq!(m.body.as_slice(), body.as_slice(), "recovery returns the body resident");
+        let loc = m.stored.expect("recovered durable message carries a stored locator");
+        assert_eq!(
+            wal.read_body("rq", 7, loc).unwrap().as_slice(),
+            body.as_slice(),
+            "paging a recovered message back out must be free"
+        );
+        drop(wal);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

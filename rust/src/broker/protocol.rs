@@ -122,6 +122,16 @@ impl EncodedProps {
     pub fn bytes(&self) -> &Bytes {
         &self.bytes
     }
+
+    /// Re-home the cached encoding into its own minimal buffer.
+    ///
+    /// Off the wire, `bytes` is a view of the whole receive frame (and on
+    /// replay, of a WAL record buffer) — copies held for the life of a
+    /// durable message (e.g. the WAL shadow) must detach or they pin the
+    /// entire source allocation.
+    pub fn detach(&self) -> Self {
+        EncodedProps { props: Arc::clone(&self.props), bytes: self.bytes.detach() }
+    }
 }
 
 impl Deref for EncodedProps {
@@ -388,6 +398,14 @@ pub enum ServerMsg {
     DeliverBatch(Vec<Delivery>),
     /// Consumer cancelled server-side (queue deleted / exclusivity).
     CancelConsumer { consumer_tag: String },
+    /// Publish-credit grant (broker → publisher flow control). The broker
+    /// decrements the connection's credit per publish and re-grants when
+    /// the target queues have drained below their low-water mark; a client
+    /// at zero credit blocks its publishers (bounded) instead of flooding
+    /// a broker that is paging queue tails to disk. Connections that never
+    /// receive a grant are uncredited (unlimited) — old brokers keep
+    /// working with new clients and vice versa.
+    Credit { channel_credit: u32 },
 }
 
 fn req(op: &str, req_id: u64, fields: Vec<(&str, Value)>) -> Value {
@@ -720,6 +738,10 @@ impl ServerMsg {
                 ("kind", Value::str("cancel_consumer")),
                 ("consumer_tag", Value::str(consumer_tag)),
             ]),
+            ServerMsg::Credit { channel_credit } => Value::map([
+                ("kind", Value::str("credit")),
+                ("channel_credit", Value::from(u64::from(*channel_credit))),
+            ]),
         }
     }
 
@@ -758,6 +780,10 @@ impl ServerMsg {
                 Ok(ServerMsg::CancelConsumer {
                     consumer_tag: v.get_str("consumer_tag")?.to_string(),
                 })
+            }
+            "credit" => {
+                sections.finish()?;
+                Ok(ServerMsg::Credit { channel_credit: v.get_u64("channel_credit")? as u32 })
             }
             other => Err(Error::Wire(format!("unknown server msg kind '{other}'"))),
         }
@@ -909,9 +935,23 @@ mod tests {
                     .collect(),
             ),
             ServerMsg::CancelConsumer { consumer_tag: "ct".into() },
+            ServerMsg::Credit { channel_credit: 512 },
+            ServerMsg::Credit { channel_credit: 0 },
         ] {
             roundtrip_msg(m);
         }
+    }
+
+    #[test]
+    fn detached_props_leave_the_source_buffer() {
+        let props: EncodedProps = MessageProps { priority: 4, ..Default::default() }.into();
+        let det = props.detach();
+        assert_eq!(det, props);
+        assert_eq!(det.bytes().as_slice(), props.bytes().as_slice());
+        assert!(
+            !Bytes::same_buffer(det.bytes(), props.bytes()),
+            "detach must re-home the encoding into its own allocation"
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::broker::persistence::BodyLocator;
 use crate::broker::protocol::{EncodedProps, OverflowPolicy, QueueOptions};
 use crate::wire::{Bytes, Value};
 
@@ -38,6 +39,14 @@ pub struct QueuedMessage {
     /// reached the wire). Checked against `max_delivery` at requeue time
     /// and preserved across WAL recovery.
     pub delivery_count: u32,
+    /// Where the WAL already holds this body byte-identically (durable
+    /// queues only, minted when the publish record is appended). Lets the
+    /// pager drop `body` without writing anything.
+    pub stored: Option<BodyLocator>,
+    /// Set while the body is evicted from memory: the locator to re-read
+    /// it from. `body` is empty whenever this is `Some`; assignment never
+    /// hands out a paged message.
+    pub paged: Option<BodyLocator>,
 }
 
 impl QueuedMessage {
@@ -188,6 +197,15 @@ pub struct Queue {
     /// (exact after a full sweep, conservative otherwise — popping a
     /// message never raises it). `Some` iff `ttl_ready > 0`.
     earliest_deadline: Option<Instant>,
+    /// Body bytes of ready messages currently resident in memory.
+    resident_bytes: u64,
+    /// Body bytes of ready messages evicted to the WAL / spill file.
+    paged_bytes: u64,
+    /// Ready messages whose body is evicted (subset of `ready_count`).
+    paged_count: usize,
+    /// Monotonic page-out / page-in event counts (for metrics).
+    pub page_outs: u64,
+    pub page_ins: u64,
     /// Delivered, awaiting ack, keyed by delivery tag.
     unacked: HashMap<u64, InFlight>,
     consumers: Vec<Consumer>,
@@ -218,6 +236,11 @@ impl Queue {
             ready_count: 0,
             ttl_ready: 0,
             earliest_deadline: None,
+            resident_bytes: 0,
+            paged_bytes: 0,
+            paged_count: 0,
+            page_outs: 0,
+            page_ins: 0,
             unacked: HashMap::new(),
             consumers: Vec::new(),
             rr_cursor: 0,
@@ -293,7 +316,7 @@ impl Queue {
                 }
             }
         }
-        self.track_ttl_in(msg.deadline);
+        self.track_in(&msg);
         let lane = msg.lane();
         self.ready[lane].push_back(msg);
         self.ready_count += 1;
@@ -301,24 +324,41 @@ impl Queue {
         PublishOutcome { accepted: true, dead }
     }
 
-    /// Bookkeeping when a deadline-carrying message enters a ready lane:
-    /// maintains the earliest-deadline lower bound the sweep gates on.
-    fn track_ttl_in(&mut self, deadline: Option<Instant>) {
-        if let Some(d) = deadline {
+    /// Bookkeeping when a message enters a ready lane: maintains the
+    /// earliest-deadline lower bound the sweep gates on, plus the
+    /// resident/paged byte accounting the pager steers by.
+    fn track_in(&mut self, msg: &QueuedMessage) {
+        if let Some(d) = msg.deadline {
             self.ttl_ready += 1;
             self.earliest_deadline = Some(self.earliest_deadline.map_or(d, |e| e.min(d)));
         }
+        match msg.paged {
+            Some(loc) => {
+                self.paged_bytes += u64::from(loc.len);
+                self.paged_count += 1;
+            }
+            None => self.resident_bytes += msg.body.len() as u64,
+        }
     }
 
-    /// Bookkeeping when a deadline-carrying message leaves a ready lane.
-    /// The bound is not recomputed (it may now be earlier than any live
-    /// deadline — a sweep then scans needlessly but never skips wrongly);
-    /// it resets exactly when no TTL'd message remains.
-    fn track_ttl_out(&mut self, deadline: Option<Instant>) {
-        if deadline.is_some() {
+    /// Bookkeeping when a message leaves a ready lane. The deadline bound
+    /// is not recomputed (it may now be earlier than any live deadline — a
+    /// sweep then scans needlessly but never skips wrongly); it resets
+    /// exactly when no TTL'd message remains.
+    fn track_out(&mut self, msg: &QueuedMessage) {
+        if msg.deadline.is_some() {
             self.ttl_ready -= 1;
             if self.ttl_ready == 0 {
                 self.earliest_deadline = None;
+            }
+        }
+        match msg.paged {
+            Some(loc) => {
+                self.paged_bytes = self.paged_bytes.saturating_sub(u64::from(loc.len));
+                self.paged_count = self.paged_count.saturating_sub(1);
+            }
+            None => {
+                self.resident_bytes = self.resident_bytes.saturating_sub(msg.body.len() as u64);
             }
         }
     }
@@ -336,7 +376,7 @@ impl Queue {
         for lane in (0..PRIORITY_LANES).rev() {
             while let Some(msg) = self.ready[lane].pop_front() {
                 self.ready_count -= 1;
-                self.track_ttl_out(msg.deadline);
+                self.track_out(&msg);
                 if msg.expired(now) {
                     self.expired += 1;
                     self.expired_buf.push(msg);
@@ -439,6 +479,17 @@ impl Queue {
             }
             let Some(idx) = found else { break 'outer };
             let Some(mut msg) = self.pop_ready(now) else { break 'outer };
+            if msg.paged.is_some() {
+                // The head has drained into the paged tail: the body is on
+                // disk, so delivery must wait for the dispatch pump's
+                // page-in pass (which restores bodies off the shard lock).
+                // Put it back and stop — never hand out an empty body.
+                self.track_in(&msg);
+                let lane = msg.lane();
+                self.ready[lane].push_front(msg);
+                self.ready_count += 1;
+                break 'outer;
+            }
             // This is the one place a delivery attempt is counted; a prior
             // attempt (including one recovered from the WAL) marks the
             // message redelivered.
@@ -500,7 +551,7 @@ impl Queue {
         let mut msg = inflight.message;
         if requeue && !self.over_delivery_cap(&msg) {
             msg.redelivered = true;
-            self.track_ttl_in(msg.deadline);
+            self.track_in(&msg);
             let lane = msg.lane();
             let (msg_id, delivery_count) = (msg.msg_id, msg.delivery_count);
             self.ready[lane].push_front(msg);
@@ -529,7 +580,7 @@ impl Queue {
         }
         let mut msg = inflight.message;
         msg.delivery_count = msg.delivery_count.saturating_sub(1);
-        self.track_ttl_in(msg.deadline);
+        self.track_in(&msg);
         let lane = msg.lane();
         self.ready[lane].push_front(msg);
         self.ready_count += 1;
@@ -571,7 +622,7 @@ impl Queue {
             }
             msg.redelivered = true;
             requeued.push((msg.msg_id, msg.delivery_count));
-            self.track_ttl_in(msg.deadline);
+            self.track_in(&msg);
             let lane = msg.lane();
             self.ready[lane].push_front(msg);
             self.ready_count += 1;
@@ -584,17 +635,22 @@ impl Queue {
         DropOutcome { dead_tags: tags, dead, requeued }
     }
 
-    /// Drop all ready messages; returns their ids (for WAL retirement).
-    pub fn purge(&mut self) -> Vec<u64> {
+    /// Drop all ready messages; returns their ids (for WAL retirement)
+    /// paired with the paged-body locator of any evicted message (the
+    /// caller releases spill-file space for those).
+    pub fn purge(&mut self) -> Vec<(u64, Option<BodyLocator>)> {
         let mut ids = Vec::with_capacity(self.ready_count);
         for lane in &mut self.ready {
             for m in lane.drain(..) {
-                ids.push(m.msg_id);
+                ids.push((m.msg_id, m.paged));
             }
         }
         self.ready_count = 0;
         self.ttl_ready = 0;
         self.earliest_deadline = None;
+        self.resident_bytes = 0;
+        self.paged_bytes = 0;
+        self.paged_count = 0;
         ids
     }
 
@@ -625,6 +681,9 @@ impl Queue {
         let mut swept = Vec::new();
         let mut remaining = 0usize;
         let mut earliest: Option<Instant> = None;
+        let mut resident = 0u64;
+        let mut paged = 0u64;
+        let mut paged_count = 0usize;
         for lane in &mut self.ready {
             // `retain` cannot move the element out; collect indices first
             // would also copy — a drain-and-rebuild keeps it simple and
@@ -638,6 +697,13 @@ impl Queue {
                         remaining += 1;
                         earliest = Some(earliest.map_or(d, |e| e.min(d)));
                     }
+                    match m.paged {
+                        Some(loc) => {
+                            paged += u64::from(loc.len);
+                            paged_count += 1;
+                        }
+                        None => resident += m.body.len() as u64,
+                    }
                     kept.push_back(m);
                 }
             }
@@ -647,7 +713,130 @@ impl Queue {
         self.expired += swept.len() as u64;
         self.ttl_ready = remaining;
         self.earliest_deadline = earliest;
+        self.resident_bytes = resident;
+        self.paged_bytes = paged;
+        self.paged_count = paged_count;
         swept
+    }
+
+    /// Body bytes of ready messages currently held in memory.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// Body bytes of ready messages evicted to the WAL / spill file.
+    pub fn paged_bytes(&self) -> u64 {
+        self.paged_bytes
+    }
+
+    /// Ready messages whose body is currently evicted.
+    pub fn paged_len(&self) -> usize {
+        self.paged_count
+    }
+
+    /// Evict message bodies from the *tail* of the ready lanes (reverse
+    /// assignment order: lowest priority first, newest first) until the
+    /// queue's resident bytes drop to `threshold` — keeping at least the
+    /// first `head_window` messages in assignment order resident so the
+    /// next dispatch rounds never stall on disk.
+    ///
+    /// `page` maps a message to the locator its body can be re-read from:
+    /// for durable messages that is the already-written WAL record
+    /// (`msg.stored`, free); for non-durable ones the backend appends the
+    /// body to its spill file. Returning `None` (spill I/O failure) leaves
+    /// the message resident — paging must never lose a body.
+    ///
+    /// Returns the number of bodies evicted. Pure bookkeeping aside from
+    /// the `page` callback; the caller holds the shard lock, so the
+    /// callback must only append to the backend's spill file (a leaf
+    /// lock), never re-enter the shard.
+    pub fn page_out_tail(
+        &mut self,
+        threshold: u64,
+        head_window: usize,
+        mut page: impl FnMut(&QueuedMessage) -> Option<BodyLocator>,
+    ) -> usize {
+        if self.resident_bytes <= threshold {
+            return 0;
+        }
+        let mut evicted = 0usize;
+        // Position from the tail: assignment position = ready_count-1-k for
+        // the k-th message visited. Stop once inside the head window.
+        let mut from_tail = 0usize;
+        let protect = head_window;
+        'lanes: for lane in 0..PRIORITY_LANES {
+            let len = self.ready[lane].len();
+            for i in (0..len).rev() {
+                if self.resident_bytes <= threshold {
+                    break 'lanes;
+                }
+                let position = self.ready_count - 1 - from_tail;
+                from_tail += 1;
+                if position < protect {
+                    break 'lanes;
+                }
+                let msg = &mut self.ready[lane][i];
+                if msg.paged.is_some() || msg.body.is_empty() {
+                    continue;
+                }
+                let Some(loc) = page(msg) else { continue };
+                let freed = msg.body.len() as u64;
+                msg.body = Bytes::new();
+                msg.paged = Some(loc);
+                self.resident_bytes = self.resident_bytes.saturating_sub(freed);
+                self.paged_bytes += u64::from(loc.len);
+                self.paged_count += 1;
+                self.page_outs += 1;
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// The paged messages inside the head window (first `limit` messages
+    /// in assignment order) — what the dispatch pump must page back in
+    /// before assignment can proceed. Read-only; bodies are restored with
+    /// [`Queue::restore_body`] after the reads happen off the shard lock.
+    pub fn paged_head(&self, limit: usize) -> Vec<(u64, BodyLocator)> {
+        if self.paged_count == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut seen = 0usize;
+        for lane in (0..PRIORITY_LANES).rev() {
+            for m in &self.ready[lane] {
+                if seen >= limit {
+                    return out;
+                }
+                seen += 1;
+                if let Some(loc) = m.paged {
+                    out.push((m.msg_id, loc));
+                }
+            }
+        }
+        out
+    }
+
+    /// Re-attach a body read back from disk to a still-ready paged
+    /// message. Returns the locator that was cleared (`Some` exactly when
+    /// the restore happened — the caller then releases spill-file space);
+    /// `None` means the message left the queue in the meantime (purged,
+    /// expired, dropped) and the *removal* path owns the release.
+    pub fn restore_body(&mut self, msg_id: u64, body: Bytes) -> Option<BodyLocator> {
+        for lane in 0..PRIORITY_LANES {
+            for m in self.ready[lane].iter_mut() {
+                if m.msg_id == msg_id {
+                    let loc = m.paged.take()?;
+                    self.paged_bytes = self.paged_bytes.saturating_sub(u64::from(loc.len));
+                    self.paged_count = self.paged_count.saturating_sub(1);
+                    self.resident_bytes += body.len() as u64;
+                    m.body = body;
+                    self.page_ins += 1;
+                    return Some(loc);
+                }
+            }
+        }
+        None
     }
 
     /// Wrap dead messages with this queue's dead-letter routing config —
@@ -680,6 +869,9 @@ impl Queue {
         Value::map([
             ("ready", Value::from(self.ready_len())),
             ("unacked", Value::from(self.unacked_len())),
+            ("paged", Value::from(self.paged_len())),
+            ("bytes_resident", Value::from(self.resident_bytes)),
+            ("bytes_paged", Value::from(self.paged_bytes)),
             ("consumers", Value::from(self.consumer_count())),
             ("published", Value::from(self.published)),
             ("delivered", Value::from(self.delivered)),
@@ -709,6 +901,8 @@ mod tests {
             deadline: None,
             redelivered: false,
             delivery_count: 0,
+            stored: None,
+            paged: None,
         }
     }
 
@@ -1202,10 +1396,121 @@ mod tests {
         for i in 0..4 {
             put(&mut q, msg(i, (i % 2) as u8), now);
         }
-        let mut ids = q.purge();
+        let mut ids: Vec<u64> = q.purge().into_iter().map(|(id, _)| id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3]);
         assert_eq!(q.ready_len(), 0);
+    }
+
+    fn spill_locator(len: u32) -> BodyLocator {
+        BodyLocator { segment: u32::MAX, generation: 0, offset: 0, len }
+    }
+
+    #[test]
+    fn page_out_respects_threshold_and_head_window() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..10 {
+            put(&mut q, msg(i, 0), now);
+        }
+        let total = q.resident_bytes();
+        assert!(total > 0);
+        // Evict everything past the first 4 messages.
+        let evicted = q.page_out_tail(0, 4, |m| spill_locator(m.body.len() as u32));
+        assert_eq!(evicted, 6, "everything outside the head window pages out");
+        assert_eq!(q.paged_len(), 6);
+        assert!(q.resident_bytes() < total);
+        assert!(q.paged_bytes() > 0);
+        // The head window (oldest messages) stays resident and deliverable.
+        q.add_consumer(consumer("c1", 1, 0));
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 4, "assignment stops at the paged boundary");
+        let ids: Vec<u64> = a.iter().map(|x| x.message.msg_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(a.iter().all(|x| !x.message.body.is_empty()));
+        assert_eq!(q.ready_len(), 6, "paged tail stays queued, never handed out");
+    }
+
+    #[test]
+    fn page_in_restores_delivery_in_fifo_order() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        let bodies: Vec<Bytes> = (0..6i64).map(|i| Bytes::encode(&Value::I64(i))).collect();
+        for i in 0..6u64 {
+            put(&mut q, msg(i, 0), now);
+        }
+        q.page_out_tail(0, 0, |m| spill_locator(m.body.len() as u32));
+        assert_eq!(q.paged_len(), 6);
+        assert_eq!(q.resident_bytes(), 0);
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        assert!(q.assign(now, &mut tags).is_empty(), "fully paged queue assigns nothing");
+        // Page the head window back in, as the dispatch pump would.
+        let head = q.paged_head(4);
+        assert_eq!(head.len(), 4);
+        assert_eq!(head[0].0, 0, "head window is assignment order");
+        for (id, _loc) in head {
+            let released = q.restore_body(id, bodies[id as usize].clone());
+            assert!(released.is_some(), "restore returns the cleared locator");
+        }
+        assert_eq!(q.page_ins, 4);
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a.len(), 4);
+        let ids: Vec<u64> = a.iter().map(|x| x.message.msg_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "page-in preserves FIFO order");
+        assert!(a.iter().all(|x| !x.message.body.is_empty()));
+        // Double-restore is idempotent; vanished messages return None.
+        assert!(q.restore_body(0, bodies[0].clone()).is_none());
+        assert!(q.restore_body(99, bodies[0].clone()).is_none());
+    }
+
+    #[test]
+    fn durable_stored_locator_pages_out_for_free() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        let mut m = msg(1, 0);
+        m.stored = Some(BodyLocator { segment: 0, generation: 0, offset: 64, len: 9 });
+        put(&mut q, m, now);
+        put(&mut q, msg(2, 0), now);
+        // The pager consults `stored` first — no spill write for durable
+        // bodies (mirrors the backend's page_out).
+        let mut spilled = 0;
+        q.page_out_tail(0, 0, |m| {
+            m.stored.or_else(|| {
+                spilled += 1;
+                Some(spill_locator(m.body.len() as u32))
+            })
+        });
+        assert_eq!(q.paged_len(), 2);
+        assert_eq!(spilled, 1, "only the non-durable body hits the spill file");
+    }
+
+    #[test]
+    fn byte_accounting_survives_requeue_and_purge() {
+        let mut q = Queue::new("q", QueueOptions::default(), None);
+        let now = Instant::now();
+        for i in 0..4 {
+            put(&mut q, msg(i, 0), now);
+        }
+        let resident = q.resident_bytes();
+        q.add_consumer(consumer("c1", 1, 0));
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert_eq!(q.resident_bytes(), 0, "in-flight bodies are not ready-resident");
+        // Requeue brings the bytes back.
+        for x in &a {
+            assert!(matches!(q.nack(x.delivery_tag, true), NackOutcome::Requeued { .. }));
+        }
+        assert_eq!(q.resident_bytes(), resident);
+        // Page out, then purge: all counters return to zero and the purge
+        // reports the paged locators for spill release.
+        q.page_out_tail(0, 0, |m| spill_locator(m.body.len() as u32));
+        let purged = q.purge();
+        assert_eq!(purged.len(), 4);
+        assert!(purged.iter().all(|(_, loc)| loc.is_some()));
+        assert_eq!(q.resident_bytes(), 0);
+        assert_eq!(q.paged_bytes(), 0);
+        assert_eq!(q.paged_len(), 0);
     }
 
     #[test]

@@ -19,7 +19,8 @@ const VALUED: &[&str] = &[
     "artifacts", "checkpoints", "wal", "n-volumes", "lattice-a", "timeout-ms", "shards",
     "delivery-batch", "route-cache", "max-delivery", "dead-letter-exchange", "max-length",
     "overflow", "reconnect-max-retries", "reconnect-backoff-ms", "net", "event-batch",
-    "outbox-cap", "wal-segments", "wal-commit-interval-us",
+    "outbox-cap", "wal-segments", "wal-commit-interval-us", "page-out-threshold",
+    "page-in-batch", "publish-credit", "default-prefetch",
 ];
 
 impl Args {

@@ -39,6 +39,9 @@ SUBCOMMANDS
                                               [--outbox-cap BYTES]
                                               [--wal-segments N (0 = match shards)]
                                               [--wal-commit-interval-us N]
+                                              [--page-out-threshold BYTES (0 = no paging)]
+                                              [--page-in-batch N] [--publish-credit N (0 = off)]
+                                              [--default-prefetch N (0 = unlimited)]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
   ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
@@ -140,6 +143,18 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(n) = args.opt_parse::<u64>("wal-commit-interval-us")? {
         config.wal_commit_interval_us = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("page-out-threshold")? {
+        config.page_out_threshold = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("page-in-batch")? {
+        config.page_in_batch = n.max(1);
+    }
+    if let Some(n) = args.opt_parse::<u32>("publish-credit")? {
+        config.publish_credit = n;
+    }
+    if let Some(n) = args.opt_parse::<u32>("default-prefetch")? {
+        config.default_prefetch = n;
     }
     Ok(config)
 }
@@ -345,7 +360,9 @@ mod tests {
             "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient \
              --shards 2 --delivery-batch 32 --route-cache 0 \
              --max-delivery 4 --dead-letter-exchange kiwi.dlx --max-length 100 \
-             --overflow reject-new --net threads --event-batch 64 --outbox-cap 4096",
+             --overflow reject-new --net threads --event-batch 64 --outbox-cap 4096 \
+             --page-out-threshold 1048576 --page-in-batch 8 --publish-credit 128 \
+             --default-prefetch 16",
         ))
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
@@ -362,6 +379,10 @@ mod tests {
         assert_eq!(config.net, "threads");
         assert_eq!(config.event_batch, 64);
         assert_eq!(config.outbox_cap, 4096);
+        assert_eq!(config.page_out_threshold, 1_048_576);
+        assert_eq!(config.page_in_batch, 8);
+        assert_eq!(config.publish_credit, 128);
+        assert_eq!(config.default_prefetch, 16);
     }
 
     #[test]

@@ -71,6 +71,18 @@ pub struct Config {
     /// Per-connection outbox soft cap in bytes before delivery
     /// assignment to that connection pauses (reactor mode).
     pub outbox_cap: usize,
+    /// Per-queue resident-byte budget before ready-tail bodies are paged
+    /// to disk (0 disables paging; messages stay fully in RAM).
+    pub page_out_threshold: usize,
+    /// Hot head window: paged bodies restored per page-in pass ahead of
+    /// delivery assignment.
+    pub page_in_batch: usize,
+    /// Publish-credit window granted to each connection (0 disables
+    /// credit-based flow control; publishers are never throttled).
+    pub publish_credit: u32,
+    /// Broker-side prefetch applied to consumers that ask for 0
+    /// ("unlimited"); 0 keeps unlimited in-flight, the seed behaviour.
+    pub default_prefetch: u32,
 }
 
 impl Default for Config {
@@ -99,6 +111,10 @@ impl Default for Config {
             net: "reactor".into(),
             event_batch: crate::broker::reactor::DEFAULT_EVENT_BATCH,
             outbox_cap: crate::broker::reactor::DEFAULT_OUTBOX_CAP,
+            page_out_threshold: crate::broker::BrokerConfig::default().page_out_threshold,
+            page_in_batch: crate::broker::BrokerConfig::default().page_in_batch,
+            publish_credit: crate::broker::BrokerConfig::default().publish_credit,
+            default_prefetch: crate::broker::BrokerConfig::default().default_prefetch,
         }
     }
 }
@@ -206,6 +222,18 @@ impl Config {
         if let Some(x) = v.get_opt("outbox_cap") {
             c.outbox_cap = (x.as_u64()? as usize).max(1);
         }
+        if let Some(x) = v.get_opt("page_out_threshold") {
+            c.page_out_threshold = x.as_u64()? as usize;
+        }
+        if let Some(x) = v.get_opt("page_in_batch") {
+            c.page_in_batch = (x.as_u64()? as usize).max(1);
+        }
+        if let Some(x) = v.get_opt("publish_credit") {
+            c.publish_credit = x.as_u64()? as u32;
+        }
+        if let Some(x) = v.get_opt("default_prefetch") {
+            c.default_prefetch = x.as_u64()? as u32;
+        }
         Ok(c)
     }
 
@@ -241,6 +269,10 @@ impl Config {
             ("net", Value::str(&self.net)),
             ("event_batch", Value::from(self.event_batch)),
             ("outbox_cap", Value::from(self.outbox_cap)),
+            ("page_out_threshold", Value::from(self.page_out_threshold)),
+            ("page_in_batch", Value::from(self.page_in_batch)),
+            ("publish_credit", Value::from(u64::from(self.publish_credit))),
+            ("default_prefetch", Value::from(u64::from(self.default_prefetch))),
         ])
     }
 
@@ -254,6 +286,10 @@ impl Config {
             },
             delivery_batch: self.delivery_batch.max(1),
             route_cache_cap: self.route_cache_cap,
+            page_out_threshold: self.page_out_threshold,
+            page_in_batch: self.page_in_batch.max(1),
+            publish_credit: self.publish_credit,
+            default_prefetch: self.default_prefetch,
         }
     }
 
@@ -317,8 +353,11 @@ impl Config {
     /// (`drop-head`/`reject-new`), `KIWI_RECONNECT_MAX_RETRIES` (0 = no
     /// reconnection), `KIWI_RECONNECT_BACKOFF_MS`, `KIWI_NET`
     /// (`reactor`/`threads`), `KIWI_EVENT_BATCH`, `KIWI_OUTBOX_CAP`,
-    /// `KIWI_WAL_SEGMENTS` (0 = match shards) and
-    /// `KIWI_WAL_COMMIT_INTERVAL_US` override the file.
+    /// `KIWI_WAL_SEGMENTS` (0 = match shards),
+    /// `KIWI_WAL_COMMIT_INTERVAL_US`, `KIWI_PAGE_OUT_THRESHOLD`
+    /// (bytes; 0 = no paging), `KIWI_PAGE_IN_BATCH`,
+    /// `KIWI_PUBLISH_CREDIT` (0 = no flow control) and
+    /// `KIWI_DEFAULT_PREFETCH` (0 = unlimited) override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -407,6 +446,26 @@ impl Config {
                 self.outbox_cap = n.max(1);
             }
         }
+        if let Ok(v) = std::env::var("KIWI_PAGE_OUT_THRESHOLD") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.page_out_threshold = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_PAGE_IN_BATCH") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.page_in_batch = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_PUBLISH_CREDIT") {
+            if let Ok(n) = v.parse::<u32>() {
+                self.publish_credit = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_DEFAULT_PREFETCH") {
+            if let Ok(n) = v.parse::<u32>() {
+                self.default_prefetch = n;
+            }
+        }
     }
 }
 
@@ -475,6 +534,36 @@ mod tests {
         // delivery_batch is clamped to ≥ 1.
         let v = json::from_str(r#"{"delivery_batch": 0}"#).unwrap();
         assert_eq!(Config::from_value(&v).unwrap().delivery_batch, 1);
+    }
+
+    #[test]
+    fn memory_bounding_knobs_parse_and_resolve() {
+        let v = json::from_str(
+            r#"{"page_out_threshold": 1048576, "page_in_batch": 16,
+                "publish_credit": 256, "default_prefetch": 32}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.page_out_threshold, 1_048_576);
+        assert_eq!(c.page_in_batch, 16);
+        assert_eq!(c.publish_credit, 256);
+        assert_eq!(c.default_prefetch, 32);
+        let bc = c.broker_config();
+        assert_eq!(bc.page_out_threshold, 1_048_576);
+        assert_eq!(bc.page_in_batch, 16);
+        assert_eq!(bc.publish_credit, 256);
+        assert_eq!(bc.default_prefetch, 32);
+        // 0 disables paging — passed through, never clamped up.
+        let v = json::from_str(r#"{"page_out_threshold": 0}"#).unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.page_out_threshold, 0);
+        assert_eq!(c.broker_config().page_out_threshold, 0);
+        // page_in_batch is clamped to ≥ 1 (a 0 window would never refill).
+        let v = json::from_str(r#"{"page_in_batch": 0}"#).unwrap();
+        assert_eq!(Config::from_value(&v).unwrap().page_in_batch, 1);
+        // Credit and prefetch default off: seed behaviour untouched.
+        assert_eq!(Config::default().publish_credit, 0);
+        assert_eq!(Config::default().default_prefetch, 0);
     }
 
     #[test]

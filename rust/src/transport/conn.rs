@@ -15,7 +15,7 @@
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{JoinHandle, ThreadId};
 use std::time::{Duration, Instant};
 
@@ -105,6 +105,14 @@ struct Shared {
     /// When the current link was installed (flap detection: a link that
     /// dies right after install skips the free immediate re-dial).
     last_install: Mutex<Instant>,
+    /// Publish-credit window granted by the broker. `None` until the first
+    /// `Credit` frame on the current link — an uncredited link publishes
+    /// unlimited, so connections to brokers that never grant (credit
+    /// disabled, older broker) behave exactly as before. Publishers park
+    /// on `credit_cv` (bounded by their request timeout) when the window
+    /// runs empty; the reader thread's grant wakes them.
+    credit: Mutex<Option<u64>>,
+    credit_cv: Condvar,
     metrics: Registry,
     reconnects: Arc<Counter>,
     replayed_consumers: Arc<Counter>,
@@ -119,6 +127,8 @@ impl Shared {
         if !self.closed.swap(true, Ordering::SeqCst) {
             self.slot.close();
             self.fail_pending();
+            // Publishers parked on credit must see `closed` promptly.
+            self.credit_cv.notify_all();
         }
     }
 
@@ -127,6 +137,47 @@ impl Shared {
     /// permitting) or surface `Closed`.
     fn fail_pending(&self) {
         self.pending.lock().unwrap().clear();
+    }
+
+    /// Install a broker credit grant and wake parked publishers.
+    fn grant_credit(&self, n: u64) {
+        *self.credit.lock().unwrap() = Some(n);
+        self.credit_cv.notify_all();
+    }
+
+    /// Forget the dead link's credit window. The revived broker session
+    /// re-grants right after `Hello`; until then the link is uncredited
+    /// (unlimited), matching a fresh connection.
+    fn reset_credit(&self) {
+        *self.credit.lock().unwrap() = None;
+        self.credit_cv.notify_all();
+    }
+
+    /// Take one publish credit, parking (bounded by `deadline`) while the
+    /// broker's window is empty — the client half of channel flow control.
+    fn acquire_publish_credit(&self, deadline: Instant) -> Result<()> {
+        let mut credit = self.credit.lock().unwrap();
+        loop {
+            if self.closed.load(Ordering::Relaxed) {
+                return Err(Error::Closed("connection closed".into()));
+            }
+            match *credit {
+                None => return Ok(()), // uncredited link: unlimited
+                Some(n) if n > 0 => {
+                    *credit = Some(n - 1);
+                    return Ok(());
+                }
+                Some(_) => {
+                    let wait = deadline.saturating_duration_since(Instant::now());
+                    if wait.is_zero() {
+                        return Err(Error::Timeout(
+                            "publish blocked on broker credit".into(),
+                        ));
+                    }
+                    credit = self.credit_cv.wait_timeout(credit, wait).unwrap().0;
+                }
+            }
+        }
     }
 
     /// React to a send failure on the link stamped `epoch`: flag the
@@ -146,6 +197,9 @@ impl Shared {
     fn send_noreply(&self, req: &ClientRequest) -> Result<()> {
         if self.closed.load(Ordering::Relaxed) {
             return Err(Error::Closed("connection closed".into()));
+        }
+        if matches!(req, ClientRequest::Publish { .. }) {
+            self.acquire_publish_credit(Instant::now() + self.config.request_timeout)?;
         }
         let (link, epoch) = self.slot.current()?;
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
@@ -270,6 +324,8 @@ impl Connection {
             ack_buffer: Mutex::new(None),
             live_tags: reconnectable.then(|| Mutex::new(HashSet::new())),
             last_install: Mutex::new(Instant::now()),
+            credit: Mutex::new(None),
+            credit_cv: Condvar::new(),
             reconnects: metrics.counter("client.reconnects_total"),
             replayed_consumers: metrics.counter("client.replayed_consumers_total"),
             metrics,
@@ -351,6 +407,12 @@ impl Connection {
             } else {
                 self.shared.slot.current()?
             };
+            // Credit gate: a broker-granted publish window throttles this
+            // publisher here, before the frame is even built, bounded by
+            // the same deadline as the request itself.
+            if matches!(req, ClientRequest::Publish { .. }) {
+                self.shared.acquire_publish_credit(deadline)?;
+            }
             let req_id = self.shared.next_req.fetch_add(1, Ordering::Relaxed);
             let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
             self.shared.pending.lock().unwrap().insert(req_id, tx);
@@ -633,6 +695,7 @@ fn reader_loop(shared: Arc<Shared>) {
                 // link — the broker requeues them, so late acks are stale.
                 shared.fail_pending();
                 shared.clear_live_tags();
+                shared.reset_credit();
                 if !(shared.reconnect_enabled() && recover(&shared)) {
                     shared.mark_closed();
                     break;
@@ -677,6 +740,9 @@ fn pump_link(shared: &Arc<Shared>, link: &Arc<dyn Link>) -> PumpExit {
                         Ok(ServerMsg::CancelConsumer { consumer_tag }) => {
                             shared.handlers.lock().unwrap().remove(&consumer_tag);
                             shared.journal.lock().unwrap().remove_consumer(&consumer_tag);
+                        }
+                        Ok(ServerMsg::Credit { channel_credit }) => {
+                            shared.grant_credit(u64::from(channel_credit));
                         }
                         Ok(msg @ (ServerMsg::Ok { .. } | ServerMsg::Err { .. })) => {
                             let req_id = match &msg {
@@ -864,6 +930,9 @@ fn sync_request(
                         shared.handlers.lock().unwrap().remove(&consumer_tag);
                         shared.journal.lock().unwrap().remove_consumer(&consumer_tag);
                     }
+                    ServerMsg::Credit { channel_credit } => {
+                        shared.grant_credit(u64::from(channel_credit))
+                    }
                     // A reply to some pre-outage request: its waiter was
                     // already failed (and will retry); drop it.
                     ServerMsg::Ok { .. } | ServerMsg::Err { .. } => {}
@@ -936,6 +1005,48 @@ mod tests {
         .unwrap();
         publish(&conn, "q", Value::str("hi"));
         assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), Value::str("hi"));
+        conn.close();
+    }
+
+    #[test]
+    fn publisher_blocks_on_credit_and_resumes_after_regrant() {
+        use crate::broker::core::{BrokerConfig, BrokerHandle};
+        use crate::broker::persistence::{NoopPersister, RecoveredState};
+        // A one-byte page-out threshold makes any backlog "pressure", and
+        // a 4-credit window stalls the publisher after four publishes.
+        let broker = InprocBroker::with_broker(BrokerHandle::with_config(
+            Box::new(NoopPersister),
+            RecoveredState::default(),
+            BrokerConfig { page_out_threshold: 1, publish_credit: 4, ..Default::default() },
+        ));
+        let conn = open(&broker);
+        declare(&conn, "q");
+        for i in 0..4 {
+            publish(&conn, "q", Value::I64(i));
+        }
+        // Window exhausted against a backlogged queue: the fifth publish
+        // must park on credit and time out, not reach the broker.
+        let err = conn
+            .request_timeout(
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "q".into(),
+                    body: Bytes::encode(&Value::I64(99)),
+                    props: Default::default(),
+                    mandatory: true,
+                },
+                Duration::from_millis(200),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "expected credit stall, got {err:?}");
+        assert_eq!(broker.broker().queue_depth("q"), Some(4));
+        assert!(broker.broker().metrics().counter("broker.credit_stalls_total").get() >= 1);
+        // Drain the backlog; the sweep notices the low-water mark and
+        // re-grants, after which the parked publisher resumes by itself.
+        conn.request(&ClientRequest::QueuePurge { queue: "q".into() }).unwrap();
+        broker.broker().sweep();
+        publish(&conn, "q", Value::I64(100));
+        assert_eq!(broker.broker().queue_depth("q"), Some(1));
         conn.close();
     }
 

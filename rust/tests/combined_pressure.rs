@@ -1,0 +1,344 @@
+//! Combined-pressure soak: every memory-protection mechanism at once, on
+//! one broker over the real epoll reactor —
+//!
+//! * a **wedged consumer** that never reads its socket (reactor outbox
+//!   backpressure pauses its assignment),
+//! * a durable work queue **paging** its tail to the WAL past
+//!   `page_out_threshold`,
+//! * a `reject-new` **overflow** cap dead-lettering refused publishes
+//!   into a DLQ,
+//! * **publish credit** stalling the credited (flow-control-aware)
+//!   publisher while an uncredited legacy publisher keeps pushing.
+//!
+//! After every round the conservation invariant must hold:
+//!
+//! `published == acked + dead-lettered + in-flight + ready`
+//!
+//! with the paged tail a *subset* of ready (paging evicts bodies, never
+//! messages). Then everything is drained — the paged backlog, the
+//! in-flight window, and the DLQ — the stalled publisher resumes
+//! automatically after the sweep re-grants, and teardown leaks nothing.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::broker::core::{BrokerConfig, BrokerHandle};
+use kiwi::broker::persistence::{SegmentedWal, SyncPolicy};
+use kiwi::broker::protocol::{
+    ClientRequest, ExchangeKind, MessageProps, OverflowPolicy, QueueOptions, ServerMsg,
+};
+use kiwi::broker::reactor::{self, ReactorOptions};
+use kiwi::broker::server::{BrokerServer, NetMode, NetOptions};
+use kiwi::error::Error;
+use kiwi::transport::{connect_tcp, Connection, ConnectionConfig};
+use kiwi::wire::{read_frame, write_frame, Bytes, FrameType, Value};
+
+const WORK: &str = "cp.work";
+const DLQ: &str = "cp.dead";
+const DLX: &str = "cp.dlx";
+/// 64 KiB payloads: the fill volume (~12 MiB) dwarfs what loopback
+/// socket buffering can absorb, so backpressure/paging/overflow all trip
+/// no matter how generous the kernel's autotuned buffers are.
+const BODY: usize = 64 * 1024;
+/// Resident byte budget per queue — four bodies.
+const THRESHOLD: usize = 256 * 1024;
+/// Ready-message cap; beyond it reject-new dead-letters the incoming.
+const CAP: usize = 48;
+const CREDIT: u32 = 8;
+
+fn send(stream: &TcpStream, req: &ClientRequest, id: u64) {
+    let mut w = stream;
+    write_frame(&mut w, &req.to_frame(id)).unwrap();
+}
+
+fn recv_data(stream: &TcpStream) -> ServerMsg {
+    let mut r = stream;
+    loop {
+        let f = read_frame(&mut r).unwrap();
+        if f.frame_type == FrameType::Data {
+            return ServerMsg::from_frame(&f).unwrap();
+        }
+    }
+}
+
+fn dial(addr: SocketAddr, id: &str) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    send(&stream, &ClientRequest::Hello { client_id: id.into(), heartbeat_ms: 0 }, 1);
+    loop {
+        // The Hello reply may arrive after an immediate Credit grant.
+        match recv_data(&stream) {
+            ServerMsg::Ok { .. } => return stream,
+            ServerMsg::Credit { .. } => continue,
+            other => panic!("hello rejected: {other:?}"),
+        }
+    }
+}
+
+/// Request/ack over a raw socket, skipping interleaved Credit grants (a
+/// legacy client that never learned flow control).
+fn raw_request(stream: &TcpStream, req: &ClientRequest, id: u64) {
+    send(stream, req, id);
+    loop {
+        match recv_data(stream) {
+            ServerMsg::Ok { .. } => return,
+            ServerMsg::Credit { .. } => continue,
+            other => panic!("request failed: {other:?}"),
+        }
+    }
+}
+
+fn body(i: usize) -> Bytes {
+    Bytes::encode(&Value::map([
+        ("seq", Value::from(i as u64)),
+        ("pad", Value::Bytes(vec![0xC4; BODY])),
+    ]))
+}
+
+fn publish_req(i: usize, durable: bool) -> ClientRequest {
+    ClientRequest::Publish {
+        exchange: String::new(),
+        routing_key: WORK.into(),
+        body: body(i),
+        props: MessageProps { persistent: durable, ..Default::default() }.into(),
+        mandatory: true,
+    }
+}
+
+/// Read exactly `want` deliveries from a raw socket, acking each.
+fn drain_deliveries(stream: &TcpStream, want: usize) {
+    let mut got = 0usize;
+    let mut next_req = 1_000_000u64;
+    let mut r = stream;
+    while got < want {
+        let f = read_frame(&mut r).unwrap();
+        if f.frame_type != FrameType::Data {
+            continue;
+        }
+        let mut tags = Vec::new();
+        match ServerMsg::from_frame(&f).unwrap() {
+            ServerMsg::Deliver(d) => tags.push(d.delivery_tag),
+            ServerMsg::DeliverBatch(ds) => tags.extend(ds.iter().map(|d| d.delivery_tag)),
+            _ => {}
+        }
+        got += tags.len();
+        for tag in tags {
+            send(stream, &ClientRequest::Ack { delivery_tag: tag }, next_req);
+            next_req += 1;
+        }
+    }
+}
+
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn combined_pressure_conserves_and_recovers() {
+    if !reactor::supported() {
+        eprintln!("skipping: epoll reactor unsupported on this platform");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("kiwi-combined-pressure-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let config = BrokerConfig {
+        shards: 2,
+        page_out_threshold: THRESHOLD,
+        page_in_batch: 8,
+        publish_credit: CREDIT,
+        ..Default::default()
+    };
+    let (wal, rec) =
+        SegmentedWal::open(&dir, config.shards, SyncPolicy::Os, Duration::from_micros(200))
+            .unwrap();
+    let handle = BrokerHandle::with_backend(Arc::new(wal), rec, config);
+    let opts = NetOptions {
+        mode: NetMode::Reactor,
+        reactor: ReactorOptions { outbox_cap: 32 * 1024, ..Default::default() },
+    };
+    let server = BrokerServer::start_with(handle, "127.0.0.1:0", opts).unwrap();
+    assert_eq!(server.net_mode(), NetMode::Reactor);
+    let broker = server.broker().clone();
+    let addr = server.addr();
+
+    // Topology: durable work queue with a reject-new cap dead-lettering
+    // into a transient DLQ (so overflow exercises the spill-file pager
+    // if it ever grows deep enough — and stays countable either way).
+    let admin = dial(addr, "cp-admin");
+    raw_request(
+        &admin,
+        &ClientRequest::ExchangeDeclare { exchange: DLX.into(), kind: ExchangeKind::Direct },
+        2,
+    );
+    raw_request(
+        &admin,
+        &ClientRequest::QueueDeclare { queue: DLQ.into(), options: QueueOptions::default() },
+        3,
+    );
+    raw_request(
+        &admin,
+        &ClientRequest::Bind { exchange: DLX.into(), queue: DLQ.into(), routing_key: WORK.into() },
+        4,
+    );
+    raw_request(
+        &admin,
+        &ClientRequest::QueueDeclare {
+            queue: WORK.into(),
+            options: QueueOptions {
+                durable: true,
+                max_length: Some(CAP),
+                overflow: OverflowPolicy::RejectNew,
+                dead_letter_exchange: Some(DLX.into()),
+                ..Default::default()
+            },
+        },
+        5,
+    );
+
+    // The wedged consumer: unlimited prefetch, never reads its socket.
+    // The reactor must pause its assignment at the outbox cap and leave
+    // the rest of the backlog in the (paged) queue.
+    let wedged = dial(addr, "cp-wedged");
+    send(
+        &wedged,
+        &ClientRequest::Consume { queue: WORK.into(), consumer_tag: "cp-c".into(), prefetch: 0 },
+        6,
+    );
+    // Read nothing past this point until the drain phase (the consume Ok
+    // itself stays buffered too — that is the point).
+
+    // Two publishers: a flow-control-aware one that honours Credit frames
+    // (and therefore stalls), and a legacy raw socket that ignores them
+    // (and therefore drives the queue into reject-new overflow).
+    let credited = Connection::open(
+        Arc::new(connect_tcp(addr).unwrap()),
+        ConnectionConfig { client_id: "cp-credited".into(), ..Default::default() },
+    )
+    .unwrap();
+    let legacy = dial(addr, "cp-legacy");
+
+    let mut published = 0u64; // accepted + dead-lettered (every Ok'd publish)
+    let mut acked = 0u64;
+    let mut credit_timeouts = 0u32;
+    let mut seq = 0usize;
+    let mut req_id = 100u64;
+
+    let conserve = |published: u64, acked: u64, where_: &str| {
+        let ready = broker.queue_depth(WORK).unwrap() as u64;
+        let in_flight = broker.queue_unacked(WORK).unwrap() as u64;
+        let dead =
+            broker.queue_depth(DLQ).unwrap() as u64 + broker.queue_unacked(DLQ).unwrap() as u64;
+        assert_eq!(
+            published,
+            acked + dead + in_flight + ready,
+            "conservation violated ({where_}): acked={acked} dead={dead} \
+             in_flight={in_flight} ready={ready}"
+        );
+        let paged = broker.queue_paged(WORK).unwrap() as u64;
+        assert!(
+            paged <= ready,
+            "paged messages are body-evicted *ready* messages ({where_}): \
+             paged={paged} ready={ready}"
+        );
+    };
+
+    // Fill rounds: each round the legacy publisher shoves 16 messages in
+    // and the credited one tries up to CREDIT. Once resident+paged bytes
+    // cross the threshold the broker stops topping the credited link up;
+    // its local credit runs dry and the publish blocks (bounded).
+    for round in 0..12 {
+        for _ in 0..16 {
+            raw_request(&legacy, &publish_req(seq, true), req_id);
+            published += 1;
+            seq += 1;
+            req_id += 1;
+        }
+        for _ in 0..CREDIT {
+            match credited
+                .request_timeout(&publish_req(seq, true), Duration::from_millis(300))
+            {
+                Ok(_) => {
+                    published += 1;
+                    seq += 1;
+                }
+                Err(Error::Timeout(msg)) if msg.contains("credit") => {
+                    // Blocked at zero credit before anything hit the wire:
+                    // the message was never published.
+                    credit_timeouts += 1;
+                    break;
+                }
+                Err(other) => panic!("credited publish failed unexpectedly: {other}"),
+            }
+        }
+        conserve(published, acked, &format!("fill round {round}"));
+    }
+
+    // All four pressures must have fired.
+    let paged = broker.queue_paged(WORK).unwrap();
+    assert!(paged > 0, "the deep backlog must page its tail out");
+    assert!(
+        broker.queue_resident_bytes(WORK).unwrap() <= THRESHOLD as u64,
+        "resident bytes must stay at or under the paging threshold"
+    );
+    assert!(
+        broker.metrics().counter("broker.reactor.backpressure_pauses_total").get() > 0,
+        "the wedged consumer must trip outbox backpressure"
+    );
+    let stalls = broker.metrics().counter("broker.credit_stalls_total").get();
+    assert!(stalls > 0, "the credited publisher must stall at zero credit");
+    assert!(credit_timeouts > 0, "the credited client must observe the stall");
+    let dead_at_peak = broker.queue_depth(DLQ).unwrap() as u64;
+    assert!(dead_at_peak > 0, "reject-new overflow must dead-letter refused publishes");
+
+    // Drain phase: the wedged consumer finally reads. Everything the work
+    // queue holds — in flight in its outbox, resident, or paged — must
+    // come back exactly once.
+    let work_msgs =
+        broker.queue_depth(WORK).unwrap() + broker.queue_unacked(WORK).unwrap();
+    drain_deliveries(&wedged, work_msgs);
+    acked += work_msgs as u64;
+    wait_for("work queue drains", || {
+        broker.queue_depth(WORK) == Some(0) && broker.queue_unacked(WORK) == Some(0)
+    });
+    conserve(published, acked, "after work drain");
+    assert_eq!(broker.queue_paged(WORK), Some(0), "nothing may stay paged after the drain");
+
+    // The DLQ holds every refused message; drain it too so no queue is
+    // above its low-water mark.
+    let dlq_msgs = broker.queue_depth(DLQ).unwrap();
+    let dlq_consumer = dial(addr, "cp-dlq");
+    send(
+        &dlq_consumer,
+        &ClientRequest::Consume { queue: DLQ.into(), consumer_tag: "cp-d".into(), prefetch: 0 },
+        7,
+    );
+    drain_deliveries(&dlq_consumer, dlq_msgs);
+    acked += dlq_msgs as u64;
+    wait_for("dlq drains", || {
+        broker.queue_depth(DLQ) == Some(0) && broker.queue_unacked(DLQ) == Some(0)
+    });
+    assert_eq!(published, acked, "every published message was eventually consumed");
+
+    // Recovery: with every queue drained the sweep re-grants the stalled
+    // link and the credited publisher resumes on its own — no reconnect,
+    // no manual reset.
+    broker.sweep();
+    credited
+        .request_timeout(&publish_req(seq, true), Duration::from_secs(5))
+        .expect("stalled publisher must resume after the sweep re-grants credit");
+    published += 1;
+    conserve(published, acked, "after resume");
+
+    // Clean teardown: nothing in flight, no leaked delivery tags.
+    drop((admin, wedged, legacy, dlq_consumer));
+    credited.close();
+    wait_for("delivery index empties", || broker.delivery_index_len() == 0);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -33,6 +33,8 @@ fn msg(id: u64, queue: &str, body: Value, props: MessageProps) -> QueuedMessage 
         deadline: None,
         redelivered: false,
         delivery_count: 0,
+        stored: None,
+        paged: None,
     }
 }
 
@@ -379,4 +381,76 @@ fn corruption_inside_any_record_truncates_exactly_there() {
     }
     std::fs::remove_file(&cut_path).ok();
     std::fs::remove_file(&log_path).ok();
+}
+
+/// Satellite of the memory-bounding work: overflow eviction must retire
+/// the displaced durable message in the WAL *before* anything else
+/// happens, so a crash right after the eviction can never resurrect a
+/// message the broker already dropped. Drive a real broker over a
+/// segmented WAL, overflow a bounded drop-head queue, "crash" (drop the
+/// broker without deleting queues), and replay: only the survivors may
+/// come back.
+#[test]
+fn overflow_evicted_messages_do_not_resurrect_after_restart() {
+    use kiwi::broker::protocol::OverflowPolicy;
+    use kiwi::broker::{BrokerConfig, BrokerHandle, ClientRequest};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    let dir = std::env::temp_dir()
+        .join(format!("kiwi-wal-matrix-overflow-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    {
+        let (wal, rec) =
+            SegmentedWal::open(&dir, 2, SyncPolicy::Os, Duration::from_micros(200)).unwrap();
+        let broker = BrokerHandle::with_backend(
+            Arc::new(wal),
+            rec,
+            BrokerConfig { shards: 2, ..Default::default() },
+        );
+        let (tx, _rx) = channel();
+        let conn = broker.connect("overflow-test", 0, tx);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "bounded".into(),
+                    options: QueueOptions {
+                        durable: true,
+                        max_length: Some(2),
+                        overflow: OverflowPolicy::DropHead,
+                        ..Default::default()
+                    },
+                },
+            )
+            .unwrap();
+        for i in 0..5i64 {
+            broker
+                .handle(
+                    conn,
+                    &ClientRequest::Publish {
+                        exchange: "".into(),
+                        routing_key: "bounded".into(),
+                        body: Bytes::encode(&Value::I64(i)),
+                        props: MessageProps { persistent: true, ..Default::default() }.into(),
+                        mandatory: true,
+                    },
+                )
+                .unwrap();
+        }
+        broker.sync().unwrap();
+        // Broker dropped here without deleting the queue: a crash image.
+    }
+    let (_wal, recovered) =
+        SegmentedWal::open(&dir, 2, SyncPolicy::Os, Duration::from_micros(200)).unwrap();
+    let msgs = recovered.messages.get("bounded").map(Vec::as_slice).unwrap_or(&[]);
+    let bodies: Vec<i64> =
+        msgs.iter().map(|m| m.body.decode().unwrap().as_i64().unwrap()).collect();
+    assert_eq!(
+        bodies,
+        vec![3, 4],
+        "drop-head evictions 0..=2 were retired in-batch and must not resurrect"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
