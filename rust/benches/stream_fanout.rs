@@ -1,0 +1,261 @@
+//! E9 — stream replay fan-out (the append-only log exchange).
+//!
+//! One durable stream, N single-member consumer groups all replaying the
+//! whole log from offset 0 concurrently. The claims this bench pins:
+//!
+//! * **Fan-out MB/s**: delivery is a refcount bump on the entry's shared
+//!   `Bytes` (plus a bounded page-in from the segment file once the entry
+//!   leaves the resident window), so aggregate replay bandwidth scales
+//!   with reader count instead of being throttled by per-reader copies.
+//! * **Flat broker RSS**: replaying the log 100× must not hold 100 copies
+//!   (or even one full copy) in memory — resident stream bytes are
+//!   bounded by the resident window and RSS growth stays within a budget
+//!   independent of `readers × log_bytes`.
+//! * **Zero loss, in order**: every group sees every offset exactly once,
+//!   in offset order (single member, single partition).
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks readers and the log so CI can run this as
+//! a stream-path regression tripwire; `KIWI_BENCH_RECORD=1` appends the
+//! run to `../BENCH_stream.json`.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kiwi::benchutil::Table;
+use kiwi::broker::core::{process_rss_bytes, BrokerConfig, BrokerHandle};
+use kiwi::broker::persistence::{PersistBackend, SegmentedWal, SyncPolicy};
+use kiwi::broker::protocol::{ClientRequest, MessageProps, QueueOptions, ServerMsg};
+use kiwi::wire::{json, Bytes, Value};
+
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+const MIB: u64 = 1024 * 1024;
+const BODY_BYTES: usize = 1024;
+
+fn wal_broker(config: BrokerConfig) -> (BrokerHandle, std::path::PathBuf) {
+    let dir =
+        std::env::temp_dir().join(format!("kiwi-bench-stream-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (wal, rec) =
+        SegmentedWal::open(&dir, config.shards, SyncPolicy::Os, Duration::from_micros(500))
+            .unwrap();
+    let backend: Arc<dyn PersistBackend> = Arc::new(wal);
+    (BrokerHandle::with_backend(backend, rec, config), dir)
+}
+
+/// One reader: attach a fresh single-member group at offset 0, drain the
+/// whole log acking as it goes, and return how many entries arrived in
+/// strict offset order (must be all of them).
+fn run_reader(broker: &BrokerHandle, idx: usize, entries: u64) -> u64 {
+    let (tx, rx) = channel();
+    let conn = broker.connect(&format!("reader-{idx}"), 0, tx);
+    broker
+        .handle(
+            conn,
+            &ClientRequest::StreamConsume {
+                queue: "firehose".into(),
+                consumer_tag: format!("c{idx}"),
+                group: format!("g{idx}"),
+                prefetch: 256,
+                offset: Some(0),
+            },
+        )
+        .unwrap();
+    let mut expected = 0u64;
+    while expected < entries {
+        let msg = match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let ds = match msg {
+            ServerMsg::Deliver(d) => vec![d],
+            ServerMsg::DeliverBatch(ds) => ds,
+            _ => continue,
+        };
+        for d in ds {
+            if d.offset != Some(expected) {
+                break;
+            }
+            expected += 1;
+            broker.handle(conn, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
+        }
+    }
+    broker.disconnect(conn);
+    expected
+}
+
+fn main() {
+    let smoke = smoke();
+    let readers: usize = if smoke { 10 } else { 100 };
+    let entries: u64 = if smoke { 2_000 } else { 20_000 };
+    let log_bytes = entries * BODY_BYTES as u64;
+    // The flatness claim: the budget covers the resident window, WAL and
+    // segment write buffers, per-reader channel/prefetch slack and
+    // allocator noise — nothing proportional to readers × log size.
+    let rss_budget: u64 = 192 * MIB + (readers as u64 * 256 * BODY_BYTES as u64 * 2);
+
+    let (broker, dir) = wal_broker(BrokerConfig::default());
+    {
+        let (tx, _rx) = channel();
+        let conn = broker.connect("declare", 0, tx);
+        broker
+            .handle(
+                conn,
+                &ClientRequest::QueueDeclare {
+                    queue: "firehose".into(),
+                    options: QueueOptions {
+                        stream: true,
+                        partitions: 1,
+                        durable: true,
+                        ..Default::default()
+                    },
+                },
+            )
+            .unwrap();
+        broker.disconnect(conn);
+    }
+
+    // Append the log.
+    let body = Bytes::encode(&Value::map([("data", Value::Bytes(vec![0x5A; BODY_BYTES]))]));
+    let (tx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, tx);
+    let t_pub = Instant::now();
+    for _ in 0..entries {
+        broker
+            .handle(
+                publisher,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "firehose".into(),
+                    body: body.clone(),
+                    props: MessageProps { persistent: true, ..Default::default() }.into(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+    let publish_wall = t_pub.elapsed();
+    broker.disconnect(publisher);
+
+    // Replay fan-out: all readers at once, each its own group from 0.
+    let rss_before = process_rss_bytes().unwrap_or(0);
+    let broker = Arc::new(broker);
+    let t_fan = Instant::now();
+    let handles: Vec<_> = (0..readers)
+        .map(|i| {
+            let broker = Arc::clone(&broker);
+            std::thread::spawn(move || run_reader(&broker, i, entries))
+        })
+        .collect();
+    let mut drained_total = 0u64;
+    for h in handles {
+        drained_total += h.join().unwrap();
+    }
+    let fan_wall = t_fan.elapsed();
+    let rss_peak = process_rss_bytes().unwrap_or(0);
+    let rss_growth = rss_peak.saturating_sub(rss_before);
+    let resident = broker.stream_resident_bytes("firehose").unwrap_or(0);
+    let disk = broker.stream_disk_bytes("firehose").unwrap_or(0);
+
+    let fanned_bytes = readers as u64 * log_bytes;
+    let fan_mb_s = fanned_bytes as f64 / 1e6 / fan_wall.as_secs_f64().max(1e-9);
+    let deliveries_per_s =
+        (readers as u64 * entries) as f64 / fan_wall.as_secs_f64().max(1e-9);
+
+    let mut table = Table::new(
+        "E9 stream replay fan-out (durable stream, 1KiB entries)",
+        &["metric", "value"],
+    );
+    table.row(&["readers (groups)".into(), readers.to_string()]);
+    table.row(&["log entries".into(), entries.to_string()]);
+    table.row(&["log bytes".into(), format!("{} MiB", log_bytes / MIB)]);
+    table.row(&["append wall".into(), format!("{publish_wall:.2?}")]);
+    table.row(&[
+        "append MB/s".into(),
+        format!("{:.1}", log_bytes as f64 / 1e6 / publish_wall.as_secs_f64().max(1e-9)),
+    ]);
+    table.row(&["replay wall (all readers)".into(), format!("{fan_wall:.2?}")]);
+    table.row(&["fan-out MB/s".into(), format!("{fan_mb_s:.1}")]);
+    table.row(&["deliveries/s".into(), format!("{deliveries_per_s:.0}")]);
+    table.row(&["stream resident bytes".into(), resident.to_string()]);
+    table.row(&["stream disk bytes".into(), disk.to_string()]);
+    table.row(&["rss before replay".into(), format!("{} MiB", rss_before / MIB)]);
+    table.row(&["rss after replay".into(), format!("{} MiB", rss_peak / MIB)]);
+    table.row(&["rss growth".into(), format!("{} MiB", rss_growth / MIB)]);
+    table.row(&["rss budget".into(), format!("{} MiB", rss_budget / MIB)]);
+    table.emit();
+
+    assert_eq!(
+        drained_total,
+        readers as u64 * entries,
+        "every group must replay the full log with zero loss"
+    );
+    assert!(disk >= log_bytes, "entry bodies must live in the segment files");
+    if rss_before > 0 {
+        assert!(
+            rss_growth <= rss_budget,
+            "RSS grew {rss_growth} bytes replaying the log {readers}x; budget {rss_budget}"
+        );
+    }
+    println!(
+        "expected shape: fan-out MB/s scales with reader count (refcounted\n\
+         delivery, no per-reader copies) while RSS growth stays flat —\n\
+         bounded by the resident window and per-reader prefetch, never by\n\
+         readers x log size."
+    );
+
+    let run = Value::map([
+        ("bench", Value::from("stream_fanout")),
+        ("smoke", Value::from(smoke)),
+        ("readers", Value::from(readers)),
+        ("entries", Value::from(entries)),
+        ("body_bytes", Value::from(BODY_BYTES)),
+        ("append_mb_per_sec", {
+            Value::F64(log_bytes as f64 / 1e6 / publish_wall.as_secs_f64().max(1e-9))
+        }),
+        ("fanout_mb_per_sec", Value::F64(fan_mb_s)),
+        ("deliveries_per_sec", Value::F64(deliveries_per_s)),
+        ("stream_resident_bytes", Value::from(resident)),
+        ("stream_disk_bytes", Value::from(disk)),
+        ("rss_growth_bytes", Value::from(rss_growth)),
+        ("rss_budget_bytes", Value::from(rss_budget)),
+    ]);
+    let path = std::path::Path::new("target/bench-results/BENCH_stream.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(path, json::to_string(&run)) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+
+    if std::env::var("KIWI_BENCH_RECORD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        let series_path = std::path::Path::new("../BENCH_stream.json");
+        let mut series = std::fs::read_to_string(series_path)
+            .ok()
+            .and_then(|t| json::from_str(&t).ok())
+            .unwrap_or_else(|| {
+                Value::map([
+                    ("bench", Value::from("stream_fanout")),
+                    ("runs", Value::List(Vec::new())),
+                ])
+            });
+        if let Value::Map(m) = &mut series {
+            let runs = m.entry("runs".to_string()).or_insert_with(|| Value::List(Vec::new()));
+            if let Value::List(list) = runs {
+                list.push(run);
+            }
+        }
+        match std::fs::write(series_path, json::to_string_pretty(&series)) {
+            Ok(()) => println!("recorded run into {}", series_path.display()),
+            Err(e) => eprintln!("warning: could not record series: {e}"),
+        }
+    }
+
+    drop(broker);
+    std::fs::remove_dir_all(&dir).ok();
+}

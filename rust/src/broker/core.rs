@@ -38,7 +38,8 @@ use std::time::Instant;
 
 use crate::broker::dispatch::Dispatcher;
 use crate::broker::persistence::{
-    BodyLocator, MutexBackend, NoopPersister, PersistBackend, Persister, RecoveredState,
+    sanitize_stream_name, BodyLocator, MutexBackend, NoopPersister, PersistBackend, Persister,
+    RecoveredState, StreamStore, StreamStoreConfig,
 };
 use crate::broker::protocol::{ClientRequest, EncodedProps, MessageProps, QueueOptions, ServerMsg};
 use crate::broker::queue::{Consumer, DeadReason, NackOutcome, PendingDead, Queue, QueuedMessage};
@@ -96,6 +97,20 @@ pub struct BrokerConfig {
     /// unlimited consumer on a paged queue defeats memory bounding, so
     /// the broker logs a warning for that combination.
     pub default_prefetch: u32,
+    /// Stream queues: roll the active log segment once it passes this
+    /// many bytes. Smaller segments mean finer-grained retention at the
+    /// cost of more files.
+    pub stream_segment_bytes: u64,
+    /// Stream retention by size: closed head segments are deleted while a
+    /// stream's on-disk footprint exceeds this. 0 = unbounded.
+    pub stream_retention_bytes: u64,
+    /// Stream retention by age: closed head segments older than this are
+    /// deleted. 0 = unbounded.
+    pub stream_retention_ms: u64,
+    /// Partition count applied to stream queues declared with
+    /// `partitions: 0`. Fixed at declare time (the offset → member
+    /// assignment must stay stable across restarts).
+    pub stream_default_partitions: u32,
 }
 
 impl Default for BrokerConfig {
@@ -108,6 +123,21 @@ impl Default for BrokerConfig {
             page_in_batch: 64,
             publish_credit: 0,
             default_prefetch: 0,
+            stream_segment_bytes: 8 * 1024 * 1024,
+            stream_retention_bytes: 0,
+            stream_retention_ms: 0,
+            stream_default_partitions: 16,
+        }
+    }
+}
+
+impl BrokerConfig {
+    /// The per-stream store knobs, in [`StreamStoreConfig`] form.
+    fn stream_store_config(&self) -> StreamStoreConfig {
+        StreamStoreConfig {
+            segment_bytes: self.stream_segment_bytes,
+            retention_bytes: self.stream_retention_bytes,
+            retention_ms: self.stream_retention_ms,
         }
     }
 }
@@ -348,7 +378,23 @@ impl BrokerHandle {
             // the shard-map key — one allocation per queue name, ever.
             let qname = router.register_queue(name);
             let mut q = Queue::new(Arc::clone(&qname), options.clone(), None);
-            if let Some(msgs) = recovered.messages.get(name) {
+            if options.stream {
+                // Streams recover from their own segmented log, not the
+                // WAL's message map (stream publishes never write WAL
+                // publish records).
+                if options.durable {
+                    if let Some(base) = persister.stream_dir() {
+                        let dir = base.join(sanitize_stream_name(name));
+                        match StreamStore::open(&dir, config.stream_store_config()) {
+                            Ok((store, rec)) => q.attach_stream_store(store, rec),
+                            Err(e) => log::error!(
+                                "broker: stream log for '{name}' failed to open: {e}; \
+                                 the stream runs memory-only until redeclared"
+                            ),
+                        }
+                    }
+                }
+            } else if let Some(msgs) = recovered.messages.get(name) {
                 for mut m in msgs.iter().cloned() {
                     crate::broker::persistence::rearm_deadline(&mut m, options.default_ttl_ms, now);
                     let out = q.publish(m, now);
@@ -749,6 +795,11 @@ impl BrokerHandle {
                                 )));
                             }
                         }
+                        if q.is_stream() {
+                            return Err(Error::Broker(format!(
+                                "queue '{queue}' is a stream; attach with stream_consume"
+                            )));
+                        }
                         // prefetch 0 = unlimited; the broker-side default
                         // caps careless consumers (0 keeps seed behaviour).
                         let prefetch = if *prefetch == 0 {
@@ -794,6 +845,88 @@ impl BrokerHandle {
                 }
                 dispatches.push(qname);
                 Ok(Value::Null)
+            }
+            ClientRequest::StreamConsume { queue, consumer_tag, group, prefetch, offset } => {
+                // Mirrors the Consume arm (same dup-tag index, same
+                // teardown-race rollback); the consumer lands in a stream
+                // group instead of the work-queue consumer list.
+                let mut ci = core.consumer_index.lock().unwrap();
+                if ci.contains_key(consumer_tag) {
+                    return Err(Error::DuplicateSubscriber(consumer_tag.clone()));
+                }
+                let qname = {
+                    let mut st = core.shards.shard_for(queue).lock();
+                    let qname = {
+                        let q = st
+                            .queues
+                            .get_mut(queue.as_str())
+                            .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
+                        if let Some(owner) = q.owner {
+                            if owner != conn {
+                                return Err(Error::Broker(format!(
+                                    "queue '{queue}' is exclusive to another connection"
+                                )));
+                            }
+                        }
+                        if !q.is_stream() {
+                            return Err(Error::Broker(format!(
+                                "queue '{queue}' is not a stream; use consume"
+                            )));
+                        }
+                        let prefetch = if *prefetch == 0 {
+                            core.config.default_prefetch
+                        } else {
+                            *prefetch
+                        };
+                        if !q.add_stream_member(
+                            group,
+                            Consumer {
+                                consumer_tag: consumer_tag.clone(),
+                                connection: conn,
+                                prefetch,
+                                in_flight: 0,
+                            },
+                            *offset,
+                        ) {
+                            return Err(Error::DuplicateSubscriber(consumer_tag.clone()));
+                        }
+                        q.name.clone()
+                    };
+                    st.conns.insert(conn, Arc::clone(&entry));
+                    qname
+                };
+                ci.insert(consumer_tag.clone(), queue.clone());
+                drop(ci);
+                entry.consumer_tags.lock().unwrap().insert(consumer_tag.clone());
+                // Same teardown race as Consume: roll the member back if
+                // disconnect() completed underneath us.
+                if core.connections.get(conn).is_none() {
+                    self.remove_consumer(conn, consumer_tag, queue);
+                    return Err(Error::Closed(format!("unknown connection {conn}")));
+                }
+                dispatches.push(qname);
+                Ok(Value::Null)
+            }
+            ClientRequest::StreamCommit { queue, group, offset } => {
+                let (committed, qname) = {
+                    let mut st = core.shards.shard_for(queue).lock();
+                    let q = st
+                        .queues
+                        .get_mut(queue.as_str())
+                        .ok_or_else(|| Error::Broker(format!("no such queue '{queue}'")))?;
+                    if !q.stream_commit(group, *offset) {
+                        return Err(Error::Broker(format!(
+                            "no stream group '{group}' on queue '{queue}'"
+                        )));
+                    }
+                    (q.stream_group_committed(group).unwrap_or(0), q.name.clone())
+                };
+                // A backward commit (replay) re-opens deliverable offsets.
+                dispatches.push(qname);
+                Ok(Value::map([
+                    ("group", Value::str(group)),
+                    ("committed", Value::from(committed)),
+                ]))
             }
             ClientRequest::Cancel { consumer_tag } => {
                 let removed = core.consumer_index.lock().unwrap().remove(consumer_tag);
@@ -883,7 +1016,10 @@ impl BrokerHandle {
             let Some(q) = st.queues.get_mut(&qname) else {
                 return Ok(());
             };
-            Some((q.ack(tag), q.options.durable, qname))
+            // Streams persist their own group-commit records inside
+            // `Queue::ack`; a WAL retire would be meaningless (there is no
+            // publish record to cancel).
+            Some((q.ack(tag), q.options.durable && !q.options.stream, qname))
         };
         if let Some((msg_id, durable, qname)) = outcome {
             if let (Some(id), true) = (msg_id, durable) {
@@ -919,7 +1055,7 @@ impl BrokerHandle {
                     let Some(q) = st.queues.get_mut(&qname) else { continue };
                     let msg_id = q.ack(tag);
                     acked += 1;
-                    if let (Some(id), true) = (msg_id, q.options.durable) {
+                    if let (Some(id), true) = (msg_id, q.options.durable && !q.options.stream) {
                         match retires.iter_mut().find(|(name, _)| *name == qname) {
                             Some((_, ids)) => ids.push(id),
                             None => retires.push((qname.clone(), vec![id])),
@@ -975,7 +1111,9 @@ impl BrokerHandle {
                     match q.nack(tag, requeue) {
                         NackOutcome::Unknown => {}
                         NackOutcome::Requeued { msg_id, delivery_count } => {
-                            if q.options.durable {
+                            // Stream redelivery state is cursor-local;
+                            // there is no WAL requeue record to write.
+                            if q.options.durable && !q.options.stream {
                                 match requeue_log.iter_mut().find(|(n, _)| *n == qname) {
                                     Some((_, es)) => es.push((msg_id, delivery_count)),
                                     None => requeue_log
@@ -1032,6 +1170,15 @@ impl BrokerHandle {
             {
                 let mut st = shard.lock();
                 for q in st.queues.values_mut() {
+                    // Stream retention: drop closed head segments past the
+                    // size/age budget (whole-segment truncation — streams
+                    // have no per-message TTL).
+                    let truncated = q.stream_retain();
+                    if truncated > 0 {
+                        core.metrics
+                            .counter("broker.stream_entries_truncated_total")
+                            .add(truncated as u64);
+                    }
                     let swept = q.sweep_expired(now);
                     if swept.is_empty() {
                         continue;
@@ -1119,6 +1266,39 @@ impl BrokerHandle {
     /// detection in tests (entries must die with their delivery).
     pub fn delivery_index_len(&self) -> usize {
         self.core.shards.iter().map(|s| s.lock().delivery_index.len()).sum()
+    }
+
+    /// Next offset a stream will assign (= entries ever appended) —
+    /// test/bench convenience.
+    pub fn stream_next_offset(&self, queue: &str) -> Option<u64> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).filter(|q| q.is_stream()).map(|q| q.stream_next_offset())
+    }
+
+    /// Oldest offset retention still holds on a stream — test/bench
+    /// convenience.
+    pub fn stream_base_offset(&self, queue: &str) -> Option<u64> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).filter(|q| q.is_stream()).map(|q| q.stream_base_offset())
+    }
+
+    /// A stream group's committed cursor — test/bench convenience.
+    pub fn stream_group_committed(&self, queue: &str, group: &str) -> Option<u64> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).and_then(|q| q.stream_group_committed(group))
+    }
+
+    /// On-disk footprint of a stream's segments — test/bench convenience.
+    pub fn stream_disk_bytes(&self, queue: &str) -> Option<u64> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).filter(|q| q.is_stream()).map(|q| q.stream_disk_bytes())
+    }
+
+    /// In-memory body bytes held by a stream's resident window —
+    /// test/bench convenience.
+    pub fn stream_resident_bytes(&self, queue: &str) -> Option<u64> {
+        let st = self.core.shards.shard_for(queue).lock();
+        st.queues.get(queue).filter(|q| q.is_stream()).map(|q| q.stream_resident_bytes())
     }
 
     /// Ready messages whose body currently lives on disk — test/bench
@@ -1248,12 +1428,18 @@ impl BrokerHandle {
         &self,
         entry: &Arc<ConnectionEntry>,
         name: &str,
-        options: QueueOptions,
+        mut options: QueueOptions,
     ) -> Result<()> {
         if name.is_empty() {
             return Err(Error::Broker("queue name must not be empty".into()));
         }
         let core = &*self.core;
+        if options.stream && options.partitions == 0 {
+            // Resolved before the declare record is written: the offset →
+            // member assignment is `offset % partitions`, so the count a
+            // stream recovers with must equal the one it was built with.
+            options.partitions = core.config.stream_default_partitions;
+        }
         let (created_owner, qname) = {
             let mut st = core.shards.shard_for(name).lock();
             if let Some(existing) = st.queues.get(name) {
@@ -1279,7 +1465,23 @@ impl BrokerHandle {
             // inside a shard lock) the router's interned entry that
             // bindings and cached routes will share.
             let qname: Arc<str> = Arc::from(name);
-            st.queues.insert(Arc::clone(&qname), Queue::new(Arc::clone(&qname), options, owner));
+            let mut q = Queue::new(Arc::clone(&qname), options.clone(), owner);
+            if options.stream && options.durable {
+                // Open (or re-open) the stream's segment directory. Disk
+                // I/O under the shard lock is fine here — declare is a
+                // cold path and a fresh stream dir is one small file.
+                if let Some(base) = core.persister.stream_dir() {
+                    let dir = base.join(sanitize_stream_name(name));
+                    match StreamStore::open(&dir, core.config.stream_store_config()) {
+                        Ok((store, rec)) => q.attach_stream_store(store, rec),
+                        Err(e) => log::error!(
+                            "broker: stream log for '{name}' failed to open: {e}; \
+                             the stream runs memory-only"
+                        ),
+                    }
+                }
+            }
+            st.queues.insert(Arc::clone(&qname), q);
             (owner, qname)
         };
         core.router.register_queue_arc(qname);
@@ -1312,7 +1514,7 @@ impl BrokerHandle {
     ) -> Result<()> {
         let core = &*self.core;
         let mut cancels: Vec<(Arc<ConnectionEntry>, String)> = Vec::new();
-        let (durable, paged_locs) = {
+        let (durable, stream, paged_locs) = {
             let mut ci = core.consumer_index.lock().unwrap();
             let mut st = core.shards.shard_for(name).lock();
             if let Some(owner) = required_owner {
@@ -1325,7 +1527,9 @@ impl BrokerHandle {
                 return Err(Error::Broker(format!("no such queue '{name}'")));
             };
             st.delivery_index.retain(|_, qname| &**qname != name);
-            for c in q.consumers() {
+            // `all_consumers` covers stream group members too — they get
+            // the same cancel notification as work-queue consumers.
+            for c in q.all_consumers() {
                 ci.remove(&c.consumer_tag);
                 if let Some(e) = st.conns.get(&c.connection) {
                     cancels.push((Arc::clone(e), c.consumer_tag.clone()));
@@ -1333,10 +1537,26 @@ impl BrokerHandle {
             }
             let paged_locs: Vec<BodyLocator> =
                 q.all_messages().into_iter().filter_map(|m| m.paged).collect();
-            (q.options.durable, paged_locs)
+            (q.options.durable, q.options.stream, paged_locs)
+            // `q` (and its StreamStore, which flushes on drop) dies here,
+            // before the segment directory is removed below.
         };
         if durable {
             core.persister.record_queue_delete(name)?;
+        }
+        if stream && durable {
+            // The stream's log dies with the queue.
+            if let Some(base) = core.persister.stream_dir() {
+                let dir = base.join(sanitize_stream_name(name));
+                if let Err(e) = std::fs::remove_dir_all(&dir) {
+                    if e.kind() != std::io::ErrorKind::NotFound {
+                        log::warn!(
+                            "broker: stream dir {} of deleted queue '{name}' not removed: {e}",
+                            dir.display()
+                        );
+                    }
+                }
+            }
         }
         // The queue's paged bodies die with it — free their spill space
         // (no-op for WAL-backed locators) with every lock released.
@@ -1448,7 +1668,10 @@ impl BrokerHandle {
                         stored: None,
                         paged: None,
                     },
-                    q.options.durable,
+                    // Streams append to their own segmented log inside
+                    // `Queue::publish` — a WAL publish record would store
+                    // every entry twice and never be retired.
+                    q.options.durable && !q.options.stream,
                 ));
             }
             {

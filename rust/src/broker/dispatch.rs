@@ -130,6 +130,7 @@ impl Dispatcher {
                         routing_key: a.message.routing_key.clone(),
                         body: a.message.body.clone(),
                         props: a.message.props.clone(),
+                        offset: a.offset,
                     };
                     match groups.iter_mut().find(|g| g.conn == a.connection) {
                         Some(g) => {

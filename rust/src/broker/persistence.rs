@@ -45,7 +45,7 @@ use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime};
 
 use crate::broker::protocol::{EncodedProps, MessageProps, QueueOptions};
 use crate::broker::queue::QueuedMessage;
@@ -803,6 +803,13 @@ pub trait PersistBackend: Send + Sync {
     /// was restored, consumed, purged or dropped). Only spill locators
     /// hold backend resources; segment locators are no-ops.
     fn release_body(&self, _loc: BodyLocator) {}
+
+    /// Directory under which stream queues keep their per-stream segment
+    /// logs (see [`StreamStore`]). `None` (the default) means the backend
+    /// has no stable storage — stream queues then run memory-only.
+    fn stream_dir(&self) -> Option<PathBuf> {
+        None
+    }
 }
 
 /// Adapter: any [`Persister`] behind one mutex. This is both the
@@ -870,6 +877,10 @@ pub struct WalStats {
     pub fsyncs: Arc<Counter>,
     pub bytes: Arc<Counter>,
     pub batch_max: Arc<Counter>,
+    /// Failed sync passes (syncer-thread fsync errors and the final
+    /// shutdown flush). A non-zero value means buffered durable records
+    /// may not have reached stable storage.
+    pub sync_errors: Arc<Counter>,
 }
 
 /// Commit point of one segment: how far the file is known durable, plus
@@ -1218,7 +1229,10 @@ fn syncer_loop(segments: Vec<Arc<WalSegment>>, shared: Arc<SyncShared>, stats: W
                 let result = file.sync_all().map_err(|e| e.to_string());
                 match &result {
                     Ok(()) => stats.fsyncs.inc(),
-                    Err(e) => log::error!("wal: fsync of segment {} failed: {e}", seg.index),
+                    Err(e) => {
+                        stats.sync_errors.inc();
+                        log::error!("wal: fsync of segment {} failed: {e}", seg.index);
+                    }
                 }
                 let newly = seg.complete(seq, result);
                 if newly > 0 {
@@ -1739,6 +1753,8 @@ impl PersistBackend for SegmentedWal {
             "broker.wal_group_commit_batch_max",
             Arc::clone(&self.stats.batch_max),
         );
+        registry
+            .register_counter("broker.wal_sync_errors_total", Arc::clone(&self.stats.sync_errors));
     }
 
     fn page_out(&self, queue: &str, msg: &QueuedMessage) -> Option<BodyLocator> {
@@ -1795,6 +1811,10 @@ impl PersistBackend for SegmentedWal {
             self.spill.lock().unwrap().release(loc);
         }
     }
+
+    fn stream_dir(&self) -> Option<PathBuf> {
+        Some(self.dir.join("streams"))
+    }
 }
 
 impl Drop for SegmentedWal {
@@ -1808,8 +1828,14 @@ impl Drop for SegmentedWal {
             h.join().ok();
         }
         // Clean shutdown loses nothing even under Os/EveryN: flush and
-        // fsync whatever is still buffered.
-        let _ = PersistBackend::sync(self);
+        // fsync whatever is still buffered. A failure here means buffered
+        // durable records may be lost — too late to propagate from a Drop,
+        // but never silent: log it and leave a trace in the counter (still
+        // readable by anything holding a clone of the stats handles).
+        if let Err(e) = PersistBackend::sync(self) {
+            self.stats.sync_errors.inc();
+            log::error!("wal: final shutdown sync failed, buffered records may be lost: {e}");
+        }
         // Spill bodies are non-durable by definition; don't leave the file
         // behind (open() would remove a stale one anyway).
         let spill = self.spill.lock().unwrap();
@@ -1895,6 +1921,456 @@ pub fn replay_dir(dir: &Path) -> Result<RecoveredState> {
 pub fn rearm_deadline(msg: &mut QueuedMessage, default_ttl_ms: Option<u64>, now: Instant) {
     let ttl = msg.props.expiration_ms.or(default_ttl_ms);
     msg.deadline = ttl.map(|ms| now + std::time::Duration::from_millis(ms));
+}
+
+// ---------------------------------------------------------------------------
+// Stream stores: per-stream segmented append-only logs.
+// ---------------------------------------------------------------------------
+
+/// Record kinds inside a stream segment file (same `len | checksum | kind |
+/// payload` framing as the WAL, different kind namespace — stream files are
+/// never replayed by the WAL and vice versa).
+const SKIND_ENTRY: u8 = 1;
+const SKIND_COMMIT: u8 = 2;
+/// First record of every segment: the offset its first entry will carry.
+/// Lets an empty active segment (everything before it retained away)
+/// still recover the stream's base/next offset.
+const SKIND_BASE: u8 = 3;
+
+/// Size/age retention knobs for one stream store. Zero means unlimited
+/// for both retention fields; retention only ever deletes whole *closed*
+/// segments (the active one is never reclaimed).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamStoreConfig {
+    /// Roll the active segment once it passes this many bytes.
+    pub segment_bytes: u64,
+    /// Delete closed head segments while the store exceeds this size.
+    pub retention_bytes: u64,
+    /// Delete closed head segments older than this.
+    pub retention_ms: u64,
+}
+
+struct StreamSegment {
+    index: u32,
+    path: PathBuf,
+    /// Offset of the first entry this segment holds (or would hold).
+    base_offset: u64,
+    bytes: u64,
+    created: SystemTime,
+}
+
+/// One entry's metadata recovered from a stream segment replay. The body
+/// stays on disk — `locator` points at it; props are small and decoded
+/// eagerly so delivery never re-reads them.
+pub struct RecoveredStreamEntry {
+    pub offset: u64,
+    pub msg_id: u64,
+    pub exchange: String,
+    pub routing_key: String,
+    pub props: EncodedProps,
+    pub locator: BodyLocator,
+}
+
+/// Everything a stream segment replay reconstructs: the entry index
+/// (bodies left on disk) and each consumer group's committed offset.
+#[derive(Default)]
+pub struct RecoveredStream {
+    pub entries: Vec<RecoveredStreamEntry>,
+    pub commits: BTreeMap<String, u64>,
+    pub base_offset: u64,
+    pub next_offset: u64,
+}
+
+/// Directory name for a stream's segments: queue names may carry path
+/// separators and other filesystem-hostile characters.
+pub fn sanitize_stream_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '_' })
+        .collect()
+}
+
+/// The segmented append-only store behind one stream queue: entry records
+/// (envelope + props + body verbatim, one [`BodyLocator`] minted per
+/// append) and group-commit records, in `seg-<n>.log` files that roll at
+/// [`StreamStoreConfig::segment_bytes`] and are reclaimed whole by
+/// retention. Owned by the queue and driven entirely under its shard lock
+/// (leaf I/O, like WAL appends) — no internal locking, no syncer thread;
+/// appends buffer in the writer and are flushed lazily before any read.
+pub struct StreamStore {
+    dir: PathBuf,
+    cfg: StreamStoreConfig,
+    /// Oldest first; the last element is the active (written) segment.
+    segments: Vec<StreamSegment>,
+    writer: BufWriter<File>,
+    /// Buffered appends not yet flushed to the OS (flushed before reads).
+    dirty: bool,
+    /// Cached read handle: `(segment index, file)`.
+    reader: Option<(u32, File)>,
+    next_offset: u64,
+}
+
+fn new_stream_segment(
+    dir: &Path,
+    index: u32,
+    base: u64,
+) -> Result<(StreamSegment, BufWriter<File>)> {
+    let path = dir.join(format!("seg-{index}.log"));
+    let file = OpenOptions::new().create(true).append(true).open(&path)?;
+    let mut writer = BufWriter::new(file);
+    let env = codec::encode_to_vec(&Value::map([("base", Value::from(base))]));
+    write_record(&mut writer, SKIND_BASE, &[env.as_slice()])?;
+    writer.flush()?;
+    let seg = StreamSegment {
+        index,
+        path,
+        base_offset: base,
+        bytes: 9 + env.len() as u64,
+        created: SystemTime::now(),
+    };
+    Ok((seg, writer))
+}
+
+impl StreamStore {
+    /// Open (or create) the store for one stream. Existing segments are
+    /// replayed into the returned [`RecoveredStream`]; a torn tail is
+    /// truncated away (same crash contract as the WAL: records are fully
+    /// on disk or not at all).
+    pub fn open(
+        dir: impl AsRef<Path>,
+        cfg: StreamStoreConfig,
+    ) -> Result<(StreamStore, RecoveredStream)> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let files = list_segment_files(&dir)?;
+        let mut recovered = RecoveredStream::default();
+        let mut segments: Vec<StreamSegment> = Vec::new();
+        let mut torn = false;
+        for (idx, path) in &files {
+            if torn {
+                // A tear marks the crash point; anything after it is
+                // unreachable garbage (a crash can only tear the newest
+                // file). Never silent: log what is dropped.
+                log::warn!("stream: dropping segment {idx} after a torn predecessor");
+                std::fs::remove_file(path).ok();
+                continue;
+            }
+            let (seg, file_torn) =
+                replay_stream_segment(path, *idx as u32, &mut recovered)?;
+            torn = file_torn;
+            segments.push(seg);
+        }
+        if segments.is_empty() {
+            recovered.base_offset = 0;
+            recovered.next_offset = 0;
+            let (seg, writer) = new_stream_segment(&dir, 0, 0)?;
+            segments.push(seg);
+            return Ok((
+                StreamStore { dir, cfg, segments, writer, dirty: false, reader: None, next_offset: 0 },
+                recovered,
+            ));
+        }
+        recovered.base_offset = match recovered.entries.first() {
+            Some(e) => e.offset,
+            None => segments.last().unwrap().base_offset,
+        };
+        let next_offset = recovered.next_offset;
+        // Truncate any torn tail so fresh appends land on the intact
+        // prefix, then reattach the writer.
+        let active = segments.last().unwrap();
+        let file = OpenOptions::new().read(true).append(true).open(&active.path)?;
+        file.set_len(active.bytes)?;
+        let writer = BufWriter::new(file);
+        Ok((StreamStore { dir, cfg, segments, writer, dirty: false, reader: None, next_offset }, recovered))
+    }
+
+    /// Append one entry; returns the locator of its body bytes. Rolls the
+    /// active segment at the configured size first, so an entry never
+    /// spans segments.
+    pub fn append(&mut self, offset: u64, msg: &QueuedMessage) -> Result<BodyLocator> {
+        debug_assert_eq!(offset, self.next_offset);
+        if self.active().bytes >= self.cfg.segment_bytes.max(1) {
+            self.roll(offset)?;
+        }
+        let env = codec::encode_to_vec(&Value::map([
+            ("offset", Value::from(offset)),
+            ("msg_id", Value::from(msg.msg_id)),
+            ("exchange", Value::str(msg.exchange.as_ref())),
+            ("routing_key", Value::str(msg.routing_key.as_ref())),
+            ("props_len", Value::from(msg.props.bytes().len())),
+            ("body_len", Value::from(msg.body.len())),
+        ]));
+        let props = msg.props.bytes().as_slice();
+        let body = msg.body.as_slice();
+        write_record(&mut self.writer, SKIND_ENTRY, &[env.as_slice(), props, body])?;
+        let active = self.segments.last_mut().unwrap();
+        let payload_off = active.bytes + 9;
+        let loc = BodyLocator {
+            segment: active.index,
+            generation: 0,
+            offset: payload_off + (env.len() + props.len()) as u64,
+            len: body.len() as u32,
+        };
+        active.bytes += 9 + (env.len() + props.len() + body.len()) as u64;
+        self.dirty = true;
+        self.next_offset = offset + 1;
+        Ok(loc)
+    }
+
+    /// Record a group's committed offset (everything below it is consumed
+    /// by that group); replay restores the latest per group.
+    pub fn record_commit(&mut self, group: &str, committed: u64) -> Result<()> {
+        let env = codec::encode_to_vec(&Value::map([
+            ("group", Value::str(group)),
+            ("committed", Value::from(committed)),
+        ]));
+        write_record(&mut self.writer, SKIND_COMMIT, &[env.as_slice()])?;
+        self.segments.last_mut().unwrap().bytes += 9 + env.len() as u64;
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Read an entry body back by locator.
+    pub fn read_body(&mut self, loc: BodyLocator) -> Result<Bytes> {
+        if self.dirty {
+            self.writer.flush()?;
+            self.dirty = false;
+        }
+        let cached = self.reader.as_ref().is_some_and(|(idx, _)| *idx == loc.segment);
+        if !cached {
+            let seg = self
+                .segments
+                .iter()
+                .find(|s| s.index == loc.segment)
+                .ok_or_else(|| {
+                    Error::Persistence(format!("stream segment {} retained away", loc.segment))
+                })?;
+            self.reader = Some((loc.segment, File::open(&seg.path)?));
+        }
+        let (_, file) = self.reader.as_mut().unwrap();
+        file.seek(SeekFrom::Start(loc.offset))?;
+        let mut buf = vec![0u8; loc.len as usize];
+        file.read_exact(&mut buf)?;
+        Ok(Bytes::from_vec(buf))
+    }
+
+    /// Apply size/age retention: delete whole closed head segments while
+    /// the store is over `retention_bytes` or the head is older than
+    /// `retention_ms`. Returns the new lowest surviving offset when
+    /// anything was reclaimed (the queue truncates its index to it).
+    pub fn retain(&mut self) -> Result<Option<u64>> {
+        let mut changed = false;
+        while self.segments.len() > 1 {
+            let total: u64 = self.segments.iter().map(|s| s.bytes).sum();
+            let head = &self.segments[0];
+            let over_size = self.cfg.retention_bytes > 0 && total > self.cfg.retention_bytes;
+            let age_ms = SystemTime::now()
+                .duration_since(head.created)
+                .unwrap_or_default()
+                .as_millis() as u64;
+            let over_age = self.cfg.retention_ms > 0 && age_ms > self.cfg.retention_ms;
+            if !(over_size || over_age) {
+                break;
+            }
+            let head = self.segments.remove(0);
+            if self.reader.as_ref().is_some_and(|(idx, _)| *idx == head.index) {
+                self.reader = None;
+            }
+            if let Err(e) = std::fs::remove_file(&head.path) {
+                log::warn!("stream: could not remove retired segment {:?}: {e}", head.path);
+            }
+            changed = true;
+        }
+        Ok(changed.then(|| self.segments[0].base_offset))
+    }
+
+    /// Drop every entry (queue purge): all segments are deleted and a
+    /// fresh active one opens at `next` — group commit records restart
+    /// from it too.
+    pub fn purge(&mut self, next: u64) -> Result<()> {
+        self.writer.flush().ok();
+        let next_index = self.segments.last().map_or(0, |s| s.index + 1);
+        for seg in self.segments.drain(..) {
+            std::fs::remove_file(&seg.path).ok();
+        }
+        self.reader = None;
+        let (seg, writer) = new_stream_segment(&self.dir, next_index, next)?;
+        self.segments.push(seg);
+        self.writer = writer;
+        self.dirty = false;
+        self.next_offset = next;
+        Ok(())
+    }
+
+    /// Total bytes currently on disk across all segments.
+    pub fn disk_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    fn active(&self) -> &StreamSegment {
+        self.segments.last().unwrap()
+    }
+
+    fn roll(&mut self, base: u64) -> Result<()> {
+        self.writer.flush()?;
+        self.dirty = false;
+        let index = self.active().index + 1;
+        let (seg, writer) = new_stream_segment(&self.dir, index, base)?;
+        self.segments.push(seg);
+        self.writer = writer;
+        Ok(())
+    }
+}
+
+impl Drop for StreamStore {
+    fn drop(&mut self) {
+        // Same contract as the WAL's shutdown sync: a failed final flush
+        // is a potential loss of buffered entries — never swallow it.
+        if let Err(e) = self.writer.flush() {
+            log::error!("stream: final flush of {:?} failed, buffered entries may be lost: {e}", self.dir);
+        }
+    }
+}
+
+/// Replay one stream segment file into `recovered`. Returns the segment's
+/// metadata (with `bytes` = the intact prefix length) and whether the file
+/// ended in a torn/corrupt record.
+fn replay_stream_segment(
+    path: &Path,
+    index: u32,
+    recovered: &mut RecoveredStream,
+) -> Result<(StreamSegment, bool)> {
+    let file = File::open(path)?;
+    let created = file
+        .metadata()
+        .ok()
+        .and_then(|m| m.modified().ok())
+        .unwrap_or_else(SystemTime::now);
+    let mut r = BufReader::new(file);
+    let mut pos = 0u64;
+    let mut intact = 0u64;
+    let mut base_offset = recovered.next_offset;
+    let mut torn = false;
+    loop {
+        let mut header = [0u8; 9];
+        match r.read_exact(&mut header) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        let want_sum = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let kind = header[8];
+        if len > crate::wire::MAX_FRAME_LEN as usize {
+            log::warn!("stream: absurd record length {len} at offset {pos}; truncating");
+            torn = true;
+            break;
+        }
+        let mut payload = vec![0u8; len];
+        match r.read_exact(&mut payload) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                log::warn!("stream: torn record at offset {pos}; truncating");
+                torn = true;
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if checksum(kind, &payload) != want_sum {
+            log::warn!("stream: checksum mismatch at offset {pos}; truncating");
+            torn = true;
+            break;
+        }
+        let payload_off = pos + 9;
+        pos += 9 + len as u64;
+        match kind {
+            SKIND_ENTRY => {
+                let buf = Bytes::from_vec(payload);
+                let (env, consumed) = match codec::decode_prefix(buf.as_slice()) {
+                    Ok((env, rest)) => (env, buf.len() - rest.len()),
+                    Err(_) => {
+                        log::warn!("stream: undecodable entry at offset {payload_off}; truncating");
+                        torn = true;
+                        break;
+                    }
+                };
+                let props_len = env.get_u64("props_len")? as usize;
+                let body_len = env.get_u64("body_len")? as usize;
+                if consumed + props_len + body_len != buf.len() {
+                    return Err(Error::Persistence(
+                        "stream entry section lengths disagree".into(),
+                    ));
+                }
+                let props =
+                    EncodedProps::from_wire(buf.slice(consumed..consumed + props_len))?;
+                let offset = env.get_u64("offset")?;
+                if let Some(last) = recovered.entries.last() {
+                    if offset != last.offset + 1 {
+                        return Err(Error::Persistence(format!(
+                            "stream entry offset {offset} breaks contiguity after {}",
+                            last.offset
+                        )));
+                    }
+                }
+                recovered.entries.push(RecoveredStreamEntry {
+                    offset,
+                    msg_id: env.get_u64("msg_id")?,
+                    exchange: env.get_str("exchange")?.to_string(),
+                    routing_key: env.get_str("routing_key")?.to_string(),
+                    props,
+                    locator: BodyLocator {
+                        segment: index,
+                        generation: 0,
+                        offset: payload_off + (consumed + props_len) as u64,
+                        len: body_len as u32,
+                    },
+                });
+                recovered.next_offset = offset + 1;
+            }
+            SKIND_COMMIT => {
+                let v = match codec::decode(&payload) {
+                    Ok(v) => v,
+                    Err(_) => {
+                        log::warn!(
+                            "stream: undecodable commit at offset {payload_off}; truncating"
+                        );
+                        torn = true;
+                        break;
+                    }
+                };
+                recovered
+                    .commits
+                    .insert(v.get_str("group")?.to_string(), v.get_u64("committed")?);
+            }
+            SKIND_BASE => {
+                let v = match codec::decode(&payload) {
+                    Ok(v) => v,
+                    Err(_) => {
+                        log::warn!(
+                            "stream: undecodable base record at offset {payload_off}; truncating"
+                        );
+                        torn = true;
+                        break;
+                    }
+                };
+                base_offset = v.get_u64("base")?;
+                recovered.next_offset = recovered.next_offset.max(base_offset);
+            }
+            other => {
+                log::warn!("stream: unknown record kind {other} at offset {pos}; truncating");
+                torn = true;
+                break;
+            }
+        }
+        intact = pos;
+    }
+    Ok((
+        StreamSegment { index, path: path.to_path_buf(), base_offset, bytes: intact, created },
+        torn,
+    ))
 }
 
 #[cfg(test)]
@@ -2660,5 +3136,136 @@ mod tests {
         );
         drop(wal);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn stream_cfg(segment_bytes: u64) -> StreamStoreConfig {
+        StreamStoreConfig { segment_bytes, retention_bytes: 0, retention_ms: 0 }
+    }
+
+    #[test]
+    fn stream_store_append_read_roundtrip() {
+        let dir = temp_seg_dir();
+        let (mut store, rec) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+        assert!(rec.entries.is_empty());
+        let m = msg(1, "hello-stream");
+        let loc = store.append(0, &m).unwrap();
+        assert_eq!(loc.len as usize, m.body.len());
+        assert_eq!(store.read_body(loc).unwrap().as_slice(), m.body.as_slice());
+        drop(store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_store_recovers_entries_and_commits() {
+        let dir = temp_seg_dir();
+        let bodies: Vec<String> = (0..5).map(|i| format!("entry-{i}")).collect();
+        {
+            let (mut store, _) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+            for (i, b) in bodies.iter().enumerate() {
+                store.append(i as u64, &msg(i as u64 + 10, b)).unwrap();
+            }
+            store.record_commit("analytics", 3).unwrap();
+            store.record_commit("analytics", 4).unwrap();
+            store.record_commit("audit", 1).unwrap();
+        }
+        let (mut store, rec) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+        assert_eq!(rec.base_offset, 0);
+        assert_eq!(rec.next_offset, 5);
+        assert_eq!(rec.entries.len(), 5);
+        assert_eq!(rec.commits["analytics"], 4, "latest commit per group wins");
+        assert_eq!(rec.commits["audit"], 1);
+        for (i, e) in rec.entries.iter().enumerate() {
+            assert_eq!(e.offset, i as u64);
+            assert_eq!(e.msg_id, i as u64 + 10);
+            assert_eq!(e.routing_key, "tasks");
+            let body = store.read_body(e.locator).unwrap();
+            assert_eq!(body.as_slice(), Bytes::encode(&Value::str(&bodies[i])).as_slice());
+        }
+        // Appends continue from the recovered tail.
+        let loc = store.append(5, &msg(20, "after-restart")).unwrap();
+        assert!(store.read_body(loc).is_ok());
+        drop(store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_store_rolls_segments_and_retention_reclaims_disk() {
+        let dir = temp_seg_dir();
+        // Tiny segments: every append rolls.
+        let cfg = StreamStoreConfig { segment_bytes: 64, retention_bytes: 256, retention_ms: 0 };
+        let (mut store, _) = StreamStore::open(&dir, cfg).unwrap();
+        for i in 0..20u64 {
+            store.append(i, &msg(i, &format!("padding-padding-padding-{i}"))).unwrap();
+        }
+        assert!(store.segment_count() > 3, "small segment_bytes must roll");
+        let before = store.disk_bytes();
+        let new_base = store.retain().unwrap().expect("over retention_bytes: must truncate");
+        assert!(new_base > 0);
+        assert!(store.disk_bytes() < before, "retention reclaims disk");
+        // Reopen: the log starts at the surviving base; later entries intact.
+        drop(store);
+        let (mut store, rec) = StreamStore::open(&dir, cfg).unwrap();
+        assert_eq!(rec.base_offset, new_base);
+        assert_eq!(rec.next_offset, 20);
+        assert_eq!(rec.entries.first().unwrap().offset, new_base);
+        let e = rec.entries.last().unwrap();
+        assert_eq!(
+            store.read_body(e.locator).unwrap().as_slice(),
+            Bytes::encode(&Value::str("padding-padding-padding-19")).as_slice()
+        );
+        drop(store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_store_truncates_torn_tail() {
+        let dir = temp_seg_dir();
+        {
+            let (mut store, _) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+            store.append(0, &msg(1, "intact")).unwrap();
+            store.append(1, &msg(2, "will-be-torn")).unwrap();
+        }
+        // Tear the last record's tail off.
+        let seg = dir.join("seg-0.log");
+        let len = std::fs::metadata(&seg).unwrap().len();
+        OpenOptions::new().write(true).open(&seg).unwrap().set_len(len - 3).unwrap();
+        let (mut store, rec) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+        assert_eq!(rec.entries.len(), 1, "torn record dropped, intact prefix kept");
+        assert_eq!(rec.next_offset, 1);
+        // New appends land cleanly after the truncated prefix.
+        let loc = store.append(1, &msg(3, "rewritten")).unwrap();
+        assert_eq!(
+            store.read_body(loc).unwrap().as_slice(),
+            Bytes::encode(&Value::str("rewritten")).as_slice()
+        );
+        drop(store);
+        let (_store, rec) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+        assert_eq!(rec.entries.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_store_purge_restarts_at_next_offset() {
+        let dir = temp_seg_dir();
+        let (mut store, _) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+        for i in 0..4u64 {
+            store.append(i, &msg(i, "x")).unwrap();
+        }
+        store.purge(4).unwrap();
+        assert_eq!(store.segment_count(), 1);
+        store.append(4, &msg(9, "post-purge")).unwrap();
+        drop(store);
+        let (_store, rec) = StreamStore::open(&dir, stream_cfg(1 << 20)).unwrap();
+        assert_eq!(rec.base_offset, 4);
+        assert_eq!(rec.next_offset, 5);
+        assert_eq!(rec.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_name_sanitizer_neutralizes_path_chars() {
+        assert_eq!(sanitize_stream_name("events.log"), "events.log");
+        assert_eq!(sanitize_stream_name("a/b\\c:d"), "a_b_c_d");
+        assert_eq!(sanitize_stream_name("../../etc"), ".._.._etc");
     }
 }

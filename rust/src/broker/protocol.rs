@@ -247,6 +247,17 @@ pub struct QueueOptions {
     /// Routing key for dead-letter re-publishes; `None` keeps the
     /// message's original routing key.
     pub dead_letter_routing_key: Option<String>,
+    /// Stream queue: an append-only log instead of a destructive work
+    /// queue. Consumers attach with [`ClientRequest::StreamConsume`] at an
+    /// offset; acks advance their group's committed cursor instead of
+    /// deleting the message, so any number of groups can replay the same
+    /// log independently. `max_length`/`overflow`/TTL/DLX options do not
+    /// apply — retention truncates whole segments by age/size instead.
+    pub stream: bool,
+    /// Number of partitions a stream's offsets are assigned over inside a
+    /// consumer group (offset % partitions → group member). 0 = broker
+    /// default. Ignored for non-stream queues.
+    pub partitions: u32,
 }
 
 impl Default for QueueOptions {
@@ -261,6 +272,8 @@ impl Default for QueueOptions {
             max_delivery: None,
             dead_letter_exchange: None,
             dead_letter_routing_key: None,
+            stream: false,
+            partitions: 0,
         }
     }
 }
@@ -268,6 +281,11 @@ impl Default for QueueOptions {
 impl QueueOptions {
     pub fn durable() -> Self {
         QueueOptions { durable: true, ..Default::default() }
+    }
+
+    /// A stream queue (append-only log with cursor-based consumers).
+    pub fn stream() -> Self {
+        QueueOptions { stream: true, ..Default::default() }
     }
 
     pub fn to_value(&self) -> Value {
@@ -281,6 +299,8 @@ impl QueueOptions {
             ("max_delivery", self.max_delivery.map(u64::from).into()),
             ("dead_letter_exchange", self.dead_letter_exchange.clone().into()),
             ("dead_letter_routing_key", self.dead_letter_routing_key.clone().into()),
+            ("stream", Value::Bool(self.stream)),
+            ("partitions", Value::from(u64::from(self.partitions))),
         ])
     }
 
@@ -317,6 +337,13 @@ impl QueueOptions {
                 .get_opt("dead_letter_routing_key")
                 .map(|x| x.as_str().map(String::from))
                 .transpose()?,
+            // Absent on pre-stream records/clients: a plain work queue.
+            stream: v.get_opt("stream").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+            partitions: v
+                .get_opt("partitions")
+                .map(|x| x.as_u64().map(|n| n as u32))
+                .transpose()?
+                .unwrap_or(0),
         })
     }
 }
@@ -346,6 +373,27 @@ pub enum ClientRequest {
         mandatory: bool,
     },
     Consume { queue: String, consumer_tag: String, prefetch: u32 },
+    /// Attach a cursor-based consumer to a stream queue as a member of
+    /// `group`. All members of one group share a cursor and a committed
+    /// offset; each stream entry is delivered to exactly one member
+    /// (partitioned by `offset % partitions`). Distinct groups replay the
+    /// log independently.
+    StreamConsume {
+        queue: String,
+        consumer_tag: String,
+        /// Consumer-group name. Groups are created on first attach.
+        group: String,
+        prefetch: u32,
+        /// Seek: start replay at this offset. `None` resumes from the
+        /// group's committed offset (a brand-new group starts at the tail
+        /// of what retention still holds).
+        offset: Option<u64>,
+    },
+    /// Explicitly commit a group's consumed offset on a stream (offsets up
+    /// to and including `offset` are marked consumed). Normally the commit
+    /// rides the regular ack frames; this frame is the seek/replay
+    /// escape hatch.
+    StreamCommit { queue: String, group: String, offset: u64 },
     Cancel { consumer_tag: String },
     Ack { delivery_tag: u64 },
     /// Acknowledge many deliveries in one frame (the client-side ack
@@ -384,6 +432,10 @@ pub struct Delivery {
     /// handler's scope.
     pub body: Bytes,
     pub props: EncodedProps,
+    /// Stream queues only: the entry's log offset (commit `offset` to mark
+    /// everything up to and including it consumed). `None` on work-queue
+    /// deliveries and on frames from pre-stream brokers.
+    pub offset: Option<u64>,
 }
 
 /// Messages the broker sends to a client.
@@ -497,6 +549,26 @@ impl ClientRequest {
                     ("prefetch", Value::from(*prefetch as u64)),
                 ],
             ),
+            ClientRequest::StreamConsume { queue, consumer_tag, group, prefetch, offset } => req(
+                "stream_consume",
+                req_id,
+                vec![
+                    ("queue", Value::str(queue)),
+                    ("consumer_tag", Value::str(consumer_tag)),
+                    ("group", Value::str(group)),
+                    ("prefetch", Value::from(*prefetch as u64)),
+                    ("offset", (*offset).into()),
+                ],
+            ),
+            ClientRequest::StreamCommit { queue, group, offset } => req(
+                "stream_commit",
+                req_id,
+                vec![
+                    ("queue", Value::str(queue)),
+                    ("group", Value::str(group)),
+                    ("offset", Value::from(*offset)),
+                ],
+            ),
             ClientRequest::Cancel { consumer_tag } => {
                 req("cancel", req_id, vec![("consumer_tag", Value::str(consumer_tag))])
             }
@@ -596,6 +668,18 @@ impl ClientRequest {
                 consumer_tag: v.get_str("consumer_tag")?.to_string(),
                 prefetch: v.get_u64("prefetch")? as u32,
             },
+            "stream_consume" => ClientRequest::StreamConsume {
+                queue: v.get_str("queue")?.to_string(),
+                consumer_tag: v.get_str("consumer_tag")?.to_string(),
+                group: v.get_str("group")?.to_string(),
+                prefetch: v.get_u64("prefetch")? as u32,
+                offset: v.get_opt("offset").map(|x| x.as_u64()).transpose()?,
+            },
+            "stream_commit" => ClientRequest::StreamCommit {
+                queue: v.get_str("queue")?.to_string(),
+                group: v.get_str("group")?.to_string(),
+                offset: v.get_u64("offset")?,
+            },
             "cancel" => {
                 ClientRequest::Cancel { consumer_tag: v.get_str("consumer_tag")?.to_string() }
             }
@@ -646,6 +730,7 @@ impl Delivery {
             ("routing_key", Value::str(self.routing_key.as_ref())),
             ("props_len", Value::from(self.props.bytes().len())),
             ("body_len", Value::from(self.body.len())),
+            ("offset", self.offset.into()),
         ])
     }
 
@@ -687,6 +772,7 @@ impl Delivery {
             routing_key,
             body,
             props,
+            offset: v.get_opt("offset").map(|x| x.as_u64()).transpose()?,
         })
     }
 }
@@ -836,6 +922,16 @@ mod tests {
                 max_delivery: Some(5),
                 dead_letter_exchange: Some("dlx".into()),
                 dead_letter_routing_key: Some("dead.tasks".into()),
+                stream: false,
+                partitions: 0,
+            },
+        });
+        roundtrip_req(ClientRequest::QueueDeclare {
+            queue: "events.log".into(),
+            options: QueueOptions {
+                durable: true,
+                partitions: 4,
+                ..QueueOptions::stream()
             },
         });
         roundtrip_req(ClientRequest::ExchangeDeclare {
@@ -867,6 +963,25 @@ mod tests {
             consumer_tag: "ct-1".into(),
             prefetch: 1,
         });
+        roundtrip_req(ClientRequest::StreamConsume {
+            queue: "events.log".into(),
+            consumer_tag: "ct-2".into(),
+            group: "analytics".into(),
+            prefetch: 64,
+            offset: Some(12345),
+        });
+        roundtrip_req(ClientRequest::StreamConsume {
+            queue: "events.log".into(),
+            consumer_tag: "ct-3".into(),
+            group: "audit".into(),
+            prefetch: 0,
+            offset: None,
+        });
+        roundtrip_req(ClientRequest::StreamCommit {
+            queue: "events.log".into(),
+            group: "analytics".into(),
+            offset: 777,
+        });
         roundtrip_req(ClientRequest::Ack { delivery_tag: 99 });
         roundtrip_req(ClientRequest::AckMulti { delivery_tags: vec![3, 5, 8, 13] });
         roundtrip_req(ClientRequest::AckMulti { delivery_tags: vec![] });
@@ -893,6 +1008,8 @@ mod tests {
         assert_eq!(opts.max_delivery, None);
         assert_eq!(opts.dead_letter_exchange, None);
         assert_eq!(opts.dead_letter_routing_key, None);
+        assert!(!opts.stream);
+        assert_eq!(opts.partitions, 0);
     }
 
     #[test]
@@ -916,6 +1033,17 @@ mod tests {
                 routing_key: "tasks".into(),
                 body: Bytes::encode(&Value::str("payload")),
                 props: MessageProps::default().into(),
+                offset: None,
+            }),
+            ServerMsg::Deliver(Delivery {
+                consumer_tag: "ct-s".into(),
+                delivery_tag: 8,
+                redelivered: false,
+                exchange: "".into(),
+                routing_key: "events.log".into(),
+                body: Bytes::encode(&Value::str("entry")),
+                props: MessageProps::default().into(),
+                offset: Some(4096),
             }),
             ServerMsg::DeliverBatch(
                 (0..3)
@@ -931,6 +1059,7 @@ mod tests {
                             ..Default::default()
                         }
                         .into(),
+                        offset: None,
                     })
                     .collect(),
             ),
@@ -988,6 +1117,7 @@ mod tests {
                     routing_key: "q".into(),
                     body: Bytes::encode(&Value::Bytes(vec![i as u8; 256])),
                     props: MessageProps::default().into(),
+                    offset: None,
                 })
                 .collect(),
         );
@@ -1022,6 +1152,7 @@ mod tests {
                     routing_key: "proc.42.done".into(),
                     body: Bytes::encode(&Value::I64(i as i64)),
                     props: MessageProps::default().into(),
+                    offset: None,
                 })
                 .collect(),
         );

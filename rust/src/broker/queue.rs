@@ -1,15 +1,20 @@
 //! A single message queue: priority-laned ready list, unacked in-flight
-//! tracking, consumer round-robin with prefetch accounting, TTL expiry.
+//! tracking, consumer round-robin with prefetch accounting, TTL expiry —
+//! or, for `stream` queues, an append-only log with cursor-based consumer
+//! groups and replay (see [`StreamState`]).
 //!
-//! This module is pure data structure — no locks, no I/O — which is what
-//! makes it property-testable. The [`super::shard`] module wraps a shard
-//! lock around a subset of `Queue`s; [`super::core`] composes the shards.
+//! The work-queue model is pure data structure — no locks, no I/O — which
+//! is what makes it property-testable. Stream queues own their
+//! [`StreamStore`] (segment-file appends/reads under the shard lock, a
+//! leaf I/O like WAL appends — never re-entering another lock). The
+//! [`super::shard`] module wraps a shard lock around a subset of `Queue`s;
+//! [`super::core`] composes the shards.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::broker::persistence::BodyLocator;
+use crate::broker::persistence::{BodyLocator, RecoveredStream, StreamStore};
 use crate::broker::protocol::{EncodedProps, OverflowPolicy, QueueOptions};
 use crate::wire::{Bytes, Value};
 
@@ -177,6 +182,457 @@ pub struct Assignment {
     pub connection: u64,
     pub delivery_tag: u64,
     pub message: QueuedMessage,
+    /// Stream queues only: the entry's log offset (rides the wire so the
+    /// consumer can commit it). `None` for work-queue deliveries.
+    pub offset: Option<u64>,
+}
+
+/// How many recently-touched entry bodies a stream keeps resident in
+/// memory. Publishes keep the hot tail warm; replay readers page older
+/// bodies back in through this same bounded window. Everything else lives
+/// only in the segment files — this is what keeps broker RSS flat under
+/// 100 replaying readers.
+const STREAM_RESIDENT_WINDOW: usize = 64;
+
+/// One entry of a stream's in-memory index. The body is behind the same
+/// refcounted [`Bytes`] as work-queue messages (delivery to N groups is N
+/// refcount bumps), and is dropped to empty once the entry falls out of
+/// the resident window — `locator` then points at the byte-identical copy
+/// in the segment file. `locator == None` means the stream has no store
+/// (memory-only); such bodies are never evicted.
+#[derive(Clone, Debug)]
+struct StreamEntry {
+    offset: u64,
+    msg_id: u64,
+    exchange: Arc<str>,
+    routing_key: Arc<str>,
+    body: Bytes,
+    props: EncodedProps,
+    locator: Option<BodyLocator>,
+}
+
+/// A stream delivery awaiting ack, tracked per delivery tag.
+#[derive(Clone, Debug)]
+struct StreamInFlight {
+    offset: u64,
+    consumer_tag: String,
+    connection: u64,
+}
+
+/// One consumer group's cursor over the log. Offsets below `committed`
+/// are consumed; `cursor` is the next never-delivered offset; the gap in
+/// between is in flight (`unacked`), acked out of order (`acked`) or
+/// awaiting redelivery (`redeliver`). Members share the group's work by
+/// partition: offset `o` always goes to member `(o % partitions) % len`.
+struct StreamGroup {
+    committed: u64,
+    cursor: u64,
+    /// Offsets acked ahead of `committed` (out-of-order acks); drained
+    /// into `committed` as the contiguous prefix closes.
+    acked: BTreeSet<u64>,
+    /// Offsets whose delivery failed (nack-requeue, consumer death) —
+    /// served before `cursor`, smallest first.
+    redeliver: BTreeSet<u64>,
+    unacked: HashMap<u64, StreamInFlight>,
+    members: Vec<Consumer>,
+}
+
+impl StreamGroup {
+    fn new(start: u64) -> Self {
+        StreamGroup {
+            committed: start,
+            cursor: start,
+            acked: BTreeSet::new(),
+            redeliver: BTreeSet::new(),
+            unacked: HashMap::new(),
+            members: Vec::new(),
+        }
+    }
+
+    /// Reposition the group at `offset` (replay or skip-ahead). In-flight
+    /// deliveries stay ackable; per-offset state below/above the new
+    /// position is meaningless and cleared.
+    fn seek(&mut self, offset: u64) {
+        self.committed = offset;
+        self.cursor = offset;
+        self.acked.clear();
+        self.redeliver.clear();
+    }
+}
+
+/// The log state of a `stream` queue: a contiguous window of entries
+/// (`entries[i].offset == base_offset + i` — retention truncates the
+/// front, publish appends at the back), the consumer groups reading it,
+/// and the backing [`StreamStore`].
+pub struct StreamState {
+    entries: VecDeque<StreamEntry>,
+    /// Offset of `entries[0]` (== `next_offset` when empty).
+    base_offset: u64,
+    /// Offset the next publish takes.
+    next_offset: u64,
+    partitions: u32,
+    /// `BTreeMap` for deterministic group iteration order in assignment.
+    groups: BTreeMap<String, StreamGroup>,
+    /// Delivery tag → owning group name (acks don't carry the group).
+    tag_index: HashMap<u64, String>,
+    /// Offsets whose body is currently resident, oldest-touched first —
+    /// the eviction ring bounding memory to [`STREAM_RESIDENT_WINDOW`].
+    resident: VecDeque<u64>,
+    resident_bytes: u64,
+    store: Option<StreamStore>,
+}
+
+impl StreamState {
+    fn new(partitions: u32) -> Self {
+        StreamState {
+            entries: VecDeque::new(),
+            base_offset: 0,
+            next_offset: 0,
+            partitions: partitions.max(1),
+            groups: BTreeMap::new(),
+            tag_index: HashMap::new(),
+            resident: VecDeque::new(),
+            resident_bytes: 0,
+            store: None,
+        }
+    }
+
+    /// Append one entry to the log. Store failures degrade the entry to
+    /// memory-only (locator `None`, body pinned resident) — an entry is
+    /// never lost to an I/O error, it just can't be evicted or replayed
+    /// across restart.
+    fn publish(&mut self, msg: QueuedMessage) {
+        let offset = self.next_offset;
+        self.next_offset += 1;
+        let locator = match self.store.as_mut() {
+            Some(store) => match store.append(offset, &msg) {
+                Ok(loc) => Some(loc),
+                Err(e) => {
+                    log::error!("stream: append of offset {offset} failed, entry pinned in memory: {e}");
+                    None
+                }
+            },
+            None => None,
+        };
+        self.resident_bytes += msg.body.len() as u64;
+        if locator.is_some() {
+            self.resident.push_back(offset);
+        }
+        self.entries.push_back(StreamEntry {
+            offset,
+            msg_id: msg.msg_id,
+            exchange: msg.exchange,
+            routing_key: msg.routing_key,
+            body: msg.body,
+            props: msg.props,
+            locator,
+        });
+        self.evict_overflow();
+    }
+
+    /// Shrink the resident window back to its bound by dropping the
+    /// oldest-touched bodies (a refcount decrement — in-flight deliveries
+    /// keep their clones alive).
+    fn evict_overflow(&mut self) {
+        while self.resident.len() > STREAM_RESIDENT_WINDOW {
+            let off = self.resident.pop_front().unwrap();
+            if off < self.base_offset {
+                continue;
+            }
+            let i = (off - self.base_offset) as usize;
+            if let Some(e) = self.entries.get_mut(i) {
+                if e.locator.is_some() && !e.body.is_empty() {
+                    self.resident_bytes = self.resident_bytes.saturating_sub(e.body.len() as u64);
+                    e.body = Bytes::new();
+                }
+            }
+        }
+    }
+
+    /// Make the entry at `offset` deliverable: page its body back in from
+    /// the store if it was evicted. `false` means it cannot be delivered
+    /// right now (truncated away, or the disk read failed — the group
+    /// stalls rather than receiving an empty body).
+    fn ensure_resident(&mut self, offset: u64) -> bool {
+        if offset < self.base_offset {
+            return false;
+        }
+        let i = (offset - self.base_offset) as usize;
+        let Some(entry) = self.entries.get(i) else { return false };
+        if !entry.body.is_empty() || entry.locator.is_none() {
+            return true;
+        }
+        let loc = entry.locator.unwrap();
+        if loc.len == 0 {
+            return true;
+        }
+        let Some(store) = self.store.as_mut() else { return false };
+        match store.read_body(loc) {
+            Ok(body) => {
+                self.resident_bytes += body.len() as u64;
+                self.entries[i].body = body;
+                self.resident.push_back(offset);
+                self.evict_overflow();
+                true
+            }
+            Err(e) => {
+                log::error!("stream: body read at offset {offset} failed: {e}");
+                false
+            }
+        }
+    }
+
+    /// Assign ready offsets to group members, partition-ordered: offset
+    /// `o` goes to member `(o % partitions) % members`, redeliveries
+    /// first. When the partition owner is at capacity (or its connection
+    /// is paused) the whole group waits — handing the offset to another
+    /// member would break per-partition ordering.
+    fn assign(
+        &mut self,
+        limit: usize,
+        next_tag: &mut impl FnMut() -> u64,
+        conn_ready: &impl Fn(u64) -> bool,
+    ) -> Vec<Assignment> {
+        enum Pick {
+            Deliver(u64, bool, usize),
+            /// Offset fell behind retention — drop it and retry.
+            Skip(u64, bool),
+            Stall,
+            Drained,
+        }
+        let mut out = Vec::new();
+        let gnames: Vec<String> = self.groups.keys().cloned().collect();
+        'groups: for gname in gnames {
+            loop {
+                if out.len() >= limit {
+                    break 'groups;
+                }
+                let pick = {
+                    let g = self.groups.get(&gname).unwrap();
+                    if g.members.is_empty() {
+                        Pick::Drained
+                    } else {
+                        let next = match g.redeliver.iter().next().copied() {
+                            Some(o) => Some((o, true)),
+                            None if g.cursor < self.next_offset => Some((g.cursor, false)),
+                            None => None,
+                        };
+                        match next {
+                            None => Pick::Drained,
+                            Some((offset, redelivered)) => {
+                                if offset < self.base_offset {
+                                    Pick::Skip(offset, redelivered)
+                                } else {
+                                    let part =
+                                        (offset % u64::from(self.partitions)) as usize;
+                                    let idx = part % g.members.len();
+                                    let m = &g.members[idx];
+                                    if m.has_capacity() && conn_ready(m.connection) {
+                                        Pick::Deliver(offset, redelivered, idx)
+                                    } else {
+                                        Pick::Stall
+                                    }
+                                }
+                            }
+                        }
+                    }
+                };
+                match pick {
+                    Pick::Drained => break,
+                    Pick::Stall => break,
+                    Pick::Skip(offset, redelivered) => {
+                        let g = self.groups.get_mut(&gname).unwrap();
+                        if redelivered {
+                            g.redeliver.remove(&offset);
+                        } else {
+                            g.cursor = self.base_offset;
+                            g.committed = g.committed.max(self.base_offset);
+                        }
+                        continue;
+                    }
+                    Pick::Deliver(offset, redelivered, member_idx) => {
+                        if !self.ensure_resident(offset) {
+                            break;
+                        }
+                        let e = &self.entries[(offset - self.base_offset) as usize];
+                        let (msg_id, exchange, routing_key, body, props) = (
+                            e.msg_id,
+                            Arc::clone(&e.exchange),
+                            Arc::clone(&e.routing_key),
+                            e.body.clone(),
+                            e.props.clone(),
+                        );
+                        let tag = next_tag();
+                        let g = self.groups.get_mut(&gname).unwrap();
+                        let m = &mut g.members[member_idx];
+                        m.in_flight += 1;
+                        let (consumer_tag, connection) =
+                            (m.consumer_tag.clone(), m.connection);
+                        // A replay below the committed watermark is by
+                        // definition a redelivery to this group.
+                        let was_consumed = offset < g.committed;
+                        if redelivered {
+                            g.redeliver.remove(&offset);
+                        } else {
+                            g.cursor = offset + 1;
+                        }
+                        g.unacked.insert(
+                            tag,
+                            StreamInFlight {
+                                offset,
+                                consumer_tag: consumer_tag.clone(),
+                                connection,
+                            },
+                        );
+                        self.tag_index.insert(tag, gname.clone());
+                        out.push(Assignment {
+                            consumer_tag,
+                            connection,
+                            delivery_tag: tag,
+                            message: QueuedMessage {
+                                msg_id,
+                                exchange,
+                                routing_key,
+                                body,
+                                props,
+                                deadline: None,
+                                redelivered: redelivered || was_consumed,
+                                delivery_count: if redelivered { 2 } else { 1 },
+                                stored: None,
+                                paged: None,
+                            },
+                            offset: Some(offset),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Ack a stream delivery: advances the group's committed watermark
+    /// over the now-contiguous acked prefix (out-of-order acks park in
+    /// `acked` until the gap closes). Returns the entry's msg id.
+    fn ack(&mut self, tag: u64) -> Option<u64> {
+        let gname = self.tag_index.remove(&tag)?;
+        let (offset, advanced_to) = {
+            let g = self.groups.get_mut(&gname)?;
+            let inflight = g.unacked.remove(&tag)?;
+            if let Some(m) =
+                g.members.iter_mut().find(|m| m.consumer_tag == inflight.consumer_tag)
+            {
+                m.in_flight = m.in_flight.saturating_sub(1);
+            }
+            let mut advanced = None;
+            // Acks at already-committed offsets (post-seek replay) must
+            // not park in `acked` — they would never drain.
+            if inflight.offset >= g.committed {
+                g.acked.insert(inflight.offset);
+                let before = g.committed;
+                while g.acked.remove(&g.committed) {
+                    g.committed += 1;
+                }
+                if g.committed != before {
+                    advanced = Some(g.committed);
+                }
+            }
+            (inflight.offset, advanced)
+        };
+        if let Some(committed) = advanced_to {
+            if let Some(store) = self.store.as_mut() {
+                if let Err(e) = store.record_commit(&gname, committed) {
+                    log::error!("stream: commit record for group {gname:?} failed: {e}");
+                }
+            }
+        }
+        Some(self.msg_id_at(offset))
+    }
+
+    /// Return an in-flight offset to its group's redelivery set (nack
+    /// with requeue, failed send, consumer death). Returns the msg id.
+    fn requeue(&mut self, tag: u64) -> Option<u64> {
+        let gname = self.tag_index.remove(&tag)?;
+        let offset = {
+            let g = self.groups.get_mut(&gname)?;
+            let inflight = g.unacked.remove(&tag)?;
+            if let Some(m) =
+                g.members.iter_mut().find(|m| m.consumer_tag == inflight.consumer_tag)
+            {
+                m.in_flight = m.in_flight.saturating_sub(1);
+            }
+            if inflight.offset >= g.committed {
+                g.redeliver.insert(inflight.offset);
+            }
+            inflight.offset
+        };
+        Some(self.msg_id_at(offset))
+    }
+
+    fn msg_id_at(&self, offset: u64) -> u64 {
+        if offset < self.base_offset {
+            return 0;
+        }
+        self.entries.get((offset - self.base_offset) as usize).map_or(0, |e| e.msg_id)
+    }
+
+    /// Remove a connection's members from every group and return its dead
+    /// delivery tags plus how many offsets went back for redelivery.
+    fn drop_connection(&mut self, connection: u64) -> (Vec<u64>, u64) {
+        let mut dead_tags = Vec::new();
+        let mut requeued = 0u64;
+        for g in self.groups.values_mut() {
+            let tags: Vec<u64> = g
+                .unacked
+                .iter()
+                .filter(|(_, f)| f.connection == connection)
+                .map(|(t, _)| *t)
+                .collect();
+            for t in tags {
+                if let Some(f) = g.unacked.remove(&t) {
+                    if f.offset >= g.committed {
+                        g.redeliver.insert(f.offset);
+                        requeued += 1;
+                    }
+                }
+                dead_tags.push(t);
+            }
+            // Surviving members re-cover the dead one's partitions on the
+            // next assignment round — `(o % partitions) % members` shifts
+            // with the member count; no explicit rebalance step needed.
+            g.members.retain(|m| m.connection != connection);
+        }
+        for t in &dead_tags {
+            self.tag_index.remove(t);
+        }
+        (dead_tags, requeued)
+    }
+
+    /// Drop every entry below `new_base` (retention/purge). Group cursors
+    /// and per-offset state clamp forward; in-flight deliveries at
+    /// truncated offsets stay ackable (their body clone is alive).
+    fn truncate_to(&mut self, new_base: u64) {
+        while self.base_offset < new_base {
+            match self.entries.pop_front() {
+                Some(e) => {
+                    self.resident_bytes =
+                        self.resident_bytes.saturating_sub(e.body.len() as u64);
+                    self.base_offset += 1;
+                }
+                None => {
+                    self.base_offset = new_base;
+                    break;
+                }
+            }
+        }
+        let base = self.base_offset;
+        self.resident.retain(|o| *o >= base);
+        for g in self.groups.values_mut() {
+            g.committed = g.committed.max(base);
+            g.cursor = g.cursor.max(g.committed);
+            g.acked = g.acked.split_off(&base);
+            g.redeliver = g.redeliver.split_off(&base);
+        }
+    }
 }
 
 /// The queue itself.
@@ -224,10 +680,14 @@ pub struct Queue {
     /// Expired messages encountered during assignment, buffered for the
     /// core to dead-letter / retire (see `drain_expired`).
     expired_buf: Vec<QueuedMessage>,
+    /// `Some` iff `options.stream`: the append-only log replacing the
+    /// ready/unacked machinery above (which stays empty for streams).
+    stream: Option<StreamState>,
 }
 
 impl Queue {
     pub fn new(name: impl Into<Arc<str>>, options: QueueOptions, owner: Option<u64>) -> Self {
+        let stream = options.stream.then(|| StreamState::new(options.partitions));
         Queue {
             name: name.into(),
             options,
@@ -252,6 +712,7 @@ impl Queue {
             dropped_overflow: 0,
             dead_lettered: 0,
             expired_buf: Vec::new(),
+            stream,
         }
     }
 
@@ -260,21 +721,42 @@ impl Queue {
     }
 
     pub fn unacked_len(&self) -> usize {
-        self.unacked.len()
+        match &self.stream {
+            Some(s) => s.groups.values().map(|g| g.unacked.len()).sum(),
+            None => self.unacked.len(),
+        }
     }
 
     pub fn consumer_count(&self) -> usize {
-        self.consumers.len()
+        match &self.stream {
+            Some(s) => s.groups.values().map(|g| g.members.len()).sum(),
+            None => self.consumers.len(),
+        }
     }
 
     pub fn has_consumer(&self, tag: &str) -> bool {
-        self.consumers.iter().any(|c| c.consumer_tag == tag)
+        match &self.stream {
+            Some(s) => {
+                s.groups.values().any(|g| g.members.iter().any(|c| c.consumer_tag == tag))
+            }
+            None => self.consumers.iter().any(|c| c.consumer_tag == tag),
+        }
     }
 
     /// The attached consumers (the core uses this to notify owners when a
-    /// queue is deleted out from under them).
+    /// queue is deleted out from under them). Work-queue consumers only —
+    /// see [`Queue::all_consumers`] for a view that includes stream group
+    /// members.
     pub fn consumers(&self) -> &[Consumer] {
         &self.consumers
+    }
+
+    /// Every attached consumer, including stream group members.
+    pub fn all_consumers(&self) -> Vec<Consumer> {
+        match &self.stream {
+            Some(s) => s.groups.values().flat_map(|g| g.members.iter().cloned()).collect(),
+            None => self.consumers.clone(),
+        }
     }
 
     /// Enqueue a message. Applies the queue default TTL when the message
@@ -284,6 +766,15 @@ impl Queue {
     /// outcome so the core can dead-letter (or retire) them — nothing is
     /// silently dropped here.
     pub fn publish(&mut self, mut msg: QueuedMessage, now: Instant) -> PublishOutcome {
+        if let Some(s) = self.stream.as_mut() {
+            // Streams are append-only: no TTL expiry, no max_length
+            // overflow, no dead-lettering — entries leave only by whole-
+            // segment retention. Every publish is accepted.
+            msg.deadline = None;
+            s.publish(msg);
+            self.published += 1;
+            return PublishOutcome { accepted: true, dead: Vec::new() };
+        }
         if msg.deadline.is_none() {
             let ttl = msg.props.expiration_ms.or(self.options.default_ttl_ms);
             msg.deadline =
@@ -395,16 +886,67 @@ impl Queue {
     }
 
     /// Register a consumer. Fails (returns false) if the tag is taken.
+    /// Work queues only — stream readers attach through
+    /// [`Queue::add_stream_member`] (the core rejects a plain `Consume`
+    /// on a stream queue).
     pub fn add_consumer(&mut self, consumer: Consumer) -> bool {
-        if self.has_consumer(&consumer.consumer_tag) {
+        if self.stream.is_some() || self.has_consumer(&consumer.consumer_tag) {
             return false;
         }
         self.consumers.push(consumer);
         true
     }
 
-    /// Remove a consumer by tag. Returns true if it existed.
+    /// Attach a consumer to a stream group (created on first attach at
+    /// the stream's tail). A `seek` offset repositions the group — only
+    /// honored while the group has no other members, so one attach can't
+    /// yank the cursor out from under live readers. Fails (returns false)
+    /// on non-stream queues or a taken tag.
+    pub fn add_stream_member(
+        &mut self,
+        group: &str,
+        consumer: Consumer,
+        seek: Option<u64>,
+    ) -> bool {
+        if self.has_consumer(&consumer.consumer_tag) {
+            return false;
+        }
+        let Some(s) = self.stream.as_mut() else { return false };
+        let next = s.next_offset;
+        let g = s
+            .groups
+            .entry(group.to_string())
+            .or_insert_with(|| StreamGroup::new(seek.unwrap_or(next)));
+        if g.members.is_empty() {
+            if let Some(o) = seek {
+                g.seek(o);
+            }
+        }
+        g.members.push(consumer);
+        let committed = g.committed;
+        if let Some(store) = s.store.as_mut() {
+            // Persist the (possibly seeked) position so recovery resumes
+            // the group from here.
+            if let Err(e) = store.record_commit(group, committed) {
+                log::error!("stream: commit record for group {group:?} failed: {e}");
+            }
+        }
+        true
+    }
+
+    /// Remove a consumer by tag. Returns true if it existed. For streams,
+    /// in-flight deliveries stay ackable (like work-queue cancel);
+    /// connection death eventually redelivers anything left.
     pub fn remove_consumer(&mut self, tag: &str) -> bool {
+        if let Some(s) = self.stream.as_mut() {
+            let mut removed = false;
+            for g in s.groups.values_mut() {
+                let before = g.members.len();
+                g.members.retain(|c| c.consumer_tag != tag);
+                removed |= g.members.len() != before;
+            }
+            return removed;
+        }
         let before = self.consumers.len();
         self.consumers.retain(|c| c.consumer_tag != tag);
         if self.rr_cursor >= self.consumers.len() {
@@ -417,6 +959,15 @@ impl Queue {
     /// rollback paths so they cannot tear down a same-tag consumer that a
     /// different (live) connection registered in the meantime.
     pub fn remove_consumer_of(&mut self, tag: &str, connection: u64) -> bool {
+        if let Some(s) = self.stream.as_mut() {
+            let mut removed = false;
+            for g in s.groups.values_mut() {
+                let before = g.members.len();
+                g.members.retain(|c| !(c.consumer_tag == tag && c.connection == connection));
+                removed |= g.members.len() != before;
+            }
+            return removed;
+        }
         let before = self.consumers.len();
         self.consumers.retain(|c| !(c.consumer_tag == tag && c.connection == connection));
         if self.rr_cursor >= self.consumers.len() {
@@ -460,6 +1011,13 @@ impl Queue {
         mut next_tag: impl FnMut() -> u64,
         conn_ready: impl Fn(u64) -> bool,
     ) -> Vec<Assignment> {
+        if let Some(s) = self.stream.as_mut() {
+            // Offset-based assignment: nothing is popped — each group
+            // walks its own cursor over the shared log.
+            let out = s.assign(limit, &mut next_tag, &conn_ready);
+            self.delivered += out.len() as u64;
+            return out;
+        }
         let mut out = Vec::new();
         if self.consumers.is_empty() || limit == 0 {
             return out;
@@ -517,6 +1075,7 @@ impl Queue {
                 connection: consumer.connection,
                 delivery_tag: tag,
                 message: msg,
+                offset: None,
             });
         }
         out
@@ -525,6 +1084,11 @@ impl Queue {
     /// Acknowledge a delivery. Returns the message id for WAL retirement,
     /// or None if the tag is unknown (double-ack is idempotent).
     pub fn ack(&mut self, delivery_tag: u64) -> Option<u64> {
+        if let Some(s) = self.stream.as_mut() {
+            let msg_id = s.ack(delivery_tag)?;
+            self.acked += 1;
+            return Some(msg_id);
+        }
         let inflight = self.unacked.remove(&delivery_tag)?;
         if let Some(c) =
             self.consumers.iter_mut().find(|c| c.consumer_tag == inflight.consumer_tag)
@@ -540,6 +1104,30 @@ impl Queue {
     /// marked redelivered; otherwise it leaves the queue dead — the core
     /// routes it to the queue's DLX or retires it.
     pub fn nack(&mut self, delivery_tag: u64, requeue: bool) -> NackOutcome {
+        if let Some(s) = self.stream.as_mut() {
+            // The log is immutable: a rejected entry cannot leave it (it
+            // stays readable by every other group), so reject just marks
+            // it consumed for this group. Either way the outcome is
+            // `Requeued` — streams never feed the dead-letter pipeline,
+            // and the core skips WAL requeue records for them.
+            return if requeue {
+                match s.requeue(delivery_tag) {
+                    Some(msg_id) => {
+                        self.requeued += 1;
+                        NackOutcome::Requeued { msg_id, delivery_count: 1 }
+                    }
+                    None => NackOutcome::Unknown,
+                }
+            } else {
+                match s.ack(delivery_tag) {
+                    Some(msg_id) => {
+                        self.acked += 1;
+                        NackOutcome::Requeued { msg_id, delivery_count: 1 }
+                    }
+                    None => NackOutcome::Unknown,
+                }
+            };
+        }
         let Some(inflight) = self.unacked.remove(&delivery_tag) else {
             return NackOutcome::Unknown;
         };
@@ -572,6 +1160,13 @@ impl Queue {
     /// dead-letters: a failed send is the broker's fault, not the
     /// message's.
     pub fn requeue_undelivered(&mut self, delivery_tag: u64) -> bool {
+        if let Some(s) = self.stream.as_mut() {
+            if s.requeue(delivery_tag).is_some() {
+                self.requeued += 1;
+                return true;
+            }
+            return false;
+        }
         let Some(inflight) = self.unacked.remove(&delivery_tag) else { return false };
         if let Some(c) =
             self.consumers.iter_mut().find(|c| c.consumer_tag == inflight.consumer_tag)
@@ -602,6 +1197,15 @@ impl Queue {
     /// `m1, m2, m3` comes back as `m1, m2, m3` — redelivery preserves the
     /// original FIFO order.
     pub fn drop_connection(&mut self, connection: u64) -> DropOutcome {
+        if let Some(s) = self.stream.as_mut() {
+            // Offsets go back to their group's redelivery set; surviving
+            // members re-cover the dead member's partitions on the next
+            // assignment round. Nothing can dead-letter (the log is
+            // immutable) and the WAL holds no per-stream requeue state.
+            let (dead_tags, requeued) = s.drop_connection(connection);
+            self.requeued += requeued;
+            return DropOutcome { dead_tags, dead: Vec::new(), requeued: Vec::new() };
+        }
         let mut tags: Vec<u64> = self
             .unacked
             .iter()
@@ -639,6 +1243,19 @@ impl Queue {
     /// paired with the paged-body locator of any evicted message (the
     /// caller releases spill-file space for those).
     pub fn purge(&mut self) -> Vec<(u64, Option<BodyLocator>)> {
+        if let Some(s) = self.stream.as_mut() {
+            // Stream entries never had WAL publish records or spill-file
+            // space, so there is nothing for the core to retire/release —
+            // the store drops its own segments.
+            let next = s.next_offset;
+            s.truncate_to(next);
+            if let Some(store) = s.store.as_mut() {
+                if let Err(e) = store.purge(next) {
+                    log::error!("stream: purge of segment files failed: {e}");
+                }
+            }
+            return Vec::new();
+        }
         let mut ids = Vec::with_capacity(self.ready_count);
         for lane in &mut self.ready {
             for m in lane.drain(..) {
@@ -864,9 +1481,136 @@ impl Queue {
         v
     }
 
+    // --- Stream queue API (no-ops / `None` on work queues) ---
+
+    /// True when this queue is a `stream` (append-only log) queue.
+    pub fn is_stream(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// Offset the next stream publish will take.
+    pub fn stream_next_offset(&self) -> u64 {
+        self.stream.as_ref().map_or(0, |s| s.next_offset)
+    }
+
+    /// Oldest offset retention still holds.
+    pub fn stream_base_offset(&self) -> u64 {
+        self.stream.as_ref().map_or(0, |s| s.base_offset)
+    }
+
+    /// A group's committed watermark (offsets below it are consumed).
+    pub fn stream_group_committed(&self, group: &str) -> Option<u64> {
+        self.stream.as_ref()?.groups.get(group).map(|g| g.committed)
+    }
+
+    /// Entry body bytes currently resident in memory (bounded by the
+    /// resident window whenever a store is attached).
+    pub fn stream_resident_bytes(&self) -> u64 {
+        self.stream.as_ref().map_or(0, |s| s.resident_bytes)
+    }
+
+    /// Bytes the stream's segment files occupy on disk.
+    pub fn stream_disk_bytes(&self) -> u64 {
+        self.stream
+            .as_ref()
+            .and_then(|s| s.store.as_ref())
+            .map_or(0, |store| store.disk_bytes())
+    }
+
+    /// Commit a group's position through `offset` (inclusive) — the
+    /// explicit `StreamCommit` frame. A backward offset is a seek: the
+    /// group replays from there. Returns false if the queue is not a
+    /// stream or the group does not exist.
+    pub fn stream_commit(&mut self, group: &str, offset: u64) -> bool {
+        let Some(s) = self.stream.as_mut() else { return false };
+        let Some(g) = s.groups.get_mut(group) else { return false };
+        let target = offset.saturating_add(1);
+        if target >= g.committed {
+            g.committed = target;
+            g.cursor = g.cursor.max(target);
+            g.acked = g.acked.split_off(&target);
+            g.redeliver = g.redeliver.split_off(&target);
+        } else {
+            g.seek(target);
+        }
+        let committed = g.committed;
+        if let Some(store) = s.store.as_mut() {
+            if let Err(e) = store.record_commit(group, committed) {
+                log::error!("stream: commit record for group {group:?} failed: {e}");
+            }
+        }
+        true
+    }
+
+    /// Apply segment retention (periodic sweep). Returns how many entries
+    /// were truncated from the front of the log.
+    pub fn stream_retain(&mut self) -> usize {
+        let Some(s) = self.stream.as_mut() else { return 0 };
+        let Some(store) = s.store.as_mut() else { return 0 };
+        match store.retain() {
+            Ok(Some(new_base)) => {
+                let old = s.base_offset;
+                s.truncate_to(new_base);
+                new_base.saturating_sub(old) as usize
+            }
+            Ok(None) => 0,
+            Err(e) => {
+                log::error!("stream: retention sweep failed: {e}");
+                0
+            }
+        }
+    }
+
+    /// Attach the backing store after recovery: rebuilds the entry index
+    /// (bodies left on disk) and restores each group at its committed
+    /// offset. Replaces any previous store/state.
+    pub fn attach_stream_store(&mut self, store: StreamStore, recovered: RecoveredStream) {
+        let Some(s) = self.stream.as_mut() else { return };
+        s.entries.clear();
+        s.resident.clear();
+        s.resident_bytes = 0;
+        s.base_offset = recovered.base_offset;
+        s.next_offset = recovered.next_offset;
+        // Intern repeated exchange/routing-key names: replayed entries
+        // overwhelmingly share them with their predecessor.
+        let mut last_ex: Option<Arc<str>> = None;
+        let mut last_rk: Option<Arc<str>> = None;
+        for e in recovered.entries {
+            let exchange = match &last_ex {
+                Some(a) if **a == *e.exchange => Arc::clone(a),
+                _ => {
+                    let a: Arc<str> = e.exchange.into();
+                    last_ex = Some(Arc::clone(&a));
+                    a
+                }
+            };
+            let routing_key = match &last_rk {
+                Some(a) if **a == *e.routing_key => Arc::clone(a),
+                _ => {
+                    let a: Arc<str> = e.routing_key.into();
+                    last_rk = Some(Arc::clone(&a));
+                    a
+                }
+            };
+            s.entries.push_back(StreamEntry {
+                offset: e.offset,
+                msg_id: e.msg_id,
+                exchange,
+                routing_key,
+                body: Bytes::new(),
+                props: e.props,
+                locator: Some(e.locator),
+            });
+        }
+        for (gname, committed) in recovered.commits {
+            s.groups.insert(gname, StreamGroup::new(committed.min(recovered.next_offset)));
+        }
+        s.store = Some(store);
+    }
+
     /// Queue statistics as a wire value (answering `Status` requests).
     pub fn stats(&self) -> Value {
-        Value::map([
+        let mut pairs = vec![
             ("ready", Value::from(self.ready_len())),
             ("unacked", Value::from(self.unacked_len())),
             ("paged", Value::from(self.paged_len())),
@@ -880,7 +1624,14 @@ impl Queue {
             ("expired", Value::from(self.expired)),
             ("dropped_overflow", Value::from(self.dropped_overflow)),
             ("dead_lettered", Value::from(self.dead_lettered)),
-        ])
+        ];
+        if let Some(s) = &self.stream {
+            pairs.push(("stream_next_offset", Value::from(s.next_offset)));
+            pairs.push(("stream_base_offset", Value::from(s.base_offset)));
+            pairs.push(("stream_groups", Value::from(s.groups.len())));
+            pairs.push(("stream_bytes_resident", Value::from(s.resident_bytes)));
+        }
+        Value::map(pairs)
     }
 }
 
@@ -1576,6 +2327,209 @@ mod tests {
                 assert_eq!(q.unacked_len(), outstanding.len());
             }
         });
+    }
+
+    fn stream_queue(partitions: u32) -> Queue {
+        Queue::new(
+            "s",
+            QueueOptions { stream: true, partitions, ..Default::default() },
+            None,
+        )
+    }
+
+    #[test]
+    fn stream_exactly_one_member_per_group_by_partition() {
+        let mut q = stream_queue(3);
+        let now = Instant::now();
+        for i in 0..9 {
+            put(&mut q, msg(i, 0), now);
+        }
+        q.add_stream_member("g", consumer("m0", 1, 0), Some(0));
+        q.add_stream_member("g", consumer("m1", 2, 0), None);
+        q.add_stream_member("g", consumer("m2", 3, 0), None);
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 9, "every entry delivered exactly once to the group");
+        for x in &a {
+            let offset = x.offset.expect("stream deliveries carry offsets");
+            // Partition assignment: offset % partitions picks the member.
+            let expect = format!("m{}", offset % 3);
+            assert_eq!(x.consumer_tag, expect, "offset {offset} on the wrong member");
+        }
+        let mut offsets: Vec<u64> = a.iter().filter_map(|x| x.offset).collect();
+        offsets.sort_unstable();
+        assert_eq!(offsets, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stream_groups_replay_independently() {
+        let mut q = stream_queue(1);
+        let now = Instant::now();
+        for i in 0..5 {
+            put(&mut q, msg(i, 0), now);
+        }
+        q.add_stream_member("a", consumer("ca", 1, 0), Some(0));
+        q.add_stream_member("b", consumer("cb", 2, 0), Some(0));
+        let mut tags = tagger();
+        let x = q.assign(now, &mut tags);
+        assert_eq!(x.len(), 10, "each group reads the full log");
+        assert_eq!(x.iter().filter(|d| d.consumer_tag == "ca").count(), 5);
+        assert_eq!(x.iter().filter(|d| d.consumer_tag == "cb").count(), 5);
+        // Ack group a fully; group b's cursor is untouched.
+        for d in x.iter().filter(|d| d.consumer_tag == "ca") {
+            assert!(q.ack(d.delivery_tag).is_some());
+        }
+        assert_eq!(q.stream_group_committed("a"), Some(5));
+        assert_eq!(q.stream_group_committed("b"), Some(0));
+    }
+
+    #[test]
+    fn stream_new_group_starts_at_tail_seek_rewinds() {
+        let mut q = stream_queue(1);
+        let now = Instant::now();
+        for i in 0..4 {
+            put(&mut q, msg(i, 0), now);
+        }
+        let mut tags = tagger();
+        // Attach without seek: only entries published afterwards arrive.
+        q.add_stream_member("live", consumer("cl", 1, 0), None);
+        assert!(q.assign(now, &mut tags).is_empty());
+        put(&mut q, msg(4, 0), now);
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].offset, Some(4));
+        // Attach with seek 0: full replay from the beginning.
+        q.add_stream_member("replay", consumer("cr", 2, 0), Some(0));
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b.len(), 5, "seek 0 replays the whole log");
+        assert_eq!(b[0].offset, Some(0));
+    }
+
+    #[test]
+    fn stream_connection_death_redelivers_to_survivors() {
+        let mut q = stream_queue(4);
+        let now = Instant::now();
+        for i in 0..8 {
+            put(&mut q, msg(i, 0), now);
+        }
+        // First member seeks the (empty) group to 0; the second joins it.
+        q.add_stream_member("g", consumer("dead", 7, 0), Some(0));
+        q.add_stream_member("g", consumer("alive", 8, 0), None);
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a.len(), 8);
+        let dead_held: Vec<u64> =
+            a.iter().filter(|x| x.connection == 7).filter_map(|x| x.offset).collect();
+        assert!(!dead_held.is_empty());
+        let out = q.drop_connection(7);
+        assert_eq!(out.dead_tags.len(), dead_held.len());
+        assert!(out.dead.is_empty(), "streams never dead-letter");
+        // The survivor picks the offsets back up, marked redelivered.
+        let b = q.assign(now, &mut tags);
+        let mut redelivered: Vec<u64> = b.iter().filter_map(|x| x.offset).collect();
+        redelivered.sort_unstable();
+        let mut expected = dead_held.clone();
+        expected.sort_unstable();
+        assert_eq!(redelivered, expected);
+        assert!(b.iter().all(|x| x.message.redelivered && x.connection == 8));
+    }
+
+    #[test]
+    fn stream_out_of_order_acks_close_the_watermark() {
+        let mut q = stream_queue(1);
+        let now = Instant::now();
+        for i in 0..3 {
+            put(&mut q, msg(i, 0), now);
+        }
+        q.add_stream_member("g", consumer("c", 1, 0), Some(0));
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 3);
+        // Ack 2 then 1: watermark waits for the gap at 0.
+        assert!(q.ack(a[2].delivery_tag).is_some());
+        assert!(q.ack(a[1].delivery_tag).is_some());
+        assert_eq!(q.stream_group_committed("g"), Some(0));
+        // Ack 0: the contiguous prefix closes in one step.
+        assert!(q.ack(a[0].delivery_tag).is_some());
+        assert_eq!(q.stream_group_committed("g"), Some(3));
+    }
+
+    #[test]
+    fn stream_nack_requeues_or_marks_consumed_never_dead() {
+        let mut q = stream_queue(1);
+        let now = Instant::now();
+        put(&mut q, msg(0, 0), now);
+        put(&mut q, msg(1, 0), now);
+        q.add_stream_member("g", consumer("c", 1, 0), Some(0));
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        // Requeue: the offset comes back marked redelivered.
+        assert!(matches!(q.nack(a[0].delivery_tag, true), NackOutcome::Requeued { .. }));
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].offset, Some(0));
+        assert!(b[0].message.redelivered);
+        // Reject: consumed for this group (no dead-letter), watermark moves.
+        assert!(matches!(q.nack(b[0].delivery_tag, false), NackOutcome::Requeued { .. }));
+        assert!(q.ack(a[1].delivery_tag).is_some());
+        assert_eq!(q.stream_group_committed("g"), Some(2));
+        assert_eq!(q.dead_lettered, 0);
+    }
+
+    #[test]
+    fn stream_head_of_line_stall_preserves_partition_order() {
+        let mut q = stream_queue(1);
+        let now = Instant::now();
+        for i in 0..4 {
+            put(&mut q, msg(i, 0), now);
+        }
+        // Single partition, prefetch 1: the owner must ack before the
+        // next offset flows — the group never skips ahead.
+        q.add_stream_member("g", consumer("c", 1, 1), Some(0));
+        q.add_stream_member("g", consumer("idle", 2, 0), None);
+        let mut tags = tagger();
+        let a = q.assign(now, &mut tags);
+        assert_eq!(a.len(), 1, "partition owner at capacity stalls the group");
+        assert_eq!(a[0].consumer_tag, "c");
+        assert!(q.assign(now, &mut tags).is_empty());
+        assert!(q.ack(a[0].delivery_tag).is_some());
+        let b = q.assign(now, &mut tags);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].offset, Some(1));
+    }
+
+    #[test]
+    fn stream_purge_resets_log_and_cursors() {
+        let mut q = stream_queue(1);
+        let now = Instant::now();
+        for i in 0..6 {
+            put(&mut q, msg(i, 0), now);
+        }
+        q.add_stream_member("g", consumer("c", 1, 0), Some(0));
+        assert!(q.purge().is_empty(), "stream purge has nothing for the WAL to retire");
+        assert_eq!(q.stream_base_offset(), 6);
+        assert_eq!(q.stream_next_offset(), 6);
+        assert_eq!(q.stream_group_committed("g"), Some(6), "cursors clamp forward");
+        // Offsets keep counting after a purge; replay sees only new entries.
+        put(&mut q, msg(6, 0), now);
+        let a = q.assign(now, tagger());
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].offset, Some(6));
+    }
+
+    #[test]
+    fn stream_ignores_work_queue_consumers_and_vice_versa() {
+        let mut q = stream_queue(1);
+        assert!(!q.add_consumer(consumer("c", 1, 0)), "plain consume refused on streams");
+        assert!(q.add_stream_member("g", consumer("c", 1, 0), None));
+        assert!(!q.add_stream_member("g2", consumer("c", 2, 0), None), "tag taken");
+        assert!(q.has_consumer("c"));
+        assert_eq!(q.consumer_count(), 1);
+        assert_eq!(q.all_consumers().len(), 1);
+        assert!(q.remove_consumer("c"));
+        assert!(!q.has_consumer("c"));
+        let mut wq = Queue::new("w", QueueOptions::default(), None);
+        assert!(!wq.add_stream_member("g", consumer("c", 1, 0), None));
+        assert!(!wq.stream_commit("g", 0));
+        assert_eq!(wq.stream_retain(), 0);
     }
 
     #[test]

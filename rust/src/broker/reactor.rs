@@ -331,7 +331,14 @@ mod imp {
         }
 
         fn delete(&self, fd: std::os::fd::RawFd) {
-            let _ = sys::epoll_ctl(self.ep.as_raw_fd(), sys::EPOLL_CTL_DEL, fd, None);
+            // Teardown path: the fd is closed right after this call and the
+            // kernel drops the registration with it, so a failed DEL cannot
+            // leak interest. It *can* flag a token/fd mix-up (EBADF/ENOENT
+            // from a double-teardown), which is worth a log line.
+            if let Err(e) = sys::epoll_ctl(self.ep.as_raw_fd(), sys::EPOLL_CTL_DEL, fd, None)
+            {
+                log::debug!("reactor: EPOLL_CTL_DEL({fd}) failed: {e}");
+            }
         }
 
         fn wait(&self, events: &mut [sys::EpollEvent], timeout: Duration) -> io::Result<usize> {
@@ -363,7 +370,17 @@ mod imp {
         }
 
         pub(super) fn ring(&self) {
-            let _ = (&self.pipe).write(&[1u8]);
+            // Per the struct doc, WouldBlock means a wakeup is already
+            // pending and BrokenPipe means the reactor is tearing down —
+            // both safe to drop. Any other error would mean wakeups are
+            // silently lost (stalled deliveries), so surface it.
+            if let Err(e) = (&self.pipe).write(&[1u8]) {
+                if e.kind() != io::ErrorKind::WouldBlock
+                    && e.kind() != io::ErrorKind::BrokenPipe
+                {
+                    log::warn!("reactor: waker ring failed: {e}");
+                }
+            }
         }
 
         fn drain_dirty(&self) -> Vec<u64> {
@@ -776,8 +793,12 @@ mod imp {
                 return;
             }
             // Delivery batches are already coalesced into single writes;
-            // Nagle on top of that only adds latency.
-            let _ = stream.set_nodelay(true);
+            // Nagle on top of that only adds latency. Failure is cosmetic —
+            // the connection works, just with worse latency — so log it
+            // instead of rejecting the accept.
+            if let Err(e) = stream.set_nodelay(true) {
+                log::debug!("reactor: {peer}: set_nodelay failed: {e}");
+            }
             let token = self.next_token;
             self.next_token += 1;
             // Register with epoll *before* creating broker state so a

@@ -42,6 +42,10 @@ SUBCOMMANDS
                                               [--page-out-threshold BYTES (0 = no paging)]
                                               [--page-in-batch N] [--publish-credit N (0 = off)]
                                               [--default-prefetch N (0 = unlimited)]
+                                              [--stream-segment-bytes N]
+                                              [--stream-retention-bytes N (0 = unbounded)]
+                                              [--stream-retention-ms N (0 = unbounded)]
+                                              [--stream-partitions N]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
   ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
@@ -155,6 +159,18 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(n) = args.opt_parse::<u32>("default-prefetch")? {
         config.default_prefetch = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("stream-segment-bytes")? {
+        config.stream_segment_bytes = n.max(1);
+    }
+    if let Some(n) = args.opt_parse::<u64>("stream-retention-bytes")? {
+        config.stream_retention_bytes = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("stream-retention-ms")? {
+        config.stream_retention_ms = n;
+    }
+    if let Some(n) = args.opt_parse::<u32>("stream-partitions")? {
+        config.stream_default_partitions = n.max(1);
     }
     Ok(config)
 }
@@ -362,7 +378,9 @@ mod tests {
              --max-delivery 4 --dead-letter-exchange kiwi.dlx --max-length 100 \
              --overflow reject-new --net threads --event-batch 64 --outbox-cap 4096 \
              --page-out-threshold 1048576 --page-in-batch 8 --publish-credit 128 \
-             --default-prefetch 16",
+             --default-prefetch 16 --stream-segment-bytes 2097152 \
+             --stream-retention-bytes 16777216 --stream-retention-ms 30000 \
+             --stream-partitions 8",
         ))
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
@@ -383,6 +401,10 @@ mod tests {
         assert_eq!(config.page_in_batch, 8);
         assert_eq!(config.publish_credit, 128);
         assert_eq!(config.default_prefetch, 16);
+        assert_eq!(config.stream_segment_bytes, 2_097_152);
+        assert_eq!(config.stream_retention_bytes, 16_777_216);
+        assert_eq!(config.stream_retention_ms, 30_000);
+        assert_eq!(config.stream_default_partitions, 8);
     }
 
     #[test]

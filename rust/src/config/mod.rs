@@ -83,6 +83,14 @@ pub struct Config {
     /// Broker-side prefetch applied to consumers that ask for 0
     /// ("unlimited"); 0 keeps unlimited in-flight, the seed behaviour.
     pub default_prefetch: u32,
+    /// Stream queues: segment roll size in bytes.
+    pub stream_segment_bytes: u64,
+    /// Stream retention by size (bytes; 0 = unbounded).
+    pub stream_retention_bytes: u64,
+    /// Stream retention by age (ms; 0 = unbounded).
+    pub stream_retention_ms: u64,
+    /// Partitions for streams declared with `partitions: 0`.
+    pub stream_default_partitions: u32,
 }
 
 impl Default for Config {
@@ -115,6 +123,11 @@ impl Default for Config {
             page_in_batch: crate::broker::BrokerConfig::default().page_in_batch,
             publish_credit: crate::broker::BrokerConfig::default().publish_credit,
             default_prefetch: crate::broker::BrokerConfig::default().default_prefetch,
+            stream_segment_bytes: crate::broker::BrokerConfig::default().stream_segment_bytes,
+            stream_retention_bytes: crate::broker::BrokerConfig::default().stream_retention_bytes,
+            stream_retention_ms: crate::broker::BrokerConfig::default().stream_retention_ms,
+            stream_default_partitions: crate::broker::BrokerConfig::default()
+                .stream_default_partitions,
         }
     }
 }
@@ -234,6 +247,18 @@ impl Config {
         if let Some(x) = v.get_opt("default_prefetch") {
             c.default_prefetch = x.as_u64()? as u32;
         }
+        if let Some(x) = v.get_opt("stream_segment_bytes") {
+            c.stream_segment_bytes = x.as_u64()?.max(1);
+        }
+        if let Some(x) = v.get_opt("stream_retention_bytes") {
+            c.stream_retention_bytes = x.as_u64()?;
+        }
+        if let Some(x) = v.get_opt("stream_retention_ms") {
+            c.stream_retention_ms = x.as_u64()?;
+        }
+        if let Some(x) = v.get_opt("stream_default_partitions") {
+            c.stream_default_partitions = (x.as_u64()? as u32).max(1);
+        }
         Ok(c)
     }
 
@@ -273,6 +298,13 @@ impl Config {
             ("page_in_batch", Value::from(self.page_in_batch)),
             ("publish_credit", Value::from(u64::from(self.publish_credit))),
             ("default_prefetch", Value::from(u64::from(self.default_prefetch))),
+            ("stream_segment_bytes", Value::from(self.stream_segment_bytes)),
+            ("stream_retention_bytes", Value::from(self.stream_retention_bytes)),
+            ("stream_retention_ms", Value::from(self.stream_retention_ms)),
+            (
+                "stream_default_partitions",
+                Value::from(u64::from(self.stream_default_partitions)),
+            ),
         ])
     }
 
@@ -290,6 +322,10 @@ impl Config {
             page_in_batch: self.page_in_batch.max(1),
             publish_credit: self.publish_credit,
             default_prefetch: self.default_prefetch,
+            stream_segment_bytes: self.stream_segment_bytes.max(1),
+            stream_retention_bytes: self.stream_retention_bytes,
+            stream_retention_ms: self.stream_retention_ms,
+            stream_default_partitions: self.stream_default_partitions.max(1),
         }
     }
 
@@ -356,8 +392,11 @@ impl Config {
     /// `KIWI_WAL_SEGMENTS` (0 = match shards),
     /// `KIWI_WAL_COMMIT_INTERVAL_US`, `KIWI_PAGE_OUT_THRESHOLD`
     /// (bytes; 0 = no paging), `KIWI_PAGE_IN_BATCH`,
-    /// `KIWI_PUBLISH_CREDIT` (0 = no flow control) and
-    /// `KIWI_DEFAULT_PREFETCH` (0 = unlimited) override the file.
+    /// `KIWI_PUBLISH_CREDIT` (0 = no flow control),
+    /// `KIWI_DEFAULT_PREFETCH` (0 = unlimited),
+    /// `KIWI_STREAM_SEGMENT_BYTES`, `KIWI_STREAM_RETENTION_BYTES`
+    /// (0 = unbounded), `KIWI_STREAM_RETENTION_MS` (0 = unbounded) and
+    /// `KIWI_STREAM_PARTITIONS` override the file.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("KIWI_BROKER_ADDR") {
             self.broker_addr = v;
@@ -464,6 +503,26 @@ impl Config {
         if let Ok(v) = std::env::var("KIWI_DEFAULT_PREFETCH") {
             if let Ok(n) = v.parse::<u32>() {
                 self.default_prefetch = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_STREAM_SEGMENT_BYTES") {
+            if let Ok(n) = v.parse::<u64>() {
+                self.stream_segment_bytes = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_STREAM_RETENTION_BYTES") {
+            if let Ok(n) = v.parse::<u64>() {
+                self.stream_retention_bytes = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_STREAM_RETENTION_MS") {
+            if let Ok(n) = v.parse::<u64>() {
+                self.stream_retention_ms = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_STREAM_PARTITIONS") {
+            if let Ok(n) = v.parse::<u32>() {
+                self.stream_default_partitions = n.max(1);
             }
         }
     }
@@ -600,6 +659,40 @@ mod tests {
         assert_eq!(c.max_delivery, None);
         assert_eq!(c.max_length, None);
         assert_eq!(c.dead_letter_exchange, None);
+    }
+
+    #[test]
+    fn stream_knobs_parse_resolve_and_roundtrip() {
+        let v = json::from_str(
+            r#"{"stream_segment_bytes": 1048576, "stream_retention_bytes": 8388608,
+                "stream_retention_ms": 60000, "stream_default_partitions": 4}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.stream_segment_bytes, 1_048_576);
+        assert_eq!(c.stream_retention_bytes, 8_388_608);
+        assert_eq!(c.stream_retention_ms, 60_000);
+        assert_eq!(c.stream_default_partitions, 4);
+        let bc = c.broker_config();
+        assert_eq!(bc.stream_segment_bytes, 1_048_576);
+        assert_eq!(bc.stream_retention_bytes, 8_388_608);
+        assert_eq!(bc.stream_retention_ms, 60_000);
+        assert_eq!(bc.stream_default_partitions, 4);
+        let back = Config::from_value(&json::from_str(&json::to_string(&c.to_value())).unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+        // Retention defaults off (unbounded); degenerate values clamp.
+        let d = Config::default();
+        assert_eq!(d.stream_retention_bytes, 0);
+        assert_eq!(d.stream_retention_ms, 0);
+        assert!(d.stream_default_partitions >= 1);
+        let v = json::from_str(
+            r#"{"stream_segment_bytes": 0, "stream_default_partitions": 0}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.stream_segment_bytes, 1);
+        assert_eq!(c.stream_default_partitions, 1);
     }
 
     #[test]

@@ -4,12 +4,15 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::metrics::{Counter, Registry};
+
 type Job = Box<dyn FnOnce() + Send>;
 
 /// Fixed pool of worker threads fed by a shared queue.
 pub struct WorkerPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    panics: Arc<Counter>,
 }
 
 impl WorkerPool {
@@ -17,22 +20,41 @@ impl WorkerPool {
     pub fn new(size: usize, name: &str) -> Self {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(Counter::new());
         let workers = (0..size.max(1))
             .map(|i| {
                 let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                let thread_name = format!("{name}-{i}");
                 std::thread::Builder::new()
-                    .name(format!("{name}-{i}"))
+                    .name(thread_name.clone())
                     .spawn(move || loop {
                         // Hold the lock only while receiving.
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             Ok(job) => {
-                                // Job panics are isolated: the Runner
-                                // already catches step panics; this guards
-                                // everything else.
-                                let _ = std::panic::catch_unwind(
+                                // Job panics are isolated (the Runner already
+                                // catches step panics; this guards everything
+                                // else) — but never silent: each one is logged
+                                // with its payload and counted, so a daemon
+                                // quietly eating work shows up in metrics.
+                                if let Err(payload) = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(job),
-                                );
+                                ) {
+                                    let msg = payload
+                                        .downcast_ref::<&str>()
+                                        .map(|s| (*s).to_string())
+                                        .or_else(|| {
+                                            payload.downcast_ref::<String>().cloned()
+                                        })
+                                        .unwrap_or_else(|| {
+                                            "<non-string panic payload>".to_string()
+                                        });
+                                    log::error!(
+                                        "worker '{thread_name}': job panicked: {msg}"
+                                    );
+                                    panics.inc();
+                                }
                             }
                             Err(_) => break, // pool dropped
                         }
@@ -40,7 +62,18 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { tx: Some(tx), workers }
+        WorkerPool { tx: Some(tx), workers, panics }
+    }
+
+    /// Number of jobs that panicked since the pool started.
+    pub fn job_panics(&self) -> u64 {
+        self.panics.get()
+    }
+
+    /// Install the pool's panic counter into `registry` as
+    /// `daemon.job_panics_total` so snapshots include it.
+    pub fn register_metrics(&self, registry: &Registry) {
+        registry.register_counter("daemon.job_panics_total", Arc::clone(&self.panics));
     }
 
     /// Submit a job. Errors only after shutdown.
@@ -132,6 +165,24 @@ mod tests {
         let (tx, rx) = channel();
         pool.submit(move || tx.send(42).unwrap()).unwrap();
         assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 42);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_is_counted_and_worker_survives() {
+        let pool = WorkerPool::new(1, "t");
+        let registry = Registry::new();
+        pool.register_metrics(&registry);
+        assert_eq!(pool.job_panics(), 0);
+        pool.submit(|| panic!("boom")).unwrap();
+        // Non-&str payloads are recorded too.
+        pool.submit(|| std::panic::panic_any(String::from("heap boom"))).unwrap();
+        // The same single worker must still be alive to run this.
+        let (tx, rx) = channel();
+        pool.submit(move || tx.send(7).unwrap()).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 7);
+        assert_eq!(pool.job_panics(), 2);
+        assert_eq!(registry.counter("daemon.job_panics_total").get(), 2);
         pool.shutdown();
     }
 

@@ -500,6 +500,64 @@ impl Connection {
         }
     }
 
+    /// Attach to a stream queue as a member of `group` (created on first
+    /// attach): registers `handler` and issues `StreamConsume`. Deliveries
+    /// carry their log offset (`Delivery::offset`); acking advances the
+    /// group's committed cursor instead of deleting the entry. `offset`
+    /// seeks the group before attaching — honored only while the group has
+    /// no other members. On reconnect the subscription is replayed with no
+    /// seek, resuming from the group's committed position.
+    pub fn stream_consume(
+        &self,
+        queue: &str,
+        consumer_tag: &str,
+        group: &str,
+        prefetch: u32,
+        offset: Option<u64>,
+        handler: DeliveryHandler,
+    ) -> Result<()> {
+        {
+            let mut handlers = self.shared.handlers.lock().unwrap();
+            if handlers.contains_key(consumer_tag) {
+                return Err(Error::DuplicateSubscriber(format!(
+                    "consumer tag '{consumer_tag}' already registered on this connection"
+                )));
+            }
+            handlers.insert(consumer_tag.to_string(), handler);
+        }
+        let res = self.request(&ClientRequest::StreamConsume {
+            queue: queue.to_string(),
+            consumer_tag: consumer_tag.to_string(),
+            group: group.to_string(),
+            prefetch,
+            offset,
+        });
+        match res {
+            Ok(_) => {
+                let mut journal = self.shared.journal.lock().unwrap();
+                journal.record_stream_consumer(consumer_tag, queue, group, prefetch);
+                Ok(())
+            }
+            Err(e) => {
+                self.shared.handlers.lock().unwrap().remove(consumer_tag);
+                Err(e)
+            }
+        }
+    }
+
+    /// Move a stream group's committed cursor to just past `offset`.
+    /// Forward commits skip entries without reading them; a backward
+    /// commit rewinds the group and replays from there. Returns the
+    /// group's committed cursor after the move.
+    pub fn stream_commit(&self, queue: &str, group: &str, offset: u64) -> Result<u64> {
+        let reply = self.request(&ClientRequest::StreamCommit {
+            queue: queue.to_string(),
+            group: group.to_string(),
+            offset,
+        })?;
+        reply.get_u64("committed")
+    }
+
     /// Stop consuming.
     pub fn cancel(&self, consumer_tag: &str) -> Result<()> {
         self.request(&ClientRequest::Cancel { consumer_tag: consumer_tag.to_string() })?;
@@ -875,16 +933,24 @@ fn replay_topology(shared: &Arc<Shared>, link: &Arc<dyn Link>) -> Result<Vec<Del
         if !shared.handlers.lock().unwrap().contains_key(&c.consumer_tag) {
             continue; // handler vanished (cancelled mid-outage)
         }
-        sync_request(
-            shared,
-            link,
-            &ClientRequest::Consume {
+        let req = match &c.group {
+            // Stream members re-attach with no seek: the broker-side
+            // group cursor (possibly shared with surviving members) is
+            // the resume position.
+            Some(group) => ClientRequest::StreamConsume {
+                queue: c.queue.clone(),
+                consumer_tag: c.consumer_tag.clone(),
+                group: group.clone(),
+                prefetch: c.prefetch,
+                offset: None,
+            },
+            None => ClientRequest::Consume {
                 queue: c.queue.clone(),
                 consumer_tag: c.consumer_tag.clone(),
                 prefetch: c.prefetch,
             },
-            &mut buffered,
-        )?;
+        };
+        sync_request(shared, link, &req, &mut buffered)?;
         replayed += 1;
     }
     shared.replayed_consumers.add(replayed);

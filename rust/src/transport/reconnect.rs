@@ -198,6 +198,11 @@ pub struct ConsumerSpec {
     pub consumer_tag: String,
     pub queue: String,
     pub prefetch: u32,
+    /// `Some(group)` for stream consumers — replayed as `StreamConsume`
+    /// with no seek offset, so the group resumes from its committed
+    /// cursor (the broker holds the position; re-seeking would rewind
+    /// every surviving member).
+    pub group: Option<String>,
 }
 
 /// Topology recorded on the live connection and replayed after a
@@ -256,6 +261,23 @@ impl TopologyJournal {
             consumer_tag: consumer_tag.to_string(),
             queue: queue.to_string(),
             prefetch,
+            group: None,
+        });
+    }
+
+    pub fn record_stream_consumer(
+        &mut self,
+        consumer_tag: &str,
+        queue: &str,
+        group: &str,
+        prefetch: u32,
+    ) {
+        self.remove_consumer(consumer_tag);
+        self.consumers.push(ConsumerSpec {
+            consumer_tag: consumer_tag.to_string(),
+            queue: queue.to_string(),
+            prefetch,
+            group: Some(group.to_string()),
         });
     }
 
@@ -371,7 +393,11 @@ mod tests {
             consumer_tag: "c1".into(),
             queue: "b".into(),
             prefetch: 2,
+            group: None,
         }]);
+        // A stream re-registration replaces the work-queue record by tag.
+        j.record_stream_consumer("c1", "b", "g", 2);
+        assert_eq!(j.consumers()[0].group.as_deref(), Some("g"));
         j.remove_consumer("c1");
         assert!(j.consumers().is_empty());
     }

@@ -582,6 +582,11 @@ impl Runner {
                 self.transition(ProcessEvent::Kill)?;
                 return Ok(Some(RunOutcome::Killed(Some(reason))));
             }
+            // The (guard, timed-out) pair is deliberately discarded: every
+            // pass of the loop re-evaluates the wait condition and the kill
+            // flag from scratch, so signal, timeout and spurious wakeups are
+            // all handled identically. `.unwrap()` still propagates mutex
+            // poisoning — nothing is swallowed here.
             let _ = self.control.cond.wait_timeout(inner, Duration::from_millis(50)).unwrap();
         }
     }

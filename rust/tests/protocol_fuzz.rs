@@ -1,7 +1,9 @@
 //! Protocol fuzz / property suite: `decode(encode(x)) == x` for every
 //! `ClientRequest` / `ServerMsg` variant (including the delivery-lifecycle
-//! frames Nack / NackMulti / Reject), plus a corruption corpus — truncated
-//! and bit-flipped frames must produce clean `Err`s, never panics.
+//! frames Nack / NackMulti / Reject, the stream frames StreamConsume /
+//! StreamCommit and the flow-control Credit frame), plus a corruption
+//! corpus — truncated and bit-flipped frames must produce clean `Err`s,
+//! never panics.
 //!
 //! Budget: `KIWI_FUZZ_FRAMES` frames per roundtrip test (default 10 000,
 //! so one run satisfies the ≥10k-frames acceptance bar), seeded from
@@ -81,6 +83,8 @@ fn gen_options(rng: &Rng) -> QueueOptions {
         max_delivery: rng.chance(0.4).then(|| rng.range(1, 100) as u32),
         dead_letter_exchange: rng.chance(0.4).then(|| rng.string(16)),
         dead_letter_routing_key: rng.chance(0.3).then(|| rng.string(16)),
+        stream: rng.chance(0.3),
+        partitions: rng.below(1 << 16) as u32,
     }
 }
 
@@ -89,7 +93,7 @@ fn gen_tags(rng: &Rng) -> Vec<u64> {
 }
 
 fn gen_request(rng: &Rng) -> ClientRequest {
-    match rng.below(17) {
+    match rng.below(19) {
         0 => ClientRequest::Hello { client_id: rng.string(24), heartbeat_ms: rng.below(1 << 32) },
         1 => ClientRequest::QueueDeclare { queue: rng.string(24), options: gen_options(rng) },
         2 => ClientRequest::QueueDelete { queue: rng.string(24) },
@@ -126,7 +130,19 @@ fn gen_request(rng: &Rng) -> ClientRequest {
         12 => ClientRequest::Nack { delivery_tag: rng.next_u64(), requeue: rng.chance(0.5) },
         13 => ClientRequest::NackMulti { delivery_tags: gen_tags(rng), requeue: rng.chance(0.5) },
         14 => ClientRequest::Reject { delivery_tag: rng.next_u64(), requeue: rng.chance(0.5) },
-        15 => ClientRequest::Status,
+        15 => ClientRequest::StreamConsume {
+            queue: rng.string(24),
+            consumer_tag: rng.string(16),
+            group: rng.string(16),
+            prefetch: rng.below(1 << 16) as u32,
+            offset: rng.chance(0.5).then(|| rng.next_u64()),
+        },
+        16 => ClientRequest::StreamCommit {
+            queue: rng.string(24),
+            group: rng.string(16),
+            offset: rng.next_u64(),
+        },
+        17 => ClientRequest::Status,
         _ => ClientRequest::Close,
     }
 }
@@ -140,11 +156,12 @@ fn gen_delivery(rng: &Rng) -> Delivery {
         routing_key: rng.string(24).into(),
         body: Bytes::encode(&gen::value(rng, 3)),
         props: EncodedProps::new(gen_props(rng)),
+        offset: rng.chance(0.5).then(|| rng.next_u64()),
     }
 }
 
 fn gen_server_msg(rng: &Rng) -> ServerMsg {
-    match rng.below(5) {
+    match rng.below(6) {
         0 => ServerMsg::Ok { req_id: rng.next_u64(), reply: gen::value(rng, 3) },
         1 => ServerMsg::Err {
             req_id: rng.next_u64(),
@@ -153,6 +170,7 @@ fn gen_server_msg(rng: &Rng) -> ServerMsg {
         },
         2 => ServerMsg::Deliver(gen_delivery(rng)),
         3 => ServerMsg::DeliverBatch((0..rng.range(1, 6)).map(|_| gen_delivery(rng)).collect()),
+        4 => ServerMsg::Credit { channel_credit: rng.below(1 << 32) as u32 },
         _ => ServerMsg::CancelConsumer { consumer_tag: rng.string(16) },
     }
 }
@@ -338,4 +356,30 @@ fn lifecycle_frames_roundtrip_exhaustively() {
     let (back, _) =
         ClientRequest::from_frame(&read_frame(&mut Cursor::new(&buf)).unwrap()).unwrap();
     assert_eq!(back, req);
+    // Stream frames, pinned at their edge values (None vs Some(0) seek is
+    // the attach-at-tail / replay-from-start distinction).
+    for req in [
+        ClientRequest::StreamConsume {
+            queue: "s".into(),
+            consumer_tag: "c".into(),
+            group: "g".into(),
+            prefetch: 0,
+            offset: None,
+        },
+        ClientRequest::StreamConsume {
+            queue: "s".into(),
+            consumer_tag: "c".into(),
+            group: "g".into(),
+            prefetch: u32::MAX,
+            offset: Some(0),
+        },
+        ClientRequest::StreamCommit { queue: "s".into(), group: "g".into(), offset: u64::MAX },
+    ] {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &req.to_frame(9)).unwrap();
+        let (back, id) =
+            ClientRequest::from_frame(&read_frame(&mut Cursor::new(&buf)).unwrap()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(id, 9);
+    }
 }

@@ -1,0 +1,477 @@
+//! Stream queue end-to-end suite, driving a real `BrokerHandle` over the
+//! wire-level `ClientRequest` API: 100 consumer groups replaying one log
+//! with zero loss, exactly-one-member-per-group partitioned delivery,
+//! independent group cursors, whole-segment retention reclaiming disk,
+//! and durable recovery of both the log and each group's committed
+//! cursor across a broker restart.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Duration;
+
+use kiwi::broker::persistence::{SegmentedWal, SyncPolicy};
+use kiwi::broker::protocol::{ClientRequest, Delivery, MessageProps, QueueOptions, ServerMsg};
+use kiwi::broker::{BrokerConfig, BrokerHandle, ConnectionId};
+use kiwi::wire::{Bytes, Value};
+
+fn stream_options(partitions: u32, durable: bool) -> QueueOptions {
+    QueueOptions { stream: true, partitions, durable, ..Default::default() }
+}
+
+fn declare(broker: &BrokerHandle, conn: ConnectionId, queue: &str, options: QueueOptions) {
+    broker
+        .handle(conn, &ClientRequest::QueueDeclare { queue: queue.into(), options })
+        .unwrap();
+}
+
+fn publish_i64(broker: &BrokerHandle, conn: ConnectionId, queue: &str, v: i64) {
+    broker
+        .handle(
+            conn,
+            &ClientRequest::Publish {
+                exchange: "".into(),
+                routing_key: queue.into(),
+                body: Bytes::encode(&Value::I64(v)),
+                props: MessageProps { persistent: true, ..Default::default() }.into(),
+                mandatory: true,
+            },
+        )
+        .unwrap();
+}
+
+fn attach(
+    broker: &BrokerHandle,
+    conn: ConnectionId,
+    queue: &str,
+    tag: &str,
+    group: &str,
+    prefetch: u32,
+    offset: Option<u64>,
+) {
+    broker
+        .handle(
+            conn,
+            &ClientRequest::StreamConsume {
+                queue: queue.into(),
+                consumer_tag: tag.into(),
+                group: group.into(),
+                prefetch,
+                offset,
+            },
+        )
+        .unwrap();
+}
+
+fn next_delivery(rx: &Receiver<ServerMsg>, pending: &mut Vec<Delivery>) -> Option<Delivery> {
+    if !pending.is_empty() {
+        return Some(pending.remove(0));
+    }
+    loop {
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(ServerMsg::Deliver(d)) => return Some(d),
+            Ok(ServerMsg::DeliverBatch(mut ds)) => {
+                if ds.is_empty() {
+                    continue;
+                }
+                let first = ds.remove(0);
+                pending.extend(ds);
+                return Some(first);
+            }
+            Ok(_) => continue,
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Drain exactly `n` deliveries from one connection, acking each so the
+/// group's cursor (and prefetch window) advances. Returns (offset, body).
+fn drain_acked(
+    broker: &BrokerHandle,
+    conn: ConnectionId,
+    rx: &Receiver<ServerMsg>,
+    n: usize,
+) -> Vec<(u64, i64)> {
+    let mut pending = Vec::new();
+    let mut out = Vec::new();
+    while out.len() < n {
+        let d = match next_delivery(rx, &mut pending) {
+            Some(d) => d,
+            None => break,
+        };
+        let offset = d.offset.expect("stream deliveries must carry their log offset");
+        let body = d.body.decode().unwrap().as_i64().unwrap();
+        broker.handle(conn, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
+        out.push((offset, body));
+    }
+    out
+}
+
+/// The headline acceptance bar: 100 consumer groups each replay the full
+/// log from offset 0 — every group sees every entry, in offset order,
+/// with zero loss, and finishes with its cursor committed at the tail.
+#[test]
+fn hundred_groups_replay_from_zero_with_zero_loss() {
+    const GROUPS: usize = 100;
+    const ENTRIES: i64 = 200;
+    let broker = BrokerHandle::new();
+    let (ptx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, ptx);
+    declare(&broker, publisher, "events", stream_options(4, false));
+    for i in 0..ENTRIES {
+        publish_i64(&broker, publisher, "events", i);
+    }
+
+    let readers: Vec<(ConnectionId, Receiver<ServerMsg>)> = (0..GROUPS)
+        .map(|g| {
+            let (tx, rx) = channel();
+            let conn = broker.connect(&format!("reader-{g}"), 0, tx);
+            attach(&broker, conn, "events", &format!("c{g}"), &format!("g{g}"), 32, Some(0));
+            (conn, rx)
+        })
+        .collect();
+
+    for (g, (conn, rx)) in readers.iter().enumerate() {
+        let got = drain_acked(&broker, *conn, rx, ENTRIES as usize);
+        assert_eq!(got.len(), ENTRIES as usize, "group g{g} lost entries");
+        for (i, (offset, body)) in got.iter().enumerate() {
+            assert_eq!(*offset, i as u64, "group g{g} saw offsets out of order");
+            assert_eq!(*body, i as i64, "group g{g} body mismatch at offset {i}");
+        }
+        assert_eq!(
+            broker.stream_group_committed("events", &format!("g{g}")),
+            Some(ENTRIES as u64),
+            "group g{g} must end committed at the tail"
+        );
+    }
+}
+
+/// Within one group, members split the log by partition: offset `o` goes
+/// to member `(o % partitions) % members` and to nobody else.
+#[test]
+fn group_members_split_partitions_exclusively() {
+    const PARTITIONS: u32 = 6;
+    const MEMBERS: usize = 3;
+    const ENTRIES: i64 = 60;
+    let broker = BrokerHandle::new();
+    let (ptx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, ptx);
+    declare(&broker, publisher, "work", stream_options(PARTITIONS, false));
+
+    let members: Vec<(ConnectionId, Receiver<ServerMsg>)> = (0..MEMBERS)
+        .map(|m| {
+            let (tx, rx) = channel();
+            let conn = broker.connect(&format!("member-{m}"), 0, tx);
+            // The first member pins the group at the log start; the rest
+            // join the existing cursor (their seek would be ignored).
+            let offset = (m == 0).then_some(0);
+            attach(&broker, conn, "work", &format!("m{m}"), "workers", 64, offset);
+            (conn, rx)
+        })
+        .collect();
+    for i in 0..ENTRIES {
+        publish_i64(&broker, publisher, "work", i);
+    }
+
+    let per_member = ENTRIES as usize / MEMBERS;
+    let mut seen: Vec<u64> = Vec::new();
+    for (m, (conn, rx)) in members.iter().enumerate() {
+        let got = drain_acked(&broker, *conn, rx, per_member);
+        assert_eq!(got.len(), per_member, "member m{m} received the wrong share");
+        for (offset, _) in &got {
+            assert_eq!(
+                (*offset % u64::from(PARTITIONS)) as usize % MEMBERS,
+                m,
+                "offset {offset} delivered to the wrong member"
+            );
+            seen.push(*offset);
+        }
+        // Exclusivity: nothing further is in flight for this member.
+        let mut pending = Vec::new();
+        assert!(
+            next_delivery_nonblocking(rx, &mut pending).is_none(),
+            "member m{m} received an entry it does not own"
+        );
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, (0..ENTRIES as u64).collect::<Vec<_>>(), "offsets lost or duplicated");
+    assert_eq!(broker.stream_group_committed("work", "workers"), Some(ENTRIES as u64));
+}
+
+fn next_delivery_nonblocking(
+    rx: &Receiver<ServerMsg>,
+    pending: &mut Vec<Delivery>,
+) -> Option<Delivery> {
+    if !pending.is_empty() {
+        return Some(pending.remove(0));
+    }
+    loop {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(ServerMsg::Deliver(d)) => return Some(d),
+            Ok(ServerMsg::DeliverBatch(mut ds)) => {
+                if ds.is_empty() {
+                    continue;
+                }
+                let first = ds.remove(0);
+                pending.extend(ds);
+                return Some(first);
+            }
+            Ok(_) => continue,
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Groups are independent cursors: a replay group re-reads history while
+/// a tail group attached with `offset: None` sees only new entries.
+#[test]
+fn independent_groups_tail_vs_replay() {
+    let broker = BrokerHandle::new();
+    let (ptx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, ptx);
+    declare(&broker, publisher, "audit", stream_options(1, false));
+    for i in 0..50 {
+        publish_i64(&broker, publisher, "audit", i);
+    }
+
+    let (rtx, rrx) = channel();
+    let replayer = broker.connect("replayer", 0, rtx);
+    attach(&broker, replayer, "audit", "r", "replay", 16, Some(0));
+    let (ttx, trx) = channel();
+    let tailer = broker.connect("tailer", 0, ttx);
+    attach(&broker, tailer, "audit", "t", "tail", 16, None);
+
+    let history = drain_acked(&broker, replayer, &rrx, 50);
+    assert_eq!(history.iter().map(|(o, _)| *o).collect::<Vec<_>>(), (0..50).collect::<Vec<_>>());
+    let mut pending = Vec::new();
+    assert!(
+        next_delivery_nonblocking(&trx, &mut pending).is_none(),
+        "a fresh tail group must not replay history"
+    );
+
+    for i in 50..60 {
+        publish_i64(&broker, publisher, "audit", i);
+    }
+    let new_replay = drain_acked(&broker, replayer, &rrx, 10);
+    let new_tail = drain_acked(&broker, tailer, &trx, 10);
+    let want: Vec<u64> = (50..60).collect();
+    assert_eq!(new_replay.iter().map(|(o, _)| *o).collect::<Vec<_>>(), want);
+    assert_eq!(new_tail.iter().map(|(o, _)| *o).collect::<Vec<_>>(), want);
+}
+
+/// The two consume verbs are not interchangeable across queue kinds.
+#[test]
+fn consume_verbs_reject_wrong_queue_kind() {
+    let broker = BrokerHandle::new();
+    let (tx, _rx) = channel();
+    let conn = broker.connect("client", 0, tx);
+    declare(&broker, conn, "a-stream", stream_options(1, false));
+    declare(&broker, conn, "a-queue", QueueOptions::default());
+    let err = broker
+        .handle(
+            conn,
+            &ClientRequest::Consume {
+                queue: "a-stream".into(),
+                consumer_tag: "c".into(),
+                prefetch: 1,
+            },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("stream"), "got: {err}");
+    let err = broker
+        .handle(
+            conn,
+            &ClientRequest::StreamConsume {
+                queue: "a-queue".into(),
+                consumer_tag: "c".into(),
+                group: "g".into(),
+                prefetch: 1,
+                offset: None,
+            },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("not a stream"), "got: {err}");
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("kiwi-stream-e2e-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn durable_broker(dir: &std::path::Path, config: BrokerConfig) -> BrokerHandle {
+    let (wal, rec) =
+        SegmentedWal::open(dir, 2, SyncPolicy::Os, Duration::from_micros(200)).unwrap();
+    BrokerHandle::with_backend(Arc::new(wal), rec, config)
+}
+
+/// Size retention drops whole closed head segments: disk usage shrinks,
+/// the base offset advances, and a replaying group transparently starts
+/// at the new base instead of stalling on truncated offsets.
+#[test]
+fn retention_reclaims_disk_and_replay_skips_truncated_offsets() {
+    let dir = temp_dir("retention");
+    let config = BrokerConfig {
+        shards: 2,
+        stream_segment_bytes: 4096,
+        stream_retention_bytes: 8192,
+        ..Default::default()
+    };
+    let broker = durable_broker(&dir, config);
+    let (ptx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, ptx);
+    declare(&broker, publisher, "metrics", stream_options(1, true));
+    // ~300 bytes/record × 200 ≫ retention_bytes: many closed segments.
+    for i in 0..200 {
+        broker
+            .handle(
+                publisher,
+                &ClientRequest::Publish {
+                    exchange: "".into(),
+                    routing_key: "metrics".into(),
+                    body: Bytes::encode(&Value::map([
+                        ("i", Value::I64(i)),
+                        ("pad", Value::Bytes(vec![0xAB; 256])),
+                    ])),
+                    props: MessageProps { persistent: true, ..Default::default() }.into(),
+                    mandatory: true,
+                },
+            )
+            .unwrap();
+    }
+    let before = broker.stream_disk_bytes("metrics").unwrap();
+    assert!(before > 8192, "the log must overflow retention before the sweep ({before}B)");
+
+    broker.sweep();
+    let after = broker.stream_disk_bytes("metrics").unwrap();
+    let base = broker.stream_base_offset("metrics").unwrap();
+    assert!(after < before, "retention must reclaim disk ({before}B -> {after}B)");
+    assert!(after <= 8192 + 4096, "retention must cut to within one open segment of the cap");
+    assert!(base > 0, "truncation must advance the base offset");
+    assert_eq!(broker.stream_next_offset("metrics"), Some(200));
+
+    // A from-zero replay lands on the surviving suffix, in order.
+    let (tx, rx) = channel();
+    let reader = broker.connect("reader", 0, tx);
+    attach(&broker, reader, "metrics", "c", "replay", 32, Some(0));
+    let survivors = 200 - base as usize;
+    let mut pending = Vec::new();
+    let mut offsets = Vec::new();
+    while offsets.len() < survivors {
+        let d = next_delivery(&rx, &mut pending).expect("surviving entries must deliver");
+        offsets.push(d.offset.unwrap());
+        broker.handle(reader, &ClientRequest::Ack { delivery_tag: d.delivery_tag }).unwrap();
+    }
+    assert_eq!(offsets, (base..200).collect::<Vec<_>>());
+    drop(broker);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Restart recovery: the log and every group's committed cursor survive a
+/// broker drop, and a member re-attaching with `offset: None` resumes
+/// exactly where the group left off — no loss, no re-consumption.
+#[test]
+fn durable_stream_recovers_log_and_group_cursor() {
+    let dir = temp_dir("recovery");
+    let config = BrokerConfig { shards: 2, ..Default::default() };
+    {
+        let broker = durable_broker(&dir, config.clone());
+        let (ptx, _prx) = channel();
+        let publisher = broker.connect("publisher", 0, ptx);
+        declare(&broker, publisher, "jobs", stream_options(1, true));
+        for i in 0..20 {
+            publish_i64(&broker, publisher, "jobs", i);
+        }
+        let (tx, rx) = channel();
+        let reader = broker.connect("reader", 0, tx);
+        attach(&broker, reader, "jobs", "c", "g", 4, Some(0));
+        let got = drain_acked(&broker, reader, &rx, 10);
+        assert_eq!(got.iter().map(|(o, _)| *o).collect::<Vec<_>>(), (0..10).collect::<Vec<_>>());
+        assert_eq!(broker.stream_group_committed("jobs", "g"), Some(10));
+        broker.sync().unwrap();
+        // Dropped without queue deletion: a crash image.
+    }
+    let broker = durable_broker(&dir, config);
+    assert_eq!(broker.stream_next_offset("jobs"), Some(20), "the log must survive restart");
+    assert_eq!(
+        broker.stream_group_committed("jobs", "g"),
+        Some(10),
+        "the group cursor must survive restart"
+    );
+    let (tx, rx) = channel();
+    let reader = broker.connect("reader", 0, tx);
+    attach(&broker, reader, "jobs", "c", "g", 4, None);
+    let got = drain_acked(&broker, reader, &rx, 10);
+    assert_eq!(
+        got.iter().map(|(o, b)| (*o, *b)).collect::<Vec<_>>(),
+        (10..20).map(|i| (i as u64, i)).collect::<Vec<_>>(),
+        "replay must resume at the committed cursor with intact bodies"
+    );
+    assert_eq!(broker.stream_group_committed("jobs", "g"), Some(20));
+    drop(broker);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Losing a member's connection rebalances its partitions onto survivors
+/// and redelivers its unacked offsets — nothing is lost.
+#[test]
+fn member_death_redelivers_to_survivors() {
+    let broker = BrokerHandle::new();
+    let (ptx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, ptx);
+    declare(&broker, publisher, "tasks", stream_options(2, false));
+
+    let (tx_a, rx_a) = channel();
+    let a = broker.connect("a", 0, tx_a);
+    attach(&broker, a, "tasks", "ca", "grp", 64, Some(0));
+    let (tx_b, rx_b) = channel();
+    let b = broker.connect("b", 0, tx_b);
+    attach(&broker, b, "tasks", "cb", "grp", 64, None);
+    for i in 0..40 {
+        publish_i64(&broker, publisher, "tasks", i);
+    }
+    // B dies with everything unacked; A must end up with the whole log.
+    drop(rx_b);
+    broker.disconnect(b);
+    let got = drain_acked(&broker, a, &rx_a, 40);
+    let mut offsets: Vec<u64> = got.iter().map(|(o, _)| *o).collect();
+    offsets.sort_unstable();
+    assert_eq!(offsets, (0..40).collect::<Vec<_>>(), "B's share must redeliver to A");
+    assert_eq!(broker.stream_group_committed("tasks", "grp"), Some(40));
+}
+
+/// An explicit `StreamCommit` moves the cursor both ways: forward skips
+/// unread entries, backward re-opens consumed ones for redelivery.
+#[test]
+fn explicit_commit_skips_forward_and_rewinds() {
+    let broker = BrokerHandle::new();
+    let (ptx, _prx) = channel();
+    let publisher = broker.connect("publisher", 0, ptx);
+    declare(&broker, publisher, "log", stream_options(1, false));
+    for i in 0..10 {
+        publish_i64(&broker, publisher, "log", i);
+    }
+    let (tx, rx) = channel();
+    let reader = broker.connect("reader", 0, tx);
+    attach(&broker, reader, "log", "c", "g", 64, Some(0));
+    let first = drain_acked(&broker, reader, &rx, 10);
+    assert_eq!(first.len(), 10);
+
+    // Rewind to offset 5: entries 5..10 re-open and redeliver.
+    let reply = broker
+        .handle(
+            reader,
+            &ClientRequest::StreamCommit { queue: "log".into(), group: "g".into(), offset: 4 },
+        )
+        .unwrap();
+    assert_eq!(reply.get_u64("committed").unwrap(), 5);
+    let replayed = drain_acked(&broker, reader, &rx, 5);
+    assert_eq!(replayed.iter().map(|(o, _)| *o).collect::<Vec<_>>(), vec![5, 6, 7, 8, 9]);
+    // Unknown group is a clean error, not a silent no-op.
+    assert!(broker
+        .handle(
+            reader,
+            &ClientRequest::StreamCommit { queue: "log".into(), group: "nope".into(), offset: 0 },
+        )
+        .is_err());
+}
