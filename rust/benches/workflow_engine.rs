@@ -1,26 +1,69 @@
-//! E7 — workflow-engine throughput (paper §I.C: "scalable from individual
-//! laptops ... workflows consisting of varying durations").
+//! E7 — workflow-engine throughput and residency (paper §I.C: "scalable
+//! from individual laptops ... workflows consisting of varying
+//! durations").
 //!
-//! Processes/second through the full stack (launch task → daemon → runner
-//! → checkpoints → terminal broadcast → reply), swept over checkpoint
-//! store (memory vs file) and process shape (flat vs nested workchain).
+//! The claims this bench pins after the event-driven refactor:
+//!
+//! * **proc/s at campaign scale**: 100k flat processes through the full
+//!   stack (launch task → daemon → scheduler → timer wait → checkpoint →
+//!   terminal broadcast → reply) on a 4-worker scheduler.
+//! * **O(workers) threads**: thread count during the campaign stays a
+//!   small constant above baseline — never O(live processes).
+//! * **Bounded residency**: with `max_resident` small, long-waiting
+//!   processes park to their checkpoints and resume through the task
+//!   queue; steady-state RSS is bounded by residency, not campaign size.
+//! * **Checkpoint-store cost**: file vs memory store at equal shape.
+//!
+//! `KIWI_BENCH_SMOKE=1` shrinks the campaign so CI can run this as a
+//! regression tripwire; `KIWI_BENCH_RECORD=1` appends the run to
+//! `../BENCH_workflow.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kiwi::benchutil::Table;
+use kiwi::broker::core::process_rss_bytes;
 use kiwi::broker::InprocBroker;
 use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
 use kiwi::daemon::{Daemon, DaemonConfig};
-use kiwi::wire::Value;
+use kiwi::wire::{json, Value};
 use kiwi::workflow::checkpoint::{CheckpointStore, FileCheckpointStore, MemoryCheckpointStore};
-use kiwi::workflow::process::{ProcessLogic, StepContext, StepOutcome};
-use kiwi::workflow::workchain::{instantiate, ChainStep, WorkChainSpec};
-use kiwi::workflow::{ProcessRegistry, RemoteLauncher};
+use kiwi::workflow::{
+    ProcessLogic, ProcessRegistry, RemoteLauncher, StepContext, StepOutcome, WaitCondition,
+};
 
-const PROCESSES: usize = 200;
+fn smoke() -> bool {
+    std::env::var("KIWI_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
 
-/// A flat 5-step process (5 checkpoints).
+const MIB: u64 = 1024 * 1024;
+const WORKERS: usize = 4;
+
+/// Waits once on a timer, then finishes — the canonical event-engine
+/// process: one checkpoint at the wait, no thread parked while waiting.
+struct Nap {
+    ms: u64,
+}
+impl ProcessLogic for Nap {
+    fn step(&mut self, step: u32, _: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        match step {
+            0 => Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(self.ms)))),
+            _ => Ok(StepOutcome::Finish(Value::map([("ok", Value::Bool(true))]))),
+        }
+    }
+    fn save_state(&self) -> Value {
+        Value::map([("ms", Value::I64(self.ms as i64))])
+    }
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        let src = state.get_opt("inputs").unwrap_or(state);
+        if let Some(ms) = src.get_opt("ms") {
+            self.ms = ms.as_i64()? as u64;
+        }
+        Ok(())
+    }
+}
+
+/// A flat 5-step process (5 checkpoints), for the store comparison.
 struct FiveSteps {
     i: i64,
 }
@@ -43,115 +86,242 @@ impl ProcessLogic for FiveSteps {
 
 fn registry() -> ProcessRegistry {
     let reg = ProcessRegistry::new();
+    reg.register("nap", || Box::new(Nap { ms: 1 }));
     reg.register("five", || Box::new(FiveSteps { i: 0 }));
-    let child = WorkChainSpec::new("leaf")
-        .step("go", |_cc, _ctx| Ok(ChainStep::Finish(Value::I64(1))))
-        .build();
-    reg.register("leaf", move || instantiate(&child));
-    let parent = WorkChainSpec::new("nest")
-        .step("spawn", |cc, ctx| {
-            for _ in 0..4 {
-                let pid = ctx.spawn("leaf", Value::Null)?;
-                cc.add_child(&pid);
-            }
-            Ok(ChainStep::WaitChildren)
-        })
-        .step("done", |cc, _ctx| {
-            Ok(ChainStep::Finish(Value::I64(cc.children().len() as i64)))
-        })
-        .build();
-    reg.register("nest", move || instantiate(&parent));
     reg
 }
 
-fn run_case(
+fn live_threads() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+struct CampaignStats {
+    wall: Duration,
+    proc_s: f64,
+    rss_steady: u64,
+    threads_peak: usize,
+    parked_total: u64,
+    resumed_total: u64,
+}
+
+/// Wait for `n` completions on the daemon's scheduler while sampling RSS
+/// and thread count; returns steady-state (peak-of-sample) readings.
+fn await_campaign(daemon: &Daemon, n: u64, t0: Instant) -> CampaignStats {
+    let deadline = Instant::now() + Duration::from_secs(600);
+    let (mut rss_steady, mut threads_peak) = (0u64, 0usize);
+    loop {
+        let st = daemon.scheduler().stats();
+        rss_steady = rss_steady.max(process_rss_bytes().unwrap_or(0));
+        threads_peak = threads_peak.max(live_threads());
+        if st.completed_total >= n {
+            let wall = t0.elapsed();
+            return CampaignStats {
+                wall,
+                proc_s: n as f64 / wall.as_secs_f64().max(1e-9),
+                rss_steady,
+                threads_peak,
+                parked_total: st.parked_total,
+                resumed_total: st.resumed_total,
+            };
+        }
+        assert!(
+            Instant::now() < deadline,
+            "campaign stalled: {} of {n} processes terminal",
+            st.completed_total
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn stack(
     store: Arc<dyn CheckpointStore>,
-    process_type: &str,
-    count: usize,
-    workers: usize,
-) -> (Duration, f64) {
+    max_resident: usize,
+) -> (InprocBroker, Daemon, RemoteLauncher) {
     let broker = InprocBroker::new();
-    let comm: Arc<dyn Communicator> =
+    let worker_comm: Arc<dyn Communicator> =
         Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
     let daemon = Daemon::start(
-        Arc::clone(&comm),
+        worker_comm,
         store,
         registry(),
-        DaemonConfig { workers, ..Default::default() },
+        DaemonConfig {
+            workers: WORKERS,
+            max_resident_processes: max_resident,
+            ..Default::default()
+        },
     )
     .unwrap();
     let client: Arc<dyn Communicator> =
         Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
-    let launcher = RemoteLauncher::new(client);
-    let t0 = Instant::now();
-    let futs: Vec<_> =
-        (0..count).map(|_| launcher.launch(process_type, Value::Null).unwrap().1).collect();
-    for f in futs {
-        let record = f.wait(Duration::from_secs(300)).unwrap();
-        assert_eq!(record.get_str("state").unwrap(), "finished");
-    }
-    let wall = t0.elapsed();
-    daemon.shutdown();
-    (wall, count as f64 / wall.as_secs_f64())
+    (broker, daemon, RemoteLauncher::new(client))
 }
 
 fn main() {
+    let smoke = smoke();
+    let campaign_n: usize = if smoke { 2_000 } else { 100_000 };
+    let parking_n: usize = if smoke { 500 } else { 5_000 };
+    let flat_n: usize = if smoke { 200 } else { 1_000 };
+
     let mut table = Table::new(
-        "E7 workflow engine throughput (200 processes, 4 workers)",
-        &["process", "checkpoints", "wall", "proc/s"],
+        "E7 workflow engine (event-driven scheduler, 4 workers)",
+        &["case", "n", "wall", "proc/s", "rss steady", "threads peak", "parked", "resumed"],
     );
+
+    // Case 1 — the headline campaign: N short-wait processes through the
+    // task queue. Prefetch (= max_resident, 1024) meters admission, the
+    // timer wheel absorbs the waits, no thread is held per process.
+    let threads_baseline = live_threads();
+    let campaign = {
+        let (_broker, daemon, launcher) = stack(Arc::new(MemoryCheckpointStore::new()), 1024);
+        let t0 = Instant::now();
+        for _ in 0..campaign_n {
+            launcher.launch("nap", Value::Null).unwrap();
+        }
+        let stats = await_campaign(&daemon, campaign_n as u64, t0);
+        daemon.shutdown();
+        stats
+    };
+    assert!(
+        campaign.threads_peak < threads_baseline + WORKERS + 64,
+        "thread count {} vs baseline {} — scheduler threads must be O(workers), \
+         not O({campaign_n} processes)",
+        campaign.threads_peak,
+        threads_baseline
+    );
+    table.row(&[
+        "campaign (1ms nap)".into(),
+        campaign_n.to_string(),
+        format!("{:.2?}", campaign.wall),
+        format!("{:.0}", campaign.proc_s),
+        format!("{} MiB", campaign.rss_steady / MIB),
+        campaign.threads_peak.to_string(),
+        campaign.parked_total.to_string(),
+        campaign.resumed_total.to_string(),
+    ]);
+
+    // Case 2 — parking under a tight residency cap: local launches flood
+    // the scheduler past max_resident=128; long waits checkpoint, release
+    // their slot entirely and resume through the task queue.
+    let parking = {
+        let (_broker, daemon, _launcher) = stack(Arc::new(MemoryCheckpointStore::new()), 128);
+        let t0 = Instant::now();
+        for _ in 0..parking_n {
+            daemon
+                .scheduler()
+                .launch("nap", Value::map([("ms", Value::I64(50))]))
+                .unwrap();
+        }
+        let stats = await_campaign(&daemon, parking_n as u64, t0);
+        daemon.shutdown();
+        stats
+    };
+    assert!(
+        parking.parked_total > 0,
+        "a {parking_n}-process flood over max_resident=128 must park some processes"
+    );
+    assert_eq!(
+        parking.parked_total, parking.resumed_total,
+        "every parked process must resume through the task queue"
+    );
+    table.row(&[
+        "parked (50ms nap, cap 128)".into(),
+        parking_n.to_string(),
+        format!("{:.2?}", parking.wall),
+        format!("{:.0}", parking.proc_s),
+        format!("{} MiB", parking.rss_steady / MIB),
+        parking.threads_peak.to_string(),
+        parking.parked_total.to_string(),
+        parking.resumed_total.to_string(),
+    ]);
+
+    // Case 3 — checkpoint-store cost at equal shape: 5 checkpoints per
+    // process, memory vs file.
     let ckpt_dir = std::env::temp_dir().join(format!("kiwi-bench-ckpt-{}", std::process::id()));
     std::fs::remove_dir_all(&ckpt_dir).ok();
-
+    let mut flat = Vec::new();
     for (label, store) in [
         ("memory", Arc::new(MemoryCheckpointStore::new()) as Arc<dyn CheckpointStore>),
-        ("file", Arc::new(FileCheckpointStore::open(&ckpt_dir).unwrap()) as Arc<dyn CheckpointStore>),
+        (
+            "file",
+            Arc::new(FileCheckpointStore::open(&ckpt_dir).unwrap()) as Arc<dyn CheckpointStore>,
+        ),
     ] {
-        let (wall, thpt) = run_case(Arc::clone(&store), "five", PROCESSES, 4);
-        table.row(&["five-step flat".into(), label.into(), format!("{wall:.2?}"), format!("{thpt:.0}")]);
-    }
-    // Nested workchains: each parent spawns 4 children => 5 processes per
-    // submission. Parents hold a worker thread while waiting (synchronous-
-    // wait design, DESIGN.md), so keep parents-in-flight below the pool
-    // size: submit in waves of 2 on 8 workers.
-    {
-        let broker = InprocBroker::new();
-        let comm: Arc<dyn Communicator> =
-            Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
-        let daemon = Daemon::start(
-            Arc::clone(&comm),
-            Arc::new(MemoryCheckpointStore::new()),
-            registry(),
-            DaemonConfig { workers: 8, ..Default::default() },
-        )
-        .unwrap();
-        let client: Arc<dyn Communicator> =
-            Arc::new(RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap());
-        let launcher = RemoteLauncher::new(client);
-        let parents = PROCESSES / 4;
+        let (_broker, daemon, launcher) = stack(store, 1024);
         let t0 = Instant::now();
-        for wave in (0..parents).step_by(2) {
-            let futs: Vec<_> = (wave..(wave + 2).min(parents))
-                .map(|_| launcher.launch("nest", Value::Null).unwrap().1)
-                .collect();
-            for f in futs {
-                let record = f.wait(Duration::from_secs(300)).unwrap();
-                assert_eq!(record.get_str("state").unwrap(), "finished");
-            }
+        for _ in 0..flat_n {
+            launcher.launch("five", Value::Null).unwrap();
         }
-        let wall = t0.elapsed();
-        let thpt = parents as f64 / wall.as_secs_f64();
+        let stats = await_campaign(&daemon, flat_n as u64, t0);
         daemon.shutdown();
         table.row(&[
-            "nested 1+4 chain".into(),
-            "memory".into(),
-            format!("{wall:.2?}"),
-            format!("{:.0} parents/s ({:.0} proc/s)", thpt, thpt * 5.0),
+            format!("five-step flat ({label})"),
+            flat_n.to_string(),
+            format!("{:.2?}", stats.wall),
+            format!("{:.0}", stats.proc_s),
+            format!("{} MiB", stats.rss_steady / MIB),
+            stats.threads_peak.to_string(),
+            stats.parked_total.to_string(),
+            stats.resumed_total.to_string(),
         ]);
+        flat.push((label, stats.proc_s));
     }
     std::fs::remove_dir_all(&ckpt_dir).ok();
+
     table.emit();
-    println!("expected shape: file checkpoints cost a constant factor over\n\
-              memory (5 json writes per process); nested chains add one\n\
-              broadcast round per generation but parallelise across workers.");
+    println!(
+        "expected shape: campaign proc/s is step-throughput bound (waits\n\
+         cost a timer-wheel entry, not a thread); RSS tracks residency\n\
+         (prefetch/max_resident), not campaign size; parking trades proc/s\n\
+         for a hard residency cap; file checkpoints cost a constant factor\n\
+         over memory (5 json writes per process)."
+    );
+
+    let run = Value::map([
+        ("bench", Value::from("workflow_engine")),
+        ("smoke", Value::from(smoke)),
+        ("workers", Value::from(WORKERS)),
+        ("campaign_n", Value::from(campaign_n)),
+        ("campaign_proc_per_sec", Value::F64(campaign.proc_s)),
+        ("campaign_rss_steady_bytes", Value::from(campaign.rss_steady)),
+        ("campaign_threads_peak", Value::from(campaign.threads_peak)),
+        ("threads_baseline", Value::from(threads_baseline)),
+        ("parking_n", Value::from(parking_n)),
+        ("parking_proc_per_sec", Value::F64(parking.proc_s)),
+        ("parked_total", Value::from(parking.parked_total)),
+        ("resumed_total", Value::from(parking.resumed_total)),
+        ("flat_n", Value::from(flat_n)),
+        ("flat_memory_proc_per_sec", Value::F64(flat[0].1)),
+        ("flat_file_proc_per_sec", Value::F64(flat[1].1)),
+    ]);
+    let path = std::path::Path::new("target/bench-results/BENCH_workflow.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    match std::fs::write(path, json::to_string(&run)) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+
+    if std::env::var("KIWI_BENCH_RECORD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        let series_path = std::path::Path::new("../BENCH_workflow.json");
+        let mut series = std::fs::read_to_string(series_path)
+            .ok()
+            .and_then(|t| json::from_str(&t).ok())
+            .unwrap_or_else(|| {
+                Value::map([
+                    ("bench", Value::from("workflow_engine")),
+                    ("runs", Value::List(Vec::new())),
+                ])
+            });
+        if let Value::Map(m) = &mut series {
+            let runs = m.entry("runs".to_string()).or_insert_with(|| Value::List(Vec::new()));
+            if let Value::List(list) = runs {
+                list.push(run);
+            }
+        }
+        match std::fs::write(series_path, json::to_string_pretty(&series)) {
+            Ok(()) => println!("recorded run into {}", series_path.display()),
+            Err(e) => eprintln!("warning: could not record series: {e}"),
+        }
+    }
 }

@@ -20,7 +20,8 @@ const VALUED: &[&str] = &[
     "delivery-batch", "route-cache", "max-delivery", "dead-letter-exchange", "max-length",
     "overflow", "reconnect-max-retries", "reconnect-backoff-ms", "net", "event-batch",
     "outbox-cap", "wal-segments", "wal-commit-interval-us", "page-out-threshold",
-    "page-in-batch", "publish-credit", "default-prefetch",
+    "page-in-batch", "publish-credit", "default-prefetch", "workflow-workers",
+    "max-resident-processes",
 ];
 
 impl Args {
@@ -137,6 +138,13 @@ mod tests {
         assert_eq!(a.opt("net"), Some("threads"));
         assert_eq!(a.opt_parse::<usize>("event-batch").unwrap(), Some(128));
         assert_eq!(a.opt_parse::<usize>("outbox-cap").unwrap(), Some(65536));
+    }
+
+    #[test]
+    fn workflow_options_take_values() {
+        let a = parse("kiwi worker --workflow-workers 4 --max-resident-processes 50000");
+        assert_eq!(a.opt_parse::<usize>("workflow-workers").unwrap(), Some(4));
+        assert_eq!(a.opt_parse::<usize>("max-resident-processes").unwrap(), Some(50000));
     }
 
     #[test]

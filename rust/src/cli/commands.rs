@@ -16,7 +16,7 @@ use crate::broker::BrokerServer;
 use crate::cli::args::Args;
 use crate::communicator::{Communicator, RmqCommunicator, RmqConfig};
 use crate::config::Config;
-use crate::daemon::{Daemon, DaemonConfig};
+use crate::daemon::Daemon;
 use crate::error::{Error, Result};
 use crate::payload::register_payload_processes;
 use crate::runtime::Engine;
@@ -47,8 +47,11 @@ SUBCOMMANDS
                                               [--stream-retention-ms N (0 = unbounded)]
                                               [--stream-partitions N]
   worker    run a daemon (task consumer)      [--addr HOST:PORT] [--workers N]
+                                              [--workflow-workers N (0 = match workers)]
+                                              [--max-resident-processes N (0 = never park)]
   submit    launch a process and wait         --process TYPE [--inputs JSON] [--timeout-ms N]
-  ctl       control a live process            <pause|play|kill|status> --pid PID [--reason R]
+  ctl       control live processes            <pause|play|kill|status> --pid PID [--reason R]
+                                              (or --all: broadcast the intent to every process)
   status    broker status snapshot            [--addr HOST:PORT]
 
 COMMON OPTIONS
@@ -86,6 +89,12 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(n) = args.opt_parse::<usize>("workers")? {
         config.workers = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("workflow-workers")? {
+        config.workflow_workers = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("max-resident-processes")? {
+        config.max_resident_processes = n;
     }
     if let Some(hb) = args.opt_parse::<u64>("heartbeat-ms")? {
         config.heartbeat_ms = hb;
@@ -265,15 +274,19 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let comm = connect_communicator(&config)?;
     let registry = build_registry(&config)?;
     let store = Arc::new(FileCheckpointStore::open(&config.checkpoint_dir)?);
-    let _daemon = Daemon::start(
-        Arc::clone(&comm),
-        store,
-        registry,
-        DaemonConfig { workers: config.workers, task_queue: config.task_queue.clone() },
-    )?;
+    let daemon_config = config.daemon_config();
+    let scheduler_workers = daemon_config.workers;
+    let daemon = Daemon::start(Arc::clone(&comm), store, registry, daemon_config)?;
+    // Pick interrupted work back up: every non-terminal checkpoint left by
+    // a previous daemon is re-enqueued through the task queue.
+    match daemon.resume_stored() {
+        Ok(0) => {}
+        Ok(n) => println!("resuming {n} checkpointed process(es)"),
+        Err(e) => eprintln!("warning: checkpoint resume scan failed: {e}"),
+    }
     println!(
-        "kiwi worker: {} threads on queue '{}' via {}",
-        config.workers, config.task_queue, config.broker_addr
+        "kiwi worker: {} scheduler threads (max resident {}) on queue '{}' via {}",
+        scheduler_workers, config.max_resident_processes, config.task_queue, config.broker_addr
     );
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -307,10 +320,22 @@ fn cmd_ctl(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| Error::Config("ctl needs pause|play|kill|status".into()))?
         .clone();
-    let pid =
-        args.opt("pid").ok_or_else(|| Error::Config("ctl needs --pid PID".into()))?;
     let comm = connect_communicator(&config)?;
     let ctl = ProcessController::new(comm).with_timeout(config.request_timeout);
+    if args.flag("all") {
+        // Campaign-wide sweep: one `control.all.<intent>` broadcast that
+        // every scheduler applies to all of its resident processes.
+        if !matches!(intent.as_str(), "pause" | "play" | "kill") {
+            return Err(Error::Config(format!(
+                "ctl --all supports pause|play|kill, not '{intent}'"
+            )));
+        }
+        ctl.broadcast_intent(&intent)?;
+        println!("broadcast {intent} to all processes");
+        return Ok(());
+    }
+    let pid =
+        args.opt("pid").ok_or_else(|| Error::Config("ctl needs --pid PID (or --all)".into()))?;
     match intent.as_str() {
         "pause" => println!("paused: {}", ctl.pause(pid)?),
         "play" => println!("resumed: {}", ctl.play(pid)?),
@@ -373,7 +398,8 @@ mod tests {
     #[test]
     fn config_overrides_from_args() {
         let config = load_config(&parse(
-            "kiwi worker --addr 9.9.9.9:9 --workers 3 --heartbeat-ms 250 --transient \
+            "kiwi worker --addr 9.9.9.9:9 --workers 3 --workflow-workers 2 \
+             --max-resident-processes 50000 --heartbeat-ms 250 --transient \
              --shards 2 --delivery-batch 32 --route-cache 0 \
              --max-delivery 4 --dead-letter-exchange kiwi.dlx --max-length 100 \
              --overflow reject-new --net threads --event-batch 64 --outbox-cap 4096 \
@@ -385,6 +411,9 @@ mod tests {
         .unwrap();
         assert_eq!(config.broker_addr, "9.9.9.9:9");
         assert_eq!(config.workers, 3);
+        assert_eq!(config.workflow_workers, 2);
+        assert_eq!(config.max_resident_processes, 50_000);
+        assert_eq!(config.daemon_config().workers, 2);
         assert_eq!(config.heartbeat_ms, 250);
         assert!(config.wal_path.is_none());
         assert_eq!(config.shards, 2);

@@ -19,6 +19,14 @@ pub struct Config {
     pub heartbeat_ms: u64,
     /// Daemon worker threads.
     pub workers: usize,
+    /// Workflow-scheduler worker threads (0 = use `workers`). Bounds
+    /// concurrent *steps*, not live processes — waiting processes hold
+    /// no thread.
+    pub workflow_workers: usize,
+    /// Resident-process ceiling before the scheduler checkpoints and
+    /// parks long-waiting processes (0 = never park). Also sizes the
+    /// daemon's task prefetch window.
+    pub max_resident_processes: usize,
     /// Task queue name.
     pub task_queue: String,
     /// AOT artifacts directory.
@@ -99,6 +107,8 @@ impl Default for Config {
             broker_addr: "127.0.0.1:5672".into(),
             heartbeat_ms: 600_000 / 100, // 6 s, AMQP-ish default scaled down
             workers: 4,
+            workflow_workers: 0, // auto: match `workers`
+            max_resident_processes: 1024,
             task_queue: crate::workflow::launcher::DEFAULT_TASK_QUEUE.into(),
             artifacts_dir: "artifacts".into(),
             checkpoint_dir: ".kiwi/checkpoints".into(),
@@ -161,6 +171,12 @@ impl Config {
         }
         if let Some(x) = v.get_opt("workers") {
             c.workers = x.as_u64()? as usize;
+        }
+        if let Some(x) = v.get_opt("workflow_workers") {
+            c.workflow_workers = x.as_u64()? as usize;
+        }
+        if let Some(x) = v.get_opt("max_resident_processes") {
+            c.max_resident_processes = x.as_u64()? as usize;
         }
         if let Some(x) = v.get_opt("task_queue") {
             c.task_queue = x.as_str()?.to_string();
@@ -267,6 +283,8 @@ impl Config {
             ("broker_addr", Value::str(&self.broker_addr)),
             ("heartbeat_ms", Value::from(self.heartbeat_ms)),
             ("workers", Value::from(self.workers)),
+            ("workflow_workers", Value::from(self.workflow_workers)),
+            ("max_resident_processes", Value::from(self.max_resident_processes)),
             ("task_queue", Value::str(&self.task_queue)),
             ("artifacts_dir", Value::str(self.artifacts_dir.to_string_lossy())),
             ("checkpoint_dir", Value::str(self.checkpoint_dir.to_string_lossy())),
@@ -329,6 +347,20 @@ impl Config {
         }
     }
 
+    /// The daemon tuning this config resolves to
+    /// (`workflow_workers: 0` = match `workers`).
+    pub fn daemon_config(&self) -> crate::daemon::DaemonConfig {
+        crate::daemon::DaemonConfig {
+            workers: if self.workflow_workers == 0 {
+                self.workers
+            } else {
+                self.workflow_workers
+            },
+            max_resident_processes: self.max_resident_processes,
+            task_queue: self.task_queue.clone(),
+        }
+    }
+
     /// The WAL segment count this config resolves to (0 = match the
     /// resolved queue-shard count so the queue→segment hash lines up
     /// with queue→shard and durable publishes on different shards never
@@ -381,7 +413,9 @@ impl Config {
         Ok(c)
     }
 
-    /// `KIWI_BROKER_ADDR`, `KIWI_WORKERS`, `KIWI_HEARTBEAT_MS`,
+    /// `KIWI_BROKER_ADDR`, `KIWI_WORKERS`, `KIWI_WORKFLOW_WORKERS`
+    /// (0 = match workers), `KIWI_MAX_RESIDENT_PROCESSES` (0 = never
+    /// park), `KIWI_HEARTBEAT_MS`,
     /// `KIWI_ARTIFACTS_DIR`, `KIWI_CHECKPOINT_DIR`, `KIWI_SHARDS`,
     /// `KIWI_DELIVERY_BATCH`, `KIWI_ROUTE_CACHE`, `KIWI_MAX_DELIVERY`
     /// (0 = unlimited), `KIWI_DEAD_LETTER_EXCHANGE` (empty = off),
@@ -404,6 +438,16 @@ impl Config {
         if let Ok(v) = std::env::var("KIWI_WORKERS") {
             if let Ok(n) = v.parse() {
                 self.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_WORKFLOW_WORKERS") {
+            if let Ok(n) = v.parse() {
+                self.workflow_workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("KIWI_MAX_RESIDENT_PROCESSES") {
+            if let Ok(n) = v.parse() {
+                self.max_resident_processes = n;
             }
         }
         if let Ok(v) = std::env::var("KIWI_HEARTBEAT_MS") {
@@ -763,6 +807,32 @@ mod tests {
         assert_eq!(d.wal_segments_resolved(), d.broker_config().shards);
         let v = json::from_str(r#"{"wal_segments": 0, "shards": 3}"#).unwrap();
         assert_eq!(Config::from_value(&v).unwrap().wal_segments_resolved(), 3);
+    }
+
+    #[test]
+    fn workflow_knobs_parse_resolve_and_roundtrip() {
+        let v = json::from_str(
+            r#"{"workers": 8, "workflow_workers": 2, "max_resident_processes": 50000}"#,
+        )
+        .unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.workflow_workers, 2);
+        assert_eq!(c.max_resident_processes, 50_000);
+        let dc = c.daemon_config();
+        assert_eq!(dc.workers, 2);
+        assert_eq!(dc.max_resident_processes, 50_000);
+        assert_eq!(dc.task_queue, c.task_queue);
+        let back = Config::from_value(&json::from_str(&json::to_string(&c.to_value())).unwrap())
+            .unwrap();
+        assert_eq!(back, c);
+        // workflow_workers=0 inherits the daemon worker count.
+        let v = json::from_str(r#"{"workers": 8}"#).unwrap();
+        let c = Config::from_value(&v).unwrap();
+        assert_eq!(c.workflow_workers, 0);
+        assert_eq!(c.daemon_config().workers, 8);
+        // max_resident_processes=0 means "never park" — passed through.
+        let v = json::from_str(r#"{"max_resident_processes": 0}"#).unwrap();
+        assert_eq!(Config::from_value(&v).unwrap().daemon_config().max_resident_processes, 0);
     }
 
     #[test]

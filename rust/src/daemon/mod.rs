@@ -1,7 +1,8 @@
 //! The daemon: AiiDA's worker processes. Consumes the task queue through a
-//! communicator, runs each process on a worker-pool thread, and survives
-//! both graceful and abrupt shutdown — in the abrupt case the broker
-//! requeues its unacked tasks to the surviving workers (§I.A).
+//! communicator, multiplexes processes onto a fixed-size event-driven
+//! scheduler (waiting processes hold no thread), and survives both
+//! graceful and abrupt shutdown — in the abrupt case the broker requeues
+//! its unacked tasks to the surviving workers (§I.A).
 //!
 //! A daemon whose communicator was connected through a link factory
 //! (`RmqCommunicator::connect_tcp`, which `kiwi worker` uses) also

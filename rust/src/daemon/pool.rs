@@ -33,11 +33,12 @@ impl WorkerPool {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             Ok(job) => {
-                                // Job panics are isolated (the Runner already
-                                // catches step panics; this guards everything
-                                // else) — but never silent: each one is logged
-                                // with its payload and counted, so a daemon
-                                // quietly eating work shows up in metrics.
+                                // Job panics are isolated (the scheduler
+                                // already catches step panics; this guards
+                                // everything else) — but never silent: each
+                                // one is logged with its payload and counted,
+                                // so a daemon quietly eating work shows up in
+                                // metrics.
                                 if let Err(payload) = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(job),
                                 ) {

@@ -1,39 +1,50 @@
-//! The daemon proper: one communicator, one worker pool, one task-queue
-//! subscription with `prefetch = pool size` — the broker never hands a
-//! worker more processes than it has threads, so work distributes evenly
-//! across daemons (AiiDA runs the same prefetch policy).
+//! The daemon proper: one communicator, one event-driven [`Scheduler`],
+//! one task-queue subscription. The prefetch window is sized to the
+//! scheduler's *residency* cap rather than its thread count — waiting
+//! processes no longer occupy a thread, so a 4-worker daemon can hold
+//! hundreds of in-flight processes while the broker keeps distributing
+//! the excess to other daemons.
 
 use std::sync::Arc;
 
 use crate::communicator::{Communicator, TaskHandler};
-use crate::daemon::pool::WorkerPool;
 use crate::error::Result;
 use crate::wire::Value;
 use crate::workflow::checkpoint::CheckpointStore;
-use crate::workflow::launcher::{ProcessLauncher, DEFAULT_TASK_QUEUE};
+use crate::workflow::launcher::DEFAULT_TASK_QUEUE;
 use crate::workflow::registry::ProcessRegistry;
+use crate::workflow::scheduler::{Scheduler, SchedulerConfig};
 
 /// Daemon tuning.
 #[derive(Clone, Debug)]
 pub struct DaemonConfig {
-    /// Worker threads = max concurrent processes on this daemon.
+    /// Scheduler worker threads (concurrent *steps*, not processes).
     pub workers: usize,
+    /// Resident-process ceiling before long-waiting processes are
+    /// checkpointed and evicted from memory. 0 = never park. Also sizes
+    /// the broker prefetch window (0 = unlimited prefetch).
+    pub max_resident_processes: usize,
     /// Task queue to consume.
     pub task_queue: String,
 }
 
 impl Default for DaemonConfig {
     fn default() -> Self {
-        DaemonConfig { workers: 4, task_queue: DEFAULT_TASK_QUEUE.into() }
+        DaemonConfig {
+            workers: 4,
+            max_resident_processes: 1024,
+            task_queue: DEFAULT_TASK_QUEUE.into(),
+        }
     }
 }
 
 /// A running daemon. Dropping it is an *abrupt* shutdown (unacked tasks
-/// requeue); [`Daemon::shutdown`] is the graceful path (drains the pool).
+/// requeue); [`Daemon::shutdown`] is the graceful path (workers finish
+/// their current step, then join).
 pub struct Daemon {
     comm: Arc<dyn Communicator>,
     subscription: String,
-    pool: Option<WorkerPool>,
+    sched: Arc<Scheduler>,
 }
 
 impl Daemon {
@@ -44,48 +55,58 @@ impl Daemon {
         registry: ProcessRegistry,
         config: DaemonConfig,
     ) -> Result<Self> {
-        let pool = WorkerPool::new(config.workers, "kiwi-daemon");
-        let launcher = Arc::new(ProcessLauncher::with_queue(
+        let sched = Arc::new(Scheduler::start(
             Arc::clone(&comm),
             store,
             registry,
-            &config.task_queue,
-        ));
+            SchedulerConfig {
+                workers: config.workers,
+                max_resident: config.max_resident_processes,
+                task_queue: config.task_queue.clone(),
+            },
+        )?);
         let handler: TaskHandler = {
-            let launcher = Arc::clone(&launcher);
-            // The communicator invokes this on its communication thread;
-            // we immediately punt to the pool so the thread stays free for
-            // heartbeats, acks and further deliveries.
-            let pool_tx = pool_sender(&pool);
-            Box::new(move |task: Value, ctx| {
-                let launcher = Arc::clone(&launcher);
-                if pool_tx(Box::new(move || launcher.handle_task(task, ctx))).is_err() {
-                    log::warn!("daemon: pool gone; task will be requeued by broker");
-                }
-            })
+            let sched = Arc::clone(&sched);
+            // Admission only parses and enqueues — cheap enough to run
+            // directly on the communicator's delivery thread.
+            Box::new(move |task: Value, ctx| sched.admit_task(task, ctx))
         };
-        let subscription =
-            comm.task_queue(&config.task_queue, config.workers as u32, handler)?;
-        Ok(Daemon { comm, subscription, pool: Some(pool) })
+        let prefetch = u32::try_from(config.max_resident_processes).unwrap_or(u32::MAX);
+        let subscription = comm.task_queue(&config.task_queue, prefetch, handler)?;
+        Ok(Daemon { comm, subscription, sched })
+    }
+
+    /// The scheduler driving this daemon's processes (stats, waits,
+    /// checkpoint resumption).
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
+    }
+
+    /// Re-enqueue every non-terminal checkpoint in the store through the
+    /// task queue. Call after a restart to pick interrupted work back up.
+    pub fn resume_stored(&self) -> Result<usize> {
+        self.sched.resume_stored()
     }
 
     /// Graceful shutdown (paper §I.A: "gracefully or abruptly shut down and
-    /// no task will be lost"): stop consuming, finish in-flight processes.
-    pub fn shutdown(mut self) {
+    /// no task will be lost"): stop consuming, finish in-flight steps.
+    pub fn shutdown(self) {
         self.comm.remove_task_subscriber(&self.subscription).ok();
-        if let Some(pool) = self.pool.take() {
-            pool.shutdown();
-        }
+        self.sched.shutdown();
+        // Drop then runs abort(), which is a no-op after shutdown.
     }
 }
 
-type PoolSender = Box<dyn Fn(Box<dyn FnOnce() + Send>) -> std::result::Result<(), ()> + Send>;
-
-fn pool_sender(pool: &WorkerPool) -> PoolSender {
-    // WorkerPool::submit borrows the pool; we need a handle the closure can
-    // own. Clone the underlying channel sender.
-    let tx = pool.sender();
-    Box::new(move |job| tx.send(job).map_err(|_| ()))
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        // Abrupt semantics: the task handler owns a scheduler Arc via the
+        // communicator's subscriber map, so dropping the Daemon alone
+        // would leave worker threads polling forever. Signal shutdown
+        // without joining — in-flight deliveries stay unacked and the
+        // broker requeues them (the in-process `kill -9`).
+        self.comm.remove_task_subscriber(&self.subscription).ok();
+        self.sched.abort();
+    }
 }
 
 #[cfg(test)]
@@ -163,14 +184,68 @@ mod tests {
     }
 
     #[test]
+    fn daemon_handles_more_processes_than_workers() {
+        // Residency, not thread count, bounds concurrency: 2 workers must
+        // carry 32 simultaneously-waiting processes to completion.
+        struct Nap;
+        impl ProcessLogic for Nap {
+            fn step(
+                &mut self,
+                step: u32,
+                _: &mut StepContext,
+            ) -> crate::error::Result<StepOutcome> {
+                if step == 0 {
+                    Ok(StepOutcome::Wait(crate::workflow::process::WaitCondition::Timer(
+                        Duration::from_millis(30),
+                    )))
+                } else {
+                    Ok(StepOutcome::Finish(Value::str("ok")))
+                }
+            }
+            fn save_state(&self) -> Value {
+                Value::Null
+            }
+            fn load_state(&mut self, _: &Value) -> crate::error::Result<()> {
+                Ok(())
+            }
+        }
+        let broker = InprocBroker::new();
+        let worker_comm: Arc<dyn Communicator> = Arc::new(
+            RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap(),
+        );
+        let client_comm: Arc<dyn Communicator> = Arc::new(
+            RmqCommunicator::connect(broker.connect(), RmqConfig::default()).unwrap(),
+        );
+        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+        let reg = ProcessRegistry::new();
+        reg.register("nap", || Box::new(Nap));
+        let daemon = Daemon::start(
+            Arc::clone(&worker_comm),
+            store,
+            reg,
+            DaemonConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        let launcher = RemoteLauncher::new(Arc::clone(&client_comm));
+        let futs: Vec<_> =
+            (0..32).map(|_| launcher.launch("nap", Value::Null).unwrap().1).collect();
+        for f in futs {
+            let record = f.wait(Duration::from_secs(10)).unwrap();
+            assert_eq!(record.get_str("state").unwrap(), "finished");
+        }
+        daemon.shutdown();
+    }
+
+    #[test]
     fn abrupt_daemon_death_requeues_to_survivor() {
         // The paper's core §I.A claim at the full-stack level: kill a
         // daemon mid-task, watch the task finish elsewhere.
         let broker = InprocBroker::new();
         let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
 
-        // A process type that stalls until a file "release" flag appears —
-        // lets us control when workers can finish.
+        // A process type that stalls (short timer waits) until a release
+        // flag flips — lets us control when workers can finish.
         struct Stall {
             release: Arc<std::sync::atomic::AtomicBool>,
         }
@@ -221,7 +296,7 @@ mod tests {
         // (the in-process equivalent of `kill -9`).
         std::thread::sleep(Duration::from_millis(200));
         doomed_typed.close();
-        drop(doomed); // detaches the stalled worker thread
+        drop(doomed); // abort(): detached workers wind down, task stays unacked
 
         // Second daemon; release the stall so it can finish.
         release.store(true, std::sync::atomic::Ordering::Relaxed);

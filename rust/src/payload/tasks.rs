@@ -189,9 +189,28 @@ mod tests {
     use super::*;
     use crate::communicator::{Communicator, LocalCommunicator};
     use crate::workflow::checkpoint::{CheckpointStore, MemoryCheckpointStore};
-    use crate::workflow::launcher::{ProcessLauncher, DEFAULT_TASK_QUEUE};
-    use crate::workflow::process::{RunOutcome, Runner};
+    use crate::workflow::launcher::DEFAULT_TASK_QUEUE;
+    use crate::workflow::scheduler::{Scheduler, SchedulerConfig};
     use std::path::PathBuf;
+    use std::time::Duration;
+
+    const WAIT: Duration = Duration::from_secs(60);
+
+    fn scheduler(
+        comm: &Arc<dyn Communicator>,
+        store: &Arc<dyn CheckpointStore>,
+        registry: &ProcessRegistry,
+    ) -> Arc<Scheduler> {
+        Arc::new(
+            Scheduler::start(
+                Arc::clone(comm),
+                Arc::clone(store),
+                registry.clone(),
+                SchedulerConfig { workers: 2, max_resident: 0, ..SchedulerConfig::default() },
+            )
+            .unwrap(),
+        )
+    }
 
     fn engine() -> Arc<Engine> {
         Arc::new(
@@ -200,8 +219,9 @@ mod tests {
         )
     }
 
-    fn setup(engine: Arc<Engine>) -> (Arc<dyn Communicator>, Arc<dyn CheckpointStore>, ProcessRegistry)
-    {
+    fn setup(
+        engine: Arc<Engine>,
+    ) -> (Arc<dyn Communicator>, Arc<dyn CheckpointStore>, ProcessRegistry) {
         let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
         let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
         let registry = ProcessRegistry::new();
@@ -216,93 +236,75 @@ mod tests {
         let (comm, store, registry) = setup(Arc::clone(&eng));
         let pos = structures::fcc_positions(n, 1.5);
         let want = crate::payload::lj_ref::total_energy(&pos) as f64;
-        let runner = Runner::launch(
-            "calc1",
-            "lj_calc",
-            Value::map([("positions", Value::F32s(pos))]),
-            comm,
-            store,
-            &registry,
-            "q",
-        )
-        .unwrap();
-        match runner.run().unwrap() {
-            RunOutcome::Finished(out) => {
-                let e = out.get_f64("energy").unwrap();
-                assert!((e - want).abs() <= 1e-3 * want.abs().max(1.0), "{e} vs {want}");
-                assert_eq!(out.get("forces").unwrap().as_f32s().unwrap().len(), n * 3);
-            }
-            other => panic!("unexpected {other:?}"),
-        }
+        let sched = scheduler(&comm, &store, &registry);
+        sched
+            .launch_with_pid("calc1", "lj_calc", Value::map([("positions", Value::F32s(pos))]))
+            .unwrap();
+        let record = sched.wait_terminal("calc1", WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        let out = record.get("outputs").unwrap();
+        let e = out.get_f64("energy").unwrap();
+        assert!((e - want).abs() <= 1e-3 * want.abs().max(1.0), "{e} vs {want}");
+        assert_eq!(out.get("forces").unwrap().as_f32s().unwrap().len(), n * 3);
+        sched.shutdown();
     }
 
     #[test]
     fn lj_calc_rejects_wrong_atom_count() {
         let eng = engine();
         let (comm, store, registry) = setup(eng);
-        let runner = Runner::launch(
+        let sched = scheduler(&comm, &store, &registry);
+        let launched = sched.launch_with_pid(
             "calc2",
             "lj_calc",
             Value::map([("positions", Value::F32s(vec![0.0; 9]))]),
-            comm,
-            store,
-            &registry,
-            "q",
         );
-        assert!(runner.is_err());
+        assert!(launched.is_err());
+        sched.shutdown();
     }
 
     #[test]
     fn eos_batch_process_fits_minimum() {
         let eng = engine();
         let (comm, store, registry) = setup(Arc::clone(&eng));
-        let runner = Runner::launch(
-            "eb1",
-            "eos_batch",
-            Value::map([
-                ("lattice_a", Value::F64(1.5)),
-                ("n_volumes", Value::from(eng.manifest.batch as u64)),
-                ("scale_lo", Value::F64(0.94)),
-                ("scale_hi", Value::F64(1.06)),
-            ]),
-            comm,
-            store,
-            &registry,
-            "q",
-        )
-        .unwrap();
-        match runner.run().unwrap() {
-            RunOutcome::Finished(out) => {
-                let v0 = out.get_f64("v0").unwrap();
-                let e0 = out.get_f64("e0").unwrap();
-                // FCC LJ equilibrium: nearest-neighbour distance ~2^(1/6),
-                // lattice a0 = 2^(1/6)*sqrt(2) ~ 1.587 -> v0 ~ a0^3 ~ 4.0.
-                // Finite 32-atom cluster shifts this; just sanity-bound it.
-                assert!(v0 > 2.0 && v0 < 5.0, "v0 = {v0}");
-                assert!(e0 < 0.0, "bound cluster has negative energy: {e0}");
-            }
-            other => panic!("unexpected {other:?}"),
-        }
+        let sched = scheduler(&comm, &store, &registry);
+        sched
+            .launch_with_pid(
+                "eb1",
+                "eos_batch",
+                Value::map([
+                    ("lattice_a", Value::F64(1.5)),
+                    ("n_volumes", Value::from(eng.manifest.batch as u64)),
+                    ("scale_lo", Value::F64(0.94)),
+                    ("scale_hi", Value::F64(1.06)),
+                ]),
+            )
+            .unwrap();
+        let record = sched.wait_terminal("eb1", WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        let out = record.get("outputs").unwrap();
+        let v0 = out.get_f64("v0").unwrap();
+        let e0 = out.get_f64("e0").unwrap();
+        // FCC LJ equilibrium: nearest-neighbour distance ~2^(1/6),
+        // lattice a0 = 2^(1/6)*sqrt(2) ~ 1.587 -> v0 ~ a0^3 ~ 4.0.
+        // Finite 32-atom cluster shifts this; just sanity-bound it.
+        assert!(v0 > 2.0 && v0 < 5.0, "v0 = {v0}");
+        assert!(e0 < 0.0, "bound cluster has negative energy: {e0}");
+        sched.shutdown();
     }
 
     #[test]
     fn eos_workchain_fans_out_and_matches_batch() {
         let eng = engine();
         let (comm, store, registry) = setup(Arc::clone(&eng));
-        // Daemon stand-in running children on threads.
-        let launcher = Arc::new(ProcessLauncher::new(
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            registry.clone(),
-        ));
-        let l2 = Arc::clone(&launcher);
+        // Daemon stand-in: the scheduler consumes its own task queue, so
+        // fanned-out children run on the bounded worker pool.
+        let sched = scheduler(&comm, &store, &registry);
+        let s2 = Arc::clone(&sched);
         comm.task_queue(
             DEFAULT_TASK_QUEUE,
             0,
-            Box::new(move |task, tctx| {
-                let l3 = Arc::clone(&l2);
-                std::thread::spawn(move || l3.handle_task(task, tctx));
-            }),
+            Box::new(move |task, tctx| s2.admit_task(task, tctx)),
         )
         .unwrap();
 
@@ -312,27 +314,16 @@ mod tests {
             ("scale_lo", Value::F64(0.94)),
             ("scale_hi", Value::F64(1.06)),
         ]);
-        let fanout = Runner::launch(
-            "eos1",
-            "eos",
-            inputs.clone(),
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            &registry,
-            DEFAULT_TASK_QUEUE,
-        )
-        .unwrap()
-        .run()
-        .unwrap();
-        let batch = Runner::launch("eos2", "eos_batch", inputs, comm, store, &registry, "q")
-            .unwrap()
-            .run()
-            .unwrap();
-        let (RunOutcome::Finished(a), RunOutcome::Finished(b)) = (fanout, batch) else {
-            panic!("both must finish");
-        };
+        sched.launch_with_pid("eos1", "eos", inputs.clone()).unwrap();
+        let fanout = sched.wait_terminal("eos1", WAIT).unwrap();
+        sched.launch_with_pid("eos2", "eos_batch", inputs).unwrap();
+        let batch = sched.wait_terminal("eos2", WAIT).unwrap();
+        assert_eq!(fanout.get_str("state").unwrap(), "finished");
+        assert_eq!(batch.get_str("state").unwrap(), "finished");
+        let (a, b) = (fanout.get("outputs").unwrap(), batch.get("outputs").unwrap());
         // Same physics through two different execution paths.
         let (va, vb) = (a.get_f64("v0").unwrap(), b.get_f64("v0").unwrap());
         assert!((va - vb).abs() < 1e-2 * vb.abs(), "fanout v0 {va} vs batch v0 {vb}");
+        sched.shutdown();
     }
 }

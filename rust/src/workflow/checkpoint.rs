@@ -14,6 +14,60 @@ use crate::error::{Error, Result};
 use crate::wire::{json, Value};
 use crate::workflow::state::ProcessState;
 
+/// The wait a checkpointed process was parked on, persisted so a resume
+/// re-enters the *same* wait instead of restarting it.
+///
+/// Timer waits persist an **absolute deadline** (epoch milliseconds, so it
+/// is meaningful on any machine): a process that checkpointed 40 s into a
+/// 60 s sleep resumes with ~20 s left, and one whose deadline already
+/// passed while it was parked resumes immediately — elapsed time is never
+/// lost across a daemon restart.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PersistedWait {
+    /// Child pids whose terminal records are still outstanding.
+    Children(Vec<String>),
+    /// Absolute wall-clock deadline in milliseconds since the UNIX epoch.
+    TimerDeadlineMs(u64),
+}
+
+impl PersistedWait {
+    fn to_value(&self) -> Value {
+        match self {
+            PersistedWait::Children(pids) => Value::map([
+                ("kind", Value::str("children")),
+                ("pids", Value::list(pids.iter().map(Value::str))),
+            ]),
+            PersistedWait::TimerDeadlineMs(ms) => Value::map([
+                ("kind", Value::str("timer")),
+                ("deadline_ms", Value::from(*ms)),
+            ]),
+        }
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        match v.get_str("kind")? {
+            "children" => Ok(PersistedWait::Children(
+                v.get("pids")?
+                    .as_list()?
+                    .iter()
+                    .map(|p| p.as_str().map(String::from))
+                    .collect::<Result<Vec<_>>>()?,
+            )),
+            "timer" => Ok(PersistedWait::TimerDeadlineMs(v.get_u64("deadline_ms")?)),
+            other => Err(Error::Persistence(format!("unknown wait kind '{other}'"))),
+        }
+    }
+}
+
+/// Current wall-clock time in milliseconds since the UNIX epoch (the unit
+/// [`PersistedWait::TimerDeadlineMs`] is expressed in).
+pub fn epoch_ms_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
 /// A serialised process.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Bundle {
@@ -25,17 +79,25 @@ pub struct Bundle {
     pub step: u32,
     /// The logic's own state (inputs, intermediate context, ...).
     pub logic_state: Value,
+    /// The wait the process was parked on when checkpointed (None for a
+    /// process checkpointed between steps). Absent in pre-PersistedWait
+    /// checkpoints, which load as `None`.
+    pub wait: Option<PersistedWait>,
 }
 
 impl Bundle {
     pub fn to_value(&self) -> Value {
-        Value::map([
+        let mut fields = vec![
             ("pid", Value::str(&self.pid)),
             ("process_type", Value::str(&self.process_type)),
             ("state", Value::str(self.state.as_str())),
             ("step", Value::from(self.step as u64)),
             ("logic_state", self.logic_state.clone()),
-        ])
+        ];
+        if let Some(wait) = &self.wait {
+            fields.push(("wait", wait.to_value()));
+        }
+        Value::map(fields)
     }
 
     pub fn from_value(v: &Value) -> Result<Self> {
@@ -45,6 +107,10 @@ impl Bundle {
             state: ProcessState::parse(v.get_str("state")?)?,
             step: v.get_u64("step")? as u32,
             logic_state: v.get("logic_state")?.clone(),
+            wait: match v.get_opt("wait") {
+                Some(w) if !w.is_null() => Some(PersistedWait::from_value(w)?),
+                _ => None,
+            },
         })
     }
 }
@@ -125,8 +191,10 @@ impl FileCheckpointStore {
 
     fn path(&self, pid: &str) -> PathBuf {
         // Sanitise: pids are generated by us but never trust path fragments.
-        let safe: String =
-            pid.chars().map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' }).collect();
+        let safe: String = pid
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
         self.dir.join(format!("{safe}.checkpoint.json"))
     }
 }
@@ -205,6 +273,7 @@ mod tests {
                 ("inputs", Value::map([("volume", Value::F64(11.2))])),
                 ("children", Value::list([Value::str("c1"), Value::str("c2")])),
             ]),
+            wait: Some(PersistedWait::Children(vec!["c1".into(), "c2".into()])),
         }
     }
 
@@ -212,6 +281,30 @@ mod tests {
     fn bundle_value_roundtrip() {
         let b = bundle("p1");
         assert_eq!(Bundle::from_value(&b.to_value()).unwrap(), b);
+    }
+
+    #[test]
+    fn bundle_roundtrips_timer_wait_and_none() {
+        let mut b = bundle("p1");
+        b.wait = Some(PersistedWait::TimerDeadlineMs(1_723_000_000_123));
+        assert_eq!(Bundle::from_value(&b.to_value()).unwrap(), b);
+        b.wait = None;
+        assert_eq!(Bundle::from_value(&b.to_value()).unwrap(), b);
+    }
+
+    #[test]
+    fn bundle_without_wait_field_loads_as_none() {
+        // Pre-PersistedWait checkpoints have no "wait" key at all.
+        let legacy = Value::map([
+            ("pid", Value::str("old")),
+            ("process_type", Value::str("eos")),
+            ("state", Value::str("running")),
+            ("step", Value::from(2u64)),
+            ("logic_state", Value::Null),
+        ]);
+        let b = Bundle::from_value(&legacy).unwrap();
+        assert_eq!(b.wait, None);
+        assert_eq!(b.step, 2);
     }
 
     #[test]

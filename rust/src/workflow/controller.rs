@@ -26,7 +26,12 @@ impl ProcessController {
         self
     }
 
-    fn intent(&self, pid: &str, intent: &str, extra: Option<(&str, Value)>) -> Result<KiwiFuture<Value>> {
+    fn intent(
+        &self,
+        pid: &str,
+        intent: &str,
+        extra: Option<(&str, Value)>,
+    ) -> Result<KiwiFuture<Value>> {
         let mut fields = vec![("intent", Value::str(intent))];
         if let Some((k, v)) = extra {
             fields.push((k, v));

@@ -3,8 +3,9 @@
 //! * [`RemoteLauncher`] — client side: `launch` / `continue_process` submit
 //!   task messages; the task's future resolves with the process's terminal
 //!   record when a daemon worker completes it.
-//! * [`ProcessLauncher`] — worker side: interprets those task messages,
-//!   builds a [`Runner`] (fresh or from checkpoint) and runs it.
+//! * [`LaunchRequest`] — the task-message vocabulary both sides share.
+//! * [`ProcessLauncher`] — worker side: a thin adapter feeding task
+//!   messages into the event-driven [`Scheduler`].
 
 use std::sync::Arc;
 
@@ -13,11 +14,33 @@ use crate::communicator::{unique_id, Communicator, KiwiFuture};
 use crate::error::{Error, Result};
 use crate::wire::Value;
 use crate::workflow::checkpoint::CheckpointStore;
-use crate::workflow::process::Runner;
 use crate::workflow::registry::ProcessRegistry;
+use crate::workflow::scheduler::{Scheduler, SchedulerConfig};
 
 /// Default task queue name (AiiDA uses a single process queue too).
 pub const DEFAULT_TASK_QUEUE: &str = "kiwi.tasks";
+
+/// A parsed launch/continue task message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LaunchRequest {
+    Launch { pid: String, process_type: String, inputs: Value },
+    Continue { pid: String },
+}
+
+impl LaunchRequest {
+    /// Parse a task-queue message (`{action: "launch"|"continue", ...}`).
+    pub fn parse(task: &Value) -> Result<LaunchRequest> {
+        match task.get_str("action")? {
+            "launch" => Ok(LaunchRequest::Launch {
+                pid: task.get_str("pid")?.to_string(),
+                process_type: task.get_str("process_type")?.to_string(),
+                inputs: task.get("inputs")?.clone(),
+            }),
+            "continue" => Ok(LaunchRequest::Continue { pid: task.get_str("pid")?.to_string() }),
+            other => Err(Error::Broker(format!("unknown task action '{other}'"))),
+        }
+    }
+}
 
 /// Client-side launcher.
 pub struct RemoteLauncher {
@@ -62,85 +85,40 @@ impl RemoteLauncher {
     }
 }
 
-/// Worker-side interpreter of launch/continue tasks.
+/// Worker-side interpreter of launch/continue tasks: hands them to the
+/// scheduler's admission queue. Kept as a named type (rather than a bare
+/// closure over [`Scheduler`]) so daemon wiring and tests have a stable
+/// seam.
 pub struct ProcessLauncher {
-    comm: Arc<dyn Communicator>,
-    store: Arc<dyn CheckpointStore>,
-    registry: ProcessRegistry,
-    queue: String,
+    sched: Arc<Scheduler>,
 }
 
 impl ProcessLauncher {
+    /// Build a launcher around a fresh default-config scheduler.
     pub fn new(
         comm: Arc<dyn Communicator>,
         store: Arc<dyn CheckpointStore>,
         registry: ProcessRegistry,
-    ) -> Self {
-        Self::with_queue(comm, store, registry, DEFAULT_TASK_QUEUE)
+    ) -> Result<Self> {
+        let sched = Scheduler::start(comm, store, registry, SchedulerConfig::default())?;
+        Ok(ProcessLauncher { sched: Arc::new(sched) })
     }
 
-    pub fn with_queue(
-        comm: Arc<dyn Communicator>,
-        store: Arc<dyn CheckpointStore>,
-        registry: ProcessRegistry,
-        queue: &str,
-    ) -> Self {
-        ProcessLauncher { comm, store, registry, queue: queue.to_string() }
+    /// Wrap an existing scheduler (the daemon path: the daemon owns the
+    /// scheduler's lifecycle and config).
+    pub fn with_scheduler(sched: Arc<Scheduler>) -> Self {
+        ProcessLauncher { sched }
     }
 
-    /// Build the runner a task message describes.
-    pub fn runner_for(&self, task: &Value) -> Result<Runner> {
-        match task.get_str("action")? {
-            "launch" => Runner::launch(
-                task.get_str("pid")?,
-                task.get_str("process_type")?,
-                task.get("inputs")?.clone(),
-                Arc::clone(&self.comm),
-                Arc::clone(&self.store),
-                &self.registry,
-                &self.queue,
-            ),
-            "continue" => {
-                let pid = task.get_str("pid")?;
-                let bundle = self
-                    .store
-                    .load(pid)?
-                    .ok_or_else(|| Error::Persistence(format!("no checkpoint for '{pid}'")))?;
-                Runner::from_bundle(
-                    &bundle,
-                    Arc::clone(&self.comm),
-                    Arc::clone(&self.store),
-                    &self.registry,
-                    &self.queue,
-                )
-            }
-            other => Err(Error::Broker(format!("unknown task action '{other}'"))),
-        }
+    /// The scheduler executing this launcher's processes.
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
     }
 
-    /// Execute one task message to completion and settle its context.
-    /// This is what daemon workers run on their worker threads.
+    /// Enqueue one task message. Cheap — parsing and execution happen on
+    /// the scheduler's worker pool, never on the delivery thread.
     pub fn handle_task(&self, task: Value, ctx: TaskContext) {
-        match self.runner_for(&task) {
-            Ok(runner) => {
-                let result = runner.run().map(|outcome| outcome.to_record());
-                ctx.complete(result);
-            }
-            Err(Error::Persistence(m)) => {
-                // A `continue` task whose checkpoint this daemon cannot
-                // see: checkpoint stores are per-daemon, so hand the task
-                // back for a daemon that owns it. The task queue's
-                // `max_delivery` cap turns a checkpoint *nobody* holds
-                // into a dead-letter instead of an infinite redelivery
-                // loop (the poison-pill path).
-                log::warn!("launcher: cannot continue here ({m}); returning task to the queue");
-                ctx.reject(true);
-            }
-            Err(e) => {
-                log::warn!("launcher: task rejected: {e}");
-                ctx.complete(Err(e));
-            }
-        }
+        self.sched.admit_task(task, ctx);
     }
 }
 
@@ -174,11 +152,9 @@ mod tests {
         let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
         let registry = ProcessRegistry::new();
         registry.register("echo", || Box::new(Echo { inputs: Value::Null }));
-        let launcher = Arc::new(ProcessLauncher::new(
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            registry,
-        ));
+        let launcher = Arc::new(
+            ProcessLauncher::new(Arc::clone(&comm), Arc::clone(&store), registry).unwrap(),
+        );
         let l2 = Arc::clone(&launcher);
         comm.task_queue(
             DEFAULT_TASK_QUEUE,
@@ -195,25 +171,45 @@ mod tests {
         assert_eq!(record.get_str("state").unwrap(), "finished");
         assert_eq!(record.get("outputs").unwrap().get_i64("x").unwrap(), 9);
         assert!(pid.starts_with("proc-"));
+        launcher.scheduler().shutdown();
     }
 
     #[test]
-    fn continue_task_without_checkpoint_errors() {
+    fn launch_requests_parse() {
+        let launch = Value::map([
+            ("action", Value::str("launch")),
+            ("process_type", Value::str("echo")),
+            ("inputs", Value::map([("x", Value::I64(1))])),
+            ("pid", Value::str("p9")),
+        ]);
+        assert_eq!(
+            LaunchRequest::parse(&launch).unwrap(),
+            LaunchRequest::Launch {
+                pid: "p9".into(),
+                process_type: "echo".into(),
+                inputs: Value::map([("x", Value::I64(1))]),
+            }
+        );
+        let cont = Value::map([("action", Value::str("continue")), ("pid", Value::str("p9"))]);
+        assert_eq!(
+            LaunchRequest::parse(&cont).unwrap(),
+            LaunchRequest::Continue { pid: "p9".into() }
+        );
+    }
+
+    #[test]
+    fn continue_without_checkpoint_errors() {
         let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
         let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
         let launcher =
-            ProcessLauncher::new(Arc::clone(&comm), store, ProcessRegistry::new());
-        let task = Value::map([("action", Value::str("continue")), ("pid", Value::str("ghost"))]);
-        assert!(launcher.runner_for(&task).is_err());
+            ProcessLauncher::new(Arc::clone(&comm), store, ProcessRegistry::new()).unwrap();
+        assert!(launcher.scheduler().continue_local("ghost").is_err());
+        launcher.scheduler().shutdown();
     }
 
     #[test]
     fn unknown_action_rejected() {
-        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
-        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
-        let launcher =
-            ProcessLauncher::new(Arc::clone(&comm), store, ProcessRegistry::new());
         let task = Value::map([("action", Value::str("explode"))]);
-        assert!(launcher.runner_for(&task).is_err());
+        assert!(LaunchRequest::parse(&task).is_err());
     }
 }

@@ -16,14 +16,18 @@ pub mod controller;
 pub mod launcher;
 pub mod process;
 pub mod registry;
+pub mod scheduler;
 pub mod state;
 pub mod workchain;
 
-pub use checkpoint::{Bundle, CheckpointStore, FileCheckpointStore, MemoryCheckpointStore};
+pub use checkpoint::{
+    Bundle, CheckpointStore, FileCheckpointStore, MemoryCheckpointStore, PersistedWait,
+};
 pub use controller::ProcessController;
-pub use launcher::{ProcessLauncher, RemoteLauncher};
-pub use process::{ProcessLogic, RunOutcome, Runner, StepContext, StepOutcome, WaitCondition};
+pub use launcher::{LaunchRequest, ProcessLauncher, RemoteLauncher};
+pub use process::{ProcessLogic, RunOutcome, StepContext, StepEnv, StepOutcome, WaitCondition};
 pub use registry::ProcessRegistry;
+pub use scheduler::{Scheduler, SchedulerConfig, SchedulerStats};
 pub use state::ProcessState;
 
 /// Broadcast subject for a process state change.

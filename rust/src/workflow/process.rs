@@ -1,23 +1,22 @@
-//! The process runner: executes a [`ProcessLogic`] step machine with
-//! checkpoints after every step, RPC control (`pause`/`play`/`kill`/
-//! `status`), state-change broadcasts, and broadcast-driven waiting on
-//! child processes.
+//! The process model: a [`ProcessLogic`] step machine plus the small
+//! shared vocabulary (step outcomes, wait conditions, terminal records)
+//! the event-driven scheduler executes.
 //!
 //! A *process* here is plumpy's `Process`: a resumable unit of work whose
 //! control flow is a sequence of steps. Steps are the checkpoint
 //! granularity — exactly like plumpy, where a process can be serialised
 //! between (but not during) state transitions.
+//!
+//! Since the event-driven refactor this module holds **no thread or
+//! blocking code**: steps return [`StepOutcome`]s and the scheduler
+//! (`workflow::scheduler`) decides what happens next. A step that waits
+//! does not park a thread — the scheduler registers an event subscription
+//! or a timer-wheel entry and the worker thread moves on to another
+//! process.
 
-use std::collections::BTreeMap;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
-
-use crate::communicator::{unique_id, BroadcastFilter, Communicator};
 use crate::error::{Error, Result};
 use crate::wire::Value;
-use crate::workflow::checkpoint::{Bundle, CheckpointStore};
-use crate::workflow::state::{ProcessEvent, ProcessState};
-use crate::workflow::{process_rpc_id, state_subject};
+use crate::workflow::state::ProcessState;
 
 /// User-implemented process body: a step machine.
 pub trait ProcessLogic: Send {
@@ -51,50 +50,50 @@ pub enum StepOutcome {
 pub enum WaitCondition {
     /// All the given child processes reached a terminal state.
     ProcessesTerminated(Vec<String>),
-    /// A fixed delay (restarts from zero if resumed from checkpoint —
-    /// documented behaviour, DESIGN.md §11 durability notes).
-    Timer(Duration),
+    /// A fixed delay. The scheduler converts this into an absolute
+    /// deadline which is persisted in the checkpoint bundle, so a resume
+    /// waits only the *remaining* time (an already-expired deadline
+    /// resumes immediately) — elapsed time survives daemon restarts.
+    Timer(std::time::Duration),
+}
+
+/// The scheduler-side services a step may call. Implemented by the
+/// scheduler; indirected through a trait so `ProcessLogic` code depends
+/// only on this module.
+pub trait StepEnv {
+    /// Launch a child process on behalf of `parent`; returns the child pid.
+    fn spawn_child(&mut self, parent: &str, process_type: &str, inputs: Value) -> Result<String>;
+
+    /// Terminal record of a child (`{state, outputs}`), if known.
+    fn child_result(&self, parent: &str, child: &str) -> Result<Option<Value>>;
+
+    /// Broadcast an application-level message from process `pid`.
+    fn broadcast(&self, pid: &str, body: Value, subject: &str) -> Result<()>;
 }
 
 /// Passed to each step.
 pub struct StepContext<'a> {
     pub pid: &'a str,
-    comm: &'a Arc<dyn Communicator>,
-    store: &'a Arc<dyn CheckpointStore>,
-    control: &'a Arc<ControlBlock>,
-    child_subs: &'a mut Vec<String>,
-    /// Task queue children are launched into.
-    task_queue: &'a str,
+    env: &'a mut dyn StepEnv,
 }
 
 impl<'a> StepContext<'a> {
+    pub fn new(pid: &'a str, env: &'a mut dyn StepEnv) -> Self {
+        StepContext { pid, env }
+    }
+
     /// Launch a child process (fire-and-forget: completion is observed via
     /// broadcast / the output record, never via the task reply — the
     /// decoupling §I.C describes). Returns the child pid.
     pub fn spawn(&mut self, process_type: &str, inputs: Value) -> Result<String> {
-        let child_pid = unique_id("proc");
-        // Subscribe to the child's terminal broadcast BEFORE launching so
-        // a fast child cannot slip past us.
-        let sub = subscribe_child_terminal(self.comm, self.control, &child_pid)?;
-        self.child_subs.push(sub);
-        let task = Value::map([
-            ("action", Value::str("launch")),
-            ("process_type", Value::str(process_type)),
-            ("inputs", inputs),
-            ("pid", Value::str(&child_pid)),
-        ]);
-        self.comm.task_send(self.task_queue, task)?;
-        Ok(child_pid)
+        self.env.spawn_child(self.pid, process_type, inputs)
     }
 
     /// Terminal record of a child (`{state, outputs}`), if known. Checks
     /// broadcasts received so far, then the output store (covers children
     /// that finished while this process was checkpointed).
     pub fn child_result(&self, pid: &str) -> Result<Option<Value>> {
-        if let Some(v) = self.control.inner.lock().unwrap().child_events.get(pid) {
-            return Ok(Some(v.clone()));
-        }
-        self.store.load_outputs(pid)
+        self.env.child_result(self.pid, pid)
     }
 
     /// Outputs of a *finished* child; error if it terminated otherwise.
@@ -110,53 +109,8 @@ impl<'a> StepContext<'a> {
 
     /// Broadcast an application-level message from this process.
     pub fn broadcast(&self, body: Value, subject: &str) -> Result<()> {
-        self.comm.broadcast_send(body, Some(self.pid), Some(subject))
+        self.env.broadcast(self.pid, body, subject)
     }
-}
-
-/// Shared between the runner thread and its RPC/broadcast handlers.
-pub(crate) struct ControlBlock {
-    inner: Mutex<ControlState>,
-    cond: Condvar,
-}
-
-#[derive(Default)]
-struct ControlState {
-    pause_requested: bool,
-    kill_requested: Option<String>,
-    /// child pid -> terminal record {state, outputs}.
-    child_events: BTreeMap<String, Value>,
-    /// Mirrors the runner's current state for `status` RPCs.
-    status_state: Option<ProcessState>,
-    status_step: u32,
-}
-
-impl ControlBlock {
-    fn new() -> Self {
-        ControlBlock { inner: Mutex::new(ControlState::default()), cond: Condvar::new() }
-    }
-}
-
-fn subscribe_child_terminal(
-    comm: &Arc<dyn Communicator>,
-    control: &Arc<ControlBlock>,
-    child_pid: &str,
-) -> Result<String> {
-    let control = Arc::clone(control);
-    let pid = child_pid.to_string();
-    comm.add_broadcast_subscriber(
-        BroadcastFilter::all().subject(&format!("state_changed.{child_pid}.*")),
-        Box::new(move |msg| {
-            let Some(subject) = msg.subject.as_deref() else { return };
-            let Some(state_str) = subject.rsplit('.').next() else { return };
-            let Ok(state) = ProcessState::parse(state_str) else { return };
-            if state.is_terminal() {
-                let mut inner = control.inner.lock().unwrap();
-                inner.child_events.insert(pid.clone(), msg.body.clone());
-                control.cond.notify_all();
-            }
-        }),
-    )
 }
 
 /// How a run ended.
@@ -195,803 +149,82 @@ impl RunOutcome {
     }
 }
 
-/// Executes one process to termination.
-pub struct Runner {
-    pid: String,
-    process_type: String,
-    logic: Box<dyn ProcessLogic>,
-    state: ProcessState,
-    step: u32,
-    comm: Arc<dyn Communicator>,
-    store: Arc<dyn CheckpointStore>,
-    control: Arc<ControlBlock>,
-    child_subs: Vec<String>,
-    /// Task queue for spawned children (same queue this process came from).
-    task_queue: String,
-}
-
-impl Runner {
-    /// Fresh process from inputs (launch path). The initial logic state is
-    /// the `{"inputs": ...}` convention.
-    pub fn launch(
-        pid: &str,
-        process_type: &str,
-        inputs: Value,
-        comm: Arc<dyn Communicator>,
-        store: Arc<dyn CheckpointStore>,
-        registry: &crate::workflow::registry::ProcessRegistry,
-        task_queue: &str,
-    ) -> Result<Self> {
-        let mut logic = registry.create(process_type)?;
-        logic.load_state(&Value::map([("inputs", inputs)]))?;
-        Ok(Self::assemble(pid, process_type, logic, ProcessState::Created, 0, comm, store, task_queue))
-    }
-
-    /// Resume from a checkpoint (continue path).
-    pub fn from_bundle(
-        bundle: &Bundle,
-        comm: Arc<dyn Communicator>,
-        store: Arc<dyn CheckpointStore>,
-        registry: &crate::workflow::registry::ProcessRegistry,
-        task_queue: &str,
-    ) -> Result<Self> {
-        if bundle.state.is_terminal() {
-            return Err(Error::Persistence(format!(
-                "cannot resume terminal process '{}'",
-                bundle.pid
-            )));
-        }
-        let mut logic = registry.create(&bundle.process_type)?;
-        logic.load_state(&bundle.logic_state)?;
-        // A checkpointed Running/Waiting process resumes as Created→Running;
-        // Paused stays paused until a `play` RPC.
-        let state = match bundle.state {
-            ProcessState::Paused => ProcessState::Paused,
-            _ => ProcessState::Created,
-        };
-        Ok(Self::assemble(
-            &bundle.pid,
-            &bundle.process_type,
-            logic,
-            state,
-            bundle.step,
-            comm,
-            store,
-            task_queue,
-        ))
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn assemble(
-        pid: &str,
-        process_type: &str,
-        logic: Box<dyn ProcessLogic>,
-        state: ProcessState,
-        step: u32,
-        comm: Arc<dyn Communicator>,
-        store: Arc<dyn CheckpointStore>,
-        task_queue: &str,
-    ) -> Self {
-        Runner {
-            pid: pid.to_string(),
-            process_type: process_type.to_string(),
-            logic,
-            state,
-            step,
-            comm,
-            store,
-            control: Arc::new(ControlBlock::new()),
-            child_subs: Vec::new(),
-            task_queue: task_queue.to_string(),
-        }
-    }
-
-    pub fn pid(&self) -> &str {
-        &self.pid
-    }
-
-    /// Run to termination. Registers the RPC endpoint for the duration,
-    /// obeys global `control.all.*` broadcasts (paper §I.C: "sending
-    /// pause, play or kill messages to all processes at once"), and
-    /// broadcasts every state change.
-    pub fn run(mut self) -> Result<RunOutcome> {
-        let rpc_id = process_rpc_id(&self.pid);
-        self.register_rpc(&rpc_id)?;
-        let control_sub = self.register_control_broadcast().ok();
-        let outcome = self.run_inner();
-        if let Some(sub) = control_sub {
-            self.comm.remove_broadcast_subscriber(&sub).ok();
-        }
-        // Terminal bookkeeping (order matters: record THEN broadcast, so
-        // anyone woken by the broadcast finds the record).
-        let outcome = match outcome {
-            Ok(o) => o,
-            Err(e) => RunOutcome::Excepted(e.to_string()),
-        };
-        let record = outcome.to_record();
-        self.store.save_outputs(&self.pid, &record).ok();
-        match outcome.state() {
-            ProcessState::Finished => {
-                self.store.delete(&self.pid).ok();
-            }
-            _ => {
-                // Keep the checkpoint for post-mortem (AiiDA behaviour).
-                self.checkpoint().ok();
-            }
-        }
-        self.comm
-            .broadcast_send(record, Some(&self.pid), Some(&state_subject(&self.pid, outcome.state())))
-            .ok();
-        self.comm.remove_rpc_subscriber(&rpc_id).ok();
-        for sub in self.child_subs.drain(..) {
-            self.comm.remove_broadcast_subscriber(&sub).ok();
-        }
-        Ok(outcome)
-    }
-
-    /// Subscribe to `control.all.<intent>` broadcasts: fleet-wide
-    /// pause/play/kill without knowing any pids.
-    fn register_control_broadcast(&self) -> Result<String> {
-        let control = Arc::clone(&self.control);
-        self.comm.add_broadcast_subscriber(
-            BroadcastFilter::all().subject("control.all.*"),
-            Box::new(move |msg| {
-                let Some(subject) = msg.subject.as_deref() else { return };
-                let Some(intent) = subject.rsplit('.').next() else { return };
-                let mut inner = control.inner.lock().unwrap();
-                match intent {
-                    "pause" => inner.pause_requested = true,
-                    "play" => inner.pause_requested = false,
-                    "kill" => {
-                        inner.kill_requested =
-                            Some("killed by control broadcast".to_string());
-                    }
-                    _ => return,
-                }
-                control.cond.notify_all();
-            }),
-        )
-    }
-
-    fn register_rpc(&self, rpc_id: &str) -> Result<()> {
-        let control = Arc::clone(&self.control);
-        let pid = self.pid.clone();
-        self.comm.add_rpc_subscriber(
-            rpc_id,
-            Box::new(move |msg| {
-                let intent = msg.get_str("intent")?;
-                let mut inner = control.inner.lock().unwrap();
-                match intent {
-                    "pause" => {
-                        inner.pause_requested = true;
-                        control.cond.notify_all();
-                        Ok(Value::Bool(true))
-                    }
-                    "play" => {
-                        inner.pause_requested = false;
-                        control.cond.notify_all();
-                        Ok(Value::Bool(true))
-                    }
-                    "kill" => {
-                        let reason = msg
-                            .get_opt("reason")
-                            .and_then(|r| r.as_str().ok())
-                            .unwrap_or("killed by rpc")
-                            .to_string();
-                        inner.kill_requested = Some(reason);
-                        control.cond.notify_all();
-                        Ok(Value::Bool(true))
-                    }
-                    "status" => Ok(Value::map([
-                        ("pid", Value::str(&pid)),
-                        (
-                            "state",
-                            Value::str(
-                                inner.status_state.map(|s| s.as_str()).unwrap_or("unknown"),
-                            ),
-                        ),
-                        ("step", Value::from(inner.status_step as u64)),
-                    ])),
-                    other => Err(Error::RemoteException(format!("unknown intent '{other}'"))),
-                }
-            }),
-        )
-    }
-
-    fn transition(&mut self, event: ProcessEvent) -> Result<()> {
-        let next = self.state.apply(event)?;
-        self.set_state(next);
-        Ok(())
-    }
-
-    fn set_state(&mut self, next: ProcessState) {
-        self.state = next;
-        {
-            let mut inner = self.control.inner.lock().unwrap();
-            inner.status_state = Some(next);
-            inner.status_step = self.step;
-        }
-        // Non-terminal state changes broadcast with an empty body; terminal
-        // ones are broadcast by `run` with the full record.
-        if !next.is_terminal() {
-            self.comm
-                .broadcast_send(Value::Null, Some(&self.pid), Some(&state_subject(&self.pid, next)))
-                .ok();
-        }
-    }
-
-    fn checkpoint(&self) -> Result<()> {
-        self.store.save(&Bundle {
-            pid: self.pid.clone(),
-            process_type: self.process_type.clone(),
-            state: self.state,
-            step: self.step,
-            logic_state: self.logic.save_state(),
-        })
-    }
-
-    fn run_inner(&mut self) -> Result<RunOutcome> {
-        // A paused checkpoint stays paused until played.
-        if self.state == ProcessState::Paused {
-            self.set_state(ProcessState::Paused);
-            if let Some(outcome) = self.block_while_paused()? {
-                return Ok(outcome);
-            }
-        } else {
-            self.transition(ProcessEvent::Play)?;
-        }
-        loop {
-            // Honour control requests between steps (kill beats pause).
-            {
-                let inner = self.control.inner.lock().unwrap();
-                if let Some(reason) = inner.kill_requested.clone() {
-                    drop(inner);
-                    self.transition(ProcessEvent::Kill)?;
-                    return Ok(RunOutcome::Killed(Some(reason)));
-                }
-                if inner.pause_requested {
-                    drop(inner);
-                    self.transition(ProcessEvent::Pause)?;
-                    self.checkpoint()?;
-                    if let Some(outcome) = self.block_while_paused()? {
-                        return Ok(outcome);
-                    }
-                }
-            }
-
-            let step = self.step;
-            let outcome = {
-                let mut ctx = StepContext {
-                    pid: &self.pid,
-                    comm: &self.comm,
-                    store: &self.store,
-                    control: &self.control,
-                    child_subs: &mut self.child_subs,
-                    task_queue: &self.task_queue,
-                };
-                // Panic isolation: a buggy step must not take the daemon
-                // down; it excepts this process only.
-                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    self.logic.step(step, &mut ctx)
-                })) {
-                    Ok(res) => res,
-                    Err(panic) => {
-                        let msg = panic
-                            .downcast_ref::<&str>()
-                            .map(|s| s.to_string())
-                            .or_else(|| panic.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "step panicked".into());
-                        self.transition(ProcessEvent::Except).ok();
-                        return Ok(RunOutcome::Excepted(msg));
-                    }
-                }
-            };
-            match outcome {
-                Ok(StepOutcome::Continue) => {
-                    self.step += 1;
-                    self.checkpoint()?;
-                }
-                Ok(StepOutcome::Goto(n)) => {
-                    self.step = n;
-                    self.checkpoint()?;
-                }
-                Ok(StepOutcome::Wait(cond)) => {
-                    self.transition(ProcessEvent::Wait)?;
-                    self.step += 1;
-                    self.checkpoint()?;
-                    if let Some(outcome) = self.block_on_wait(&cond)? {
-                        return Ok(outcome);
-                    }
-                    self.transition(ProcessEvent::Resume)?;
-                }
-                Ok(StepOutcome::Finish(outputs)) => {
-                    self.transition(ProcessEvent::Finish)?;
-                    return Ok(RunOutcome::Finished(outputs));
-                }
-                Err(e) => {
-                    self.transition(ProcessEvent::Except).ok();
-                    return Ok(RunOutcome::Excepted(e.to_string()));
-                }
-            }
-        }
-    }
-
-    /// Park until `play` or `kill`. Returns Some(outcome) on kill.
-    fn block_while_paused(&mut self) -> Result<Option<RunOutcome>> {
-        loop {
-            let inner = self.control.inner.lock().unwrap();
-            if let Some(reason) = inner.kill_requested.clone() {
-                drop(inner);
-                self.transition(ProcessEvent::Kill)?;
-                return Ok(Some(RunOutcome::Killed(Some(reason))));
-            }
-            if !inner.pause_requested {
-                drop(inner);
-                self.transition(ProcessEvent::Play)?;
-                return Ok(None);
-            }
-            let _unused = self.control.cond.wait_timeout(inner, Duration::from_millis(250)).unwrap();
-        }
-    }
-
-    /// Park until the wait condition holds. Returns Some(outcome) on kill.
-    fn block_on_wait(&mut self, cond: &WaitCondition) -> Result<Option<RunOutcome>> {
-        let deadline = match cond {
-            WaitCondition::Timer(d) => Some(Instant::now() + *d),
-            WaitCondition::ProcessesTerminated(_) => None,
-        };
-        loop {
-            // Check satisfaction.
-            match cond {
-                WaitCondition::ProcessesTerminated(pids) => {
-                    let all_done = {
-                        let inner = self.control.inner.lock().unwrap();
-                        pids.iter().all(|p| inner.child_events.contains_key(p))
-                    };
-                    // Fall back to the output store for children that
-                    // terminated while we were not listening.
-                    let all_done = all_done
-                        || pids.iter().all(|p| {
-                            let inner = self.control.inner.lock().unwrap();
-                            if inner.child_events.contains_key(p) {
-                                return true;
-                            }
-                            drop(inner);
-                            match self.store.load_outputs(p) {
-                                Ok(Some(rec)) => {
-                                    let mut inner = self.control.inner.lock().unwrap();
-                                    inner.child_events.insert(p.clone(), rec);
-                                    true
-                                }
-                                _ => false,
-                            }
-                        });
-                    if all_done {
-                        return Ok(None);
-                    }
-                }
-                WaitCondition::Timer(_) => {
-                    if Instant::now() >= deadline.unwrap() {
-                        return Ok(None);
-                    }
-                }
-            }
-            let inner = self.control.inner.lock().unwrap();
-            if let Some(reason) = inner.kill_requested.clone() {
-                drop(inner);
-                self.transition(ProcessEvent::Kill)?;
-                return Ok(Some(RunOutcome::Killed(Some(reason))));
-            }
-            // The (guard, timed-out) pair is deliberately discarded: every
-            // pass of the loop re-evaluates the wait condition and the kill
-            // flag from scratch, so signal, timeout and spurious wakeups are
-            // all handled identically. `.unwrap()` still propagates mutex
-            // poisoning — nothing is swallowed here.
-            let _ = self.control.cond.wait_timeout(inner, Duration::from_millis(50)).unwrap();
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::communicator::LocalCommunicator;
-    use crate::workflow::checkpoint::MemoryCheckpointStore;
-    use crate::workflow::registry::ProcessRegistry;
-
-    /// Counts to `target` one step at a time, recording progress in its
-    /// state — the canonical checkpointable process.
-    struct Counter {
-        target: i64,
-        count: i64,
-    }
-
-    impl Counter {
-        fn boxed() -> Box<dyn ProcessLogic> {
-            Box::new(Counter { target: 0, count: 0 })
-        }
-    }
-
-    impl ProcessLogic for Counter {
-        fn step(&mut self, _step: u32, _ctx: &mut StepContext) -> Result<StepOutcome> {
-            self.count += 1;
-            if self.count >= self.target {
-                Ok(StepOutcome::Finish(Value::map([("count", Value::I64(self.count))])))
-            } else {
-                Ok(StepOutcome::Continue)
-            }
-        }
-
-        fn save_state(&self) -> Value {
-            Value::map([("target", Value::I64(self.target)), ("count", Value::I64(self.count))])
-        }
-
-        fn load_state(&mut self, state: &Value) -> Result<()> {
-            if let Some(inputs) = state.get_opt("inputs") {
-                self.target = inputs.get_i64("target")?;
-                self.count = 0;
-            } else {
-                self.target = state.get_i64("target")?;
-                self.count = state.get_i64("count")?;
-            }
-            Ok(())
-        }
-    }
-
-    fn setup() -> (Arc<dyn Communicator>, Arc<dyn CheckpointStore>, ProcessRegistry) {
-        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
-        let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
-        let registry = ProcessRegistry::new();
-        registry.register("counter", Counter::boxed);
-        (comm, store, registry)
-    }
+    use std::collections::BTreeMap;
 
     #[test]
-    fn runs_to_finish_with_outputs() {
-        let (comm, store, registry) = setup();
-        let runner = Runner::launch(
-            "p1",
-            "counter",
-            Value::map([("target", Value::I64(5))]),
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        let outcome = runner.run().unwrap();
-        assert_eq!(
-            outcome,
-            RunOutcome::Finished(Value::map([("count", Value::I64(5))]))
-        );
-        // Checkpoint removed, outputs record present.
-        assert!(store.load("p1").unwrap().is_none());
-        let record = store.load_outputs("p1").unwrap().unwrap();
-        assert_eq!(record.get_str("state").unwrap(), "finished");
+    fn run_outcome_records() {
+        let f = RunOutcome::Finished(Value::map([("x", Value::I64(1))]));
+        assert_eq!(f.state(), ProcessState::Finished);
+        assert_eq!(f.to_record().get_str("state").unwrap(), "finished");
+        assert_eq!(f.to_record().get("outputs").unwrap().get_i64("x").unwrap(), 1);
+
+        let k = RunOutcome::Killed(Some("why".into()));
+        assert_eq!(k.state(), ProcessState::Killed);
+        assert_eq!(k.to_record().get_str("reason").unwrap(), "why");
+
+        let e = RunOutcome::Excepted("boom".into());
+        assert_eq!(e.state(), ProcessState::Excepted);
+        assert_eq!(e.to_record().get_str("reason").unwrap(), "boom");
     }
 
-    #[test]
-    fn state_changes_are_broadcast() {
-        let (comm, store, registry) = setup();
-        let (tx, rx) = std::sync::mpsc::channel();
-        comm.add_broadcast_subscriber(
-            BroadcastFilter::all().subject("state_changed.p2.*"),
-            Box::new(move |m| {
-                tx.send(m.subject.unwrap()).unwrap();
-            }),
-        )
-        .unwrap();
-        let runner = Runner::launch(
-            "p2",
-            "counter",
-            Value::map([("target", Value::I64(1))]),
-            Arc::clone(&comm),
-            store,
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        runner.run().unwrap();
-        let subjects: Vec<String> = rx.try_iter().collect();
-        assert_eq!(
-            subjects,
-            vec!["state_changed.p2.running", "state_changed.p2.finished"]
-        );
+    /// A StepEnv stub: records spawns/broadcasts, serves canned child
+    /// results.
+    struct FakeEnv {
+        spawned: Vec<(String, String)>,
+        results: BTreeMap<String, Value>,
+        broadcasts: std::cell::RefCell<Vec<String>>,
     }
 
-    #[test]
-    fn resume_from_checkpoint_continues_not_restarts() {
-        let (comm, store, registry) = setup();
-        // Run a counter but kill it midway via a kill request injected
-        // after 3 steps using a pausing wrapper: simpler — run a fresh
-        // runner to create checkpoints, then resurrect from the bundle.
-        let runner = Runner::launch(
-            "p3",
-            "counter",
-            Value::map([("target", Value::I64(3))]),
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        runner.run().unwrap();
-        // Craft a mid-flight bundle as if the worker died after count=2.
-        let bundle = Bundle {
-            pid: "p4".into(),
-            process_type: "counter".into(),
-            state: ProcessState::Running,
-            step: 2,
-            logic_state: Value::map([("target", Value::I64(5)), ("count", Value::I64(2))]),
-        };
-        store.save(&bundle).unwrap();
-        let resumed =
-            Runner::from_bundle(&bundle, Arc::clone(&comm), Arc::clone(&store), &registry, "tasks")
-                .unwrap();
-        let outcome = resumed.run().unwrap();
-        // 3 more steps (not 5): resumed from count=2.
-        assert_eq!(outcome, RunOutcome::Finished(Value::map([("count", Value::I64(5))])));
-    }
-
-    #[test]
-    fn cannot_resume_terminal_bundle() {
-        let (comm, store, registry) = setup();
-        let bundle = Bundle {
-            pid: "pt".into(),
-            process_type: "counter".into(),
-            state: ProcessState::Finished,
-            step: 9,
-            logic_state: Value::Null,
-        };
-        assert!(Runner::from_bundle(&bundle, comm, store, &registry, "tasks").is_err());
-    }
-
-    /// Logic that waits on a timer once, then finishes.
-    struct Sleeper;
-    impl ProcessLogic for Sleeper {
-        fn step(&mut self, step: u32, _ctx: &mut StepContext) -> Result<StepOutcome> {
-            match step {
-                0 => Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(30)))),
-                _ => Ok(StepOutcome::Finish(Value::str("rested"))),
-            }
+    impl StepEnv for FakeEnv {
+        fn spawn_child(
+            &mut self,
+            parent: &str,
+            process_type: &str,
+            _inputs: Value,
+        ) -> Result<String> {
+            let pid = format!("child-{}", self.spawned.len());
+            self.spawned.push((parent.to_string(), process_type.to_string()));
+            Ok(pid)
         }
-        fn save_state(&self) -> Value {
-            Value::Null
+        fn child_result(&self, _parent: &str, child: &str) -> Result<Option<Value>> {
+            Ok(self.results.get(child).cloned())
         }
-        fn load_state(&mut self, _: &Value) -> Result<()> {
+        fn broadcast(&self, _pid: &str, _body: Value, subject: &str) -> Result<()> {
+            self.broadcasts.borrow_mut().push(subject.to_string());
             Ok(())
         }
     }
 
     #[test]
-    fn timer_wait_then_finish() {
-        let (comm, store, registry) = setup();
-        registry.register("sleeper", || Box::new(Sleeper));
-        let runner =
-            Runner::launch("ps", "sleeper", Value::Null, comm, store, &registry, "tasks").unwrap();
-        let t0 = Instant::now();
-        let outcome = runner.run().unwrap();
-        assert_eq!(outcome, RunOutcome::Finished(Value::str("rested")));
-        assert!(t0.elapsed() >= Duration::from_millis(30));
-    }
-
-    #[test]
-    fn kill_rpc_interrupts_wait() {
-        let (comm, store, registry) = setup();
-        registry.register("forever", || {
-            struct Forever;
-            impl ProcessLogic for Forever {
-                fn step(&mut self, _: u32, _: &mut StepContext) -> Result<StepOutcome> {
-                    Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_secs(3600))))
-                }
-                fn save_state(&self) -> Value {
-                    Value::Null
-                }
-                fn load_state(&mut self, _: &Value) -> Result<()> {
-                    Ok(())
-                }
-            }
-            Box::new(Forever)
-        });
-        let runner = Runner::launch(
-            "pk",
-            "forever",
-            Value::Null,
-            Arc::clone(&comm),
-            store,
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        let comm2 = Arc::clone(&comm);
-        let killer = std::thread::spawn(move || {
-            // Wait for the process to be live, then kill it.
-            std::thread::sleep(Duration::from_millis(50));
-            comm2
-                .rpc_send(
-                    &process_rpc_id("pk"),
-                    Value::map([("intent", Value::str("kill")), ("reason", Value::str("test"))]),
-                )
-                .unwrap()
-                .wait(Duration::from_secs(2))
-                .unwrap()
-        });
-        let outcome = runner.run().unwrap();
-        assert_eq!(outcome, RunOutcome::Killed(Some("test".into())));
-        assert_eq!(killer.join().unwrap(), Value::Bool(true));
-    }
-
-    #[test]
-    fn pause_and_play_rpc() {
-        let (comm, store, registry) = setup();
-        registry.register("pausable", || {
-            struct Pausable;
-            impl ProcessLogic for Pausable {
-                fn step(&mut self, step: u32, _: &mut StepContext) -> Result<StepOutcome> {
-                    match step {
-                        0 => Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(80)))),
-                        _ => Ok(StepOutcome::Finish(Value::Null)),
-                    }
-                }
-                fn save_state(&self) -> Value {
-                    Value::Null
-                }
-                fn load_state(&mut self, _: &Value) -> Result<()> {
-                    Ok(())
-                }
-            }
-            Box::new(Pausable)
-        });
-        let runner = Runner::launch(
-            "pp",
-            "pausable",
-            Value::Null,
-            Arc::clone(&comm),
-            store,
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        let comm2 = Arc::clone(&comm);
-        let controller = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(20));
-            let rpc = |intent: &str| {
-                comm2
-                    .rpc_send(
-                        &process_rpc_id("pp"),
-                        Value::map([("intent", Value::str(intent))]),
-                    )
-                    .unwrap()
-                    .wait(Duration::from_secs(2))
-                    .unwrap()
-            };
-            assert_eq!(rpc("pause"), Value::Bool(true));
-            let status = rpc("status");
-            assert_eq!(status.get_str("pid").unwrap(), "pp");
-            std::thread::sleep(Duration::from_millis(150));
-            assert_eq!(rpc("play"), Value::Bool(true));
-        });
-        let t0 = Instant::now();
-        let outcome = runner.run().unwrap();
-        controller.join().unwrap();
-        assert_eq!(outcome, RunOutcome::Finished(Value::Null));
-        // The pause stretched execution beyond the bare 80 ms timer.
-        assert!(t0.elapsed() >= Duration::from_millis(150));
-    }
-
-    #[test]
-    fn panicking_step_excepts_cleanly() {
-        let (comm, store, registry) = setup();
-        registry.register("bomb", || {
-            struct Bomb;
-            impl ProcessLogic for Bomb {
-                fn step(&mut self, _: u32, _: &mut StepContext) -> Result<StepOutcome> {
-                    panic!("kaboom");
-                }
-                fn save_state(&self) -> Value {
-                    Value::Null
-                }
-                fn load_state(&mut self, _: &Value) -> Result<()> {
-                    Ok(())
-                }
-            }
-            Box::new(Bomb)
-        });
-        let runner = Runner::launch(
-            "pb",
-            "bomb",
-            Value::Null,
-            comm,
-            Arc::clone(&store),
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        match runner.run().unwrap() {
-            RunOutcome::Excepted(msg) => assert!(msg.contains("kaboom")),
-            other => panic!("expected excepted, got {other:?}"),
-        }
-        // Terminal record says excepted; checkpoint retained for forensics.
-        let record = store.load_outputs("pb").unwrap().unwrap();
-        assert_eq!(record.get_str("state").unwrap(), "excepted");
-        assert!(store.load("pb").unwrap().is_some());
-    }
-
-    #[test]
-    fn control_broadcast_kills_all_processes() {
-        // Paper §I.C: one broadcast controls every live process.
-        let (comm, store, registry) = setup();
-        registry.register("waiter", || {
-            struct Waiter;
-            impl ProcessLogic for Waiter {
-                fn step(&mut self, _: u32, _: &mut StepContext) -> Result<StepOutcome> {
-                    Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_secs(3600))))
-                }
-                fn save_state(&self) -> Value {
-                    Value::Null
-                }
-                fn load_state(&mut self, _: &Value) -> Result<()> {
-                    Ok(())
-                }
-            }
-            Box::new(Waiter)
-        });
-        let runners: Vec<Runner> = (0..3)
-            .map(|i| {
-                Runner::launch(
-                    &format!("bw{i}"),
-                    "waiter",
-                    Value::Null,
-                    Arc::clone(&comm),
-                    Arc::clone(&store),
-                    &registry,
-                    "tasks",
-                )
-                .unwrap()
-            })
-            .collect();
-        let comm2 = Arc::clone(&comm);
-        let killer = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(60));
-            // One fleet-wide kill, no pids involved.
-            comm2
-                .broadcast_send(
-                    Value::map([("intent", Value::str("kill"))]),
-                    None,
-                    Some("control.all.kill"),
-                )
-                .unwrap();
-        });
-        let handles: Vec<_> =
-            runners.into_iter().map(|r| std::thread::spawn(move || r.run().unwrap())).collect();
-        for h in handles {
-            match h.join().unwrap() {
-                RunOutcome::Killed(reason) => {
-                    assert!(reason.unwrap().contains("control broadcast"))
-                }
-                other => panic!("expected killed, got {other:?}"),
-            }
-        }
-        killer.join().unwrap();
-    }
-
-    #[test]
-    fn rpc_endpoint_removed_after_termination() {
-        let (comm, store, registry) = setup();
-        let runner = Runner::launch(
-            "pr",
-            "counter",
-            Value::map([("target", Value::I64(1))]),
-            Arc::clone(&comm),
-            store,
-            &registry,
-            "tasks",
-        )
-        .unwrap();
-        runner.run().unwrap();
-        assert!(matches!(
-            comm.rpc_send(&process_rpc_id("pr"), Value::map([("intent", Value::str("status"))])),
-            Err(Error::UnroutableMessage(_))
-        ));
+    fn step_context_delegates_to_env() {
+        let mut env = FakeEnv {
+            spawned: Vec::new(),
+            results: BTreeMap::from([(
+                "c-ok".to_string(),
+                Value::map([
+                    ("state", Value::str("finished")),
+                    ("outputs", Value::map([("y", Value::I64(7))])),
+                ]),
+            ), (
+                "c-dead".to_string(),
+                Value::map([("state", Value::str("killed")), ("reason", Value::Null)]),
+            )]),
+            broadcasts: std::cell::RefCell::new(Vec::new()),
+        };
+        let mut ctx = StepContext::new("parent-1", &mut env);
+        let child = ctx.spawn("square", Value::Null).unwrap();
+        assert_eq!(child, "child-0");
+        ctx.broadcast(Value::Null, "app.progress").unwrap();
+        assert_eq!(ctx.child_outputs("c-ok").unwrap().get_i64("y").unwrap(), 7);
+        // Unknown child: no record yet.
+        assert!(ctx.child_result("ghost").unwrap().is_none());
+        assert!(ctx.child_outputs("ghost").is_err());
+        // Non-finished child: child_outputs errors.
+        assert!(matches!(ctx.child_outputs("c-dead"), Err(Error::RemoteException(_))));
+        assert_eq!(env.spawned, vec![("parent-1".to_string(), "square".to_string())]);
+        assert_eq!(*env.broadcasts.borrow(), vec!["app.progress".to_string()]);
     }
 }

@@ -1,0 +1,2055 @@
+//! The event-driven process scheduler: multiplexes an arbitrary number of
+//! processes over a **fixed** worker pool.
+//!
+//! The seed design ran one blocking OS thread per live process and parked
+//! it on a condvar for every wait; a daemon's concurrency was its thread
+//! count. This scheduler replaces that with a run queue + state machine:
+//!
+//! ```text
+//!            admit (task / local)             step → Continue/Goto
+//!                  │                                ┌───────┐
+//!                  ▼                                ▼       │
+//!   run queue ─▶ Runnable ──worker picks──▶ Stepping ───────┘
+//!                  ▲  ▲                      │   │  │
+//!                  │  │        Wait(cond)    │   │  └─ Finish/Err/panic
+//!      timer fires │  │ child terminal       ▼   ▼           │
+//!      or children │  └─────────────────── Waiting  Paused   ▼
+//!      all done ───┘                         │ (pause RPC)  Terminal
+//!                                            │                (slot
+//!                                            ▼                 freed)
+//!                              over max_resident_processes?
+//!                                 checkpoint + PARK:
+//!                          slot freed, resumption re-enters
+//!                          through the task queue (max_delivery
+//!                          + DLX apply to poison continuations)
+//! ```
+//!
+//! * **No thread ever blocks on a process wait.** `StepOutcome::Wait`
+//!   registers either a child-terminal broadcast subscription or a
+//!   timer-wheel entry; the worker thread immediately serves the next
+//!   runnable pid. Thread count is O(configured workers), never O(live
+//!   processes).
+//! * **Control RPCs mutate scheduler state.** pause/play/kill set flags on
+//!   the slot and enqueue the pid; a worker applies them between steps.
+//! * **Long-parked processes release their slot entirely.** Past
+//!   `max_resident_processes`, a waiting process is evicted: its
+//!   checkpoint (which persists the wait itself, including absolute timer
+//!   deadlines) is the only copy; pending task deliveries are completed
+//!   with an interim `{state:"waiting", parked:true}` record so they stop
+//!   consuming prefetch credit. When the wait resolves, a
+//!   `{action:"continue"}` task re-enters the queue and *any* daemon
+//!   resumes the process from its checkpoint — poison continuations get
+//!   max_delivery + dead-lettering for free, and a daemon or broker
+//!   restart resumes the campaign with zero loss.
+//!
+//! Locking discipline: the engine lock is only ever held for map/flag
+//! mutation. Communicator calls (broadcasts, subscriptions, task sends,
+//! delivery acks) and checkpoint-store I/O happen on worker threads with
+//! the lock released — `LocalCommunicator` delivers callbacks
+//! synchronously on the caller thread, so calling it under the lock would
+//! deadlock.
+
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, HashSet, VecDeque};
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::communicator::rmq::TaskContext;
+use crate::communicator::{unique_id, BroadcastFilter, Communicator};
+use crate::daemon::pool::WorkerPool;
+use crate::error::{Error, Result};
+use crate::wire::Value;
+use crate::workflow::checkpoint::{epoch_ms_now, Bundle, CheckpointStore, PersistedWait};
+use crate::workflow::launcher::{LaunchRequest, DEFAULT_TASK_QUEUE};
+use crate::workflow::process::{ProcessLogic, RunOutcome, StepContext, StepEnv, StepOutcome};
+use crate::workflow::registry::ProcessRegistry;
+use crate::workflow::state::{ProcessEvent, ProcessState};
+use crate::workflow::{process_rpc_id, state_subject};
+
+/// Steps a process may run in one scheduling quantum before yielding the
+/// worker to other runnable processes.
+const YIELD_AFTER_STEPS: u32 = 64;
+
+/// Scheduler tuning.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Fixed number of step-executor threads.
+    pub workers: usize,
+    /// Resident-process ceiling: a process entering a wait while more than
+    /// this many processes are resident is parked to its checkpoint and
+    /// its slot freed (0 = never park).
+    pub max_resident: usize,
+    /// Task queue children are spawned into and parked processes are
+    /// re-enqueued through.
+    pub task_queue: String,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: 4,
+            max_resident: 1024,
+            task_queue: DEFAULT_TASK_QUEUE.into(),
+        }
+    }
+}
+
+/// Counters for observability and benches (monotonic totals plus a
+/// point-in-time snapshot of the resident population).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedulerStats {
+    pub resident: usize,
+    pub waiting: usize,
+    pub paused: usize,
+    pub parked: usize,
+    pub run_queue: usize,
+    pub admitted_total: u64,
+    pub completed_total: u64,
+    pub steps_total: u64,
+    pub parked_total: u64,
+    pub resumed_total: u64,
+}
+
+/// Scheduling phase of a resident process (orthogonal to the lifecycle
+/// [`ProcessState`]: phase says what the *scheduler* is doing with the
+/// slot, lifecycle is the plumpy state machine).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Phase {
+    /// In (or eligible for) the run queue.
+    Runnable,
+    /// A worker is executing steps right now.
+    Stepping,
+    /// Waiting on children or a timer; wakes by event, not by polling.
+    Waiting,
+    /// Paused by control; wakes only on play/kill.
+    Paused,
+}
+
+/// A wait a resident process is parked on.
+enum PendingWait {
+    Children(BTreeSet<String>),
+    Timer { due: Instant, deadline_ms: u64 },
+}
+
+impl PendingWait {
+    fn to_persisted(&self) -> PersistedWait {
+        match self {
+            PendingWait::Children(pids) => {
+                PersistedWait::Children(pids.iter().cloned().collect())
+            }
+            PendingWait::Timer { deadline_ms, .. } => {
+                PersistedWait::TimerDeadlineMs(*deadline_ms)
+            }
+        }
+    }
+}
+
+/// A resident process.
+struct Slot {
+    process_type: String,
+    /// `None` while a worker has the logic checked out for stepping.
+    logic: Option<Box<dyn ProcessLogic>>,
+    lifecycle: ProcessState,
+    step: u32,
+    phase: Phase,
+    /// Already in the run queue (dedupes wake-ups).
+    queued: bool,
+    pause_requested: bool,
+    kill_requested: Option<String>,
+    /// Terminal records of children observed via broadcast / store.
+    child_events: BTreeMap<String, Value>,
+    awaiting: Option<PendingWait>,
+    /// Broadcast subscriptions on child terminals (removed at terminal).
+    child_subs: Vec<String>,
+    /// Task deliveries to settle with the terminal record.
+    deliveries: Vec<TaskContext>,
+}
+
+/// A process parked out of residency: checkpoint is the only state; this
+/// entry only tracks what must happen for the wake-up.
+struct Parked {
+    /// True when parked on a children wait (then `pending` empty means
+    /// ready); false when parked on a timer (then only `timer_due` wakes).
+    waiting_on_children: bool,
+    /// Children whose terminal broadcast is still outstanding.
+    pending: BTreeSet<String>,
+    /// Timer deadline fired (or a wake retry is due).
+    timer_due: bool,
+    /// The `continue` task has been sent; don't send twice.
+    woken: bool,
+    deliveries: Vec<TaskContext>,
+    child_subs: Vec<String>,
+    /// Subscription on our own terminal broadcast (set once woken), so a
+    /// resume executed by *another* daemon still settles local watchers.
+    terminal_sub: Option<String>,
+    /// Own terminal record observed via broadcast.
+    record: Option<Value>,
+}
+
+enum Admit {
+    /// A task-queue message (daemon path): parsed on a worker thread.
+    Task(Value, TaskContext),
+    /// A locally prepared process (launch/continue API): logic already
+    /// constructed and state-loaded, so errors surfaced synchronously.
+    Prepared {
+        pid: String,
+        process_type: String,
+        logic: Box<dyn ProcessLogic>,
+        bundle: Option<Bundle>,
+    },
+}
+
+#[derive(Default)]
+struct EngineState {
+    admits: VecDeque<Admit>,
+    run_queue: VecDeque<String>,
+    slots: HashMap<String, Slot>,
+    parked: HashMap<String, Parked>,
+    /// Timer wheel: earliest deadline first. Entries are lazy — stale ones
+    /// (paused, already-woken, terminal pids) fire as harmless no-op
+    /// wake-ups.
+    timers: BinaryHeap<Reverse<(Instant, String)>>,
+    /// Pids whose terminal record should be retained for `wait_terminal`.
+    watched: HashSet<String>,
+    results: HashMap<String, Value>,
+}
+
+impl EngineState {
+    fn enqueue(&mut self, pid: &str) {
+        if let Some(slot) = self.slots.get_mut(pid) {
+            if slot.queued {
+                return;
+            }
+            slot.queued = true;
+        }
+        self.run_queue.push_back(pid.to_string());
+    }
+}
+
+struct Inner {
+    comm: Arc<dyn Communicator>,
+    store: Arc<dyn CheckpointStore>,
+    registry: ProcessRegistry,
+    task_queue: String,
+    max_resident: usize,
+    state: Mutex<EngineState>,
+    /// Wakes worker threads when the run/admit queues gain work.
+    work_cv: Condvar,
+    /// Wakes the timer thread when the earliest deadline changes.
+    timer_cv: Condvar,
+    /// Wakes `wait_terminal` callers.
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    admitted_total: AtomicU64,
+    completed_total: AtomicU64,
+    steps_total: AtomicU64,
+    parked_total: AtomicU64,
+    resumed_total: AtomicU64,
+}
+
+/// The event-driven scheduler. One per daemon; shared via `Arc`.
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    pool: Mutex<Option<WorkerPool>>,
+    timer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    control_sub: Mutex<Option<String>>,
+}
+
+impl Scheduler {
+    /// Start the worker pool, the timer thread and the fleet-wide
+    /// `control.all.*` subscription (one per scheduler — pause/play/kill
+    /// broadcasts apply to every resident process, paper §I.C).
+    pub fn start(
+        comm: Arc<dyn Communicator>,
+        store: Arc<dyn CheckpointStore>,
+        registry: ProcessRegistry,
+        config: SchedulerConfig,
+    ) -> Result<Self> {
+        let inner = Arc::new(Inner {
+            comm,
+            store,
+            registry,
+            task_queue: config.task_queue.clone(),
+            max_resident: config.max_resident,
+            state: Mutex::new(EngineState::default()),
+            work_cv: Condvar::new(),
+            timer_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            admitted_total: AtomicU64::new(0),
+            completed_total: AtomicU64::new(0),
+            steps_total: AtomicU64::new(0),
+            parked_total: AtomicU64::new(0),
+            resumed_total: AtomicU64::new(0),
+        });
+
+        let pool = WorkerPool::new(config.workers, "kiwi-sched");
+        // One long-lived loop job per pool thread: the pool provides the
+        // fixed, named, panic-isolated threads; the loops provide the
+        // scheduling.
+        for _ in 0..pool.size() {
+            let inner = Arc::clone(&inner);
+            pool.submit(move || worker_loop(&inner)).map_err(|()| {
+                Error::Runtime("scheduler pool rejected worker loop".into())
+            })?;
+        }
+
+        let timer = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("kiwi-sched-timer".into())
+                .spawn(move || timer_loop(&inner))
+                .map_err(|e| Error::Runtime(format!("spawn timer thread: {e}")))?
+        };
+
+        let control_sub = {
+            let inner = Arc::clone(&inner);
+            inner.comm.add_broadcast_subscriber(
+                BroadcastFilter::all().subject("control.all.*"),
+                Box::new(move |msg| {
+                    let Some(subject) = msg.subject.as_deref() else { return };
+                    let Some(intent) = subject.rsplit('.').next() else { return };
+                    let mut st = inner.state.lock().unwrap();
+                    let pids: Vec<String> = st.slots.keys().cloned().collect();
+                    for pid in pids {
+                        let slot = st.slots.get_mut(&pid).unwrap();
+                        match intent {
+                            "pause" => slot.pause_requested = true,
+                            "play" => slot.pause_requested = false,
+                            "kill" => {
+                                slot.kill_requested =
+                                    Some("killed by control broadcast".to_string())
+                            }
+                            _ => return,
+                        }
+                        st.enqueue(&pid);
+                    }
+                    inner.work_cv.notify_all();
+                }),
+            )?
+        };
+
+        Ok(Scheduler {
+            inner,
+            pool: Mutex::new(Some(pool)),
+            timer: Mutex::new(Some(timer)),
+            control_sub: Mutex::new(Some(control_sub)),
+        })
+    }
+
+    /// Launch a fresh process with a generated pid. The pid is returned
+    /// before the process runs; terminal records are retained for
+    /// [`Scheduler::wait_terminal`].
+    pub fn launch(&self, process_type: &str, inputs: Value) -> Result<String> {
+        let pid = unique_id("proc");
+        self.launch_with_pid(&pid, process_type, inputs)?;
+        Ok(pid)
+    }
+
+    /// Launch a fresh process under a caller-chosen pid. Registry and
+    /// input errors surface synchronously.
+    pub fn launch_with_pid(&self, pid: &str, process_type: &str, inputs: Value) -> Result<()> {
+        let mut logic = self.inner.registry.create(process_type)?;
+        logic.load_state(&Value::map([("inputs", inputs)]))?;
+        self.admit_prepared(Admit::Prepared {
+            pid: pid.to_string(),
+            process_type: process_type.to_string(),
+            logic,
+            bundle: None,
+        })
+    }
+
+    /// Resume a checkpointed process in *this* scheduler (bypassing the
+    /// task queue — tests and single-daemon tools). Fails synchronously if
+    /// there is no checkpoint or the checkpoint is terminal.
+    pub fn continue_local(&self, pid: &str) -> Result<()> {
+        let bundle = self
+            .inner
+            .store
+            .load(pid)?
+            .ok_or_else(|| Error::Persistence(format!("no checkpoint for '{pid}'")))?;
+        if bundle.state.is_terminal() {
+            return Err(Error::Persistence(format!(
+                "cannot resume terminal process '{pid}'"
+            )));
+        }
+        let mut logic = self.inner.registry.create(&bundle.process_type)?;
+        logic.load_state(&bundle.logic_state)?;
+        self.admit_prepared(Admit::Prepared {
+            pid: pid.to_string(),
+            process_type: bundle.process_type.clone(),
+            logic,
+            bundle: Some(bundle),
+        })
+    }
+
+    fn admit_prepared(&self, admit: Admit) -> Result<()> {
+        let pid = match &admit {
+            Admit::Prepared { pid, .. } => pid.clone(),
+            Admit::Task(..) => unreachable!("admit_prepared takes Prepared"),
+        };
+        let mut st = self.inner.state.lock().unwrap();
+        st.watched.insert(pid);
+        st.admits.push_back(admit);
+        self.inner.admitted_total.fetch_add(1, Ordering::Relaxed);
+        self.inner.work_cv.notify_all();
+        Ok(())
+    }
+
+    /// Admit a task-queue message (`{action: launch|continue, ...}`). The
+    /// communicator's delivery thread calls this; it only enqueues — all
+    /// real work happens on scheduler workers.
+    pub fn admit_task(&self, task: Value, ctx: TaskContext) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.admits.push_back(Admit::Task(task, ctx));
+        self.inner.admitted_total.fetch_add(1, Ordering::Relaxed);
+        self.inner.work_cv.notify_all();
+    }
+
+    /// Mark a pid so its terminal record is retained for
+    /// [`Scheduler::wait_terminal`] (locally launched pids are watched
+    /// automatically).
+    pub fn watch(&self, pid: &str) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.watched.insert(pid.to_string());
+    }
+
+    /// Block until a watched pid reaches a terminal state; returns its
+    /// record `{state, outputs|reason}`.
+    pub fn wait_terminal(&self, pid: &str, timeout: Duration) -> Result<Value> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        st.watched.insert(pid.to_string());
+        loop {
+            if let Some(record) = st.results.get(pid) {
+                return Ok(record.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Timeout(format!(
+                    "process '{pid}' did not reach a terminal state in time"
+                )));
+            }
+            let wait = (deadline - now).min(Duration::from_millis(100));
+            st = self.inner.done_cv.wait_timeout(st, wait).unwrap().0;
+        }
+    }
+
+    /// Re-enqueue every non-terminal checkpoint that has no terminal
+    /// record yet through the task queue (recovery after a daemon
+    /// restart). Returns how many continue tasks were sent. Explicit
+    /// rather than automatic so multi-daemon deployments sharing a store
+    /// decide who runs the scan.
+    pub fn resume_stored(&self) -> Result<usize> {
+        let pids = self.inner.store.list()?;
+        let mut sent = 0;
+        for pid in pids {
+            if self.inner.store.load_outputs(&pid)?.is_some() {
+                continue;
+            }
+            let resident = {
+                let st = self.inner.state.lock().unwrap();
+                st.slots.contains_key(&pid) || st.parked.contains_key(&pid)
+            };
+            if resident {
+                continue;
+            }
+            match self.inner.store.load(&pid)? {
+                Some(bundle) if !bundle.state.is_terminal() => {
+                    self.inner.comm.task_send(
+                        &self.inner.task_queue,
+                        Value::map([
+                            ("action", Value::str("continue")),
+                            ("pid", Value::str(&pid)),
+                        ]),
+                    )?;
+                    sent += 1;
+                }
+                _ => {}
+            }
+        }
+        Ok(sent)
+    }
+
+    /// Snapshot of queue depths and monotonic counters.
+    pub fn stats(&self) -> SchedulerStats {
+        let st = self.inner.state.lock().unwrap();
+        SchedulerStats {
+            resident: st.slots.len(),
+            waiting: st.slots.values().filter(|s| s.phase == Phase::Waiting).count(),
+            paused: st.slots.values().filter(|s| s.phase == Phase::Paused).count(),
+            parked: st.parked.len(),
+            run_queue: st.run_queue.len(),
+            admitted_total: self.inner.admitted_total.load(Ordering::Relaxed),
+            completed_total: self.inner.completed_total.load(Ordering::Relaxed),
+            steps_total: self.inner.steps_total.load(Ordering::Relaxed),
+            parked_total: self.inner.parked_total.load(Ordering::Relaxed),
+            resumed_total: self.inner.resumed_total.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of step-executor threads.
+    pub fn workers(&self) -> usize {
+        self.pool.lock().unwrap().as_ref().map(|p| p.size()).unwrap_or(0)
+    }
+
+    /// Abrupt stop: signal shutdown and return immediately WITHOUT
+    /// joining worker threads (they exit after their current step). Used
+    /// by the daemon's drop path to model `kill -9` — unacked deliveries
+    /// requeue at the broker.
+    pub fn abort(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.work_cv.notify_all();
+        self.inner.timer_cv.notify_all();
+        self.inner.done_cv.notify_all();
+    }
+
+    /// Graceful stop: workers finish their current step and exit; no new
+    /// steps start. Safe to call more than once.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.work_cv.notify_all();
+        self.inner.timer_cv.notify_all();
+        self.inner.done_cv.notify_all();
+        if let Some(sub) = self.control_sub.lock().unwrap().take() {
+            self.inner.comm.remove_broadcast_subscriber(&sub).ok();
+        }
+        if let Some(pool) = self.pool.lock().unwrap().take() {
+            pool.shutdown();
+        }
+        if let Some(timer) = self.timer.lock().unwrap().take() {
+            timer.join().ok();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // Abrupt semantics (a killed daemon): signal and detach. Workers
+        // exit after their current step; unacked deliveries requeue at the
+        // broker. `shutdown()` is the graceful, joining path.
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.work_cv.notify_all();
+        self.inner.timer_cv.notify_all();
+        self.inner.done_cv.notify_all();
+        if let Some(sub) = self.control_sub.lock().unwrap().take() {
+            self.inner.comm.remove_broadcast_subscriber(&sub).ok();
+        }
+        // WorkerPool's Drop detaches; the timer JoinHandle drop detaches.
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker threads
+// ---------------------------------------------------------------------------
+
+fn worker_loop(inner: &Arc<Inner>) {
+    enum Work {
+        Admit(Admit),
+        Run(String),
+    }
+    loop {
+        let work = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                if let Some(a) = st.admits.pop_front() {
+                    break Some(Work::Admit(a));
+                }
+                if let Some(pid) = st.run_queue.pop_front() {
+                    break Some(Work::Run(pid));
+                }
+                st = inner.work_cv.wait_timeout(st, Duration::from_millis(200)).unwrap().0;
+            }
+        };
+        match work {
+            None => return,
+            Some(Work::Admit(a)) => do_admit(inner, a),
+            Some(Work::Run(pid)) => service(inner, &pid),
+        }
+    }
+}
+
+fn timer_loop(inner: &Arc<Inner>) {
+    loop {
+        let mut st = inner.state.lock().unwrap();
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = Instant::now();
+        let mut fired = false;
+        while let Some(due) = st.timers.peek().map(|Reverse((due, _))| *due) {
+            if due > now {
+                break;
+            }
+            let Reverse((_, pid)) = st.timers.pop().unwrap();
+            if let Some(slot) = st.slots.get_mut(&pid) {
+                // A waiting slot re-checks its condition on service; stale
+                // entries (paused, resumed, re-armed) are no-ops there.
+                if slot.phase == Phase::Waiting {
+                    st.enqueue(&pid);
+                    fired = true;
+                }
+            } else if let Some(p) = st.parked.get_mut(&pid) {
+                p.timer_due = true;
+                st.run_queue.push_back(pid);
+                fired = true;
+            }
+        }
+        if fired {
+            inner.work_cv.notify_all();
+        }
+        let sleep = st
+            .timers
+            .peek()
+            .map(|Reverse((due, _))| due.saturating_duration_since(now))
+            .unwrap_or(Duration::from_millis(500))
+            .min(Duration::from_millis(500))
+            .max(Duration::from_millis(1));
+        let _ = inner.timer_cv.wait_timeout(st, sleep).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission
+// ---------------------------------------------------------------------------
+
+fn do_admit(inner: &Arc<Inner>, admit: Admit) {
+    match admit {
+        Admit::Prepared { pid, process_type, logic, bundle } => match bundle {
+            None => install_fresh(inner, &pid, &process_type, logic, None),
+            Some(bundle) => install_resumed(inner, &pid, logic, &bundle, None),
+        },
+        Admit::Task(task, ctx) => match LaunchRequest::parse(&task) {
+            Ok(LaunchRequest::Launch { pid, process_type, inputs }) => {
+                admit_launch(inner, &pid, &process_type, inputs, ctx)
+            }
+            Ok(LaunchRequest::Continue { pid }) => admit_continue(inner, &pid, ctx),
+            Err(e) => {
+                log::warn!("scheduler: malformed task rejected: {e}");
+                ctx.complete(Err(e));
+            }
+        },
+    }
+}
+
+fn admit_launch(
+    inner: &Arc<Inner>,
+    pid: &str,
+    process_type: &str,
+    inputs: Value,
+    ctx: TaskContext,
+) {
+    // Exactly-once completion for redelivered launches: an already
+    // terminal pid answers straight from the output store.
+    if let Ok(Some(record)) = inner.store.load_outputs(pid) {
+        ctx.complete(Ok(record));
+        return;
+    }
+    {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(slot) = st.slots.get_mut(pid) {
+            slot.deliveries.push(ctx);
+            return;
+        }
+        if let Some(p) = st.parked.get_mut(pid) {
+            p.deliveries.push(ctx);
+            return;
+        }
+    }
+    // A launch redelivered after a daemon crash resumes from the crashed
+    // daemon's checkpoint instead of restarting from step 0.
+    match inner.store.load(pid) {
+        Ok(Some(bundle)) if !bundle.state.is_terminal() => {
+            let mut logic = match inner.registry.create(&bundle.process_type) {
+                Ok(l) => l,
+                Err(e) => return ctx.complete(Err(e)),
+            };
+            if let Err(e) = logic.load_state(&bundle.logic_state) {
+                return ctx.complete(Err(e));
+            }
+            install_resumed(inner, pid, logic, &bundle, Some(ctx));
+        }
+        _ => {
+            let mut logic = match inner.registry.create(process_type) {
+                Ok(l) => l,
+                Err(e) => return ctx.complete(Err(e)),
+            };
+            if let Err(e) = logic.load_state(&Value::map([("inputs", inputs)])) {
+                return ctx.complete(Err(e));
+            }
+            install_fresh(inner, pid, process_type, logic, Some(ctx));
+        }
+    }
+}
+
+fn admit_continue(inner: &Arc<Inner>, pid: &str, ctx: TaskContext) {
+    if let Ok(Some(record)) = inner.store.load_outputs(pid) {
+        ctx.complete(Ok(record));
+        return;
+    }
+    // Un-park: our own continue task came back to us — the parked entry's
+    // deliveries move onto the revived slot.
+    let unparked = {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(slot) = st.slots.get_mut(pid) {
+            slot.deliveries.push(ctx);
+            return;
+        }
+        st.parked.remove(pid)
+    };
+    if let Some(p) = &unparked {
+        // The parked entry's subscriptions are superseded by the ones the
+        // resumed slot registers below.
+        for sub in &p.child_subs {
+            inner.comm.remove_broadcast_subscriber(sub).ok();
+        }
+        if let Some(sub) = &p.terminal_sub {
+            inner.comm.remove_broadcast_subscriber(sub).ok();
+        }
+    }
+    let bundle = match inner.store.load(pid) {
+        Ok(Some(b)) => b,
+        Ok(None) => {
+            // Per-daemon checkpoint stores: hand the task back for a
+            // daemon that owns the checkpoint. `max_delivery` turns a
+            // checkpoint *nobody* holds into a dead-letter instead of an
+            // infinite redelivery loop (the poison-pill path).
+            log::warn!("scheduler: no checkpoint for '{pid}' here; returning task to the queue");
+            ctx.reject(true);
+            return;
+        }
+        Err(e) => {
+            ctx.complete(Err(e));
+            return;
+        }
+    };
+    if bundle.state.is_terminal() {
+        ctx.complete(Err(Error::Broker(format!(
+            "cannot resume terminal process '{pid}'"
+        ))));
+        return;
+    }
+    let mut logic = match inner.registry.create(&bundle.process_type) {
+        Ok(l) => l,
+        Err(e) => return ctx.complete(Err(e)),
+    };
+    if let Err(e) = logic.load_state(&bundle.logic_state) {
+        return ctx.complete(Err(e));
+    }
+    let mut deliveries = unparked.map(|p| p.deliveries).unwrap_or_default();
+    deliveries.push(ctx);
+    install_resumed_with_deliveries(inner, pid, logic, &bundle, deliveries);
+}
+
+fn install_fresh(
+    inner: &Arc<Inner>,
+    pid: &str,
+    process_type: &str,
+    logic: Box<dyn ProcessLogic>,
+    ctx: Option<TaskContext>,
+) {
+    register_rpc(inner, pid);
+    let mut st = inner.state.lock().unwrap();
+    let slot = Slot {
+        process_type: process_type.to_string(),
+        logic: Some(logic),
+        lifecycle: ProcessState::Created,
+        step: 0,
+        phase: Phase::Runnable,
+        queued: false,
+        pause_requested: false,
+        kill_requested: None,
+        child_events: BTreeMap::new(),
+        awaiting: None,
+        child_subs: Vec::new(),
+        deliveries: ctx.into_iter().collect(),
+    };
+    st.slots.insert(pid.to_string(), slot);
+    st.enqueue(pid);
+    inner.work_cv.notify_all();
+}
+
+fn install_resumed(
+    inner: &Arc<Inner>,
+    pid: &str,
+    logic: Box<dyn ProcessLogic>,
+    bundle: &Bundle,
+    ctx: Option<TaskContext>,
+) {
+    install_resumed_with_deliveries(inner, pid, logic, bundle, ctx.into_iter().collect());
+}
+
+fn install_resumed_with_deliveries(
+    inner: &Arc<Inner>,
+    pid: &str,
+    logic: Box<dyn ProcessLogic>,
+    bundle: &Bundle,
+    deliveries: Vec<TaskContext>,
+) {
+    inner.resumed_total.fetch_add(1, Ordering::Relaxed);
+    register_rpc(inner, pid);
+
+    // Re-arm the persisted wait. Subscriptions go up BEFORE the store is
+    // consulted so a child terminating in between is caught by the store
+    // query; one terminating after lands in the subscription.
+    let mut child_subs = Vec::new();
+    let mut awaiting = None;
+    let mut pending_children: Vec<String> = Vec::new();
+    match &bundle.wait {
+        Some(PersistedWait::Children(pids)) => {
+            for child in pids {
+                if let Ok(sub) = subscribe_child_terminal(inner, pid, child) {
+                    child_subs.push(sub);
+                }
+            }
+            pending_children = pids.clone();
+            awaiting = Some(PendingWait::Children(pids.iter().cloned().collect()));
+        }
+        Some(PersistedWait::TimerDeadlineMs(ms)) => {
+            // Resume the REMAINING wait: elapsed time survives restarts.
+            let remaining = Duration::from_millis(ms.saturating_sub(epoch_ms_now()));
+            awaiting = Some(PendingWait::Timer {
+                due: Instant::now() + remaining,
+                deadline_ms: *ms,
+            });
+        }
+        None => {}
+    }
+
+    let (lifecycle, phase, pause_requested) = if bundle.state == ProcessState::Paused {
+        // A paused checkpoint stays paused until a play RPC.
+        (ProcessState::Paused, Phase::Paused, true)
+    } else if awaiting.is_some() {
+        (ProcessState::Waiting, Phase::Waiting, false)
+    } else {
+        (ProcessState::Created, Phase::Runnable, false)
+    };
+
+    {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(PendingWait::Timer { due, .. }) = &awaiting {
+            st.timers.push(Reverse((*due, pid.to_string())));
+            inner.timer_cv.notify_all();
+        }
+        let slot = Slot {
+            process_type: bundle.process_type.clone(),
+            logic: Some(logic),
+            lifecycle,
+            step: bundle.step,
+            phase,
+            queued: false,
+            pause_requested,
+            kill_requested: None,
+            child_events: BTreeMap::new(),
+            awaiting,
+            child_subs,
+            deliveries,
+        };
+        st.slots.insert(pid.to_string(), slot);
+        if phase == Phase::Runnable {
+            st.enqueue(pid);
+        }
+        inner.work_cv.notify_all();
+    }
+
+    // Children that terminated while this process was checkpointed left
+    // their record in the output store; fold those in and wake if done.
+    if !pending_children.is_empty() {
+        let mut found: Vec<(String, Value)> = Vec::new();
+        for child in &pending_children {
+            if let Ok(Some(record)) = inner.store.load_outputs(child) {
+                found.push((child.clone(), record));
+            }
+        }
+        if !found.is_empty() {
+            let mut st = inner.state.lock().unwrap();
+            if let Some(slot) = st.slots.get_mut(pid) {
+                for (child, record) in found {
+                    slot.child_events.insert(child, record);
+                }
+            }
+            st.enqueue(pid);
+            inner.work_cv.notify_all();
+        }
+    }
+}
+
+fn register_rpc(inner: &Arc<Inner>, pid: &str) {
+    let rpc_inner = Arc::clone(inner);
+    let rpc_pid = pid.to_string();
+    let result = inner.comm.add_rpc_subscriber(
+        &process_rpc_id(pid),
+        Box::new(move |msg| {
+            let intent = msg.get_str("intent")?.to_string();
+            let mut st = rpc_inner.state.lock().unwrap();
+            let Some(slot) = st.slots.get_mut(&rpc_pid) else {
+                return Err(Error::RemoteException(format!(
+                    "process '{rpc_pid}' is not resident"
+                )));
+            };
+            let reply = match intent.as_str() {
+                "pause" => {
+                    slot.pause_requested = true;
+                    Value::Bool(true)
+                }
+                "play" => {
+                    slot.pause_requested = false;
+                    Value::Bool(true)
+                }
+                "kill" => {
+                    let reason = msg
+                        .get_opt("reason")
+                        .and_then(|r| r.as_str().ok())
+                        .unwrap_or("killed by rpc")
+                        .to_string();
+                    slot.kill_requested = Some(reason);
+                    Value::Bool(true)
+                }
+                "status" => Value::map([
+                    ("pid", Value::str(&rpc_pid)),
+                    ("state", Value::str(slot.lifecycle.as_str())),
+                    ("step", Value::I64(slot.step as i64)),
+                ]),
+                other => {
+                    return Err(Error::RemoteException(format!("unknown intent '{other}'")))
+                }
+            };
+            if intent != "status" {
+                st.enqueue(&rpc_pid);
+                rpc_inner.work_cv.notify_all();
+            }
+            Ok(reply)
+        }),
+    );
+    if let Err(e) = result {
+        log::warn!("scheduler: rpc endpoint for '{pid}': {e}");
+    }
+}
+
+fn subscribe_child_terminal(inner: &Arc<Inner>, parent: &str, child: &str) -> Result<String> {
+    let sub_inner = Arc::clone(inner);
+    let parent = parent.to_string();
+    let child_pid = child.to_string();
+    inner.comm.add_broadcast_subscriber(
+        BroadcastFilter::all().subject(&format!("state_changed.{child}.*")),
+        Box::new(move |msg| {
+            let Some(subject) = msg.subject.as_deref() else { return };
+            let Some(state_str) = subject.rsplit('.').next() else { return };
+            let Ok(state) = ProcessState::parse(state_str) else { return };
+            if !state.is_terminal() {
+                return;
+            }
+            let mut st = sub_inner.state.lock().unwrap();
+            if let Some(slot) = st.slots.get_mut(&parent) {
+                slot.child_events.insert(child_pid.clone(), msg.body.clone());
+                if slot.phase == Phase::Waiting {
+                    st.enqueue(&parent);
+                }
+            } else if let Some(p) = st.parked.get_mut(&parent) {
+                p.pending.remove(&child_pid);
+                if p.pending.is_empty() && !p.woken {
+                    st.run_queue.push_back(parent.clone());
+                }
+            }
+            sub_inner.work_cv.notify_all();
+        }),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Stepping
+// ---------------------------------------------------------------------------
+
+/// The scheduler-backed [`StepEnv`] handed to process steps. No engine
+/// lock is held while a step runs; each method takes it briefly.
+struct SchedEnv<'a> {
+    inner: &'a Arc<Inner>,
+}
+
+impl StepEnv for SchedEnv<'_> {
+    fn spawn_child(&mut self, parent: &str, process_type: &str, inputs: Value) -> Result<String> {
+        let child_pid = unique_id("proc");
+        // Subscribe to the child's terminal broadcast BEFORE launching so
+        // a fast child cannot slip past us.
+        let sub = subscribe_child_terminal(self.inner, parent, &child_pid)?;
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if let Some(slot) = st.slots.get_mut(parent) {
+                slot.child_subs.push(sub);
+            }
+        }
+        self.inner.comm.task_send(
+            &self.inner.task_queue,
+            Value::map([
+                ("action", Value::str("launch")),
+                ("process_type", Value::str(process_type)),
+                ("inputs", inputs),
+                ("pid", Value::str(&child_pid)),
+            ]),
+        )?;
+        Ok(child_pid)
+    }
+
+    fn child_result(&self, parent: &str, child: &str) -> Result<Option<Value>> {
+        {
+            let st = self.inner.state.lock().unwrap();
+            if let Some(slot) = st.slots.get(parent) {
+                if let Some(record) = slot.child_events.get(child) {
+                    return Ok(Some(record.clone()));
+                }
+            }
+        }
+        self.inner.store.load_outputs(child)
+    }
+
+    fn broadcast(&self, pid: &str, body: Value, subject: &str) -> Result<()> {
+        self.inner.comm.broadcast_send(body, Some(pid), Some(subject))
+    }
+}
+
+fn checkpoint(
+    inner: &Arc<Inner>,
+    pid: &str,
+    process_type: &str,
+    state: ProcessState,
+    step: u32,
+    logic: &dyn ProcessLogic,
+    wait: Option<PersistedWait>,
+) {
+    // save_state after a panic may panic again; never let that take the
+    // worker down — fall back to a stateless bundle.
+    let logic_state =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| logic.save_state()))
+            .unwrap_or(Value::Null);
+    let bundle = Bundle {
+        pid: pid.to_string(),
+        process_type: process_type.to_string(),
+        state,
+        step,
+        logic_state,
+        wait,
+    };
+    if let Err(e) = inner.store.save(&bundle) {
+        log::warn!("scheduler: checkpoint '{pid}': {e}");
+    }
+}
+
+fn broadcast_state(inner: &Arc<Inner>, pid: &str, state: ProcessState) {
+    // Non-terminal state changes broadcast with an empty body; terminal
+    // ones carry the full record (sent by `finalize`).
+    inner
+        .comm
+        .broadcast_send(Value::Null, Some(pid), Some(&state_subject(pid, state)))
+        .ok();
+}
+
+/// Service one pid popped from the run queue: apply control flags, resolve
+/// waits, then run steps to the next wait/terminal (yielding the worker
+/// every [`YIELD_AFTER_STEPS`] steps).
+fn service(inner: &Arc<Inner>, pid: &str) {
+    // Phase A: decide under the lock what to do.
+    let mut pending_broadcasts: Vec<ProcessState> = Vec::new();
+    let (mut logic, mut step, process_type) = {
+        let mut st = inner.state.lock().unwrap();
+        let Some(slot) = st.slots.get_mut(pid) else {
+            drop(st);
+            service_parked(inner, pid);
+            return;
+        };
+        slot.queued = false;
+        if slot.phase == Phase::Stepping {
+            // Another worker owns it; flags will be honoured between steps.
+            return;
+        }
+
+        if let Some(reason) = slot.kill_requested.take() {
+            slot.phase = Phase::Stepping; // claim: blocks concurrent service
+            drop(st);
+            finalize(inner, pid, RunOutcome::Killed(Some(reason)), None);
+            return;
+        }
+
+        if slot.pause_requested {
+            if slot.phase == Phase::Paused {
+                return; // already parked as paused
+            }
+            // (Created, Pause) is not a legal edge: play first, like the
+            // thread runner did.
+            if slot.lifecycle == ProcessState::Created {
+                slot.lifecycle = ProcessState::Running;
+                pending_broadcasts.push(ProcessState::Running);
+            }
+            match slot.lifecycle.apply(ProcessEvent::Pause) {
+                Ok(next) => slot.lifecycle = next,
+                Err(_) => return,
+            }
+            slot.phase = Phase::Paused;
+            pending_broadcasts.push(ProcessState::Paused);
+            // Checkpoint the pause (with the wait preserved, so play can
+            // re-enter it) outside the lock.
+            let ptype = slot.process_type.clone();
+            let cstep = slot.step;
+            let wait = slot.awaiting.as_ref().map(|w| w.to_persisted());
+            let logic_ref = slot.logic.take();
+            drop(st);
+            for s in &pending_broadcasts {
+                broadcast_state(inner, pid, *s);
+            }
+            if let Some(logic) = logic_ref {
+                checkpoint(inner, pid, &ptype, ProcessState::Paused, cstep, logic.as_ref(), wait);
+                let mut st = inner.state.lock().unwrap();
+                if let Some(slot) = st.slots.get_mut(pid) {
+                    slot.logic = Some(logic);
+                }
+                // A play/kill may have arrived while we checkpointed; a
+                // re-service is cheap and re-checks everything.
+                st.enqueue(pid);
+                inner.work_cv.notify_all();
+            }
+            return;
+        }
+
+        if slot.phase == Phase::Paused {
+            // play: Paused → Running, then back into the wait if one is
+            // still unsatisfied.
+            if slot.logic.is_none() {
+                // The pausing worker still has the logic checked out for
+                // its checkpoint; it re-enqueues us when done.
+                return;
+            }
+            match slot.lifecycle.apply(ProcessEvent::Play) {
+                Ok(next) => slot.lifecycle = next,
+                Err(_) => return,
+            }
+            pending_broadcasts.push(ProcessState::Running);
+            let satisfied = match &slot.awaiting {
+                Some(aw) => wait_satisfied(aw, &slot.child_events),
+                None => true,
+            };
+            if satisfied {
+                slot.awaiting = None;
+                slot.phase = Phase::Runnable;
+            } else {
+                slot.lifecycle = ProcessState::Waiting;
+                slot.phase = Phase::Waiting;
+                pending_broadcasts.push(ProcessState::Waiting);
+                let timer_due = match &slot.awaiting {
+                    Some(PendingWait::Timer { due, .. }) => Some(*due),
+                    _ => None,
+                };
+                if let Some(due) = timer_due {
+                    st.timers.push(Reverse((due, pid.to_string())));
+                    inner.timer_cv.notify_all();
+                }
+                drop(st);
+                for s in &pending_broadcasts {
+                    broadcast_state(inner, pid, *s);
+                }
+                return;
+            }
+        }
+
+        if slot.phase == Phase::Waiting {
+            let satisfied = match &slot.awaiting {
+                Some(aw) => wait_satisfied(aw, &slot.child_events),
+                None => true,
+            };
+            if !satisfied {
+                // Children may have terminated while we were deaf (e.g.
+                // before our subscription went up): consult the output
+                // store for the missing ones, outside the lock.
+                let missing: Vec<String> = match &slot.awaiting {
+                    Some(PendingWait::Children(pids)) => pids
+                        .iter()
+                        .filter(|p| !slot.child_events.contains_key(*p))
+                        .cloned()
+                        .collect(),
+                    _ => return, // timer not due yet: spurious wake
+                };
+                drop(st);
+                let mut found = Vec::new();
+                for child in &missing {
+                    if let Ok(Some(record)) = inner.store.load_outputs(child) {
+                        found.push((child.clone(), record));
+                    }
+                }
+                if found.is_empty() {
+                    return; // genuinely still waiting
+                }
+                let mut st2 = inner.state.lock().unwrap();
+                let Some(slot) = st2.slots.get_mut(pid) else { return };
+                for (child, record) in found {
+                    slot.child_events.insert(child, record);
+                }
+                let now_satisfied = match &slot.awaiting {
+                    Some(aw) => wait_satisfied(aw, &slot.child_events),
+                    None => true,
+                };
+                if !now_satisfied {
+                    return;
+                }
+                st2.enqueue(pid);
+                inner.work_cv.notify_all();
+                return; // re-serviced with the wait satisfied
+            }
+            match slot.lifecycle.apply(ProcessEvent::Resume) {
+                Ok(next) => slot.lifecycle = next,
+                Err(_) => return,
+            }
+            slot.awaiting = None;
+            slot.phase = Phase::Runnable;
+            pending_broadcasts.push(ProcessState::Running);
+        }
+
+        if slot.lifecycle == ProcessState::Created {
+            match slot.lifecycle.apply(ProcessEvent::Play) {
+                Ok(next) => slot.lifecycle = next,
+                Err(_) => return,
+            }
+            pending_broadcasts.push(ProcessState::Running);
+        }
+
+        // Check the logic out for stepping.
+        let Some(logic) = slot.logic.take() else { return };
+        slot.phase = Phase::Stepping;
+        (logic, slot.step, slot.process_type.clone())
+    };
+
+    for s in &pending_broadcasts {
+        broadcast_state(inner, pid, *s);
+    }
+
+    // Phase B: run steps to completion, lock released.
+    let mut steps_this_quantum = 0u32;
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            park_runnable(inner, pid, logic);
+            return;
+        }
+        let outcome = {
+            let mut env = SchedEnv { inner };
+            let mut ctx = StepContext::new(pid, &mut env);
+            // Panic isolation: a buggy step must not take the daemon
+            // down; it excepts this process only.
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                logic.step(step, &mut ctx)
+            })) {
+                Ok(res) => res,
+                Err(panic) => {
+                    let msg = panic
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "step panicked".into());
+                    finalize(inner, pid, RunOutcome::Excepted(msg), Some(logic));
+                    return;
+                }
+            }
+        };
+        inner.steps_total.fetch_add(1, Ordering::Relaxed);
+        steps_this_quantum += 1;
+        match outcome {
+            Ok(StepOutcome::Continue) | Ok(StepOutcome::Goto(_)) => {
+                step = match outcome {
+                    Ok(StepOutcome::Goto(n)) => n,
+                    _ => step + 1,
+                };
+                checkpoint(
+                    inner,
+                    pid,
+                    &process_type,
+                    ProcessState::Running,
+                    step,
+                    logic.as_ref(),
+                    None,
+                );
+                let must_yield = {
+                    let mut st = inner.state.lock().unwrap();
+                    let Some(slot) = st.slots.get_mut(pid) else { return };
+                    slot.step = step;
+                    slot.kill_requested.is_some()
+                        || slot.pause_requested
+                        || steps_this_quantum >= YIELD_AFTER_STEPS
+                };
+                if must_yield {
+                    park_runnable(inner, pid, logic);
+                    return;
+                }
+            }
+            Ok(StepOutcome::Wait(cond)) => {
+                handle_wait(inner, pid, &process_type, step, logic, cond);
+                return;
+            }
+            Ok(StepOutcome::Finish(outputs)) => {
+                finalize(inner, pid, RunOutcome::Finished(outputs), Some(logic));
+                return;
+            }
+            Err(e) => {
+                finalize(inner, pid, RunOutcome::Excepted(e.to_string()), Some(logic));
+                return;
+            }
+        }
+    }
+}
+
+/// Return a checked-out logic to its slot and requeue the pid (control
+/// flags pending, quantum expired, or shutdown).
+fn park_runnable(inner: &Arc<Inner>, pid: &str, logic: Box<dyn ProcessLogic>) {
+    let mut st = inner.state.lock().unwrap();
+    if let Some(slot) = st.slots.get_mut(pid) {
+        slot.logic = Some(logic);
+        slot.phase = Phase::Runnable;
+        st.enqueue(pid);
+        inner.work_cv.notify_all();
+    }
+}
+
+fn wait_satisfied(aw: &PendingWait, events: &BTreeMap<String, Value>) -> bool {
+    match aw {
+        PendingWait::Children(pids) => pids.iter().all(|p| events.contains_key(p)),
+        PendingWait::Timer { due, .. } => Instant::now() >= *due,
+    }
+}
+
+/// A step returned `Wait`: transition to Waiting, checkpoint with the
+/// persisted wait (absolute timer deadline — satellite of the restart-
+/// losing-elapsed-time fix), arm the wake-up, and maybe park the process
+/// out of residency entirely.
+fn handle_wait(
+    inner: &Arc<Inner>,
+    pid: &str,
+    process_type: &str,
+    step: u32,
+    logic: Box<dyn ProcessLogic>,
+    cond: crate::workflow::process::WaitCondition,
+) {
+    use crate::workflow::process::WaitCondition;
+    let next_step = step + 1;
+    let pending = match cond {
+        WaitCondition::Timer(d) => PendingWait::Timer {
+            due: Instant::now() + d,
+            deadline_ms: epoch_ms_now() + d.as_millis() as u64,
+        },
+        WaitCondition::ProcessesTerminated(pids) => {
+            PendingWait::Children(pids.into_iter().collect())
+        }
+    };
+    checkpoint(
+        inner,
+        pid,
+        process_type,
+        ProcessState::Waiting,
+        next_step,
+        logic.as_ref(),
+        Some(pending.to_persisted()),
+    );
+
+    let mut to_evict = false;
+    {
+        let mut st = inner.state.lock().unwrap();
+        let Some(slot) = st.slots.get_mut(pid) else { return };
+        slot.step = next_step;
+        if let Some(reason) = slot.kill_requested.take() {
+            drop(st);
+            finalize(inner, pid, RunOutcome::Killed(Some(reason)), Some(logic));
+            return;
+        }
+        if let Ok(next) = slot.lifecycle.apply(ProcessEvent::Wait) {
+            slot.lifecycle = next;
+        }
+        slot.phase = Phase::Waiting;
+        let satisfied = wait_satisfied(&pending, &slot.child_events);
+        if let PendingWait::Timer { due, .. } = &pending {
+            if !satisfied {
+                st.timers.push(Reverse((*due, pid.to_string())));
+                inner.timer_cv.notify_all();
+            }
+        }
+        let Some(slot) = st.slots.get_mut(pid) else { return };
+        slot.awaiting = Some(pending);
+        slot.logic = Some(logic);
+        if satisfied {
+            st.enqueue(pid);
+            inner.work_cv.notify_all();
+        } else if inner.max_resident > 0 && st.slots.len() > inner.max_resident {
+            to_evict = true;
+        }
+    }
+    broadcast_state(inner, pid, ProcessState::Waiting);
+    if to_evict {
+        evict(inner, pid);
+    }
+}
+
+/// Park a waiting process out of residency: the checkpoint (already
+/// written, wait included) becomes the only copy. Its task deliveries are
+/// completed with an interim record so they stop consuming the consumer's
+/// prefetch credit; the terminal record remains observable via the output
+/// store and the terminal broadcast.
+fn evict(inner: &Arc<Inner>, pid: &str) {
+    let deliveries = {
+        let mut st = inner.state.lock().unwrap();
+        let Some(slot) = st.slots.get(pid) else { return };
+        // Only evict if still quietly waiting (no control flags pending).
+        if slot.phase != Phase::Waiting
+            || slot.kill_requested.is_some()
+            || slot.pause_requested
+        {
+            return;
+        }
+        let mut slot = st.slots.remove(pid).unwrap();
+        let waiting_on_children =
+            matches!(&slot.awaiting, Some(PendingWait::Children(_)));
+        let pending = match &slot.awaiting {
+            Some(PendingWait::Children(pids)) => pids
+                .iter()
+                .filter(|p| !slot.child_events.contains_key(*p))
+                .cloned()
+                .collect(),
+            _ => BTreeSet::new(),
+        };
+        let deliveries = std::mem::take(&mut slot.deliveries);
+        let parked = Parked {
+            waiting_on_children,
+            pending,
+            timer_due: false,
+            woken: false,
+            deliveries: Vec::new(),
+            child_subs: std::mem::take(&mut slot.child_subs),
+            terminal_sub: None,
+            record: None,
+        };
+        st.parked.insert(pid.to_string(), parked);
+        inner.parked_total.fetch_add(1, Ordering::Relaxed);
+        deliveries
+    };
+    // Parked processes are not RPC-addressable (there is nothing resident
+    // to control); the endpoint returns when the process resumes.
+    inner.comm.remove_rpc_subscriber(&process_rpc_id(pid)).ok();
+    let interim = Value::map([
+        ("state", Value::str("waiting")),
+        ("parked", Value::Bool(true)),
+    ]);
+    for ctx in deliveries {
+        ctx.complete(Ok(interim.clone()));
+    }
+    // If the wait resolved while we were evicting, wake immediately.
+    let wake_now = {
+        let mut st = inner.state.lock().unwrap();
+        match st.parked.get(pid) {
+            Some(p) if p.waiting_on_children && p.pending.is_empty() && !p.woken => {
+                st.run_queue.push_back(pid.to_string());
+                true
+            }
+            _ => false,
+        }
+    };
+    if wake_now {
+        inner.work_cv.notify_all();
+    }
+}
+
+/// Service a pid that has no slot: either a parked process whose wake-up
+/// or terminal record arrived, or a stale queue entry for a terminated
+/// process (no-op).
+fn service_parked(inner: &Arc<Inner>, pid: &str) {
+    // Terminal record observed (a continue consumed elsewhere finished):
+    // settle and drop the parked entry.
+    let settled = {
+        let mut st = inner.state.lock().unwrap();
+        match st.parked.get(pid) {
+            Some(p) if p.record.is_some() => st.parked.remove(pid),
+            _ => None,
+        }
+    };
+    if let Some(p) = settled {
+        let record = p.record.clone().unwrap_or(Value::Null);
+        for ctx in p.deliveries {
+            ctx.complete(Ok(record.clone()));
+        }
+        for sub in &p.child_subs {
+            inner.comm.remove_broadcast_subscriber(sub).ok();
+        }
+        if let Some(sub) = &p.terminal_sub {
+            inner.comm.remove_broadcast_subscriber(sub).ok();
+        }
+        record_result(inner, pid, record);
+        return;
+    }
+
+    // Wake-up: wait resolved (children done or timer due) and no continue
+    // task sent yet.
+    let should_wake = {
+        let mut st = inner.state.lock().unwrap();
+        match st.parked.get_mut(pid) {
+            Some(p)
+                if ((p.waiting_on_children && p.pending.is_empty()) || p.timer_due)
+                    && !p.woken =>
+            {
+                p.woken = true;
+                true
+            }
+            _ => false,
+        }
+    };
+    if !should_wake {
+        return;
+    }
+    // Watch for our own terminal BEFORE sending the continue, so a resume
+    // on another daemon cannot finish unseen.
+    let sub = {
+        let sub_inner = Arc::clone(inner);
+        let own = pid.to_string();
+        inner.comm.add_broadcast_subscriber(
+            BroadcastFilter::all().subject(&format!("state_changed.{pid}.*")),
+            Box::new(move |msg| {
+                let Some(subject) = msg.subject.as_deref() else { return };
+                let Some(state_str) = subject.rsplit('.').next() else { return };
+                let Ok(state) = ProcessState::parse(state_str) else { return };
+                if !state.is_terminal() {
+                    return;
+                }
+                let mut st = sub_inner.state.lock().unwrap();
+                if let Some(p) = st.parked.get_mut(&own) {
+                    p.record = Some(msg.body.clone());
+                    st.run_queue.push_back(own.clone());
+                    sub_inner.work_cv.notify_all();
+                }
+            }),
+        )
+    };
+    let send = inner.comm.task_send(
+        &inner.task_queue,
+        Value::map([("action", Value::str("continue")), ("pid", Value::str(pid))]),
+    );
+    let mut st = inner.state.lock().unwrap();
+    match st.parked.get_mut(pid) {
+        Some(p) => {
+            p.terminal_sub = sub.ok();
+            if let Err(e) = send {
+                // Broker unreachable: retry through the timer wheel (the
+                // reconnect layer usually heals the communicator first).
+                log::warn!("scheduler: wake '{pid}': {e}; retrying");
+                p.woken = false;
+                p.timer_due = true;
+                st.timers
+                    .push(Reverse((Instant::now() + Duration::from_millis(500), pid.to_string())));
+                inner.timer_cv.notify_all();
+            }
+        }
+        None => {
+            // Our continue task was admitted synchronously and already
+            // unparked the pid; the slot owns settling now.
+            drop(st);
+            if let Ok(s) = sub {
+                inner.comm.remove_broadcast_subscriber(&s).ok();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Termination
+// ---------------------------------------------------------------------------
+
+fn record_result(inner: &Arc<Inner>, pid: &str, record: Value) {
+    inner.completed_total.fetch_add(1, Ordering::Relaxed);
+    let mut st = inner.state.lock().unwrap();
+    if st.watched.contains(pid) {
+        st.results.insert(pid.to_string(), record);
+    }
+    inner.done_cv.notify_all();
+}
+
+/// Terminal bookkeeping, in the order the thread runner used: outputs
+/// record first, THEN the terminal broadcast (so anyone woken by the
+/// broadcast finds the record), then delivery completion and endpoint
+/// teardown.
+fn finalize(
+    inner: &Arc<Inner>,
+    pid: &str,
+    outcome: RunOutcome,
+    logic: Option<Box<dyn ProcessLogic>>,
+) {
+    let (slot_logic, step, process_type, deliveries, child_subs) = {
+        let mut st = inner.state.lock().unwrap();
+        let Some(mut slot) = st.slots.remove(pid) else { return };
+        (
+            slot.logic.take(),
+            slot.step,
+            slot.process_type.clone(),
+            std::mem::take(&mut slot.deliveries),
+            std::mem::take(&mut slot.child_subs),
+        )
+    };
+    let logic = logic.or(slot_logic);
+    let record = outcome.to_record();
+    inner.store.save_outputs(pid, &record).ok();
+    match outcome.state() {
+        ProcessState::Finished => {
+            inner.store.delete(pid).ok();
+        }
+        state => {
+            // Keep a terminal checkpoint for post-mortem (AiiDA behaviour).
+            if let Some(logic) = &logic {
+                checkpoint(inner, pid, &process_type, state, step, logic.as_ref(), None);
+            }
+        }
+    }
+    inner
+        .comm
+        .broadcast_send(record.clone(), Some(pid), Some(&state_subject(pid, outcome.state())))
+        .ok();
+    for ctx in deliveries {
+        ctx.complete(Ok(record.clone()));
+    }
+    inner.comm.remove_rpc_subscriber(&process_rpc_id(pid)).ok();
+    for sub in child_subs {
+        inner.comm.remove_broadcast_subscriber(&sub).ok();
+    }
+    record_result(inner, pid, record);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communicator::LocalCommunicator;
+    use crate::workflow::checkpoint::MemoryCheckpointStore;
+    use crate::workflow::controller::ProcessController;
+    use crate::workflow::process::WaitCondition;
+
+    /// Finishes immediately with `{sum: a+b}`.
+    struct Adder {
+        a: i64,
+        b: i64,
+    }
+    impl ProcessLogic for Adder {
+        fn step(&mut self, _: u32, _: &mut StepContext) -> Result<StepOutcome> {
+            Ok(StepOutcome::Finish(Value::map([("sum", Value::I64(self.a + self.b))])))
+        }
+        fn save_state(&self) -> Value {
+            Value::map([("a", Value::I64(self.a)), ("b", Value::I64(self.b))])
+        }
+        fn load_state(&mut self, state: &Value) -> Result<()> {
+            let src = state.get_opt("inputs").unwrap_or(state);
+            self.a = src.get_i64("a")?;
+            self.b = src.get_i64("b")?;
+            Ok(())
+        }
+    }
+
+    /// Finishes with the step number it actually ran at (proves resumes
+    /// continue, not restart).
+    struct Tally;
+    impl ProcessLogic for Tally {
+        fn step(&mut self, step: u32, _: &mut StepContext) -> Result<StepOutcome> {
+            Ok(StepOutcome::Finish(Value::map([("resumed_at", Value::I64(step as i64))])))
+        }
+        fn save_state(&self) -> Value {
+            Value::map([])
+        }
+        fn load_state(&mut self, _: &Value) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    /// step 0: wait `ms`; step 1: finish.
+    struct Napper {
+        ms: u64,
+    }
+    impl ProcessLogic for Napper {
+        fn step(&mut self, step: u32, _: &mut StepContext) -> Result<StepOutcome> {
+            match step {
+                0 => Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(self.ms)))),
+                _ => Ok(StepOutcome::Finish(Value::map([("woke", Value::Bool(true))]))),
+            }
+        }
+        fn save_state(&self) -> Value {
+            Value::map([("ms", Value::I64(self.ms as i64))])
+        }
+        fn load_state(&mut self, state: &Value) -> Result<()> {
+            let src = state.get_opt("inputs").unwrap_or(state);
+            if let Some(ms) = src.get_opt("ms") {
+                self.ms = ms.as_i64()? as u64;
+            }
+            Ok(())
+        }
+    }
+
+    struct Bomb;
+    impl ProcessLogic for Bomb {
+        fn step(&mut self, _: u32, _: &mut StepContext) -> Result<StepOutcome> {
+            panic!("kaboom");
+        }
+        fn save_state(&self) -> Value {
+            Value::map([])
+        }
+        fn load_state(&mut self, _: &Value) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn registry() -> ProcessRegistry {
+        let r = ProcessRegistry::new();
+        r.register("adder", || Box::new(Adder { a: 0, b: 0 }));
+        r.register("tally", || Box::new(Tally));
+        r.register("napper", || Box::new(Napper { ms: 50 }));
+        r.register("bomb", || Box::new(Bomb));
+        r
+    }
+
+    struct Stack {
+        comm: Arc<dyn Communicator>,
+        store: Arc<MemoryCheckpointStore>,
+        sched: Arc<Scheduler>,
+    }
+
+    fn stack(workers: usize, max_resident: usize) -> Stack {
+        let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+        let store = Arc::new(MemoryCheckpointStore::new());
+        let sched = Scheduler::start(
+            Arc::clone(&comm),
+            store.clone() as Arc<dyn CheckpointStore>,
+            registry(),
+            SchedulerConfig { workers, max_resident, ..SchedulerConfig::default() },
+        )
+        .unwrap();
+        Stack { comm, store, sched: Arc::new(sched) }
+    }
+
+    /// Consume the task queue back into the scheduler itself (what a
+    /// daemon does) — needed whenever parked processes must resume.
+    fn self_consume(s: &Stack) {
+        let sched = Arc::clone(&s.sched);
+        s.comm
+            .task_queue(
+                DEFAULT_TASK_QUEUE,
+                0,
+                Box::new(move |task, ctx| sched.admit_task(task, ctx)),
+            )
+            .unwrap();
+    }
+
+    const WAIT: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn runs_to_finish_with_outputs() {
+        let s = stack(2, 0);
+        let pid = s
+            .sched
+            .launch("adder", Value::map([("a", Value::I64(2)), ("b", Value::I64(40))]))
+            .unwrap();
+        let record = s.sched.wait_terminal(&pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert_eq!(record.get("outputs").unwrap().get_i64("sum").unwrap(), 42);
+        // Finished processes leave an outputs record but no checkpoint.
+        assert!(s.store.load_outputs(&pid).unwrap().is_some());
+        assert!(s.store.load(&pid).unwrap().is_none());
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn state_changes_are_broadcast() {
+        let s = stack(1, 0);
+        let (tx, rx) = std::sync::mpsc::channel();
+        s.comm
+            .add_broadcast_subscriber(
+                BroadcastFilter::all().subject("state_changed.p2.*"),
+                Box::new(move |m| {
+                    tx.send(m.subject.unwrap()).ok();
+                }),
+            )
+            .unwrap();
+        s.sched
+            .launch_with_pid(
+                "p2",
+                "adder",
+                Value::map([("a", Value::I64(1)), ("b", Value::I64(1))]),
+            )
+            .unwrap();
+        let record = s.sched.wait_terminal("p2", WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        let subjects: Vec<String> = rx.try_iter().collect();
+        assert_eq!(
+            subjects,
+            vec!["state_changed.p2.running".to_string(), "state_changed.p2.finished".to_string()]
+        );
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn resume_from_checkpoint_continues_not_restarts() {
+        let s = stack(2, 0);
+        s.store
+            .save(&Bundle {
+                pid: "r1".into(),
+                process_type: "tally".into(),
+                state: ProcessState::Running,
+                step: 3,
+                logic_state: Value::map([]),
+                wait: None,
+            })
+            .unwrap();
+        s.sched.continue_local("r1").unwrap();
+        let record = s.sched.wait_terminal("r1", WAIT).unwrap();
+        assert_eq!(record.get("outputs").unwrap().get_i64("resumed_at").unwrap(), 3);
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn cannot_resume_terminal_bundle() {
+        let s = stack(1, 0);
+        s.store
+            .save(&Bundle {
+                pid: "dead".into(),
+                process_type: "tally".into(),
+                state: ProcessState::Killed,
+                step: 1,
+                logic_state: Value::map([]),
+                wait: None,
+            })
+            .unwrap();
+        assert!(s.sched.continue_local("dead").is_err());
+        assert!(s.sched.continue_local("ghost").is_err());
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn timer_wait_then_finish() {
+        let s = stack(2, 0);
+        let t0 = Instant::now();
+        let pid = s
+            .sched
+            .launch("napper", Value::map([("ms", Value::I64(60))]))
+            .unwrap();
+        let record = s.sched.wait_terminal(&pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert!(t0.elapsed() >= Duration::from_millis(60), "timer must actually wait");
+        s.sched.shutdown();
+    }
+
+    /// Satellite regression: a checkpointed timer wait persists its
+    /// absolute deadline, so a resume waits only the REMAINING time — and
+    /// an already-expired deadline resumes immediately.
+    #[test]
+    fn timer_resume_waits_only_remaining_time() {
+        let s = stack(2, 0);
+        // Pretend the process entered a long (10 s) wait some time ago:
+        // only ~200 ms remain.
+        s.store
+            .save(&Bundle {
+                pid: "t-rem".into(),
+                process_type: "napper".into(),
+                state: ProcessState::Waiting,
+                step: 1,
+                logic_state: Value::map([("ms", Value::I64(10_000))]),
+                wait: Some(PersistedWait::TimerDeadlineMs(epoch_ms_now() + 200)),
+            })
+            .unwrap();
+        let t0 = Instant::now();
+        s.sched.continue_local("t-rem").unwrap();
+        let record = s.sched.wait_terminal("t-rem", WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(150), "must wait the remaining time");
+        assert!(elapsed < Duration::from_secs(5), "must NOT restart the full 10 s wait");
+
+        // Deadline already passed while checkpointed: resume immediately.
+        s.store
+            .save(&Bundle {
+                pid: "t-exp".into(),
+                process_type: "napper".into(),
+                state: ProcessState::Waiting,
+                step: 1,
+                logic_state: Value::map([("ms", Value::I64(10_000))]),
+                wait: Some(PersistedWait::TimerDeadlineMs(epoch_ms_now().saturating_sub(5_000))),
+            })
+            .unwrap();
+        let t1 = Instant::now();
+        s.sched.continue_local("t-exp").unwrap();
+        let record = s.sched.wait_terminal("t-exp", WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert!(t1.elapsed() < Duration::from_secs(5), "expired deadline resumes at once");
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn kill_rpc_interrupts_wait() {
+        let s = stack(2, 0);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let pid = {
+            let pid = unique_id("proc");
+            s.comm
+                .add_broadcast_subscriber(
+                    BroadcastFilter::all().subject(&format!("state_changed.{pid}.waiting")),
+                    Box::new(move |_| {
+                        tx.send(()).ok();
+                    }),
+                )
+                .unwrap();
+            s.sched
+                .launch_with_pid(&pid, "napper", Value::map([("ms", Value::I64(60_000))]))
+                .unwrap();
+            pid
+        };
+        rx.recv_timeout(WAIT).unwrap();
+        let ctl = ProcessController::new(Arc::clone(&s.comm));
+        assert!(ctl.kill(&pid, "test").unwrap());
+        let record = s.sched.wait_terminal(&pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "killed");
+        assert_eq!(record.get_str("reason").unwrap(), "test");
+        // Killed (non-finished) terminals keep their checkpoint for
+        // post-mortem.
+        assert!(s.store.load(&pid).unwrap().is_some());
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn pause_and_play_rpc() {
+        let s = stack(2, 0);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let pid = unique_id("proc");
+        s.comm
+            .add_broadcast_subscriber(
+                BroadcastFilter::all().subject(&format!("state_changed.{pid}.waiting")),
+                Box::new(move |_| {
+                    tx.send(()).ok();
+                }),
+            )
+            .unwrap();
+        let t0 = Instant::now();
+        s.sched
+            .launch_with_pid(&pid, "napper", Value::map([("ms", Value::I64(30))]))
+            .unwrap();
+        rx.recv_timeout(WAIT).unwrap();
+        let ctl = ProcessController::new(Arc::clone(&s.comm));
+        assert!(ctl.pause(&pid).unwrap());
+        // Give the pause time to settle, then verify the process holds
+        // even though its 30 ms timer has long expired.
+        std::thread::sleep(Duration::from_millis(150));
+        let status = ctl.status(&pid).unwrap();
+        assert_eq!(status.get_str("state").unwrap(), "paused");
+        assert!(s.sched.wait_terminal(&pid, Duration::from_millis(50)).is_err());
+        assert!(ctl.play(&pid).unwrap());
+        let record = s.sched.wait_terminal(&pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert!(t0.elapsed() >= Duration::from_millis(150), "pause must stretch the run");
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn panicking_step_excepts_cleanly() {
+        let s = stack(1, 0);
+        let pid = s.sched.launch("bomb", Value::map([])).unwrap();
+        let record = s.sched.wait_terminal(&pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "excepted");
+        assert!(record.get_str("reason").unwrap().contains("kaboom"));
+        // Terminal checkpoint retained; scheduler (and its single worker)
+        // still alive for the next process.
+        assert!(s.store.load(&pid).unwrap().is_some());
+        let pid2 = s
+            .sched
+            .launch("adder", Value::map([("a", Value::I64(1)), ("b", Value::I64(2))]))
+            .unwrap();
+        let record2 = s.sched.wait_terminal(&pid2, WAIT).unwrap();
+        assert_eq!(record2.get_str("state").unwrap(), "finished");
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn control_broadcast_kills_all_processes() {
+        let s = stack(2, 0);
+        let (tx, rx) = std::sync::mpsc::channel();
+        s.comm
+            .add_broadcast_subscriber(
+                BroadcastFilter::all().subject("state_changed.*.waiting"),
+                Box::new(move |_| {
+                    tx.send(()).ok();
+                }),
+            )
+            .unwrap();
+        let pids: Vec<String> = (0..3)
+            .map(|_| {
+                s.sched
+                    .launch("napper", Value::map([("ms", Value::I64(60_000))]))
+                    .unwrap()
+            })
+            .collect();
+        for _ in 0..3 {
+            rx.recv_timeout(WAIT).unwrap();
+        }
+        let ctl = ProcessController::new(Arc::clone(&s.comm));
+        ctl.broadcast_intent("kill").unwrap();
+        for pid in &pids {
+            let record = s.sched.wait_terminal(pid, WAIT).unwrap();
+            assert_eq!(record.get_str("state").unwrap(), "killed");
+            assert_eq!(record.get_str("reason").unwrap(), "killed by control broadcast");
+        }
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn rpc_endpoint_removed_after_termination() {
+        let s = stack(1, 0);
+        let pid = s
+            .sched
+            .launch("adder", Value::map([("a", Value::I64(1)), ("b", Value::I64(1))]))
+            .unwrap();
+        s.sched.wait_terminal(&pid, WAIT).unwrap();
+        let ctl = ProcessController::new(Arc::clone(&s.comm));
+        assert!(ctl.status(&pid).is_err(), "terminal process must not be RPC-addressable");
+        s.sched.shutdown();
+    }
+
+    /// The tentpole's park/resume cycle: with a tiny residency budget,
+    /// waiting processes are evicted to their checkpoints and re-enter
+    /// through the task queue when their wait resolves.
+    #[test]
+    fn parked_processes_resume_through_task_queue() {
+        let s = stack(2, 2);
+        self_consume(&s);
+        let pids: Vec<String> = (0..6)
+            .map(|_| {
+                s.sched
+                    .launch("napper", Value::map([("ms", Value::I64(80))]))
+                    .unwrap()
+            })
+            .collect();
+        for pid in &pids {
+            let record = s.sched.wait_terminal(pid, WAIT).unwrap();
+            assert_eq!(record.get_str("state").unwrap(), "finished");
+        }
+        let stats = s.sched.stats();
+        assert!(stats.parked_total >= 1, "residency cap must have parked some processes");
+        assert!(stats.resumed_total >= 1, "parked processes must resume via the queue");
+        assert_eq!(stats.resident, 0);
+        assert_eq!(stats.parked, 0);
+        s.sched.shutdown();
+    }
+
+    #[test]
+    fn resume_stored_requeues_interrupted_processes() {
+        let s = stack(2, 0);
+        self_consume(&s);
+        s.store
+            .save(&Bundle {
+                pid: "orphan".into(),
+                process_type: "tally".into(),
+                state: ProcessState::Running,
+                step: 2,
+                logic_state: Value::map([]),
+                wait: None,
+            })
+            .unwrap();
+        assert_eq!(s.sched.resume_stored().unwrap(), 1);
+        let record = s.sched.wait_terminal("orphan", WAIT).unwrap();
+        assert_eq!(record.get("outputs").unwrap().get_i64("resumed_at").unwrap(), 2);
+        // Nothing left to resume.
+        assert_eq!(s.sched.resume_stored().unwrap(), 0);
+        s.sched.shutdown();
+    }
+}

@@ -42,7 +42,8 @@ pub enum ChainStep {
 }
 
 /// A step body: mutates the chain context, optionally spawns children.
-pub type ChainStepFn = Arc<dyn Fn(&mut ChainCtx, &mut StepContext) -> Result<ChainStep> + Send + Sync>;
+pub type ChainStepFn =
+    Arc<dyn Fn(&mut ChainCtx, &mut StepContext) -> Result<ChainStep> + Send + Sync>;
 
 /// The chain's persistent key-value context (serialised into checkpoints).
 #[derive(Clone, Debug, Default)]
@@ -134,7 +135,9 @@ impl WorkChainSpec {
             .iter()
             .position(|(n, _)| n == step_name)
             .map(|i| i as u32)
-            .ok_or_else(|| Error::Config(format!("workchain '{}': no step '{step_name}'", self.name)))
+            .ok_or_else(|| {
+                Error::Config(format!("workchain '{}': no step '{step_name}'", self.name))
+            })
     }
 }
 
@@ -194,19 +197,39 @@ mod tests {
     use super::*;
     use crate::communicator::{Communicator, LocalCommunicator};
     use crate::workflow::checkpoint::{CheckpointStore, MemoryCheckpointStore};
-    use crate::workflow::process::{RunOutcome, Runner};
     use crate::workflow::registry::ProcessRegistry;
-    use crate::workflow::launcher::{ProcessLauncher, DEFAULT_TASK_QUEUE};
+    use crate::workflow::launcher::DEFAULT_TASK_QUEUE;
+    use crate::workflow::scheduler::{Scheduler, SchedulerConfig};
 
-    fn setup() -> (Arc<dyn Communicator>, Arc<dyn CheckpointStore>, ProcessRegistry) {
+    const WAIT: Duration = Duration::from_secs(10);
+
+    fn scheduler(registry: &ProcessRegistry) -> (Arc<dyn Communicator>, Arc<Scheduler>) {
         let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
         let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
-        (comm, store, ProcessRegistry::new())
+        let sched = Arc::new(
+            Scheduler::start(
+                Arc::clone(&comm),
+                store,
+                registry.clone(),
+                SchedulerConfig { workers: 2, max_resident: 0, ..SchedulerConfig::default() },
+            )
+            .unwrap(),
+        );
+        (comm, sched)
+    }
+
+    /// Run one chain to terminal on a fresh scheduler; returns the record.
+    fn run_chain(registry: &ProcessRegistry, pid: &str, ptype: &str) -> Value {
+        let (_comm, sched) = scheduler(registry);
+        sched.launch_with_pid(pid, ptype, Value::Null).unwrap();
+        let record = sched.wait_terminal(pid, WAIT).unwrap();
+        sched.shutdown();
+        record
     }
 
     #[test]
     fn linear_chain_runs_and_implicit_finish() {
-        let (comm, store, registry) = setup();
+        let registry = ProcessRegistry::new();
         let spec = WorkChainSpec::new("linear")
             .step("a", |cc, _| {
                 cc.set("x", Value::I64(1));
@@ -219,20 +242,16 @@ mod tests {
             })
             .build();
         registry.register("linear", move || instantiate(&spec));
-        let runner =
-            Runner::launch("wc1", "linear", Value::Null, comm, store, &registry, "q").unwrap();
-        match runner.run().unwrap() {
-            RunOutcome::Finished(out) => {
-                assert_eq!(out.get_i64("y").unwrap(), 2);
-                assert!(out.get_opt("__children").is_none());
-            }
-            other => panic!("unexpected {other:?}"),
-        }
+        let record = run_chain(&registry, "wc1", "linear");
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        let out = record.get("outputs").unwrap();
+        assert_eq!(out.get_i64("y").unwrap(), 2);
+        assert!(out.get_opt("__children").is_none());
     }
 
     #[test]
     fn goto_implements_loops() {
-        let (comm, store, registry) = setup();
+        let registry = ProcessRegistry::new();
         let spec = WorkChainSpec::new("looper")
             .step("init", |cc, _| {
                 cc.set("i", Value::I64(0));
@@ -249,31 +268,29 @@ mod tests {
             })
             .build();
         registry.register("looper", move || instantiate(&spec));
-        let runner =
-            Runner::launch("wc2", "looper", Value::Null, comm, store, &registry, "q").unwrap();
-        assert_eq!(
-            runner.run().unwrap(),
-            RunOutcome::Finished(Value::map([("i", Value::I64(5))]))
-        );
+        let record = run_chain(&registry, "wc2", "looper");
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert_eq!(record.get("outputs").unwrap(), &Value::map([("i", Value::I64(5))]));
     }
 
     #[test]
     fn goto_unknown_step_excepts() {
-        let (comm, store, registry) = setup();
+        let registry = ProcessRegistry::new();
         let spec = WorkChainSpec::new("bad")
             .step("a", |_, _| Ok(ChainStep::Goto("nowhere")))
             .build();
         registry.register("bad", move || instantiate(&spec));
-        let runner =
-            Runner::launch("wc3", "bad", Value::Null, comm, store, &registry, "q").unwrap();
-        assert!(matches!(runner.run().unwrap(), RunOutcome::Excepted(_)));
+        let record = run_chain(&registry, "wc3", "bad");
+        assert_eq!(record.get_str("state").unwrap(), "excepted");
     }
 
     #[test]
     fn parent_awaits_children_via_broadcast() {
-        // Full decoupled parent/child: a daemon-style task subscriber runs
-        // children; the parent waits on their broadcasts (paper §I.C).
-        let (comm, store, registry) = setup();
+        // Full decoupled parent/child: the scheduler consumes its own task
+        // queue (exactly what a daemon does), so spawned children are
+        // admitted through the bounded worker pool — no thread per task —
+        // and the parent waits on their terminal broadcasts (paper §I.C).
+        let registry = ProcessRegistry::new();
 
         // Child: squares its input.
         let child_spec = WorkChainSpec::new("square")
@@ -303,38 +320,20 @@ mod tests {
             .build();
         registry.register("summer", move || instantiate(&parent_spec));
 
-        // A task subscriber standing in for the daemon: runs each launch
-        // task on its own thread.
-        let launcher = Arc::new(ProcessLauncher::new(
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            registry.clone(),
-        ));
-        let l2 = Arc::clone(&launcher);
+        let (comm, sched) = scheduler(&registry);
+        let s2 = Arc::clone(&sched);
         comm.task_queue(
             DEFAULT_TASK_QUEUE,
             0,
-            Box::new(move |task, tctx| {
-                let l3 = Arc::clone(&l2);
-                std::thread::spawn(move || l3.handle_task(task, tctx));
-            }),
+            Box::new(move |task, tctx| s2.admit_task(task, tctx)),
         )
         .unwrap();
 
-        let runner = Runner::launch(
-            "parent",
-            "summer",
-            Value::Null,
-            Arc::clone(&comm),
-            Arc::clone(&store),
-            &registry,
-            DEFAULT_TASK_QUEUE,
-        )
-        .unwrap();
-        match runner.run().unwrap() {
-            RunOutcome::Finished(out) => assert_eq!(out.get_i64("total").unwrap(), 25),
-            other => panic!("unexpected {other:?}"),
-        }
+        sched.launch_with_pid("parent", "summer", Value::Null).unwrap();
+        let record = sched.wait_terminal("parent", WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+        assert_eq!(record.get("outputs").unwrap().get_i64("total").unwrap(), 25);
+        sched.shutdown();
     }
 
     #[test]

@@ -97,7 +97,7 @@ fn checkpoint_continue_resumes_where_left_off() {
     registry.register("marathon", || Box::new(Marathon { laps: 0 }));
 
     // Simulate the daemon dying after 6 laps: craft the bundle the dying
-    // runner would have checkpointed.
+    // scheduler would have checkpointed.
     store
         .save(&Bundle {
             pid: "m1".into(),
@@ -105,21 +105,22 @@ fn checkpoint_continue_resumes_where_left_off() {
             state: ProcessState::Running,
             step: 6,
             logic_state: Value::map([("laps", Value::I64(6))]),
+            wait: None,
         })
         .unwrap();
 
-    // "Another daemon" picks up the continue task.
-    let launcher = ProcessLauncher::new(Arc::clone(&comm), Arc::clone(&store), registry);
-    let task = Value::map([("action", Value::str("continue")), ("pid", Value::str("m1"))]);
-    let runner = launcher.runner_for(&task).unwrap();
-    match runner.run().unwrap() {
-        kiwi::workflow::RunOutcome::Finished(v) => assert_eq!(v, Value::I64(10)),
-        other => panic!("unexpected {other:?}"),
-    }
+    // "Another daemon" (a fresh scheduler on the shared store) resumes it.
+    let launcher =
+        ProcessLauncher::new(Arc::clone(&comm), Arc::clone(&store), registry).unwrap();
+    launcher.scheduler().continue_local("m1").unwrap();
+    let record = launcher.scheduler().wait_terminal("m1", Duration::from_secs(10)).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "finished");
+    assert_eq!(record.get("outputs").unwrap(), &Value::I64(10));
     // 6 existing laps + 4 more = 10; a restart would have given 10 fresh
     // laps from 0 and the same answer — so also verify the step count via
-    // the runner's checkpoint deletion (finished => checkpoint removed).
+    // the scheduler's checkpoint deletion (finished => checkpoint removed).
     assert!(store.load("m1").unwrap().is_none());
+    launcher.scheduler().shutdown();
 }
 
 /// Under continuous load, a hung consumer (stopped heartbeating with a

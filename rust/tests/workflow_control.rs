@@ -1,0 +1,363 @@
+//! Control-plane races and scheduler scalability: pause/play/kill
+//! mid-step, double-kill storms, kill-while-waiting-on-children, global
+//! pause/play sweeps — and the load-bearing claim of the event-driven
+//! engine: daemon thread count is O(configured workers), not O(live
+//! processes).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use kiwi::communicator::{BroadcastFilter, Communicator, LocalCommunicator};
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::{CheckpointStore, MemoryCheckpointStore};
+use kiwi::workflow::launcher::DEFAULT_TASK_QUEUE;
+use kiwi::workflow::{
+    ProcessController, ProcessLogic, ProcessRegistry, Scheduler, SchedulerConfig, StepContext,
+    StepOutcome, WaitCondition,
+};
+
+const WAIT: Duration = Duration::from_secs(30);
+
+/// Waits once on a timer, then finishes.
+struct Napper {
+    ms: u64,
+}
+impl ProcessLogic for Napper {
+    fn step(&mut self, step: u32, _: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        match step {
+            0 => Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(self.ms)))),
+            _ => Ok(StepOutcome::Finish(Value::map([("woke", Value::Bool(true))]))),
+        }
+    }
+    fn save_state(&self) -> Value {
+        Value::map([("ms", Value::I64(self.ms as i64))])
+    }
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        let src = state.get_opt("inputs").unwrap_or(state);
+        if let Some(ms) = src.get_opt("ms") {
+            self.ms = ms.as_i64()? as u64;
+        }
+        Ok(())
+    }
+}
+
+/// Steps forever (Continue every step) — only a kill can end it.
+struct Grinder;
+impl ProcessLogic for Grinder {
+    fn step(&mut self, _: u32, _: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        Ok(StepOutcome::Continue)
+    }
+    fn save_state(&self) -> Value {
+        Value::map([])
+    }
+    fn load_state(&mut self, _: &Value) -> kiwi::Result<()> {
+        Ok(())
+    }
+}
+
+/// Spawns one long-napping child and waits on it.
+struct Parent {
+    child: Option<String>,
+}
+impl ProcessLogic for Parent {
+    fn step(&mut self, step: u32, ctx: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        match step {
+            0 => {
+                let child = ctx.spawn("napper", Value::map([("ms", Value::I64(60_000))]))?;
+                self.child = Some(child.clone());
+                Ok(StepOutcome::Wait(WaitCondition::ProcessesTerminated(vec![child])))
+            }
+            _ => Ok(StepOutcome::Finish(Value::map([("done", Value::Bool(true))]))),
+        }
+    }
+    fn save_state(&self) -> Value {
+        Value::map([("child", self.child.clone().map(Value::Str).unwrap_or(Value::Null))])
+    }
+    fn load_state(&mut self, state: &Value) -> kiwi::Result<()> {
+        if let Some(c) = state.get_opt("child") {
+            if let Ok(s) = c.as_str() {
+                self.child = Some(s.to_string());
+            }
+        }
+        Ok(())
+    }
+}
+
+fn registry() -> ProcessRegistry {
+    let r = ProcessRegistry::new();
+    r.register("napper", || Box::new(Napper { ms: 50 }));
+    r.register("grinder", || Box::new(Grinder));
+    r.register("parent", || Box::new(Parent { child: None }));
+    r
+}
+
+struct Stack {
+    comm: Arc<dyn Communicator>,
+    sched: Arc<Scheduler>,
+}
+
+fn stack(workers: usize) -> Stack {
+    let comm: Arc<dyn Communicator> = Arc::new(LocalCommunicator::new());
+    let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+    let sched = Arc::new(
+        Scheduler::start(
+            Arc::clone(&comm),
+            store,
+            registry(),
+            SchedulerConfig { workers, max_resident: 0, ..SchedulerConfig::default() },
+        )
+        .unwrap(),
+    );
+    // Consume the task queue back into the scheduler (what a daemon does)
+    // so `spawn` and checkpoint resumption work.
+    let s2 = Arc::clone(&sched);
+    comm.task_queue(DEFAULT_TASK_QUEUE, 0, Box::new(move |task, ctx| s2.admit_task(task, ctx)))
+        .unwrap();
+    Stack { comm, sched }
+}
+
+/// Count kernel threads in this process (Linux); None elsewhere.
+fn live_threads() -> Option<usize> {
+    std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+}
+
+/// Record every terminal broadcast per pid so exactly-once termination is
+/// checkable after the fact.
+fn count_terminals(comm: &Arc<dyn Communicator>) -> Arc<Mutex<HashMap<String, usize>>> {
+    let counts: Arc<Mutex<HashMap<String, usize>>> = Arc::new(Mutex::new(HashMap::new()));
+    let c2 = Arc::clone(&counts);
+    comm.add_broadcast_subscriber(
+        BroadcastFilter::all().subject("state_changed.*"),
+        Box::new(move |m| {
+            if let Some(subject) = m.subject {
+                let parts: Vec<&str> = subject.split('.').collect();
+                if let [_, pid, state] = parts[..] {
+                    if matches!(state, "finished" | "killed" | "excepted") {
+                        *c2.lock().unwrap().entry(pid.to_string()).or_insert(0) += 1;
+                    }
+                }
+            }
+        }),
+    )
+    .unwrap();
+    counts
+}
+
+/// The acceptance pin for the event-driven engine: 1000 concurrently
+/// waiting processes on a 4-worker scheduler must not grow the thread
+/// count past a small constant — a thread-per-process design would add
+/// 1000+ threads here.
+#[test]
+fn thousand_waiting_processes_hold_no_threads() {
+    const N: usize = 1000;
+    let baseline = live_threads();
+    let s = stack(4);
+    let pids: Vec<String> = (0..N)
+        .map(|i| {
+            let pid = format!("wave-{i}");
+            s.sched
+                .launch_with_pid(&pid, "napper", Value::map([("ms", Value::I64(3000))]))
+                .unwrap();
+            pid
+        })
+        .collect();
+
+    // All N must be simultaneously waiting (resident, no thread parked).
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let st = s.sched.stats();
+        if st.waiting == N {
+            assert_eq!(st.resident, N);
+            break;
+        }
+        assert!(Instant::now() < deadline, "only {} of {N} waiting", st.waiting);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    if let (Some(before), Some(now)) = (baseline, live_threads()) {
+        let grown = now.saturating_sub(before);
+        assert!(
+            grown < 100,
+            "thread count grew by {grown} with {N} waiting processes — \
+             scheduler threads must be O(workers), not O(processes)"
+        );
+    }
+
+    // And every one of them still terminates.
+    for pid in &pids {
+        let record = s.sched.wait_terminal(pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished");
+    }
+    s.sched.shutdown();
+}
+
+/// Concurrent kills from several threads: the process dies exactly once.
+#[test]
+fn double_kill_terminates_exactly_once() {
+    let s = stack(2);
+    let counts = count_terminals(&s.comm);
+    s.sched
+        .launch_with_pid("victim", "napper", Value::map([("ms", Value::I64(60_000))]))
+        .unwrap();
+    // Let it reach its wait.
+    let deadline = Instant::now() + WAIT;
+    while s.sched.stats().waiting == 0 {
+        assert!(Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let comm = Arc::clone(&s.comm);
+            std::thread::spawn(move || {
+                let ctl = ProcessController::new(comm);
+                ctl.kill("victim", "storm")
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // At least one kill is accepted; late ones may find the rpc endpoint
+    // already gone, which is an error, never a second death.
+    assert!(results.iter().any(|r| matches!(r, Ok(true))));
+
+    let record = s.sched.wait_terminal("victim", WAIT).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "killed");
+    std::thread::sleep(Duration::from_millis(100)); // drain broadcasts
+    assert_eq!(counts.lock().unwrap().get("victim"), Some(&1));
+    s.sched.shutdown();
+}
+
+/// Hammer pause/play against a process that never stops stepping, then
+/// kill it mid-storm: no lost process, no double terminal.
+#[test]
+fn pause_play_kill_race_mid_step() {
+    let s = stack(2);
+    let counts = count_terminals(&s.comm);
+    s.sched.launch_with_pid("grind", "grinder", Value::Null).unwrap();
+
+    let flippers: Vec<_> = (0..2)
+        .map(|_| {
+            let comm = Arc::clone(&s.comm);
+            std::thread::spawn(move || {
+                let ctl = ProcessController::new(comm);
+                for _ in 0..25 {
+                    // Either call may race termination and error; the
+                    // invariants under test are liveness + exactly-once.
+                    let _ = ctl.pause("grind");
+                    let _ = ctl.play("grind");
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(50));
+    let ctl = ProcessController::new(Arc::clone(&s.comm));
+    let _ = ctl.kill("grind", "stop grinding");
+    for h in flippers {
+        h.join().unwrap();
+    }
+    // The kill may have landed while a flipper held the process paused —
+    // it must still die promptly.
+    let record = s.sched.wait_terminal("grind", WAIT).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "killed");
+    assert_eq!(record.get_str("reason").unwrap(), "stop grinding");
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(counts.lock().unwrap().get("grind"), Some(&1));
+    s.sched.shutdown();
+}
+
+/// Pausing a waiting process and killing it while paused is a legal
+/// lifecycle path (Waiting → Paused → Killed).
+#[test]
+fn kill_while_paused_holds() {
+    let s = stack(2);
+    s.sched
+        .launch_with_pid("pk", "napper", Value::map([("ms", Value::I64(60_000))]))
+        .unwrap();
+    let deadline = Instant::now() + WAIT;
+    while s.sched.stats().waiting == 0 {
+        assert!(Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let ctl = ProcessController::new(Arc::clone(&s.comm));
+    assert!(ctl.pause("pk").unwrap());
+    let deadline = Instant::now() + WAIT;
+    while ctl.status("pk").unwrap().get_str("state").unwrap() != "paused" {
+        assert!(Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(ctl.kill("pk", "paused kill").unwrap());
+    let record = s.sched.wait_terminal("pk", WAIT).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "killed");
+    assert_eq!(record.get_str("reason").unwrap(), "paused kill");
+    s.sched.shutdown();
+}
+
+/// Killing a parent blocked on its child tears down only the parent; the
+/// child keeps its own lifecycle and can be killed independently.
+#[test]
+fn kill_parent_waiting_on_children() {
+    let s = stack(2);
+    let counts = count_terminals(&s.comm);
+    s.sched.launch_with_pid("papa", "parent", Value::Null).unwrap();
+
+    // Wait until the parent is waiting on its spawned child.
+    let deadline = Instant::now() + WAIT;
+    while s.sched.stats().waiting < 2 {
+        assert!(Instant::now() < deadline, "parent+child never both reached waiting");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let ctl = ProcessController::new(Arc::clone(&s.comm));
+    assert!(ctl.kill("papa", "cancelled").unwrap());
+    let record = s.sched.wait_terminal("papa", WAIT).unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "killed");
+
+    // The child is an independent process: still resident and waiting.
+    let st = s.sched.stats();
+    assert_eq!(st.waiting, 1, "child must survive its parent's kill");
+    // A global kill sweep takes the orphan down too.
+    ctl.broadcast_intent("kill").unwrap();
+    let deadline = Instant::now() + WAIT;
+    while s.sched.stats().resident > 0 {
+        assert!(Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let counts = counts.lock().unwrap();
+    // Exactly two processes died, each exactly once.
+    assert_eq!(counts.len(), 2);
+    assert!(counts.values().all(|&n| n == 1));
+    s.sched.shutdown();
+}
+
+/// A global pause sweep mid-campaign, then play: every process still
+/// reaches terminal exactly once.
+#[test]
+fn pause_all_play_all_campaign_terminates_exactly_once() {
+    const N: usize = 100;
+    let s = stack(4);
+    let counts = count_terminals(&s.comm);
+    let pids: Vec<String> = (0..N)
+        .map(|i| {
+            let pid = format!("c-{i}");
+            s.sched
+                .launch_with_pid(&pid, "napper", Value::map([("ms", Value::I64(100))]))
+                .unwrap();
+            pid
+        })
+        .collect();
+    let ctl = ProcessController::new(Arc::clone(&s.comm));
+    ctl.broadcast_intent("pause").unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    ctl.broadcast_intent("play").unwrap();
+
+    for pid in &pids {
+        let record = s.sched.wait_terminal(pid, WAIT).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished", "pid {pid}");
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    let counts = counts.lock().unwrap();
+    for pid in &pids {
+        assert_eq!(counts.get(pid.as_str()), Some(&1), "pid {pid} must die exactly once");
+    }
+    s.sched.shutdown();
+}

@@ -80,10 +80,10 @@ fn three_level_nested_workchain() {
         .build();
     registry.register("grandparent", move || instantiate(&grandparent));
 
-    // Workers must cover 1 grandparent + 2 parents waiting + leaves: the
-    // waiting processes hold worker threads (documented synchronous-wait
-    // design), so give the pool enough room.
-    let (_broker, daemon, launcher, _client) = stack(registry, 6);
+    // Waiting processes hold no worker thread (event-driven scheduler),
+    // so 2 workers comfortably drive 1 grandparent + 2 parents + 4 leaves
+    // — the whole tree would deadlock on a thread-per-wait design.
+    let (_broker, daemon, launcher, _client) = stack(registry, 2);
     let (_pid, fut) = launcher.launch("grandparent", Value::Null).unwrap();
     let record = fut.wait(Duration::from_secs(60)).unwrap();
     assert_eq!(record.get_str("state").unwrap(), "finished");
@@ -175,10 +175,9 @@ fn concurrent_parents_do_not_crosstalk() {
         .build();
     registry.register("wrapper", move || instantiate(&wrapper));
 
-    // Parents hold worker threads while waiting (synchronous-wait design),
-    // so the pool must exceed parents-in-flight + children: 8 parents need
-    // >= 9 workers for progress; 16 gives full child parallelism.
-    let (_broker, daemon, launcher, _client) = stack(registry, 16);
+    // 8 parents all wait concurrently on 2 workers: waits are broadcast
+    // subscriptions, not parked threads, so no extra headroom is needed.
+    let (_broker, daemon, launcher, _client) = stack(registry, 2);
     let futs: Vec<_> = (0..8)
         .map(|i| {
             launcher

@@ -1,0 +1,204 @@
+//! Workflow-engine resilience e2e: a process campaign driven through a
+//! real TCP broker survives a broker stop/start mid-flight. Every
+//! launched process reaches a terminal state, and its terminal step runs
+//! exactly once — at-least-once task redelivery after the restart is
+//! absorbed by the scheduler (resident pids attach the duplicate
+//! delivery; finished pids answer from the output store).
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use kiwi::broker::core::BrokerHandle;
+use kiwi::broker::BrokerServer;
+use kiwi::communicator::{Communicator, RmqCommunicator, RmqConfig};
+use kiwi::daemon::{Daemon, DaemonConfig};
+use kiwi::wire::Value;
+use kiwi::workflow::checkpoint::{CheckpointStore, MemoryCheckpointStore};
+use kiwi::workflow::{
+    ProcessLogic, ProcessRegistry, RemoteLauncher, StepContext, StepOutcome, WaitCondition,
+};
+
+fn backoff_ms() -> u64 {
+    std::env::var("KIWI_RECONNECT_BACKOFF_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25)
+}
+
+fn rmq_config(backoff: u64) -> RmqConfig {
+    RmqConfig {
+        reconnect_max_retries: 200,
+        reconnect_backoff_ms: backoff,
+        request_timeout: Duration::from_secs(30),
+        ..Default::default()
+    }
+}
+
+fn start_broker() -> (BrokerHandle, BrokerServer, SocketAddr) {
+    let broker = BrokerHandle::new();
+    let server = BrokerServer::start(broker.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    (broker, server, addr)
+}
+
+fn restart_on(broker: BrokerHandle, addr: SocketAddr) -> BrokerServer {
+    // Rebinding the freed port can race the OS briefly; retry for a while.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match BrokerServer::start(broker.clone(), &addr.to_string()) {
+            Ok(server) => return server,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Waits on a timer, then records its own pid in a shared ledger on the
+/// finishing step — a second terminal execution for any pid shows up as a
+/// count of 2.
+struct Tracked {
+    finishes: Arc<Mutex<HashMap<String, usize>>>,
+}
+impl ProcessLogic for Tracked {
+    fn step(&mut self, step: u32, ctx: &mut StepContext) -> kiwi::Result<StepOutcome> {
+        match step {
+            0 => Ok(StepOutcome::Wait(WaitCondition::Timer(Duration::from_millis(200)))),
+            _ => {
+                *self.finishes.lock().unwrap().entry(ctx.pid.clone()).or_insert(0) += 1;
+                Ok(StepOutcome::Finish(Value::map([("ok", Value::Bool(true))])))
+            }
+        }
+    }
+    fn save_state(&self) -> Value {
+        Value::Null
+    }
+    fn load_state(&mut self, _: &Value) -> kiwi::Result<()> {
+        Ok(())
+    }
+}
+
+fn tracked_registry() -> (ProcessRegistry, Arc<Mutex<HashMap<String, usize>>>) {
+    let finishes: Arc<Mutex<HashMap<String, usize>>> = Arc::new(Mutex::new(HashMap::new()));
+    let reg = ProcessRegistry::new();
+    let f2 = Arc::clone(&finishes);
+    reg.register("tracked", move || Box::new(Tracked { finishes: Arc::clone(&f2) }));
+    (reg, finishes)
+}
+
+/// The satellite scenario: kill and restart the broker's TCP server in
+/// the middle of a 40-process campaign. Every launch future resolves
+/// `finished` and every pid's terminal step ran exactly once.
+#[test]
+fn campaign_survives_broker_tcp_restart() {
+    const N: usize = 40;
+    let (broker, server, addr) = start_broker();
+    let (reg, finishes) = tracked_registry();
+
+    let worker_comm =
+        Arc::new(RmqCommunicator::connect_tcp(addr.to_string(), rmq_config(backoff_ms())).unwrap());
+    let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+    let daemon = Daemon::start(
+        Arc::clone(&worker_comm) as Arc<dyn Communicator>,
+        store,
+        reg,
+        DaemonConfig { workers: 4, ..Default::default() },
+    )
+    .unwrap();
+
+    let client =
+        Arc::new(RmqCommunicator::connect_tcp(addr.to_string(), rmq_config(backoff_ms())).unwrap());
+    let launcher = RemoteLauncher::new(Arc::clone(&client) as Arc<dyn Communicator>);
+
+    // Yank the broker out mid-campaign from a side thread while launches
+    // are still being paced in.
+    let restarter = {
+        let broker = broker.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            server.shutdown();
+            std::thread::sleep(Duration::from_millis(200));
+            restart_on(broker, addr)
+        })
+    };
+
+    let futs: Vec<_> = (0..N)
+        .map(|_| {
+            let (pid, fut) = launcher.launch("tracked", Value::Null).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+            (pid, fut)
+        })
+        .collect();
+
+    let mut terminal = 0;
+    for (pid, fut) in futs {
+        let record = fut.wait(Duration::from_secs(60)).unwrap();
+        assert_eq!(record.get_str("state").unwrap(), "finished", "pid {pid}");
+        terminal += 1;
+    }
+    assert_eq!(terminal, N, "every launched process must reach terminal");
+
+    // Exactly once: no pid's finishing step ran twice, none was lost.
+    let finishes = finishes.lock().unwrap();
+    assert_eq!(finishes.len(), N);
+    assert!(
+        finishes.values().all(|&n| n == 1),
+        "a terminal step ran more than once: {finishes:?}"
+    );
+    // The restart really landed mid-campaign.
+    assert!(
+        worker_comm.metrics().counter("client.reconnects_total").get() >= 1,
+        "daemon connection never reconnected — restart missed the campaign"
+    );
+
+    let server = restarter.join().unwrap();
+    daemon.shutdown();
+    client.close();
+    server.shutdown();
+}
+
+/// A launch issued while the broker is *down* parks in the client's
+/// publish retry, and the process still runs to terminal after revival.
+#[test]
+fn launch_during_outage_completes_after_revival() {
+    let (broker, server, addr) = start_broker();
+    let (reg, finishes) = tracked_registry();
+
+    let worker_comm =
+        Arc::new(RmqCommunicator::connect_tcp(addr.to_string(), rmq_config(10)).unwrap());
+    let store: Arc<dyn CheckpointStore> = Arc::new(MemoryCheckpointStore::new());
+    let daemon = Daemon::start(
+        Arc::clone(&worker_comm) as Arc<dyn Communicator>,
+        store,
+        reg,
+        DaemonConfig { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let client =
+        Arc::new(RmqCommunicator::connect_tcp(addr.to_string(), rmq_config(backoff_ms())).unwrap());
+
+    server.shutdown();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // task_send blocks in the parked publish, so drive it off-thread.
+    let launch = {
+        let client = Arc::clone(&client) as Arc<dyn Communicator>;
+        std::thread::spawn(move || {
+            let launcher = RemoteLauncher::new(client);
+            let (_pid, fut) = launcher.launch("tracked", Value::Null)?;
+            fut.wait(Duration::from_secs(30))
+        })
+    };
+    std::thread::sleep(Duration::from_millis(300));
+    let server = restart_on(broker, addr);
+
+    let record = launch.join().unwrap().unwrap();
+    assert_eq!(record.get_str("state").unwrap(), "finished");
+    assert_eq!(finishes.lock().unwrap().values().sum::<usize>(), 1);
+    daemon.shutdown();
+    client.close();
+    server.shutdown();
+}
